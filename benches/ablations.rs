@@ -1,0 +1,132 @@
+//! Design-choice ablations (exps A1-A4 in DESIGN.md):
+//!
+//!  A1  MSB: CBNN Algorithm 3 vs SecureBiNN-style bit decomposition
+//!  A2  maxpool: Sign-fused (Sec 3.6) vs comparison tree
+//!  A3  BN: export-time fusing (Sec 3.5) vs explicit online BN
+//!  A4  linear backend: PJRT-pallas vs PJRT-xla vs native rust
+//!
+//!   cargo bench --bench ablations
+
+mod common;
+
+use std::thread;
+use std::time::Instant;
+
+use cbnn::baselines::{bitdecomp::msb_bitdecomp, bn_explicit::bn_online,
+                      maxpool_tree::maxpool_tree};
+use cbnn::prf::PartySeeds;
+use cbnn::protocols::{maxpool::maxpool_bits, msb::msb_extract, Ctx};
+use cbnn::rss::deal;
+use cbnn::runtime::{BackendKind, KernelVariant};
+use cbnn::engine::session::{run_inference, SessionConfig};
+use cbnn::testutil::Rng;
+use cbnn::transport::{local_trio, NetConfig, Stats};
+use common::*;
+
+fn run3<F>(net: NetConfig, f: F) -> (f64, [Stats; 3])
+where
+    F: Fn(&Ctx) + Send + Sync + Copy + 'static,
+{
+    let comms = local_trio(net);
+    let t0 = Instant::now();
+    let handles: Vec<_> = comms.into_iter().map(|c| {
+        thread::spawn(move || {
+            let seeds = PartySeeds::setup(5, c.id);
+            let ctx = Ctx::new(&c, &seeds);
+            f(&ctx);
+            c.stats()
+        })
+    }).collect();
+    let stats: Vec<Stats> = handles.into_iter().map(|h| h.join().unwrap())
+        .collect();
+    (t0.elapsed().as_secs_f64(), [stats[0], stats[1], stats[2]])
+}
+
+fn report(label: &str, (t, st): (f64, [Stats; 3])) {
+    let bytes: u64 = st.iter().map(|s| s.bytes_sent).sum();
+    let rounds = st.iter().map(|s| s.rounds).max().unwrap();
+    println!("{:<28} {:>10.2} {:>12.1} {:>8}", label, t * 1e3,
+             bytes as f64 / 1e3, rounds);
+}
+
+fn main() {
+    println!("== ablations ==\n");
+    let n = 16_384; // one mid-size activation map
+
+    println!("[A1] MSB extraction, n={n}, WAN");
+    println!("{:<28} {:>10} {:>12} {:>8}", "arm", "time(ms)", "KB sent",
+             "rounds");
+    report("Alg3 (ours, const-round)", run3(NetConfig::wan(),
+        move |ctx: &Ctx| {
+            let mut rng = Rng::new(1);
+            let x = rng.tensor_small(&[n], 1 << 20);
+            let xs = deal(&x, &mut rng);
+            let _ = msb_extract(ctx, &xs[ctx.id()]);
+        }));
+    report("bit-decomp (SecureBiNN-ish)", run3(NetConfig::wan(),
+        move |ctx: &Ctx| {
+            let mut rng = Rng::new(1);
+            let x = rng.tensor_small(&[n], 1 << 20);
+            let xs = deal(&x, &mut rng);
+            let me = &xs[ctx.id()];
+            let _ = msb_bitdecomp(ctx, &me.a.data, &me.b.data);
+        }));
+
+    println!("\n[A2] 2x2 maxpool over 16x16x16 bits, WAN");
+    report("Sign-fused (Sec 3.6)", run3(NetConfig::wan(), |ctx: &Ctx| {
+        let mut rng = Rng::new(2);
+        let bits = cbnn::ring::Tensor::from_vec(
+            &[16, 256], (0..16 * 256).map(|i| i as i32 % 2).collect());
+        let xs = deal(&bits, &mut rng);
+        let _ = maxpool_bits(ctx, &xs[ctx.id()], 16, 16, 16, 2, 2);
+    }));
+    report("comparison tree", run3(NetConfig::wan(), |ctx: &Ctx| {
+        let mut rng = Rng::new(2);
+        let x = rng.tensor_small(&[16, 256], 1 << 16);
+        let xs = deal(&x, &mut rng);
+        let _ = maxpool_tree(ctx, &xs[ctx.id()], 16, 16, 16);
+    }));
+
+    println!("\n[A3] batch norm over 64x256 activations, WAN");
+    report("fused at export (ours)", run3(NetConfig::wan(), |_ctx: &Ctx| {
+        // zero online cost -- the threshold add happens inside Sign
+    }));
+    report("explicit online BN", run3(NetConfig::wan(), |ctx: &Ctx| {
+        let mut rng = Rng::new(3);
+        let x = rng.tensor_small(&[64, 256], 1 << 12);
+        let g = rng.tensor_small(&[64], 1 << 8);
+        let b = rng.tensor_small(&[64], 1 << 8);
+        let xs = deal(&x, &mut rng);
+        let gs = deal(&g, &mut rng);
+        let bs = deal(&b, &mut rng);
+        let _ = bn_online(ctx, &xs[ctx.id()], &gs[ctx.id()],
+                          &bs[ctx.id()], 8);
+    }));
+
+    require_artifacts();
+    println!("\n[A4] linear backend, mnistnet3 end-to-end (LAN, batch=4)");
+    println!("{:<28} {:>12} {:>12}", "backend", "online(ms)", "per-img(ms)");
+    let model = load_model("mnistnet3");
+    let data = eval_data(&model);
+    for (label, kind) in [
+        ("native rust", BackendKind::Native),
+        ("PJRT + pallas kernel", BackendKind::Pjrt(KernelVariant::Pallas)),
+        ("PJRT + xla lowering", BackendKind::Pjrt(KernelVariant::Xla)),
+    ] {
+        let cfg = SessionConfig::new(art().join("hlo"))
+            .with_net(NetConfig::lan()).with_backend(kind);
+        // warm once (compile executables), then time
+        let _ = run_inference(&model, data.images[..1].to_vec(), &cfg);
+        let mut times = Vec::new();
+        for _ in 0..3 {
+            let rep = run_inference(&model, data.images[..4].to_vec(), &cfg)
+                .expect("inference");
+            times.push(rep.online.as_secs_f64());
+        }
+        times.sort_by(f64::total_cmp);
+        let t = times[times.len() / 2];
+        println!("{:<28} {:>12.2} {:>12.2}", label, t * 1e3, t * 1e3 / 4.0);
+    }
+    println!("\n(PJRT recompiles per session; the coordinator's Service \
+              amortizes that via warmup -- see e2e_serve)");
+}

@@ -1,0 +1,80 @@
+//! Shared helpers for the custom bench harnesses (criterion is not in the
+//! offline crate set; every bench is a `harness = false` binary printing
+//! paper-style tables).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use cbnn::datasets::EvalSet;
+use cbnn::engine::session::{run_inference, SessionConfig, SessionReport};
+use cbnn::jsonio;
+use cbnn::nn::Model;
+use cbnn::transport::NetConfig;
+
+pub fn art() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+pub fn require_artifacts() {
+    if !art().join("models").exists() {
+        eprintln!("artifacts/ missing -- run `make artifacts` first");
+        std::process::exit(0);
+    }
+}
+
+pub fn load_model(name: &str) -> Arc<Model> {
+    Arc::new(Model::load(
+        &art().join("models").join(format!("{name}.manifest.json")))
+        .unwrap_or_else(|e| panic!("loading {name}: {e}")))
+}
+
+pub fn eval_data(model: &Model) -> EvalSet {
+    EvalSet::load(&art().join("data").join(format!("{}.bin", model.dataset)))
+        .expect("eval data")
+}
+
+/// Median online time + the report of the median run.
+pub fn measure(model: &Arc<Model>, data: &EvalSet, net: NetConfig,
+               batch: usize, reps: usize) -> (f64, SessionReport) {
+    let cfg = SessionConfig::new(art().join("hlo")).with_net(net);
+    let mut times = Vec::new();
+    let mut last = None;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let rep = run_inference(model, data.images[..batch].to_vec(), &cfg)
+            .expect("inference");
+        times.push(t0.elapsed().as_secs_f64());
+        last = Some(rep);
+    }
+    times.sort_by(f64::total_cmp);
+    (times[times.len() / 2], last.unwrap())
+}
+
+/// Per-sample time, amortized over a batch (the paper reports batch-1
+/// times; we report both).
+pub fn per_sample(t: f64, batch: usize) -> f64 {
+    t / batch as f64
+}
+
+/// Secure-inference accuracy recorded at export time
+/// (artifacts/experiments/secure_acc.json).
+pub fn exported_accuracy(name: &str) -> Option<f64> {
+    let text = std::fs::read_to_string(
+        art().join("experiments/secure_acc.json")).ok()?;
+    let j = jsonio::parse(&text).ok()?;
+    j.get(name)?.get("fixed_acc")?.as_f64().map(|a| a * 100.0)
+}
+
+pub fn exported_params(name: &str) -> Option<i64> {
+    let text = std::fs::read_to_string(
+        art().join("experiments/secure_acc.json")).ok()?;
+    let j = jsonio::parse(&text).ok()?;
+    j.get(name)?.get("params")?.as_i64()
+}
+
+pub fn header() {
+    println!("{:<22} {:>10} {:>10} {:>10} {:>7}",
+             "framework", "LAN(s)", "WAN(s)", "Comm(MB)", "Acc(%)");
+    println!("{}", "-".repeat(64));
+}

@@ -1,0 +1,116 @@
+//! Protocol microbenchmarks (exp P1): per-op time, bytes, and rounds for
+//! every secure primitive at several element counts, on the zero-latency
+//! network (pure compute + accounting) and on WAN (round-dominated).
+//!
+//!   cargo bench --bench protocols
+
+use std::thread;
+use std::time::Instant;
+
+use cbnn::prf::PartySeeds;
+use cbnn::protocols::{msb::msb_extract, relu::{relu_mul, relu_ot},
+                      sign::sign, trunc::trunc, Ctx};
+use cbnn::rss::{self, deal, deal_bits};
+use cbnn::testutil::Rng;
+use cbnn::transport::{local_trio, NetConfig, Stats};
+
+fn run3<F>(net: NetConfig, f: F) -> (f64, [Stats; 3])
+where
+    F: Fn(&Ctx) + Send + Sync + Copy + 'static,
+{
+    let comms = local_trio(net);
+    let t0 = Instant::now();
+    let handles: Vec<_> = comms.into_iter().map(|c| {
+        thread::spawn(move || {
+            let seeds = PartySeeds::setup(5, c.id);
+            let ctx = Ctx::new(&c, &seeds);
+            f(&ctx);
+            c.stats()
+        })
+    }).collect();
+    let stats: Vec<Stats> = handles.into_iter().map(|h| h.join().unwrap())
+        .collect();
+    (t0.elapsed().as_secs_f64(), [stats[0], stats[1], stats[2]])
+}
+
+macro_rules! bench_proto {
+    ($name:expr, $n:expr, $net:expr, $body:expr) => {{
+        let (t, st) = run3($net, $body);
+        let bytes: u64 = st.iter().map(|s| s.bytes_sent).sum();
+        let rounds = st.iter().map(|s| s.rounds).max().unwrap();
+        println!("{:<14} {:>9} {:>11.2} {:>11.1} {:>8}",
+                 $name, $n, t * 1e3, bytes as f64 / 1e3, rounds);
+    }};
+}
+
+fn main() {
+    println!("== protocol microbenchmarks ==");
+    for (netname, net) in [("zero-net", NetConfig::zero()),
+                           ("wan", NetConfig::wan())] {
+        println!("\n[{netname}]");
+        println!("{:<14} {:>9} {:>11} {:>11} {:>8}",
+                 "protocol", "elems", "time(ms)", "KB sent", "rounds");
+        println!("{}", "-".repeat(58));
+        let sizes: &[usize] = if netname == "wan" {
+            &[10_000]
+        } else {
+            &[1_000, 10_000, 100_000]
+        };
+        for &n in sizes {
+            bench_proto!("reshare", n, net, move |ctx: &Ctx| {
+                let mut rng = Rng::new(1);
+                let z = rng.tensor(&[n]);
+                let _ = rss::reshare(ctx.comm, ctx.seeds, &z);
+            });
+            bench_proto!("mul", n, net, move |ctx: &Ctx| {
+                let mut rng = Rng::new(2);
+                let x = rng.tensor(&[n]);
+                let y = rng.tensor(&[n]);
+                let xs = deal(&x, &mut rng);
+                let ys = deal(&y, &mut rng);
+                let _ = rss::mul(ctx.comm, ctx.seeds, &xs[ctx.id()],
+                                 &ys[ctx.id()]);
+            });
+            bench_proto!("b2a(3-OT)", n, net, move |ctx: &Ctx| {
+                let mut rng = Rng::new(3);
+                let bits: Vec<u8> = (0..n).map(|_| rng.bit()).collect();
+                let bs = deal_bits(&bits, &mut rng);
+                let _ = cbnn::protocols::b2a::b2a(ctx, &bs[ctx.id()]);
+            });
+            bench_proto!("msb(Alg3)", n, net, move |ctx: &Ctx| {
+                let mut rng = Rng::new(4);
+                let x = rng.tensor_small(&[n], 1 << 20);
+                let xs = deal(&x, &mut rng);
+                let _ = msb_extract(ctx, &xs[ctx.id()]);
+            });
+            bench_proto!("sign(Alg4)", n, net, move |ctx: &Ctx| {
+                let mut rng = Rng::new(5);
+                let x = rng.tensor_small(&[n], 1 << 20);
+                let xs = deal(&x, &mut rng);
+                let _ = sign(ctx, &xs[ctx.id()]);
+            });
+            bench_proto!("relu_ot(Alg5)", n, net, move |ctx: &Ctx| {
+                let mut rng = Rng::new(6);
+                let x = rng.tensor_small(&[n], 1 << 20);
+                let xs = deal(&x, &mut rng);
+                let m = msb_extract(ctx, &xs[ctx.id()]);
+                let _ = relu_ot(ctx, &xs[ctx.id()], &m);
+            });
+            bench_proto!("relu_mul", n, net, move |ctx: &Ctx| {
+                let mut rng = Rng::new(7);
+                let x = rng.tensor_small(&[n], 1 << 20);
+                let xs = deal(&x, &mut rng);
+                let m = msb_extract(ctx, &xs[ctx.id()]);
+                let _ = relu_mul(ctx, &xs[ctx.id()], &m);
+            });
+            bench_proto!("trunc", n, net, move |ctx: &Ctx| {
+                let mut rng = Rng::new(8);
+                let x = rng.tensor_small(&[n], 1 << 20);
+                let xs = deal(&x, &mut rng);
+                let _ = trunc(ctx, &xs[ctx.id()], 12);
+            });
+        }
+    }
+    println!("\nDESIGN.md round budgets: reshare 1, mul 1, b2a<=3, \
+              msb<=8, trunc 2.");
+}

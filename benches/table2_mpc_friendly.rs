@@ -1,0 +1,56 @@
+//! Table 2 reproduction: the effect of MPC-friendly (separable)
+//! convolutions -- typical BNN vs CifarNet2 on CIFAR-10 shapes.
+//!
+//!   cargo bench --bench table2_mpc_friendly
+//!
+//! Shape to reproduce: the customized network cuts parameters by ~80%,
+//! communication by ~35%, and WAN time by a large factor, at a small
+//! accuracy cost (paper: -1.99 points).
+
+mod common;
+
+use cbnn::baselines::costmodel::{fmt_row, table2};
+use cbnn::transport::NetConfig;
+use common::*;
+
+fn main() {
+    require_artifacts();
+    println!("== Table 2: typical BNN vs MPC-friendly CifarNet2 ==\n");
+    let paper = table2();
+    println!("{:<22} {:>10} {:>10} {:>10} {:>7} {:>9}",
+             "arch", "LAN(s)", "WAN(s)", "Comm(MB)", "Acc(%)", "Params");
+    println!("{}", "-".repeat(74));
+    println!("{} {:>9}", fmt_row("Typical BNN (paper)",
+                                 paper.typical.time_lan_s,
+                                 paper.typical.time_wan_s,
+                                 paper.typical.comm_mb,
+                                 paper.typical.acc_pct), 383_858);
+    println!("{} {:>9}", fmt_row("CifarNet2 (paper)",
+                                 paper.cifarnet2.time_lan_s,
+                                 paper.cifarnet2.time_wan_s,
+                                 paper.cifarnet2.comm_mb,
+                                 paper.cifarnet2.acc_pct), 67_949);
+    println!();
+
+    let mut ours = Vec::new();
+    for name in ["cifarnet2_typical", "cifarnet2"] {
+        let model = load_model(name);
+        let data = eval_data(&model);
+        let (lan, rep) = measure(&model, &data, NetConfig::lan(), 1, 3);
+        let (wan, _) = measure(&model, &data, NetConfig::wan(), 1, 3);
+        let params = exported_params(name).unwrap_or(0);
+        println!("{} {:>9}", fmt_row(&format!("{name} (ours)"), Some(lan),
+                                     Some(wan), Some(rep.comm_mb()),
+                                     exported_accuracy(name)), params);
+        ours.push((lan, wan, rep.comm_mb(),
+                   exported_accuracy(name).unwrap_or(0.0), params as f64));
+    }
+    let ch = |a: f64, b: f64| 100.0 * (b - a) / a;
+    println!("\n{:<22} {:>9.1}% {:>9.1}% {:>9.1}% {:>6.2} {:>8.1}%",
+             "Change (ours)",
+             ch(ours[0].0, ours[1].0), ch(ours[0].1, ours[1].1),
+             ch(ours[0].2, ours[1].2), ours[1].3 - ours[0].3,
+             ch(ours[0].4, ours[1].4));
+    println!("{:<22} {:>9}% {:>9}% {:>9}% {:>6} {:>8}%",
+             "Change (paper)", -41.5, -72.1, -35.8, -1.99, -82.3);
+}

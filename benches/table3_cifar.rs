@@ -1,0 +1,36 @@
+//! Table 3 reproduction: CIFAR-10 (CifarNet2) against prior frameworks.
+//!
+//!   cargo bench --bench table3_cifar
+//!
+//! Shape to reproduce: CBNN in front on LAN among the 3PC frameworks and
+//! clearly in front on WAN (constant-round non-linear protocols); the 2PC
+//! / HE frameworks (MiniONN..XONN) are orders of magnitude behind.
+
+mod common;
+
+use cbnn::baselines::costmodel::{fmt_row, table3};
+use cbnn::transport::NetConfig;
+use common::*;
+
+fn main() {
+    require_artifacts();
+    println!("== Table 3: CIFAR-10, CifarNet2, batch=1 ==\n");
+    header();
+    for row in table3() {
+        println!("{}", fmt_row(&format!("{} (paper)", row.framework),
+                               row.time_lan_s, row.time_wan_s, row.comm_mb,
+                               row.acc_pct));
+    }
+    let model = load_model("cifarnet2");
+    let data = eval_data(&model);
+    let (lan, rep) = measure(&model, &data, NetConfig::lan(), 1, 3);
+    let (wan, _) = measure(&model, &data, NetConfig::wan(), 1, 3);
+    println!("{}", fmt_row("CBNN(ours,measured)", Some(lan), Some(wan),
+                           Some(rep.comm_mb()),
+                           exported_accuracy("cifarnet2")));
+    println!("\nrounds={}  setup={:.3}s  (batch=8 amortized: see \
+              e2e_serve example)", rep.max_rounds(),
+             rep.setup.as_secs_f64());
+    println!("note: our accuracy is on synth-CIFAR with the quick training \
+              budget (DESIGN.md); time/comm columns are shape-comparable.");
+}

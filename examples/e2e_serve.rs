@@ -1,0 +1,88 @@
+//! End-to-end serving driver (the EXPERIMENTS.md validation run).
+//!
+//!   cargo run --release --example e2e_serve [-- --requests 64 --net lan]
+//!
+//! Loads the trained, quantized MnistNet3, brings up the three-party
+//! `Service` + dynamic-batching `Coordinator`, replays a bursty client
+//! stream against it, and reports latency percentiles, throughput, and
+//! accuracy against the eval labels -- plus the same workload at batch=1
+//! to show what the batcher buys.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use cbnn::cli::{parse_net, Args};
+use cbnn::coordinator::{BatchPolicy, Coordinator, Service};
+use cbnn::datasets::EvalSet;
+use cbnn::engine::session::SessionConfig;
+use cbnn::metrics::fmt_duration;
+use cbnn::nn::Model;
+use cbnn::runtime::{BackendKind, KernelVariant};
+
+fn run_stream(model: &Arc<Model>, data: &EvalSet, cfg: &SessionConfig,
+              requests: usize, policy: BatchPolicy)
+              -> anyhow::Result<(f64, f64, Duration, Duration, f64)> {
+    let svc = Service::start(Arc::clone(model), cfg.clone())?;
+    let setup = svc.setup_time;
+    let coord = Coordinator::start(svc, policy);
+    let mut rxs = Vec::new();
+    for i in 0..requests {
+        rxs.push((i, coord.submit(
+            data.images[i % data.images.len()].clone())));
+        // bursty arrivals: a short pause every 8 requests
+        if i % 8 == 7 {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    let mut correct = 0usize;
+    for (i, rx) in rxs {
+        let resp = rx.recv()?;
+        if resp.pred == data.labels[i % data.labels.len()] as usize {
+            correct += 1;
+        }
+    }
+    let (hist, thr) = coord.finish();
+    Ok((thr.per_sec(),
+        correct as f64 / requests as f64,
+        hist.quantile(0.5),
+        hist.quantile(0.99),
+        setup.as_secs_f64()))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(anyhow::Error::msg)?;
+    let art = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let requests = args.get_usize("requests", 64)
+        .map_err(anyhow::Error::msg)?;
+    let net = parse_net(args.get_or("net", "lan"))
+        .map_err(anyhow::Error::msg)?;
+
+    let model = Arc::new(Model::load(
+        &art.join("models/mnistnet3.manifest.json"))?);
+    let data = EvalSet::load(&art.join("data/mnist.bin"))?;
+    let cfg = SessionConfig::new(art.join("hlo"))
+        .with_net(net)
+        .with_backend(BackendKind::Pjrt(KernelVariant::Pallas));
+
+    println!("== CBNN end-to-end serving: {} x {} requests, net={} ==",
+             model.name, requests, args.get_or("net", "lan"));
+
+    let batched = run_stream(&model, &data, &cfg, requests,
+                             BatchPolicy { max_batch: 8,
+                                           max_wait: Duration::from_millis(10) })?;
+    let single = run_stream(&model, &data, &cfg, requests,
+                            BatchPolicy { max_batch: 1,
+                                          max_wait: Duration::ZERO })?;
+
+    println!("\n{:<18} {:>12} {:>10} {:>10} {:>10}",
+             "policy", "throughput", "p50", "p99", "accuracy");
+    for (label, r) in [("batch<=8", &batched), ("batch=1", &single)] {
+        println!("{:<18} {:>9.2}/s {:>10} {:>10} {:>9.1}%",
+                 label, r.0, fmt_duration(r.2), fmt_duration(r.3),
+                 r.1 * 100.0);
+    }
+    println!("\nsetup (share model + warm PJRT): {:.2}s", batched.4);
+    println!("speedup from dynamic batching: {:.2}x", batched.0 / single.0);
+    Ok(())
+}

@@ -1,0 +1,211 @@
+"""AOT export: float checkpoints -> integer layer programs + per-layer HLO.
+
+For every securely-evaluated network this emits, under artifacts/:
+
+  models/<name>.manifest.json   layer program (ops, shapes, scales, HLO ids)
+  models/<name>.weights.bin     int32 LE tensor pool (weights, biases,
+                                thresholds, flips)
+  hlo/<id>.pallas.hlo.txt       Algorithm-2 local RSS contraction, lowered
+                                from the L1 Pallas kernel (interpret=True)
+  hlo/<id>.xla.hlo.txt          same computation as plain jnp ops (ablation
+                                arm A4 + runtime fallback)
+  data/<dataset>.bin            fixed-point eval images + labels
+  golden/<name>.golden.json     forward_fixed logits for the first samples
+                                (rust integration tests assert bit-equality)
+
+HLO text (never .serialize()) is the interchange format -- see
+/opt/xla-example/README.md: jax>=0.5 emits 64-bit instruction ids that
+xla_extension 0.5.1 rejects; the text parser reassigns ids.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import datasets, export, networks, train
+from . import model as M
+from .kernels import ref, rss_linear
+
+ART = train.ART
+
+SECURE_NETS = ("mnistnet1", "mnistnet2", "mnistnet3",
+               "cifarnet2", "cifarnet2_typical")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+# --------------------------------------------------------------------------
+# HLO builders
+# --------------------------------------------------------------------------
+def _mm_fn_pallas(wi, wi1, xi, xi1, bi):
+    return (rss_linear.rss_matmul(wi, wi1, xi, xi1, interpret=True) + bi,)
+
+
+def _mm_fn_xla(wi, wi1, xi, xi1, bi):
+    return (ref.rss_matmul_ref(wi, wi1, xi, xi1) + bi,)
+
+
+def lower_matmul(m, k, n, variant):
+    s = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.int32)
+    fn = _mm_fn_pallas if variant == "pallas" else _mm_fn_xla
+    lowered = jax.jit(fn).lower(s(m, k), s(m, k), s(k, n), s(k, n), s(m, 1))
+    return to_hlo_text(lowered)
+
+
+def lower_depthwise(c, h, w, k, stride, pad_lo, pad_hi, variant):
+    """Depthwise three-term RSS conv in NCHW (batch=1).  The depthwise
+    contraction is tiny (k^2 MACs/output); it is lowered directly from
+    lax.conv (variant is accepted for a uniform interface)."""
+    del variant
+    s = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.int32)
+
+    def fn(wi, wi1, xi, xi1):
+        cv = lambda x, kk: jax.lax.conv_general_dilated(
+            x, kk, (stride, stride), [(pad_lo, pad_hi), (pad_lo, pad_hi)],
+            dimension_numbers=("NCHW", "HWIO", "NCHW"),
+            feature_group_count=c,
+            preferred_element_type=jnp.int32)
+        return (cv(xi, wi) + cv(xi, wi1) + cv(xi1, wi),)
+
+    lowered = jax.jit(fn).lower(s(k, k, 1, c), s(k, k, 1, c),
+                                s(1, c, h, w), s(1, c, h, w))
+    return to_hlo_text(lowered)
+
+
+# --------------------------------------------------------------------------
+# export pipeline
+# --------------------------------------------------------------------------
+def export_network(name, hlo_dir, model_dir, golden_dir, eval_x, eval_y,
+                   log=print, n_golden=8):
+    layers, params = train.load_params(
+        os.path.join(ART, "models", f"{name}.npz"))
+    _, in_shape = networks.build(name)
+    q = export.quantize(layers, params, in_shape)
+    q = export.permute_fc_after_flatten(q)
+    # keep every MSB/trunc input inside the protocol headroom
+    calib = [export.fixed_input(eval_x[i]) for i in range(16)]
+    q = export.calibrate(q, calib, log=log)
+
+    # ---- unique HLO ids per linear layer -------------------------------
+    hlo_names, emitted = [], set()
+    h, w, c = in_shape
+    cur = (in_shape[2], in_shape[0], in_shape[1])   # (C,H,W)
+    for l in q:
+        if l["op"] == "matmul":
+            if l.get("conv"):
+                kk, st = l["k"], l["stride"]
+                oh = (cur[1] + l["pad_lo"] + l["pad_hi"] - kk) // st + 1
+                ow = (cur[2] + l["pad_lo"] + l["pad_hi"] - kk) // st + 1
+                mm = (l["m"], l["kdim"], oh * ow)
+                cur = (l["cout"], oh, ow)
+            else:
+                mm = (l["m"], l["kdim"], 1)
+            hid = f"rss_mm_{mm[0]}x{mm[1]}x{mm[2]}"
+            hlo_names.append(hid)
+            if hid not in emitted:
+                emitted.add(hid)
+                for var in ("pallas", "xla"):
+                    txt = lower_matmul(*mm, var)
+                    with open(os.path.join(hlo_dir, f"{hid}.{var}.hlo.txt"),
+                              "w") as f:
+                        f.write(txt)
+            l["n"] = mm[2]
+        elif l["op"] == "depthwise":
+            cc, hh, ww = cur
+            kk, st = l["k"], l["stride"]
+            hid = (f"rss_dw_c{cc}h{hh}w{ww}k{kk}s{st}"
+                   f"p{l['pad_lo']}_{l['pad_hi']}")
+            hlo_names.append(hid)
+            if hid not in emitted:
+                emitted.add(hid)
+                txt = lower_depthwise(cc, hh, ww, kk, st,
+                                      l["pad_lo"], l["pad_hi"], "xla")
+                for var in ("pallas", "xla"):
+                    with open(os.path.join(hlo_dir, f"{hid}.{var}.hlo.txt"),
+                              "w") as f:
+                        f.write(txt)
+            oh = (hh + l["pad_lo"] + l["pad_hi"] - kk) // st + 1
+            ow = (ww + l["pad_lo"] + l["pad_hi"] - kk) // st + 1
+            cur = (cc, oh, ow)
+        elif l["op"] == "pool_bits":
+            cur = (cur[0], (cur[1] - l["k"]) // l["stride"] + 1,
+                   (cur[2] - l["k"]) // l["stride"] + 1)
+
+    manifest = export.serialize(name, networks.REGISTRY[name][1], in_shape,
+                                q, model_dir, hlo_names=hlo_names)
+
+    # ---- golden outputs -------------------------------------------------
+    logits, preds = [], []
+    for i in range(n_golden):
+        lg = M.forward_fixed(q, export.fixed_input(eval_x[i]))
+        logits.append([int(v) for v in lg])
+        preds.append(int(np.argmax(lg)))
+    golden = {"name": name, "logits": logits, "preds": preds,
+              "labels": [int(v) for v in eval_y[:n_golden]]}
+    with open(os.path.join(golden_dir, f"{name}.golden.json"), "w") as f:
+        json.dump(golden, f, indent=1)
+
+    # secure-path accuracy on the eval slice (recorded for the tables)
+    n_acc = min(len(eval_x), 128)
+    pr = M.predict_fixed(
+        q, [export.fixed_input(eval_x[i]) for i in range(n_acc)])
+    acc = float(np.mean(pr == eval_y[:n_acc]))
+    log(f"[aot] {name}: layers={len(manifest['layers'])} "
+        f"fixed_acc={acc:.4f}")
+    return {"fixed_acc": acc, "n_eval": n_acc,
+            "params": M.param_count(params)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None, help="ignored; kept for Makefile")
+    ap.add_argument("--nets", default=",".join(SECURE_NETS))
+    ap.add_argument("--quick", action="store_true",
+                    help="train missing checkpoints with the quick budget")
+    args = ap.parse_args()
+
+    hlo_dir = os.path.join(ART, "hlo")
+    model_dir = os.path.join(ART, "models")
+    golden_dir = os.path.join(ART, "golden")
+    data_dir = os.path.join(ART, "data")
+    for d in (hlo_dir, model_dir, golden_dir, data_dir,
+              os.path.join(ART, "experiments")):
+        os.makedirs(d, exist_ok=True)
+
+    nets = [n for n in args.nets.split(",") if n]
+    missing = [n for n in nets
+               if not os.path.exists(os.path.join(model_dir, f"{n}.npz"))]
+    if missing:
+        print(f"[aot] training missing checkpoints: {missing}")
+        train.exp_weights(quick=True)
+
+    evals, meta = {}, {}
+    for ds in ("mnist", "cifar"):
+        _, _, xte, yte = datasets.load(ds, 8, 256)
+        evals[ds] = (xte, yte)
+        export.export_eval_data(xte, yte,
+                                os.path.join(data_dir, f"{ds}.bin"), n=256)
+
+    for name in nets:
+        ds = networks.REGISTRY[name][1]
+        meta[name] = export_network(name, hlo_dir, model_dir, golden_dir,
+                                    *evals[ds])
+    with open(os.path.join(ART, "experiments", "secure_acc.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print("[aot] export complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,341 @@
+"""Quantization, BN folding, and artifact serialization.
+
+Turns a trained float network into the integer *layer program* the secure
+engine runs:
+
+* weights -> int32 fixed point (S_W fractional bits)
+* BN + Sign  -> per-channel integer threshold + orientation flip (Eq. 8)
+* BN + ReLU  -> folded into the preceding linear layer's W, b (Eq. 10/11)
+* maxpool after Sign -> `pool_bits` (the Sign-fused OR pooling, Sec. 3.6)
+* activations between layers are exact ring integers:
+  bits {0,1} -> pm1 {-1,+1} before the next linear (local on shares)
+
+The same program is (a) executed by model.forward_fixed as the python
+oracle and (b) serialized to manifest.json + weights.bin for rust.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from . import model as M
+
+S_IN = 7     # input fractional bits
+S_W = 12     # weight fractional bits (upper bound; see _fit_weight_scale)
+BN_EPS = 1e-5
+_SAFE_BITS = 30   # per-layer |z| must stay below 2^_SAFE_BITS (headroom 2)
+
+
+def _same_pads(h, k, stride):
+    out = -(-h // stride)
+    total = max((out - 1) * stride + k - h, 0)
+    return total // 2, total - total // 2
+
+
+def _pads(h, k, stride, pad):
+    if pad == "VALID":
+        return 0, 0
+    return _same_pads(h, k, stride)
+
+
+def _q(x, bits):
+    return np.asarray(np.round(np.asarray(x, np.float64) * (1 << bits)),
+                      np.int64)
+
+
+def _fit_weight_scale(w2d, max_in, s_start=S_W):
+    """Pick the largest weight scale <= s_start such that the worst-case
+    |z| = max_row( sum_K |w_int| ) * max_in stays below 2^_SAFE_BITS.
+
+    w2d: float weights already shaped (out, K).  max_in: worst-case |a|
+    of the ring input (1 for {-1,+1} activations, ~2^{s_act+2} for
+    fixed-point ReLU/image inputs, BN keeps those near unit scale).
+    """
+    s = s_start
+    while s > 2:
+        wq = _q(w2d, s)
+        bound = np.abs(wq).sum(axis=1).max() * max_in
+        if bound < (1 << _SAFE_BITS):
+            return wq, s
+        s -= 1
+    return _q(w2d, 2), 2
+
+
+def quantize(layers, params, input_shape):
+    """float net -> integer layer program (list of dicts of numpy arrays).
+
+    layers must already be expanded (model._expand / init_params output).
+    """
+    q = []
+    h, w, c = input_shape
+    s_act = S_IN                 # current activation scale (fraction bits)
+    spatial = True               # are we still in CHW-land?
+    prev_was_dw = False          # inside a separable conv pair?
+    i = 0
+    n = len(layers)
+    while i < n:
+        l, p = layers[i], params[i]
+        t = l["type"]
+        if t in ("conv", "dwconv", "fc"):
+            # peek at BN / activation that follow
+            bn_p, act_fn, j = None, None, i + 1
+            if j < n and layers[j]["type"] == "bn":
+                bn_p = params[j]
+                j += 1
+            if j < n and layers[j]["type"] == "act":
+                act_fn = layers[j]["fn"]
+                j += 1
+            gamma_p = beta_p = None
+            if bn_p is not None:
+                g = np.asarray(bn_p["gamma"], np.float64)
+                v = np.asarray(bn_p["var"], np.float64)
+                mu = np.asarray(bn_p["mu"], np.float64)
+                be = np.asarray(bn_p["beta"], np.float64)
+                gamma_p = g / np.sqrt(v + BN_EPS)          # gamma'
+                beta_p = be - gamma_p * mu                  # beta'
+
+            wf = np.asarray(p["w"], np.float64)
+            bf = np.asarray(p.get("b", 0.0), np.float64)
+            fold_wb = bn_p is not None and act_fn != "sign"
+            if fold_wb:                                     # Eq. 10/11 fold
+                wf = wf * gamma_p                           # broadcast cout
+                bf = beta_p + gamma_p * bf
+
+            max_in = 1 if s_act == 0 else 4 << s_act
+            # Separable-conv pairs chain two linear layers with no
+            # rescaling point between them, so cap each half's weight
+            # scale to keep the composed scale inside the MSB headroom
+            # (DESIGN.md "Protocol round/byte budget").
+            sep_cap = 7 if (t == "dwconv" or prev_was_dw) else S_W
+            if t == "fc":
+                if spatial:
+                    raise ValueError("fc before flatten unsupported")
+                wq, s_w = _fit_weight_scale(wf.T, max_in)   # (out, in)
+                s_z = s_act + s_w
+                ql = {"op": "matmul", "conv": False, "w": wq,
+                      "b": _q(bf, s_z), "m": wq.shape[0], "kdim": wq.shape[1]}
+                cout = wq.shape[0]
+            elif t == "conv":
+                k, stride = l["k"], l["stride"]
+                pl_, ph_ = _pads(h, k, stride, l["pad"])
+                cout = wf.shape[-1]
+                # HWIO -> (cout, K) with K index ((ky*k)+kx)*cin + cin_idx
+                wq, s_w = _fit_weight_scale(
+                    np.transpose(wf, (3, 0, 1, 2)).reshape(cout, -1), max_in,
+                    s_start=sep_cap)
+                s_z = s_act + s_w
+                ql = {"op": "matmul", "conv": True, "w": wq,
+                      "b": _q(bf, s_z), "m": cout, "kdim": wq.shape[1],
+                      "k": k, "stride": stride, "pad_lo": pl_, "pad_hi": ph_,
+                      "cout": cout}
+                oh = (h + pl_ + ph_ - k) // stride + 1
+                ow = (w + pl_ + ph_ - k) // stride + 1
+                h, w, c = oh, ow, cout
+            else:                                           # dwconv
+                k, stride = l["k"], l["stride"]
+                pl_, ph_ = _pads(h, k, stride, l["pad"])
+                # (k,k,1,C) -> (C, k*k) row per channel, K index ky*k+kx
+                wq, s_w = _fit_weight_scale(
+                    np.transpose(wf[:, :, 0, :], (2, 0, 1)).reshape(c, -1),
+                    max_in, s_start=sep_cap)
+                s_z = s_act + s_w
+                ql = {"op": "depthwise", "w": wq,
+                      "k": k, "stride": stride, "pad_lo": pl_, "pad_hi": ph_,
+                      "cout": c}
+                if fold_wb:
+                    ql["b"] = _q(bf, s_z)
+                oh = (h + pl_ + ph_ - k) // stride + 1
+                ow = (w + pl_ + ph_ - k) // stride + 1
+                h, w = oh, ow
+                cout = c
+            ql["n"] = 1 if t == "fc" else h * w
+            ql["s_in"], ql["s_out"], ql["s_w"] = s_act, s_z, s_w
+            q.append(ql)
+            s_act = s_z
+            prev_was_dw = t == "dwconv"
+
+            if act_fn == "sign":
+                if bn_p is not None:                        # Eq. 8 fold
+                    gp = np.broadcast_to(gamma_p, (cout,)).copy()
+                    bp = np.broadcast_to(beta_p, (cout,)).copy()
+                    flip = np.where(gp >= 0, 1, -1).astype(np.int64)
+                    with np.errstate(divide="ignore", invalid="ignore"):
+                        tf = np.where(np.abs(gp) > 1e-12, -bp / gp, 0.0)
+                    tq = _q(np.clip(tf, -(1 << 12), 1 << 12), s_z)
+                else:
+                    tq = np.zeros(cout, np.int64)
+                    flip = np.ones(cout, np.int64)
+                q.append({"op": "sign", "t": tq, "flip": flip, "c": cout})
+                # pool over sign bits?
+                if j < n and layers[j]["type"] == "pool":
+                    pk = layers[j]
+                    q.append({"op": "pool_bits", "k": pk["k"],
+                              "stride": pk["stride"], "c": cout})
+                    h = (h - pk["k"]) // pk["stride"] + 1
+                    w = (w - pk["k"]) // pk["stride"] + 1
+                    j += 1
+                q.append({"op": "pm1"})
+                s_act = 0
+            elif act_fn == "relu":
+                q.append({"op": "relu", "trunc": s_w})
+                s_act = s_z - s_w
+            i = j
+        elif t == "pool":
+            raise ValueError("maxpool outside the sign-fused path "
+                             "(use act sign before pool)")
+        elif t == "flatten":
+            q.append({"op": "flatten", "c": c, "h": h, "w": w})
+            spatial = False
+            i += 1
+        elif t in ("bn", "act"):
+            raise ValueError(f"dangling {t} at {i}")
+        else:
+            raise ValueError(f"unsupported secure layer {t}")
+    # the trailing pm1 (if any) feeds the next linear; a net ending in
+    # sign+pm1 would be odd -- nets end with fc logits, so drop trailing pm1
+    if q and q[-1]["op"] == "pm1":
+        q.pop()
+    return q
+
+
+def calibrate(q, images, bound_bits=24, margin=1, max_iters=5, log=None):
+    """Keep every secure-comparison input inside the MSB/trunc protocol's
+    |x| < 2^bound_bits headroom (rust ProtoConfig.bound_bits).
+
+    Runs the integer program over calibration images, measures the max
+    |d| feeding each sign and the max |z| feeding each relu, and when a
+    layer exceeds 2^(bound-margin), right-scales that layer's quantized
+    (w, b, t) by the excess power of two.  Sign is scale-invariant so
+    semantics are preserved exactly; relu layers also shrink their
+    truncation amount so downstream scales are unchanged.
+    """
+    from . import model as M
+    limit = 1 << (bound_bits - margin)
+    for _ in range(max_iters):
+        stats = {}
+        for x in images:
+            M.forward_fixed(q, x, stats=stats)
+        dirty = False
+        for j, l in enumerate(q):
+            if l["op"] not in ("sign", "relu"):
+                continue
+            peak = stats.get(id(l), 0)
+            if peak < limit:
+                continue
+            excess = int(np.ceil(np.log2(max(peak, 1) / limit))) + 1
+            lin = q[j - 1]
+            assert lin["op"] in ("matmul", "depthwise"), \
+                f"op before {l['op']} is {lin['op']}"
+            scale = 1 << excess
+            rs = lambda v: np.asarray(np.round(
+                np.asarray(v, np.float64) / scale), np.int64)
+            lin["w"] = rs(lin["w"])
+            if lin.get("b") is not None:
+                lin["b"] = rs(lin["b"])
+            lin["s_out"] = int(lin["s_out"]) - excess
+            lin["s_w"] = int(lin["s_w"]) - excess
+            if l["op"] == "sign":
+                l["t"] = rs(l["t"])
+            else:
+                l["trunc"] = max(0, int(l["trunc"]) - excess)
+            dirty = True
+            if log:
+                log(f"[calibrate] layer {j - 1}: peak 2^"
+                    f"{np.log2(max(peak, 1)):.1f} -> scaled down {excess} bits")
+        if not dirty:
+            return q
+    raise RuntimeError("calibration did not converge")
+
+
+def permute_fc_after_flatten(q):
+    """Training flattens NHWC; the engine flattens CHW.  Permute the first
+    fc weight after each flatten so both agree on CHW ordering."""
+    for idx, l in enumerate(q):
+        if l["op"] == "flatten":
+            ch, hh, ww = l["c"], l["h"], l["w"]
+            for l2 in q[idx + 1:]:
+                if l2["op"] == "matmul":
+                    wq = l2["w"]                       # (out, H*W*C nhwc)
+                    perm = np.arange(ch * hh * ww).reshape(hh, ww, ch)
+                    perm = np.transpose(perm, (2, 0, 1)).reshape(-1)
+                    l2["w"] = wq[:, perm]              # now CHW-ordered
+                    break
+    return q
+
+
+# --------------------------------------------------------------------------
+# serialization
+# --------------------------------------------------------------------------
+def _wrap_i32(a):
+    a = np.asarray(a, np.int64) & M.MASK32
+    a = np.where(a >= 1 << 31, a - (1 << 32), a)
+    return a.astype(np.int32)
+
+
+class BinWriter:
+    def __init__(self):
+        self.buf = bytearray()
+
+    def tensor(self, a):
+        a = _wrap_i32(a)
+        off = len(self.buf) // 4
+        self.buf += a.astype("<i4").tobytes()
+        return {"off": off, "len": int(a.size)}
+
+
+def serialize(name, dataset, input_shape, q, out_dir, hlo_names=None):
+    """Write manifest.json + weights.bin.  hlo_names: per-linear-layer HLO
+    artifact basename (filled by aot.py)."""
+    wtr = BinWriter()
+    layers_js = []
+    li = 0
+    for l in q:
+        js = {"op": l["op"]}
+        for key in ("k", "stride", "pad_lo", "pad_hi", "m", "kdim", "n",
+                    "cout", "c", "h", "w", "trunc", "s_in", "s_out", "s_w",
+                    "conv"):
+            if key in l and not isinstance(l[key], np.ndarray):
+                js[key] = l[key] if not isinstance(l[key], (np.integer,)) \
+                    else int(l[key])
+        if l["op"] in ("matmul", "depthwise", "sign"):
+            for key in ("w", "b", "t", "flip"):
+                if key in l and l[key] is not None:
+                    js[key] = wtr.tensor(l[key])
+        if l["op"] in ("matmul", "depthwise"):
+            if hlo_names:
+                js["hlo"] = hlo_names[li]
+            li += 1
+        layers_js.append(js)
+    manifest = {
+        "name": name, "dataset": dataset,
+        "input": {"c": input_shape[2], "h": input_shape[0],
+                  "w": input_shape[1]},
+        "s_in": S_IN, "s_w": S_W, "ring_bits": 32,
+        "layers": layers_js,
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"{name}.manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(os.path.join(out_dir, f"{name}.weights.bin"), "wb") as f:
+        f.write(bytes(wtr.buf))
+    return manifest
+
+
+def export_eval_data(x, y, out_path, n=256):
+    """Fixed-point eval images: header [n, c, h, w] i32 then images CHW
+    then labels i32."""
+    xs = np.transpose(x[:n], (0, 3, 1, 2))              # NHWC -> NCHW
+    xq = _wrap_i32(_q(xs, S_IN))
+    hdr = np.array([len(xq), *xq.shape[1:]], np.int32)
+    with open(out_path, "wb") as f:
+        f.write(hdr.astype("<i4").tobytes())
+        f.write(xq.astype("<i4").tobytes())
+        f.write(np.asarray(y[:n], np.int32).astype("<i4").tobytes())
+
+
+def fixed_input(x_nhwc):
+    """One NHWC float image -> (C,H,W) int64 ring input."""
+    return _q(np.transpose(x_nhwc, (2, 0, 1)), S_IN)

@@ -1,0 +1,142 @@
+"""Knowledge distillation (Hinton et al.) + a hand-rolled Adam.
+
+optax is not available in this image, so Adam is implemented directly
+(~20 lines).  The KD loss follows the paper's Eq. 1-5:
+
+    L(x, y) = lambda * H_stu(y, softmax(z_s))
+            + (1 - lambda) * T^2 * H_tea(softmax(z_t / T), softmax(z_s / T))
+
+(the customary T^2 factor keeps gradient magnitudes comparable across
+temperatures; with the paper's fixed T it only rescales the teacher term).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def kd_loss(student_logits, teacher_logits, labels, lam, temperature):
+    hard = cross_entropy(student_logits, labels)
+    pt = jax.nn.softmax(teacher_logits / temperature)
+    logq = jax.nn.log_softmax(student_logits / temperature)
+    soft = -jnp.mean(jnp.sum(pt * logq, axis=1))
+    return lam * hard + (1.0 - lam) * (temperature ** 2) * soft
+
+
+# --------------------------------------------------------------------------
+# Adam
+# --------------------------------------------------------------------------
+def adam_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": 0}
+
+
+def adam_step(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                               state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                               state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m: m / (1 - b1 ** t), m)
+    vh = jax.tree_util.tree_map(lambda v: v / (1 - b2 ** t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mh, vh)
+    return new, {"m": m, "v": v, "t": t}
+
+
+# --------------------------------------------------------------------------
+# training loops
+# --------------------------------------------------------------------------
+_TRAINABLE = ("w", "b", "gamma", "beta")
+
+
+def _split(params):
+    """Separate trainable leaves from BN running stats."""
+    train = [{k: v for k, v in p.items() if k in _TRAINABLE} for p in params]
+    stats = [{k: v for k, v in p.items() if k not in _TRAINABLE} for p in params]
+    return train, stats
+
+
+def _merge(train, stats):
+    return [{**t, **s} for t, s in zip(train, stats)]
+
+
+def evaluate(layers, params, x, y, batch=256):
+    correct = 0
+    for i in range(0, len(x), batch):
+        logits, _ = M.forward_float(layers, params, jnp.asarray(x[i:i + batch]))
+        correct += int(jnp.sum(jnp.argmax(logits, 1) == jnp.asarray(y[i:i + batch])))
+    return correct / len(x)
+
+
+def train(layers, params, data, *, epochs=5, batch=64, lr=1e-3,
+          teacher=None, lam=1.0, temperature=10.0, seed=0, log=None):
+    """Train (optionally with KD).  teacher = (t_layers, t_params) or None.
+    Returns (params, history) where history records per-epoch val accuracy
+    and cumulative wall-clock seconds (Fig 5b / Fig 6b data)."""
+    xtr, ytr, xte, yte = data
+    rng = np.random.default_rng(seed)
+    tparams, stats = _split(params)
+    opt = adam_init(tparams)
+
+    t_logits_fn = None
+    if teacher is not None:
+        t_layers, t_params = teacher
+
+        @jax.jit
+        def t_logits_fn(xb):
+            lg, _ = M.forward_float(t_layers, t_params, xb)
+            return lg
+
+    @jax.jit
+    def step(tparams, stats, opt, xb, yb, t_logits):
+        def loss_fn(tp):
+            full = _merge(tp, stats)
+            logits, new_full = M.forward_float(layers, full, xb, train=True)
+            if teacher is None:
+                l = cross_entropy(logits, yb)
+            else:
+                l = kd_loss(logits, t_logits, yb, lam, temperature)
+            new_stats = [{k: v for k, v in p.items() if k not in _TRAINABLE}
+                         for p in new_full]
+            return l, new_stats
+        (l, new_stats), grads = jax.value_and_grad(loss_fn, has_aux=True)(tparams)
+        tparams, opt = adam_step(tparams, grads, opt, lr=lr)
+        return tparams, new_stats, opt, l
+
+    history = {"epoch": [], "val_acc": [], "loss": [], "wall_s": []}
+    t0 = time.perf_counter()
+    n = len(xtr)
+    for ep in range(epochs):
+        order = rng.permutation(n)
+        losses = []
+        for i in range(0, n - batch + 1, batch):
+            idx = order[i:i + batch]
+            xb, yb = jnp.asarray(xtr[idx]), jnp.asarray(ytr[idx])
+            tl = t_logits_fn(xb) if t_logits_fn else jnp.zeros((len(idx), 10))
+            tparams, stats, opt, l = step(tparams, stats, opt, xb, yb, tl)
+            losses.append(float(l))
+        acc = evaluate(layers, _merge(tparams, stats), xte, yte)
+        history["epoch"].append(ep + 1)
+        history["val_acc"].append(acc)
+        history["loss"].append(float(np.mean(losses)))
+        history["wall_s"].append(time.perf_counter() - t0)
+        if log:
+            log(f"  epoch {ep + 1}/{epochs} loss={np.mean(losses):.4f} "
+                f"val_acc={acc:.4f}")
+    return _merge(tparams, stats), history

@@ -1,0 +1,64 @@
+"""L1 Pallas kernels for the binarization path.
+
+`sign_bits` implements the paper's Sign activation semantics (bit = 1 ^
+MSB(x - t), i.e. 1 iff x >= t) with the per-channel BN-fused threshold and
+orientation flip (Section 3.5, Eq. 8).  `pool_or_bits` is the Sign-fused
+maxpooling of Section 3.6 (window OR as sign(sum - 1)).
+
+These run elementwise / reduction-wise, so the TPU mapping is a simple 1-D
+block grid over the flattened tensor; on CPU they execute under
+interpret=True and lower into the same HLO as the model graph.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sign_kernel(z_ref, t_ref, s_ref, o_ref):
+    d = (z_ref[...] - t_ref[...]) * s_ref[...]
+    o_ref[...] = (d >= 0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def sign_bits(z, t, flip_sign, block=4096, interpret=True):
+    """bit = 1{ (z - t) * flip >= 0 } over int32 tensors.
+
+    z: (C, N) channel-major activations; t: (C, 1) thresholds;
+    flip_sign: (C, 1) in {+1, -1} (-1 when the folded BN gamma' < 0).
+    """
+    c, n = z.shape
+    bn = min(block, max(8, n))
+    pad = (-n) % bn
+    if pad:
+        z = jnp.pad(z, ((0, 0), (0, pad)))
+    tb = jnp.broadcast_to(t, z.shape)
+    sb = jnp.broadcast_to(flip_sign, z.shape)
+    out = pl.pallas_call(
+        _sign_kernel,
+        grid=(z.shape[1] // bn,),
+        in_specs=[pl.BlockSpec((c, bn), lambda j: (0, j))] * 3,
+        out_specs=pl.BlockSpec((c, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct(z.shape, jnp.int32),
+        interpret=interpret,
+    )(z, tb, sb)
+    return out[:, :n]
+
+
+def pool_or_bits(bits_chw, k=2, stride=2, interpret=True):
+    """Sign-fused maxpool over {0,1} bit tensors in (C,H,W) layout:
+    out = 1{ sum(window) - 1 >= 0 }."""
+    c, h, w = bits_chw.shape
+    oh, ow = (h - k) // stride + 1, (w - k) // stride + 1
+    s = jnp.zeros((c, oh, ow), jnp.int32)
+    for i in range(k):
+        for j in range(k):
+            s = s + bits_chw[:, i:i + oh * stride:stride,
+                             j:j + ow * stride:stride]
+    flat = s.reshape(c, oh * ow)
+    one = jnp.ones((c, 1), jnp.int32)
+    return sign_bits(flat, one, one, interpret=interpret).reshape(c, oh, ow)

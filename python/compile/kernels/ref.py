@@ -1,0 +1,90 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Everything here is the *definition* of correct behaviour; the Pallas
+kernels in rss_linear.py / binary.py are checked against these in
+python/tests/test_kernels.py (hypothesis sweeps) and indirectly by the
+rust engine's golden tests.
+
+All ring arithmetic is int32 with wrap-around (two's complement), which is
+exactly Z_{2^32}.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def rss_matmul_ref(wi, wi1, xi, xi1):
+    """Local RSS linear-layer term (Algorithm 2, step 2):
+
+        Z_i = W_i X_i + W_{i+1} X_i + W_i X_{i+1}   (mod 2^32)
+    """
+    dot = lambda a, b: jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    return dot(wi, xi) + dot(wi1, xi) + dot(wi, xi1)
+
+
+def rss_conv_ref(wi, wi1, xi, xi1, stride=1, pad="SAME"):
+    """Same three-term contraction for NHWC x HWIO convolution."""
+    cv = lambda x, k: jax.lax.conv_general_dilated(
+        x, k, (stride, stride), pad,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32)
+    return cv(xi, wi) + cv(xi, wi1) + cv(xi1, wi)
+
+
+def rss_depthwise_ref(wi, wi1, xi, xi1, stride=1, pad="SAME"):
+    """Three-term depthwise convolution; w has shape (H,W,1,C)."""
+    c = xi.shape[-1]
+    cv = lambda x, k: jax.lax.conv_general_dilated(
+        x, k, (stride, stride), pad,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+        preferred_element_type=jnp.int32)
+    return cv(xi, wi) + cv(xi, wi1) + cv(xi1, wi)
+
+
+def im2col_ref(x, k, stride, pad_lo, pad_hi):
+    """NHWC -> (N*OH*OW, K*K*C) patch matrix, int32, zero padding."""
+    n, h, w, c = x.shape
+    x = jnp.pad(x, ((0, 0), (pad_lo, pad_hi), (pad_lo, pad_hi), (0, 0)))
+    oh = (h + pad_lo + pad_hi - k) // stride + 1
+    ow = (w + pad_lo + pad_hi - k) // stride + 1
+    cols = []
+    for i in range(k):
+        for j in range(k):
+            cols.append(x[:, i:i + oh * stride:stride,
+                          j:j + ow * stride:stride, :])
+    # (N, OH, OW, K*K, C) -> (N*OH*OW, K*K*C)
+    patches = jnp.stack(cols, axis=3)
+    return patches.reshape(n * oh * ow, k * k * c), (oh, ow)
+
+
+def sign_bits_ref(x):
+    """Plaintext Sign activation as the paper defines it:
+    1 ^ MSB(x) -> bit in {0,1}; 1 iff x >= 0 (two's complement)."""
+    return (x >= 0).astype(jnp.int32)
+
+
+def sign_pm1_ref(x):
+    """Sign activation mapped to {-1,+1} = 2*bit - 1."""
+    return 2 * sign_bits_ref(x) - 1
+
+
+def maxpool_or_ref(bits, k=2, stride=2):
+    """Sign-fused maxpool (paper 3.6): OR over the window of {0,1} bits,
+    computed as sign(sum - 1) over NHWC int32 bit tensors."""
+    n, h, w, c = bits.shape
+    oh, ow = (h - k) // stride + 1, (w - k) // stride + 1
+    s = jnp.zeros((n, oh, ow, c), jnp.int32)
+    for i in range(k):
+        for j in range(k):
+            s = s + bits[:, i:i + oh * stride:stride,
+                         j:j + ow * stride:stride, :]
+    return sign_bits_ref(s - 1)
+
+
+def trunc_ref(x, f):
+    """Arithmetic-shift truncation by f fractional bits (signed)."""
+    return jnp.right_shift(x, f)

@@ -1,0 +1,107 @@
+"""L1 Pallas kernel: the fused 3-term RSS linear-layer local computation.
+
+This is the compute hot-spot of Algorithm 2: each party locally evaluates
+
+    Z_i = W_i X_i + W_{i+1} X_i + W_i X_{i+1}          (mod 2^32)
+
+for its two replicated shares.  The kernel fuses the three products into a
+single pass over the tiles, exploiting the ring identity
+
+    W_i X_i + W_{i+1} X_i + W_i X_{i+1} = (W_i + W_{i+1}) X_i + W_i X_{i+1}
+
+so only TWO MXU contractions per tile are issued instead of three, and
+X_i / X_{i+1} tiles make exactly one HBM->VMEM round-trip.
+
+TPU mapping (DESIGN.md "Hardware adaptation"): grid (M/bm, N/bn, K/bk) with
+the K dimension innermost ("arbitrary" semantics -> sequential), output
+block revisited across K steps and accumulated in place in VMEM.  On this
+CPU image the kernel runs under interpret=True; the identical jaxpr lowers
+to the HLO that the rust PJRT runtime executes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dot(a, b):
+    return jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.int32)
+
+
+def _rss_mm_kernel(wi_ref, wi1_ref, xi_ref, xi1_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    wi = wi_ref[...]
+    # two contractions instead of three (ring identity above)
+    o_ref[...] += _dot(wi + wi1_ref[...], xi_ref[...]) + _dot(wi, xi1_ref[...])
+
+
+def _pad_to(a, m0, m1):
+    p0 = (-a.shape[0]) % m0
+    p1 = (-a.shape[1]) % m1
+    if p0 or p1:
+        a = jnp.pad(a, ((0, p0), (0, p1)))
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def rss_matmul(wi, wi1, xi, xi1, bm=128, bk=128, bn=128, interpret=True):
+    """Fused Z_i = W_i X_i + W_{i+1} X_i + W_i X_{i+1} over int32.
+
+    Shapes: w* (M,K), x* (K,N) -> (M,N).  Inputs are zero-padded up to the
+    block grid and the result sliced back, so arbitrary shapes are fine.
+    """
+    m, k = wi.shape
+    _, n = xi.shape
+    bm, bk, bn = min(bm, _rup(m)), min(bk, _rup(k)), min(bn, _rup(n))
+    wi_p, wi1_p = _pad_to(wi, bm, bk), _pad_to(wi1, bm, bk)
+    xi_p, xi1_p = _pad_to(xi, bk, bn), _pad_to(xi1, bk, bn)
+    mp, kp = wi_p.shape
+    _, np_ = xi_p.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _rss_mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=interpret,
+    )(wi_p, wi1_p, xi_p, xi1_p)
+    return out[:m, :n]
+
+
+def _rup(x, m=8):
+    """Round up to a sane minimum block granularity."""
+    return max(m, x)
+
+
+def rss_matmul_bias(wi, wi1, xi, xi1, bi, **kw):
+    """rss_matmul plus the party's additive bias share (column broadcast)."""
+    return rss_matmul(wi, wi1, xi, xi1, **kw) + bi
+
+
+def vmem_footprint_bytes(bm, bk, bn):
+    """Estimated VMEM residency of one grid step (int32 = 4 bytes):
+    two W tiles + two X tiles + one accumulator tile."""
+    return 4 * (2 * bm * bk + 2 * bk * bn + bm * bn)
+
+
+def mxu_utilization_estimate(m, k, n, bm=128, bk=128, bn=128):
+    """Fraction of MXU-issued MACs that are useful (non-padding), i.e.
+    true_flops / padded_flops for the chosen blocking.  Used for the
+    DESIGN.md real-TPU efficiency estimate."""
+    ceil = lambda a, b: -(-a // b) * b
+    padded = ceil(m, bm) * ceil(k, bk) * ceil(n, bn)
+    return (m * k * n) / padded

@@ -1,0 +1,280 @@
+"""L2: customized-BNN model in JAX.
+
+Two forward paths:
+
+* `forward_float`  -- differentiable float path used for (KD) training.
+  Binary activations use a straight-through estimator; separable
+  convolutions are expanded to depthwise + pointwise; BN uses batch stats
+  at train time and running stats at eval time.
+
+* `forward_fixed`  -- the *integer ring* path over the quantized/folded
+  layer program produced by export.py.  This mirrors, operation for
+  operation and in the same (C, H*W) channel-major layout, what the rust
+  secure engine computes on reconstructed values, and is the bit-exact
+  oracle for the golden tests.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import networks
+
+MASK32 = (1 << 32) - 1
+
+
+# --------------------------------------------------------------------------
+# straight-through sign
+# --------------------------------------------------------------------------
+@jax.custom_vjp
+def sign_ste(x):
+    return jnp.where(x >= 0, 1.0, -1.0)
+
+
+def _sign_fwd(x):
+    return sign_ste(x), x
+
+
+def _sign_bwd(res, g):
+    x = res
+    return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
+
+
+sign_ste.defvjp(_sign_fwd, _sign_bwd)
+
+
+# --------------------------------------------------------------------------
+# parameter init
+# --------------------------------------------------------------------------
+def _expand(layers):
+    """Expand sep-convs into explicit depthwise + pointwise sub-layers."""
+    out = []
+    for l in layers:
+        if l["type"] == "conv" and l.get("sep") and l["k"] > 1:
+            out.append({"type": "dwconv", "k": l["k"], "stride": l["stride"],
+                        "pad": l["pad"]})
+            out.append({"type": "conv", "k": 1, "stride": 1, "pad": "SAME",
+                        "cout": l["cout"], "sep": False})
+        else:
+            out.append(dict(l))
+    return out
+
+
+def init_params(layers, input_shape, key):
+    """He-style init; returns (expanded_layers, params list)."""
+    layers = _expand(layers)
+    params = []
+    h, w, c = input_shape
+    feat = None
+    for l in layers:
+        t = l["type"]
+        if t == "conv":
+            k, co = l["k"], l["cout"]
+            key, sub = jax.random.split(key)
+            fan = k * k * c
+            wgt = jax.random.normal(sub, (k, k, c, co)) * np.sqrt(2.0 / fan)
+            params.append({"w": wgt, "b": jnp.zeros((co,))})
+            if l["pad"] == "VALID":
+                h, w = (h - k) // l["stride"] + 1, (w - k) // l["stride"] + 1
+            else:
+                h, w = -(-h // l["stride"]), -(-w // l["stride"])
+            c = co
+        elif t == "dwconv":
+            k = l["k"]
+            key, sub = jax.random.split(key)
+            wgt = jax.random.normal(sub, (k, k, 1, c)) * np.sqrt(2.0 / (k * k))
+            params.append({"w": wgt})
+            if l["pad"] == "VALID":
+                h, w = (h - k) // l["stride"] + 1, (w - k) // l["stride"] + 1
+            else:
+                h, w = -(-h // l["stride"]), -(-w // l["stride"])
+        elif t == "fc":
+            if feat is None:
+                feat = h * w * c if h else c
+            key, sub = jax.random.split(key)
+            wgt = jax.random.normal(sub, (feat, l["out"])) * np.sqrt(2.0 / feat)
+            params.append({"w": wgt, "b": jnp.zeros((l["out"],))})
+            feat = l["out"]
+        elif t == "bn":
+            dim = feat if feat is not None else c
+            params.append({"gamma": jnp.ones((dim,)), "beta": jnp.zeros((dim,)),
+                           "mu": jnp.zeros((dim,)), "var": jnp.ones((dim,))})
+        elif t == "pool":
+            h, w = (h - l["k"]) // l["stride"] + 1, (w - l["k"]) // l["stride"] + 1
+            params.append({})
+        elif t == "flatten":
+            feat = h * w * c
+            params.append({})
+        elif t == "gap":
+            feat = c
+            params.append({})
+        else:  # act, res markers
+            params.append({})
+    return layers, params
+
+
+# --------------------------------------------------------------------------
+# float forward (training path)
+# --------------------------------------------------------------------------
+def forward_float(layers, params, x, train=False, bn_momentum=0.9):
+    """Returns (logits, new_params) -- new_params carries updated BN
+    running stats when train=True."""
+    new_params = []
+    res_stack = []
+    for l, p in zip(layers, params):
+        t = l["type"]
+        np_ = p
+        if t == "conv":
+            x = jax.lax.conv_general_dilated(
+                x, p["w"], (l["stride"], l["stride"]), l["pad"],
+                dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["b"]
+        elif t == "dwconv":
+            cin = x.shape[-1]
+            x = jax.lax.conv_general_dilated(
+                x, p["w"], (l["stride"], l["stride"]), l["pad"],
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                feature_group_count=cin)
+        elif t == "fc":
+            x = x @ p["w"] + p["b"]
+        elif t == "bn":
+            axes = tuple(range(x.ndim - 1))
+            if train:
+                mu = jnp.mean(x, axis=axes)
+                var = jnp.var(x, axis=axes)
+                np_ = dict(p)
+                np_["mu"] = bn_momentum * p["mu"] + (1 - bn_momentum) * mu
+                np_["var"] = bn_momentum * p["var"] + (1 - bn_momentum) * var
+            else:
+                mu, var = p["mu"], p["var"]
+            x = p["gamma"] * (x - mu) * jax.lax.rsqrt(var + 1e-5) + p["beta"]
+        elif t == "act":
+            x = sign_ste(x) if l["fn"] == "sign" else jax.nn.relu(x)
+        elif t == "pool":
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max,
+                (1, l["k"], l["k"], 1), (1, l["stride"], l["stride"], 1),
+                "VALID")
+        elif t == "flatten":
+            x = x.reshape(x.shape[0], -1)
+        elif t == "gap":
+            x = jnp.mean(x, axis=(1, 2))
+        elif t == "res_begin":
+            res_stack.append(x)
+        elif t == "res_end":
+            r = res_stack.pop()
+            if r.shape != x.shape:  # projection shortcut via stride/pad
+                r = r[:, ::x.shape[1] and r.shape[1] // x.shape[1] or 1,
+                      ::r.shape[2] // x.shape[2] or 1, :]
+                pad_c = x.shape[-1] - r.shape[-1]
+                if pad_c > 0:
+                    r = jnp.pad(r, ((0, 0), (0, 0), (0, 0), (0, pad_c)))
+            x = x + r
+        new_params.append(np_)
+    return x, new_params
+
+
+def param_count(params) -> int:
+    return int(sum(np.prod(v.shape) for p in params for v in p.values()))
+
+
+# --------------------------------------------------------------------------
+# fixed-point (ring) forward -- the engine oracle
+# --------------------------------------------------------------------------
+def wrap32(x):
+    """Wrap int64 ndarray into signed int32 two's-complement (Z_{2^32})."""
+    x = np.asarray(x, dtype=np.int64) & MASK32
+    return np.where(x >= 1 << 31, x - (1 << 32), x).astype(np.int64)
+
+
+def _im2col_chw(x, k, stride, pad_lo, pad_hi):
+    """(C,H,W) int64 -> (k*k*C, OH*OW); K index = ((ky*k)+kx)*C + c."""
+    c, h, w = x.shape
+    xp = np.zeros((c, h + pad_lo + pad_hi, w + pad_lo + pad_hi), np.int64)
+    xp[:, pad_lo:pad_lo + h, pad_lo:pad_lo + w] = x
+    oh = (h + pad_lo + pad_hi - k) // stride + 1
+    ow = (w + pad_lo + pad_hi - k) // stride + 1
+    rows = np.empty((k * k * c, oh * ow), np.int64)
+    for ky in range(k):
+        for kx in range(k):
+            patch = xp[:, ky:ky + oh * stride:stride, kx:kx + ow * stride:stride]
+            rows[(ky * k + kx) * c:(ky * k + kx + 1) * c, :] = \
+                patch.reshape(c, oh * ow)
+    return rows, (oh, ow)
+
+
+def forward_fixed(qlayers, x_fixed, stats=None):
+    """Run the quantized/folded layer program on one sample.
+
+    x_fixed: (C,H,W) int64 ring values (input image scaled by 2^s_in).
+    qlayers: export.py layer program (dicts with int numpy payloads).
+    stats: optional dict accumulating, per op index, the max |value| that
+    feeds a secure comparison (sign input d, relu/trunc input z) -- used
+    by export.calibrate to keep every MSB/trunc input inside the
+    protocol's 2^bound_bits headroom.
+    Returns int64 logits vector.  Every step wraps mod 2^32 -- bit-exact
+    with the rust engine on reconstructed shares.
+    """
+    x = wrap32(x_fixed)          # (C,H,W) or (F,1) depending on stage
+    shape_chw = x.ndim == 3
+    for l in qlayers:
+        op = l["op"]
+        if op == "matmul":
+            if shape_chw:
+                cols, (oh, ow) = _im2col_chw(x, l["k"], l["stride"],
+                                             l["pad_lo"], l["pad_hi"])
+                z = wrap32(l["w"].astype(np.int64) @ cols)
+                x = z.reshape(l["cout"], oh, ow)
+            else:
+                x = wrap32(l["w"].astype(np.int64) @ x)
+            if l.get("b") is not None:
+                x = wrap32(x + l["b"].astype(np.int64).reshape(-1, *([1] * (x.ndim - 1))))
+        elif op == "depthwise":
+            cols_per_c = []
+            k = l["k"]
+            for c in range(x.shape[0]):
+                cols, (oh, ow) = _im2col_chw(x[c:c + 1], k, l["stride"],
+                                             l["pad_lo"], l["pad_hi"])
+                wrow = l["w"][c].astype(np.int64)  # (k*k,)
+                cols_per_c.append(wrap32(wrow @ cols).reshape(oh, ow))
+            x = np.stack(cols_per_c)
+        elif op == "sign":
+            t = l["t"].astype(np.int64).reshape(-1, *([1] * (x.ndim - 1)))
+            s = l["flip"].astype(np.int64).reshape(-1, *([1] * (x.ndim - 1)))
+            d = x - t          # true integer magnitude (pre-wrap)
+            if stats is not None:
+                idx = id(l)
+                stats[idx] = max(stats.get(idx, 0), int(np.abs(d).max()))
+            x = (wrap32(d * s) >= 0).astype(np.int64)
+            # bits -> {-1,+1} happens lazily in the next linear via pm1
+        elif op == "pm1":
+            x = 2 * x - 1
+        elif op == "relu":
+            if stats is not None:
+                idx = id(l)
+                stats[idx] = max(stats.get(idx, 0), int(np.abs(x).max()))
+            x = np.where(x >= 0, x, 0)
+            if l.get("trunc"):
+                x = x >> l["trunc"]
+        elif op == "pool_bits":
+            k, s = l["k"], l["stride"]
+            c, h, w = x.shape
+            oh, ow = (h - k) // s + 1, (w - k) // s + 1
+            acc = np.zeros((c, oh, ow), np.int64)
+            for i in range(k):
+                for j in range(k):
+                    acc += x[:, i:i + oh * s:s, j:j + ow * s:s]
+            x = (acc - 1 >= 0).astype(np.int64)
+        elif op == "flatten":
+            x = x.reshape(-1, 1)    # CHW row-major -> column vector
+            shape_chw = False
+        else:
+            raise ValueError(f"unknown op {op}")
+    return x.reshape(-1)
+
+
+def predict_fixed(qlayers, xs_fixed):
+    """argmax over forward_fixed for a batch of (C,H,W) inputs."""
+    return np.array([int(np.argmax(forward_fixed(qlayers, x)))
+                     for x in xs_fixed])

@@ -1,0 +1,227 @@
+"""Network architectures from the paper's Table 4.
+
+Each architecture is a list of layer specs (plain dicts so they serialize
+straight into the rust-side manifest).  Layer types:
+
+  conv   {k, stride, pad, cout, sep}   sep=True -> MPC-friendly separable
+                                       (depthwise k x k + pointwise 1x1)
+  fc     {out}
+  bn     {}                            batch norm (folded at export)
+  act    {fn: 'sign' | 'relu'}
+  pool   {k, stride}                   maxpool
+  flatten{}
+
+Widths for the CIFAR nets are scaled by `width` (default 0.5) relative to
+the published FitNet/VGG configs so that KD training fits the 1-core budget;
+layer *counts* match Table 4 exactly.  Teachers (MnistNet4, CifarNet7/8) use
+ReLU and full-precision activations.
+"""
+
+from __future__ import annotations
+
+
+def conv(cout, k=3, stride=1, pad="SAME", sep=False):
+    return {"type": "conv", "k": k, "stride": stride, "pad": pad,
+            "cout": cout, "sep": sep}
+
+
+def fc(out):
+    return {"type": "fc", "out": out}
+
+
+def bn():
+    return {"type": "bn"}
+
+
+def act(fn):
+    return {"type": "act", "fn": fn}
+
+
+def pool(k=2, stride=2):
+    return {"type": "pool", "k": k, "stride": stride}
+
+
+def flatten():
+    return {"type": "flatten"}
+
+
+def _blockify(chans, acts, sep=False, k=3, pools=()):
+    """conv->bn->act chains with optional maxpool after given indices."""
+    layers = []
+    for i, (c, a) in enumerate(zip(chans, acts)):
+        layers += [conv(c, k=k, sep=sep), bn(), act(a)]
+        if i in pools:
+            layers.append(pool())
+    return layers
+
+
+def mnistnet1():
+    """3 FC (XONN BM1-style: 784-128-128-10)."""
+    return [flatten(),
+            fc(128), bn(), act("sign"),
+            fc(128), bn(), act("sign"),
+            fc(10)]
+
+
+def mnistnet2():
+    """1 CONV + 2 FC (XONN BM2-style).  The conv uses ReLU so the secure
+    engine exercises the ReLU + truncation path."""
+    return [conv(16, k=5, stride=2, pad="VALID"), bn(), act("relu"),
+            flatten(),
+            fc(100), bn(), act("sign"),
+            fc(10)]
+
+
+def mnistnet3():
+    """2 CONV, 2 MP, 2 FC (LeNet-style)."""
+    return [conv(16, k=5, pad="VALID"), bn(), act("sign"), pool(),
+            conv(16, k=5, pad="VALID"), bn(), act("sign"), pool(),
+            flatten(),
+            fc(100), bn(), act("sign"),
+            fc(10)]
+
+
+def mnistnet4():
+    """Teacher for the MnistNets: same topology as MnistNet3, wider,
+    full-precision ReLU activations."""
+    return [conv(32, k=5, pad="VALID"), bn(), act("relu"), pool(),
+            conv(32, k=5, pad="VALID"), bn(), act("relu"), pool(),
+            flatten(),
+            fc(256), bn(), act("relu"),
+            fc(10)]
+
+
+def _w(width, c):
+    return max(8, int(round(c * width)))
+
+
+def cifarnet1(width=0.5, sep=True):
+    """Binary MiniONN architecture: 7 CONV, 2 MP, 1 FC."""
+    w = lambda c: _w(width, c)
+    layers = _blockify([w(64), w(64)], ["sign"] * 2, sep=sep, pools=(1,))
+    layers += _blockify([w(64), w(64)], ["sign"] * 2, sep=sep, pools=(1,))
+    layers += _blockify([w(64)], ["sign"], sep=sep)
+    layers += [conv(w(64), k=1), bn(), act("sign"),
+               conv(16, k=1), bn(), act("sign"),
+               flatten(), fc(10)]
+    return layers
+
+
+def cifarnet2(width=0.5, sep=True):
+    """FitNet-1 binary variant: 9 CONV, 3 MP, 1 FC (13 layers)."""
+    w = lambda c: _w(width, c)
+    layers = _blockify([w(16), w(16), w(16)], ["sign"] * 3, sep=sep, pools=(2,))
+    layers += _blockify([w(32), w(32), w(32)], ["sign"] * 3, sep=sep, pools=(2,))
+    layers += _blockify([w(48), w(48), w(64)], ["sign"] * 3, sep=sep, pools=(2,))
+    layers += [flatten(), fc(10)]
+    return layers
+
+
+def cifarnet2_typical(width=0.5):
+    """Same topology as cifarnet2 but with standard (non-separable)
+    convolutions -- the 'Typical BNN' row of Table 2."""
+    return cifarnet2(width=width, sep=False)
+
+
+def cifarnet3(width=0.5, sep=True):
+    """FitNet-2 binary variant: 9 CONV, 3 MP, 1 FC; wider than cifarnet2."""
+    w = lambda c: _w(width, c)
+    layers = _blockify([w(16), w(32), w(32)], ["sign"] * 3, sep=sep, pools=(2,))
+    layers += _blockify([w(48), w(64), w(80)], ["sign"] * 3, sep=sep, pools=(2,))
+    layers += _blockify([w(96), w(96), w(128)], ["sign"] * 3, sep=sep, pools=(2,))
+    layers += [flatten(), fc(10)]
+    return layers
+
+
+def cifarnet4(width=0.5, sep=True):
+    """FitNet-3 binary variant: 11 CONV, 3 MP, 1 FC."""
+    w = lambda c: _w(width, c)
+    layers = _blockify([w(32), w(48), w(64), w(64)], ["sign"] * 4, sep=sep,
+                       pools=(3,))
+    layers += _blockify([w(80), w(80), w(80)], ["sign"] * 3, sep=sep,
+                        pools=(2,))
+    layers += _blockify([w(128), w(128), w(128), w(128)], ["sign"] * 4,
+                        sep=sep, pools=(3,))
+    layers += [flatten(), fc(10)]
+    return layers
+
+
+def cifarnet5(width=0.5, sep=True):
+    """FitNet-4 binary variant: 17 CONV, 3 MP, 1 FC."""
+    w = lambda c: _w(width, c)
+    layers = _blockify([w(32)] * 5 + [w(48)], ["sign"] * 6, sep=sep, pools=(5,))
+    layers += _blockify([w(80)] * 6, ["sign"] * 6, sep=sep, pools=(5,))
+    layers += _blockify([w(128)] * 5, ["sign"] * 5, sep=sep, pools=(4,))
+    layers += [flatten(), fc(10)]
+    return layers
+
+
+def cifarnet6(width=0.5, sep=True):
+    """VGG16 binary variant: 13 CONV, 5 MP, 3 FC."""
+    w = lambda c: _w(width, c)
+    cfg = [(2, 64), (2, 128), (3, 256), (3, 512), (3, 512)]
+    layers = []
+    for reps, c in cfg:
+        layers += _blockify([w(c)] * reps, ["sign"] * reps, sep=sep,
+                            pools=(reps - 1,))
+    layers += [flatten(),
+               fc(_w(width, 512)), bn(), act("sign"),
+               fc(_w(width, 512)), bn(), act("sign"),
+               fc(10)]
+    return layers
+
+
+def cifarnet7(width=0.5):
+    """Teacher: VGG16-style full-precision (ReLU, standard convs)."""
+    w = lambda c: _w(width, c)
+    cfg = [(2, 64), (2, 128), (3, 256), (3, 512), (3, 512)]
+    layers = []
+    for reps, c in cfg:
+        layers += _blockify([w(c)] * reps, ["relu"] * reps, pools=(reps - 1,))
+    layers += [flatten(),
+               fc(w(512)), bn(), act("relu"),
+               fc(w(512)), bn(), act("relu"),
+               fc(10)]
+    return layers
+
+
+def cifarnet8(width=0.25):
+    """Teacher: ResNet18-style.  Residual adds are expressed as explicit
+    'res' markers; only used as a float teacher (never securely
+    evaluated), so the secure layer IR does not need skip support."""
+    w = lambda c: _w(width, c)
+    layers = [conv(w(64)), bn(), act("relu")]
+    for c, reps in [(64, 2), (128, 2), (256, 2), (512, 2)]:
+        for r in range(reps):
+            stride = 2 if (r == 0 and c != 64) else 1
+            layers += [{"type": "res_begin"},
+                       conv(w(c), stride=stride), bn(), act("relu"),
+                       conv(w(c)), bn(),
+                       {"type": "res_end"}, act("relu")]
+    layers += [{"type": "gap"}, fc(10)]
+    return layers
+
+
+REGISTRY = {
+    "mnistnet1": (mnistnet1, "mnist"),
+    "mnistnet2": (mnistnet2, "mnist"),
+    "mnistnet3": (mnistnet3, "mnist"),
+    "mnistnet4": (mnistnet4, "mnist"),
+    "cifarnet1": (cifarnet1, "cifar"),
+    "cifarnet2": (cifarnet2, "cifar"),
+    "cifarnet2_typical": (cifarnet2_typical, "cifar"),
+    "cifarnet3": (cifarnet3, "cifar"),
+    "cifarnet4": (cifarnet4, "cifar"),
+    "cifarnet5": (cifarnet5, "cifar"),
+    "cifarnet6": (cifarnet6, "cifar"),
+    "cifarnet7": (cifarnet7, "cifar"),
+    "cifarnet8": (cifarnet8, "cifar"),
+}
+
+INPUT_SHAPES = {"mnist": (28, 28, 1), "cifar": (32, 32, 3)}
+
+
+def build(name: str, **kw):
+    """Return (layers, input_shape) for a registered architecture."""
+    fn, ds = REGISTRY[name]
+    return fn(**kw), INPUT_SHAPES[ds]

@@ -1,0 +1,170 @@
+"""Training driver: produces model weights + the Fig 5 / Fig 6 experiment
+JSONs.
+
+    python -m compile.train --exp weights   # train + save nets for aot.py
+    python -m compile.train --exp fig5      # MNIST: OriNets vs customized
+    python -m compile.train --exp fig6      # CIFAR: lambda sweep + curves
+    python -m compile.train --exp all
+
+Budget knobs (--quick) keep everything runnable on one CPU core in
+minutes; dataset sizes / epochs are recorded in the JSON so EXPERIMENTS.md
+can cite them.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+import jax
+
+from . import datasets, kd, networks
+from . import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _save_params(path, layers, params):
+    flat = {}
+    for i, p in enumerate(params):
+        for k, v in p.items():
+            flat[f"{i}:{k}"] = np.asarray(v)
+    np.savez(path, layers=json.dumps(layers), **flat)
+
+
+def load_params(path):
+    z = np.load(path, allow_pickle=False)
+    layers = json.loads(str(z["layers"]))
+    params = [{} for _ in layers]
+    for key in z.files:
+        if key == "layers":
+            continue
+        i, k = key.split(":")
+        params[int(i)][k] = jax.numpy.asarray(z[key])
+    return layers, params
+
+
+def _train_one(name, data, *, teacher=None, lam=0.1, temperature=10.0,
+               epochs=6, lr=2e-3, seed=0, width_kw=None, log=print):
+    layers0, in_shape = networks.build(name, **(width_kw or {}))
+    layers, params = M.init_params(layers0, in_shape,
+                                   jax.random.PRNGKey(seed))
+    log(f"[train] {name}: {M.param_count(params)} params, "
+        f"{'KD' if teacher else 'plain'}")
+    params, hist = kd.train(layers, params, data, epochs=epochs, lr=lr,
+                            teacher=teacher, lam=lam, temperature=temperature,
+                            seed=seed, log=log)
+    return layers, params, hist, in_shape
+
+
+def _teacher(name, data, epochs, seed=0, log=print):
+    cache = os.path.join(ART, "models", f"{name}.npz")
+    if os.path.exists(cache):
+        log(f"[teacher] cached {name}")
+        return load_params(cache)
+    layers, params, hist, _ = _train_one(name, data, epochs=epochs,
+                                         seed=seed, log=log)
+    os.makedirs(os.path.dirname(cache), exist_ok=True)
+    _save_params(cache, layers, params)
+    log(f"[teacher] {name} val_acc={hist['val_acc'][-1]:.4f}")
+    return layers, params
+
+
+def exp_weights(quick, log=print):
+    """Train and save every securely-evaluated network."""
+    nm, nc = (1500, 400) if quick else (4000, 800)
+    ep_t, ep_s = (3, 4) if quick else (8, 10)
+    out = {}
+    mnist = datasets.load("mnist", nm, nc)
+    teacher_m = _teacher("mnistnet4", mnist, ep_t, log=log)
+    for name in ("mnistnet1", "mnistnet2", "mnistnet3"):
+        layers, params, hist, _ = _train_one(
+            name, mnist, teacher=teacher_m, lam=0.1, epochs=ep_s, log=log)
+        _save_params(os.path.join(ART, "models", f"{name}.npz"),
+                     layers, params)
+        out[name] = hist["val_acc"][-1]
+    cifar = datasets.load("cifar", nm, nc)
+    teacher_c = _teacher("cifarnet7", cifar, ep_t, log=log)
+    for name, kw in (("cifarnet2", {}), ("cifarnet2_typical", {})):
+        layers, params, hist, _ = _train_one(
+            name, cifar, teacher=teacher_c, lam=0.1, epochs=ep_s,
+            width_kw=kw, log=log)
+        _save_params(os.path.join(ART, "models", f"{name}.npz"),
+                     layers, params)
+        out[name] = hist["val_acc"][-1]
+    with open(os.path.join(ART, "experiments", "plaintext_acc.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def exp_fig5(quick, log=print):
+    """Fig 5: customized (KD) vs typical (OriNet) training on MNIST."""
+    nm, nc = (1500, 400) if quick else (4000, 800)
+    eps = 4 if quick else 10
+    data = datasets.load("mnist", nm, nc)
+    teacher = _teacher("mnistnet4", data, 3 if quick else 8, log=log)
+    res = {"meta": {"n_train": nm, "n_test": nc, "epochs": eps,
+                    "lambda": 0.1, "T": 10.0,
+                    "dataset": "synth-mnist (see DESIGN.md substitutions)"}}
+    for name in ("mnistnet1", "mnistnet2", "mnistnet3"):
+        _, _, h_kd, _ = _train_one(name, data, teacher=teacher, lam=0.1,
+                                   epochs=eps, log=log)
+        _, _, h_ori, _ = _train_one(name, data, teacher=None,
+                                    epochs=eps, log=log)
+        res[name] = {"customized": h_kd, "orinet": h_ori}
+    os.makedirs(os.path.join(ART, "experiments"), exist_ok=True)
+    with open(os.path.join(ART, "experiments", "fig5.json"), "w") as f:
+        json.dump(res, f, indent=1)
+    log("[fig5] written")
+    return res
+
+
+def exp_fig6(quick, log=print):
+    """Fig 6(a): KD lambda sweep on CIFAR; Fig 6(b): convergence curves."""
+    nm, nc = (1200, 300) if quick else (3000, 600)
+    eps = 3 if quick else 8
+    data = datasets.load("cifar", nm, nc)
+    teacher = _teacher("cifarnet7", data, 3 if quick else 8, log=log)
+    lams = [0.1, 0.3, 0.5, 0.7, 0.9, 1.0]
+    sweep = {}
+    for lam in lams:
+        _, _, h, _ = _train_one("cifarnet2", data, teacher=teacher, lam=lam,
+                                epochs=eps, log=log)
+        sweep[str(lam)] = h["val_acc"][-1]
+    _, _, h_cust, _ = _train_one("cifarnet2", data, teacher=teacher, lam=0.1,
+                                 epochs=eps, log=log)
+    _, _, h_typ, _ = _train_one("cifarnet2_typical", data, teacher=None,
+                                epochs=eps, log=log)
+    res = {"meta": {"n_train": nm, "n_test": nc, "epochs": eps, "T": 10.0,
+                    "dataset": "synth-cifar (see DESIGN.md substitutions)"},
+           "lambda_sweep": sweep,
+           "curves": {"customized": h_cust, "typical": h_typ}}
+    with open(os.path.join(ART, "experiments", "fig6.json"), "w") as f:
+        json.dump(res, f, indent=1)
+    log("[fig6] written")
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--exp", default="weights",
+                    choices=["weights", "fig5", "fig6", "all"])
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(os.path.join(ART, "models"), exist_ok=True)
+    os.makedirs(os.path.join(ART, "experiments"), exist_ok=True)
+    t0 = time.perf_counter()
+    if args.exp in ("weights", "all"):
+        exp_weights(args.quick)
+    if args.exp in ("fig5", "all"):
+        exp_fig5(args.quick)
+    if args.exp in ("fig6", "all"):
+        exp_fig6(args.quick)
+    print(f"[train] done in {time.perf_counter() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

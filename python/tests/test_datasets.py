@@ -1,0 +1,59 @@
+"""Synthetic dataset properties: determinism, shape, learnability."""
+
+import numpy as np
+
+from compile import datasets
+
+
+def test_shapes_and_ranges():
+    x, y = datasets.synth_mnist(32, seed=3)
+    assert x.shape == (32, 28, 28, 1) and x.dtype == np.float32
+    assert x.min() >= 0.0 and x.max() <= 1.0
+    assert y.shape == (32,) and set(np.unique(y)) <= set(range(10))
+    xc, yc = datasets.synth_cifar(16, seed=3)
+    assert xc.shape == (16, 32, 32, 3)
+
+
+def test_deterministic():
+    x1, y1 = datasets.synth_mnist(20, seed=7)
+    x2, y2 = datasets.synth_mnist(20, seed=7)
+    assert np.array_equal(x1, x2) and np.array_equal(y1, y2)
+    x3, _ = datasets.synth_mnist(20, seed=8)
+    assert not np.array_equal(x1, x3)
+
+
+def test_train_test_disjoint_seeds():
+    xtr, ytr, xte, yte = datasets.load("mnist", 50, 50, seed=0)
+    assert not np.array_equal(xtr[:10], xte[:10])
+
+
+def _centroid_acc(x, y, xt, yt):
+    cents = np.stack([x[y == c].reshape(np.sum(y == c), -1).mean(0)
+                      for c in range(10)])
+    flat = xt.reshape(len(xt), -1)
+    d = ((flat[:, None, :] - cents[None]) ** 2).sum(-1)
+    return float(np.mean(np.argmin(d, 1) == yt))
+
+
+def test_learnable_above_chance():
+    """A nearest-centroid classifier must beat 10% chance by a wide
+    margin -- i.e. the synthetic task carries class signal."""
+    xtr, ytr, xte, yte = datasets.load("mnist", 400, 200, seed=1)
+    assert _centroid_acc(xtr, ytr, xte, yte) > 0.5
+    xtr, ytr, xte, yte = datasets.load("cifar", 400, 200, seed=1)
+    assert _centroid_acc(xtr, ytr, xte, yte) > 0.4
+
+
+def test_not_trivially_constant_per_class():
+    """Per-sample jitter: two samples of the same class differ."""
+    x, y = datasets.synth_mnist(200, seed=2)
+    for c in range(10):
+        xs = x[y == c]
+        if len(xs) >= 2:
+            assert not np.array_equal(xs[0], xs[1])
+
+
+def test_class_balance_roughly_uniform():
+    _, y = datasets.synth_mnist(2000, seed=5)
+    counts = np.bincount(y, minlength=10)
+    assert counts.min() > 120  # E=200, loose bound

@@ -1,0 +1,70 @@
+"""Knowledge distillation machinery: loss identities + a short training
+run must learn (loss down, accuracy above chance)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import datasets, kd, networks
+from compile import model as M
+
+
+def test_cross_entropy_matches_manual():
+    logits = jnp.array([[2.0, 0.0, -1.0], [0.0, 3.0, 0.0]])
+    labels = jnp.array([0, 1])
+    got = float(kd.cross_entropy(logits, labels))
+    p = jax.nn.softmax(logits)
+    want = float(-(jnp.log(p[0, 0]) + jnp.log(p[1, 1])) / 2)
+    assert abs(got - want) < 1e-6
+
+
+def test_kd_loss_lambda_endpoints():
+    s = jnp.array([[1.0, 0.0, 0.0]])
+    t = jnp.array([[0.0, 1.0, 0.0]])
+    y = jnp.array([0])
+    hard = float(kd.cross_entropy(s, y))
+    # lambda = 1 -> pure student loss
+    assert abs(float(kd.kd_loss(s, t, y, 1.0, 10.0)) - hard) < 1e-6
+    # lambda = 0 -> teacher term only and scaled by T^2
+    l0 = float(kd.kd_loss(s, t, y, 0.0, 1.0))
+    pt = jax.nn.softmax(t)
+    want = float(-jnp.sum(pt * jax.nn.log_softmax(s)))
+    assert abs(l0 - want) < 1e-6
+
+
+def test_temperature_softens_teacher():
+    z = jnp.array([[4.0, 0.0, 0.0]])
+    p1 = jax.nn.softmax(z / 1.0)
+    p10 = jax.nn.softmax(z / 10.0)
+    assert float(p10.max()) < float(p1.max())
+
+
+def test_adam_decreases_quadratic():
+    params = [{"w": jnp.array([5.0])}]
+    state = kd.adam_init(params)
+    for _ in range(200):
+        grads = [{"w": 2 * params[0]["w"]}]
+        params, state = kd.adam_step(params, grads, state, lr=0.1)
+    assert abs(float(params[0]["w"][0])) < 0.5
+
+
+def test_short_training_learns():
+    data = datasets.load("mnist", 300, 120, seed=0)
+    layers0, sh = networks.build("mnistnet1")
+    layers, params = M.init_params(layers0, sh, jax.random.PRNGKey(0))
+    params, hist = kd.train(layers, params, data, epochs=3, batch=50,
+                            lr=3e-3)
+    assert hist["loss"][-1] < hist["loss"][0]
+    assert hist["val_acc"][-1] > 0.3  # >> 10% chance
+
+
+def test_kd_training_runs_with_teacher():
+    data = datasets.load("mnist", 200, 80, seed=1)
+    t_layers0, sh = networks.build("mnistnet4")
+    t_layers, t_params = M.init_params(t_layers0, sh, jax.random.PRNGKey(1))
+    s_layers0, _ = networks.build("mnistnet1")
+    s_layers, s_params = M.init_params(s_layers0, sh, jax.random.PRNGKey(2))
+    s_params, hist = kd.train(s_layers, s_params, data, epochs=1, batch=50,
+                              teacher=(t_layers, t_params), lam=0.3)
+    assert len(hist["val_acc"]) == 1
+    assert np.isfinite(hist["loss"][0])

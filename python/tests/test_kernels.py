@@ -1,0 +1,131 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+hypothesis sweeps shapes and value ranges; everything is exact integer
+arithmetic so comparisons are strict equality (the ring has no tolerance).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import binary, ref, rss_linear
+
+I32 = st.integers(min_value=-(2 ** 20), max_value=2 ** 20)
+
+
+def _arr(rng, shape, lo=-(2 ** 20), hi=2 ** 20):
+    return rng.integers(lo, hi, size=shape).astype(np.int32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 40), k=st.integers(1, 48), n=st.integers(1, 40),
+       seed=st.integers(0, 2 ** 31))
+def test_rss_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    wi, wi1 = _arr(rng, (m, k)), _arr(rng, (m, k))
+    xi, xi1 = _arr(rng, (k, n)), _arr(rng, (k, n))
+    got = rss_linear.rss_matmul(wi, wi1, xi, xi1, bm=16, bk=16, bn=16)
+    want = ref.rss_matmul_ref(wi, wi1, xi, xi1)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 20), k=st.integers(1, 20), n=st.integers(1, 20),
+       seed=st.integers(0, 2 ** 31))
+def test_rss_matmul_wraps_mod_2_32(m, k, n, seed):
+    """Products that overflow int32 must wrap, not saturate."""
+    rng = np.random.default_rng(seed)
+    big = 2 ** 30
+    wi = _arr(rng, (m, k), -big, big)
+    wi1 = _arr(rng, (m, k), -big, big)
+    xi = _arr(rng, (k, n), -big, big)
+    xi1 = _arr(rng, (k, n), -big, big)
+    got = np.asarray(rss_linear.rss_matmul(wi, wi1, xi, xi1, bm=8, bk=8, bn=8),
+                     dtype=np.int64)
+    w64 = wi.astype(np.int64)
+    w164 = wi1.astype(np.int64)
+    x64 = xi.astype(np.int64)
+    x164 = xi1.astype(np.int64)
+    full = w64 @ x64 + w164 @ x64 + w64 @ x164
+    want = ((full + 2 ** 31) % 2 ** 32) - 2 ** 31
+    assert np.array_equal(got, want)
+
+
+def test_rss_matmul_bias_broadcast():
+    rng = np.random.default_rng(0)
+    wi, wi1 = _arr(rng, (5, 7)), _arr(rng, (5, 7))
+    xi, xi1 = _arr(rng, (7, 3)), _arr(rng, (7, 3))
+    bi = _arr(rng, (5, 1))
+    got = rss_linear.rss_matmul_bias(wi, wi1, xi, xi1, bi)
+    want = np.asarray(ref.rss_matmul_ref(wi, wi1, xi, xi1)) + bi
+    assert np.array_equal(np.asarray(got), want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(c=st.integers(1, 8), n=st.integers(1, 200), seed=st.integers(0, 2 ** 31))
+def test_sign_bits_kernel(c, n, seed):
+    rng = np.random.default_rng(seed)
+    z = _arr(rng, (c, n))
+    t = _arr(rng, (c, 1), -100, 100)
+    flip = rng.choice([-1, 1], size=(c, 1)).astype(np.int32)
+    got = binary.sign_bits(z, t, flip, block=64)
+    want = ((z - t) * flip >= 0).astype(np.int32)
+    assert np.array_equal(np.asarray(got), want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(c=st.integers(1, 6), h=st.integers(2, 12), w=st.integers(2, 12),
+       seed=st.integers(0, 2 ** 31))
+def test_pool_or_bits(c, h, w, seed):
+    h, w = h - h % 2, w - w % 2  # even dims for 2x2/s2
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, size=(c, h, w)).astype(np.int32)
+    got = np.asarray(binary.pool_or_bits(bits))
+    want = np.asarray(ref.maxpool_or_ref(
+        jnp.asarray(bits[None].transpose(0, 2, 3, 1)))).transpose(0, 3, 1, 2)[0]
+    assert np.array_equal(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(c=st.integers(1, 4), h=st.integers(3, 10), w=st.integers(3, 10),
+       k=st.integers(1, 3), seed=st.integers(0, 2 ** 31))
+def test_depthwise_ref_vs_direct(c, h, w, k, seed):
+    """rss_depthwise_ref equals the hand-computed 3-term contraction."""
+    rng = np.random.default_rng(seed)
+    wi = _arr(rng, (k, k, 1, c), -100, 100)
+    wi1 = _arr(rng, (k, k, 1, c), -100, 100)
+    xi = _arr(rng, (1, h, w, c), -100, 100)
+    xi1 = _arr(rng, (1, h, w, c), -100, 100)
+    got = np.asarray(ref.rss_depthwise_ref(wi, wi1, xi, xi1, pad="VALID"))
+    oh, ow = h - k + 1, w - k + 1
+    want = np.zeros((1, oh, ow, c), np.int64)
+    for ci in range(c):
+        for ky in range(k):
+            for kx in range(k):
+                patch = xi[0, ky:ky + oh, kx:kx + ow, ci].astype(np.int64)
+                patch1 = xi1[0, ky:ky + oh, kx:kx + ow, ci].astype(np.int64)
+                want[0, :, :, ci] += (
+                    (int(wi[ky, kx, 0, ci]) + int(wi1[ky, kx, 0, ci])) * patch
+                    + int(wi[ky, kx, 0, ci]) * patch1)
+    want = ((want + 2 ** 31) % 2 ** 32) - 2 ** 31
+    assert np.array_equal(got.astype(np.int64), want)
+
+
+def test_im2col_ref_shapes():
+    rng = np.random.default_rng(1)
+    x = _arr(rng, (2, 8, 8, 3), -10, 10)
+    cols, (oh, ow) = ref.im2col_ref(jnp.asarray(x), 3, 1, 1, 1)
+    assert cols.shape == (2 * 8 * 8, 3 * 3 * 3)
+    assert (oh, ow) == (8, 8)
+
+
+def test_mxu_utilization_estimate_bounds():
+    u = rss_linear.mxu_utilization_estimate(100, 700, 784)
+    assert 0 < u <= 1
+    assert rss_linear.mxu_utilization_estimate(128, 128, 128) == 1.0
+
+
+def test_vmem_footprint_within_budget():
+    # default blocking must fit comfortably in 16 MiB VMEM
+    assert rss_linear.vmem_footprint_bytes(128, 128, 128) < 16 * 2 ** 20 // 4

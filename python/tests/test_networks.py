@@ -1,0 +1,78 @@
+"""Architecture registry: every Table-4 net builds, runs, and has the
+layer counts the paper reports; separable convs give the Table-2-style
+parameter reduction."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import networks
+from compile import model as M
+
+
+def _counts(layers):
+    conv = sum(1 for l in layers if l["type"] == "conv")
+    mp = sum(1 for l in layers if l["type"] == "pool")
+    fc = sum(1 for l in layers if l["type"] == "fc")
+    return conv, mp, fc
+
+
+@pytest.mark.parametrize("name,conv,mp,fc", [
+    ("mnistnet1", 0, 0, 3),
+    ("mnistnet2", 1, 0, 2),
+    ("mnistnet3", 2, 2, 2),
+    ("mnistnet4", 2, 2, 2),
+    ("cifarnet1", 7, 2, 1),
+    ("cifarnet2", 9, 3, 1),
+    ("cifarnet3", 9, 3, 1),
+    ("cifarnet4", 11, 3, 1),
+    ("cifarnet5", 17, 3, 1),
+    ("cifarnet6", 13, 5, 3),
+    ("cifarnet7", 13, 5, 3),
+])
+def test_table4_layer_counts(name, conv, mp, fc):
+    layers, _ = networks.build(name)
+    assert _counts(layers) == (conv, mp, fc)
+
+
+@pytest.mark.parametrize("name", sorted(networks.REGISTRY))
+def test_forward_shapes(name):
+    layers0, in_shape = networks.build(name)
+    layers, params = M.init_params(layers0, in_shape, jax.random.PRNGKey(0))
+    x = jnp.zeros((2, *in_shape), jnp.float32)
+    logits, _ = M.forward_float(layers, params, x)
+    assert logits.shape == (2, 10)
+
+
+def test_separable_param_reduction():
+    """Table 2: MPC-friendly convolutions cut parameters by >60%
+    (paper: -82.3% on the full-width net)."""
+    l_sep, sh = networks.build("cifarnet2")
+    l_typ, _ = networks.build("cifarnet2_typical")
+    _, p_sep = M.init_params(l_sep, sh, jax.random.PRNGKey(0))
+    _, p_typ = M.init_params(l_typ, sh, jax.random.PRNGKey(0))
+    n_sep, n_typ = M.param_count(p_sep), M.param_count(p_typ)
+    assert n_sep < 0.4 * n_typ, (n_sep, n_typ)
+
+
+def test_sep_expansion():
+    layers = [networks.conv(16, k=3, sep=True), networks.bn(),
+              networks.act("sign")]
+    exp = M._expand(layers)
+    assert exp[0]["type"] == "dwconv" and exp[1]["type"] == "conv"
+    assert exp[1]["k"] == 1
+
+
+def test_sign_ste_gradient_window():
+    g = jax.grad(lambda x: M.sign_ste(x).sum())(jnp.array([0.5, 2.0, -0.5]))
+    assert np.array_equal(np.asarray(g), [1.0, 0.0, 1.0])
+
+
+def test_teacher_resnet_runs():
+    layers0, in_shape = networks.build("cifarnet8")
+    layers, params = M.init_params(layers0, in_shape, jax.random.PRNGKey(1))
+    x = jnp.ones((1, *in_shape), jnp.float32)
+    logits, _ = M.forward_float(layers, params, x)
+    assert logits.shape == (1, 10)
+    assert np.all(np.isfinite(np.asarray(logits)))

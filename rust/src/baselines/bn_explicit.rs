@@ -1,0 +1,87 @@
+//! Explicit (non-fused) batch normalization baseline for the A3 ablation.
+//!
+//! Section 3.5 folds BN into the Sign threshold or the linear layer's
+//! (W, b) at export time (zero online cost).  The baseline evaluates
+//! y = gamma' * x + beta' online: one RSS multiplication round plus one
+//! truncation (gamma' is fixed-point) plus a local add.
+
+use crate::protocols::trunc::trunc;
+use crate::protocols::Ctx;
+use crate::rss::{self, Share};
+
+/// Online BN: y = (gamma' * x) >> f + beta', with gamma'/beta' secret
+/// shares scaled by 2^f.  `x` is (C, N); gamma/beta are per-channel (C).
+pub fn bn_online(ctx: &Ctx, x: &Share, gamma: &Share, beta: &Share,
+                 f: u32) -> Share {
+    let (c, n) = x.a.dims2();
+    // broadcast gamma to the full shape, multiply, truncate, add beta
+    let expand = |t: &crate::ring::Tensor| {
+        let mut out = Vec::with_capacity(c * n);
+        for ci in 0..c {
+            out.extend(std::iter::repeat_n(t.data[ci], n));
+        }
+        crate::ring::Tensor::from_vec(&[c * n], out)
+    };
+    let g = Share { a: expand(&gamma.a), b: expand(&gamma.b) };
+    let flat = x.clone().reshape(&[c * n]);
+    let prod = rss::mul(ctx.comm, ctx.seeds, &g, &flat);
+    let scaled = trunc(ctx, &prod, f);
+    let b = Share { a: expand(&beta.a), b: expand(&beta.b) };
+    scaled.add(&b).reshape(&[c, n])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocols::testsupport::run3;
+    use crate::ring::Tensor;
+    use crate::rss::{deal, reconstruct};
+    use crate::testutil::Rng;
+
+    #[test]
+    fn bn_online_matches_plaintext() {
+        let results = run3(|ctx| {
+            let (c, n, f) = (3usize, 10usize, 8u32);
+            let mut rng = Rng::new(14);
+            let x: Vec<i32> = (0..c * n).map(|_| rng.small(1 << 12)).collect();
+            let g: Vec<i32> = (0..c).map(|_| rng.small(1 << 9).abs() + 1)
+                .collect();
+            let b: Vec<i32> = (0..c).map(|_| rng.small(1 << 10)).collect();
+            let xs = deal(&Tensor::from_vec(&[c, n], x.clone()), &mut rng);
+            let gs = deal(&Tensor::from_vec(&[c], g.clone()), &mut rng);
+            let bs = deal(&Tensor::from_vec(&[c], b.clone()), &mut rng);
+            let y = bn_online(ctx, &xs[ctx.id()], &gs[ctx.id()],
+                              &bs[ctx.id()], f);
+            (y, x, g, b)
+        });
+        let (_, x, g, b) = results[0].0.clone();
+        let shares: [Share; 3] =
+            std::array::from_fn(|i| results[i].0 .0.clone());
+        let got = reconstruct(&shares);
+        for ci in 0..3 {
+            for j in 0..10 {
+                let want = ((i64::from(g[ci]) * i64::from(x[ci * 10 + j]))
+                            >> 8) as i32 + b[ci];
+                let diff = (got.data[ci * 10 + j] - want).abs();
+                assert!(diff <= 1, "got {} want {}", got.data[ci * 10 + j],
+                        want);
+            }
+        }
+    }
+
+    #[test]
+    fn bn_online_costs_rounds_fusion_avoids() {
+        let results = run3(|ctx| {
+            let mut rng = Rng::new(3);
+            let xs = deal(&rng.tensor_small(&[2, 4], 100), &mut rng);
+            let gs = deal(&rng.tensor_small(&[2], 50), &mut rng);
+            let bs = deal(&rng.tensor_small(&[2], 50), &mut rng);
+            let _ = bn_online(ctx, &xs[ctx.id()], &gs[ctx.id()],
+                              &bs[ctx.id()], 4);
+        });
+        // fused BN costs zero online rounds; explicit BN costs >= 3
+        for (_, st) in &results {
+            assert!(st.rounds >= 3);
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Non-fused maxpooling baseline: pairwise secure max over arithmetic
+//! shares via comparison trees (the cost Section 3.6's Sign-fusion
+//! avoids).  max(a, b) = b + ReLU(a - b): each level costs a full MSB
+//! extraction + ReLU selection; a 2x2 window needs two levels (3 maxes).
+
+use crate::protocols::msb::msb_extract;
+use crate::protocols::relu::relu_ot;
+use crate::protocols::Ctx;
+use crate::rss::Share;
+
+/// Elementwise secure max over two equal-shape shares.
+pub fn secure_max(ctx: &Ctx, a: &Share, b: &Share) -> Share {
+    let d = a.sub(b);
+    let flat = d.clone().reshape(&[d.len()]);
+    let m = msb_extract(ctx, &flat);
+    let r = relu_ot(ctx, &flat, &m); // ReLU(a - b)
+    b.clone().reshape(&[b.len()]).add(&r)
+}
+
+/// 2x2/stride-2 maxpool over a (C,H,W) share via a two-level comparison
+/// tree.  Returns ([C, OH*OW], (OH, OW)).
+pub fn maxpool_tree(ctx: &Ctx, x: &Share, c: usize, h: usize, w: usize)
+                    -> (Share, (usize, usize)) {
+    let (oh, ow) = (h / 2, w / 2);
+    let gather = |dy: usize, dx: usize| -> Share {
+        let pick = |t: &crate::ring::Tensor| {
+            let mut out = Vec::with_capacity(c * oh * ow);
+            for ci in 0..c {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        out.push(t.data[ci * h * w + (2 * oy + dy) * w
+                                        + 2 * ox + dx]);
+                    }
+                }
+            }
+            crate::ring::Tensor::from_vec(&[c * oh * ow], out)
+        };
+        Share { a: pick(&x.a), b: pick(&x.b) }
+    };
+    let (q00, q01, q10, q11) = (gather(0, 0), gather(0, 1), gather(1, 0),
+                                gather(1, 1));
+    let top = secure_max(ctx, &q00, &q01);
+    let bot = secure_max(ctx, &q10, &q11);
+    let m = secure_max(ctx, &top, &bot);
+    (m.reshape(&[c, oh * ow]), (oh, ow))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocols::testsupport::run3;
+    use crate::ring::Tensor;
+    use crate::rss::{deal, reconstruct};
+    use crate::testutil::Rng;
+
+    #[test]
+    fn secure_max_matches_plaintext() {
+        let results = run3(|ctx| {
+            let mut rng = Rng::new(6);
+            let a: Vec<i32> = (0..30).map(|_| rng.small(1 << 20)).collect();
+            let b: Vec<i32> = (0..30).map(|_| rng.small(1 << 20)).collect();
+            let ta = Tensor::from_vec(&[30], a.clone());
+            let tb = Tensor::from_vec(&[30], b.clone());
+            let sa = deal(&ta, &mut rng);
+            let sb = deal(&tb, &mut rng);
+            (secure_max(ctx, &sa[ctx.id()], &sb[ctx.id()]), a, b)
+        });
+        let (_, a, b) = results[0].0.clone();
+        let shares: [Share; 3] =
+            std::array::from_fn(|i| results[i].0 .0.clone());
+        let got = reconstruct(&shares);
+        for i in 0..a.len() {
+            assert_eq!(got.data[i], a[i].max(b[i]), "max({}, {})", a[i], b[i]);
+        }
+    }
+
+    #[test]
+    fn tree_pool_matches_plaintext_max() {
+        let results = run3(|ctx| {
+            let (c, h, w) = (2, 4, 4);
+            let mut rng = Rng::new(9);
+            let vals: Vec<i32> = (0..c * h * w).map(|_| rng.small(1 << 16))
+                .collect();
+            let x = Tensor::from_vec(&[c, h * w], vals.clone());
+            let xs = deal(&x, &mut rng);
+            (maxpool_tree(ctx, &xs[ctx.id()], c, h, w), vals)
+        });
+        let vals = results[0].0 .1.clone();
+        let shares: [Share; 3] =
+            std::array::from_fn(|i| results[i].0 .0 .0.clone());
+        let got = reconstruct(&shares);
+        let (c, h, w) = (2usize, 4usize, 4usize);
+        for ci in 0..c {
+            for oy in 0..2 {
+                for ox in 0..2 {
+                    let vals = &vals;
+                    let m = (0..2).flat_map(|dy| (0..2).map(move |dx| {
+                        vals[ci * h * w + (2 * oy + dy) * w + 2 * ox + dx]
+                    })).max().unwrap();
+                    assert_eq!(got.data[ci * 4 + oy * 2 + ox], m);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tree_pool_costs_more_rounds_than_fused() {
+        let tree = run3(|ctx| {
+            let mut rng = Rng::new(4);
+            let x = rng.tensor_small(&[1, 16], 1);
+            let xs = deal(&x, &mut rng);
+            let _ = maxpool_tree(ctx, &xs[ctx.id()], 1, 4, 4);
+        });
+        let fused = run3(|ctx| {
+            let mut rng = Rng::new(4);
+            let bits = Tensor::from_vec(&[1, 16],
+                                        (0..16).map(|i| i % 2).collect());
+            let xs = deal(&bits, &mut rng);
+            let _ = crate::protocols::maxpool::maxpool_bits(
+                ctx, &xs[ctx.id()], 1, 4, 4, 2, 2);
+        });
+        let max_rounds = |r: &[((), crate::transport::Stats)]| {
+            r.iter().map(|(_, s)| s.rounds).max().unwrap()
+        };
+        assert!(max_rounds(&tree) > max_rounds(&fused),
+                "tree {} <= fused {}", max_rounds(&tree), max_rounds(&fused));
+    }
+}

@@ -1,0 +1,17 @@
+//! Baseline arms and literature cost rows for the comparison tables.
+//!
+//! * `bitdecomp` -- SecureBiNN/ABY3-style MSB extraction through a
+//!   Kogge-Stone boolean adder over RSS bit shares (log l AND rounds).
+//!   This is the protocol CBNN's Algorithm 3 is designed to beat; both
+//!   run on the identical simulated network in the A1 ablation.
+//! * `maxpool_tree` -- non-fused maxpooling via pairwise secure max
+//!   (comparison trees), the cost the Sign-fusion of Section 3.6 avoids.
+//! * `bn_explicit` -- BN as an online secure multiply + truncate + add,
+//!   the cost the adaptive fusing of Section 3.5 removes.
+//! * `costmodel` -- published numbers from the paper's Tables 1 and 3 for
+//!   frameworks we do not re-implement (clearly labelled literature rows).
+
+pub mod bitdecomp;
+pub mod bn_explicit;
+pub mod costmodel;
+pub mod maxpool_tree;

@@ -1,0 +1,130 @@
+//! Minimal command-line parsing (clap is not in the offline crate set).
+//!
+//! Supports `subcommand --flag value --bool-flag positional` style:
+//!
+//!   cbnn infer --model mnistnet3 --net wan --batch 8
+//!   cbnn serve --model cifarnet2 --backend pjrt-pallas
+//!   cbnn bench --table 1
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding the binary name).
+    pub fn parse(raw: impl IntoIterator<Item = String>) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--"))
+                    .unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse()
+                .map_err(|_| format!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+/// Resolve the shared network / backend flags into engine config pieces.
+pub fn parse_net(name: &str) -> Result<crate::transport::NetConfig, String> {
+    match name {
+        "lan" => Ok(crate::transport::NetConfig::lan()),
+        "wan" => Ok(crate::transport::NetConfig::wan()),
+        "zero" | "none" => Ok(crate::transport::NetConfig::zero()),
+        other => Err(format!("unknown net '{other}' (lan|wan|zero)")),
+    }
+}
+
+pub fn parse_backend(name: &str) -> Result<crate::runtime::BackendKind, String> {
+    use crate::runtime::{BackendKind, KernelVariant};
+    match name {
+        "native" => Ok(BackendKind::Native),
+        "pjrt" | "pjrt-pallas" => Ok(BackendKind::Pjrt(KernelVariant::Pallas)),
+        "pjrt-xla" => Ok(BackendKind::Pjrt(KernelVariant::Xla)),
+        other => Err(format!(
+            "unknown backend '{other}' (native|pjrt-pallas|pjrt-xla)")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_positional() {
+        let a = parse(&["infer", "extra", "--model", "mnistnet3",
+                        "--net=wan", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("infer"));
+        assert_eq!(a.get("model"), Some("mnistnet3"));
+        assert_eq!(a.get("net"), Some("wan"));
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+        // a flag immediately followed by a non-flag token consumes it
+        let b = parse(&["x", "--flag", "value"]);
+        assert_eq!(b.get("flag"), Some("value"));
+    }
+
+    #[test]
+    fn usize_parsing() {
+        let a = parse(&["x", "--batch", "16"]);
+        assert_eq!(a.get_usize("batch", 1).unwrap(), 16);
+        assert_eq!(a.get_usize("missing", 4).unwrap(), 4);
+        let bad = parse(&["x", "--batch", "soup"]);
+        assert!(bad.get_usize("batch", 1).is_err());
+    }
+
+    #[test]
+    fn net_and_backend_resolution() {
+        assert!(parse_net("lan").is_ok());
+        assert!(parse_net("dsl").is_err());
+        assert!(parse_backend("pjrt-pallas").is_ok());
+        assert!(parse_backend("gpu").is_err());
+    }
+}

@@ -1,0 +1,291 @@
+//! Serving coordinator (L3): persistent three-party session + request
+//! router + dynamic batcher + metrics, in the style of a vLLM router.
+//!
+//! A `Service` pins the three party threads for the lifetime of a model:
+//! the model is secret-shared once, PJRT executables are warmed up once,
+//! and every subsequent batch pays only the online protocol cost.  The
+//! `Coordinator` in front owns the request queue and forms batches by
+//! size/deadline -- batching in 3PC amortizes *rounds*, which is the
+//! dominant WAN cost (the protocols are batched across samples inside the
+//! engine, so a batch of 8 pays the same round count as a batch of 1).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::engine::session::SessionConfig;
+use crate::engine::{infer_batch_pooled, share_model, SharedModel};
+use crate::metrics::{Histogram, Throughput};
+use crate::nn::{Model, Op};
+use crate::prf::PartySeeds;
+use crate::protocols::Ctx;
+use crate::ring::Tensor;
+use crate::runtime::{make_backend, BackendKind, PjrtRuntime};
+use crate::transport::{local_trio, Stats};
+
+enum Job {
+    Infer { inputs: Vec<Tensor>, batch: usize },
+    Shutdown,
+}
+
+/// A persistent three-party inference service for one model.
+pub struct Service {
+    job_txs: Vec<Sender<Job>>,
+    logits_rx: Receiver<Result<Vec<Vec<i32>>>>,
+    handles: Vec<JoinHandle<Stats>>,
+    pub model_name: String,
+    pub setup_time: Duration,
+}
+
+impl Service {
+    /// Spin up the party threads, share the model, warm the PJRT caches.
+    pub fn start(model: Arc<Model>, cfg: SessionConfig) -> Result<Service> {
+        let comms = local_trio(cfg.net);
+        let (logits_tx, logits_rx) = channel();
+        let mut job_txs = Vec::new();
+        let mut handles = Vec::new();
+        let (ready_tx, ready_rx) = channel();
+        for comm in comms {
+            let model = Arc::clone(&model);
+            let cfg = cfg.clone();
+            let logits_tx = logits_tx.clone();
+            let ready_tx = ready_tx.clone();
+            let (jtx, jrx) = channel::<Job>();
+            job_txs.push(jtx);
+            handles.push(thread::spawn(move || -> Stats {
+                let seeds = PartySeeds::setup(cfg.session_seed, comm.id);
+                let ctx = Ctx::with_cfg(&comm, &seeds, cfg.proto);
+                // build the backend, warming the PJRT executable cache
+                // before the first request
+                let backend: Box<dyn crate::protocols::linear::LinearBackend> =
+                    match cfg.backend {
+                        BackendKind::Native => match make_backend(
+                            cfg.backend, &cfg.hlo_dir) {
+                            Ok(b) => b,
+                            Err(e) => {
+                                let _ = ready_tx.send(
+                                    Err(anyhow!("backend: {e}")));
+                                return comm.stats();
+                            }
+                        },
+                        BackendKind::Pjrt(v) => {
+                            match PjrtRuntime::new(&cfg.hlo_dir, v) {
+                                Ok(rt) => {
+                                    let keys = model.ops.iter()
+                                        .filter_map(|o| match o {
+                                            Op::Matmul { hlo, .. }
+                                            | Op::Depthwise { hlo, .. } =>
+                                                hlo.clone(),
+                                            _ => None,
+                                        });
+                                    let _ = rt.precompile(keys);
+                                    Box::new(rt)
+                                }
+                                Err(e) => {
+                                    let _ = ready_tx.send(
+                                        Err(anyhow!("backend: {e}")));
+                                    return comm.stats();
+                                }
+                            }
+                        }
+                    };
+                let shared: SharedModel =
+                    match share_model(&ctx, &model, comm.id == 1) {
+                        Ok(s) => s,
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(anyhow!("share: {e}")));
+                            return comm.stats();
+                        }
+                    };
+                // offline phase: pre-mint MSB material for several max
+                // batches; topped up after each served batch, off the
+                // request's critical path.
+                let pool = crate::protocols::preproc::MsbPool::new();
+                let per_batch = crate::engine::msb_demand(&shared, 8);
+                if cfg.opts.preprocess {
+                    pool.generate(&ctx, per_batch * 4);
+                }
+                let _ = ready_tx.send(Ok(comm.id));
+                while let Ok(job) = jrx.recv() {
+                    match job {
+                        Job::Shutdown => break,
+                        Job::Infer { inputs, batch } => {
+                            let p = cfg.opts.preprocess.then_some(&pool);
+                            let r = infer_batch_pooled(
+                                &ctx, &shared, backend.as_ref(), cfg.opts,
+                                &inputs, batch, p);
+                            if comm.id == 0 {
+                                let _ = logits_tx.send(
+                                    r.map(|o| o.logits)
+                                     .map_err(|e| anyhow!("{e}")));
+                            }
+                            // top the reservoir back up between requests
+                            if cfg.opts.preprocess
+                                && pool.available() < per_batch {
+                                pool.generate(&ctx, per_batch * 2);
+                            }
+                        }
+                    }
+                }
+                comm.stats()
+            }));
+        }
+        let t0 = Instant::now();
+        for _ in 0..3 {
+            ready_rx.recv().map_err(|_| anyhow!("party died in setup"))??;
+        }
+        Ok(Service {
+            job_txs,
+            logits_rx,
+            handles,
+            model_name: model.name.clone(),
+            setup_time: t0.elapsed(),
+        })
+    }
+
+    /// Run one batch through the session (blocking).
+    pub fn infer(&self, inputs: Vec<Tensor>) -> Result<Vec<Vec<i32>>> {
+        let batch = inputs.len();
+        for (id, tx) in self.job_txs.iter().enumerate() {
+            let job = Job::Infer {
+                inputs: if id == 0 { inputs.clone() } else { vec![] },
+                batch,
+            };
+            tx.send(job).map_err(|_| anyhow!("party {id} gone"))?;
+        }
+        self.logits_rx.recv().map_err(|_| anyhow!("no response"))?
+    }
+
+    /// Stop the party threads and collect their comm stats.
+    pub fn shutdown(self) -> [Stats; 3] {
+        for tx in &self.job_txs {
+            let _ = tx.send(Job::Shutdown);
+        }
+        let stats: Vec<Stats> = self.handles.into_iter()
+            .map(|h| h.join().unwrap_or_default()).collect();
+        [stats[0], stats[1], stats[2]]
+    }
+}
+
+/// One queued request.
+struct Pending {
+    image: Tensor,
+    enqueued: Instant,
+    respond: Sender<Response>,
+}
+
+/// Reply to a client.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub logits: Vec<i32>,
+    pub pred: usize,
+    pub latency: Duration,
+}
+
+/// Dynamic batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// Request router + dynamic batcher in front of a `Service`.
+pub struct Coordinator {
+    req_tx: Sender<Pending>,
+    batcher: Option<JoinHandle<(Histogram, Throughput)>>,
+}
+
+impl Coordinator {
+    pub fn start(svc: Service, policy: BatchPolicy) -> Coordinator {
+        let (req_tx, req_rx) = channel::<Pending>();
+        let batcher = thread::spawn(move || {
+            let mut hist = Histogram::default();
+            let mut served = 0u64;
+            let t0 = Instant::now();
+            loop {
+                // block for the first request, then fill the batch up to
+                // the deadline
+                let first = match req_rx.recv() {
+                    Ok(p) => p,
+                    Err(_) => break, // all clients gone
+                };
+                let mut batch = vec![first];
+                let deadline = Instant::now() + policy.max_wait;
+                while batch.len() < policy.max_batch {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match req_rx.recv_timeout(deadline - now) {
+                        Ok(p) => batch.push(p),
+                        Err(_) => break,
+                    }
+                }
+                let images: Vec<Tensor> =
+                    batch.iter().map(|p| p.image.clone()).collect();
+                match svc.infer(images) {
+                    Ok(logits) => {
+                        for (p, l) in batch.into_iter().zip(logits) {
+                            let lat = p.enqueued.elapsed();
+                            hist.record(lat);
+                            served += 1;
+                            let pred = crate::engine::argmax(&l);
+                            let _ = p.respond.send(Response {
+                                logits: l, pred, latency: lat,
+                            });
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("[coordinator] batch failed: {e}");
+                    }
+                }
+            }
+            let _ = svc.shutdown();
+            (hist, Throughput { requests: served, wall: t0.elapsed() })
+        });
+        Coordinator { req_tx, batcher: Some(batcher) }
+    }
+
+    /// Submit a request; returns the channel the response arrives on.
+    pub fn submit(&self, image: Tensor) -> Receiver<Response> {
+        let (tx, rx) = channel();
+        let _ = self.req_tx.send(Pending {
+            image,
+            enqueued: Instant::now(),
+            respond: tx,
+        });
+        rx
+    }
+
+    /// Drop the ingress and wait for the batcher to drain; returns the
+    /// latency histogram and throughput aggregate.
+    pub fn finish(mut self) -> (Histogram, Throughput) {
+        drop(self.req_tx);
+        self.batcher.take().unwrap().join()
+            .unwrap_or((Histogram::default(), Throughput::default()))
+    }
+}
+
+/// Shared-handle client helper for multi-threaded load generators.
+pub type SharedCoordinator = Arc<Mutex<Coordinator>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_policy_defaults_sane() {
+        let p = BatchPolicy::default();
+        assert!(p.max_batch >= 1);
+        assert!(p.max_wait > Duration::ZERO);
+    }
+}

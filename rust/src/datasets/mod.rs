@@ -1,0 +1,109 @@
+//! Evaluation data loading (the fixed-point eval sets exported by
+//! python/compile/export.py) plus a native synthetic generator for tests
+//! that must run without artifacts.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::ring::Tensor;
+
+/// Fixed-point eval set: images as flat (C*H*W) ring tensors + labels.
+pub struct EvalSet {
+    pub images: Vec<Tensor>,
+    pub labels: Vec<i32>,
+    pub dims: (usize, usize, usize),
+}
+
+impl EvalSet {
+    /// Load `artifacts/data/<name>.bin` (header [n,c,h,w] i32 LE, then
+    /// n*c*h*w image elements, then n labels).
+    pub fn load(path: &Path) -> Result<EvalSet> {
+        let raw = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if raw.len() % 4 != 0 || raw.len() < 16 {
+            bail!("malformed eval data");
+        }
+        let ints: Vec<i32> = raw.chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect();
+        let (n, c, h, w) = (ints[0] as usize, ints[1] as usize,
+                            ints[2] as usize, ints[3] as usize);
+        let per = c * h * w;
+        if ints.len() != 4 + n * per + n {
+            bail!("eval data length mismatch: {} vs {}", ints.len(),
+                  4 + n * per + n);
+        }
+        let images = (0..n).map(|i| {
+            Tensor::from_vec(&[per], ints[4 + i * per..4 + (i + 1) * per]
+                             .to_vec())
+        }).collect();
+        let labels = ints[4 + n * per..].to_vec();
+        Ok(EvalSet { images, labels, dims: (c, h, w) })
+    }
+}
+
+/// Deterministic synthetic ring images for tests: class-conditional
+/// patterns (a coarse native mirror of python datasets.py -- NOT
+/// bit-identical; the real eval data comes from the artifacts).
+pub fn synthetic(n: usize, dims: (usize, usize, usize), s_in: u32,
+                 seed: u64) -> EvalSet {
+    let (c, h, w) = dims;
+    let mut rng = crate::testutil::Rng::new(seed);
+    let mut images = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    let unit = (1i64 << s_in) as f64;
+    for _ in 0..n {
+        let cls = (rng.next_u64() % 10) as i32;
+        let phase = (rng.next_u64() % 628) as f64 / 100.0;
+        let mut data = Vec::with_capacity(c * h * w);
+        for ci in 0..c {
+            for y in 0..h {
+                for x in 0..w {
+                    let u = (x as f64 / w as f64 - 0.5)
+                        * (cls as f64 / 10.0 * std::f64::consts::PI).cos()
+                        + (y as f64 / h as f64 - 0.5)
+                        * (cls as f64 / 10.0 * std::f64::consts::PI).sin();
+                    let v = 0.5 + 0.5 * (2.0 * std::f64::consts::PI
+                                         * (3.0 + (cls % 5) as f64) * u
+                                         + phase + ci as f64).sin();
+                    data.push((v.clamp(0.0, 1.0) * unit) as i32);
+                }
+            }
+        }
+        images.push(Tensor::from_vec(&[c * h * w], data));
+        labels.push(cls);
+    }
+    EvalSet { images, labels, dims }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_shapes_and_range() {
+        let s = synthetic(8, (1, 8, 8), 7, 3);
+        assert_eq!(s.images.len(), 8);
+        assert_eq!(s.images[0].len(), 64);
+        assert!(s.images.iter().flat_map(|t| &t.data)
+                .all(|&v| (0..=128).contains(&v)));
+        assert!(s.labels.iter().all(|&l| (0..10).contains(&l)));
+    }
+
+    #[test]
+    fn synthetic_is_deterministic() {
+        let a = synthetic(4, (3, 6, 6), 7, 9);
+        let b = synthetic(4, (3, 6, 6), 7, 9);
+        assert_eq!(a.images[2], b.images[2]);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn rejects_malformed_file() {
+        let dir = std::env::temp_dir().join("cbnn_ds_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, [1, 2, 3]).unwrap();
+        assert!(EvalSet::load(&p).is_err());
+    }
+}

@@ -1,0 +1,496 @@
+//! Per-party secure inference engine.
+//!
+//! Executes the quantized layer program (nn::Model) over RSS shares,
+//! dispatching to the protocol suite.  Non-linear protocols are *batched
+//! across the request batch*: one MSB/Sign/ReLU invocation covers every
+//! sample's elements, so communication rounds do not grow with batch size
+//! -- this is what the coordinator's dynamic batcher buys.
+//!
+//! The model owner is P1: it loads the plaintext weight pool and
+//! secret-shares every tensor at session setup (`share_model`).  The data
+//! owner is P0: it shares inputs and is the only party that learns the
+//! revealed logits.
+
+use anyhow::{anyhow, Result};
+
+use crate::nn::{Model, Op};
+use crate::protocols::linear::LinearBackend;
+use crate::protocols::relu::{relu_mul, relu_ot};
+use crate::protocols::trunc::trunc;
+use crate::protocols::Ctx;
+use crate::ring::{tensor::im2col_chw, Tensor};
+use crate::rss::{self, Share};
+use crate::transport::Dir;
+
+/// Engine options (ablation arms).
+#[derive(Clone, Copy, Debug)]
+pub struct EngineOptions {
+    /// Use the paper's two-OT ReLU (Alg 5) or the mul-based arm.
+    pub relu_via_ot: bool,
+    /// Sign-fused maxpool (paper 3.6) vs comparison-tree baseline.
+    pub fused_pool: bool,
+    /// Mint MSB correlated material during setup so the online MSB is
+    /// 2 rounds (EXPERIMENTS.md §Perf); off = run Algorithm 3 inline.
+    pub preprocess: bool,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        EngineOptions { relu_via_ot: true, fused_pool: true,
+                        preprocess: true }
+    }
+}
+
+/// Element counts of every MSB invocation `infer_batch` will make, in
+/// order -- used to size the preprocessing pool.  Must mirror the op walk
+/// in `infer_batch` exactly (asserted by the pool's size checks).
+pub fn msb_sizes(model: &SharedModel, batch: usize) -> Vec<usize> {
+    let (c0, h0, w0) = model.input;
+    let (mut c, mut h, mut w) = (c0, h0, w0);
+    let mut sizes = Vec::new();
+    for op in &model.ops {
+        match op {
+            Op::Matmul { conv: true, geom, cout, .. } => {
+                let (k, s, pl, ph) = *geom;
+                h = (h + pl + ph - k) / s + 1;
+                w = (w + pl + ph - k) / s + 1;
+                c = *cout;
+            }
+            Op::Matmul { conv: false, m, .. } => {
+                c = *m;
+                h = 1;
+                w = 1;
+            }
+            Op::Depthwise { geom, .. } => {
+                let (k, s, pl, ph) = *geom;
+                h = (h + pl + ph - k) / s + 1;
+                w = (w + pl + ph - k) / s + 1;
+            }
+            Op::Sign { .. } | Op::Relu { .. } => {
+                sizes.push(batch * c * h * w);
+            }
+            Op::PoolBits { k, stride, .. } => {
+                h = (h - k) / stride + 1;
+                w = (w - k) / stride + 1;
+                sizes.push(batch * c * h * w);
+            }
+            Op::Flatten { .. } => {
+                c = c * h * w;
+                h = 1;
+                w = 1;
+            }
+            Op::Pm1 => {}
+        }
+    }
+    sizes
+}
+
+/// Total MSB elements one batched inference consumes.
+pub fn msb_demand(model: &SharedModel, batch: usize) -> usize {
+    msb_sizes(model, batch).iter().sum()
+}
+
+/// Fill a preprocessing pool for one upcoming `infer_batch` call.
+pub fn preprocess_for(ctx: &Ctx, model: &SharedModel, batch: usize)
+                      -> crate::protocols::preproc::MsbPool {
+    let pool = crate::protocols::preproc::MsbPool::new();
+    pool.generate(ctx, msb_demand(model, batch));
+    pool
+}
+
+/// MSB through the pool when one is supplied, inline Algorithm 3
+/// otherwise.
+fn msb_via(ctx: &Ctx, pool: Option<&crate::protocols::preproc::MsbPool>,
+           x: &Share) -> crate::protocols::msb::MsbOut {
+    match pool {
+        Some(p) => crate::protocols::preproc::msb_online(
+            ctx, x, p.take(x.len())),
+        None => crate::protocols::msb::msb_extract_full(ctx, x),
+    }
+}
+
+/// The per-party view of the secret-shared model.
+pub struct SharedModel {
+    /// Public program structure (every party has the manifest).
+    pub ops: Vec<Op>,
+    pub input: (usize, usize, usize),
+    /// Shares of each linear layer's weights/biases and sign thresholds,
+    /// indexed by op position.
+    pub weights: Vec<Option<Share>>,
+    pub biases: Vec<Option<Share>>,
+    pub thresholds: Vec<Option<Share>>,
+    /// Public per-channel orientation flips for sign ops.
+    pub flips: Vec<Option<Vec<i32>>>,
+}
+
+/// Session setup: P1 (model owner) shares every secret tensor.  All
+/// parties pass the *manifest-only* model (public structure); only P1's
+/// copy needs the weight pool.
+pub fn share_model(ctx: &Ctx, model: &Model, has_pool: bool)
+                   -> Result<SharedModel> {
+    let me = ctx.id();
+    let n_ops = model.ops.len();
+    let mut weights = Vec::with_capacity(n_ops);
+    let mut biases = Vec::with_capacity(n_ops);
+    let mut thresholds = Vec::with_capacity(n_ops);
+    let mut flips = Vec::with_capacity(n_ops);
+    if me == 1 && !has_pool {
+        return Err(anyhow!("model owner needs the weight pool"));
+    }
+    let plain = |r: crate::nn::PoolRef, shape: &[usize]| -> Option<Tensor> {
+        if me == 1 { Some(model.tensor(r, shape)) } else { None }
+    };
+    for op in &model.ops {
+        match op {
+            Op::Matmul { m, kdim, w, b, .. } => {
+                let wt = plain(*w, &[*m, *kdim]);
+                weights.push(Some(rss::share_input(
+                    ctx.comm, ctx.seeds, 1, wt.as_ref(), &[*m, *kdim])));
+                if let Some(br) = b {
+                    let bt = plain(*br, &[*m]);
+                    biases.push(Some(rss::share_input(
+                        ctx.comm, ctx.seeds, 1, bt.as_ref(), &[*m])));
+                } else {
+                    biases.push(None);
+                }
+                thresholds.push(None);
+                flips.push(None);
+            }
+            Op::Depthwise { c, geom, w, .. } => {
+                let kk = geom.0 * geom.0;
+                let wt = plain(*w, &[*c, kk]);
+                weights.push(Some(rss::share_input(
+                    ctx.comm, ctx.seeds, 1, wt.as_ref(), &[*c, kk])));
+                biases.push(None);
+                thresholds.push(None);
+                flips.push(None);
+            }
+            Op::Sign { c, t, flip } => {
+                let tt = plain(*t, &[*c]);
+                weights.push(None);
+                biases.push(None);
+                thresholds.push(Some(rss::share_input(
+                    ctx.comm, ctx.seeds, 1, tt.as_ref(), &[*c])));
+                // flips are public metadata: P1 broadcasts them
+                let f = if me == 1 {
+                    let f = model.tensor(*flip, &[*c]).data;
+                    ctx.comm.send_elems(Dir::Next, &f);
+                    ctx.comm.send_elems(Dir::Prev, &f);
+                    ctx.comm.round();
+                    f
+                } else if me == 2 {
+                    let f = ctx.comm.recv_elems(Dir::Prev);
+                    ctx.comm.round();
+                    f
+                } else {
+                    let f = ctx.comm.recv_elems(Dir::Next);
+                    ctx.comm.round();
+                    f
+                };
+                flips.push(Some(f));
+            }
+            _ => {
+                weights.push(None);
+                biases.push(None);
+                thresholds.push(None);
+                flips.push(None);
+            }
+        }
+    }
+    Ok(SharedModel {
+        ops: model.ops.clone(),
+        input: model.input,
+        weights,
+        biases,
+        thresholds,
+        flips,
+    })
+}
+
+// --------------------------------------------------------------------
+// batched share plumbing
+// --------------------------------------------------------------------
+fn concat(shares: &[Share]) -> Share {
+    let total: usize = shares.iter().map(Share::len).sum();
+    let mut a = Vec::with_capacity(total);
+    let mut b = Vec::with_capacity(total);
+    for s in shares {
+        a.extend_from_slice(&s.a.data);
+        b.extend_from_slice(&s.b.data);
+    }
+    Share {
+        a: Tensor::from_vec(&[total], a),
+        b: Tensor::from_vec(&[total], b),
+    }
+}
+
+fn split(joined: Share, shapes: &[Vec<usize>]) -> Vec<Share> {
+    let mut out = Vec::with_capacity(shapes.len());
+    let mut off = 0;
+    for sh in shapes {
+        let n: usize = sh.iter().product();
+        out.push(Share {
+            a: Tensor::from_vec(sh, joined.a.data[off..off + n].to_vec()),
+            b: Tensor::from_vec(sh, joined.b.data[off..off + n].to_vec()),
+        });
+        off += n;
+    }
+    out
+}
+
+/// Reshare a batch of per-sample 3-of-3 additive results with a single
+/// round: concatenate, mask + exchange once, split back.
+fn reshare_batched(ctx: &Ctx, zis: Vec<Tensor>, shapes: &[Vec<usize>])
+                   -> Vec<Share> {
+    let total: usize = zis.iter().map(Tensor::len).sum();
+    let mut flat = Vec::with_capacity(total);
+    for z in &zis {
+        flat.extend_from_slice(&z.data);
+    }
+    let joined = rss::reshare(ctx.comm, ctx.seeds,
+                              &Tensor::from_vec(&[total], flat));
+    split(joined, shapes)
+}
+
+/// Broadcast-subtract a per-channel shared threshold and apply the public
+/// flip: d[c][j] = (z[c][j] - t[c]) * flip[c]  (local).
+fn sub_thresh_flip(z: &Share, t: &Share, flip: &[i32]) -> Share {
+    let (c, n) = z.a.dims2();
+    let apply = |zc: &Tensor, tc: &Tensor| {
+        let mut out = zc.clone();
+        for ci in 0..c {
+            let tv = tc.data[ci];
+            let f = flip[ci];
+            for v in &mut out.data[ci * n..(ci + 1) * n] {
+                *v = v.wrapping_sub(tv).wrapping_mul(f);
+            }
+        }
+        out
+    };
+    Share { a: apply(&z.a, &t.a), b: apply(&z.b, &t.b) }
+}
+
+/// Result of one batched secure inference.
+pub struct InferenceOutput {
+    /// Revealed logits -- only populated on the data owner (P0).
+    pub logits: Vec<Vec<i32>>,
+}
+
+/// Run the full layer program for a batch.  `inputs` is non-empty only on
+/// the data owner (P0); every party must pass the same `batch` count.
+pub fn infer_batch(ctx: &Ctx, model: &SharedModel,
+                   backend: &dyn LinearBackend, opts: EngineOptions,
+                   inputs: &[Tensor], batch: usize)
+                   -> Result<InferenceOutput> {
+    infer_batch_pooled(ctx, model, backend, opts, inputs, batch, None)
+}
+
+/// `infer_batch` with an optional preprocessing pool (see preproc::).
+pub fn infer_batch_pooled(
+    ctx: &Ctx, model: &SharedModel, backend: &dyn LinearBackend,
+    opts: EngineOptions, inputs: &[Tensor], batch: usize,
+    pool: Option<&crate::protocols::preproc::MsbPool>)
+    -> Result<InferenceOutput> {
+    let me = ctx.id();
+    let (c0, h0, w0) = model.input;
+    // ---- share the inputs (one round, batched) -------------------------
+    let mut acts: Vec<Share>;
+    {
+        let joined = if me == 0 {
+            assert_eq!(inputs.len(), batch);
+            let mut all = Vec::with_capacity(batch * c0 * h0 * w0);
+            for x in inputs {
+                assert_eq!(x.len(), c0 * h0 * w0, "input shape mismatch");
+                all.extend_from_slice(&x.data);
+            }
+            Some(Tensor::from_vec(&[batch * c0 * h0 * w0], all))
+        } else {
+            None
+        };
+        let shared = rss::share_input(ctx.comm, ctx.seeds, 0,
+                                      joined.as_ref(),
+                                      &[batch * c0 * h0 * w0]);
+        let shapes = vec![vec![c0, h0 * w0]; batch];
+        acts = split(shared, &shapes);
+    }
+
+    let mut geom: Vec<(usize, usize, usize)> = vec![(c0, h0, w0); batch];
+    // ---- walk the program ----------------------------------------------
+    for (i, op) in model.ops.iter().enumerate() {
+        match op {
+            Op::Matmul { conv, m, kdim, geom: g, cout, hlo, .. } => {
+                let w = model.weights[i].as_ref().unwrap();
+                let b = model.biases[i].as_ref();
+                let key = hlo.clone().unwrap_or_default();
+                // local contraction per sample, then ONE batched reshare
+                let mut zis = Vec::with_capacity(batch);
+                let mut shapes = Vec::with_capacity(batch);
+                for (s, gm) in acts.iter().zip(geom.iter_mut()) {
+                    let x = if *conv {
+                        let (k, st, pl, ph) = *g;
+                        let (cc, hh, ww) = *gm;
+                        let a3 = s.a.clone().reshape(&[cc, hh, ww]);
+                        let b3 = s.b.clone().reshape(&[cc, hh, ww]);
+                        let (xa, (oh, ow)) = im2col_chw(&a3, k, st, pl, ph);
+                        let (xb, _) = im2col_chw(&b3, k, st, pl, ph);
+                        *gm = (*cout, oh, ow);
+                        Share { a: xa, b: xb }
+                    } else {
+                        *gm = (*m, 1, 1);
+                        s.clone().reshape(&[*kdim, 1])
+                    };
+                    let zi = backend.rss_matmul(&key, &w.a, &w.b, &x.a, &x.b,
+                                                b.map(|bb| &bb.a));
+                    shapes.push(zi.shape.clone());
+                    zis.push(zi);
+                }
+                acts = reshare_batched(ctx, zis, &shapes);
+            }
+            Op::Depthwise { geom: g, hlo, .. } => {
+                let w = model.weights[i].as_ref().unwrap();
+                let key = hlo.clone().unwrap_or_default();
+                let (k, st, pl, ph) = *g;
+                let mut zis = Vec::with_capacity(batch);
+                let mut shapes = Vec::with_capacity(batch);
+                for (s, gm) in acts.iter().zip(geom.iter_mut()) {
+                    let (cc, hh, ww) = *gm;
+                    let zi = backend.rss_depthwise(
+                        &key, &w.a, &w.b, &s.a, &s.b,
+                        (cc, hh, ww, k, st, pl, ph));
+                    let oh = (hh + pl + ph - k) / st + 1;
+                    let ow = (ww + pl + ph - k) / st + 1;
+                    *gm = (cc, oh, ow);
+                    shapes.push(zi.shape.clone());
+                    zis.push(zi);
+                }
+                acts = reshare_batched(ctx, zis, &shapes);
+            }
+            Op::Sign { .. } => {
+                let t = model.thresholds[i].as_ref().unwrap();
+                let flip = model.flips[i].as_ref().unwrap();
+                // local threshold + flip, then ONE batched sign protocol
+                let d: Vec<Share> = acts.iter().zip(&geom).map(|(s, gm)| {
+                    let (cc, hh, ww) = *gm;
+                    let z = s.clone().reshape(&[cc, hh * ww]);
+                    sub_thresh_flip(&z, t, flip)
+                }).collect();
+                let shapes: Vec<Vec<usize>> =
+                    d.iter().map(|s| s.shape().to_vec()).collect();
+                let joined = concat(&d);
+                let bits = msb_via(ctx, pool, &joined).sign_a;
+                acts = split(bits, &shapes);
+            }
+            Op::Relu { trunc: f } => {
+                let shapes: Vec<Vec<usize>> =
+                    acts.iter().map(|s| s.shape().to_vec()).collect();
+                let joined = concat(&acts);
+                let m = msb_via(ctx, pool, &joined).bits;
+                let r = if opts.relu_via_ot {
+                    relu_ot(ctx, &joined, &m)
+                } else {
+                    relu_mul(ctx, &joined, &m)
+                };
+                let truncated = trunc(ctx, &r, *f);
+                acts = split(truncated, &shapes);
+            }
+            Op::PoolBits { k, stride, .. } => {
+                // local window sums per sample, one batched Sign
+                let mut sums = Vec::with_capacity(batch);
+                let mut shapes = Vec::with_capacity(batch);
+                for (s, gm) in acts.iter().zip(geom.iter_mut()) {
+                    let (cc, hh, ww) = *gm;
+                    let summed = crate::protocols::maxpool::
+                        window_sum_minus_one(ctx, s, cc, hh, ww, *k, *stride);
+                    let oh = (hh - k) / stride + 1;
+                    let ow = (ww - k) / stride + 1;
+                    *gm = (cc, oh, ow);
+                    shapes.push(vec![cc, oh * ow]);
+                    sums.push(summed);
+                }
+                let joined = concat(&sums);
+                let bits = msb_via(ctx, pool, &joined).sign_a;
+                acts = split(bits, &shapes);
+            }
+            Op::Pm1 => {
+                for s in acts.iter_mut() {
+                    *s = s.pm1(me);
+                }
+            }
+            Op::Flatten { .. } => {
+                for (s, gm) in acts.iter_mut().zip(geom.iter_mut()) {
+                    let (cc, hh, ww) = *gm;
+                    *s = s.clone().reshape(&[cc * hh * ww, 1]);
+                    *gm = (cc * hh * ww, 1, 1);
+                }
+            }
+        }
+    }
+
+    // ---- reveal logits to the data owner only --------------------------
+    let joined = concat(&acts);
+    let logits = reveal_to_p0(ctx, &joined);
+    let out = if me == 0 {
+        let v = logits.unwrap();
+        let per = v.len() / batch;
+        Ok(InferenceOutput {
+            logits: v.chunks(per).map(<[i32]>::to_vec).collect(),
+        })
+    } else {
+        Ok(InferenceOutput { logits: vec![] })
+    };
+    out
+}
+
+/// Reveal a share to P0 only: P1 sends its x_2 component to P0.
+fn reveal_to_p0(ctx: &Ctx, s: &Share) -> Option<Vec<i32>> {
+    match ctx.id() {
+        1 => {
+            ctx.comm.send_elems(Dir::Prev, &s.b.data); // x_2 -> P0
+            ctx.comm.round();
+            None
+        }
+        0 => {
+            let x2 = ctx.comm.recv_elems(Dir::Next);
+            ctx.comm.round();
+            Some((0..s.len()).map(|i| {
+                s.a.data[i].wrapping_add(s.b.data[i]).wrapping_add(x2[i])
+            }).collect())
+        }
+        _ => None,
+    }
+}
+
+/// Convenience: argmax per logit row.
+pub fn argmax(logits: &[i32]) -> usize {
+    logits.iter().enumerate()
+        .max_by_key(|(_, &v)| v).map(|(i, _)| i).unwrap_or(0)
+}
+
+pub mod session;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_largest() {
+        assert_eq!(argmax(&[1, 5, 3]), 1);
+        assert_eq!(argmax(&[-10, -2, -5]), 1);
+        assert_eq!(argmax(&[7]), 0);
+    }
+
+    #[test]
+    fn concat_split_roundtrip() {
+        let mut rng = crate::testutil::Rng::new(2);
+        let shares: Vec<Share> = (0..3).map(|_| {
+            let t = rng.tensor(&[2, 5]);
+            Share { a: t.clone(), b: t }
+        }).collect();
+        let shapes: Vec<Vec<usize>> =
+            shares.iter().map(|s| s.shape().to_vec()).collect();
+        let joined = concat(&shares);
+        assert_eq!(joined.len(), 30);
+        let back = split(joined, &shapes);
+        assert_eq!(back, shares);
+    }
+}

@@ -1,0 +1,158 @@
+//! Three-party session orchestration: spawns the party threads, wires the
+//! simulated network, runs setup (model sharing) and online inference,
+//! and aggregates the cost report.  Used by the coordinator, the examples,
+//! and every bench.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::nn::Model;
+use crate::prf::PartySeeds;
+use crate::protocols::{Ctx, ProtoConfig};
+use crate::ring::Tensor;
+use crate::runtime::{make_backend, BackendKind};
+use crate::transport::{local_trio, NetConfig, Stats};
+
+use super::{argmax, share_model, EngineOptions};
+
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    pub net: NetConfig,
+    pub backend: BackendKind,
+    pub opts: EngineOptions,
+    pub proto: ProtoConfig,
+    pub hlo_dir: PathBuf,
+    pub session_seed: u64,
+}
+
+impl SessionConfig {
+    pub fn new(hlo_dir: impl Into<PathBuf>) -> Self {
+        SessionConfig {
+            net: NetConfig::zero(),
+            backend: BackendKind::Native,
+            opts: EngineOptions::default(),
+            proto: ProtoConfig::default(),
+            hlo_dir: hlo_dir.into(),
+            session_seed: 7,
+        }
+    }
+
+    pub fn with_net(mut self, net: NetConfig) -> Self {
+        self.net = net;
+        self
+    }
+
+    pub fn with_backend(mut self, b: BackendKind) -> Self {
+        self.backend = b;
+        self
+    }
+}
+
+/// Cost + accuracy report for one batched inference session.
+#[derive(Clone, Debug)]
+pub struct SessionReport {
+    pub preds: Vec<usize>,
+    pub logits: Vec<Vec<i32>>,
+    /// Online (inference) wall time, as seen by the data owner.
+    pub online: Duration,
+    /// Model-sharing setup wall time.
+    pub setup: Duration,
+    pub stats: [Stats; 3],
+}
+
+impl SessionReport {
+    pub fn total_bytes(&self) -> u64 {
+        self.stats.iter().map(|s| s.bytes_sent).sum()
+    }
+
+    pub fn max_rounds(&self) -> u64 {
+        self.stats.iter().map(|s| s.rounds).max().unwrap_or(0)
+    }
+
+    pub fn comm_mb(&self) -> f64 {
+        self.total_bytes() as f64 / 1.0e6
+    }
+}
+
+/// Run one batched secure inference over a fresh 3-party session.
+/// `inputs` are the data owner's plaintext ring images (C*H*W flat).
+pub fn run_inference(model: &Arc<Model>, inputs: Vec<Tensor>,
+                     cfg: &SessionConfig) -> Result<SessionReport> {
+    let batch = inputs.len();
+    if batch == 0 {
+        return Err(anyhow!("empty batch"));
+    }
+    let comms = local_trio(cfg.net);
+    let mut handles = Vec::new();
+    for comm in comms {
+        let model = Arc::clone(model);
+        let cfg = cfg.clone();
+        let inputs = if comm.id == 0 { inputs.clone() } else { vec![] };
+        handles.push(thread::spawn(move || -> Result<(
+            Vec<Vec<i32>>, Duration, Duration, Stats)> {
+            let seeds = PartySeeds::setup(cfg.session_seed, comm.id);
+            let ctx = Ctx::with_cfg(&comm, &seeds, cfg.proto);
+            let backend = make_backend(cfg.backend, &cfg.hlo_dir)?;
+            let t0 = Instant::now();
+            // compile the layer executables during setup, never online
+            let keys: Vec<String> = model.ops.iter().filter_map(|o| {
+                match o {
+                    crate::nn::Op::Matmul { hlo, .. }
+                    | crate::nn::Op::Depthwise { hlo, .. } => hlo.clone(),
+                    _ => None,
+                }
+            }).collect();
+            backend.warmup(&keys);
+            let shared = share_model(&ctx, &model, true)?;
+            // offline phase: mint the MSB correlated material
+            let pool = if cfg.opts.preprocess {
+                Some(super::preprocess_for(&ctx, &shared, batch))
+            } else {
+                None
+            };
+            let setup = t0.elapsed();
+            comm.reset_stats(); // report online cost separately
+            let t1 = Instant::now();
+            let out = super::infer_batch_pooled(
+                &ctx, &shared, backend.as_ref(), cfg.opts, &inputs, batch,
+                pool.as_ref())?;
+            let online = t1.elapsed();
+            Ok((out.logits, online, setup, comm.stats()))
+        }));
+    }
+    let mut results = Vec::new();
+    for h in handles {
+        results.push(h.join().map_err(|_| anyhow!("party panicked"))??);
+    }
+    let logits = results[0].0.clone();
+    let preds = logits.iter().map(|l| argmax(l)).collect();
+    Ok(SessionReport {
+        preds,
+        logits,
+        online: results[0].1,
+        setup: results[0].2,
+        stats: [results[0].3, results[1].3, results[2].3],
+    })
+}
+
+/// Accuracy helper: run `inputs` through the secure engine in batches and
+/// compare predictions against labels.
+pub fn secure_accuracy(model: &Arc<Model>, inputs: &[Tensor], labels: &[i32],
+                       batch: usize, cfg: &SessionConfig) -> Result<f64> {
+    let mut correct = 0usize;
+    let mut done = 0usize;
+    for chunk in inputs.chunks(batch) {
+        let rep = run_inference(model, chunk.to_vec(), cfg)?;
+        for (p, &l) in rep.preds.iter().zip(&labels[done..]) {
+            if *p == l as usize {
+                correct += 1;
+            }
+        }
+        done += chunk.len();
+    }
+    Ok(correct as f64 / done as f64)
+}

@@ -1,0 +1,39 @@
+//! CBNN: a three-party secure computation framework for customized binary
+//! neural network inference (Dong et al., 2024), reproduced as a
+//! rust + JAX + Pallas three-layer stack.
+//!
+//! * `ring`, `prf`, `rss`, `transport`, `ot` -- the 3PC substrate:
+//!   Z_{2^32} tensors, correlated randomness, replicated secret sharing,
+//!   simulated LAN/WAN links, the 3-party OT.
+//! * `protocols` -- the paper's contributions: Algorithm 2 linear layers,
+//!   Algorithm 3 MSB extraction, Algorithm 4/5 Sign and ReLU, truncation,
+//!   Sign-fused maxpooling, BN folding (done at export time).
+//! * `nn`, `engine` -- the quantized layer IR and the per-party secure
+//!   executor.
+//! * `runtime` -- PJRT client loading the AOT artifacts lowered from the
+//!   L1 Pallas kernels (HLO text interchange).
+//! * `coordinator` -- serving front: request queue, dynamic batcher,
+//!   session management, metrics.
+//! * `baselines` -- SecureBiNN-/Falcon-style protocol arms and published
+//!   cost-model rows for the comparison tables.
+//!
+//! Python (`python/compile`) runs only at build time: it trains the
+//! customized BNNs (knowledge distillation + separable convolutions),
+//! quantizes and folds them, and AOT-lowers every linear layer to HLO.
+
+pub mod baselines;
+pub mod cli;
+pub mod coordinator;
+pub mod datasets;
+pub mod engine;
+pub mod jsonio;
+pub mod metrics;
+pub mod nn;
+pub mod ot;
+pub mod prf;
+pub mod protocols;
+pub mod ring;
+pub mod rss;
+pub mod runtime;
+pub mod testutil;
+pub mod transport;

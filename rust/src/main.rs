@@ -1,0 +1,130 @@
+//! cbnn -- leader CLI for the three-party secure BNN inference framework.
+//!
+//! Subcommands:
+//!   infer  -- one batched secure inference, print predictions + cost
+//!   serve  -- start the coordinator, replay a synthetic request stream,
+//!             print latency/throughput
+//!   acc    -- secure accuracy over the exported eval set
+//!   info   -- describe a model manifest
+//!
+//! Common flags: --model <name> --artifacts <dir> --net lan|wan|zero
+//!               --backend native|pjrt-pallas|pjrt-xla --batch N
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use cbnn::cli::{parse_backend, parse_net, Args};
+use cbnn::coordinator::{BatchPolicy, Coordinator, Service};
+use cbnn::datasets::EvalSet;
+use cbnn::engine::session::{run_inference, secure_accuracy, SessionConfig};
+use cbnn::metrics::fmt_duration;
+use cbnn::nn::Model;
+
+fn usage() -> &'static str {
+    "usage: cbnn <infer|serve|acc|info> --model <name> \
+     [--artifacts artifacts] [--net lan|wan|zero] \
+     [--backend native|pjrt-pallas|pjrt-xla] [--batch N] [--requests N]"
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow!("{e}\n{}", usage()))?;
+    let sub = args.subcommand.clone()
+        .ok_or_else(|| anyhow!("missing subcommand\n{}", usage()))?;
+
+    let art = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let name = args.get_or("model", "mnistnet1").to_string();
+    let model = Arc::new(Model::load(
+        &art.join("models").join(format!("{name}.manifest.json")))
+        .with_context(|| format!("loading model '{name}'"))?);
+
+    let cfg = SessionConfig::new(art.join("hlo"))
+        .with_net(parse_net(args.get_or("net", "lan"))
+                  .map_err(anyhow::Error::msg)?)
+        .with_backend(parse_backend(args.get_or("backend", "pjrt-pallas"))
+                      .map_err(anyhow::Error::msg)?);
+
+    let data = EvalSet::load(&art.join("data")
+                             .join(format!("{}.bin", model.dataset)))
+        .context("eval data (run `make artifacts`)")?;
+
+    match sub.as_str() {
+        "info" => {
+            println!("model      : {}", model.name);
+            println!("dataset    : {}", model.dataset);
+            println!("input CHW  : {:?}", model.input);
+            println!("layers     : {}", model.ops.len());
+            println!("parameters : {}", model.param_count());
+            for (i, op) in model.ops.iter().enumerate() {
+                println!("  [{i:>2}] {op:?}");
+            }
+        }
+        "infer" => {
+            let batch = args.get_usize("batch", 4)
+                .map_err(anyhow::Error::msg)?;
+            let inputs = data.images[..batch.min(data.images.len())].to_vec();
+            let rep = run_inference(&model, inputs, &cfg)?;
+            println!("model={} batch={} net={}", model.name, batch,
+                     args.get_or("net", "lan"));
+            println!("setup  : {}", fmt_duration(rep.setup));
+            println!("online : {}  ({} per sample)",
+                     fmt_duration(rep.online),
+                     fmt_duration(rep.online / batch as u32));
+            println!("comm   : {:.3} MB, {} rounds (max over parties)",
+                     rep.comm_mb(), rep.max_rounds());
+            for (i, (p, l)) in rep.preds.iter()
+                .zip(&data.labels).enumerate() {
+                println!("  sample {i}: pred={p} label={l}");
+            }
+        }
+        "acc" => {
+            let n = args.get_usize("n", 64).map_err(anyhow::Error::msg)?;
+            let batch = args.get_usize("batch", 8)
+                .map_err(anyhow::Error::msg)?;
+            let n = n.min(data.images.len());
+            let acc = secure_accuracy(&model, &data.images[..n],
+                                      &data.labels[..n], batch, &cfg)?;
+            println!("secure accuracy over {n} samples: {:.2}%", acc * 100.0);
+        }
+        "serve" => {
+            let requests = args.get_usize("requests", 32)
+                .map_err(anyhow::Error::msg)?;
+            let max_batch = args.get_usize("batch", 8)
+                .map_err(anyhow::Error::msg)?;
+            let svc = Service::start(Arc::clone(&model), cfg)?;
+            println!("service up: model={} setup={}", svc.model_name,
+                     fmt_duration(svc.setup_time));
+            let coord = Coordinator::start(svc, BatchPolicy {
+                max_batch,
+                max_wait: Duration::from_millis(10),
+            });
+            let mut rxs = Vec::new();
+            for i in 0..requests {
+                rxs.push((i, coord.submit(
+                    data.images[i % data.images.len()].clone())));
+            }
+            let mut correct = 0;
+            for (i, rx) in rxs {
+                let resp = rx.recv().context("response")?;
+                if resp.pred == data.labels[i % data.labels.len()] as usize {
+                    correct += 1;
+                }
+            }
+            let (hist, thr) = coord.finish();
+            println!("served {} requests: {:.1} req/s", thr.requests,
+                     thr.per_sec());
+            println!("latency mean={} p50={} p99={} max={}",
+                     fmt_duration(hist.mean()),
+                     fmt_duration(hist.quantile(0.5)),
+                     fmt_duration(hist.quantile(0.99)),
+                     fmt_duration(hist.max()));
+            println!("accuracy on served stream: {:.1}%",
+                     100.0 * f64::from(correct) / requests as f64);
+        }
+        other => return Err(anyhow!("unknown subcommand '{other}'\n{}",
+                                    usage())),
+    }
+    Ok(())
+}

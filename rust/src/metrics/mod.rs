@@ -1,0 +1,112 @@
+//! Serving metrics: latency histogram + throughput counters for the
+//! coordinator (criterion is not in the offline crate set; the bench
+//! harness and the coordinator share these primitives).
+
+use std::time::Duration;
+
+/// Fixed-bucket log-scale latency histogram (microseconds).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// bucket i covers [2^i, 2^{i+1}) us; 0..=31
+    buckets: [u64; 32],
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { buckets: [0; 32], count: 0, sum_us: 0, max_us: 0 }
+    }
+}
+
+impl Histogram {
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros().min(u128::from(u64::MAX)) as u64;
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(31);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us / self.count)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us)
+    }
+
+    /// Approximate quantile from the log buckets (upper bound of the
+    /// bucket containing the q-th sample).
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((self.count as f64) * q).ceil() as u64;
+        let mut seen = 0;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= target {
+                return Duration::from_micros(1u64 << (i + 1));
+            }
+        }
+        self.max()
+    }
+}
+
+/// Simple mean/throughput aggregate for a run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Throughput {
+    pub requests: u64,
+    pub wall: Duration,
+}
+
+impl Throughput {
+    pub fn per_sec(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        self.requests as f64 / self.wall.as_secs_f64()
+    }
+}
+
+/// Format helper used by benches to print paper-style table rows.
+pub fn fmt_duration(d: Duration) -> String {
+    if d.as_secs_f64() >= 1.0 {
+        format!("{:.3}s", d.as_secs_f64())
+    } else {
+        format!("{:.1}ms", d.as_secs_f64() * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_basic_stats() {
+        let mut h = Histogram::default();
+        for ms in [1u64, 2, 4, 8, 100] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.mean() >= Duration::from_millis(20));
+        assert!(h.max() >= Duration::from_millis(100));
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+    }
+
+    #[test]
+    fn throughput_math() {
+        let t = Throughput { requests: 50, wall: Duration::from_secs(5) };
+        assert!((t.per_sec() - 10.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,404 @@
+//! Quantized layer IR: the manifest + weight pool emitted by
+//! `python/compile/aot.py`.
+//!
+//! A model is a flat program of ops over CHW-major ring tensors:
+//!
+//! * `Matmul`    -- FC / pointwise / im2col'd convolution (Algorithm 2)
+//! * `Depthwise` -- depthwise half of an MPC-friendly separable conv
+//! * `Sign`      -- BN-folded threshold + orientation flip (Eq. 8)
+//! * `Relu`      -- ReLU followed by truncation (BN folded into W, b)
+//! * `PoolBits`  -- Sign-fused 2x2 maxpool over activation bits
+//! * `Pm1`       -- bits -> {-1,+1} (local affine)
+//! * `Flatten`   -- CHW -> column vector
+//!
+//! Thresholds, weights, and biases are *secret* (model owner's) and are
+//! loaded here as plaintext only on the model owner; the engine secret-
+//! shares them at session setup.  The `flip` vector is public metadata
+//! (the paper treats gamma' as positive; we surface the orientation bit
+//! instead of assuming it -- see DESIGN.md).
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::jsonio::{self, Json};
+use crate::ring::Tensor;
+
+/// Reference into the weights.bin pool (int32 little-endian elements).
+#[derive(Clone, Copy, Debug)]
+pub struct PoolRef {
+    pub off: usize,
+    pub len: usize,
+}
+
+#[derive(Clone, Debug)]
+pub enum Op {
+    Matmul {
+        conv: bool,
+        m: usize,
+        kdim: usize,
+        n: usize,
+        /// conv geometry (k, stride, pad_lo, pad_hi); unused for FC
+        geom: (usize, usize, usize, usize),
+        cout: usize,
+        w: PoolRef,
+        b: Option<PoolRef>,
+        s_in: u32,
+        s_out: u32,
+        hlo: Option<String>,
+    },
+    Depthwise {
+        c: usize,
+        geom: (usize, usize, usize, usize),
+        w: PoolRef,
+        s_in: u32,
+        s_out: u32,
+        hlo: Option<String>,
+    },
+    Sign {
+        c: usize,
+        t: PoolRef,
+        flip: PoolRef,
+    },
+    Relu {
+        trunc: u32,
+    },
+    PoolBits {
+        c: usize,
+        k: usize,
+        stride: usize,
+    },
+    Pm1,
+    Flatten {
+        c: usize,
+        h: usize,
+        w: usize,
+    },
+}
+
+/// A loaded model: layer program + plaintext weight pool (model owner
+/// side) + metadata.
+#[derive(Clone, Debug)]
+pub struct Model {
+    pub name: String,
+    pub dataset: String,
+    /// input (C, H, W)
+    pub input: (usize, usize, usize),
+    pub s_in: u32,
+    pub ops: Vec<Op>,
+    pub pool: Vec<i32>,
+}
+
+impl Model {
+    pub fn load(manifest_path: &Path) -> Result<Model> {
+        let text = std::fs::read_to_string(manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let weights_path = manifest_path.to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path"))?
+            .replace(".manifest.json", ".weights.bin");
+        let raw = std::fs::read(&weights_path)
+            .with_context(|| format!("reading {weights_path}"))?;
+        if raw.len() % 4 != 0 {
+            bail!("weights.bin length not a multiple of 4");
+        }
+        let pool: Vec<i32> = raw.chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Self::from_json(&text, pool)
+    }
+
+    pub fn from_json(manifest: &str, pool: Vec<i32>) -> Result<Model> {
+        let j = jsonio::parse(manifest).map_err(|e| anyhow!("manifest: {e}"))?;
+        let name = j.field("name").map_err(anyhow::Error::msg)?
+            .as_str().ok_or_else(|| anyhow!("name not a string"))?.to_string();
+        let dataset = j.field("dataset").map_err(anyhow::Error::msg)?
+            .as_str().unwrap_or("?").to_string();
+        let input = j.field("input").map_err(anyhow::Error::msg)?;
+        let input = (geti(input, "c")?, geti(input, "h")?, geti(input, "w")?);
+        let s_in = geti(&j, "s_in")? as u32;
+        let ring_bits = geti(&j, "ring_bits")?;
+        if ring_bits != 32 {
+            bail!("only l = 32 supported, manifest says {ring_bits}");
+        }
+        let layers = j.field("layers").map_err(anyhow::Error::msg)?
+            .as_arr().ok_or_else(|| anyhow!("layers not an array"))?;
+        let mut ops = Vec::with_capacity(layers.len());
+        for (idx, l) in layers.iter().enumerate() {
+            ops.push(parse_op(l).with_context(|| format!("layer {idx}"))?);
+        }
+        let model = Model { name, dataset, input, s_in, ops, pool };
+        model.validate()?;
+        Ok(model)
+    }
+
+    /// Structural checks: pool refs in range, shapes chain correctly.
+    pub fn validate(&self) -> Result<()> {
+        for (i, op) in self.ops.iter().enumerate() {
+            for r in op.pool_refs() {
+                if r.off + r.len > self.pool.len() {
+                    bail!("layer {i}: pool ref {}+{} out of range {}",
+                          r.off, r.len, self.pool.len());
+                }
+            }
+        }
+        // walk shapes
+        let (mut c, mut h, mut w) = self.input;
+        let mut spatial = true;
+        let mut vec_len = 0usize;
+        for (i, op) in self.ops.iter().enumerate() {
+            match op {
+                Op::Matmul { conv, m, kdim, geom, cout, .. } => {
+                    if *conv {
+                        if !spatial {
+                            bail!("layer {i}: conv after flatten");
+                        }
+                        let (k, s, pl, ph) = *geom;
+                        if *kdim != k * k * c {
+                            bail!("layer {i}: kdim {} != k*k*c {}", kdim,
+                                  k * k * c);
+                        }
+                        h = (h + pl + ph - k) / s + 1;
+                        w = (w + pl + ph - k) / s + 1;
+                        c = *cout;
+                    } else {
+                        if spatial {
+                            bail!("layer {i}: fc before flatten");
+                        }
+                        if *kdim != vec_len {
+                            bail!("layer {i}: fc kdim {} != input {}",
+                                  kdim, vec_len);
+                        }
+                        vec_len = *m;
+                    }
+                }
+                Op::Depthwise { c: dc, geom, .. } => {
+                    if *dc != c {
+                        bail!("layer {i}: depthwise c {} != {}", dc, c);
+                    }
+                    let (k, s, pl, ph) = *geom;
+                    h = (h + pl + ph - k) / s + 1;
+                    w = (w + pl + ph - k) / s + 1;
+                }
+                Op::Sign { c: sc, .. } => {
+                    let expect = if spatial { c } else { vec_len };
+                    if *sc != expect {
+                        bail!("layer {i}: sign c {} != {}", sc, expect);
+                    }
+                }
+                Op::PoolBits { k, stride, .. } => {
+                    h = (h - k) / stride + 1;
+                    w = (w - k) / stride + 1;
+                }
+                Op::Flatten { c: fc, h: fh, w: fw } => {
+                    if (*fc, *fh, *fw) != (c, h, w) {
+                        bail!("layer {i}: flatten dims {:?} != {:?}",
+                              (fc, fh, fw), (c, h, w));
+                    }
+                    vec_len = c * h * w;
+                    spatial = false;
+                }
+                Op::Relu { .. } | Op::Pm1 => {}
+            }
+        }
+        Ok(())
+    }
+
+    pub fn tensor(&self, r: PoolRef, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), r.len,
+                   "pool ref len mismatch");
+        Tensor::from_vec(shape, self.pool[r.off..r.off + r.len].to_vec())
+    }
+
+    /// Number of secret parameters (weights + biases + thresholds).
+    pub fn param_count(&self) -> usize {
+        self.ops.iter().flat_map(|o| o.pool_refs()).map(|r| r.len).sum()
+    }
+
+    /// (C, H, W) after each op -- the engine tracks geometry with this.
+    pub fn shapes(&self) -> Vec<(usize, usize, usize)> {
+        let (mut c, mut h, mut w) = self.input;
+        let mut out = Vec::new();
+        for op in &self.ops {
+            match op {
+                Op::Matmul { conv: true, geom, cout, .. } => {
+                    let (k, s, pl, ph) = *geom;
+                    h = (h + pl + ph - k) / s + 1;
+                    w = (w + pl + ph - k) / s + 1;
+                    c = *cout;
+                }
+                Op::Matmul { conv: false, m, .. } => {
+                    c = *m;
+                    h = 1;
+                    w = 1;
+                }
+                Op::Depthwise { geom, .. } => {
+                    let (k, s, pl, ph) = *geom;
+                    h = (h + pl + ph - k) / s + 1;
+                    w = (w + pl + ph - k) / s + 1;
+                }
+                Op::PoolBits { k, stride, .. } => {
+                    h = (h - k) / stride + 1;
+                    w = (w - k) / stride + 1;
+                }
+                Op::Flatten { .. } => {
+                    c = c * h * w;
+                    h = 1;
+                    w = 1;
+                }
+                _ => {}
+            }
+            out.push((c, h, w));
+        }
+        out
+    }
+}
+
+impl Op {
+    fn pool_refs(&self) -> Vec<PoolRef> {
+        match self {
+            Op::Matmul { w, b, .. } => {
+                let mut v = vec![*w];
+                if let Some(b) = b {
+                    v.push(*b);
+                }
+                v
+            }
+            Op::Depthwise { w, .. } => vec![*w],
+            Op::Sign { t, flip, .. } => vec![*t, *flip],
+            _ => vec![],
+        }
+    }
+}
+
+fn geti(j: &Json, k: &str) -> Result<usize> {
+    j.get(k).and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("missing int field '{k}'"))
+}
+
+fn pool_ref(j: &Json, k: &str) -> Result<PoolRef> {
+    let r = j.get(k).ok_or_else(|| anyhow!("missing pool ref '{k}'"))?;
+    Ok(PoolRef { off: geti(r, "off")?, len: geti(r, "len")? })
+}
+
+fn parse_op(l: &Json) -> Result<Op> {
+    let op = l.field("op").map_err(anyhow::Error::msg)?
+        .as_str().ok_or_else(|| anyhow!("op not a string"))?;
+    Ok(match op {
+        "matmul" => {
+            let conv = l.get("conv").and_then(Json::as_bool).unwrap_or(false);
+            let geom = if conv {
+                (geti(l, "k")?, geti(l, "stride")?, geti(l, "pad_lo")?,
+                 geti(l, "pad_hi")?)
+            } else {
+                (0, 0, 0, 0)
+            };
+            Op::Matmul {
+                conv,
+                m: geti(l, "m")?,
+                kdim: geti(l, "kdim")?,
+                n: geti(l, "n")?,
+                geom,
+                cout: if conv { geti(l, "cout")? } else { geti(l, "m")? },
+                w: pool_ref(l, "w")?,
+                b: pool_ref(l, "b").ok(),
+                s_in: geti(l, "s_in")? as u32,
+                s_out: geti(l, "s_out")? as u32,
+                hlo: l.get("hlo").and_then(Json::as_str).map(String::from),
+            }
+        }
+        "depthwise" => Op::Depthwise {
+            c: geti(l, "cout")?,
+            geom: (geti(l, "k")?, geti(l, "stride")?, geti(l, "pad_lo")?,
+                   geti(l, "pad_hi")?),
+            w: pool_ref(l, "w")?,
+            s_in: geti(l, "s_in")? as u32,
+            s_out: geti(l, "s_out")? as u32,
+            hlo: l.get("hlo").and_then(Json::as_str).map(String::from),
+        },
+        "sign" => Op::Sign {
+            c: geti(l, "c")?,
+            t: pool_ref(l, "t")?,
+            flip: pool_ref(l, "flip")?,
+        },
+        "relu" => Op::Relu { trunc: geti(l, "trunc")? as u32 },
+        "pool_bits" => Op::PoolBits {
+            c: geti(l, "c")?,
+            k: geti(l, "k")?,
+            stride: geti(l, "stride")?,
+        },
+        "pm1" => Op::Pm1,
+        "flatten" => Op::Flatten {
+            c: geti(l, "c")?,
+            h: geti(l, "h")?,
+            w: geti(l, "w")?,
+        },
+        other => bail!("unknown op '{other}'"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_manifest() -> (&'static str, Vec<i32>) {
+        let m = r#"{
+          "name": "tiny", "dataset": "mnist",
+          "input": {"c": 1, "h": 4, "w": 4},
+          "s_in": 7, "s_w": 12, "ring_bits": 32,
+          "layers": [
+            {"op": "matmul", "conv": true, "m": 2, "kdim": 4, "n": 9,
+             "k": 2, "stride": 1, "pad_lo": 0, "pad_hi": 0, "cout": 2,
+             "w": {"off": 0, "len": 8}, "b": {"off": 8, "len": 2},
+             "s_in": 7, "s_out": 19, "hlo": "rss_mm_2x4x9"},
+            {"op": "sign", "c": 2, "t": {"off": 10, "len": 2},
+             "flip": {"off": 12, "len": 2}},
+            {"op": "pm1"},
+            {"op": "flatten", "c": 2, "h": 3, "w": 3},
+            {"op": "matmul", "conv": false, "m": 3, "kdim": 18, "n": 1,
+             "w": {"off": 14, "len": 54}, "b": {"off": 68, "len": 3},
+             "s_in": 0, "s_out": 12}
+          ]
+        }"#;
+        (m, (0..71).collect())
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let (m, pool) = tiny_manifest();
+        let model = Model::from_json(m, pool).unwrap();
+        assert_eq!(model.ops.len(), 5);
+        assert_eq!(model.param_count(), 8 + 2 + 2 + 2 + 54 + 3);
+        let shapes = model.shapes();
+        assert_eq!(shapes[0], (2, 3, 3));
+        assert_eq!(*shapes.last().unwrap(), (3, 1, 1));
+    }
+
+    #[test]
+    fn rejects_out_of_range_pool_ref() {
+        let (m, _) = tiny_manifest();
+        assert!(Model::from_json(m, vec![0; 10]).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_shape_chain() {
+        let m = r#"{
+          "name": "bad", "dataset": "mnist",
+          "input": {"c": 1, "h": 4, "w": 4},
+          "s_in": 7, "ring_bits": 32,
+          "layers": [
+            {"op": "matmul", "conv": true, "m": 2, "kdim": 999, "n": 9,
+             "k": 2, "stride": 1, "pad_lo": 0, "pad_hi": 0, "cout": 2,
+             "w": {"off": 0, "len": 8}, "s_in": 7, "s_out": 19}
+          ]
+        }"#;
+        assert!(Model::from_json(m, vec![0; 2000]).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_ring() {
+        let m = r#"{"name": "x", "dataset": "d",
+                    "input": {"c":1,"h":1,"w":1},
+                    "s_in": 7, "ring_bits": 64, "layers": []}"#;
+        assert!(Model::from_json(m, vec![]).is_err());
+    }
+}

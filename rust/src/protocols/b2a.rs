@@ -1,0 +1,147 @@
+//! Binary-to-arithmetic share conversion via the 3-party OT (paper
+//! Section 3.3 "Share Conversion").
+//!
+//! Given RSS bit shares [y]^B with components (y_0, y_1, y_2):
+//!
+//! * P1 knows (y_1, y_2) and acts as OT *sender* with messages
+//!   m_i = (i XOR y_1 XOR y_2) - a, where the mask a = a_1 + a_2,
+//!   a_1 = PRF(k_1) (free with P0), a_2 sent to P2 (Alg. 3 step 3's
+//!   "P1 generates alpha_1, alpha_2 and sends alpha_2 to P2").
+//! * P0 (receiver) and P2 (helper) input the choice bit y_0, so P0 learns
+//!   m_{y_0} = y - a.
+//! * P0 forwards m_{y_0} to P2, establishing the RSS component layout
+//!   x_0 = y - a (P0, P2), x_1 = a_1 (P0, P1), x_2 = a_2 (P1, P2).
+//!
+//! Critical path: OT (2 rounds) + the P0->P2 forward (1 round); the
+//! a_2 distribution overlaps the OT's first round.
+
+use crate::ot;
+use crate::prf::{domain, PrfStream};
+use crate::ring::{Elem, Tensor};
+use crate::rss::{BitShare, Share};
+use crate::transport::Dir;
+
+use super::Ctx;
+
+/// Convert RSS bit shares into RSS arithmetic shares of the same bits.
+pub fn b2a(ctx: &Ctx, y: &BitShare) -> Share {
+    let n = y.len();
+    let me = ctx.id();
+    let cnt = ctx.seeds.next_cnt();
+    let roles = ot::Roles::new(1, 0, 2);
+    let shape = [n];
+
+    match me {
+        1 => {
+            // a_1 from PRF(k_1) -- P1.mine = k_1, shared with P0
+            let mut s1 = PrfStream::new(&ctx.seeds.mine, cnt, domain::SHARE);
+            let a1: Vec<Elem> = (0..n).map(|_| s1.next_elem()).collect();
+            // a_2 private, sent to P2
+            let mut sp = PrfStream::new(&ctx.seeds.private, cnt, domain::SHARE);
+            let a2: Vec<Elem> = (0..n).map(|_| sp.next_elem()).collect();
+            ctx.comm.send_elems(Dir::Next, &a2); // P2 is P1's next
+            let m0: Vec<Elem> = (0..n).map(|i| {
+                let bit = (y.a[i] ^ y.b[i]) as Elem; // y_1 ^ y_2
+                bit.wrapping_sub(a1[i]).wrapping_sub(a2[i])
+            }).collect();
+            let m1: Vec<Elem> = (0..n).map(|i| {
+                let bit = (1 ^ y.a[i] ^ y.b[i]) as Elem;
+                bit.wrapping_sub(a1[i]).wrapping_sub(a2[i])
+            }).collect();
+            ot::run(ctx.comm, ctx.seeds, roles, n,
+                    ot::Input::Sender { m0: &m0, m1: &m1 });
+            // P1 holds (x_1, x_2) = (a_1, a_2)
+            Share {
+                a: Tensor::from_vec(&shape, a1),
+                b: Tensor::from_vec(&shape, a2),
+            }
+        }
+        0 => {
+            let mut s1 = PrfStream::new(&ctx.seeds.next, cnt, domain::SHARE);
+            let a1: Vec<Elem> = (0..n).map(|_| s1.next_elem()).collect();
+            let x0 = ot::run(ctx.comm, ctx.seeds, roles, n,
+                             ot::Input::Receiver { c: &y.a })
+                .expect("receiver output");
+            // forward x_0 to P2 (replication)
+            ctx.comm.send_elems(Dir::Prev, &x0);
+            ctx.comm.round();
+            // P0 holds (x_0, x_1) = (y - a, a_1)
+            Share {
+                a: Tensor::from_vec(&shape, x0),
+                b: Tensor::from_vec(&shape, a1),
+            }
+        }
+        2 => {
+            let a2 = ctx.comm.recv_elems(Dir::Prev); // from P1
+            // helper input: choice bit y_0 = this party's `b` component
+            ot::run(ctx.comm, ctx.seeds, roles, n,
+                    ot::Input::Helper { c: &y.b });
+            let x0 = ctx.comm.recv_elems(Dir::Next); // from P0
+            ctx.comm.round();
+            // P2 holds (x_2, x_0) = (a_2, y - a)
+            Share {
+                a: Tensor::from_vec(&shape, a2),
+                b: Tensor::from_vec(&shape, x0),
+            }
+        }
+        _ => unreachable!(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocols::testsupport::run3;
+    use crate::rss::{deal_bits, reconstruct};
+    use crate::testutil::Rng;
+
+    #[test]
+    fn b2a_preserves_bits() {
+        let results = run3(|ctx| {
+            let mut rng = Rng::new(11);
+            let bits: Vec<u8> = (0..100).map(|_| rng.bit()).collect();
+            let shares = deal_bits(&bits, &mut rng);
+            (b2a(ctx, &shares[ctx.id()]), bits)
+        });
+        let bits = results[0].0 .1.clone();
+        let shares: [Share; 3] =
+            std::array::from_fn(|i| results[i].0 .0.clone());
+        let got = reconstruct(&shares);
+        for i in 0..bits.len() {
+            assert_eq!(got.data[i], bits[i] as i32, "i={i}");
+        }
+        // replication consistency
+        for i in 0..3 {
+            assert_eq!(shares[i].b, shares[(i + 1) % 3].a);
+        }
+    }
+
+    #[test]
+    fn b2a_handles_all_zero_and_all_one() {
+        for fill in [0u8, 1u8] {
+            let results = run3(move |ctx| {
+                let mut rng = Rng::new(5 + fill as u64);
+                let bits = vec![fill; 16];
+                let shares = deal_bits(&bits, &mut rng);
+                b2a(ctx, &shares[ctx.id()])
+            });
+            let shares: [Share; 3] =
+                std::array::from_fn(|i| results[i].0.clone());
+            let got = reconstruct(&shares);
+            assert!(got.data.iter().all(|&v| v == fill as i32));
+        }
+    }
+
+    #[test]
+    fn b2a_round_budget() {
+        // P0 (receiver + forward) must stay within 3 critical-path rounds.
+        let results = run3(|ctx| {
+            let mut rng = Rng::new(2);
+            let bits: Vec<u8> = (0..8).map(|_| rng.bit()).collect();
+            let shares = deal_bits(&bits, &mut rng);
+            let _ = b2a(ctx, &shares[ctx.id()]);
+        });
+        assert!(results[0].1.rounds <= 3,
+                "P0 rounds = {}", results[0].1.rounds);
+    }
+}

@@ -1,0 +1,229 @@
+//! Linear layer inference (Algorithm 2) over a pluggable local-compute
+//! backend.
+//!
+//! Each party locally evaluates the three-term contraction
+//!
+//! ```text
+//!     Z_i = W_i X_i + W_{i+1} X_i + W_i X_{i+1} (+ b_i)
+//! ```
+//!
+//! then masks with 3-out-of-3 zero randomness and reshares (one round).
+//! The contraction itself runs either on the native rust tensors or on the
+//! AOT-compiled PJRT executable (runtime::PjrtBackend) -- the protocol is
+//! agnostic, which is what the A4 ablation exploits.
+
+use crate::ring::{tensor::im2col_chw, Tensor};
+use crate::rss::{self, Share};
+
+use super::Ctx;
+
+/// Local three-term RSS contraction provider.
+pub trait LinearBackend {
+    /// Pre-compile / pre-load any artifacts for the given layer keys
+    /// (no-op for the native backend).  Called during session setup so
+    /// compilation never lands on the online path.
+    fn warmup(&self, keys: &[String]) {
+        let _ = keys;
+    }
+
+    /// Z_i = Wa·Xa + Wb·Xa + Wa·Xb (+ ba column-broadcast), all (m,k)x(k,n).
+    /// `key` identifies the AOT artifact for this layer shape (ignored by
+    /// the native backend).
+    fn rss_matmul(&self, key: &str, wa: &Tensor, wb: &Tensor, xa: &Tensor,
+                  xb: &Tensor, ba: Option<&Tensor>) -> Tensor;
+
+    /// Depthwise variant: w (C, k*k), x (C, H*W) in CHW; geometry packed
+    /// in `geom` = (c, h, w, k, stride, pad_lo, pad_hi).
+    fn rss_depthwise(&self, key: &str, wa: &Tensor, wb: &Tensor,
+                     xa: &Tensor, xb: &Tensor,
+                     geom: (usize, usize, usize, usize, usize, usize, usize))
+                     -> Tensor {
+        let _ = key;
+        native_depthwise(wa, wb, xa, xb, geom)
+    }
+}
+
+/// Pure-rust reference backend.
+pub struct NativeBackend;
+
+impl LinearBackend for NativeBackend {
+    fn rss_matmul(&self, _key: &str, wa: &Tensor, wb: &Tensor, xa: &Tensor,
+                  xb: &Tensor, ba: Option<&Tensor>) -> Tensor {
+        // (Wa + Wb)·Xa + Wa·Xb -- same two-contraction identity as the
+        // Pallas kernel
+        let wsum = wa.add(wb);
+        let mut z = wsum.matmul(xa);
+        z.add_assign(&wa.matmul(xb));
+        match ba {
+            Some(b) => z.add_col(b),
+            None => z,
+        }
+    }
+}
+
+/// Direct depthwise three-term contraction in CHW layout.
+pub fn native_depthwise(wa: &Tensor, wb: &Tensor, xa: &Tensor, xb: &Tensor,
+                        geom: (usize, usize, usize, usize, usize, usize,
+                               usize)) -> Tensor {
+    let (c, h, w, k, stride, pad_lo, pad_hi) = geom;
+    let hp = h + pad_lo + pad_hi;
+    let wp = w + pad_lo + pad_hi;
+    let oh = (hp - k) / stride + 1;
+    let ow = (wp - k) / stride + 1;
+    let mut out = Tensor::zeros(&[c, oh * ow]);
+    let xa3 = Tensor { shape: vec![c, h, w], data: xa.data.clone() };
+    let xb3 = Tensor { shape: vec![c, h, w], data: xb.data.clone() };
+    for ci in 0..c {
+        let (xa_c, _) = im2col_chw(
+            &Tensor::from_vec(&[1, h, w],
+                              xa3.data[ci * h * w..(ci + 1) * h * w].to_vec()),
+            k, stride, pad_lo, pad_hi);
+        let (xb_c, _) = im2col_chw(
+            &Tensor::from_vec(&[1, h, w],
+                              xb3.data[ci * h * w..(ci + 1) * h * w].to_vec()),
+            k, stride, pad_lo, pad_hi);
+        let wa_row = Tensor::from_vec(&[1, k * k],
+                                      wa.data[ci * k * k..(ci + 1) * k * k]
+                                      .to_vec());
+        let wb_row = Tensor::from_vec(&[1, k * k],
+                                      wb.data[ci * k * k..(ci + 1) * k * k]
+                                      .to_vec());
+        let wsum = wa_row.add(&wb_row);
+        let mut z = wsum.matmul(&xa_c);
+        z.add_assign(&wa_row.matmul(&xb_c));
+        out.data[ci * oh * ow..(ci + 1) * oh * ow].copy_from_slice(&z.data);
+    }
+    out
+}
+
+/// Algorithm 2: secure matmul layer.  `w`, `b` are the model's RSS shares;
+/// `x` the activation shares (k, n).  One reshare round.
+pub fn linear(ctx: &Ctx, backend: &dyn LinearBackend, key: &str, w: &Share,
+              x: &Share, b: Option<&Share>) -> Share {
+    let zi = backend.rss_matmul(key, &w.a, &w.b, &x.a, &x.b,
+                                b.map(|bb| &bb.a));
+    rss::reshare(ctx.comm, ctx.seeds, &zi)
+}
+
+/// Algorithm 2, depthwise-convolution form.
+pub fn depthwise(ctx: &Ctx, backend: &dyn LinearBackend, key: &str,
+                 w: &Share, x: &Share,
+                 geom: (usize, usize, usize, usize, usize, usize, usize))
+                 -> Share {
+    let zi = backend.rss_depthwise(key, &w.a, &w.b, &x.a, &x.b, geom);
+    rss::reshare(ctx.comm, ctx.seeds, &zi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocols::testsupport::run3;
+    use crate::rss::{deal, reconstruct};
+    use crate::testutil::{prop, Rng};
+
+    #[test]
+    fn secure_matmul_matches_plaintext() {
+        let results = run3(|ctx| {
+            let mut rng = Rng::new(21);
+            let (m, k, n) = (6, 10, 4);
+            let w = rng.tensor_small(&[m, k], 1000);
+            let x = rng.tensor_small(&[k, n], 1000);
+            let b = rng.tensor_small(&[m], 1000);
+            let ws = deal(&w, &mut rng);
+            let xs = deal(&x, &mut rng);
+            let bs = deal(&b, &mut rng);
+            let z = linear(ctx, &NativeBackend, "t", &ws[ctx.id()],
+                           &xs[ctx.id()], Some(&bs[ctx.id()]));
+            (z, w.matmul(&x).add_col(&b))
+        });
+        let want = results[0].0 .1.clone();
+        let shares: [Share; 3] =
+            std::array::from_fn(|i| results[i].0 .0.clone());
+        assert_eq!(reconstruct(&shares), want);
+        for i in 0..3 {
+            assert_eq!(shares[i].b, shares[(i + 1) % 3].a);
+        }
+    }
+
+    #[test]
+    fn secure_matmul_single_round() {
+        let results = run3(|ctx| {
+            let mut rng = Rng::new(2);
+            let w = rng.tensor(&[3, 3]);
+            let x = rng.tensor(&[3, 2]);
+            let ws = deal(&w, &mut rng);
+            let xs = deal(&x, &mut rng);
+            let _ = linear(ctx, &NativeBackend, "t", &ws[ctx.id()],
+                           &xs[ctx.id()], None);
+        });
+        for (_, st) in &results {
+            assert_eq!(st.rounds, 1);
+        }
+    }
+
+    #[test]
+    fn native_depthwise_matches_dense_blockdiag() {
+        prop(20, |rng: &mut Rng| {
+            let (c, h, w, k) = (rng.range(1, 4), rng.range(3, 7),
+                                rng.range(3, 7), rng.range(1, 3));
+            let wa = rng.tensor_small(&[c, k * k], 50);
+            let wb = rng.tensor_small(&[c, k * k], 50);
+            let xa = rng.tensor_small(&[c, h * w], 50);
+            let xb = rng.tensor_small(&[c, h * w], 50);
+            let z = native_depthwise(&wa, &wb, &xa, &xb,
+                                     (c, h, w, k, 1, 0, 0));
+            // oracle: per-channel explicit loops
+            let (oh, ow) = (h - k + 1, w - k + 1);
+            for ci in 0..c {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut acc = 0i32;
+                        for ky in 0..k {
+                            for kx in 0..k {
+                                let wi = wa.data[ci * k * k + ky * k + kx];
+                                let wi1 = wb.data[ci * k * k + ky * k + kx];
+                                let xi = xa.data[ci * h * w + (oy + ky) * w
+                                                 + ox + kx];
+                                let xi1 = xb.data[ci * h * w + (oy + ky) * w
+                                                  + ox + kx];
+                                acc = acc
+                                    .wrapping_add(wi.wrapping_add(wi1)
+                                                  .wrapping_mul(xi))
+                                    .wrapping_add(wi.wrapping_mul(xi1));
+                            }
+                        }
+                        assert_eq!(z.data[ci * oh * ow + oy * ow + ox], acc);
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn secure_depthwise_matches_plaintext() {
+        let results = run3(|ctx| {
+            let mut rng = Rng::new(33);
+            let (c, h, w, k) = (2, 5, 5, 3);
+            let wt = rng.tensor_small(&[c, k * k], 100);
+            let x = rng.tensor_small(&[c, h * w], 100);
+            let ws = deal(&wt, &mut rng);
+            let xs = deal(&x, &mut rng);
+            let z = depthwise(ctx, &NativeBackend, "t", &ws[ctx.id()],
+                              &xs[ctx.id()], (c, h, w, k, 1, 1, 1));
+            (z, wt, x)
+        });
+        let shares: [Share; 3] =
+            std::array::from_fn(|i| results[i].0 .0.clone());
+        let got = reconstruct(&shares);
+        // oracle via native_depthwise on plaintext (wb = xb = 0)
+        let wt = &results[0].0 .1;
+        let x = &results[0].0 .2;
+        let zero_w = Tensor::zeros(&[2, 9]);
+        let zero_x = Tensor::zeros(&[2, 25]);
+        let mut want = native_depthwise(wt, &zero_w, x, &zero_x,
+                                        (2, 5, 5, 3, 1, 1, 1));
+        // native_depthwise(w,0,x,0) computes w·x exactly
+        want.shape = got.shape.clone();
+        assert_eq!(got, want);
+    }
+}

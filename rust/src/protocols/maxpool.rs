@@ -1,0 +1,122 @@
+//! Sign-fused maxpooling (paper Section 3.6).
+//!
+//! After a Sign activation the feature map holds arithmetic shares of bits
+//! in {0,1}; the max over a window equals the OR of the bits, and
+//!
+//! ```text
+//!     OR(b_1..b_k) = Sign( sum(b) - 1 )
+//! ```
+//!
+//! so pooling costs one *local* windowed sum plus one Sign evaluation on
+//! the (4x smaller) pooled map -- no secure pairwise comparisons.  The
+//! non-fused comparison-tree alternative lives in baselines:: for the A2
+//! ablation.
+
+use crate::rss::Share;
+
+use super::{sign::sign, Ctx};
+
+/// Windowed local sum over a (C, H, W)-shaped share laid out as
+/// `[C, H*W]`; returns the `[C, OH*OW]` share of (sum - 1).
+pub fn window_sum_minus_one(ctx: &Ctx, bits: &Share, c: usize, h: usize,
+                            w: usize, k: usize, stride: usize) -> Share {
+    assert_eq!(bits.len(), c * h * w);
+    let oh = (h - k) / stride + 1;
+    let ow = (w - k) / stride + 1;
+    let mut out = Share::zeros(&[c, oh * ow]);
+    let acc = |src: &crate::ring::Tensor, dst: &mut crate::ring::Tensor| {
+        for ci in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut s = 0i32;
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let iy = oy * stride + ky;
+                            let ix = ox * stride + kx;
+                            s = s.wrapping_add(src.data[ci * h * w + iy * w + ix]);
+                        }
+                    }
+                    dst.data[ci * oh * ow + oy * ow + ox] = s;
+                }
+            }
+        }
+    };
+    acc(&bits.a, &mut out.a);
+    acc(&bits.b, &mut out.b);
+    // subtract the public constant 1 (one additive component only)
+    out.add_const(ctx.id(), -1)
+}
+
+/// Fused maxpool over sign-bit shares: returns `[C, OH*OW]` arithmetic
+/// shares of the pooled bits, plus the output spatial dims.
+pub fn maxpool_bits(ctx: &Ctx, bits: &Share, c: usize, h: usize, w: usize,
+                    k: usize, stride: usize) -> (Share, (usize, usize)) {
+    let oh = (h - k) / stride + 1;
+    let ow = (w - k) / stride + 1;
+    let summed = window_sum_minus_one(ctx, bits, c, h, w, k, stride);
+    let flat = summed.reshape(&[c * oh * ow]);
+    let (pooled, _) = sign(ctx, &flat);
+    (pooled.reshape(&[c, oh * ow]), (oh, ow))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocols::testsupport::run3;
+    use crate::ring::Tensor;
+    use crate::rss::{deal, reconstruct};
+    use crate::testutil::Rng;
+
+    fn plain_pool(bits: &[i32], c: usize, h: usize, w: usize) -> Vec<i32> {
+        let (oh, ow) = (h / 2, w / 2);
+        let mut out = vec![0; c * oh * ow];
+        for ci in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut m = 0;
+                    for ky in 0..2 {
+                        for kx in 0..2 {
+                            m = m.max(bits[ci * h * w + (2 * oy + ky) * w
+                                           + 2 * ox + kx]);
+                        }
+                    }
+                    out[ci * oh * ow + oy * ow + ox] = m;
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn fused_pool_equals_plaintext_or() {
+        let results = run3(|ctx| {
+            let (c, h, w) = (3, 6, 6);
+            let mut rng = Rng::new(12);
+            let bits: Vec<i32> = (0..c * h * w).map(|_| rng.bit() as i32)
+                .collect();
+            let x = Tensor::from_vec(&[c, h * w], bits.clone());
+            let shares = deal(&x, &mut rng);
+            let (pooled, dims) =
+                maxpool_bits(ctx, &shares[ctx.id()], c, h, w, 2, 2);
+            (pooled, dims, bits)
+        });
+        let (_, dims, bits) = results[0].0.clone();
+        assert_eq!(dims, (3, 3));
+        let shares: [Share; 3] =
+            std::array::from_fn(|i| results[i].0 .0.clone());
+        let got = reconstruct(&shares);
+        assert_eq!(got.data, plain_pool(&bits, 3, 6, 6));
+    }
+
+    #[test]
+    fn all_zero_window_pools_to_zero() {
+        let results = run3(|ctx| {
+            let mut rng = Rng::new(1);
+            let x = Tensor::from_vec(&[1, 16], vec![0; 16]);
+            let shares = deal(&x, &mut rng);
+            maxpool_bits(ctx, &shares[ctx.id()], 1, 4, 4, 2, 2).0
+        });
+        let shares: [Share; 3] = std::array::from_fn(|i| results[i].0.clone());
+        assert_eq!(reconstruct(&shares).data, vec![0; 4]);
+    }
+}

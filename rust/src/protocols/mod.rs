@@ -1,0 +1,110 @@
+//! CBNN's secure-inference protocol suite (paper Sections 3.3-3.6).
+//!
+//! Every protocol is written against a `Ctx` bundling the party's
+//! transport endpoint and correlated-randomness seeds.  All parties call
+//! the same function in lock-step with their own shares; tests reconstruct
+//! the outputs and compare to the plaintext oracle.
+//!
+//! Round budgets (asserted in tests, cf. DESIGN.md):
+//!
+//! | protocol               | rounds (critical path) |
+//! |------------------------|------------------------|
+//! | linear + reshare       | 1                      |
+//! | 3-OT                   | 2                      |
+//! | B2A (via 3-OT)         | 3                      |
+//! | MSB extraction         | 6 (B2A ∥ r-share, 2 mul, reveal) |
+//! | Sign (MSB + B2A)       | MSB + 3                |
+//! | ReLU (Alg 5, two OTs)  | MSB + 4                |
+//! | truncation             | 2                      |
+//! | maxpool (Sign-fused)   | 0 extra linear rounds (reuses Sign) |
+
+pub mod b2a;
+pub mod linear;
+pub mod maxpool;
+pub mod msb;
+pub mod preproc;
+pub mod relu;
+pub mod sign;
+pub mod trunc;
+
+use crate::prf::PartySeeds;
+use crate::transport::Comm;
+
+/// Security / correctness knobs for the masked protocols.
+#[derive(Clone, Copy, Debug)]
+pub struct ProtoConfig {
+    /// Guaranteed bound on |x| for MSB inputs: |x| < 2^bound_bits.
+    /// The AOT exporter enforces this on every linear-layer output
+    /// (export.py `_SAFE_BITS`).
+    pub bound_bits: u32,
+    /// Multiplicative-mask width for MSB: r is drawn from [1, 2^mask_bits].
+    /// Constraint: bound_bits + 1 + mask_bits <= 31 (no overflow in u).
+    pub mask_bits: u32,
+    /// Statistical-mask headroom for truncation.
+    pub trunc_sigma: u32,
+}
+
+impl Default for ProtoConfig {
+    fn default() -> Self {
+        ProtoConfig { bound_bits: 24, mask_bits: 5, trunc_sigma: 6 }
+    }
+}
+
+impl ProtoConfig {
+    pub fn validate(&self) {
+        assert!(self.bound_bits + 1 + self.mask_bits <= 31,
+                "MSB mask would overflow the ring");
+    }
+}
+
+/// Per-party protocol context.
+pub struct Ctx<'a> {
+    pub comm: &'a Comm,
+    pub seeds: &'a PartySeeds,
+    pub cfg: ProtoConfig,
+}
+
+impl<'a> Ctx<'a> {
+    pub fn new(comm: &'a Comm, seeds: &'a PartySeeds) -> Self {
+        let cfg = ProtoConfig::default();
+        cfg.validate();
+        Ctx { comm, seeds, cfg }
+    }
+
+    pub fn with_cfg(comm: &'a Comm, seeds: &'a PartySeeds,
+                    cfg: ProtoConfig) -> Self {
+        cfg.validate();
+        Ctx { comm, seeds, cfg }
+    }
+
+    pub fn id(&self) -> usize {
+        self.comm.id
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testsupport {
+    //! Shared three-party test harness for protocol tests.
+    use super::*;
+    use crate::transport::{local_trio, NetConfig, Stats};
+    use std::thread;
+
+    /// Run the same closure on three party threads and collect results in
+    /// party order.
+    pub fn run3<F, R>(f: F) -> Vec<(R, Stats)>
+    where
+        F: Fn(&Ctx) -> R + Send + Sync + Copy + 'static,
+        R: Send + 'static,
+    {
+        let comms = local_trio(NetConfig::zero());
+        let handles: Vec<_> = comms.into_iter().map(|c| {
+            thread::spawn(move || {
+                let seeds = PartySeeds::setup(4242, c.id);
+                let ctx = Ctx::new(&c, &seeds);
+                let r = f(&ctx);
+                (r, c.stats())
+            })
+        }).collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+}

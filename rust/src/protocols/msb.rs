@@ -1,0 +1,153 @@
+//! MSB extraction (Algorithm 3) -- constant rounds, no bit decomposition.
+//!
+//! The printed protocol masks x with a random sign flip beta and a random
+//! positive multiplier r, reveals u = (-1)^beta * x * r, and unmasks
+//! MSB(u) with beta.  As printed (r in Z_2^{l-1}) the product wraps and
+//! correctness breaks; we implement the corrected bounded-input variant:
+//!
+//! * inputs are guaranteed |x| < 2^bound_bits by the AOT exporter;
+//! * x' = 2x + 1 removes the x = 0 tie (MSB(2x+1) = MSB(x), never zero);
+//! * r is drawn privately by the model owner P1 from [1, 2^mask_bits] and
+//!   secret-shared, so |x' * r| < 2^31 never wraps;
+//! * u = x' * r * (1 - 2*beta) is revealed; MSB(x) = MSB(u) XOR beta.
+//!
+//! Leakage note (documented, inherent to the paper's design): the revealed
+//! u exposes |x| up to the multiplicative smudging of r (mask_bits of
+//! uncertainty); beta perfectly hides the sign.  See DESIGN.md.
+//!
+//! Rounds: B2A(beta) 3 + r-share 1 + two multiplications 2 + reveal 1 = 7,
+//! constant in l (vs log l + 2 for bit-decomposition adders).
+
+use crate::prf::{domain, PrfStream};
+use crate::ring::{Elem, Tensor};
+use crate::rss::{self, BitShare, Share};
+
+use super::{b2a::b2a, Ctx};
+
+/// MSB extraction output: the bit shares, plus *free* arithmetic shares
+/// of Sign(x) = 1 ^ MSB(x).
+///
+/// The protocol reveals beta' = MSB(u) publicly and already holds
+/// [beta]^A from the B2A step; since MSB(x) = beta' ^ beta and beta' is
+/// public, Sign(x) = (1 ^ beta') ^ beta = c ^ beta = (1-2c)*beta + c is a
+/// local affine map of [beta]^A.  Algorithm 4 therefore costs zero extra
+/// rounds on top of Algorithm 3.
+pub struct MsbOut {
+    pub bits: BitShare,
+    /// [Sign(x)]^A = [1 ^ MSB(x)]^A, in {0,1}.
+    pub sign_a: Share,
+}
+
+/// Extract [MSB(x)]^B from [x]^A.  All parties call in lock-step.
+pub fn msb_extract(ctx: &Ctx, x: &Share) -> BitShare {
+    msb_extract_full(ctx, x).bits
+}
+
+/// Full MSB extraction returning both share forms (see MsbOut).
+pub fn msb_extract_full(ctx: &Ctx, x: &Share) -> MsbOut {
+    let n = x.len();
+    let me = ctx.id();
+
+    // 1. shared random bit vector [beta]^B (2-out-of-3 randomness)
+    let cnt = ctx.seeds.next_cnt();
+    let (ba, bb) = ctx.seeds.rand_bits2(cnt, n);
+    let beta = BitShare { a: ba, b: bb };
+
+    // 2. [beta]^A via the 3-OT conversion
+    let beta_a = b2a(ctx, &beta);
+
+    // 3. model owner P1 samples r in [1, 2^mask_bits] and shares it
+    let rcnt = ctx.seeds.next_cnt();
+    let r_plain = if me == 1 {
+        let mut s = PrfStream::new(&ctx.seeds.private, rcnt, domain::SHARE);
+        let max = 1i64 << ctx.cfg.mask_bits;
+        Some(Tensor::from_vec(&[n], (0..n).map(|_| {
+            ((s.next_u32() as i64 & (max - 1)) + 1) as Elem
+        }).collect()))
+    } else {
+        None
+    };
+    let r = rss::share_input(ctx.comm, ctx.seeds, 1, r_plain.as_ref(), &[n]);
+
+    // 4. x' = 2x + 1 (tie-break), s = 1 - 2*beta (sign flip), all local
+    let xp = x.scale(2).add_const(me, 1).reshape(&[n]);
+    let s = beta_a.scale(-2).add_const(me, 1);
+
+    // 5. u = x' * r * s  (two multiplication rounds), then reveal
+    let m = rss::mul(ctx.comm, ctx.seeds, &xp, &r);
+    let u_sh = rss::mul(ctx.comm, ctx.seeds, &m, &s);
+    let u = rss::reveal(ctx.comm, &u_sh);
+
+    // 6. MSB(x) = MSB(u) XOR beta  (public XOR folded into the x_0 slot)
+    let beta_pub: Vec<u8> = u.data.iter().map(|&v| crate::ring::msb(v))
+        .collect();
+    let bits = beta.xor_const(me, &beta_pub);
+    // 7. free Sign shares: c = 1 ^ beta' public; sign = (1-2c)*beta + c
+    let mut sign_a = Share {
+        a: beta_a.a.clone(),
+        b: beta_a.b.clone(),
+    };
+    let apply = |t: &mut crate::ring::Tensor, slot_owner: bool| {
+        for (i, v) in t.data.iter_mut().enumerate() {
+            let c = Elem::from(1 ^ beta_pub[i]);
+            *v = (1 - 2 * c).wrapping_mul(*v);
+            if slot_owner {
+                *v = v.wrapping_add(c);
+            }
+        }
+    };
+    // constant c sits in the x_0 component: P0's a, P2's b
+    apply(&mut sign_a.a, me == 0);
+    apply(&mut sign_a.b, me == 2);
+    MsbOut { bits, sign_a }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocols::testsupport::run3;
+    use crate::ring;
+    use crate::rss::{deal, reconstruct_bits};
+    use crate::testutil::Rng;
+
+    fn check_msb(values: &'static [i32], seed: u64) {
+        let results = run3(move |ctx| {
+            let mut rng = Rng::new(seed);
+            let x = Tensor::from_vec(&[values.len()], values.to_vec());
+            let shares = deal(&x, &mut rng);
+            (msb_extract(ctx, &shares[ctx.id()]), values.to_vec())
+        });
+        let want: Vec<u8> = results[0].0 .1.iter().map(|&v| ring::msb(v))
+            .collect();
+        let shares: [BitShare; 3] =
+            std::array::from_fn(|i| results[i].0 .0.clone());
+        assert_eq!(reconstruct_bits(&shares), want);
+    }
+
+    #[test]
+    fn msb_exact_on_bounded_inputs() {
+        let mut rng = Rng::new(3);
+        let vals: Vec<i32> = (0..200).map(|_| rng.small((1 << 24) - 1))
+            .collect();
+        check_msb(Box::leak(vals.into_boxed_slice()), 17);
+    }
+
+    #[test]
+    fn msb_edge_cases() {
+        // zero maps to MSB 0 (sign_bit 1) thanks to the 2x+1 tie-break
+        check_msb(&[0, 1, -1, (1 << 24) - 1, -(1 << 24) + 1, 2, -2], 5);
+    }
+
+    #[test]
+    fn msb_round_budget_constant() {
+        let results = run3(|ctx| {
+            let mut rng = Rng::new(1);
+            let x = rng.tensor_small(&[16], 1 << 20);
+            let shares = deal(&x, &mut rng);
+            let _ = msb_extract(ctx, &shares[ctx.id()]);
+        });
+        for (_, st) in &results {
+            assert!(st.rounds <= 8, "rounds = {}", st.rounds);
+        }
+    }
+}

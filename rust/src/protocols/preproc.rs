@@ -1,0 +1,226 @@
+//! Input-independent preprocessing for MSB extraction (the perf-pass
+//! online/offline split, EXPERIMENTS.md §Perf).
+//!
+//! Algorithm 3 consumes, per element: a shared random bit [beta]^B, its
+//! arithmetic conversion [beta]^A, and the masked multiplier
+//! [rs] = [r * (1 - 2*beta)] with r a small positive secret.  None of
+//! these depend on x, so a session mints them ahead of time (a flat
+//! per-element reservoir, so any batch size can draw) and the *online*
+//! MSB collapses to
+//!
+//! ```text
+//!     u = mul(2x+1, rs)   -- 1 round
+//!     reveal u            -- 1 round
+//! ```
+//!
+//! i.e. 2 online rounds instead of 7.  Same offline/online trick as
+//! Beaver triples; the serving coordinator tops the reservoir up between
+//! requests, and the ablation bench measures both paths.
+
+use std::cell::RefCell;
+
+use crate::prf::{domain, PrfStream};
+use crate::ring::{Elem, Tensor};
+use crate::rss::{self, BitShare, Share};
+
+use super::{b2a::b2a, Ctx};
+
+/// A slice of correlated material for one MSB invocation.
+pub struct MsbTuple {
+    pub beta: BitShare,
+    pub beta_a: Share,
+    /// [r * (1 - 2*beta)]
+    pub rs: Share,
+}
+
+#[derive(Default)]
+struct Reservoir {
+    beta_a_bits: Vec<u8>,
+    beta_b_bits: Vec<u8>,
+    beta_a: (Vec<Elem>, Vec<Elem>),
+    rs: (Vec<Elem>, Vec<Elem>),
+}
+
+/// Flat per-element reservoir of MSB correlated material.  All parties
+/// generate and consume identical element counts in lock-step (the
+/// engine derives counts from the public model program).
+#[derive(Default)]
+pub struct MsbPool {
+    r: RefCell<Reservoir>,
+}
+
+impl MsbPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Mint `n` more elements (runs the input-independent prefix of
+    /// Algorithm 3: B2A of beta, r-share, one multiplication -- ~5
+    /// rounds, all off the request path).
+    pub fn generate(&self, ctx: &Ctx, n: usize) {
+        let me = ctx.id();
+        let cnt = ctx.seeds.next_cnt();
+        let (ba, bb) = ctx.seeds.rand_bits2(cnt, n);
+        let beta = BitShare { a: ba, b: bb };
+        let beta_a = b2a(ctx, &beta);
+
+        let rcnt = ctx.seeds.next_cnt();
+        let r_plain = if me == 1 {
+            let mut s = PrfStream::new(&ctx.seeds.private, rcnt,
+                                       domain::SHARE);
+            let max = 1i64 << ctx.cfg.mask_bits;
+            Some(Tensor::from_vec(&[n], (0..n).map(|_| {
+                ((s.next_u32() as i64 & (max - 1)) + 1) as Elem
+            }).collect()))
+        } else {
+            None
+        };
+        let r = rss::share_input(ctx.comm, ctx.seeds, 1, r_plain.as_ref(),
+                                 &[n]);
+        let s = beta_a.scale(-2).add_const(me, 1);
+        let rs = rss::mul(ctx.comm, ctx.seeds, &r, &s);
+
+        let mut res = self.r.borrow_mut();
+        res.beta_a_bits.extend_from_slice(&beta.a);
+        res.beta_b_bits.extend_from_slice(&beta.b);
+        res.beta_a.0.extend_from_slice(&beta_a.a.data);
+        res.beta_a.1.extend_from_slice(&beta_a.b.data);
+        res.rs.0.extend_from_slice(&rs.a.data);
+        res.rs.1.extend_from_slice(&rs.b.data);
+    }
+
+    /// Draw `n` elements; panics if the reservoir is short (protocol
+    /// desync / undersized preprocessing -- a bug, not a runtime state).
+    pub fn take(&self, n: usize) -> MsbTuple {
+        let mut res = self.r.borrow_mut();
+        assert!(res.beta_a_bits.len() >= n,
+                "MSB pool exhausted: need {n}, have {}",
+                res.beta_a_bits.len());
+        let split = |v: &mut Vec<Elem>| -> Vec<Elem> {
+            let rest = v.split_off(n);
+            std::mem::replace(v, rest)
+        };
+        let splitb = |v: &mut Vec<u8>| -> Vec<u8> {
+            let rest = v.split_off(n);
+            std::mem::replace(v, rest)
+        };
+        MsbTuple {
+            beta: BitShare {
+                a: splitb(&mut res.beta_a_bits),
+                b: splitb(&mut res.beta_b_bits),
+            },
+            beta_a: Share {
+                a: Tensor::from_vec(&[n], split(&mut res.beta_a.0)),
+                b: Tensor::from_vec(&[n], split(&mut res.beta_a.1)),
+            },
+            rs: Share {
+                a: Tensor::from_vec(&[n], split(&mut res.rs.0)),
+                b: Tensor::from_vec(&[n], split(&mut res.rs.1)),
+            },
+        }
+    }
+
+    pub fn available(&self) -> usize {
+        self.r.borrow().beta_a_bits.len()
+    }
+}
+
+/// Online MSB with preprocessed material: 2 rounds.
+pub fn msb_online(ctx: &Ctx, x: &Share, tup: MsbTuple)
+                  -> super::msb::MsbOut {
+    let me = ctx.id();
+    let n = x.len();
+    let xp = x.scale(2).add_const(me, 1).reshape(&[n]);
+    let u_sh = rss::mul(ctx.comm, ctx.seeds, &xp, &tup.rs);
+    let u = rss::reveal(ctx.comm, &u_sh);
+    let beta_pub: Vec<u8> = u.data.iter().map(|&v| crate::ring::msb(v))
+        .collect();
+    let bits = tup.beta.xor_const(me, &beta_pub);
+    let mut sign_a = tup.beta_a;
+    let apply = |t: &mut Tensor, slot_owner: bool| {
+        for (i, v) in t.data.iter_mut().enumerate() {
+            let c = Elem::from(1 ^ beta_pub[i]);
+            *v = (1 - 2 * c).wrapping_mul(*v);
+            if slot_owner {
+                *v = v.wrapping_add(c);
+            }
+        }
+    };
+    apply(&mut sign_a.a, me == 0);
+    apply(&mut sign_a.b, me == 2);
+    super::msb::MsbOut { bits, sign_a }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocols::testsupport::run3;
+    use crate::ring;
+    use crate::rss::{deal, reconstruct, reconstruct_bits};
+    use crate::testutil::Rng;
+
+    #[test]
+    fn online_msb_matches_plaintext() {
+        let results = run3(|ctx| {
+            let mut rng = Rng::new(19);
+            let vals: Vec<i32> = (0..120).map(|_| rng.small(1 << 22))
+                .collect();
+            let x = Tensor::from_vec(&[120], vals.clone());
+            let xs = deal(&x, &mut rng);
+            let pool = MsbPool::new();
+            pool.generate(ctx, 200);
+            let out = msb_online(ctx, &xs[ctx.id()], pool.take(120));
+            assert_eq!(pool.available(), 80);
+            (out.bits, out.sign_a, vals)
+        });
+        let vals = results[0].0 .2.clone();
+        let bits: [BitShare; 3] =
+            std::array::from_fn(|i| results[i].0 .0.clone());
+        let arith: [Share; 3] =
+            std::array::from_fn(|i| results[i].0 .1.clone());
+        let got_bits = reconstruct_bits(&bits);
+        let got_arith = reconstruct(&arith);
+        for (i, &v) in vals.iter().enumerate() {
+            assert_eq!(got_bits[i], ring::msb(v), "msb of {v}");
+            assert_eq!(got_arith.data[i], i32::from(ring::sign_bit(v)),
+                       "sign of {v}");
+        }
+    }
+
+    #[test]
+    fn online_phase_is_two_rounds() {
+        let results = run3(|ctx| {
+            let mut rng = Rng::new(2);
+            let x = rng.tensor_small(&[32], 1 << 20);
+            let xs = deal(&x, &mut rng);
+            let pool = MsbPool::new();
+            pool.generate(ctx, 32);
+            ctx.comm.reset_stats();
+            let _ = msb_online(ctx, &xs[ctx.id()], pool.take(32));
+        });
+        for (_, st) in &results {
+            assert_eq!(st.rounds, 2, "online rounds = {}", st.rounds);
+        }
+    }
+
+    #[test]
+    fn multiple_generates_accumulate_fifo() {
+        let results = run3(|ctx| {
+            let pool = MsbPool::new();
+            pool.generate(ctx, 10);
+            pool.generate(ctx, 5);
+            assert_eq!(pool.available(), 15);
+            let t = pool.take(12);
+            assert_eq!(t.beta.len(), 12);
+            assert_eq!(pool.available(), 3);
+        });
+        assert_eq!(results.len(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "exhausted")]
+    fn empty_pool_panics() {
+        let pool = MsbPool::new();
+        let _ = pool.take(4);
+    }
+}

@@ -1,0 +1,222 @@
+//! Secure ReLU (Algorithm 5): [ReLU(x)]^A = [(1 XOR MSB(x)) * x]^A.
+//!
+//! Two implementations with identical outputs:
+//!
+//! * `relu_ot` -- the paper's Algorithm 5: two role-switched 3-party OTs
+//!   select (1 XOR MSB) * (x_1 + x_2) and (1 XOR MSB) * x_0 under additive
+//!   masks; the masked selections and PRF masks form RSS shares directly.
+//! * `relu_mul` -- ablation arm: B2A the NOT-MSB bit then one RSS
+//!   multiplication.  One round fewer on some paths, but a full extra
+//!   ring-element conversion; the benches compare the two (exp A1).
+
+use crate::ot;
+use crate::prf::{domain, PrfStream};
+use crate::ring::{Elem, Tensor};
+use crate::rss::{self, BitShare, Share};
+use crate::transport::Dir;
+
+use super::{b2a::b2a, msb::msb_extract, sign::sign_bits, Ctx};
+
+/// Algorithm 5.  `x` arithmetic shares, `msb` the matching MSB bit shares.
+pub fn relu_ot(ctx: &Ctx, x: &Share, msb: &BitShare) -> Share {
+    let n = x.len();
+    let me = ctx.id();
+    let shape = [n];
+
+    // ---- OT 1: sender P1 supplies (1^i^msb_1^msb_2)*(x_1+x_2) ---------
+    let cnt1 = ctx.seeds.next_cnt();
+    let roles1 = ot::Roles::new(1, 0, 2);
+    // ---- OT 2: roles switched; sender P0 supplies (..)*x_0 ------------
+    let cnt2 = ctx.seeds.next_cnt();
+    let roles2 = ot::Roles::new(0, 2, 1);
+
+    match me {
+        1 => {
+            // alpha_1 = PRF(k_1) (free with P0), alpha_2 private -> P2
+            let mut s1 = PrfStream::new(&ctx.seeds.mine, cnt1, domain::SHARE);
+            let a1: Vec<Elem> = (0..n).map(|_| s1.next_elem()).collect();
+            let mut sp = PrfStream::new(&ctx.seeds.private, cnt1,
+                                        domain::SHARE);
+            let a2: Vec<Elem> = (0..n).map(|_| sp.next_elem()).collect();
+            ctx.comm.send_elems(Dir::Next, &a2);
+            let (m0, m1): (Vec<Elem>, Vec<Elem>) = (0..n).map(|i| {
+                let x12 = x.a.data[i].wrapping_add(x.b.data[i]);
+                let base = 1 ^ msb.a[i] ^ msb.b[i]; // 1^msb_1^msb_2
+                let mask = a1[i].wrapping_add(a2[i]);
+                let v0 = (Elem::from(base)).wrapping_mul(x12)
+                    .wrapping_sub(mask);
+                let v1 = (Elem::from(base ^ 1)).wrapping_mul(x12)
+                    .wrapping_sub(mask);
+                (v0, v1)
+            }).unzip();
+            ot::run(ctx.comm, ctx.seeds, roles1, n,
+                    ot::Input::Sender { m0: &m0, m1: &m1 });
+            // A-shares for P1: (A_1, A_2) = (alpha_1, alpha_2)
+            let a_share = Share {
+                a: Tensor::from_vec(&shape, a1),
+                b: Tensor::from_vec(&shape, a2),
+            };
+            // OT 2: P1 is helper with choice bit msb_2 (= its b component)
+            ot::run(ctx.comm, ctx.seeds, roles2, n,
+                    ot::Input::Helper { c: &msb.b });
+            // B-shares for P1: (B_1, B_2) = (gamma_b, forwarded from P2)
+            let mut sg = PrfStream::new(&ctx.seeds.mine, cnt2, domain::SHARE);
+            let gb: Vec<Elem> = (0..n).map(|_| sg.next_elem()).collect();
+            let b2v = ctx.comm.recv_elems(Dir::Next); // from P2
+            ctx.comm.round();
+            let b_share = Share {
+                a: Tensor::from_vec(&shape, gb),
+                b: Tensor::from_vec(&shape, b2v),
+            };
+            a_share.add(&b_share)
+        }
+        0 => {
+            // OT 1: receiver with choice bit msb_0 (= a component)
+            let mut s1 = PrfStream::new(&ctx.seeds.next, cnt1, domain::SHARE);
+            let a1: Vec<Elem> = (0..n).map(|_| s1.next_elem()).collect();
+            let a0 = ot::run(ctx.comm, ctx.seeds, roles1, n,
+                             ot::Input::Receiver { c: &msb.a })
+                .expect("ot1 output");
+            ctx.comm.send_elems(Dir::Prev, &a0); // replicate A_0 to P2
+            ctx.comm.round();
+            let a_share = Share {
+                a: Tensor::from_vec(&shape, a0),
+                b: Tensor::from_vec(&shape, a1),
+            };
+            // OT 2: P0 is sender; gamma_a = PRF(k_0) free with P2,
+            // gamma_b = PRF(k_1) free with P1.
+            let mut sga = PrfStream::new(&ctx.seeds.mine, cnt2, domain::SHARE);
+            let ga: Vec<Elem> = (0..n).map(|_| sga.next_elem()).collect();
+            let mut sgb = PrfStream::new(&ctx.seeds.next, cnt2, domain::SHARE);
+            let gb: Vec<Elem> = (0..n).map(|_| sgb.next_elem()).collect();
+            let (m0, m1): (Vec<Elem>, Vec<Elem>) = (0..n).map(|i| {
+                let x0 = x.a.data[i];
+                let base = 1 ^ msb.a[i] ^ msb.b[i]; // 1^msb_0^msb_1
+                let mask = ga[i].wrapping_add(gb[i]);
+                ((Elem::from(base)).wrapping_mul(x0).wrapping_sub(mask),
+                 (Elem::from(base ^ 1)).wrapping_mul(x0).wrapping_sub(mask))
+            }).unzip();
+            ot::run(ctx.comm, ctx.seeds, roles2, n,
+                    ot::Input::Sender { m0: &m0, m1: &m1 });
+            let b_share = Share {
+                a: Tensor::from_vec(&shape, ga),
+                b: Tensor::from_vec(&shape, gb),
+            };
+            a_share.add(&b_share)
+        }
+        2 => {
+            let a2 = ctx.comm.recv_elems(Dir::Prev); // alpha_2 from P1
+            // OT 1: helper with choice msb_0 (= b component on P2)
+            ot::run(ctx.comm, ctx.seeds, roles1, n,
+                    ot::Input::Helper { c: &msb.b });
+            let a0 = ctx.comm.recv_elems(Dir::Next); // A_0 from P0
+            ctx.comm.round();
+            let a_share = Share {
+                a: Tensor::from_vec(&shape, a2),
+                b: Tensor::from_vec(&shape, a0),
+            };
+            // OT 2: receiver with choice msb_2 (= a component on P2)
+            let b2v = ot::run(ctx.comm, ctx.seeds, roles2, n,
+                              ot::Input::Receiver { c: &msb.a })
+                .expect("ot2 output");
+            ctx.comm.send_elems(Dir::Prev, &b2v); // replicate B_2 to P1
+            ctx.comm.round();
+            let mut sga = PrfStream::new(&ctx.seeds.next, cnt2, domain::SHARE);
+            let ga: Vec<Elem> = (0..n).map(|_| sga.next_elem()).collect();
+            let b_share = Share {
+                a: Tensor::from_vec(&shape, b2v),
+                b: Tensor::from_vec(&shape, ga),
+            };
+            a_share.add(&b_share)
+        }
+        _ => unreachable!(),
+    }
+}
+
+/// Ablation arm: ReLU as B2A(NOT msb) then one RSS multiplication.
+pub fn relu_mul(ctx: &Ctx, x: &Share, msb: &BitShare) -> Share {
+    let bits = sign_bits(ctx, msb);
+    let b = b2a(ctx, &bits);
+    let flat = x.clone().reshape(&[x.len()]);
+    rss::mul(ctx.comm, ctx.seeds, &b, &flat)
+}
+
+/// Full ReLU from arithmetic shares (MSB + Algorithm 5).
+pub fn relu(ctx: &Ctx, x: &Share) -> Share {
+    let flat = x.clone().reshape(&[x.len()]);
+    let msb = msb_extract(ctx, &flat);
+    relu_ot(ctx, &flat, &msb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocols::testsupport::run3;
+    use crate::rss::{deal, deal_bits, reconstruct};
+    use crate::testutil::Rng;
+
+    fn plain_relu(v: i32) -> i32 {
+        if v >= 0 { v } else { 0 }
+    }
+
+    #[test]
+    fn relu_ot_matches_plaintext() {
+        let results = run3(|ctx| {
+            let mut rng = Rng::new(31);
+            let vals: Vec<i32> = (0..80).map(|_| rng.small(1 << 20)).collect();
+            let msb_bits: Vec<u8> = vals.iter().map(|&v| crate::ring::msb(v))
+                .collect();
+            let x = Tensor::from_vec(&[80], vals.clone());
+            let xs = deal(&x, &mut rng);
+            let ms = deal_bits(&msb_bits, &mut rng);
+            (relu_ot(ctx, &xs[ctx.id()], &ms[ctx.id()]), vals)
+        });
+        let vals = results[0].0 .1.clone();
+        let shares: [Share; 3] =
+            std::array::from_fn(|i| results[i].0 .0.clone());
+        let got = reconstruct(&shares);
+        for (g, v) in got.data.iter().zip(&vals) {
+            assert_eq!(*g, plain_relu(*v));
+        }
+        // replication consistency of the assembled shares
+        for i in 0..3 {
+            assert_eq!(shares[i].b, shares[(i + 1) % 3].a);
+        }
+    }
+
+    #[test]
+    fn relu_mul_equals_relu_ot() {
+        let results = run3(|ctx| {
+            let mut rng = Rng::new(5);
+            let vals: Vec<i32> = (0..40).map(|_| rng.small(1 << 18)).collect();
+            let msb_bits: Vec<u8> = vals.iter().map(|&v| crate::ring::msb(v))
+                .collect();
+            let x = Tensor::from_vec(&[40], vals.clone());
+            let xs = deal(&x, &mut rng);
+            let ms = deal_bits(&msb_bits, &mut rng);
+            let a = relu_ot(ctx, &xs[ctx.id()], &ms[ctx.id()]);
+            let b = relu_mul(ctx, &xs[ctx.id()], &ms[ctx.id()]);
+            (a, b)
+        });
+        let ots: [Share; 3] = std::array::from_fn(|i| results[i].0 .0.clone());
+        let muls: [Share; 3] = std::array::from_fn(|i| results[i].0 .1.clone());
+        assert_eq!(reconstruct(&ots), reconstruct(&muls));
+    }
+
+    #[test]
+    fn full_relu_end_to_end() {
+        let results = run3(|ctx| {
+            let mut rng = Rng::new(77);
+            let vals = vec![5, -5, 0, 1 << 20, -(1 << 20), 1, -1, 123456];
+            let x = Tensor::from_vec(&[8], vals.clone());
+            let xs = deal(&x, &mut rng);
+            (relu(ctx, &xs[ctx.id()]), vals)
+        });
+        let vals = results[0].0 .1.clone();
+        let shares: [Share; 3] =
+            std::array::from_fn(|i| results[i].0 .0.clone());
+        let got = reconstruct(&shares);
+        let want: Vec<i32> = vals.iter().map(|&v| plain_relu(v)).collect();
+        assert_eq!(got.data, want);
+    }
+}

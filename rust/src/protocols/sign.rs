@@ -1,0 +1,67 @@
+//! Secure Sign (Algorithm 4): Sign(x) = 1 XOR MSB(x) in {0,1}.
+//!
+//! Produces the activation bit both as binary shares (free local NOT on
+//! the MSB shares) and, via the B2A conversion, as arithmetic shares the
+//! next linear layer / maxpool consumes.
+
+use crate::rss::{BitShare, Share};
+
+use super::{msb::msb_extract_full, Ctx};
+
+/// [Sign(x)]^B = NOT [MSB(x)]^B -- local once the MSB shares exist.
+pub fn sign_bits(ctx: &Ctx, msb: &BitShare) -> BitShare {
+    let ones = vec![1u8; msb.len()];
+    msb.xor_const(ctx.id(), &ones)
+}
+
+/// Full secure Sign from arithmetic input shares.  The arithmetic output
+/// shares come for free from the MSB protocol's revealed mask (see
+/// msb::MsbOut): Algorithm 4 adds zero rounds to Algorithm 3.
+/// Returns (arithmetic bit shares, msb bit shares); the caller reuses the
+/// MSB shares for ReLU-style selections.
+pub fn sign(ctx: &Ctx, x: &Share) -> (Share, BitShare) {
+    let out = msb_extract_full(ctx, x);
+    (out.sign_a, out.bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocols::testsupport::run3;
+    use crate::ring::{self, Tensor};
+    use crate::rss::{deal, reconstruct};
+    use crate::testutil::Rng;
+
+    #[test]
+    fn sign_matches_plaintext() {
+        let results = run3(|ctx| {
+            let mut rng = Rng::new(23);
+            let vals: Vec<i32> = (0..100).map(|_| rng.small(1 << 20))
+                .collect();
+            let x = Tensor::from_vec(&[100], vals.clone());
+            let shares = deal(&x, &mut rng);
+            let (arith, _) = sign(ctx, &shares[ctx.id()]);
+            (arith, vals)
+        });
+        let vals = results[0].0 .1.clone();
+        let shares: [Share; 3] =
+            std::array::from_fn(|i| results[i].0 .0.clone());
+        let got = reconstruct(&shares);
+        for i in 0..vals.len() {
+            assert_eq!(got.data[i], ring::sign_bit(vals[i]) as i32,
+                       "x = {}", vals[i]);
+        }
+    }
+
+    #[test]
+    fn sign_of_zero_is_one() {
+        let results = run3(|ctx| {
+            let mut rng = Rng::new(2);
+            let x = Tensor::from_vec(&[4], vec![0, 0, 5, -5]);
+            let shares = deal(&x, &mut rng);
+            sign(ctx, &shares[ctx.id()]).0
+        });
+        let shares: [Share; 3] = std::array::from_fn(|i| results[i].0.clone());
+        assert_eq!(reconstruct(&shares).data, vec![1, 1, 1, 0]);
+    }
+}

@@ -1,0 +1,157 @@
+//! Fixed-point truncation (the paper adopts a two-round protocol; ours is
+//! the helper-assisted masked reveal, also two rounds).
+//!
+//! Preconditions (enforced by the AOT exporter): |x| < 2^bound_bits.
+//!
+//! 1. P0 and P1 jointly sample r from PRF(k_1), uniform in
+//!    [0, 2^31 - 2^{bound+1}), and add it (plus the positivity shift
+//!    2^bound) into the x_1 component -- local.
+//! 2. P1 reveals the masked x_1 component to the helper P2 (round 1);
+//!    P2 reconstructs y = x + 2^bound + r in [0, 2^31): no wrap.
+//! 3. P2 truncates t = y >> f and secret-shares it (round 2).
+//! 4. All parties subtract the public-to-(P0,P1) correction
+//!    (r >> f) + 2^{bound-f}, folded into the x_1 component -- local.
+//!
+//! Result error is the usual off-by-one LSB (floor borrow).  P2 sees
+//! y = x + shift + r: since r's range exceeds the shifted x's range by
+//! 2^{31 - bound - 1}, the statistical leakage is ~(bound+1) - 31 bits
+//! (sigma ~ 6 at the default bound of 24).  Documented in DESIGN.md.
+
+use crate::prf::{domain, PrfStream};
+use crate::ring::{Elem, Tensor};
+use crate::rss::{self, Share};
+use crate::transport::Dir;
+
+use super::Ctx;
+
+/// Truncate shared values by `f` fractional bits.
+pub fn trunc(ctx: &Ctx, x: &Share, f: u32) -> Share {
+    let n = x.len();
+    let me = ctx.id();
+    let bound = ctx.cfg.bound_bits;
+    let shift: Elem = 1 << bound;
+    let r_range: i64 = (1i64 << 31) - (1i64 << (bound + 1));
+    let cnt = ctx.seeds.next_cnt();
+
+    // r known to P0 (seeds.next = k_1) and P1 (seeds.mine = k_1)
+    let r: Option<Vec<Elem>> = match me {
+        0 => Some(stream_range(&ctx.seeds.next, cnt, n, r_range)),
+        1 => Some(stream_range(&ctx.seeds.mine, cnt, n, r_range)),
+        _ => None,
+    };
+
+    match me {
+        1 => {
+            let r = r.unwrap();
+            // masked x_1 component: x_1 + shift + r, revealed to P2
+            let masked: Vec<Elem> = (0..n).map(|i| {
+                x.a.data[i].wrapping_add(shift).wrapping_add(r[i])
+            }).collect();
+            ctx.comm.send_elems(Dir::Next, &masked); // P2 = P1.next
+            ctx.comm.round();
+            let t = rss::share_input(ctx.comm, ctx.seeds, 2, None,
+                                     x.shape());
+            // correction: subtract (r>>f) + 2^{bound-f} from x_1 (P1.a)
+            let mut out = t;
+            for i in 0..n {
+                let corr = (r[i] >> f).wrapping_add(1 << (bound - f));
+                out.a.data[i] = out.a.data[i].wrapping_sub(corr);
+            }
+            out
+        }
+        0 => {
+            let r = r.unwrap();
+            ctx.comm.round(); // P1 -> P2 reveal happens this round
+            let t = rss::share_input(ctx.comm, ctx.seeds, 2, None,
+                                     x.shape());
+            // x_1 is P0's b component
+            let mut out = t;
+            for i in 0..n {
+                let corr = (r[i] >> f).wrapping_add(1 << (bound - f));
+                out.b.data[i] = out.b.data[i].wrapping_sub(corr);
+            }
+            out
+        }
+        2 => {
+            let masked = ctx.comm.recv_elems(Dir::Prev); // from P1
+            ctx.comm.round();
+            // y = (x_1 + shift + r) + x_2 + x_0 ; P2 holds (x_2, x_0)
+            let y: Vec<Elem> = (0..n).map(|i| {
+                masked[i].wrapping_add(x.a.data[i]).wrapping_add(x.b.data[i])
+            }).collect();
+            let t: Vec<Elem> = y.iter().map(|&v| {
+                debug_assert!(v >= 0, "trunc mask wrapped: bound violated");
+                v >> f
+            }).collect();
+            let t = Tensor::from_vec(x.shape(), t);
+            rss::share_input(ctx.comm, ctx.seeds, 2, Some(&t), x.shape())
+        }
+        _ => unreachable!(),
+    }
+}
+
+fn stream_range(prf: &crate::prf::ChaCha20, cnt: u64, n: usize,
+                range: i64) -> Vec<Elem> {
+    let mut s = PrfStream::new(prf, cnt, domain::SHARE);
+    (0..n).map(|_| ((u64::from(s.next_u32()) * range as u64) >> 32) as Elem)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocols::testsupport::run3;
+    use crate::rss::{deal, reconstruct};
+    use crate::testutil::Rng;
+
+    #[test]
+    fn trunc_within_one_lsb() {
+        let results = run3(|ctx| {
+            let mut rng = Rng::new(8);
+            let vals: Vec<i32> = (0..200).map(|_| rng.small(1 << 23))
+                .collect();
+            let x = Tensor::from_vec(&[200], vals.clone());
+            let shares = deal(&x, &mut rng);
+            (trunc(ctx, &shares[ctx.id()], 12), vals)
+        });
+        let vals = results[0].0 .1.clone();
+        let shares: [Share; 3] =
+            std::array::from_fn(|i| results[i].0 .0.clone());
+        let got = reconstruct(&shares);
+        for (g, v) in got.data.iter().zip(&vals) {
+            let want = v >> 12;
+            assert!((g - want).abs() <= 1, "got {g}, want {want} (x={v})");
+        }
+    }
+
+    #[test]
+    fn trunc_round_budget() {
+        let results = run3(|ctx| {
+            let mut rng = Rng::new(9);
+            let x = rng.tensor_small(&[16], 1 << 20);
+            let shares = deal(&x, &mut rng);
+            let _ = trunc(ctx, &shares[ctx.id()], 8);
+        });
+        for (_, st) in &results {
+            assert!(st.rounds <= 2, "rounds = {}", st.rounds);
+        }
+    }
+
+    #[test]
+    fn trunc_preserves_sign() {
+        let results = run3(|ctx| {
+            let mut rng = Rng::new(10);
+            let vals = vec![-4096, 4096, -1, 1, 0, -(1 << 22), 1 << 22];
+            let x = Tensor::from_vec(&[7], vals.clone());
+            let shares = deal(&x, &mut rng);
+            (trunc(ctx, &shares[ctx.id()], 8), vals)
+        });
+        let shares: [Share; 3] =
+            std::array::from_fn(|i| results[i].0 .0.clone());
+        let got = reconstruct(&shares);
+        let vals = &results[0].0 .1;
+        for (g, v) in got.data.iter().zip(vals) {
+            assert!((g - (v >> 8)).abs() <= 1);
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Arithmetic over the ring Z_{2^32} and fixed-point encoding.
+//!
+//! All secret shares live in `Z_{2^32}`, represented as `i32` with
+//! two's-complement wrap-around (`wrapping_*` ops).  This matches both the
+//! paper's `l = 32` setting and the XLA `s32` semantics of the AOT
+//! artifacts, so the PJRT path and the native path are bit-identical.
+
+pub mod tensor;
+
+pub use tensor::Tensor;
+
+/// Ring element (alias to make intent explicit at API boundaries).
+pub type Elem = i32;
+
+/// Wrapping addition in Z_{2^32}.
+#[inline(always)]
+pub fn add(a: Elem, b: Elem) -> Elem {
+    a.wrapping_add(b)
+}
+
+/// Wrapping subtraction in Z_{2^32}.
+#[inline(always)]
+pub fn sub(a: Elem, b: Elem) -> Elem {
+    a.wrapping_sub(b)
+}
+
+/// Wrapping multiplication in Z_{2^32}.
+#[inline(always)]
+pub fn mul(a: Elem, b: Elem) -> Elem {
+    a.wrapping_mul(b)
+}
+
+/// Wrapping negation.
+#[inline(always)]
+pub fn neg(a: Elem) -> Elem {
+    a.wrapping_neg()
+}
+
+/// Most significant bit (the paper's `MSB`): 1 iff `a < 0` as two's
+/// complement, i.e. `a in [2^31, 2^32)` unsigned.
+#[inline(always)]
+pub fn msb(a: Elem) -> u8 {
+    (a < 0) as u8
+}
+
+/// The paper's Sign activation bit: `1 ^ MSB(a)`, i.e. 1 iff `a >= 0`.
+#[inline(always)]
+pub fn sign_bit(a: Elem) -> u8 {
+    (a >= 0) as u8
+}
+
+/// Arithmetic-shift truncation by `f` fractional bits (signed division by
+/// 2^f rounding toward negative infinity) -- the local step of the
+/// truncation protocol.
+#[inline(always)]
+pub fn trunc(a: Elem, f: u32) -> Elem {
+    a >> f
+}
+
+/// Encode a float into fixed point with `f` fractional bits (wrapping).
+#[inline]
+pub fn encode(v: f64, f: u32) -> Elem {
+    let scaled = (v * f64::from(1u32 << f)).round();
+    // wrap into i32 range like numpy int64 -> int32 cast
+    (scaled as i64) as Elem
+}
+
+/// Decode a fixed-point ring element back to a float.
+#[inline]
+pub fn decode(a: Elem, f: u32) -> f64 {
+    f64::from(a) / f64::from(1u32 << f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+
+    #[test]
+    fn wrapping_semantics() {
+        assert_eq!(add(i32::MAX, 1), i32::MIN);
+        assert_eq!(mul(1 << 30, 4), 0);
+        assert_eq!(sub(i32::MIN, 1), i32::MAX);
+        assert_eq!(neg(i32::MIN), i32::MIN);
+    }
+
+    #[test]
+    fn msb_and_sign() {
+        assert_eq!(msb(-1), 1);
+        assert_eq!(msb(0), 0);
+        assert_eq!(msb(i32::MIN), 1);
+        assert_eq!(sign_bit(0), 1);
+        assert_eq!(sign_bit(-5), 0);
+        assert_eq!(sign_bit(7), 1);
+        // sign_bit == 1 ^ msb, always
+        let mut rng = Rng::new(7);
+        for _ in 0..1000 {
+            let x = rng.next_i32();
+            assert_eq!(sign_bit(x), 1 ^ msb(x));
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let mut rng = Rng::new(1);
+        for _ in 0..500 {
+            let v = (rng.next_i32() % 10_000) as f64 / 100.0;
+            let e = encode(v, 12);
+            assert!((decode(e, 12) - v).abs() < 1.0 / 4096.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn trunc_matches_float_division() {
+        for &(v, f) in &[(4096i32, 12u32), (-4096, 12), (12345, 8), (-777, 4)] {
+            let t = trunc(v, f);
+            let expect = (f64::from(v) / f64::from(1u32 << f)).floor();
+            assert_eq!(f64::from(t), expect);
+        }
+    }
+
+    #[test]
+    fn ring_is_commutative_and_associative() {
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            let (a, b, c) = (rng.next_i32(), rng.next_i32(), rng.next_i32());
+            assert_eq!(add(a, b), add(b, a));
+            assert_eq!(add(add(a, b), c), add(a, add(b, c)));
+            assert_eq!(mul(a, b), mul(b, a));
+            assert_eq!(mul(mul(a, b), c), mul(a, mul(b, c)));
+            assert_eq!(mul(a, add(b, c)), add(mul(a, b), mul(a, c)));
+        }
+    }
+}

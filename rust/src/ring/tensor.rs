@@ -1,0 +1,265 @@
+//! Dense int32 ring tensors (row-major) with the handful of ops the
+//! secure engine needs: elementwise ring arithmetic, matmul, and the CHW
+//! im2col used to express convolutions as the Algorithm-2 contraction.
+
+use super::Elem;
+
+/// Row-major dense tensor over Z_{2^32}.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<Elem>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<Elem>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar(v: Elem) -> Self {
+        Tensor { shape: vec![1], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// (rows, cols) view of a 2-D tensor.
+    pub fn dims2(&self) -> (usize, usize) {
+        assert_eq!(self.shape.len(), 2, "expected 2-D, got {:?}", self.shape);
+        (self.shape[0], self.shape[1])
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    // ---- elementwise ring ops (wrapping) -------------------------------
+    pub fn add(&self, rhs: &Tensor) -> Tensor {
+        self.zip(rhs, |a, b| a.wrapping_add(b))
+    }
+
+    pub fn sub(&self, rhs: &Tensor) -> Tensor {
+        self.zip(rhs, |a, b| a.wrapping_sub(b))
+    }
+
+    pub fn mul_elem(&self, rhs: &Tensor) -> Tensor {
+        self.zip(rhs, |a, b| a.wrapping_mul(b))
+    }
+
+    fn zip(&self, rhs: &Tensor, f: impl Fn(Elem, Elem) -> Elem) -> Tensor {
+        assert_eq!(self.shape, rhs.shape, "shape mismatch");
+        let data = self.data.iter().zip(&rhs.data)
+            .map(|(&a, &b)| f(a, b)).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn add_assign(&mut self, rhs: &Tensor) {
+        assert_eq!(self.shape, rhs.shape);
+        for (a, &b) in self.data.iter_mut().zip(&rhs.data) {
+            *a = a.wrapping_add(b);
+        }
+    }
+
+    pub fn sub_assign(&mut self, rhs: &Tensor) {
+        assert_eq!(self.shape, rhs.shape);
+        for (a, &b) in self.data.iter_mut().zip(&rhs.data) {
+            *a = a.wrapping_sub(b);
+        }
+    }
+
+    pub fn map(&self, f: impl Fn(Elem) -> Elem) -> Tensor {
+        Tensor { shape: self.shape.clone(),
+                 data: self.data.iter().map(|&a| f(a)).collect() }
+    }
+
+    pub fn scale(&self, c: Elem) -> Tensor {
+        self.map(|a| a.wrapping_mul(c))
+    }
+
+    pub fn neg(&self) -> Tensor {
+        self.map(|a| a.wrapping_neg())
+    }
+
+    /// Add a constant to every element (used for "one party adds c").
+    pub fn add_const(&self, c: Elem) -> Tensor {
+        self.map(|a| a.wrapping_add(c))
+    }
+
+    // ---- contractions ---------------------------------------------------
+    /// Wrapping matmul: (m,k) x (k,n) -> (m,n).  i32 wrapping mul-add is
+    /// exactly Z_{2^32}; blocked over k for locality.
+    pub fn matmul(&self, rhs: &Tensor) -> Tensor {
+        let (m, k) = self.dims2();
+        let (k2, n) = rhs.dims2();
+        assert_eq!(k, k2, "inner dim mismatch");
+        let mut out = vec![0i32; m * n];
+        // ikj loop order: stream rhs rows, accumulate into out rows
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &a) in arow.iter().enumerate() {
+                if a == 0 {
+                    continue;
+                }
+                let brow = &rhs.data[kk * n..(kk + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o = o.wrapping_add(a.wrapping_mul(b));
+                }
+            }
+        }
+        Tensor { shape: vec![m, n], data: out }
+    }
+
+    /// Broadcast-add a column vector (m,1) across an (m,n) tensor.
+    pub fn add_col(&self, col: &Tensor) -> Tensor {
+        let (m, n) = self.dims2();
+        assert_eq!(col.len(), m);
+        let mut out = self.clone();
+        for i in 0..m {
+            let c = col.data[i];
+            for v in &mut out.data[i * n..(i + 1) * n] {
+                *v = v.wrapping_add(c);
+            }
+        }
+        out
+    }
+}
+
+/// CHW im2col: (C,H,W) -> (K*K*C, OH*OW) with K-index `((ky*k)+kx)*C + c`
+/// -- must match python/compile/model.py::_im2col_chw exactly.
+pub fn im2col_chw(x: &Tensor, k: usize, stride: usize,
+                  pad_lo: usize, pad_hi: usize) -> (Tensor, (usize, usize)) {
+    assert_eq!(x.shape.len(), 3, "im2col expects CHW");
+    let (c, h, w) = (x.shape[0], x.shape[1], x.shape[2]);
+    let hp = h + pad_lo + pad_hi;
+    let wp = w + pad_lo + pad_hi;
+    let oh = (hp - k) / stride + 1;
+    let ow = (wp - k) / stride + 1;
+    let mut out = vec![0i32; k * k * c * oh * ow];
+    let ncols = oh * ow;
+    for ky in 0..k {
+        for kx in 0..k {
+            for ci in 0..c {
+                let row = ((ky * k) + kx) * c + ci;
+                let dst = &mut out[row * ncols..(row + 1) * ncols];
+                for oy in 0..oh {
+                    let iy = oy * stride + ky;
+                    if iy < pad_lo || iy >= pad_lo + h {
+                        continue; // zero padding
+                    }
+                    let sy = iy - pad_lo;
+                    for ox in 0..ow {
+                        let ix = ox * stride + kx;
+                        if ix < pad_lo || ix >= pad_lo + w {
+                            continue;
+                        }
+                        dst[oy * ow + ox] = x.data[ci * h * w + sy * w + (ix - pad_lo)];
+                    }
+                }
+            }
+        }
+    }
+    (Tensor::from_vec(&[k * k * c, ncols], out), (oh, ow))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{prop, Rng};
+
+    #[test]
+    fn matmul_small_exact() {
+        let a = Tensor::from_vec(&[2, 3], vec![1, 2, 3, 4, 5, 6]);
+        let b = Tensor::from_vec(&[3, 2], vec![7, 8, 9, 10, 11, 12]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58, 64, 139, 154]);
+    }
+
+    #[test]
+    fn matmul_wraps() {
+        let a = Tensor::from_vec(&[1, 2], vec![1 << 30, 1 << 30]);
+        let b = Tensor::from_vec(&[2, 1], vec![4, 4]);
+        assert_eq!(a.matmul(&b).data, vec![0]);
+    }
+
+    #[test]
+    fn prop_matmul_distributes_over_add() {
+        prop(200, |rng: &mut Rng| {
+            let (m, k, n) = (rng.range(1, 6), rng.range(1, 6), rng.range(1, 6));
+            let a = rng.tensor(&[m, k]);
+            let b = rng.tensor(&[k, n]);
+            let c = rng.tensor(&[k, n]);
+            let left = a.matmul(&b.add(&c));
+            let right = a.matmul(&b).add(&a.matmul(&c));
+            assert_eq!(left, right);
+        });
+    }
+
+    #[test]
+    fn im2col_identity_1x1() {
+        let x = Tensor::from_vec(&[2, 2, 2], (0..8).collect());
+        let (cols, (oh, ow)) = im2col_chw(&x, 1, 1, 0, 0);
+        assert_eq!((oh, ow), (2, 2));
+        // row for c=0 then c=1, columns scan HW row-major
+        assert_eq!(cols.data, vec![0, 1, 2, 3, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn im2col_3x3_same_padding_counts_zeros() {
+        let x = Tensor::from_vec(&[1, 3, 3], vec![1; 9]);
+        let (cols, (oh, ow)) = im2col_chw(&x, 3, 1, 1, 1);
+        assert_eq!((oh, ow), (3, 3));
+        // center tap row is all ones; corner tap row has 4 zeros (padding)
+        let center = &cols.data[4 * 9..5 * 9];
+        assert!(center.iter().all(|&v| v == 1));
+        let corner: i32 = cols.data[0..9].iter().sum();
+        assert_eq!(corner, 4);
+    }
+
+    #[test]
+    fn prop_conv_as_im2col_matches_direct() {
+        prop(50, |rng: &mut Rng| {
+            let (c, h, w, k) = (rng.range(1, 4), rng.range(3, 8),
+                                rng.range(3, 8), rng.range(1, 4));
+            let co = rng.range(1, 4);
+            let x = rng.tensor(&[c, h, w]);
+            let wt = rng.tensor(&[co, k * k * c]);
+            let (cols, (oh, ow)) = im2col_chw(&x, k, 1, 0, 0);
+            let z = wt.matmul(&cols);
+            // direct convolution
+            for o in 0..co {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut acc = 0i32;
+                        for ky in 0..k {
+                            for kx in 0..k {
+                                for ci in 0..c {
+                                    let wv = wt.data[o * k * k * c
+                                        + ((ky * k) + kx) * c + ci];
+                                    let xv = x.data[ci * h * w
+                                        + (oy + ky) * w + (ox + kx)];
+                                    acc = acc.wrapping_add(wv.wrapping_mul(xv));
+                                }
+                            }
+                        }
+                        assert_eq!(z.data[o * oh * ow + oy * ow + ox], acc);
+                    }
+                }
+            }
+        });
+    }
+}

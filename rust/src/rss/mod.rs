@@ -1,0 +1,386 @@
+//! Replicated secret sharing (Araki et al.) over ring tensors.
+//!
+//! Party `P_i` holds the pair `(x_i, x_{i+1})` of the additive
+//! decomposition `x = x_0 + x_1 + x_2 (mod 2^32)`.  Local operations
+//! (addition, constant ops, the Algorithm-2 linear contraction) never
+//! communicate; multiplication and resharing use one ring message to the
+//! previous party, masked by 3-out-of-3 zero randomness.
+
+use crate::prf::PartySeeds;
+use crate::ring::{Elem, Tensor};
+use crate::transport::{Comm, Dir};
+
+/// One party's RSS share of a tensor: `a = x_i`, `b = x_{i+1}`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Share {
+    pub a: Tensor,
+    pub b: Tensor,
+}
+
+/// One party's RSS share of a bit tensor (mod 2): `a = y_i`, `b = y_{i+1}`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitShare {
+    pub a: Vec<u8>,
+    pub b: Vec<u8>,
+}
+
+impl Share {
+    pub fn zeros(shape: &[usize]) -> Self {
+        Share { a: Tensor::zeros(shape), b: Tensor::zeros(shape) }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.a.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.a.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.a.is_empty()
+    }
+
+    // ---- local ring ops -------------------------------------------------
+    pub fn add(&self, rhs: &Share) -> Share {
+        Share { a: self.a.add(&rhs.a), b: self.b.add(&rhs.b) }
+    }
+
+    pub fn sub(&self, rhs: &Share) -> Share {
+        Share { a: self.a.sub(&rhs.a), b: self.b.sub(&rhs.b) }
+    }
+
+    pub fn neg(&self) -> Share {
+        Share { a: self.a.neg(), b: self.b.neg() }
+    }
+
+    /// Multiply by a public constant.
+    pub fn scale(&self, c: Elem) -> Share {
+        Share { a: self.a.scale(c), b: self.b.scale(c) }
+    }
+
+    /// Add a public constant to the shared value: the constant is folded
+    /// into the `x_0` component, held by P0 (as `a`) and P2 (as `b`).
+    pub fn add_const(&self, party: usize, c: Elem) -> Share {
+        let mut out = self.clone();
+        if party == 0 {
+            out.a = out.a.add_const(c);
+        }
+        if party == 2 {
+            out.b = out.b.add_const(c);
+        }
+        out
+    }
+
+    /// Elementwise affine map 2x - 1 (bits -> {-1,+1}), local.
+    pub fn pm1(&self, party: usize) -> Share {
+        self.scale(2).add_const(party, -1)
+    }
+
+    pub fn reshape(self, shape: &[usize]) -> Share {
+        Share { a: self.a.reshape(shape), b: self.b.reshape(shape) }
+    }
+}
+
+impl BitShare {
+    pub fn len(&self) -> usize {
+        self.a.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.a.is_empty()
+    }
+
+    pub fn xor(&self, rhs: &BitShare) -> BitShare {
+        BitShare {
+            a: self.a.iter().zip(&rhs.a).map(|(x, y)| x ^ y).collect(),
+            b: self.b.iter().zip(&rhs.b).map(|(x, y)| x ^ y).collect(),
+        }
+    }
+
+    /// XOR with a public bit vector (folded into the y_0 component).
+    pub fn xor_const(&self, party: usize, bits: &[u8]) -> BitShare {
+        let mut out = self.clone();
+        if party == 0 {
+            for (a, &c) in out.a.iter_mut().zip(bits) {
+                *a ^= c;
+            }
+        }
+        if party == 2 {
+            for (b, &c) in out.b.iter_mut().zip(bits) {
+                *b ^= c;
+            }
+        }
+        out
+    }
+}
+
+// -------------------------------------------------------------------------
+// dealer-style sharing (tests, model loading on the owner)
+// -------------------------------------------------------------------------
+/// Split a plaintext tensor into the three parties' shares using a seeded
+/// RNG (trusted-dealer form used by tests; the engine's input sharing
+/// protocol produces the same structure interactively).
+pub fn deal(x: &Tensor, rng: &mut crate::testutil::Rng) -> [Share; 3] {
+    let n = x.len();
+    let x1: Vec<Elem> = (0..n).map(|_| rng.next_i32()).collect();
+    let x2: Vec<Elem> = (0..n).map(|_| rng.next_i32()).collect();
+    let x0: Vec<Elem> = (0..n).map(|i| {
+        x.data[i].wrapping_sub(x1[i]).wrapping_sub(x2[i])
+    }).collect();
+    let t = |v: &Vec<Elem>| Tensor::from_vec(&x.shape, v.clone());
+    [
+        Share { a: t(&x0), b: t(&x1) },
+        Share { a: t(&x1), b: t(&x2) },
+        Share { a: t(&x2), b: t(&x0) },
+    ]
+}
+
+/// Deal a bit vector into RSS bit shares.
+pub fn deal_bits(bits: &[u8], rng: &mut crate::testutil::Rng) -> [BitShare; 3] {
+    let y1: Vec<u8> = bits.iter().map(|_| rng.bit()).collect();
+    let y2: Vec<u8> = bits.iter().map(|_| rng.bit()).collect();
+    let y0: Vec<u8> = bits.iter().enumerate()
+        .map(|(i, &b)| b ^ y1[i] ^ y2[i]).collect();
+    [
+        BitShare { a: y0.clone(), b: y1.clone() },
+        BitShare { a: y1, b: y2.clone() },
+        BitShare { a: y2, b: y0 },
+    ]
+}
+
+/// Reconstruct from all three shares (test helper).
+pub fn reconstruct(shares: &[Share; 3]) -> Tensor {
+    let mut out = shares[0].a.clone();
+    out.add_assign(&shares[1].a);
+    out.add_assign(&shares[2].a);
+    out
+}
+
+pub fn reconstruct_bits(shares: &[BitShare; 3]) -> Vec<u8> {
+    (0..shares[0].a.len())
+        .map(|i| shares[0].a[i] ^ shares[1].a[i] ^ shares[2].a[i])
+        .collect()
+}
+
+// -------------------------------------------------------------------------
+// interactive pieces
+// -------------------------------------------------------------------------
+/// Reshare a 3-out-of-3 additive share `z_i` into RSS: mask with zero
+/// randomness, send to P_{i-1}, receive from P_{i+1}.  One round, one ring
+/// message (Algorithm 2, steps 3-5).
+pub fn reshare(comm: &Comm, seeds: &PartySeeds, zi: &Tensor) -> Share {
+    let cnt = seeds.next_cnt();
+    let mask = seeds.zero3(cnt, zi.len());
+    let masked: Vec<Elem> = zi.data.iter().zip(&mask)
+        .map(|(&z, &m)| z.wrapping_add(m)).collect();
+    comm.send_elems(Dir::Prev, &masked);
+    let from_next = comm.recv_elems(Dir::Next);
+    comm.round();
+    Share {
+        a: Tensor::from_vec(&zi.shape, masked),
+        b: Tensor::from_vec(&zi.shape, from_next),
+    }
+}
+
+/// RSS multiplication `[z] = [x] * [y]` (elementwise): local 3-term
+/// product plus one reshare round.
+pub fn mul(comm: &Comm, seeds: &PartySeeds, x: &Share, y: &Share) -> Share {
+    assert_eq!(x.shape(), y.shape());
+    let zi: Vec<Elem> = (0..x.len()).map(|i| {
+        let (xi, xi1) = (x.a.data[i], x.b.data[i]);
+        let (yi, yi1) = (y.a.data[i], y.b.data[i]);
+        xi.wrapping_mul(yi)
+            .wrapping_add(xi.wrapping_mul(yi1))
+            .wrapping_add(xi1.wrapping_mul(yi))
+    }).collect();
+    reshare(comm, seeds, &Tensor::from_vec(x.shape(), zi))
+}
+
+/// Reveal the shared value to all parties: each sends its `a` component to
+/// the next party (so everyone gains the one missing additive term).
+/// One round, one ring message per party.
+pub fn reveal(comm: &Comm, x: &Share) -> Tensor {
+    comm.send_elems(Dir::Next, &x.a.data);
+    let x_prev = comm.recv_elems(Dir::Prev); // x_{i-1} = the missing term
+    comm.round();
+    let mut out = x.a.clone();
+    out.add_assign(&x.b);
+    for (o, &v) in out.data.iter_mut().zip(&x_prev) {
+        *o = o.wrapping_add(v);
+    }
+    out
+}
+
+/// Input sharing: `owner` holds plaintext `x` and distributes RSS shares.
+/// The owner samples x_{o+1}, x_{o+2} from PRF randomness it shares with
+/// each neighbour (so those travel for free) and sends only the remaining
+/// component; cost is one ring message to one neighbour.
+pub fn share_input(comm: &Comm, seeds: &PartySeeds, owner: usize,
+                   x: Option<&Tensor>, shape: &[usize]) -> Share {
+    use crate::prf::{domain, PrfStream};
+    let cnt = seeds.next_cnt();
+    let n: usize = shape.iter().product();
+    let me = comm.id;
+    if me == owner {
+        let x = x.expect("owner must supply the plaintext");
+        // x_{me} stays 0; x_{me+1} = F(k_{me+1}) known to next party;
+        // x_{me+2} = x - x_{me+1} sent to prev (and next needs it too as
+        // its `b` component).
+        let mut s = PrfStream::new(&seeds.next, cnt, domain::SHARE);
+        let x_next: Vec<Elem> = (0..n).map(|_| s.next_elem()).collect();
+        let x_prev: Vec<Elem> = (0..n).map(|i| {
+            x.data[i].wrapping_sub(x_next[i])
+        }).collect();
+        comm.send_elems(Dir::Prev, &x_prev);
+        comm.send_elems(Dir::Next, &x_prev);
+        comm.round();
+        Share {
+            a: Tensor::zeros(shape),
+            b: Tensor::from_vec(shape, x_next),
+        }
+    } else if me == (owner + 1) % 3 {
+        // holds (x_{me} = PRF, x_{me+1} = x_prev received)
+        let mut s = PrfStream::new(&seeds.mine, cnt, domain::SHARE);
+        let x_mine: Vec<Elem> = (0..n).map(|_| s.next_elem()).collect();
+        let x_prev = comm.recv_elems(Dir::Prev);
+        comm.round();
+        Share {
+            a: Tensor::from_vec(shape, x_mine),
+            b: Tensor::from_vec(shape, x_prev),
+        }
+    } else {
+        // me == owner + 2: holds (x_{me} = received, x_{me+1} = 0 (owner's))
+        let x_mine = comm.recv_elems(Dir::Next);
+        comm.round();
+        Share {
+            a: Tensor::from_vec(shape, x_mine),
+            b: Tensor::zeros(shape),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{prop, Rng};
+    use crate::transport::{local_trio, NetConfig};
+    use std::thread;
+
+    #[test]
+    fn deal_reconstruct_roundtrip() {
+        prop(100, |rng: &mut Rng| {
+            let n = rng.range(1, 20);
+            let x = rng.tensor(&[n]);
+            let shares = deal(&x, rng);
+            assert_eq!(reconstruct(&shares), x);
+            // replication consistency: P_i.b == P_{i+1}.a
+            for i in 0..3 {
+                assert_eq!(shares[i].b, shares[(i + 1) % 3].a);
+            }
+        });
+    }
+
+    #[test]
+    fn local_ops_preserve_semantics() {
+        prop(100, |rng: &mut Rng| {
+            let x = rng.tensor(&[8]);
+            let y = rng.tensor(&[8]);
+            let xs = deal(&x, rng);
+            let ys = deal(&y, rng);
+            let sum: [Share; 3] =
+                std::array::from_fn(|i| xs[i].add(&ys[i]));
+            assert_eq!(reconstruct(&sum), x.add(&y));
+            let scaled: [Share; 3] = std::array::from_fn(|i| xs[i].scale(7));
+            assert_eq!(reconstruct(&scaled), x.scale(7));
+            let shifted: [Share; 3] =
+                std::array::from_fn(|i| xs[i].add_const(i, 42));
+            assert_eq!(reconstruct(&shifted), x.add_const(42));
+        });
+    }
+
+    #[test]
+    fn bit_shares_roundtrip_and_xor() {
+        prop(100, |rng: &mut Rng| {
+            let bits: Vec<u8> = (0..16).map(|_| rng.bit()).collect();
+            let cs: Vec<u8> = (0..16).map(|_| rng.bit()).collect();
+            let shares = deal_bits(&bits, rng);
+            assert_eq!(reconstruct_bits(&shares), bits);
+            let xored: [BitShare; 3] =
+                std::array::from_fn(|i| shares[i].xor_const(i, &cs));
+            let want: Vec<u8> = bits.iter().zip(&cs).map(|(a, b)| a ^ b)
+                .collect();
+            assert_eq!(reconstruct_bits(&xored), want);
+        });
+    }
+
+    fn run3<F, R>(f: F) -> Vec<R>
+    where
+        F: Fn(&Comm, &PartySeeds) -> R + Send + Sync + Copy + 'static,
+        R: Send + 'static,
+    {
+        let comms = local_trio(NetConfig::zero());
+        let handles: Vec<_> = comms.into_iter().map(|c| {
+            thread::spawn(move || {
+                let seeds = PartySeeds::setup(42, c.id);
+                f(&c, &seeds)
+            })
+        }).collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn interactive_mul_is_correct() {
+        let results = run3(|c, s| {
+            let mut rng = Rng::new(9);
+            let x = rng.tensor_small(&[32], 1000);
+            let y = rng.tensor_small(&[32], 1000);
+            let xs = deal(&x, &mut rng);
+            let ys = deal(&y, &mut rng);
+            let z = mul(c, s, &xs[c.id], &ys[c.id]);
+            (z, x.mul_elem(&y))
+        });
+        let want = results[0].1.clone();
+        let shares: [Share; 3] = std::array::from_fn(|i| results[i].0.clone());
+        assert_eq!(reconstruct(&shares), want);
+        // replication consistency after reshare
+        for i in 0..3 {
+            assert_eq!(shares[i].b, shares[(i + 1) % 3].a);
+        }
+    }
+
+    #[test]
+    fn reveal_gives_everyone_the_value() {
+        let results = run3(|c, _s| {
+            let mut rng = Rng::new(4);
+            let x = rng.tensor(&[16]);
+            let xs = deal(&x, &mut rng);
+            (reveal(c, &xs[c.id]), x)
+        });
+        for (got, want) in &results {
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn share_input_from_each_owner() {
+        for owner in 0..3usize {
+            let results = run3(move |c, s| {
+                let mut rng = Rng::new(100 + owner as u64);
+                let x = rng.tensor(&[24]);
+                let share = share_input(
+                    c, s, owner,
+                    if c.id == owner { Some(&x) } else { None }, &[24]);
+                (share, x)
+            });
+            let want = results[0].1.clone();
+            let shares: [Share; 3] =
+                std::array::from_fn(|i| results[i].0.clone());
+            assert_eq!(reconstruct(&shares), want, "owner {owner}");
+            for i in 0..3 {
+                assert_eq!(shares[i].b, shares[(i + 1) % 3].a,
+                           "replication, owner {owner}");
+            }
+        }
+    }
+}

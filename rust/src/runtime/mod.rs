@@ -1,0 +1,215 @@
+//! PJRT runtime: loads the AOT artifacts (HLO text lowered from the L1
+//! Pallas kernels by `python/compile/aot.py`) and executes them on the
+//! request path.
+//!
+//! One `PjrtRuntime` per party thread (the PJRT CPU client is not shared
+//! across parties); executables are compiled once per (layer-shape,
+//! variant) and cached.  When an artifact is missing the backend falls
+//! back to the native rust contraction, so unit tests run without
+//! `make artifacts` -- the integration tests assert the artifacts are
+//! actually exercised.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::protocols::linear::{LinearBackend, NativeBackend};
+use crate::ring::Tensor;
+
+/// Which lowering of the RSS contraction to execute (ablation A4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelVariant {
+    /// Lowered from the Pallas kernel (interpret=True -> plain HLO).
+    Pallas,
+    /// Lowered from the jnp reference ops.
+    Xla,
+}
+
+impl KernelVariant {
+    pub fn suffix(&self) -> &'static str {
+        match self {
+            KernelVariant::Pallas => "pallas",
+            KernelVariant::Xla => "xla",
+        }
+    }
+}
+
+/// Cached-executable PJRT backend for the Algorithm-2 local contraction.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    hlo_dir: PathBuf,
+    variant: KernelVariant,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    native: NativeBackend,
+    /// count of layer executions that went through PJRT vs fell back
+    pub pjrt_execs: std::cell::Cell<u64>,
+    pub native_fallbacks: std::cell::Cell<u64>,
+}
+
+impl PjrtRuntime {
+    pub fn new(hlo_dir: impl Into<PathBuf>, variant: KernelVariant)
+               -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(PjrtRuntime {
+            client,
+            hlo_dir: hlo_dir.into(),
+            variant,
+            cache: RefCell::new(HashMap::new()),
+            native: NativeBackend,
+            pjrt_execs: std::cell::Cell::new(0),
+            native_fallbacks: std::cell::Cell::new(0),
+        })
+    }
+
+    fn executable(&self, key: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(key) {
+            return Ok(e.clone());
+        }
+        let path = self.hlo_dir
+            .join(format!("{key}.{}.hlo.txt", self.variant.suffix()));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?)
+            .with_context(|| format!("loading {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)
+            .with_context(|| format!("compiling {key}"))?);
+        self.cache.borrow_mut().insert(key.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile every HLO the model references (avoids first-request
+    /// latency spikes; called by the coordinator at session setup).
+    pub fn precompile(&self, keys: impl IntoIterator<Item = String>)
+                      -> Result<()> {
+        for k in keys {
+            let _ = self.executable(&k)?;
+        }
+        Ok(())
+    }
+
+    fn lit(t: &Tensor) -> Result<xla::Literal> {
+        let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&t.data).reshape(&dims)?)
+    }
+
+    fn run(&self, key: &str, args: &[xla::Literal], out_shape: &[usize])
+           -> Result<Tensor> {
+        let exe = self.executable(key)?;
+        let result = exe.execute::<xla::Literal>(args)?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let data = out.to_vec::<i32>()?;
+        self.pjrt_execs.set(self.pjrt_execs.get() + 1);
+        Ok(Tensor::from_vec(out_shape, data))
+    }
+}
+
+impl LinearBackend for PjrtRuntime {
+    fn warmup(&self, keys: &[String]) {
+        let _ = self.precompile(keys.iter().cloned());
+    }
+
+    fn rss_matmul(&self, key: &str, wa: &Tensor, wb: &Tensor, xa: &Tensor,
+                  xb: &Tensor, ba: Option<&Tensor>) -> Tensor {
+        let (m, _k) = wa.dims2();
+        let (_, n) = xa.dims2();
+        let zero_b;
+        let b2 = match ba {
+            Some(b) => b.clone().reshape(&[m, 1]),
+            None => {
+                zero_b = Tensor::zeros(&[m, 1]);
+                zero_b.clone()
+            }
+        };
+        let attempt = (|| -> Result<Tensor> {
+            let args = [Self::lit(wa)?, Self::lit(wb)?, Self::lit(xa)?,
+                        Self::lit(xb)?, Self::lit(&b2)?];
+            self.run(key, &args, &[m, n])
+        })();
+        match attempt {
+            Ok(t) => t,
+            Err(_) => {
+                self.native_fallbacks.set(self.native_fallbacks.get() + 1);
+                self.native.rss_matmul(key, wa, wb, xa, xb, ba)
+            }
+        }
+    }
+
+    fn rss_depthwise(&self, key: &str, wa: &Tensor, wb: &Tensor,
+                     xa: &Tensor, xb: &Tensor,
+                     geom: (usize, usize, usize, usize, usize, usize, usize))
+                     -> Tensor {
+        let (c, h, w, k, stride, pad_lo, pad_hi) = geom;
+        let oh = (h + pad_lo + pad_hi - k) / stride + 1;
+        let ow = (w + pad_lo + pad_hi - k) / stride + 1;
+        let attempt = (|| -> Result<Tensor> {
+            // HLO expects w as HWIO (k,k,1,C) and x as NCHW (1,C,H,W);
+            // our pool layout is w (C, k*k) row-major and x (C, H*W).
+            let to_hwio = |t: &Tensor| {
+                let mut d = vec![0i32; k * k * c];
+                for ci in 0..c {
+                    for kk in 0..k * k {
+                        d[kk * c + ci] = t.data[ci * k * k + kk];
+                    }
+                }
+                Tensor::from_vec(&[k, k, 1, c], d)
+            };
+            let args = [
+                Self::lit(&to_hwio(wa))?,
+                Self::lit(&to_hwio(wb))?,
+                Self::lit(&xa.clone().reshape(&[1, c, h, w]))?,
+                Self::lit(&xb.clone().reshape(&[1, c, h, w]))?,
+            ];
+            self.run(key, &args, &[c, oh * ow])
+        })();
+        match attempt {
+            Ok(t) => t,
+            Err(_) => {
+                self.native_fallbacks.set(self.native_fallbacks.get() + 1);
+                crate::protocols::linear::native_depthwise(
+                    wa, wb, xa, xb, geom)
+            }
+        }
+    }
+}
+
+/// Backend selection for a session.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Native,
+    Pjrt(KernelVariant),
+}
+
+/// Instantiate the backend for one party thread.
+pub fn make_backend(kind: BackendKind, hlo_dir: &std::path::Path)
+                    -> Result<Box<dyn LinearBackend>> {
+    Ok(match kind {
+        BackendKind::Native => Box::new(NativeBackend),
+        BackendKind::Pjrt(v) => Box::new(PjrtRuntime::new(hlo_dir, v)?),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+
+    #[test]
+    fn missing_artifact_falls_back_to_native() {
+        let rt = PjrtRuntime::new("/nonexistent", KernelVariant::Xla)
+            .expect("client");
+        let mut rng = Rng::new(1);
+        let wa = rng.tensor_small(&[3, 4], 100);
+        let wb = rng.tensor_small(&[3, 4], 100);
+        let xa = rng.tensor_small(&[4, 2], 100);
+        let xb = rng.tensor_small(&[4, 2], 100);
+        let z = rt.rss_matmul("nope", &wa, &wb, &xa, &xb, None);
+        let want = NativeBackend.rss_matmul("nope", &wa, &wb, &xa, &xb, None);
+        assert_eq!(z, want);
+        assert_eq!(rt.native_fallbacks.get(), 1);
+        assert_eq!(rt.pjrt_execs.get(), 0);
+    }
+}
