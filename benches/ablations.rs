@@ -61,7 +61,7 @@ fn main() {
             let mut rng = Rng::new(1);
             let x = rng.tensor_small(&[n], 1 << 20);
             let xs = deal(&x, &mut rng);
-            let _ = msb_extract(ctx, &xs[ctx.id()]);
+            let _ = msb_extract(ctx, &xs[ctx.id()]).unwrap();
         }));
     report("bit-decomp (SecureBiNN-ish)", run3(NetConfig::wan(),
         move |ctx: &Ctx| {
@@ -69,7 +69,7 @@ fn main() {
             let x = rng.tensor_small(&[n], 1 << 20);
             let xs = deal(&x, &mut rng);
             let me = &xs[ctx.id()];
-            let _ = msb_bitdecomp(ctx, &me.a.data, &me.b.data);
+            let _ = msb_bitdecomp(ctx, &me.a.data, &me.b.data).unwrap();
         }));
 
     println!("\n[A2] 2x2 maxpool over 16x16x16 bits, WAN");
@@ -78,13 +78,13 @@ fn main() {
         let bits = cbnn::ring::Tensor::from_vec(
             &[16, 256], (0..16 * 256).map(|i| i as i32 % 2).collect());
         let xs = deal(&bits, &mut rng);
-        let _ = maxpool_bits(ctx, &xs[ctx.id()], 16, 16, 16, 2, 2);
+        let _ = maxpool_bits(ctx, &xs[ctx.id()], 16, 16, 16, 2, 2).unwrap();
     }));
     report("comparison tree", run3(NetConfig::wan(), |ctx: &Ctx| {
         let mut rng = Rng::new(2);
         let x = rng.tensor_small(&[16, 256], 1 << 16);
         let xs = deal(&x, &mut rng);
-        let _ = maxpool_tree(ctx, &xs[ctx.id()], 16, 16, 16);
+        let _ = maxpool_tree(ctx, &xs[ctx.id()], 16, 16, 16).unwrap();
     }));
 
     println!("\n[A3] batch norm over 64x256 activations, WAN");
@@ -100,7 +100,7 @@ fn main() {
         let gs = deal(&g, &mut rng);
         let bs = deal(&b, &mut rng);
         let _ = bn_online(ctx, &xs[ctx.id()], &gs[ctx.id()],
-                          &bs[ctx.id()], 8);
+                          &bs[ctx.id()], 8).unwrap();
     }));
 
     require_artifacts();
@@ -108,11 +108,15 @@ fn main() {
     println!("{:<28} {:>12} {:>12}", "backend", "online(ms)", "per-img(ms)");
     let model = load_model("mnistnet3");
     let data = eval_data(&model);
-    for (label, kind) in [
-        ("native rust", BackendKind::Native),
-        ("PJRT + pallas kernel", BackendKind::Pjrt(KernelVariant::Pallas)),
-        ("PJRT + xla lowering", BackendKind::Pjrt(KernelVariant::Xla)),
-    ] {
+    // PJRT arms only when the feature (and a real xla crate) is built in
+    let mut arms = vec![("native rust", BackendKind::Native)];
+    if cfg!(feature = "pjrt") {
+        arms.push(("PJRT + pallas kernel",
+                   BackendKind::Pjrt(KernelVariant::Pallas)));
+        arms.push(("PJRT + xla lowering",
+                   BackendKind::Pjrt(KernelVariant::Xla)));
+    }
+    for (label, kind) in arms {
         let cfg = SessionConfig::new(art().join("hlo"))
             .with_net(NetConfig::lan()).with_backend(kind);
         // warm once (compile executables), then time

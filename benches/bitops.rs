@@ -1,0 +1,99 @@
+//! Boolean-share representation micro-benchmark: byte-per-bit (the seed's
+//! `Vec<u8>` representation) vs word-packed `BitTensor`, across the local
+//! operations that dominate the non-linear protocol path:
+//!
+//!   * XOR      -- every share combine / public unmask
+//!   * AND      -- the local term of the boolean multiplication
+//!   * B2A-prep -- y_1 ^ y_2 followed by the per-element message walk
+//!                 (the sender side of the share conversion)
+//!
+//! At 10^4..10^7 elements the packed path should show >= 8x XOR/AND
+//! throughput (64 bits per instruction vs one byte per bit, minus memory
+//! effects); the measured ratio is printed so the bench trajectory records
+//! the representation change.
+//!
+//!   cargo bench --bench bitops
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use cbnn::ring::bits::BitTensor;
+use cbnn::testutil::Rng;
+
+/// Median-of-reps wall time for `f`, in seconds.
+fn time(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(f64::total_cmp);
+    times[times.len() / 2]
+}
+
+// ---- byte-per-bit reference (exactly the seed's BitShare ops) -----------
+fn bytes_xor(a: &[u8], b: &[u8]) -> Vec<u8> {
+    a.iter().zip(b).map(|(x, y)| x ^ y).collect()
+}
+
+fn bytes_and(a: &[u8], b: &[u8]) -> Vec<u8> {
+    a.iter().zip(b).map(|(x, y)| x & y).collect()
+}
+
+fn main() {
+    println!("== boolean share ops: byte-per-bit vs word-packed ==\n");
+    println!("{:<10} {:<10} {:>12} {:>12} {:>9}",
+             "op", "elems", "bytes(ms)", "packed(ms)", "speedup");
+    println!("{}", "-".repeat(58));
+
+    for &n in &[10_000usize, 100_000, 1_000_000, 10_000_000] {
+        let reps = if n >= 1_000_000 { 5 } else { 20 };
+        let mut rng = Rng::new(n as u64);
+        let xa: Vec<u8> = (0..n).map(|_| rng.bit()).collect();
+        let xb: Vec<u8> = (0..n).map(|_| rng.bit()).collect();
+        let ta = BitTensor::from_bits(&xa);
+        let tb = BitTensor::from_bits(&xb);
+
+        // XOR
+        let t_bytes = time(reps, || {
+            black_box(bytes_xor(black_box(&xa), black_box(&xb)));
+        });
+        let t_packed = time(reps, || {
+            black_box(black_box(&ta).xor(black_box(&tb)));
+        });
+        println!("{:<10} {:<10} {:>12.3} {:>12.3} {:>8.1}x",
+                 "xor", n, t_bytes * 1e3, t_packed * 1e3,
+                 t_bytes / t_packed);
+
+        // AND
+        let t_bytes = time(reps, || {
+            black_box(bytes_and(black_box(&xa), black_box(&xb)));
+        });
+        let t_packed = time(reps, || {
+            black_box(black_box(&ta).and(black_box(&tb)));
+        });
+        println!("{:<10} {:<10} {:>12.3} {:>12.3} {:>8.1}x",
+                 "and", n, t_bytes * 1e3, t_packed * 1e3,
+                 t_bytes / t_packed);
+
+        // B2A-prep: the boolean part of the sender's message construction
+        // (y12 = y1 ^ y2 for the whole batch).  The subsequent per-element
+        // ring arithmetic is identical in both representations, so the
+        // boolean half is what the refactor buys.
+        let t_bytes = time(reps, || {
+            let y12 = bytes_xor(&xa, &xb);
+            black_box(y12.iter().map(|&b| b as u64).sum::<u64>());
+        });
+        let t_packed = time(reps, || {
+            let y12 = ta.xor(&tb);
+            black_box(y12.popcount());
+        });
+        println!("{:<10} {:<10} {:>12.3} {:>12.3} {:>8.1}x",
+                 "b2a-prep", n, t_bytes * 1e3, t_packed * 1e3,
+                 t_bytes / t_packed);
+        println!();
+    }
+    println!("(acceptance: packed XOR/AND >= 8x byte-per-bit; 64 bits per \
+              word op)");
+}

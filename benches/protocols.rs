@@ -60,7 +60,7 @@ fn main() {
             bench_proto!("reshare", n, net, move |ctx: &Ctx| {
                 let mut rng = Rng::new(1);
                 let z = rng.tensor(&[n]);
-                let _ = rss::reshare(ctx.comm, ctx.seeds, &z);
+                let _ = rss::reshare(ctx.comm, ctx.seeds, &z).unwrap();
             });
             bench_proto!("mul", n, net, move |ctx: &Ctx| {
                 let mut rng = Rng::new(2);
@@ -69,45 +69,46 @@ fn main() {
                 let xs = deal(&x, &mut rng);
                 let ys = deal(&y, &mut rng);
                 let _ = rss::mul(ctx.comm, ctx.seeds, &xs[ctx.id()],
-                                 &ys[ctx.id()]);
+                                 &ys[ctx.id()]).unwrap();
             });
             bench_proto!("b2a(3-OT)", n, net, move |ctx: &Ctx| {
                 let mut rng = Rng::new(3);
                 let bits: Vec<u8> = (0..n).map(|_| rng.bit()).collect();
                 let bs = deal_bits(&bits, &mut rng);
-                let _ = cbnn::protocols::b2a::b2a(ctx, &bs[ctx.id()]);
+                let _ = cbnn::protocols::b2a::b2a(ctx, &bs[ctx.id()])
+                    .unwrap();
             });
             bench_proto!("msb(Alg3)", n, net, move |ctx: &Ctx| {
                 let mut rng = Rng::new(4);
                 let x = rng.tensor_small(&[n], 1 << 20);
                 let xs = deal(&x, &mut rng);
-                let _ = msb_extract(ctx, &xs[ctx.id()]);
+                let _ = msb_extract(ctx, &xs[ctx.id()]).unwrap();
             });
             bench_proto!("sign(Alg4)", n, net, move |ctx: &Ctx| {
                 let mut rng = Rng::new(5);
                 let x = rng.tensor_small(&[n], 1 << 20);
                 let xs = deal(&x, &mut rng);
-                let _ = sign(ctx, &xs[ctx.id()]);
+                let _ = sign(ctx, &xs[ctx.id()]).unwrap();
             });
             bench_proto!("relu_ot(Alg5)", n, net, move |ctx: &Ctx| {
                 let mut rng = Rng::new(6);
                 let x = rng.tensor_small(&[n], 1 << 20);
                 let xs = deal(&x, &mut rng);
-                let m = msb_extract(ctx, &xs[ctx.id()]);
-                let _ = relu_ot(ctx, &xs[ctx.id()], &m);
+                let m = msb_extract(ctx, &xs[ctx.id()]).unwrap();
+                let _ = relu_ot(ctx, &xs[ctx.id()], &m).unwrap();
             });
             bench_proto!("relu_mul", n, net, move |ctx: &Ctx| {
                 let mut rng = Rng::new(7);
                 let x = rng.tensor_small(&[n], 1 << 20);
                 let xs = deal(&x, &mut rng);
-                let m = msb_extract(ctx, &xs[ctx.id()]);
-                let _ = relu_mul(ctx, &xs[ctx.id()], &m);
+                let m = msb_extract(ctx, &xs[ctx.id()]).unwrap();
+                let _ = relu_mul(ctx, &xs[ctx.id()], &m).unwrap();
             });
             bench_proto!("trunc", n, net, move |ctx: &Ctx| {
                 let mut rng = Rng::new(8);
                 let x = rng.tensor_small(&[n], 1 << 20);
                 let xs = deal(&x, &mut rng);
-                let _ = trunc(ctx, &xs[ctx.id()], 12);
+                let _ = trunc(ctx, &xs[ctx.id()], 12).unwrap();
             });
         }
     }

@@ -5,6 +5,8 @@
 //! y = gamma' * x + beta' online: one RSS multiplication round plus one
 //! truncation (gamma' is fixed-point) plus a local add.
 
+use anyhow::Result;
+
 use crate::protocols::trunc::trunc;
 use crate::protocols::Ctx;
 use crate::rss::{self, Share};
@@ -12,7 +14,7 @@ use crate::rss::{self, Share};
 /// Online BN: y = (gamma' * x) >> f + beta', with gamma'/beta' secret
 /// shares scaled by 2^f.  `x` is (C, N); gamma/beta are per-channel (C).
 pub fn bn_online(ctx: &Ctx, x: &Share, gamma: &Share, beta: &Share,
-                 f: u32) -> Share {
+                 f: u32) -> Result<Share> {
     let (c, n) = x.a.dims2();
     // broadcast gamma to the full shape, multiply, truncate, add beta
     let expand = |t: &crate::ring::Tensor| {
@@ -24,10 +26,10 @@ pub fn bn_online(ctx: &Ctx, x: &Share, gamma: &Share, beta: &Share,
     };
     let g = Share { a: expand(&gamma.a), b: expand(&gamma.b) };
     let flat = x.clone().reshape(&[c * n]);
-    let prod = rss::mul(ctx.comm, ctx.seeds, &g, &flat);
-    let scaled = trunc(ctx, &prod, f);
+    let prod = rss::mul(ctx.comm, ctx.seeds, &g, &flat)?;
+    let scaled = trunc(ctx, &prod, f)?;
     let b = Share { a: expand(&beta.a), b: expand(&beta.b) };
-    scaled.add(&b).reshape(&[c, n])
+    Ok(scaled.add(&b).reshape(&[c, n]))
 }
 
 #[cfg(test)]
@@ -51,7 +53,7 @@ mod tests {
             let gs = deal(&Tensor::from_vec(&[c], g.clone()), &mut rng);
             let bs = deal(&Tensor::from_vec(&[c], b.clone()), &mut rng);
             let y = bn_online(ctx, &xs[ctx.id()], &gs[ctx.id()],
-                              &bs[ctx.id()], f);
+                              &bs[ctx.id()], f).unwrap();
             (y, x, g, b)
         });
         let (_, x, g, b) = results[0].0.clone();
@@ -77,7 +79,7 @@ mod tests {
             let gs = deal(&rng.tensor_small(&[2], 50), &mut rng);
             let bs = deal(&rng.tensor_small(&[2], 50), &mut rng);
             let _ = bn_online(ctx, &xs[ctx.id()], &gs[ctx.id()],
-                              &bs[ctx.id()], 4);
+                              &bs[ctx.id()], 4).unwrap();
         });
         // fused BN costs zero online rounds; explicit BN costs >= 3
         for (_, st) in &results {

@@ -3,24 +3,26 @@
 //! avoids).  max(a, b) = b + ReLU(a - b): each level costs a full MSB
 //! extraction + ReLU selection; a 2x2 window needs two levels (3 maxes).
 
+use anyhow::Result;
+
 use crate::protocols::msb::msb_extract;
 use crate::protocols::relu::relu_ot;
 use crate::protocols::Ctx;
 use crate::rss::Share;
 
 /// Elementwise secure max over two equal-shape shares.
-pub fn secure_max(ctx: &Ctx, a: &Share, b: &Share) -> Share {
+pub fn secure_max(ctx: &Ctx, a: &Share, b: &Share) -> Result<Share> {
     let d = a.sub(b);
     let flat = d.clone().reshape(&[d.len()]);
-    let m = msb_extract(ctx, &flat);
-    let r = relu_ot(ctx, &flat, &m); // ReLU(a - b)
-    b.clone().reshape(&[b.len()]).add(&r)
+    let m = msb_extract(ctx, &flat)?;
+    let r = relu_ot(ctx, &flat, &m)?; // ReLU(a - b)
+    Ok(b.clone().reshape(&[b.len()]).add(&r))
 }
 
 /// 2x2/stride-2 maxpool over a (C,H,W) share via a two-level comparison
 /// tree.  Returns ([C, OH*OW], (OH, OW)).
 pub fn maxpool_tree(ctx: &Ctx, x: &Share, c: usize, h: usize, w: usize)
-                    -> (Share, (usize, usize)) {
+                    -> Result<(Share, (usize, usize))> {
     let (oh, ow) = (h / 2, w / 2);
     let gather = |dy: usize, dx: usize| -> Share {
         let pick = |t: &crate::ring::Tensor| {
@@ -39,10 +41,10 @@ pub fn maxpool_tree(ctx: &Ctx, x: &Share, c: usize, h: usize, w: usize)
     };
     let (q00, q01, q10, q11) = (gather(0, 0), gather(0, 1), gather(1, 0),
                                 gather(1, 1));
-    let top = secure_max(ctx, &q00, &q01);
-    let bot = secure_max(ctx, &q10, &q11);
-    let m = secure_max(ctx, &top, &bot);
-    (m.reshape(&[c, oh * ow]), (oh, ow))
+    let top = secure_max(ctx, &q00, &q01)?;
+    let bot = secure_max(ctx, &q10, &q11)?;
+    let m = secure_max(ctx, &top, &bot)?;
+    Ok((m.reshape(&[c, oh * ow]), (oh, ow)))
 }
 
 #[cfg(test)]
@@ -63,7 +65,7 @@ mod tests {
             let tb = Tensor::from_vec(&[30], b.clone());
             let sa = deal(&ta, &mut rng);
             let sb = deal(&tb, &mut rng);
-            (secure_max(ctx, &sa[ctx.id()], &sb[ctx.id()]), a, b)
+            (secure_max(ctx, &sa[ctx.id()], &sb[ctx.id()]).unwrap(), a, b)
         });
         let (_, a, b) = results[0].0.clone();
         let shares: [Share; 3] =
@@ -83,7 +85,7 @@ mod tests {
                 .collect();
             let x = Tensor::from_vec(&[c, h * w], vals.clone());
             let xs = deal(&x, &mut rng);
-            (maxpool_tree(ctx, &xs[ctx.id()], c, h, w), vals)
+            (maxpool_tree(ctx, &xs[ctx.id()], c, h, w).unwrap(), vals)
         });
         let vals = results[0].0 .1.clone();
         let shares: [Share; 3] =
@@ -109,7 +111,7 @@ mod tests {
             let mut rng = Rng::new(4);
             let x = rng.tensor_small(&[1, 16], 1);
             let xs = deal(&x, &mut rng);
-            let _ = maxpool_tree(ctx, &xs[ctx.id()], 1, 4, 4);
+            let _ = maxpool_tree(ctx, &xs[ctx.id()], 1, 4, 4).unwrap();
         });
         let fused = run3(|ctx| {
             let mut rng = Rng::new(4);
@@ -117,7 +119,7 @@ mod tests {
                                         (0..16).map(|i| i % 2).collect());
             let xs = deal(&bits, &mut rng);
             let _ = crate::protocols::maxpool::maxpool_bits(
-                ctx, &xs[ctx.id()], 1, 4, 4, 2, 2);
+                ctx, &xs[ctx.id()], 1, 4, 4, 2, 2).unwrap();
         });
         let max_rounds = |r: &[((), crate::transport::Stats)]| {
             r.iter().map(|(_, s)| s.rounds).max().unwrap()

@@ -19,11 +19,11 @@ use anyhow::{anyhow, Result};
 use crate::engine::session::SessionConfig;
 use crate::engine::{infer_batch_pooled, share_model, SharedModel};
 use crate::metrics::{Histogram, Throughput};
-use crate::nn::{Model, Op};
+use crate::nn::Model;
 use crate::prf::PartySeeds;
 use crate::protocols::Ctx;
 use crate::ring::Tensor;
-use crate::runtime::{make_backend, BackendKind, PjrtRuntime};
+use crate::runtime::make_backend;
 use crate::transport::{local_trio, Stats};
 
 enum Job {
@@ -59,39 +59,17 @@ impl Service {
                 let seeds = PartySeeds::setup(cfg.session_seed, comm.id);
                 let ctx = Ctx::with_cfg(&comm, &seeds, cfg.proto);
                 // build the backend, warming the PJRT executable cache
-                // before the first request
+                // before the first request (warmup is a no-op for native)
                 let backend: Box<dyn crate::protocols::linear::LinearBackend> =
-                    match cfg.backend {
-                        BackendKind::Native => match make_backend(
-                            cfg.backend, &cfg.hlo_dir) {
-                            Ok(b) => b,
-                            Err(e) => {
-                                let _ = ready_tx.send(
-                                    Err(anyhow!("backend: {e}")));
-                                return comm.stats();
-                            }
-                        },
-                        BackendKind::Pjrt(v) => {
-                            match PjrtRuntime::new(&cfg.hlo_dir, v) {
-                                Ok(rt) => {
-                                    let keys = model.ops.iter()
-                                        .filter_map(|o| match o {
-                                            Op::Matmul { hlo, .. }
-                                            | Op::Depthwise { hlo, .. } =>
-                                                hlo.clone(),
-                                            _ => None,
-                                        });
-                                    let _ = rt.precompile(keys);
-                                    Box::new(rt)
-                                }
-                                Err(e) => {
-                                    let _ = ready_tx.send(
-                                        Err(anyhow!("backend: {e}")));
-                                    return comm.stats();
-                                }
-                            }
+                    match make_backend(cfg.backend, &cfg.hlo_dir) {
+                        Ok(b) => b,
+                        Err(e) => {
+                            let _ = ready_tx.send(
+                                Err(anyhow!("backend: {e}")));
+                            return comm.stats();
                         }
                     };
+                backend.warmup(&crate::engine::hlo_keys(&model));
                 let shared: SharedModel =
                     match share_model(&ctx, &model, comm.id == 1) {
                         Ok(s) => s,
@@ -106,7 +84,10 @@ impl Service {
                 let pool = crate::protocols::preproc::MsbPool::new();
                 let per_batch = crate::engine::msb_demand(&shared, 8);
                 if cfg.opts.preprocess {
-                    pool.generate(&ctx, per_batch * 4);
+                    if let Err(e) = pool.generate(&ctx, per_batch * 4) {
+                        let _ = ready_tx.send(Err(anyhow!("preproc: {e}")));
+                        return comm.stats();
+                    }
                 }
                 let _ = ready_tx.send(Ok(comm.id));
                 while let Ok(job) = jrx.recv() {
@@ -117,15 +98,32 @@ impl Service {
                             let r = infer_batch_pooled(
                                 &ctx, &shared, backend.as_ref(), cfg.opts,
                                 &inputs, batch, p);
+                            let failed = r.is_err();
                             if comm.id == 0 {
                                 let _ = logits_tx.send(
                                     r.map(|o| o.logits)
                                      .map_err(|e| anyhow!("{e}")));
+                            } else if let Err(e) = &r {
+                                eprintln!("[service {}] inference failed: \
+                                           {e}", comm.id);
+                            }
+                            if failed {
+                                // a failed protocol leaves the trio
+                                // desynchronized; retire this party --
+                                // dropping its Comm unblocks any peer
+                                // stuck in recv with WireError::Closed
+                                // instead of hanging the Service
+                                break;
                             }
                             // top the reservoir back up between requests
                             if cfg.opts.preprocess
                                 && pool.available() < per_batch {
-                                pool.generate(&ctx, per_batch * 2);
+                                if let Err(e) =
+                                    pool.generate(&ctx, per_batch * 2) {
+                                    eprintln!("[service {}] preproc \
+                                               top-up failed: {e}", comm.id);
+                                    break;
+                                }
                             }
                         }
                     }

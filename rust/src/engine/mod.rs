@@ -90,18 +90,27 @@ pub fn msb_demand(model: &SharedModel, batch: usize) -> usize {
     msb_sizes(model, batch).iter().sum()
 }
 
+/// AOT artifact keys of every linear layer -- the set a backend should
+/// precompile at session setup (see LinearBackend::warmup).
+pub fn hlo_keys(model: &Model) -> Vec<String> {
+    model.ops.iter().filter_map(|o| match o {
+        Op::Matmul { hlo, .. } | Op::Depthwise { hlo, .. } => hlo.clone(),
+        _ => None,
+    }).collect()
+}
+
 /// Fill a preprocessing pool for one upcoming `infer_batch` call.
 pub fn preprocess_for(ctx: &Ctx, model: &SharedModel, batch: usize)
-                      -> crate::protocols::preproc::MsbPool {
+                      -> Result<crate::protocols::preproc::MsbPool> {
     let pool = crate::protocols::preproc::MsbPool::new();
-    pool.generate(ctx, msb_demand(model, batch));
-    pool
+    pool.generate(ctx, msb_demand(model, batch))?;
+    Ok(pool)
 }
 
 /// MSB through the pool when one is supplied, inline Algorithm 3
 /// otherwise.
 fn msb_via(ctx: &Ctx, pool: Option<&crate::protocols::preproc::MsbPool>,
-           x: &Share) -> crate::protocols::msb::MsbOut {
+           x: &Share) -> Result<crate::protocols::msb::MsbOut> {
     match pool {
         Some(p) => crate::protocols::preproc::msb_online(
             ctx, x, p.take(x.len())),
@@ -145,11 +154,11 @@ pub fn share_model(ctx: &Ctx, model: &Model, has_pool: bool)
             Op::Matmul { m, kdim, w, b, .. } => {
                 let wt = plain(*w, &[*m, *kdim]);
                 weights.push(Some(rss::share_input(
-                    ctx.comm, ctx.seeds, 1, wt.as_ref(), &[*m, *kdim])));
+                    ctx.comm, ctx.seeds, 1, wt.as_ref(), &[*m, *kdim])?));
                 if let Some(br) = b {
                     let bt = plain(*br, &[*m]);
                     biases.push(Some(rss::share_input(
-                        ctx.comm, ctx.seeds, 1, bt.as_ref(), &[*m])));
+                        ctx.comm, ctx.seeds, 1, bt.as_ref(), &[*m])?));
                 } else {
                     biases.push(None);
                 }
@@ -160,7 +169,7 @@ pub fn share_model(ctx: &Ctx, model: &Model, has_pool: bool)
                 let kk = geom.0 * geom.0;
                 let wt = plain(*w, &[*c, kk]);
                 weights.push(Some(rss::share_input(
-                    ctx.comm, ctx.seeds, 1, wt.as_ref(), &[*c, kk])));
+                    ctx.comm, ctx.seeds, 1, wt.as_ref(), &[*c, kk])?));
                 biases.push(None);
                 thresholds.push(None);
                 flips.push(None);
@@ -170,7 +179,7 @@ pub fn share_model(ctx: &Ctx, model: &Model, has_pool: bool)
                 weights.push(None);
                 biases.push(None);
                 thresholds.push(Some(rss::share_input(
-                    ctx.comm, ctx.seeds, 1, tt.as_ref(), &[*c])));
+                    ctx.comm, ctx.seeds, 1, tt.as_ref(), &[*c])?));
                 // flips are public metadata: P1 broadcasts them
                 let f = if me == 1 {
                     let f = model.tensor(*flip, &[*c]).data;
@@ -179,11 +188,13 @@ pub fn share_model(ctx: &Ctx, model: &Model, has_pool: bool)
                     ctx.comm.round();
                     f
                 } else if me == 2 {
-                    let f = ctx.comm.recv_elems(Dir::Prev);
+                    let f = crate::protocols::expect_elems(
+                        ctx.comm.recv_elems(Dir::Prev)?, *c)?;
                     ctx.comm.round();
                     f
                 } else {
-                    let f = ctx.comm.recv_elems(Dir::Next);
+                    let f = crate::protocols::expect_elems(
+                        ctx.comm.recv_elems(Dir::Next)?, *c)?;
                     ctx.comm.round();
                     f
                 };
@@ -241,15 +252,15 @@ fn split(joined: Share, shapes: &[Vec<usize>]) -> Vec<Share> {
 /// Reshare a batch of per-sample 3-of-3 additive results with a single
 /// round: concatenate, mask + exchange once, split back.
 fn reshare_batched(ctx: &Ctx, zis: Vec<Tensor>, shapes: &[Vec<usize>])
-                   -> Vec<Share> {
+                   -> Result<Vec<Share>> {
     let total: usize = zis.iter().map(Tensor::len).sum();
     let mut flat = Vec::with_capacity(total);
     for z in &zis {
         flat.extend_from_slice(&z.data);
     }
     let joined = rss::reshare(ctx.comm, ctx.seeds,
-                              &Tensor::from_vec(&[total], flat));
-    split(joined, shapes)
+                              &Tensor::from_vec(&[total], flat))?;
+    Ok(split(joined, shapes))
 }
 
 /// Broadcast-subtract a per-channel shared threshold and apply the public
@@ -309,7 +320,7 @@ pub fn infer_batch_pooled(
         };
         let shared = rss::share_input(ctx.comm, ctx.seeds, 0,
                                       joined.as_ref(),
-                                      &[batch * c0 * h0 * w0]);
+                                      &[batch * c0 * h0 * w0])?;
         let shapes = vec![vec![c0, h0 * w0]; batch];
         acts = split(shared, &shapes);
     }
@@ -344,7 +355,7 @@ pub fn infer_batch_pooled(
                     shapes.push(zi.shape.clone());
                     zis.push(zi);
                 }
-                acts = reshare_batched(ctx, zis, &shapes);
+                acts = reshare_batched(ctx, zis, &shapes)?;
             }
             Op::Depthwise { geom: g, hlo, .. } => {
                 let w = model.weights[i].as_ref().unwrap();
@@ -363,7 +374,7 @@ pub fn infer_batch_pooled(
                     shapes.push(zi.shape.clone());
                     zis.push(zi);
                 }
-                acts = reshare_batched(ctx, zis, &shapes);
+                acts = reshare_batched(ctx, zis, &shapes)?;
             }
             Op::Sign { .. } => {
                 let t = model.thresholds[i].as_ref().unwrap();
@@ -377,20 +388,20 @@ pub fn infer_batch_pooled(
                 let shapes: Vec<Vec<usize>> =
                     d.iter().map(|s| s.shape().to_vec()).collect();
                 let joined = concat(&d);
-                let bits = msb_via(ctx, pool, &joined).sign_a;
+                let bits = msb_via(ctx, pool, &joined)?.sign_a;
                 acts = split(bits, &shapes);
             }
             Op::Relu { trunc: f } => {
                 let shapes: Vec<Vec<usize>> =
                     acts.iter().map(|s| s.shape().to_vec()).collect();
                 let joined = concat(&acts);
-                let m = msb_via(ctx, pool, &joined).bits;
+                let m = msb_via(ctx, pool, &joined)?.bits;
                 let r = if opts.relu_via_ot {
-                    relu_ot(ctx, &joined, &m)
+                    relu_ot(ctx, &joined, &m)?
                 } else {
-                    relu_mul(ctx, &joined, &m)
+                    relu_mul(ctx, &joined, &m)?
                 };
-                let truncated = trunc(ctx, &r, *f);
+                let truncated = trunc(ctx, &r, *f)?;
                 acts = split(truncated, &shapes);
             }
             Op::PoolBits { k, stride, .. } => {
@@ -408,7 +419,7 @@ pub fn infer_batch_pooled(
                     sums.push(summed);
                 }
                 let joined = concat(&sums);
-                let bits = msb_via(ctx, pool, &joined).sign_a;
+                let bits = msb_via(ctx, pool, &joined)?.sign_a;
                 acts = split(bits, &shapes);
             }
             Op::Pm1 => {
@@ -428,7 +439,7 @@ pub fn infer_batch_pooled(
 
     // ---- reveal logits to the data owner only --------------------------
     let joined = concat(&acts);
-    let logits = reveal_to_p0(ctx, &joined);
+    let logits = reveal_to_p0(ctx, &joined)?;
     let out = if me == 0 {
         let v = logits.unwrap();
         let per = v.len() / batch;
@@ -442,21 +453,22 @@ pub fn infer_batch_pooled(
 }
 
 /// Reveal a share to P0 only: P1 sends its x_2 component to P0.
-fn reveal_to_p0(ctx: &Ctx, s: &Share) -> Option<Vec<i32>> {
+fn reveal_to_p0(ctx: &Ctx, s: &Share) -> Result<Option<Vec<i32>>> {
     match ctx.id() {
         1 => {
             ctx.comm.send_elems(Dir::Prev, &s.b.data); // x_2 -> P0
             ctx.comm.round();
-            None
+            Ok(None)
         }
         0 => {
-            let x2 = ctx.comm.recv_elems(Dir::Next);
+            let x2 = crate::protocols::expect_elems(
+                ctx.comm.recv_elems(Dir::Next)?, s.len())?;
             ctx.comm.round();
-            Some((0..s.len()).map(|i| {
+            Ok(Some((0..s.len()).map(|i| {
                 s.a.data[i].wrapping_add(s.b.data[i]).wrapping_add(x2[i])
-            }).collect())
+            }).collect()))
         }
-        _ => None,
+        _ => Ok(None),
     }
 }
 
@@ -471,6 +483,92 @@ pub mod session;
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::nn::Model as NnModel;
+    use crate::protocols::linear::NativeBackend;
+    use crate::protocols::testsupport::run3;
+
+    /// A model exercising every `Op` variant: Matmul(conv), Sign,
+    /// PoolBits, Pm1, Depthwise, Flatten, Matmul(fc), Relu.
+    fn every_op_model() -> NnModel {
+        let manifest = r#"{
+          "name": "everyop", "dataset": "synthetic",
+          "input": {"c": 1, "h": 6, "w": 6},
+          "s_in": 0, "ring_bits": 32,
+          "layers": [
+            {"op": "matmul", "conv": true, "m": 2, "kdim": 9, "n": 16,
+             "k": 3, "stride": 1, "pad_lo": 0, "pad_hi": 0, "cout": 2,
+             "w": {"off": 0, "len": 18}, "b": {"off": 18, "len": 2},
+             "s_in": 0, "s_out": 0},
+            {"op": "sign", "c": 2, "t": {"off": 20, "len": 2},
+             "flip": {"off": 22, "len": 2}},
+            {"op": "pool_bits", "c": 2, "k": 2, "stride": 2},
+            {"op": "pm1"},
+            {"op": "depthwise", "cout": 2, "k": 1, "stride": 1,
+             "pad_lo": 0, "pad_hi": 0, "w": {"off": 24, "len": 2},
+             "s_in": 0, "s_out": 0},
+            {"op": "flatten", "c": 2, "h": 2, "w": 2},
+            {"op": "matmul", "conv": false, "m": 3, "kdim": 8, "n": 1,
+             "w": {"off": 26, "len": 24}, "b": {"off": 50, "len": 3},
+             "s_in": 0, "s_out": 0},
+            {"op": "relu", "trunc": 2}
+          ]
+        }"#;
+        // small deterministic weights; values only need to stay inside the
+        // MSB bound, the test checks pool accounting + determinism
+        let pool: Vec<i32> = (0..53).map(|v| (v % 7) - 3).collect();
+        NnModel::from_json(manifest, pool).unwrap()
+    }
+
+    #[test]
+    fn msb_sizes_mirrors_infer_batch_pool_drain() {
+        // Contract: `msb_sizes` must predict the engine's MSB walk exactly.
+        // Over-prediction leaves material in the pool (asserted to be zero
+        // below); under-prediction would panic inside `MsbPool::take`.
+        let results = run3(|ctx| {
+            let model = every_op_model();
+            let shared = share_model(ctx, &model, true).unwrap();
+            let batch = 2;
+            let sizes = msb_sizes(&shared, batch);
+            // one entry per non-linear op, sized at its activation geometry:
+            // Sign on (2,4,4), PoolBits to (2,2,2), Relu on the 3 logits
+            assert_eq!(sizes, vec![64, 16, 6]);
+            assert_eq!(msb_demand(&shared, batch), 86);
+            let pool = crate::protocols::preproc::MsbPool::new();
+            pool.generate(ctx, msb_demand(&shared, batch)).unwrap();
+            let inputs: Vec<Tensor> = if ctx.id() == 0 {
+                let mut rng = crate::testutil::Rng::new(5);
+                (0..batch).map(|_| rng.tensor_small(&[1, 36], 15)).collect()
+            } else {
+                vec![]
+            };
+            let pooled = infer_batch_pooled(
+                ctx, &shared, &NativeBackend, EngineOptions::default(),
+                &inputs, batch, Some(&pool)).unwrap();
+            // fully drained: zero remaining, zero over-take
+            assert_eq!(pool.available(), 0,
+                       "msb_sizes over-estimated the engine's MSB walk");
+            // and the pooled path computes the same function as inline
+            // Algorithm 3
+            let inline = infer_batch_pooled(
+                ctx, &shared, &NativeBackend, EngineOptions::default(),
+                &inputs, batch, None).unwrap();
+            (pooled.logits, inline.logits)
+        });
+        let (pooled, inline) = results[0].0.clone();
+        assert_eq!(pooled.len(), 2);
+        assert_eq!(pooled[0].len(), 3);
+        // pooled vs inline MSB compute the same function; the final Relu's
+        // truncation draws different masks in the two runs, so logits may
+        // differ by the protocol's +-1 LSB
+        for (pr, ir) in pooled.iter().zip(&inline) {
+            for (p, i) in pr.iter().zip(ir) {
+                assert!((p - i).abs() <= 1,
+                        "pooled {p} vs inline {i} beyond trunc tolerance");
+            }
+        }
+        // non-owners learn nothing
+        assert!(results[1].0 .0.is_empty() && results[2].0 .0.is_empty());
+    }
 
     #[test]
     fn argmax_picks_largest() {

@@ -99,18 +99,11 @@ pub fn run_inference(model: &Arc<Model>, inputs: Vec<Tensor>,
             let backend = make_backend(cfg.backend, &cfg.hlo_dir)?;
             let t0 = Instant::now();
             // compile the layer executables during setup, never online
-            let keys: Vec<String> = model.ops.iter().filter_map(|o| {
-                match o {
-                    crate::nn::Op::Matmul { hlo, .. }
-                    | crate::nn::Op::Depthwise { hlo, .. } => hlo.clone(),
-                    _ => None,
-                }
-            }).collect();
-            backend.warmup(&keys);
+            backend.warmup(&super::hlo_keys(&model));
             let shared = share_model(&ctx, &model, true)?;
             // offline phase: mint the MSB correlated material
             let pool = if cfg.opts.preprocess {
-                Some(super::preprocess_for(&ctx, &shared, batch))
+                Some(super::preprocess_for(&ctx, &shared, batch)?)
             } else {
                 None
             };

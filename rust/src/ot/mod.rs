@@ -17,8 +17,9 @@
 //! (prf::PartySeeds), so any role assignment works.
 
 use crate::prf::{domain, ChaCha20, PartySeeds, PrfStream};
+use crate::ring::bits::BitTensor;
 use crate::ring::Elem;
-use crate::transport::{Comm, Dir};
+use crate::transport::{Comm, Dir, WireError};
 
 /// Role assignment for one OT execution (party ids).
 #[derive(Clone, Copy, Debug)]
@@ -46,14 +47,15 @@ fn pair_prf<'a>(seeds: &'a PartySeeds, me: usize, other: usize) -> &'a ChaCha20 
     }
 }
 
-/// Per-party input to one OT batch.
+/// Per-party input to one OT batch.  Choice bits arrive word-packed (the
+/// B-share components are `BitTensor`s already, no unpacking needed).
 pub enum Input<'a> {
     /// Sender provides the two message vectors (equal length).
     Sender { m0: &'a [Elem], m1: &'a [Elem] },
     /// Receiver provides the per-element choice bits.
-    Receiver { c: &'a [u8] },
+    Receiver { c: &'a BitTensor },
     /// Helper provides the same choice bits.
-    Helper { c: &'a [u8] },
+    Helper { c: &'a BitTensor },
 }
 
 /// Direction from `me` to `to` along the ring.
@@ -62,10 +64,11 @@ fn dir_to(me: usize, to: usize) -> Dir {
 }
 
 /// Execute a batched 3-party OT.  Every party must call this with the same
-/// `roles` and element count `n`; the receiver gets `Some(m_c)`, others
-/// `None`.  Advances the shared PRF counter once on all parties.
+/// `roles` and element count `n`; the receiver gets `Ok(Some(m_c))`, others
+/// `Ok(None)`.  Advances the shared PRF counter once on all parties.
+/// Received lengths are validated (peer input is untrusted).
 pub fn run(comm: &Comm, seeds: &PartySeeds, roles: Roles, n: usize,
-           input: Input<'_>) -> Option<Vec<Elem>> {
+           input: Input<'_>) -> Result<Option<Vec<Elem>>, WireError> {
     let me = comm.id;
     let cnt = seeds.next_cnt();
     match input {
@@ -87,20 +90,20 @@ pub fn run(comm: &Comm, seeds: &PartySeeds, roles: Roles, n: usize,
             payload.extend_from_slice(&masked1);
             comm.send_elems(dir_to(me, roles.helper), &payload);
             comm.round();
-            None
+            Ok(None)
         }
         Input::Helper { c } => {
             assert_eq!(me, roles.helper);
             assert_eq!(c.len(), n);
-            let payload = comm.recv_elems(dir_to(me, roles.sender));
+            let payload = crate::rss::expect_len(
+                comm.recv_elems(dir_to(me, roles.sender))?, 2 * n)?;
             comm.round();
-            assert_eq!(payload.len(), 2 * n);
             let sel: Vec<Elem> = (0..n).map(|i| {
-                payload[if c[i] == 0 { i } else { n + i }]
+                payload[if c.get(i) == 0 { i } else { n + i }]
             }).collect();
             comm.send_elems(dir_to(me, roles.receiver), &sel);
             comm.round();
-            None
+            Ok(None)
         }
         Input::Receiver { c } => {
             assert_eq!(me, roles.receiver);
@@ -112,12 +115,13 @@ pub fn run(comm: &Comm, seeds: &PartySeeds, roles: Roles, n: usize,
             // sender and helper both advance a round before we receive
             comm.round();
             comm.round();
-            let sel = comm.recv_elems(dir_to(me, roles.helper));
+            let sel = crate::rss::expect_len(
+                comm.recv_elems(dir_to(me, roles.helper))?, n)?;
             let out = (0..n).map(|i| {
-                let mask = if c[i] == 0 { masks[i].0 } else { masks[i].1 };
+                let mask = if c.get(i) == 0 { masks[i].0 } else { masks[i].1 };
                 sel[i].wrapping_sub(mask)
             }).collect();
-            Some(out)
+            Ok(Some(out))
         }
     }
 }
@@ -139,14 +143,15 @@ mod tests {
                 let m0: Vec<i32> = (0..n).map(|_| rng.next_i32()).collect();
                 let m1: Vec<i32> = (0..n).map(|_| rng.next_i32()).collect();
                 let cbits: Vec<u8> = (0..n).map(|_| rng.bit()).collect();
+                let cpacked = BitTensor::from_bits(&cbits);
                 let input = if c.id == roles.sender {
                     Input::Sender { m0: &m0, m1: &m1 }
                 } else if c.id == roles.receiver {
-                    Input::Receiver { c: &cbits }
+                    Input::Receiver { c: &cpacked }
                 } else {
-                    Input::Helper { c: &cbits }
+                    Input::Helper { c: &cpacked }
                 };
-                let out = run(&c, &seeds, roles, n, input);
+                let out = run(&c, &seeds, roles, n, input).unwrap();
                 (c.id, out, m0, m1, cbits, c.stats())
             })
         }).collect();

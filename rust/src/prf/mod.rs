@@ -10,6 +10,14 @@
 //!
 //! No cryptographic crates are vendored, so ChaCha20 (RFC 8439) is
 //! implemented here and validated against the RFC test vector.
+//!
+//! Boolean randomness is emitted *word-packed* (`ring::bits::BitTensor`):
+//! one u64 of keystream yields 64 shared bits, instead of the seed's one
+//! u32 draw per bit.  All parties derive words identically (little-endian
+//! u64s from consecutive u32 draws, pinned by a test in ring::bits), so the
+//! replication invariants are unchanged.
+
+use crate::ring::bits::BitTensor;
 
 /// ChaCha20 block function keyed with a 32-byte key.
 #[derive(Clone)]
@@ -112,10 +120,30 @@ impl<'a> PrfStream<'a> {
         self.next_u32() as i32
     }
 
+    /// One 64-bit word of keystream (two consecutive u32 draws, LE order).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let lo = u64::from(self.next_u32());
+        let hi = u64::from(self.next_u32());
+        lo | (hi << 32)
+    }
+
     pub fn fill(&mut self, out: &mut [i32]) {
         for v in out {
             *v = self.next_elem();
         }
+    }
+
+    /// Bulk word fill for packed boolean randomness.
+    pub fn fill_words(&mut self, out: &mut [u64]) {
+        for w in out {
+            *w = self.next_u64();
+        }
+    }
+
+    /// `n` random bits, word-packed (64 bits per u64 of keystream).
+    pub fn next_bits(&mut self, n: usize) -> BitTensor {
+        BitTensor::random(self, n)
     }
 }
 
@@ -181,12 +209,21 @@ impl PartySeeds {
          (0..n).map(|_| b.next_elem()).collect())
     }
 
-    /// Shared random *bits* as RSS shares mod 2: pair of bit vectors.
-    pub fn rand_bits2(&self, cnt: u64, n: usize) -> (Vec<u8>, Vec<u8>) {
+    /// Shared random *bits* as RSS shares mod 2: a pair of word-packed bit
+    /// tensors (this party's y_i, y_{i+1} components).
+    pub fn rand_bits2(&self, cnt: u64, n: usize) -> (BitTensor, BitTensor) {
         let mut a = PrfStream::new(&self.mine, cnt, domain::BITS);
         let mut b = PrfStream::new(&self.next, cnt, domain::BITS);
-        ((0..n).map(|_| (a.next_u32() & 1) as u8).collect(),
-         (0..n).map(|_| (b.next_u32() & 1) as u8).collect())
+        (a.next_bits(n), b.next_bits(n))
+    }
+
+    /// 3-out-of-3 XOR-sharing of zero over bits:
+    /// r_i = F(k_{i+1}, cnt) ^ F(k_i, cnt), word-parallel.  XOR across the
+    /// three parties cancels (the mod-2 analogue of `zero3`).
+    pub fn zero_bits3(&self, cnt: u64, n: usize) -> BitTensor {
+        let mut a = PrfStream::new(&self.next, cnt, domain::ZERO3);
+        let mut b = PrfStream::new(&self.mine, cnt, domain::ZERO3);
+        a.next_bits(n).xor(&b.next_bits(n))
     }
 }
 
@@ -266,16 +303,31 @@ mod tests {
     #[test]
     fn rand_bits_replicated() {
         let ps = three_parties(99);
-        let pairs: Vec<_> = ps.iter().map(|p| p.rand_bits2(9, 64)).collect();
-        for j in 0..64 {
-            for i in 0..3 {
-                assert_eq!(pairs[i].1[j], pairs[(i + 1) % 3].0[j]);
-            }
+        // an awkward (non-word-aligned) length exercises the tail masking
+        let n = 77;
+        let pairs: Vec<_> = ps.iter().map(|p| p.rand_bits2(9, n)).collect();
+        for i in 0..3 {
+            // P_i's second component equals P_{i+1}'s first (replication),
+            // word-for-word
+            assert_eq!(pairs[i].1, pairs[(i + 1) % 3].0);
         }
-        // bits are actually bits and not constant
-        let all: Vec<u8> = pairs[0].0.clone();
-        assert!(all.iter().all(|&b| b <= 1));
-        assert!(all.iter().any(|&b| b == 0) && all.iter().any(|&b| b == 1));
+        // bits are not constant
+        let c = pairs[0].0.popcount();
+        assert!(c > 0 && c < n);
+    }
+
+    #[test]
+    fn zero_bits3_xors_to_zero() {
+        let ps = three_parties(123);
+        for cnt in 0..4 {
+            let n = 100;
+            let shares: Vec<_> =
+                ps.iter().map(|p| p.zero_bits3(cnt, n)).collect();
+            let sum = shares[0].xor(&shares[1]).xor(&shares[2]);
+            assert_eq!(sum.popcount(), 0, "cnt {cnt}");
+            // and the individual masks are not trivially zero
+            assert!(shares[0].popcount() > 0);
+        }
     }
 
     #[test]

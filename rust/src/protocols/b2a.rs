@@ -14,6 +14,11 @@
 //!
 //! Critical path: OT (2 rounds) + the P0->P2 forward (1 round); the
 //! a_2 distribution overlaps the OT's first round.
+//!
+//! The bit shares stay word-packed end to end: the sender's y_1 ^ y_2 is
+//! one word-parallel XOR, and the choice bits feed the OT as `BitTensor`s.
+
+use anyhow::Result;
 
 use crate::ot;
 use crate::prf::{domain, PrfStream};
@@ -21,10 +26,10 @@ use crate::ring::{Elem, Tensor};
 use crate::rss::{BitShare, Share};
 use crate::transport::Dir;
 
-use super::Ctx;
+use super::{expect_elems, Ctx};
 
 /// Convert RSS bit shares into RSS arithmetic shares of the same bits.
-pub fn b2a(ctx: &Ctx, y: &BitShare) -> Share {
+pub fn b2a(ctx: &Ctx, y: &BitShare) -> Result<Share> {
     let n = y.len();
     let me = ctx.id();
     let cnt = ctx.seeds.next_cnt();
@@ -40,49 +45,50 @@ pub fn b2a(ctx: &Ctx, y: &BitShare) -> Share {
             let mut sp = PrfStream::new(&ctx.seeds.private, cnt, domain::SHARE);
             let a2: Vec<Elem> = (0..n).map(|_| sp.next_elem()).collect();
             ctx.comm.send_elems(Dir::Next, &a2); // P2 is P1's next
+            let y12 = y.a.xor(&y.b); // y_1 ^ y_2, word-parallel
             let m0: Vec<Elem> = (0..n).map(|i| {
-                let bit = (y.a[i] ^ y.b[i]) as Elem; // y_1 ^ y_2
-                bit.wrapping_sub(a1[i]).wrapping_sub(a2[i])
+                Elem::from(y12.get(i))
+                    .wrapping_sub(a1[i]).wrapping_sub(a2[i])
             }).collect();
             let m1: Vec<Elem> = (0..n).map(|i| {
-                let bit = (1 ^ y.a[i] ^ y.b[i]) as Elem;
-                bit.wrapping_sub(a1[i]).wrapping_sub(a2[i])
+                Elem::from(1 ^ y12.get(i))
+                    .wrapping_sub(a1[i]).wrapping_sub(a2[i])
             }).collect();
             ot::run(ctx.comm, ctx.seeds, roles, n,
-                    ot::Input::Sender { m0: &m0, m1: &m1 });
+                    ot::Input::Sender { m0: &m0, m1: &m1 })?;
             // P1 holds (x_1, x_2) = (a_1, a_2)
-            Share {
+            Ok(Share {
                 a: Tensor::from_vec(&shape, a1),
                 b: Tensor::from_vec(&shape, a2),
-            }
+            })
         }
         0 => {
             let mut s1 = PrfStream::new(&ctx.seeds.next, cnt, domain::SHARE);
             let a1: Vec<Elem> = (0..n).map(|_| s1.next_elem()).collect();
             let x0 = ot::run(ctx.comm, ctx.seeds, roles, n,
-                             ot::Input::Receiver { c: &y.a })
+                             ot::Input::Receiver { c: &y.a })?
                 .expect("receiver output");
             // forward x_0 to P2 (replication)
             ctx.comm.send_elems(Dir::Prev, &x0);
             ctx.comm.round();
             // P0 holds (x_0, x_1) = (y - a, a_1)
-            Share {
+            Ok(Share {
                 a: Tensor::from_vec(&shape, x0),
                 b: Tensor::from_vec(&shape, a1),
-            }
+            })
         }
         2 => {
-            let a2 = ctx.comm.recv_elems(Dir::Prev); // from P1
+            let a2 = expect_elems(ctx.comm.recv_elems(Dir::Prev)?, n)?;
             // helper input: choice bit y_0 = this party's `b` component
             ot::run(ctx.comm, ctx.seeds, roles, n,
-                    ot::Input::Helper { c: &y.b });
-            let x0 = ctx.comm.recv_elems(Dir::Next); // from P0
+                    ot::Input::Helper { c: &y.b })?;
+            let x0 = expect_elems(ctx.comm.recv_elems(Dir::Next)?, n)?;
             ctx.comm.round();
             // P2 holds (x_2, x_0) = (a_2, y - a)
-            Share {
+            Ok(Share {
                 a: Tensor::from_vec(&shape, a2),
                 b: Tensor::from_vec(&shape, x0),
-            }
+            })
         }
         _ => unreachable!(),
     }
@@ -101,7 +107,7 @@ mod tests {
             let mut rng = Rng::new(11);
             let bits: Vec<u8> = (0..100).map(|_| rng.bit()).collect();
             let shares = deal_bits(&bits, &mut rng);
-            (b2a(ctx, &shares[ctx.id()]), bits)
+            (b2a(ctx, &shares[ctx.id()]).unwrap(), bits)
         });
         let bits = results[0].0 .1.clone();
         let shares: [Share; 3] =
@@ -123,7 +129,7 @@ mod tests {
                 let mut rng = Rng::new(5 + fill as u64);
                 let bits = vec![fill; 16];
                 let shares = deal_bits(&bits, &mut rng);
-                b2a(ctx, &shares[ctx.id()])
+                b2a(ctx, &shares[ctx.id()]).unwrap()
             });
             let shares: [Share; 3] =
                 std::array::from_fn(|i| results[i].0.clone());
@@ -139,7 +145,7 @@ mod tests {
             let mut rng = Rng::new(2);
             let bits: Vec<u8> = (0..8).map(|_| rng.bit()).collect();
             let shares = deal_bits(&bits, &mut rng);
-            let _ = b2a(ctx, &shares[ctx.id()]);
+            let _ = b2a(ctx, &shares[ctx.id()]).unwrap();
         });
         assert!(results[0].1.rounds <= 3,
                 "P0 rounds = {}", results[0].1.rounds);

@@ -12,6 +12,8 @@
 //! AOT-compiled PJRT executable (runtime::PjrtBackend) -- the protocol is
 //! agnostic, which is what the A4 ablation exploits.
 
+use anyhow::Result;
+
 use crate::ring::{tensor::im2col_chw, Tensor};
 use crate::rss::{self, Share};
 
@@ -99,19 +101,19 @@ pub fn native_depthwise(wa: &Tensor, wb: &Tensor, xa: &Tensor, xb: &Tensor,
 /// Algorithm 2: secure matmul layer.  `w`, `b` are the model's RSS shares;
 /// `x` the activation shares (k, n).  One reshare round.
 pub fn linear(ctx: &Ctx, backend: &dyn LinearBackend, key: &str, w: &Share,
-              x: &Share, b: Option<&Share>) -> Share {
+              x: &Share, b: Option<&Share>) -> Result<Share> {
     let zi = backend.rss_matmul(key, &w.a, &w.b, &x.a, &x.b,
                                 b.map(|bb| &bb.a));
-    rss::reshare(ctx.comm, ctx.seeds, &zi)
+    Ok(rss::reshare(ctx.comm, ctx.seeds, &zi)?)
 }
 
 /// Algorithm 2, depthwise-convolution form.
 pub fn depthwise(ctx: &Ctx, backend: &dyn LinearBackend, key: &str,
                  w: &Share, x: &Share,
                  geom: (usize, usize, usize, usize, usize, usize, usize))
-                 -> Share {
+                 -> Result<Share> {
     let zi = backend.rss_depthwise(key, &w.a, &w.b, &x.a, &x.b, geom);
-    rss::reshare(ctx.comm, ctx.seeds, &zi)
+    Ok(rss::reshare(ctx.comm, ctx.seeds, &zi)?)
 }
 
 #[cfg(test)]
@@ -133,7 +135,7 @@ mod tests {
             let xs = deal(&x, &mut rng);
             let bs = deal(&b, &mut rng);
             let z = linear(ctx, &NativeBackend, "t", &ws[ctx.id()],
-                           &xs[ctx.id()], Some(&bs[ctx.id()]));
+                           &xs[ctx.id()], Some(&bs[ctx.id()])).unwrap();
             (z, w.matmul(&x).add_col(&b))
         });
         let want = results[0].0 .1.clone();
@@ -154,7 +156,7 @@ mod tests {
             let ws = deal(&w, &mut rng);
             let xs = deal(&x, &mut rng);
             let _ = linear(ctx, &NativeBackend, "t", &ws[ctx.id()],
-                           &xs[ctx.id()], None);
+                           &xs[ctx.id()], None).unwrap();
         });
         for (_, st) in &results {
             assert_eq!(st.rounds, 1);
@@ -209,7 +211,7 @@ mod tests {
             let ws = deal(&wt, &mut rng);
             let xs = deal(&x, &mut rng);
             let z = depthwise(ctx, &NativeBackend, "t", &ws[ctx.id()],
-                              &xs[ctx.id()], (c, h, w, k, 1, 1, 1));
+                              &xs[ctx.id()], (c, h, w, k, 1, 1, 1)).unwrap();
             (z, wt, x)
         });
         let shares: [Share; 3] =

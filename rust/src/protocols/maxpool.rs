@@ -12,6 +12,8 @@
 //! non-fused comparison-tree alternative lives in baselines:: for the A2
 //! ablation.
 
+use anyhow::Result;
+
 use crate::rss::Share;
 
 use super::{sign::sign, Ctx};
@@ -50,13 +52,14 @@ pub fn window_sum_minus_one(ctx: &Ctx, bits: &Share, c: usize, h: usize,
 /// Fused maxpool over sign-bit shares: returns `[C, OH*OW]` arithmetic
 /// shares of the pooled bits, plus the output spatial dims.
 pub fn maxpool_bits(ctx: &Ctx, bits: &Share, c: usize, h: usize, w: usize,
-                    k: usize, stride: usize) -> (Share, (usize, usize)) {
+                    k: usize, stride: usize)
+                    -> Result<(Share, (usize, usize))> {
     let oh = (h - k) / stride + 1;
     let ow = (w - k) / stride + 1;
     let summed = window_sum_minus_one(ctx, bits, c, h, w, k, stride);
     let flat = summed.reshape(&[c * oh * ow]);
-    let (pooled, _) = sign(ctx, &flat);
-    (pooled.reshape(&[c, oh * ow]), (oh, ow))
+    let (pooled, _) = sign(ctx, &flat)?;
+    Ok((pooled.reshape(&[c, oh * ow]), (oh, ow)))
 }
 
 #[cfg(test)]
@@ -97,7 +100,7 @@ mod tests {
             let x = Tensor::from_vec(&[c, h * w], bits.clone());
             let shares = deal(&x, &mut rng);
             let (pooled, dims) =
-                maxpool_bits(ctx, &shares[ctx.id()], c, h, w, 2, 2);
+                maxpool_bits(ctx, &shares[ctx.id()], c, h, w, 2, 2).unwrap();
             (pooled, dims, bits)
         });
         let (_, dims, bits) = results[0].0.clone();
@@ -114,7 +117,7 @@ mod tests {
             let mut rng = Rng::new(1);
             let x = Tensor::from_vec(&[1, 16], vec![0; 16]);
             let shares = deal(&x, &mut rng);
-            maxpool_bits(ctx, &shares[ctx.id()], 1, 4, 4, 2, 2).0
+            maxpool_bits(ctx, &shares[ctx.id()], 1, 4, 4, 2, 2).unwrap().0
         });
         let shares: [Share; 3] = std::array::from_fn(|i| results[i].0.clone());
         assert_eq!(reconstruct(&shares).data, vec![0; 4]);

@@ -28,7 +28,16 @@ pub mod sign;
 pub mod trunc;
 
 use crate::prf::PartySeeds;
+use crate::ring::Elem;
 use crate::transport::Comm;
+
+/// Validate a peer-sent element count (protocol-layer wire hardening; the
+/// transport already validated framing, this checks protocol-level shape).
+/// Delegates to the rss-layer validator and lifts the error to anyhow.
+pub(crate) fn expect_elems(v: Vec<Elem>, n: usize)
+                           -> anyhow::Result<Vec<Elem>> {
+    Ok(crate::rss::expect_len(v, n)?)
+}
 
 /// Security / correctness knobs for the masked protocols.
 #[derive(Clone, Copy, Debug)]

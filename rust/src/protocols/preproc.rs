@@ -16,10 +16,17 @@
 //! i.e. 2 online rounds instead of 7.  Same offline/online trick as
 //! Beaver triples; the serving coordinator tops the reservoir up between
 //! requests, and the ablation bench measures both paths.
+//!
+//! The beta reservoir is two word-packed `BitTensor`s; minting appends
+//! word-wise and `take` is a FIFO bit-level split, so a pool holding
+//! millions of bits costs megabytes, not tens of megabytes.
 
 use std::cell::RefCell;
 
+use anyhow::Result;
+
 use crate::prf::{domain, PrfStream};
+use crate::ring::bits::BitTensor;
 use crate::ring::{Elem, Tensor};
 use crate::rss::{self, BitShare, Share};
 
@@ -35,8 +42,8 @@ pub struct MsbTuple {
 
 #[derive(Default)]
 struct Reservoir {
-    beta_a_bits: Vec<u8>,
-    beta_b_bits: Vec<u8>,
+    beta_a_bits: BitTensor,
+    beta_b_bits: BitTensor,
     beta_a: (Vec<Elem>, Vec<Elem>),
     rs: (Vec<Elem>, Vec<Elem>),
 }
@@ -57,12 +64,12 @@ impl MsbPool {
     /// Mint `n` more elements (runs the input-independent prefix of
     /// Algorithm 3: B2A of beta, r-share, one multiplication -- ~5
     /// rounds, all off the request path).
-    pub fn generate(&self, ctx: &Ctx, n: usize) {
+    pub fn generate(&self, ctx: &Ctx, n: usize) -> Result<()> {
         let me = ctx.id();
         let cnt = ctx.seeds.next_cnt();
         let (ba, bb) = ctx.seeds.rand_bits2(cnt, n);
         let beta = BitShare { a: ba, b: bb };
-        let beta_a = b2a(ctx, &beta);
+        let beta_a = b2a(ctx, &beta)?;
 
         let rcnt = ctx.seeds.next_cnt();
         let r_plain = if me == 1 {
@@ -76,17 +83,18 @@ impl MsbPool {
             None
         };
         let r = rss::share_input(ctx.comm, ctx.seeds, 1, r_plain.as_ref(),
-                                 &[n]);
+                                 &[n])?;
         let s = beta_a.scale(-2).add_const(me, 1);
-        let rs = rss::mul(ctx.comm, ctx.seeds, &r, &s);
+        let rs = rss::mul(ctx.comm, ctx.seeds, &r, &s)?;
 
         let mut res = self.r.borrow_mut();
-        res.beta_a_bits.extend_from_slice(&beta.a);
-        res.beta_b_bits.extend_from_slice(&beta.b);
+        res.beta_a_bits.extend(&beta.a);
+        res.beta_b_bits.extend(&beta.b);
         res.beta_a.0.extend_from_slice(&beta_a.a.data);
         res.beta_a.1.extend_from_slice(&beta_a.b.data);
         res.rs.0.extend_from_slice(&rs.a.data);
         res.rs.1.extend_from_slice(&rs.b.data);
+        Ok(())
     }
 
     /// Draw `n` elements; panics if the reservoir is short (protocol
@@ -100,14 +108,10 @@ impl MsbPool {
             let rest = v.split_off(n);
             std::mem::replace(v, rest)
         };
-        let splitb = |v: &mut Vec<u8>| -> Vec<u8> {
-            let rest = v.split_off(n);
-            std::mem::replace(v, rest)
-        };
         MsbTuple {
             beta: BitShare {
-                a: splitb(&mut res.beta_a_bits),
-                b: splitb(&mut res.beta_b_bits),
+                a: res.beta_a_bits.take_front(n),
+                b: res.beta_b_bits.take_front(n),
             },
             beta_a: Share {
                 a: Tensor::from_vec(&[n], split(&mut res.beta_a.0)),
@@ -127,15 +131,15 @@ impl MsbPool {
 
 /// Online MSB with preprocessed material: 2 rounds.
 pub fn msb_online(ctx: &Ctx, x: &Share, tup: MsbTuple)
-                  -> super::msb::MsbOut {
+                  -> Result<super::msb::MsbOut> {
     let me = ctx.id();
     let n = x.len();
     let xp = x.scale(2).add_const(me, 1).reshape(&[n]);
-    let u_sh = rss::mul(ctx.comm, ctx.seeds, &xp, &tup.rs);
-    let u = rss::reveal(ctx.comm, &u_sh);
+    let u_sh = rss::mul(ctx.comm, ctx.seeds, &xp, &tup.rs)?;
+    let u = rss::reveal(ctx.comm, &u_sh)?;
     let beta_pub: Vec<u8> = u.data.iter().map(|&v| crate::ring::msb(v))
         .collect();
-    let bits = tup.beta.xor_const(me, &beta_pub);
+    let bits = tup.beta.xor_const(me, &BitTensor::from_bits(&beta_pub));
     let mut sign_a = tup.beta_a;
     let apply = |t: &mut Tensor, slot_owner: bool| {
         for (i, v) in t.data.iter_mut().enumerate() {
@@ -148,7 +152,7 @@ pub fn msb_online(ctx: &Ctx, x: &Share, tup: MsbTuple)
     };
     apply(&mut sign_a.a, me == 0);
     apply(&mut sign_a.b, me == 2);
-    super::msb::MsbOut { bits, sign_a }
+    Ok(super::msb::MsbOut { bits, sign_a })
 }
 
 #[cfg(test)]
@@ -168,8 +172,8 @@ mod tests {
             let x = Tensor::from_vec(&[120], vals.clone());
             let xs = deal(&x, &mut rng);
             let pool = MsbPool::new();
-            pool.generate(ctx, 200);
-            let out = msb_online(ctx, &xs[ctx.id()], pool.take(120));
+            pool.generate(ctx, 200).unwrap();
+            let out = msb_online(ctx, &xs[ctx.id()], pool.take(120)).unwrap();
             assert_eq!(pool.available(), 80);
             (out.bits, out.sign_a, vals)
         });
@@ -194,9 +198,9 @@ mod tests {
             let x = rng.tensor_small(&[32], 1 << 20);
             let xs = deal(&x, &mut rng);
             let pool = MsbPool::new();
-            pool.generate(ctx, 32);
+            pool.generate(ctx, 32).unwrap();
             ctx.comm.reset_stats();
-            let _ = msb_online(ctx, &xs[ctx.id()], pool.take(32));
+            let _ = msb_online(ctx, &xs[ctx.id()], pool.take(32)).unwrap();
         });
         for (_, st) in &results {
             assert_eq!(st.rounds, 2, "online rounds = {}", st.rounds);
@@ -205,16 +209,45 @@ mod tests {
 
     #[test]
     fn multiple_generates_accumulate_fifo() {
+        // the word-packed reservoir must splice across non-aligned
+        // boundaries exactly like the old Vec<u8> split_off did
         let results = run3(|ctx| {
             let pool = MsbPool::new();
-            pool.generate(ctx, 10);
-            pool.generate(ctx, 5);
+            pool.generate(ctx, 10).unwrap();
+            pool.generate(ctx, 5).unwrap();
             assert_eq!(pool.available(), 15);
             let t = pool.take(12);
             assert_eq!(t.beta.len(), 12);
+            assert_eq!(t.beta_a.len(), 12);
             assert_eq!(pool.available(), 3);
+            let rest = pool.take(3);
+            assert_eq!(rest.beta.len(), 3);
+            assert_eq!(pool.available(), 0);
         });
         assert_eq!(results.len(), 3);
+    }
+
+    #[test]
+    fn pooled_beta_is_consistent_with_its_conversion() {
+        // drawing across generate() boundaries must keep beta^B and
+        // beta^A describing the same bits: reconstruct both and compare.
+        let results = run3(|ctx| {
+            let pool = MsbPool::new();
+            pool.generate(ctx, 70).unwrap();
+            pool.generate(ctx, 70).unwrap();
+            let _burn = pool.take(33); // misalign the word boundary
+            let t = pool.take(90);
+            (t.beta, t.beta_a)
+        });
+        let bits: [BitShare; 3] =
+            std::array::from_fn(|i| results[i].0 .0.clone());
+        let arith: [Share; 3] =
+            std::array::from_fn(|i| results[i].0 .1.clone());
+        let b = reconstruct_bits(&bits);
+        let a = reconstruct(&arith);
+        for i in 0..90 {
+            assert_eq!(i32::from(b[i]), a.data[i], "element {i}");
+        }
     }
 
     #[test]

@@ -8,6 +8,12 @@
 //! * `relu_mul` -- ablation arm: B2A the NOT-MSB bit then one RSS
 //!   multiplication.  One round fewer on some paths, but a full extra
 //!   ring-element conversion; the benches compare the two (exp A1).
+//!
+//! MSB shares arrive word-packed; the sender-side message construction is
+//! the only per-element walk (it builds ring elements anyway), and the OT
+//! choice bits are passed as `BitTensor` components directly.
+
+use anyhow::Result;
 
 use crate::ot;
 use crate::prf::{domain, PrfStream};
@@ -15,10 +21,10 @@ use crate::ring::{Elem, Tensor};
 use crate::rss::{self, BitShare, Share};
 use crate::transport::Dir;
 
-use super::{b2a::b2a, msb::msb_extract, sign::sign_bits, Ctx};
+use super::{b2a::b2a, expect_elems, msb::msb_extract, sign::sign_bits, Ctx};
 
 /// Algorithm 5.  `x` arithmetic shares, `msb` the matching MSB bit shares.
-pub fn relu_ot(ctx: &Ctx, x: &Share, msb: &BitShare) -> Share {
+pub fn relu_ot(ctx: &Ctx, x: &Share, msb: &BitShare) -> Result<Share> {
     let n = x.len();
     let me = ctx.id();
     let shape = [n];
@@ -39,9 +45,10 @@ pub fn relu_ot(ctx: &Ctx, x: &Share, msb: &BitShare) -> Share {
                                         domain::SHARE);
             let a2: Vec<Elem> = (0..n).map(|_| sp.next_elem()).collect();
             ctx.comm.send_elems(Dir::Next, &a2);
+            let nots = msb.a.xor(&msb.b); // msb_1 ^ msb_2, word-parallel
             let (m0, m1): (Vec<Elem>, Vec<Elem>) = (0..n).map(|i| {
                 let x12 = x.a.data[i].wrapping_add(x.b.data[i]);
-                let base = 1 ^ msb.a[i] ^ msb.b[i]; // 1^msb_1^msb_2
+                let base = 1 ^ nots.get(i); // 1^msb_1^msb_2
                 let mask = a1[i].wrapping_add(a2[i]);
                 let v0 = (Elem::from(base)).wrapping_mul(x12)
                     .wrapping_sub(mask);
@@ -50,7 +57,7 @@ pub fn relu_ot(ctx: &Ctx, x: &Share, msb: &BitShare) -> Share {
                 (v0, v1)
             }).unzip();
             ot::run(ctx.comm, ctx.seeds, roles1, n,
-                    ot::Input::Sender { m0: &m0, m1: &m1 });
+                    ot::Input::Sender { m0: &m0, m1: &m1 })?;
             // A-shares for P1: (A_1, A_2) = (alpha_1, alpha_2)
             let a_share = Share {
                 a: Tensor::from_vec(&shape, a1),
@@ -58,24 +65,24 @@ pub fn relu_ot(ctx: &Ctx, x: &Share, msb: &BitShare) -> Share {
             };
             // OT 2: P1 is helper with choice bit msb_2 (= its b component)
             ot::run(ctx.comm, ctx.seeds, roles2, n,
-                    ot::Input::Helper { c: &msb.b });
+                    ot::Input::Helper { c: &msb.b })?;
             // B-shares for P1: (B_1, B_2) = (gamma_b, forwarded from P2)
             let mut sg = PrfStream::new(&ctx.seeds.mine, cnt2, domain::SHARE);
             let gb: Vec<Elem> = (0..n).map(|_| sg.next_elem()).collect();
-            let b2v = ctx.comm.recv_elems(Dir::Next); // from P2
+            let b2v = expect_elems(ctx.comm.recv_elems(Dir::Next)?, n)?;
             ctx.comm.round();
             let b_share = Share {
                 a: Tensor::from_vec(&shape, gb),
                 b: Tensor::from_vec(&shape, b2v),
             };
-            a_share.add(&b_share)
+            Ok(a_share.add(&b_share))
         }
         0 => {
             // OT 1: receiver with choice bit msb_0 (= a component)
             let mut s1 = PrfStream::new(&ctx.seeds.next, cnt1, domain::SHARE);
             let a1: Vec<Elem> = (0..n).map(|_| s1.next_elem()).collect();
             let a0 = ot::run(ctx.comm, ctx.seeds, roles1, n,
-                             ot::Input::Receiver { c: &msb.a })
+                             ot::Input::Receiver { c: &msb.a })?
                 .expect("ot1 output");
             ctx.comm.send_elems(Dir::Prev, &a0); // replicate A_0 to P2
             ctx.comm.round();
@@ -89,27 +96,28 @@ pub fn relu_ot(ctx: &Ctx, x: &Share, msb: &BitShare) -> Share {
             let ga: Vec<Elem> = (0..n).map(|_| sga.next_elem()).collect();
             let mut sgb = PrfStream::new(&ctx.seeds.next, cnt2, domain::SHARE);
             let gb: Vec<Elem> = (0..n).map(|_| sgb.next_elem()).collect();
+            let nots = msb.a.xor(&msb.b); // msb_0 ^ msb_1 on P0
             let (m0, m1): (Vec<Elem>, Vec<Elem>) = (0..n).map(|i| {
                 let x0 = x.a.data[i];
-                let base = 1 ^ msb.a[i] ^ msb.b[i]; // 1^msb_0^msb_1
+                let base = 1 ^ nots.get(i); // 1^msb_0^msb_1
                 let mask = ga[i].wrapping_add(gb[i]);
                 ((Elem::from(base)).wrapping_mul(x0).wrapping_sub(mask),
                  (Elem::from(base ^ 1)).wrapping_mul(x0).wrapping_sub(mask))
             }).unzip();
             ot::run(ctx.comm, ctx.seeds, roles2, n,
-                    ot::Input::Sender { m0: &m0, m1: &m1 });
+                    ot::Input::Sender { m0: &m0, m1: &m1 })?;
             let b_share = Share {
                 a: Tensor::from_vec(&shape, ga),
                 b: Tensor::from_vec(&shape, gb),
             };
-            a_share.add(&b_share)
+            Ok(a_share.add(&b_share))
         }
         2 => {
-            let a2 = ctx.comm.recv_elems(Dir::Prev); // alpha_2 from P1
+            let a2 = expect_elems(ctx.comm.recv_elems(Dir::Prev)?, n)?;
             // OT 1: helper with choice msb_0 (= b component on P2)
             ot::run(ctx.comm, ctx.seeds, roles1, n,
-                    ot::Input::Helper { c: &msb.b });
-            let a0 = ctx.comm.recv_elems(Dir::Next); // A_0 from P0
+                    ot::Input::Helper { c: &msb.b })?;
+            let a0 = expect_elems(ctx.comm.recv_elems(Dir::Next)?, n)?;
             ctx.comm.round();
             let a_share = Share {
                 a: Tensor::from_vec(&shape, a2),
@@ -117,7 +125,7 @@ pub fn relu_ot(ctx: &Ctx, x: &Share, msb: &BitShare) -> Share {
             };
             // OT 2: receiver with choice msb_2 (= a component on P2)
             let b2v = ot::run(ctx.comm, ctx.seeds, roles2, n,
-                              ot::Input::Receiver { c: &msb.a })
+                              ot::Input::Receiver { c: &msb.a })?
                 .expect("ot2 output");
             ctx.comm.send_elems(Dir::Prev, &b2v); // replicate B_2 to P1
             ctx.comm.round();
@@ -127,24 +135,24 @@ pub fn relu_ot(ctx: &Ctx, x: &Share, msb: &BitShare) -> Share {
                 a: Tensor::from_vec(&shape, b2v),
                 b: Tensor::from_vec(&shape, ga),
             };
-            a_share.add(&b_share)
+            Ok(a_share.add(&b_share))
         }
         _ => unreachable!(),
     }
 }
 
 /// Ablation arm: ReLU as B2A(NOT msb) then one RSS multiplication.
-pub fn relu_mul(ctx: &Ctx, x: &Share, msb: &BitShare) -> Share {
+pub fn relu_mul(ctx: &Ctx, x: &Share, msb: &BitShare) -> Result<Share> {
     let bits = sign_bits(ctx, msb);
-    let b = b2a(ctx, &bits);
+    let b = b2a(ctx, &bits)?;
     let flat = x.clone().reshape(&[x.len()]);
-    rss::mul(ctx.comm, ctx.seeds, &b, &flat)
+    Ok(rss::mul(ctx.comm, ctx.seeds, &b, &flat)?)
 }
 
 /// Full ReLU from arithmetic shares (MSB + Algorithm 5).
-pub fn relu(ctx: &Ctx, x: &Share) -> Share {
+pub fn relu(ctx: &Ctx, x: &Share) -> Result<Share> {
     let flat = x.clone().reshape(&[x.len()]);
-    let msb = msb_extract(ctx, &flat);
+    let msb = msb_extract(ctx, &flat)?;
     relu_ot(ctx, &flat, &msb)
 }
 
@@ -169,7 +177,7 @@ mod tests {
             let x = Tensor::from_vec(&[80], vals.clone());
             let xs = deal(&x, &mut rng);
             let ms = deal_bits(&msb_bits, &mut rng);
-            (relu_ot(ctx, &xs[ctx.id()], &ms[ctx.id()]), vals)
+            (relu_ot(ctx, &xs[ctx.id()], &ms[ctx.id()]).unwrap(), vals)
         });
         let vals = results[0].0 .1.clone();
         let shares: [Share; 3] =
@@ -194,8 +202,8 @@ mod tests {
             let x = Tensor::from_vec(&[40], vals.clone());
             let xs = deal(&x, &mut rng);
             let ms = deal_bits(&msb_bits, &mut rng);
-            let a = relu_ot(ctx, &xs[ctx.id()], &ms[ctx.id()]);
-            let b = relu_mul(ctx, &xs[ctx.id()], &ms[ctx.id()]);
+            let a = relu_ot(ctx, &xs[ctx.id()], &ms[ctx.id()]).unwrap();
+            let b = relu_mul(ctx, &xs[ctx.id()], &ms[ctx.id()]).unwrap();
             (a, b)
         });
         let ots: [Share; 3] = std::array::from_fn(|i| results[i].0 .0.clone());
@@ -210,7 +218,7 @@ mod tests {
             let vals = vec![5, -5, 0, 1 << 20, -(1 << 20), 1, -1, 123456];
             let x = Tensor::from_vec(&[8], vals.clone());
             let xs = deal(&x, &mut rng);
-            (relu(ctx, &xs[ctx.id()]), vals)
+            (relu(ctx, &xs[ctx.id()]).unwrap(), vals)
         });
         let vals = results[0].0 .1.clone();
         let shares: [Share; 3] =

@@ -1,17 +1,19 @@
 //! Secure Sign (Algorithm 4): Sign(x) = 1 XOR MSB(x) in {0,1}.
 //!
 //! Produces the activation bit both as binary shares (free local NOT on
-//! the MSB shares) and, via the B2A conversion, as arithmetic shares the
-//! next linear layer / maxpool consumes.
+//! the word-packed MSB shares) and, via the B2A conversion, as arithmetic
+//! shares the next linear layer / maxpool consumes.
+
+use anyhow::Result;
 
 use crate::rss::{BitShare, Share};
 
 use super::{msb::msb_extract_full, Ctx};
 
-/// [Sign(x)]^B = NOT [MSB(x)]^B -- local once the MSB shares exist.
+/// [Sign(x)]^B = NOT [MSB(x)]^B -- local (one word-parallel XOR with the
+/// public all-ones vector, folded into the y_0 slot).
 pub fn sign_bits(ctx: &Ctx, msb: &BitShare) -> BitShare {
-    let ones = vec![1u8; msb.len()];
-    msb.xor_const(ctx.id(), &ones)
+    msb.not(ctx.id())
 }
 
 /// Full secure Sign from arithmetic input shares.  The arithmetic output
@@ -19,9 +21,9 @@ pub fn sign_bits(ctx: &Ctx, msb: &BitShare) -> BitShare {
 /// msb::MsbOut): Algorithm 4 adds zero rounds to Algorithm 3.
 /// Returns (arithmetic bit shares, msb bit shares); the caller reuses the
 /// MSB shares for ReLU-style selections.
-pub fn sign(ctx: &Ctx, x: &Share) -> (Share, BitShare) {
-    let out = msb_extract_full(ctx, x);
-    (out.sign_a, out.bits)
+pub fn sign(ctx: &Ctx, x: &Share) -> Result<(Share, BitShare)> {
+    let out = msb_extract_full(ctx, x)?;
+    Ok((out.sign_a, out.bits))
 }
 
 #[cfg(test)]
@@ -29,7 +31,7 @@ mod tests {
     use super::*;
     use crate::protocols::testsupport::run3;
     use crate::ring::{self, Tensor};
-    use crate::rss::{deal, reconstruct};
+    use crate::rss::{deal, deal_bits, reconstruct, reconstruct_bits};
     use crate::testutil::Rng;
 
     #[test]
@@ -40,7 +42,7 @@ mod tests {
                 .collect();
             let x = Tensor::from_vec(&[100], vals.clone());
             let shares = deal(&x, &mut rng);
-            let (arith, _) = sign(ctx, &shares[ctx.id()]);
+            let (arith, _) = sign(ctx, &shares[ctx.id()]).unwrap();
             (arith, vals)
         });
         let vals = results[0].0 .1.clone();
@@ -59,9 +61,28 @@ mod tests {
             let mut rng = Rng::new(2);
             let x = Tensor::from_vec(&[4], vec![0, 0, 5, -5]);
             let shares = deal(&x, &mut rng);
-            sign(ctx, &shares[ctx.id()]).0
+            sign(ctx, &shares[ctx.id()]).unwrap().0
         });
         let shares: [Share; 3] = std::array::from_fn(|i| results[i].0.clone());
         assert_eq!(reconstruct(&shares).data, vec![1, 1, 1, 0]);
+    }
+
+    #[test]
+    fn sign_bits_is_local_not() {
+        // free NOT: no communication, word-packed end to end
+        let results = run3(|ctx| {
+            let mut rng = Rng::new(3);
+            let bits: Vec<u8> = (0..130).map(|_| rng.bit()).collect();
+            let shares = deal_bits(&bits, &mut rng);
+            ctx.comm.reset_stats();
+            let s = sign_bits(ctx, &shares[ctx.id()]);
+            assert_eq!(ctx.comm.stats().bytes_sent, 0);
+            (s, bits)
+        });
+        let bits = results[0].0 .1.clone();
+        let shares: [BitShare; 3] =
+            std::array::from_fn(|i| results[i].0 .0.clone());
+        let want: Vec<u8> = bits.iter().map(|&b| 1 ^ b).collect();
+        assert_eq!(reconstruct_bits(&shares), want);
     }
 }

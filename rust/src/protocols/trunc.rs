@@ -17,15 +17,17 @@
 //! 2^{31 - bound - 1}, the statistical leakage is ~(bound+1) - 31 bits
 //! (sigma ~ 6 at the default bound of 24).  Documented in DESIGN.md.
 
+use anyhow::Result;
+
 use crate::prf::{domain, PrfStream};
 use crate::ring::{Elem, Tensor};
 use crate::rss::{self, Share};
 use crate::transport::Dir;
 
-use super::Ctx;
+use super::{expect_elems, Ctx};
 
 /// Truncate shared values by `f` fractional bits.
-pub fn trunc(ctx: &Ctx, x: &Share, f: u32) -> Share {
+pub fn trunc(ctx: &Ctx, x: &Share, f: u32) -> Result<Share> {
     let n = x.len();
     let me = ctx.id();
     let bound = ctx.cfg.bound_bits;
@@ -50,30 +52,31 @@ pub fn trunc(ctx: &Ctx, x: &Share, f: u32) -> Share {
             ctx.comm.send_elems(Dir::Next, &masked); // P2 = P1.next
             ctx.comm.round();
             let t = rss::share_input(ctx.comm, ctx.seeds, 2, None,
-                                     x.shape());
+                                     x.shape())?;
             // correction: subtract (r>>f) + 2^{bound-f} from x_1 (P1.a)
             let mut out = t;
             for i in 0..n {
                 let corr = (r[i] >> f).wrapping_add(1 << (bound - f));
                 out.a.data[i] = out.a.data[i].wrapping_sub(corr);
             }
-            out
+            Ok(out)
         }
         0 => {
             let r = r.unwrap();
             ctx.comm.round(); // P1 -> P2 reveal happens this round
             let t = rss::share_input(ctx.comm, ctx.seeds, 2, None,
-                                     x.shape());
+                                     x.shape())?;
             // x_1 is P0's b component
             let mut out = t;
             for i in 0..n {
                 let corr = (r[i] >> f).wrapping_add(1 << (bound - f));
                 out.b.data[i] = out.b.data[i].wrapping_sub(corr);
             }
-            out
+            Ok(out)
         }
         2 => {
-            let masked = ctx.comm.recv_elems(Dir::Prev); // from P1
+            let masked =
+                expect_elems(ctx.comm.recv_elems(Dir::Prev)?, n)?; // from P1
             ctx.comm.round();
             // y = (x_1 + shift + r) + x_2 + x_0 ; P2 holds (x_2, x_0)
             let y: Vec<Elem> = (0..n).map(|i| {
@@ -84,7 +87,8 @@ pub fn trunc(ctx: &Ctx, x: &Share, f: u32) -> Share {
                 v >> f
             }).collect();
             let t = Tensor::from_vec(x.shape(), t);
-            rss::share_input(ctx.comm, ctx.seeds, 2, Some(&t), x.shape())
+            Ok(rss::share_input(ctx.comm, ctx.seeds, 2, Some(&t),
+                                x.shape())?)
         }
         _ => unreachable!(),
     }
@@ -112,7 +116,7 @@ mod tests {
                 .collect();
             let x = Tensor::from_vec(&[200], vals.clone());
             let shares = deal(&x, &mut rng);
-            (trunc(ctx, &shares[ctx.id()], 12), vals)
+            (trunc(ctx, &shares[ctx.id()], 12).unwrap(), vals)
         });
         let vals = results[0].0 .1.clone();
         let shares: [Share; 3] =
@@ -130,7 +134,7 @@ mod tests {
             let mut rng = Rng::new(9);
             let x = rng.tensor_small(&[16], 1 << 20);
             let shares = deal(&x, &mut rng);
-            let _ = trunc(ctx, &shares[ctx.id()], 8);
+            let _ = trunc(ctx, &shares[ctx.id()], 8).unwrap();
         });
         for (_, st) in &results {
             assert!(st.rounds <= 2, "rounds = {}", st.rounds);
@@ -144,7 +148,7 @@ mod tests {
             let vals = vec![-4096, 4096, -1, 1, 0, -(1 << 22), 1 << 22];
             let x = Tensor::from_vec(&[7], vals.clone());
             let shares = deal(&x, &mut rng);
-            (trunc(ctx, &shares[ctx.id()], 8), vals)
+            (trunc(ctx, &shares[ctx.id()], 8).unwrap(), vals)
         });
         let shares: [Share; 3] =
             std::array::from_fn(|i| results[i].0 .0.clone());

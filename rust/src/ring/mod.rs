@@ -5,8 +5,10 @@
 //! paper's `l = 32` setting and the XLA `s32` semantics of the AOT
 //! artifacts, so the PJRT path and the native path are bit-identical.
 
+pub mod bits;
 pub mod tensor;
 
+pub use bits::BitTensor;
 pub use tensor::Tensor;
 
 /// Ring element (alias to make intent explicit at API boundaries).

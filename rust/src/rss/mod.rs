@@ -5,10 +5,19 @@
 //! (addition, constant ops, the Algorithm-2 linear contraction) never
 //! communicate; multiplication and resharing use one ring message to the
 //! previous party, masked by 3-out-of-3 zero randomness.
+//!
+//! Boolean shares (`BitShare`) use the same replication structure mod 2,
+//! with both components stored as word-packed `ring::bits::BitTensor`s:
+//! XOR/AND/NOT are word-parallel, and pack/unpack to per-bit vectors
+//! happens only at the plaintext boundary (dealing and reconstruction).
+//!
+//! Interactive pieces return `Result` -- received lengths come from the
+//! peer and are validated, never asserted (transport hardening).
 
 use crate::prf::PartySeeds;
+use crate::ring::bits::BitTensor;
 use crate::ring::{Elem, Tensor};
-use crate::transport::{Comm, Dir};
+use crate::transport::{Comm, Dir, WireError};
 
 /// One party's RSS share of a tensor: `a = x_i`, `b = x_{i+1}`.
 #[derive(Clone, Debug, PartialEq)]
@@ -17,11 +26,12 @@ pub struct Share {
     pub b: Tensor,
 }
 
-/// One party's RSS share of a bit tensor (mod 2): `a = y_i`, `b = y_{i+1}`.
-#[derive(Clone, Debug, PartialEq)]
+/// One party's RSS share of a bit tensor (mod 2): `a = y_i`, `b = y_{i+1}`,
+/// both word-packed.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct BitShare {
-    pub a: Vec<u8>,
-    pub b: Vec<u8>,
+    pub a: BitTensor,
+    pub b: BitTensor,
 }
 
 impl Share {
@@ -83,6 +93,15 @@ impl Share {
 }
 
 impl BitShare {
+    /// The zero-length share (concatenation identity).
+    pub fn empty() -> BitShare {
+        BitShare { a: BitTensor::zeros(0), b: BitTensor::zeros(0) }
+    }
+
+    pub fn zeros(n: usize) -> BitShare {
+        BitShare { a: BitTensor::zeros(n), b: BitTensor::zeros(n) }
+    }
+
     pub fn len(&self) -> usize {
         self.a.len()
     }
@@ -91,27 +110,37 @@ impl BitShare {
         self.a.is_empty()
     }
 
+    /// Word-parallel share XOR (local).
     pub fn xor(&self, rhs: &BitShare) -> BitShare {
-        BitShare {
-            a: self.a.iter().zip(&rhs.a).map(|(x, y)| x ^ y).collect(),
-            b: self.b.iter().zip(&rhs.b).map(|(x, y)| x ^ y).collect(),
-        }
+        BitShare { a: self.a.xor(&rhs.a), b: self.b.xor(&rhs.b) }
     }
 
     /// XOR with a public bit vector (folded into the y_0 component).
-    pub fn xor_const(&self, party: usize, bits: &[u8]) -> BitShare {
+    pub fn xor_const(&self, party: usize, bits: &BitTensor) -> BitShare {
         let mut out = self.clone();
         if party == 0 {
-            for (a, &c) in out.a.iter_mut().zip(bits) {
-                *a ^= c;
-            }
+            out.a.xor_assign(bits);
         }
         if party == 2 {
-            for (b, &c) in out.b.iter_mut().zip(bits) {
-                *b ^= c;
-            }
+            out.b.xor_assign(bits);
         }
         out
+    }
+
+    /// Local NOT of the shared bits: XOR with the public all-ones vector.
+    pub fn not(&self, party: usize) -> BitShare {
+        self.xor_const(party, &BitTensor::ones(self.len()))
+    }
+
+    /// Append `other`'s bits after this share's (both components).
+    pub fn extend(&mut self, other: &BitShare) {
+        self.a.extend(&other.a);
+        self.b.extend(&other.b);
+    }
+
+    /// Copy out bits `[start, start + len)` of both components.
+    pub fn slice(&self, start: usize, len: usize) -> BitShare {
+        BitShare { a: self.a.slice(start, len), b: self.b.slice(start, len) }
     }
 }
 
@@ -136,12 +165,13 @@ pub fn deal(x: &Tensor, rng: &mut crate::testutil::Rng) -> [Share; 3] {
     ]
 }
 
-/// Deal a bit vector into RSS bit shares.
-pub fn deal_bits(bits: &[u8], rng: &mut crate::testutil::Rng) -> [BitShare; 3] {
-    let y1: Vec<u8> = bits.iter().map(|_| rng.bit()).collect();
-    let y2: Vec<u8> = bits.iter().map(|_| rng.bit()).collect();
-    let y0: Vec<u8> = bits.iter().enumerate()
-        .map(|(i, &b)| b ^ y1[i] ^ y2[i]).collect();
+/// Deal a plaintext bit vector into RSS bit shares (plaintext boundary:
+/// packs once, then all share structure is word-wise).
+pub fn deal_bits(bits: &[u8], rng: &mut crate::testutil::Rng)
+                 -> [BitShare; 3] {
+    let y1 = BitTensor::from_fn(bits.len(), |_| rng.bit());
+    let y2 = BitTensor::from_fn(bits.len(), |_| rng.bit());
+    let y0 = BitTensor::from_bits(bits).xor(&y1).xor(&y2);
     [
         BitShare { a: y0.clone(), b: y1.clone() },
         BitShare { a: y1, b: y2.clone() },
@@ -157,35 +187,50 @@ pub fn reconstruct(shares: &[Share; 3]) -> Tensor {
     out
 }
 
+/// Reconstruct a shared bit vector (plaintext boundary: one word-wise XOR,
+/// then a single unpack).
 pub fn reconstruct_bits(shares: &[BitShare; 3]) -> Vec<u8> {
-    (0..shares[0].a.len())
-        .map(|i| shares[0].a[i] ^ shares[1].a[i] ^ shares[2].a[i])
-        .collect()
+    shares[0].a.xor(&shares[1].a).xor(&shares[2].a).to_bits()
 }
 
 // -------------------------------------------------------------------------
 // interactive pieces
 // -------------------------------------------------------------------------
+/// Validate a peer-sent element count (shared by the protocol layer's
+/// `protocols::expect_elems`, which converts the error to anyhow).
+pub(crate) fn expect_len(v: Vec<Elem>, n: usize)
+                         -> Result<Vec<Elem>, WireError> {
+    if v.len() == n {
+        Ok(v)
+    } else {
+        Err(WireError::Malformed(format!(
+            "wire desync: peer sent {} ring elements, expected {n}",
+            v.len())))
+    }
+}
+
 /// Reshare a 3-out-of-3 additive share `z_i` into RSS: mask with zero
 /// randomness, send to P_{i-1}, receive from P_{i+1}.  One round, one ring
 /// message (Algorithm 2, steps 3-5).
-pub fn reshare(comm: &Comm, seeds: &PartySeeds, zi: &Tensor) -> Share {
+pub fn reshare(comm: &Comm, seeds: &PartySeeds, zi: &Tensor)
+               -> Result<Share, WireError> {
     let cnt = seeds.next_cnt();
     let mask = seeds.zero3(cnt, zi.len());
     let masked: Vec<Elem> = zi.data.iter().zip(&mask)
         .map(|(&z, &m)| z.wrapping_add(m)).collect();
     comm.send_elems(Dir::Prev, &masked);
-    let from_next = comm.recv_elems(Dir::Next);
+    let from_next = expect_len(comm.recv_elems(Dir::Next)?, zi.len())?;
     comm.round();
-    Share {
+    Ok(Share {
         a: Tensor::from_vec(&zi.shape, masked),
         b: Tensor::from_vec(&zi.shape, from_next),
-    }
+    })
 }
 
 /// RSS multiplication `[z] = [x] * [y]` (elementwise): local 3-term
 /// product plus one reshare round.
-pub fn mul(comm: &Comm, seeds: &PartySeeds, x: &Share, y: &Share) -> Share {
+pub fn mul(comm: &Comm, seeds: &PartySeeds, x: &Share, y: &Share)
+           -> Result<Share, WireError> {
     assert_eq!(x.shape(), y.shape());
     let zi: Vec<Elem> = (0..x.len()).map(|i| {
         let (xi, xi1) = (x.a.data[i], x.b.data[i]);
@@ -200,16 +245,17 @@ pub fn mul(comm: &Comm, seeds: &PartySeeds, x: &Share, y: &Share) -> Share {
 /// Reveal the shared value to all parties: each sends its `a` component to
 /// the next party (so everyone gains the one missing additive term).
 /// One round, one ring message per party.
-pub fn reveal(comm: &Comm, x: &Share) -> Tensor {
+pub fn reveal(comm: &Comm, x: &Share) -> Result<Tensor, WireError> {
     comm.send_elems(Dir::Next, &x.a.data);
-    let x_prev = comm.recv_elems(Dir::Prev); // x_{i-1} = the missing term
+    // x_{i-1} = the missing term
+    let x_prev = expect_len(comm.recv_elems(Dir::Prev)?, x.len())?;
     comm.round();
     let mut out = x.a.clone();
     out.add_assign(&x.b);
     for (o, &v) in out.data.iter_mut().zip(&x_prev) {
         *o = o.wrapping_add(v);
     }
-    out
+    Ok(out)
 }
 
 /// Input sharing: `owner` holds plaintext `x` and distributes RSS shares.
@@ -217,7 +263,8 @@ pub fn reveal(comm: &Comm, x: &Share) -> Tensor {
 /// each neighbour (so those travel for free) and sends only the remaining
 /// component; cost is one ring message to one neighbour.
 pub fn share_input(comm: &Comm, seeds: &PartySeeds, owner: usize,
-                   x: Option<&Tensor>, shape: &[usize]) -> Share {
+                   x: Option<&Tensor>, shape: &[usize])
+                   -> Result<Share, WireError> {
     use crate::prf::{domain, PrfStream};
     let cnt = seeds.next_cnt();
     let n: usize = shape.iter().product();
@@ -235,28 +282,28 @@ pub fn share_input(comm: &Comm, seeds: &PartySeeds, owner: usize,
         comm.send_elems(Dir::Prev, &x_prev);
         comm.send_elems(Dir::Next, &x_prev);
         comm.round();
-        Share {
+        Ok(Share {
             a: Tensor::zeros(shape),
             b: Tensor::from_vec(shape, x_next),
-        }
+        })
     } else if me == (owner + 1) % 3 {
         // holds (x_{me} = PRF, x_{me+1} = x_prev received)
         let mut s = PrfStream::new(&seeds.mine, cnt, domain::SHARE);
         let x_mine: Vec<Elem> = (0..n).map(|_| s.next_elem()).collect();
-        let x_prev = comm.recv_elems(Dir::Prev);
+        let x_prev = expect_len(comm.recv_elems(Dir::Prev)?, n)?;
         comm.round();
-        Share {
+        Ok(Share {
             a: Tensor::from_vec(shape, x_mine),
             b: Tensor::from_vec(shape, x_prev),
-        }
+        })
     } else {
         // me == owner + 2: holds (x_{me} = received, x_{me+1} = 0 (owner's))
-        let x_mine = comm.recv_elems(Dir::Next);
+        let x_mine = expect_len(comm.recv_elems(Dir::Next)?, n)?;
         comm.round();
-        Share {
+        Ok(Share {
             a: Tensor::from_vec(shape, x_mine),
             b: Tensor::zeros(shape),
-        }
+        })
     }
 }
 
@@ -302,15 +349,52 @@ mod tests {
     #[test]
     fn bit_shares_roundtrip_and_xor() {
         prop(100, |rng: &mut Rng| {
-            let bits: Vec<u8> = (0..16).map(|_| rng.bit()).collect();
-            let cs: Vec<u8> = (0..16).map(|_| rng.bit()).collect();
+            // straddle word boundaries to exercise the packed layout
+            let n = rng.range(1, 200);
+            let bits: Vec<u8> = (0..n).map(|_| rng.bit()).collect();
+            let cs: Vec<u8> = (0..n).map(|_| rng.bit()).collect();
             let shares = deal_bits(&bits, rng);
             assert_eq!(reconstruct_bits(&shares), bits);
+            // replication consistency mod 2
+            for i in 0..3 {
+                assert_eq!(shares[i].b, shares[(i + 1) % 3].a);
+            }
+            let cs_t = BitTensor::from_bits(&cs);
             let xored: [BitShare; 3] =
-                std::array::from_fn(|i| shares[i].xor_const(i, &cs));
+                std::array::from_fn(|i| shares[i].xor_const(i, &cs_t));
             let want: Vec<u8> = bits.iter().zip(&cs).map(|(a, b)| a ^ b)
                 .collect();
             assert_eq!(reconstruct_bits(&xored), want);
+        });
+    }
+
+    #[test]
+    fn packed_bitshare_ops_match_bytewise_reference() {
+        // old-vs-new equivalence: the word-packed share algebra must agree
+        // bit-for-bit with the seed's byte-per-bit implementation.
+        prop(100, |rng: &mut Rng| {
+            let n = rng.range(1, 300);
+            let x: Vec<u8> = (0..n).map(|_| rng.bit()).collect();
+            let y: Vec<u8> = (0..n).map(|_| rng.bit()).collect();
+            let xs = deal_bits(&x, rng);
+            let ys = deal_bits(&y, rng);
+            // share XOR == plaintext XOR
+            let xored: [BitShare; 3] =
+                std::array::from_fn(|i| xs[i].xor(&ys[i]));
+            let want: Vec<u8> =
+                x.iter().zip(&y).map(|(a, b)| a ^ b).collect();
+            assert_eq!(reconstruct_bits(&xored), want);
+            // local NOT == plaintext NOT
+            let notted: [BitShare; 3] =
+                std::array::from_fn(|i| xs[i].not(i));
+            let want_not: Vec<u8> = x.iter().map(|&a| 1 ^ a).collect();
+            assert_eq!(reconstruct_bits(&notted), want_not);
+            // extend/slice mirror Vec concat/split on every component
+            let mut cat = xs[0].clone();
+            cat.extend(&ys[0]);
+            assert_eq!(cat.len(), 2 * n);
+            assert_eq!(cat.slice(0, n), xs[0]);
+            assert_eq!(cat.slice(n, n), ys[0]);
         });
     }
 
@@ -337,7 +421,7 @@ mod tests {
             let y = rng.tensor_small(&[32], 1000);
             let xs = deal(&x, &mut rng);
             let ys = deal(&y, &mut rng);
-            let z = mul(c, s, &xs[c.id], &ys[c.id]);
+            let z = mul(c, s, &xs[c.id], &ys[c.id]).unwrap();
             (z, x.mul_elem(&y))
         });
         let want = results[0].1.clone();
@@ -355,7 +439,7 @@ mod tests {
             let mut rng = Rng::new(4);
             let x = rng.tensor(&[16]);
             let xs = deal(&x, &mut rng);
-            (reveal(c, &xs[c.id]), x)
+            (reveal(c, &xs[c.id]).unwrap(), x)
         });
         for (got, want) in &results {
             assert_eq!(got, want);
@@ -370,7 +454,8 @@ mod tests {
                 let x = rng.tensor(&[24]);
                 let share = share_input(
                     c, s, owner,
-                    if c.id == owner { Some(&x) } else { None }, &[24]);
+                    if c.id == owner { Some(&x) } else { None }, &[24])
+                    .unwrap();
                 (share, x)
             });
             let want = results[0].1.clone();

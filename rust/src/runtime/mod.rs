@@ -9,14 +9,28 @@
 //! `make artifacts` -- the integration tests assert the artifacts are
 //! actually exercised.
 
+//! When built without the `pjrt` feature (the default, registry-free
+//! build), only the kind/variant types and `make_backend` are compiled;
+//! requesting a PJRT backend then fails with a clear error and callers
+//! keep the native path.
+
+#[cfg(feature = "pjrt")]
 use std::cell::RefCell;
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::path::PathBuf;
+#[cfg(feature = "pjrt")]
 use std::rc::Rc;
 
-use anyhow::{Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+use anyhow::Result;
 
-use crate::protocols::linear::{LinearBackend, NativeBackend};
+#[cfg(feature = "pjrt")]
+use crate::protocols::linear::NativeBackend;
+use crate::protocols::linear::LinearBackend;
+#[cfg(feature = "pjrt")]
 use crate::ring::Tensor;
 
 /// Which lowering of the RSS contraction to execute (ablation A4).
@@ -38,6 +52,7 @@ impl KernelVariant {
 }
 
 /// Cached-executable PJRT backend for the Algorithm-2 local contraction.
+#[cfg(feature = "pjrt")]
 pub struct PjrtRuntime {
     client: xla::PjRtClient,
     hlo_dir: PathBuf,
@@ -49,6 +64,7 @@ pub struct PjrtRuntime {
     pub native_fallbacks: std::cell::Cell<u64>,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtRuntime {
     pub fn new(hlo_dir: impl Into<PathBuf>, variant: KernelVariant)
                -> Result<Self> {
@@ -107,6 +123,7 @@ impl PjrtRuntime {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl LinearBackend for PjrtRuntime {
     fn warmup(&self, keys: &[String]) {
         let _ = self.precompile(keys.iter().cloned());
@@ -186,17 +203,41 @@ pub enum BackendKind {
 /// Instantiate the backend for one party thread.
 pub fn make_backend(kind: BackendKind, hlo_dir: &std::path::Path)
                     -> Result<Box<dyn LinearBackend>> {
+    let _ = hlo_dir;
     Ok(match kind {
-        BackendKind::Native => Box::new(NativeBackend),
+        BackendKind::Native =>
+            Box::new(crate::protocols::linear::NativeBackend),
+        #[cfg(feature = "pjrt")]
         BackendKind::Pjrt(v) => Box::new(PjrtRuntime::new(hlo_dir, v)?),
+        #[cfg(not(feature = "pjrt"))]
+        BackendKind::Pjrt(_) => anyhow::bail!(
+            "cbnn was built without the `pjrt` feature; rebuild with \
+             --features pjrt (and a real vendor/xla) or use the native \
+             backend"),
     })
 }
 
 #[cfg(test)]
 mod tests {
+    #[allow(unused_imports)]
     use super::*;
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_backend_requires_the_feature() {
+        let err = make_backend(BackendKind::Pjrt(KernelVariant::Pallas),
+                               std::path::Path::new("/nonexistent"))
+            .unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+        // the native path is unaffected
+        assert!(make_backend(BackendKind::Native,
+                             std::path::Path::new("/nonexistent")).is_ok());
+    }
+
+    #[cfg(feature = "pjrt")]
     use crate::testutil::Rng;
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn missing_artifact_falls_back_to_native() {
         let rt = PjrtRuntime::new("/nonexistent", KernelVariant::Xla)

@@ -14,6 +14,43 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::{Duration, Instant};
 
+use crate::ring::bits::BitTensor;
+
+/// Upper bound on a single wire message; a claimed length beyond this is
+/// rejected before any allocation (attacker-controlled length hardening).
+pub const MAX_MSG_BYTES: u64 = 1 << 30;
+
+/// Wire-level failure.  Receive paths return this instead of panicking the
+/// party thread: lengths and structure arrive from the peer and must be
+/// treated as untrusted input (see DESIGN.md §wire format).
+#[derive(Debug)]
+pub enum WireError {
+    /// The peer's channel/socket closed mid-protocol.
+    Closed,
+    /// Socket-level I/O failure.
+    Io(std::io::Error),
+    /// The message failed structural validation (bad length, bad header).
+    Malformed(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Closed => write!(f, "peer hung up"),
+            WireError::Io(e) => write!(f, "transport i/o: {e}"),
+            WireError::Malformed(m) => write!(f, "malformed message: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
 /// One-way network model.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct NetConfig {
@@ -123,26 +160,31 @@ impl Comm {
         }
     }
 
-    fn recv_raw(&self, dir: Dir) -> Vec<u8> {
+    fn recv_raw(&self, dir: Dir) -> Result<Vec<u8>, WireError> {
         match (dir, &self.rx_next, &self.rx_prev) {
             (Dir::Next, LinkRx::Local(rx), _) | (Dir::Prev, _, LinkRx::Local(rx)) => {
-                let msg = rx.recv().expect("peer hung up");
+                let msg = rx.recv().map_err(|_| WireError::Closed)?;
                 let now = Instant::now();
                 if msg.arrival > now {
                     std::thread::sleep(msg.arrival - now);
                 }
-                msg.payload
+                Ok(msg.payload)
             }
             (Dir::Next, LinkRx::Tcp(s), _) | (Dir::Prev, _, LinkRx::Tcp(s)) => {
                 let mut s = s.borrow_mut();
                 let mut len = [0u8; 8];
-                s.read_exact(&mut len).expect("tcp recv failed");
-                let n = u64::from_le_bytes(len) as usize;
-                let mut buf = vec![0u8; n];
-                s.read_exact(&mut buf).expect("tcp recv failed");
+                s.read_exact(&mut len)?;
+                let n = u64::from_le_bytes(len);
+                if n > MAX_MSG_BYTES {
+                    return Err(WireError::Malformed(format!(
+                        "claimed length {n} exceeds the {MAX_MSG_BYTES}-byte \
+                         cap")));
+                }
+                let mut buf = vec![0u8; n as usize];
+                s.read_exact(&mut buf)?;
                 // latency simulation applies on the sender side only for
                 // local links; real TCP has real latency.
-                buf
+                Ok(buf)
             }
         }
     }
@@ -156,30 +198,48 @@ impl Comm {
         self.send_raw(dir, bytes);
     }
 
-    pub fn recv_elems(&self, dir: Dir) -> Vec<i32> {
-        let bytes = self.recv_raw(dir);
-        assert_eq!(bytes.len() % 4, 0);
-        bytes.chunks_exact(4)
+    pub fn recv_elems(&self, dir: Dir) -> Result<Vec<i32>, WireError> {
+        let bytes = self.recv_raw(dir)?;
+        if bytes.len() % 4 != 0 {
+            return Err(WireError::Malformed(format!(
+                "ring payload of {} bytes is not a multiple of 4",
+                bytes.len())));
+        }
+        Ok(bytes.chunks_exact(4)
             .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
-            .collect()
+            .collect())
     }
 
-    /// Binary shares travel bit-packed: n bits cost ceil(n/8) bytes, which
-    /// is what makes the B-share protocols cheap on the wire.
-    pub fn send_bits(&self, dir: Dir, bits: &[u8]) {
-        let mut bytes = vec![0u8; bits.len().div_ceil(8) + 8];
-        bytes[..8].copy_from_slice(&(bits.len() as u64).to_le_bytes());
-        for (i, &b) in bits.iter().enumerate() {
-            debug_assert!(b <= 1);
-            bytes[8 + i / 8] |= b << (i % 8);
-        }
+    /// Binary shares travel bit-packed: n bits cost ceil(n/8) bytes (plus
+    /// the 8-byte bit-count header), which is what makes the B-share
+    /// protocols cheap on the wire.  The payload is the `BitTensor` word
+    /// buffer shipped verbatim (truncated to ceil(n/8) bytes) -- no per-bit
+    /// repack loop; the format is bit-identical to the seed's packer.
+    pub fn send_bits(&self, dir: Dir, bits: &BitTensor) {
+        let mut bytes = Vec::with_capacity(8 + bits.len().div_ceil(8));
+        bytes.extend_from_slice(&(bits.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(&bits.packed_bytes());
         self.send_raw(dir, bytes);
     }
 
-    pub fn recv_bits(&self, dir: Dir) -> Vec<u8> {
-        let bytes = self.recv_raw(dir);
-        let n = u64::from_le_bytes(bytes[..8].try_into().unwrap()) as usize;
-        (0..n).map(|i| (bytes[8 + i / 8] >> (i % 8)) & 1).collect()
+    pub fn recv_bits(&self, dir: Dir) -> Result<BitTensor, WireError> {
+        let bytes = self.recv_raw(dir)?;
+        if bytes.len() < 8 {
+            return Err(WireError::Malformed(format!(
+                "bit message of {} bytes is shorter than its header",
+                bytes.len())));
+        }
+        let n = u64::from_le_bytes(bytes[..8].try_into().unwrap());
+        if n > MAX_MSG_BYTES.saturating_mul(8) {
+            return Err(WireError::Malformed(format!(
+                "claimed bit count {n} exceeds the message cap")));
+        }
+        let n = n as usize;
+        BitTensor::from_packed_bytes(n, &bytes[8..]).ok_or_else(|| {
+            WireError::Malformed(format!(
+                "bit payload of {} bytes does not match the claimed {n} bits",
+                bytes.len() - 8))
+        })
     }
 
     /// Advance the round counter -- called by the protocol layer at each
@@ -321,7 +381,7 @@ mod tests {
         let stats = run3(NetConfig::zero(), |c| {
             let data = vec![c.id as i32; 8];
             c.send_elems(Dir::Next, &data);
-            let got = c.recv_elems(Dir::Prev);
+            let got = c.recv_elems(Dir::Prev).unwrap();
             let prev = (c.id + 2) % 3;
             assert_eq!(got, vec![prev as i32; 8]);
             c.round();
@@ -336,15 +396,92 @@ mod tests {
     #[test]
     fn bits_pack_tightly() {
         let stats = run3(NetConfig::zero(), |c| {
-            let bits = vec![1u8; 100];
+            let bits = BitTensor::ones(100);
             c.send_bits(Dir::Next, &bits);
-            let got = c.recv_bits(Dir::Prev);
-            assert_eq!(got, vec![1u8; 100]);
+            let got = c.recv_bits(Dir::Prev).unwrap();
+            assert_eq!(got, bits);
         });
         // 100 bits -> 13 bytes + 8 length header
         for s in stats {
             assert_eq!(s.bytes_sent, 21);
         }
+    }
+
+    #[test]
+    fn bit_wire_cost_is_ceil_n_over_8_plus_header() {
+        // Stats-verified wire format: n bits cost exactly ceil(n/8) + 8
+        // bytes, for lengths straddling byte and word boundaries.
+        for n in [1usize, 7, 8, 9, 63, 64, 65, 100, 128, 1000] {
+            let comms = local_trio(NetConfig::zero());
+            let handles: Vec<_> = comms.into_iter().map(|c| {
+                thread::spawn(move || {
+                    let mut rng = crate::testutil::Rng::new(n as u64);
+                    let bits = BitTensor::from_fn(n, |_| rng.bit());
+                    c.send_bits(Dir::Next, &bits);
+                    let got = c.recv_bits(Dir::Prev).unwrap();
+                    assert_eq!(got.len(), n);
+                    c.stats()
+                })
+            }).collect();
+            for h in handles {
+                let s = h.join().unwrap();
+                assert_eq!(s.bytes_sent, (n.div_ceil(8) + 8) as u64,
+                           "wire bytes for {n} bits");
+            }
+        }
+    }
+
+    #[test]
+    fn bit_roundtrip_preserves_exact_patterns() {
+        let stats = run3(NetConfig::zero(), |c| {
+            let mut rng = crate::testutil::Rng::new(7 + c.id as u64);
+            let bits = BitTensor::from_fn(77, |_| rng.bit());
+            c.send_bits(Dir::Next, &bits);
+            c.send_bits(Dir::Prev, &bits);
+            let from_prev = c.recv_bits(Dir::Prev).unwrap();
+            let from_next = c.recv_bits(Dir::Next).unwrap();
+            let mut prev_rng =
+                crate::testutil::Rng::new(7 + ((c.id + 2) % 3) as u64);
+            let want_prev = BitTensor::from_fn(77, |_| prev_rng.bit());
+            assert_eq!(from_prev, want_prev);
+            let mut next_rng =
+                crate::testutil::Rng::new(7 + ((c.id + 1) % 3) as u64);
+            let want_next = BitTensor::from_fn(77, |_| next_rng.bit());
+            assert_eq!(from_next, want_next);
+        });
+        assert_eq!(stats.len(), 3);
+    }
+
+    #[test]
+    fn malformed_lengths_are_errors_not_panics() {
+        // a ring payload whose length is not a multiple of 4 must surface
+        // as WireError::Malformed on the receiver
+        let comms = local_trio(NetConfig::zero());
+        let handles: Vec<_> = comms.into_iter().map(|c| {
+            thread::spawn(move || {
+                if c.id == 0 {
+                    c.send_raw(Dir::Next, vec![0u8; 5]);
+                    // undersized bit message (no full header)
+                    c.send_raw(Dir::Next, vec![0u8; 3]);
+                    // bit message whose payload contradicts its header
+                    let mut lie = Vec::new();
+                    lie.extend_from_slice(&100u64.to_le_bytes());
+                    lie.push(0xFF); // 1 byte instead of 13
+                    c.send_raw(Dir::Next, lie);
+                    None
+                } else if c.id == 1 {
+                    let a = c.recv_elems(Dir::Prev);
+                    let b = c.recv_bits(Dir::Prev);
+                    let d = c.recv_bits(Dir::Prev);
+                    Some((a.is_err(), b.is_err(), d.is_err()))
+                } else {
+                    None
+                }
+            })
+        }).collect();
+        let results: Vec<_> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(results[1], Some((true, true, true)));
     }
 
     #[test]
@@ -354,7 +491,7 @@ mod tests {
         let t0 = Instant::now();
         run3(net, |c| {
             c.send_elems(Dir::Next, &[1]);
-            let _ = c.recv_elems(Dir::Prev);
+            let _ = c.recv_elems(Dir::Prev).unwrap();
         });
         assert!(t0.elapsed() >= Duration::from_millis(20));
     }
@@ -367,7 +504,7 @@ mod tests {
             // 400 KB at 1 MB/s ~ 400 ms
             let data = vec![0i32; 100_000];
             c.send_elems(Dir::Next, &data);
-            let _ = c.recv_elems(Dir::Prev);
+            let _ = c.recv_elems(Dir::Prev).unwrap();
         });
         assert!(t0.elapsed() >= Duration::from_millis(300));
     }
@@ -377,8 +514,8 @@ mod tests {
         run3(NetConfig::zero(), |c| {
             c.send_elems(Dir::Next, &[c.id as i32]);
             c.send_elems(Dir::Prev, &[c.id as i32]);
-            let a = c.recv_elems(Dir::Prev);
-            let b = c.recv_elems(Dir::Next);
+            let a = c.recv_elems(Dir::Prev).unwrap();
+            let b = c.recv_elems(Dir::Next).unwrap();
             assert_eq!(a[0] as usize, (c.id + 2) % 3);
             assert_eq!(b[0] as usize, (c.id + 1) % 3);
         });

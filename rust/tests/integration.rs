@@ -13,7 +13,9 @@ use cbnn::datasets::EvalSet;
 use cbnn::engine::session::{run_inference, SessionConfig};
 use cbnn::jsonio;
 use cbnn::nn::Model;
-use cbnn::runtime::{BackendKind, KernelVariant};
+use cbnn::runtime::BackendKind;
+#[cfg(feature = "pjrt")]
+use cbnn::runtime::KernelVariant;
 
 fn art() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -83,12 +85,14 @@ fn mnistnet1_bit_exact_native() {
     check_bit_exact("mnistnet1", BackendKind::Native);
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn mnistnet1_bit_exact_pjrt_pallas() {
     if skip() { return; }
     check_bit_exact("mnistnet1", BackendKind::Pjrt(KernelVariant::Pallas));
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn mnistnet1_bit_exact_pjrt_xla() {
     if skip() { return; }
@@ -101,6 +105,7 @@ fn mnistnet3_pool_path_bit_exact() {
     check_bit_exact("mnistnet3", BackendKind::Native);
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn mnistnet3_pool_path_bit_exact_pjrt() {
     if skip() { return; }
@@ -113,6 +118,7 @@ fn cifarnet2_separable_path_bit_exact() {
     check_bit_exact("cifarnet2", BackendKind::Native);
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn cifarnet2_separable_path_bit_exact_pjrt() {
     if skip() { return; }
@@ -145,6 +151,7 @@ fn mnistnet2_relu_path_argmax_exact() {
     assert!(agree >= n - 1, "only {agree}/{n} predictions agree");
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pallas_and_xla_backends_agree() {
     if skip() { return; }
@@ -246,6 +253,7 @@ fn hlo_artifacts_exist_for_every_linear_layer() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_actually_executes_not_fallback() {
     if skip() { return; }

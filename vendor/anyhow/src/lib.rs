@@ -1,0 +1,176 @@
+//! Offline drop-in for the `anyhow` crate, covering exactly the API surface
+//! this workspace uses: `Error`, `Result`, the `anyhow!` / `bail!` /
+//! `ensure!` macros, and the `Context` extension trait for `Result` and
+//! `Option`.  No registry access is needed to build it; replace the path
+//! dependency with the real crates.io `anyhow` when a registry is
+//! available -- the call sites are source-compatible.
+//!
+//! Differences from the real crate (acceptable for this workspace):
+//! `Display` shows the full context chain ("outer: inner") instead of the
+//! outermost layer only, and there is no backtrace capture.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A type-erased error with a human-readable context chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from anything printable.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Wrap with an outer context layer.
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: format!("{c}: {}", self.msg), source: self.source }
+    }
+
+    /// The lowest-level source error, when one was captured.
+    pub fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.source.as_ref().map(|e| e.as_ref() as &(dyn StdError + 'static))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// `Error` deliberately does NOT implement std::error::Error: that keeps the
+// blanket conversion below coherent (same trick as the real anyhow).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+/// `anyhow::Result<T>` with the usual defaulted error parameter.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => { $crate::Error::msg(format!($msg)) };
+    ($fmt:expr, $($arg:tt)*) => { $crate::Error::msg(format!($fmt, $($arg)*)) };
+    ($err:expr $(,)?) => { $crate::Error::msg($err) };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+mod private {
+    use super::{Error, StdError};
+
+    /// Sealed unification of "things `.context()` accepts as the inner
+    /// error": std errors and `Error` itself.
+    pub trait IntoAnyhow {
+        fn into_anyhow(self) -> Error;
+    }
+
+    impl<E: StdError + Send + Sync + 'static> IntoAnyhow for E {
+        fn into_anyhow(self) -> Error {
+            Error::from(self)
+        }
+    }
+
+    impl IntoAnyhow for Error {
+        fn into_anyhow(self) -> Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(|| ..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+        -> Result<T>;
+}
+
+impl<T, E: private::IntoAnyhow> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into_anyhow().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+        -> Result<T> {
+        self.map_err(|e| e.into_anyhow().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+        -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "boom")
+    }
+
+    #[test]
+    fn conversions_and_macros() {
+        let e: Error = io_err().into();
+        assert!(e.to_string().contains("boom"));
+        let e = anyhow!("x = {}", 7);
+        assert_eq!(e.to_string(), "x = 7");
+        let s = String::from("stringy");
+        let e = anyhow!(s);
+        assert_eq!(e.to_string(), "stringy");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(fail: bool) -> Result<u32> {
+            ensure!(!fail, "ensured {}", 1);
+            if fail {
+                bail!("unreachable");
+            }
+            Ok(3)
+        }
+        assert_eq!(f(false).unwrap(), 3);
+        assert_eq!(f(true).unwrap_err().to_string(), "ensured 1");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: boom");
+        let a: Result<()> = Err(anyhow!("inner"));
+        let e = a.with_context(|| format!("layer {}", 2)).unwrap_err();
+        assert_eq!(e.to_string(), "layer 2: inner");
+        let n: Option<u8> = None;
+        assert_eq!(n.context("missing").unwrap_err().to_string(), "missing");
+    }
+}
