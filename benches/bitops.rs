@@ -1,23 +1,26 @@
-//! Boolean-share representation micro-benchmark: byte-per-bit (the seed's
-//! `Vec<u8>` representation) vs word-packed `BitTensor`, across the local
-//! operations that dominate the non-linear protocol path:
+//! Boolean-share representation micro-benchmarks, three tiers:
 //!
-//!   * XOR      -- every share combine / public unmask
-//!   * AND      -- the local term of the boolean multiplication
-//!   * B2A-prep -- y_1 ^ y_2 followed by the per-element message walk
-//!                 (the sender side of the share conversion)
+//!   1. byte-per-bit (the seed's `Vec<u8>`) vs word-packed `BitTensor`
+//!      for XOR / AND / B2A-prep (the PR 1 representation change);
+//!   2. rolled vs 4-way-unrolled word kernels (`ring::kernel`);
+//!   3. concat-based vs strided Kogge-Stone levels: the full 5-level
+//!      prefix pass over 32 planes, once with per-level `extend`/`slice`
+//!      churn (the PR 1 layout) and once over `BitPlanes` row views
+//!      (zero operand copies) -- the acceptance target is >= 2x.
 //!
-//! At 10^4..10^7 elements the packed path should show >= 8x XOR/AND
-//! throughput (64 bits per instruction vs one byte per bit, minus memory
-//! effects); the measured ratio is printed so the bench trajectory records
-//! the representation change.
+//! Results are printed as a table and recorded to `BENCH_bitops.json` at
+//! the workspace root so the bench trajectory is diffable.
 //!
 //!   cargo bench --bench bitops
 
+use std::fmt::Write as _;
 use std::hint::black_box;
+use std::path::Path;
 use std::time::Instant;
 
 use cbnn::ring::bits::BitTensor;
+use cbnn::ring::kernel;
+use cbnn::ring::planes::BitPlanes;
 use cbnn::testutil::Rng;
 
 /// Median-of-reps wall time for `f`, in seconds.
@@ -32,6 +35,21 @@ fn time(reps: usize, mut f: impl FnMut()) -> f64 {
     times[times.len() / 2]
 }
 
+/// One recorded comparison row.
+struct Row {
+    section: &'static str,
+    op: String,
+    n: usize,
+    baseline_ms: f64,
+    fast_ms: f64,
+}
+
+impl Row {
+    fn speedup(&self) -> f64 {
+        self.baseline_ms / self.fast_ms
+    }
+}
+
 // ---- byte-per-bit reference (exactly the seed's BitShare ops) -----------
 fn bytes_xor(a: &[u8], b: &[u8]) -> Vec<u8> {
     a.iter().zip(b).map(|(x, y)| x ^ y).collect()
@@ -41,8 +59,21 @@ fn bytes_and(a: &[u8], b: &[u8]) -> Vec<u8> {
     a.iter().zip(b).map(|(x, y)| x & y).collect()
 }
 
-fn main() {
-    println!("== boolean share ops: byte-per-bit vs word-packed ==\n");
+// ---- rolled word kernels (what the unrolled kernels replaced) -----------
+fn rolled_xor(dst: &mut [u64], a: &[u64], b: &[u64]) {
+    for ((d, x), y) in dst.iter_mut().zip(a).zip(b) {
+        *d = x ^ y;
+    }
+}
+
+fn rolled_and(dst: &mut [u64], a: &[u64], b: &[u64]) {
+    for ((d, x), y) in dst.iter_mut().zip(a).zip(b) {
+        *d = x & y;
+    }
+}
+
+fn representation_tier(rows: &mut Vec<Row>) {
+    println!("== tier 1: byte-per-bit vs word-packed ==\n");
     println!("{:<10} {:<10} {:>12} {:>12} {:>9}",
              "op", "elems", "bytes(ms)", "packed(ms)", "speedup");
     println!("{}", "-".repeat(58));
@@ -55,45 +86,221 @@ fn main() {
         let ta = BitTensor::from_bits(&xa);
         let tb = BitTensor::from_bits(&xb);
 
-        // XOR
-        let t_bytes = time(reps, || {
-            black_box(bytes_xor(black_box(&xa), black_box(&xb)));
-        });
-        let t_packed = time(reps, || {
-            black_box(black_box(&ta).xor(black_box(&tb)));
-        });
-        println!("{:<10} {:<10} {:>12.3} {:>12.3} {:>8.1}x",
-                 "xor", n, t_bytes * 1e3, t_packed * 1e3,
-                 t_bytes / t_packed);
-
-        // AND
-        let t_bytes = time(reps, || {
-            black_box(bytes_and(black_box(&xa), black_box(&xb)));
-        });
-        let t_packed = time(reps, || {
-            black_box(black_box(&ta).and(black_box(&tb)));
-        });
-        println!("{:<10} {:<10} {:>12.3} {:>12.3} {:>8.1}x",
-                 "and", n, t_bytes * 1e3, t_packed * 1e3,
-                 t_bytes / t_packed);
-
-        // B2A-prep: the boolean part of the sender's message construction
-        // (y12 = y1 ^ y2 for the whole batch).  The subsequent per-element
-        // ring arithmetic is identical in both representations, so the
-        // boolean half is what the refactor buys.
-        let t_bytes = time(reps, || {
-            let y12 = bytes_xor(&xa, &xb);
-            black_box(y12.iter().map(|&b| b as u64).sum::<u64>());
-        });
-        let t_packed = time(reps, || {
-            let y12 = ta.xor(&tb);
-            black_box(y12.popcount());
-        });
-        println!("{:<10} {:<10} {:>12.3} {:>12.3} {:>8.1}x",
-                 "b2a-prep", n, t_bytes * 1e3, t_packed * 1e3,
-                 t_bytes / t_packed);
+        let cases: [(&str, f64, f64); 3] = [
+            ("xor",
+             time(reps, || {
+                 black_box(bytes_xor(black_box(&xa), black_box(&xb)));
+             }),
+             time(reps, || {
+                 black_box(black_box(&ta).xor(black_box(&tb)));
+             })),
+            ("and",
+             time(reps, || {
+                 black_box(bytes_and(black_box(&xa), black_box(&xb)));
+             }),
+             time(reps, || {
+                 black_box(black_box(&ta).and(black_box(&tb)));
+             })),
+            // B2A-prep: the boolean part of the sender's message
+            // construction (y12 = y1 ^ y2 + a reduction over the batch)
+            ("b2a-prep",
+             time(reps, || {
+                 let y12 = bytes_xor(&xa, &xb);
+                 black_box(y12.iter().map(|&b| b as u64).sum::<u64>());
+             }),
+             time(reps, || {
+                 let y12 = ta.xor(&tb);
+                 black_box(y12.popcount());
+             })),
+        ];
+        for (op, t_base, t_fast) in cases {
+            println!("{:<10} {:<10} {:>12.3} {:>12.3} {:>8.1}x",
+                     op, n, t_base * 1e3, t_fast * 1e3, t_base / t_fast);
+            rows.push(Row { section: "byte_vs_packed", op: op.into(), n,
+                            baseline_ms: t_base * 1e3,
+                            fast_ms: t_fast * 1e3 });
+        }
         println!();
     }
-    println!("(acceptance: packed XOR/AND >= 8x byte-per-bit; 64 bits per \
-              word op)");
+}
+
+fn kernel_tier(rows: &mut Vec<Row>) {
+    println!("== tier 2: rolled vs 4-way unrolled word kernels ==\n");
+    println!("{:<10} {:<10} {:>12} {:>12} {:>9}",
+             "op", "words", "rolled(ms)", "unroll(ms)", "speedup");
+    println!("{}", "-".repeat(58));
+
+    for &nw in &[16_384usize, 262_144, 2_097_152] {
+        let reps = if nw >= 1_000_000 { 9 } else { 25 };
+        let mut rng = Rng::new(nw as u64);
+        let a: Vec<u64> = (0..nw).map(|_| rng.next_u64()).collect();
+        let b: Vec<u64> = (0..nw).map(|_| rng.next_u64()).collect();
+        let mut dst = vec![0u64; nw];
+
+        let t_rolled = time(reps, || {
+            rolled_xor(black_box(&mut dst), black_box(&a), black_box(&b));
+        });
+        let t_unrolled = time(reps, || {
+            kernel::xor_into(black_box(&mut dst), black_box(&a),
+                             black_box(&b));
+        });
+        println!("{:<10} {:<10} {:>12.3} {:>12.3} {:>8.2}x",
+                 "xor", nw, t_rolled * 1e3, t_unrolled * 1e3,
+                 t_rolled / t_unrolled);
+        rows.push(Row { section: "rolled_vs_unrolled", op: "xor".into(),
+                        n: nw, baseline_ms: t_rolled * 1e3,
+                        fast_ms: t_unrolled * 1e3 });
+
+        let t_rolled = time(reps, || {
+            rolled_and(black_box(&mut dst), black_box(&a), black_box(&b));
+        });
+        let t_unrolled = time(reps, || {
+            kernel::and_into(black_box(&mut dst), black_box(&a),
+                             black_box(&b));
+        });
+        println!("{:<10} {:<10} {:>12.3} {:>12.3} {:>8.2}x",
+                 "and", nw, t_rolled * 1e3, t_unrolled * 1e3,
+                 t_rolled / t_unrolled);
+        rows.push(Row { section: "rolled_vs_unrolled", op: "and".into(),
+                        n: nw, baseline_ms: t_rolled * 1e3,
+                        fast_ms: t_unrolled * 1e3 });
+        println!();
+    }
+}
+
+const L: usize = 32;
+
+/// The PR 1 arm: per-level operand concatenation with `extend`, result
+/// redistribution with `slice` -- O(L*n) copied bits per level.
+fn ks_levels_concat(g0: &[BitTensor], p0: &[BitTensor]) -> BitTensor {
+    let mut g: Vec<BitTensor> = g0.to_vec();
+    let mut p: Vec<BitTensor> = p0.to_vec();
+    let n = g0[0].len();
+    let mut dist = 1usize;
+    while dist < L {
+        let idx: Vec<usize> = (dist..L).collect();
+        let mut lhs = BitTensor::zeros(0);
+        let mut rhs = BitTensor::zeros(0);
+        for &i in &idx {
+            lhs.extend(&p[i]);
+            rhs.extend(&g[i - dist]);
+        }
+        for &i in &idx {
+            lhs.extend(&p[i]);
+            rhs.extend(&p[i - dist]);
+        }
+        let prod = lhs.and(&rhs); // the local AND of the batched round
+        let m = idx.len();
+        for (j, &i) in idx.iter().enumerate() {
+            g[i] = g[i].xor(&prod.slice(j * n, n));
+            p[i] = prod.slice((m + j) * n, n);
+        }
+        dist *= 2;
+    }
+    g[30].clone()
+}
+
+/// The strided arm: operands are zero-copy row views over `BitPlanes`;
+/// the only writes are the AND output and the word-aligned row updates.
+fn ks_levels_strided(g0: &BitPlanes, p0: &BitPlanes) -> BitTensor {
+    let mut g = g0.clone();
+    let mut p = p0.clone();
+    let len = g.len();
+    let mut dist = 1usize;
+    while dist < L {
+        let m = L - dist;
+        let mut prod = BitPlanes::zeros(2 * m, len);
+        for (half, rhs) in [(0usize, &g), (1usize, &p)] {
+            for j in 0..m {
+                kernel::and_into(prod.plane_words_mut(half * m + j),
+                                 p.plane_words(dist + j),
+                                 rhs.plane_words(j));
+            }
+        }
+        g.xor_rows_from(dist, &prod, 0..m);
+        p.copy_rows_from(dist, &prod, m..2 * m);
+        dist *= 2;
+    }
+    g.plane(30)
+}
+
+fn plane_tier(rows: &mut Vec<Row>) {
+    println!("== tier 3: Kogge-Stone levels, concat vs strided ==\n");
+    println!("{:<10} {:<10} {:>12} {:>12} {:>9}",
+             "op", "elems", "concat(ms)", "strided(ms)", "speedup");
+    println!("{}", "-".repeat(58));
+
+    for &n in &[10_000usize, 100_000, 1_000_000] {
+        let reps = if n >= 1_000_000 { 5 } else { 15 };
+        let mut rng = Rng::new(n as u64);
+        let planes: Vec<BitTensor> = (0..2 * L)
+            .map(|_| BitTensor::from_fn(n, |_| rng.bit()))
+            .collect();
+        let (gt, pt) = planes.split_at(L);
+        let gm = BitPlanes::from_tensors(gt);
+        let pm = BitPlanes::from_tensors(pt);
+
+        // equivalence sanity before timing: both arms compute the same
+        // carry plane
+        assert_eq!(ks_levels_concat(gt, pt), ks_levels_strided(&gm, &pm));
+
+        let t_concat = time(reps, || {
+            black_box(ks_levels_concat(black_box(gt), black_box(pt)));
+        });
+        let t_strided = time(reps, || {
+            black_box(ks_levels_strided(black_box(&gm), black_box(&pm)));
+        });
+        println!("{:<10} {:<10} {:>12.3} {:>12.3} {:>8.1}x",
+                 "ks-5lvl", n, t_concat * 1e3, t_strided * 1e3,
+                 t_concat / t_strided);
+        rows.push(Row { section: "ks_concat_vs_strided",
+                        op: "ks-5lvl".into(), n,
+                        baseline_ms: t_concat * 1e3,
+                        fast_ms: t_strided * 1e3 });
+        println!();
+    }
+}
+
+fn write_json(rows: &[Row]) {
+    let mut s = String::from("{\n");
+    let _ = writeln!(s, "  \"bench\": \"bitops\",");
+    let _ = writeln!(s,
+        "  \"generated_by\": \"cargo bench --bench bitops\",");
+    let _ = writeln!(s, "  \"acceptance\": {{");
+    let _ = writeln!(s,
+        "    \"byte_vs_packed\": \"xor/and speedup >= 8x\",");
+    let _ = writeln!(s,
+        "    \"ks_concat_vs_strided\": \"ks-5lvl speedup >= 2x\"");
+    let _ = writeln!(s, "  }},");
+    let _ = writeln!(s, "  \"results\": [");
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 == rows.len() { "" } else { "," };
+        let _ = writeln!(s,
+            "    {{\"section\": \"{}\", \"op\": \"{}\", \"n\": {}, \
+             \"baseline_ms\": {:.4}, \"fast_ms\": {:.4}, \
+             \"speedup\": {:.2}}}{comma}",
+            r.section, r.op, r.n, r.baseline_ms, r.fast_ms, r.speedup());
+    }
+    let _ = writeln!(s, "  ]");
+    s.push_str("}\n");
+    // the bench target's manifest dir is rust/; the record lives at the
+    // workspace root next to DESIGN.md
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_bitops.json"))
+        .unwrap_or_else(|| "BENCH_bitops.json".into());
+    match std::fs::write(&path, &s) {
+        Ok(()) => println!("recorded {}", path.display()),
+        Err(e) => eprintln!("could not record {}: {e}", path.display()),
+    }
+}
+
+fn main() {
+    let mut rows = Vec::new();
+    representation_tier(&mut rows);
+    kernel_tier(&mut rows);
+    plane_tier(&mut rows);
+    println!("(acceptance: packed XOR/AND >= 8x byte-per-bit; strided \
+              Kogge-Stone levels >= 2x concat)");
+    write_json(&rows);
 }

@@ -12,19 +12,30 @@
 //! adder's rounds are *serial levels of a circuit over every element's 32
 //! bits*, so its bytes and local work are ~an order of magnitude higher.
 //!
-//! With `BitTensor` shares the adder is word-parallel: every XOR/AND over
-//! a 32n-bit plane batch is a loop over u64 words, and `and_bits` masks
-//! with word-filled zero randomness -- this keeps the Table-2 baseline
-//! comparison honest (the baseline is not handicapped by a byte-per-bit
-//! representation CBNN itself no longer uses).
+//! The circuit state lives in strided `BitPlanes` matrices (32 planes of
+//! n bits, one allocation, equal row stride).  Every Kogge-Stone operand
+//! -- `p[dist..L]`, `g[0..L-dist]`, the carry wire `t = (maj ^ b) << 1`
+//! -- is a zero-copy row selection or index-remapped view; the level
+//! loop performs **no per-level bit copies** (no `extend`/`slice`), only
+//! the word-aligned row writes of each AND round's fresh output.  The
+//! wire ships each round's matrix as a reinterpreted `BitTensor`
+//! (`transport::send_planes`), padded to whole words per plane.
+//!
+//! `msb_bitdecomp_concat` keeps the PR 1 concatenation-based
+//! implementation as the equivalence reference and the bench's
+//! copy-churn arm.
 
 use anyhow::Result;
 
 use crate::ring::bits::BitTensor;
-use crate::rss::BitShare;
+use crate::ring::planes::BitPlanes;
+use crate::rss::{BitShare, PlaneShare, PlaneShareView};
 use crate::transport::Dir;
 
 use crate::protocols::Ctx;
+
+/// Adder width: one plane per bit of the ring element.
+const L: usize = 32;
 
 /// RSS boolean AND, batched: z = x & y with one reshare round (the mod-2
 /// analogue of rss::mul).  Entirely word-parallel locally.
@@ -38,7 +49,7 @@ pub fn and_bits(ctx: &Ctx, x: &BitShare, y: &BitShare) -> Result<BitShare> {
         .xor(&x.a.and(&y.b))
         .xor(&x.b.and(&y.a))
         .xor(&mask);
-    ctx.comm.send_bits(Dir::Prev, &zi);
+    ctx.comm.send_bits(Dir::Prev, &zi)?;
     let from_next = ctx.comm.recv_bits(Dir::Next)?;
     if from_next.len() != n {
         anyhow::bail!("wire desync: peer sent {} bits, expected {n}",
@@ -48,29 +59,72 @@ pub fn and_bits(ctx: &Ctx, x: &BitShare, y: &BitShare) -> Result<BitShare> {
     Ok(BitShare { a: zi, b: from_next })
 }
 
-fn xor3(a: &BitShare, b: &BitShare, c: &BitShare) -> BitShare {
-    a.xor(b).xor(c)
-}
-
-/// Inject the bits of an additive component known to two parties into RSS
-/// boolean sharing (local).  `slot` is which additive component (0, 1, 2)
-/// the values occupy; `vals` is Some on the two parties that know it.
-/// Packing the bit-plane is the arithmetic/boolean boundary.
-fn inject_bits(me: usize, slot: usize, vals: Option<&[i32]>, n: usize,
-               bit: u32) -> BitShare {
-    let mut out = BitShare::zeros(n);
-    if let Some(v) = vals {
-        let plane =
-            BitTensor::from_fn(n, |i| ((v[i] as u32 >> bit) & 1) as u8);
-        // P_me holds components (me, me+1): fill whichever matches `slot`
-        if me == slot {
-            out.a = plane.clone();
-        }
-        if (me + 1) % 3 == slot {
-            out.b = plane;
+/// One RSS boolean AND round over whole plane matrices:
+/// `out[part][row] = x[part][row] & y[part][row]` for every
+/// `(x, y)` operand pair in `parts`, all batched into a *single*
+/// communication round.  Operands are zero-copy views (row selections /
+/// level shifts); the only writes are the fused local term of each
+/// output row (`kernel::and_local_into`) straight into the one output
+/// allocation.
+pub fn and_planes(ctx: &Ctx, parts: &[(PlaneShareView<'_>,
+                                       PlaneShareView<'_>)])
+                  -> Result<PlaneShare> {
+    let len = parts.first().map_or(0, |(x, _)| x.len());
+    let rows: usize = parts.iter().map(|(x, y)| {
+        assert_eq!(x.count(), y.count(), "operand plane counts differ");
+        assert!(x.len() == len && y.len() == len,
+                "operand plane lengths differ");
+        x.count()
+    }).sum();
+    let mut zi = BitPlanes::zeros(rows, len);
+    let w = zi.width_words();
+    let cnt = ctx.seeds.next_cnt();
+    // zero-sharing mod 2 over the padded matrix, row r masked by words
+    // [r*w, (r+1)*w) -- all parties derive the identical padded length
+    let mask = ctx.seeds.zero_bits3(cnt, rows * w * 64);
+    let zero_row = vec![0u64; w];
+    let mut r = 0;
+    for (x, y) in parts {
+        for pr in 0..x.count() {
+            let xa = x.a.row_words(pr).unwrap_or(&zero_row);
+            let xb = x.b.row_words(pr).unwrap_or(&zero_row);
+            let ya = y.a.row_words(pr).unwrap_or(&zero_row);
+            let yb = y.b.row_words(pr).unwrap_or(&zero_row);
+            crate::ring::kernel::and_local_into(
+                zi.plane_words_mut(r), xa, xb, ya, yb,
+                &mask.words()[r * w..(r + 1) * w]);
+            r += 1;
         }
     }
-    out
+    // the zero-sharing put mask bits into the per-plane padding; clear it
+    // before the words hit the wire (tail invariant)
+    zi.mask_tails();
+    ctx.comm.send_planes(Dir::Prev, &zi)?;
+    let from_next = ctx.comm.recv_planes(Dir::Next, rows, len)?;
+    ctx.comm.round();
+    Ok(PlaneShare { a: zi, b: from_next })
+}
+
+/// Boolean shares of the bits of one additive component, as a 32-plane
+/// matrix.  `slot` is which additive component (0, 1, 2); in RSS P_i
+/// holds components (i, i+1), so component `slot` is P_slot's `a` and
+/// P_{slot-1}'s `b`.  Packing the planes is the arithmetic/boolean
+/// boundary: one strided matrix per component, no per-plane tensors.
+fn inject_planes(me: usize, slot: usize, xa: &[i32], xb: &[i32])
+                 -> PlaneShare {
+    let n = xa.len();
+    PlaneShare {
+        a: if me == slot {
+            BitPlanes::from_elem_bits(xa, L)
+        } else {
+            BitPlanes::zeros(L, n)
+        },
+        b: if (me + 1) % 3 == slot {
+            BitPlanes::from_elem_bits(xb, L)
+        } else {
+            BitPlanes::zeros(L, n)
+        },
+    }
 }
 
 /// Full bit-decomposition MSB: returns [MSB(x)]^B.
@@ -78,34 +132,87 @@ fn inject_bits(me: usize, slot: usize, vals: Option<&[i32]>, n: usize,
 pub fn msb_bitdecomp(ctx: &Ctx, xa: &[i32], xb: &[i32])
                      -> Result<BitShare> {
     let me = ctx.id();
-    let n = xa.len();
-    const L: usize = 32;
-
-    // Boolean shares of each additive component's bit-planes.
-    // component `me` known to (me, me-1)... in RSS P_i holds (x_i, x_{i+1}),
-    // so component j is known to P_j (as a) and P_{j-1} (as b).
-    let comp = |slot: usize, bit: u32| -> BitShare {
-        let vals: Option<&[i32]> = if me == slot {
-            Some(xa)
-        } else if (me + 1) % 3 == slot {
-            Some(xb)
-        } else {
-            None
-        };
-        inject_bits(me, slot, vals, n, bit)
-    };
+    assert_eq!(xa.len(), xb.len());
 
     // Carry-save: s = a^b^c, carry t = maj(a,b,c) = (a&b)^(a&c)^(b&c)
-    // = ((a^b)&(b^c)) ^ b   [1 AND round, batched across all 32 bit-planes
-    // into one word-packed 32n-bit share]
+    // = ((a^b)&(b^c)) ^ b   [1 AND round over all 32 planes at once]
+    let ca = inject_planes(me, 0, xa, xb);
+    let cb = inject_planes(me, 1, xa, xb);
+    let cc = inject_planes(me, 2, xa, xb);
+    let s = ca.xor(&cb).xor(&cc);
+    let ab = ca.xor(&cb);
+    let bc = cb.xor(&cc);
+    let maj = and_planes(ctx, &[(ab.view(), bc.view())])?; // 1 round
+    // carry wire: t = (maj ^ b) << 1 along the plane axis -- an index
+    // remap (shifted view), not a 32n-bit copy
+    let mb = maj.xor(&cb);
+    let t = mb.shifted(1);
+
+    // Kogge-Stone prefix over (g, p): g = s&t, p = s^t
+    let g0 = and_planes(ctx, &[(s.view(), t)])?; // 1 round
+    let p0 = s.view().xor(&t);
+    // sum bit 31 = (s ^ t)[31] ^ carry_in(31); save it before the prefix
+    // pass mutates plane 31 of p
+    let sum31_no_carry = p0.plane(31);
+    let mut g = g0;
+    let mut p = p0;
+    let mut dist = 1usize;
+    while dist < L {
+        // combine (g,p)[i] with (g,p)[i-dist] for i >= dist:
+        // [p_i & g_{i-dist}, p_i & p_{i-dist}], one AND round per level.
+        // All four operands are zero-copy row selections into g and p.
+        let m = L - dist;
+        let prod = and_planes(ctx, &[
+            (p.rows(dist..L), g.rows(0..m)),
+            (p.rows(dist..L), p.rows(0..m)),
+        ])?;
+        // g[i] ^= p_i & g_{i-dist}; p[i] = p_i & p_{i-dist}: word-aligned
+        // row-block writes of the round's fresh output, nothing re-packed
+        g.xor_rows_from(dist, &prod, 0..m);
+        p.copy_rows_from(dist, &prod, m..2 * m);
+        dist *= 2;
+    }
+    // carry into bit 31 = G[30] (prefix generate over bits 0..30)
+    Ok(sum31_no_carry.xor(&g.plane(30)))
+}
+
+/// The PR 1 implementation: identical circuit, but every level operand is
+/// stitched together with `extend` and split back with `slice`, copying
+/// O(L*n) bits per level.  Kept as the bit-exactness reference for
+/// `msb_bitdecomp` and as the copy-churn arm of `benches/bitops.rs`.
+pub fn msb_bitdecomp_concat(ctx: &Ctx, xa: &[i32], xb: &[i32])
+                            -> Result<BitShare> {
+    let me = ctx.id();
+    let n = xa.len();
+
+    let xor3 = |a: &BitShare, b: &BitShare, c: &BitShare| -> BitShare {
+        a.xor(b).xor(c)
+    };
+    // Boolean shares of each additive component's bit-planes, one
+    // `BitTensor` pair per plane (the pre-planes representation).
+    let inject = |slot: usize, bit: u32| -> BitShare {
+        let mut out = BitShare::zeros(n);
+        if me == slot {
+            out.a = BitTensor::from_fn(n, |i| {
+                ((xa[i] as u32 >> bit) & 1) as u8
+            });
+        }
+        if (me + 1) % 3 == slot {
+            out.b = BitTensor::from_fn(n, |i| {
+                ((xb[i] as u32 >> bit) & 1) as u8
+            });
+        }
+        out
+    };
+
     let mut s_bits: Vec<BitShare> = Vec::with_capacity(L);
     let mut ab_all = BitShare::empty();
     let mut bc_all = BitShare::empty();
     let mut b_planes: Vec<BitShare> = Vec::with_capacity(L);
     for bit in 0..L as u32 {
-        let a = comp(0, bit);
-        let b = comp(1, bit);
-        let c = comp(2, bit);
+        let a = inject(0, bit);
+        let b = inject(1, bit);
+        let c = inject(2, bit);
         s_bits.push(xor3(&a, &b, &c));
         ab_all.extend(&a.xor(&b));
         bc_all.extend(&b.xor(&c));
@@ -134,13 +241,9 @@ pub fn msb_bitdecomp(ctx: &Ctx, xa: &[i32], xb: &[i32])
     let p0 = s_all.xor(&t_all);
     let mut g: Vec<BitShare> = (0..L).map(|i| g0.slice(i * n, n)).collect();
     let mut p: Vec<BitShare> = (0..L).map(|i| p0.slice(i * n, n)).collect();
-    // sum bit 31 = (s ^ t')[31] ^ carry_in(31); save it before the prefix
-    // pass mutates p[31]
     let sum31_no_carry = p0.slice(31 * n, n);
     let mut dist = 1usize;
     while dist < L {
-        // combine (g,p)[i] with (g,p)[i-dist] for i >= dist, batched into
-        // a single AND round per level: [p_i & g_{i-dist}, p_i & p_{i-dist}]
         let idx: Vec<usize> = (dist..L).collect();
         let mut lhs = BitShare::empty();
         let mut rhs = BitShare::empty();
@@ -162,7 +265,6 @@ pub fn msb_bitdecomp(ctx: &Ctx, xa: &[i32], xb: &[i32])
         }
         dist *= 2;
     }
-    // carry into bit 31 = G[30] (prefix generate over bits 0..30)
     Ok(sum31_no_carry.xor(&g[30]))
 }
 
@@ -195,6 +297,56 @@ mod tests {
     }
 
     #[test]
+    fn and_planes_is_planewise_boolean_mul() {
+        // one AND round over [x&y ; x&z] stacked views, non-aligned length
+        let results = run3(|ctx| {
+            let mut rng = Rng::new(17);
+            let planes = 5;
+            let n = 70;
+            let mk = |rng: &mut Rng| -> Vec<Vec<u8>> {
+                (0..planes).map(|_| (0..n).map(|_| rng.bit()).collect())
+                    .collect()
+            };
+            let (x, y, z) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+            let deal_planes = |bits: &[Vec<u8>], rng: &mut Rng|
+                              -> [PlaneShare; 3] {
+                let per: Vec<[BitShare; 3]> =
+                    bits.iter().map(|row| deal_bits(row, rng)).collect();
+                std::array::from_fn(|p| PlaneShare {
+                    a: BitPlanes::from_tensors(&per.iter()
+                        .map(|s| s[p].a.clone()).collect::<Vec<_>>()),
+                    b: BitPlanes::from_tensors(&per.iter()
+                        .map(|s| s[p].b.clone()).collect::<Vec<_>>()),
+                })
+            };
+            let xs = deal_planes(&x, &mut rng);
+            let ys = deal_planes(&y, &mut rng);
+            let zs = deal_planes(&z, &mut rng);
+            ctx.comm.reset_stats();
+            let me = ctx.id();
+            let out = and_planes(ctx, &[
+                (xs[me].view(), ys[me].view()),
+                (xs[me].view(), zs[me].view()),
+            ]).unwrap();
+            (out, x, y, z, ctx.comm.stats().rounds)
+        });
+        let (_, x, y, z, rounds) = results[0].0.clone();
+        assert_eq!(rounds, 1, "stacked AND must be a single round");
+        for pr in 0..5 {
+            for (half, rhs) in [(0usize, &y), (1usize, &z)] {
+                let shares: [BitShare; 3] = std::array::from_fn(|i| {
+                    results[i].0 .0.plane(half * 5 + pr)
+                });
+                let got = reconstruct_bits(&shares);
+                for i in 0..70 {
+                    assert_eq!(got[i], x[pr][i] & rhs[pr][i],
+                               "half {half} plane {pr} bit {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn bitdecomp_msb_matches_plaintext() {
         let results = run3(|ctx| {
             let mut rng = Rng::new(7);
@@ -210,6 +362,33 @@ mod tests {
         let got = reconstruct_bits(&shares);
         for (g, v) in got.iter().zip(&vals) {
             assert_eq!(*g, ring::msb(*v), "x = {v}");
+        }
+    }
+
+    #[test]
+    fn strided_equals_concat_reference_bit_for_bit() {
+        // the zero-copy rewrite must reconstruct to exactly the bits the
+        // PR 1 concat implementation produced, across awkward lengths
+        for n in [1usize, 63, 64, 65, 200] {
+            let results = run3(move |ctx| {
+                let mut rng = Rng::new(1000 + n as u64);
+                let vals: Vec<i32> =
+                    (0..n).map(|_| rng.next_i32()).collect();
+                let x = Tensor::from_vec(&[n], vals);
+                let xs = deal(&x, &mut rng);
+                let me = &xs[ctx.id()];
+                let strided =
+                    msb_bitdecomp(ctx, &me.a.data, &me.b.data).unwrap();
+                let concat = msb_bitdecomp_concat(ctx, &me.a.data,
+                                                  &me.b.data).unwrap();
+                (strided, concat)
+            });
+            let strided: [BitShare; 3] =
+                std::array::from_fn(|i| results[i].0 .0.clone());
+            let concat: [BitShare; 3] =
+                std::array::from_fn(|i| results[i].0 .1.clone());
+            assert_eq!(reconstruct_bits(&strided),
+                       reconstruct_bits(&concat), "n = {n}");
         }
     }
 

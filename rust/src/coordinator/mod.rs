@@ -279,11 +279,33 @@ pub type SharedCoordinator = Arc<Mutex<Coordinator>>;
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testutil::threeparty::every_op_model;
+    use crate::testutil::Rng;
 
     #[test]
     fn batch_policy_defaults_sane() {
         let p = BatchPolicy::default();
         assert!(p.max_batch >= 1);
         assert!(p.max_wait > Duration::ZERO);
+    }
+
+    #[test]
+    fn dropped_party_surfaces_as_infer_error_not_hang() {
+        // Retire one party mid-session: the hardened send path turns the
+        // survivors' messages to the dead peer into WireError::Closed, the
+        // party threads break out of their job loops, and the Service
+        // surfaces an Err to the caller instead of panicking or hanging.
+        let model = Arc::new(every_op_model());
+        let cfg = SessionConfig::new("artifacts/hlo");
+        let svc = Service::start(model, cfg).expect("setup with all parties");
+        // kill party 2's thread: it drains its job queue, hits Shutdown,
+        // and drops its Comm endpoints
+        svc.job_txs[2].send(Job::Shutdown).unwrap();
+        let mut rng = Rng::new(3);
+        let input = rng.tensor_small(&[1, 36], 15);
+        let got = svc.infer(vec![input]);
+        assert!(got.is_err(), "inference with a dead peer must error");
+        // the remaining party threads retired cleanly: shutdown joins
+        let _ = svc.shutdown();
     }
 }

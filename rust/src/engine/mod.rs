@@ -183,8 +183,8 @@ pub fn share_model(ctx: &Ctx, model: &Model, has_pool: bool)
                 // flips are public metadata: P1 broadcasts them
                 let f = if me == 1 {
                     let f = model.tensor(*flip, &[*c]).data;
-                    ctx.comm.send_elems(Dir::Next, &f);
-                    ctx.comm.send_elems(Dir::Prev, &f);
+                    ctx.comm.send_elems(Dir::Next, &f)?;
+                    ctx.comm.send_elems(Dir::Prev, &f)?;
                     ctx.comm.round();
                     f
                 } else if me == 2 {
@@ -456,7 +456,7 @@ pub fn infer_batch_pooled(
 fn reveal_to_p0(ctx: &Ctx, s: &Share) -> Result<Option<Vec<i32>>> {
     match ctx.id() {
         1 => {
-            ctx.comm.send_elems(Dir::Prev, &s.b.data); // x_2 -> P0
+            ctx.comm.send_elems(Dir::Prev, &s.b.data)?; // x_2 -> P0
             ctx.comm.round();
             Ok(None)
         }
@@ -483,41 +483,9 @@ pub mod session;
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nn::Model as NnModel;
     use crate::protocols::linear::NativeBackend;
     use crate::protocols::testsupport::run3;
-
-    /// A model exercising every `Op` variant: Matmul(conv), Sign,
-    /// PoolBits, Pm1, Depthwise, Flatten, Matmul(fc), Relu.
-    fn every_op_model() -> NnModel {
-        let manifest = r#"{
-          "name": "everyop", "dataset": "synthetic",
-          "input": {"c": 1, "h": 6, "w": 6},
-          "s_in": 0, "ring_bits": 32,
-          "layers": [
-            {"op": "matmul", "conv": true, "m": 2, "kdim": 9, "n": 16,
-             "k": 3, "stride": 1, "pad_lo": 0, "pad_hi": 0, "cout": 2,
-             "w": {"off": 0, "len": 18}, "b": {"off": 18, "len": 2},
-             "s_in": 0, "s_out": 0},
-            {"op": "sign", "c": 2, "t": {"off": 20, "len": 2},
-             "flip": {"off": 22, "len": 2}},
-            {"op": "pool_bits", "c": 2, "k": 2, "stride": 2},
-            {"op": "pm1"},
-            {"op": "depthwise", "cout": 2, "k": 1, "stride": 1,
-             "pad_lo": 0, "pad_hi": 0, "w": {"off": 24, "len": 2},
-             "s_in": 0, "s_out": 0},
-            {"op": "flatten", "c": 2, "h": 2, "w": 2},
-            {"op": "matmul", "conv": false, "m": 3, "kdim": 8, "n": 1,
-             "w": {"off": 26, "len": 24}, "b": {"off": 50, "len": 3},
-             "s_in": 0, "s_out": 0},
-            {"op": "relu", "trunc": 2}
-          ]
-        }"#;
-        // small deterministic weights; values only need to stay inside the
-        // MSB bound, the test checks pool accounting + determinism
-        let pool: Vec<i32> = (0..53).map(|v| (v % 7) - 3).collect();
-        NnModel::from_json(manifest, pool).unwrap()
-    }
+    use crate::testutil::threeparty::every_op_model;
 
     #[test]
     fn msb_sizes_mirrors_infer_batch_pool_drain() {
@@ -568,6 +536,37 @@ mod tests {
         }
         // non-owners learn nothing
         assert!(results[1].0 .0.is_empty() && results[2].0 .0.is_empty());
+    }
+
+    #[test]
+    fn peer_drop_mid_inference_surfaces_wire_error() {
+        // party 2 completes setup, then dies before the online phase; its
+        // neighbours' sends/recvs must surface WireError (Closed) through
+        // infer_batch instead of panicking the party threads
+        let results = run3(|ctx| {
+            let model = every_op_model();
+            let shared = share_model(ctx, &model, ctx.id() == 1).unwrap();
+            if ctx.id() == 2 {
+                return None; // drops this party's Comm on thread exit
+            }
+            let inputs: Vec<Tensor> = if ctx.id() == 0 {
+                let mut rng = crate::testutil::Rng::new(9);
+                vec![rng.tensor_small(&[1, 36], 15)]
+            } else {
+                vec![]
+            };
+            let r = infer_batch(ctx, &shared, &NativeBackend,
+                                EngineOptions::default(), &inputs, 1);
+            Some(r.map(|_| ()).map_err(|e| e.to_string()))
+        });
+        for id in [0usize, 1] {
+            let out = results[id].0.as_ref().expect("survivor output");
+            let err = out.as_ref().expect_err("inference must fail");
+            assert!(err.contains("hung up") || err.contains("transport")
+                    || err.contains("desync"),
+                    "party {id} error not a wire failure: {err}");
+        }
+        assert!(results[2].0.is_none());
     }
 
     #[test]

@@ -88,7 +88,7 @@ pub fn run(comm: &Comm, seeds: &PartySeeds, roles: Roles, n: usize,
                 masked1.push(m1[i].wrapping_add(k1));
             }
             payload.extend_from_slice(&masked1);
-            comm.send_elems(dir_to(me, roles.helper), &payload);
+            comm.send_elems(dir_to(me, roles.helper), &payload)?;
             comm.round();
             Ok(None)
         }
@@ -101,7 +101,7 @@ pub fn run(comm: &Comm, seeds: &PartySeeds, roles: Roles, n: usize,
             let sel: Vec<Elem> = (0..n).map(|i| {
                 payload[if c.get(i) == 0 { i } else { n + i }]
             }).collect();
-            comm.send_elems(dir_to(me, roles.receiver), &sel);
+            comm.send_elems(dir_to(me, roles.receiver), &sel)?;
             comm.round();
             Ok(None)
         }

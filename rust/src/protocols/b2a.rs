@@ -44,16 +44,25 @@ pub fn b2a(ctx: &Ctx, y: &BitShare) -> Result<Share> {
             // a_2 private, sent to P2
             let mut sp = PrfStream::new(&ctx.seeds.private, cnt, domain::SHARE);
             let a2: Vec<Elem> = (0..n).map(|_| sp.next_elem()).collect();
-            ctx.comm.send_elems(Dir::Next, &a2); // P2 is P1's next
-            let y12 = y.a.xor(&y.b); // y_1 ^ y_2, word-parallel
-            let m0: Vec<Elem> = (0..n).map(|i| {
-                Elem::from(y12.get(i))
-                    .wrapping_sub(a1[i]).wrapping_sub(a2[i])
-            }).collect();
-            let m1: Vec<Elem> = (0..n).map(|i| {
-                Elem::from(1 ^ y12.get(i))
-                    .wrapping_sub(a1[i]).wrapping_sub(a2[i])
-            }).collect();
+            ctx.comm.send_elems(Dir::Next, &a2)?; // P2 is P1's next
+            let y12 = y.a.xor(&y.b); // y_1 ^ y_2, word-parallel (kernel)
+            // message walk iterates the packed words directly: one shift
+            // per bit instead of a div/mod-indexed get() per element
+            let mut m0: Vec<Elem> = Vec::with_capacity(n);
+            let mut m1: Vec<Elem> = Vec::with_capacity(n);
+            let mut i = 0;
+            for &word in y12.words() {
+                let mut w = word;
+                let lim = (n - i).min(64);
+                for _ in 0..lim {
+                    let bit = (w & 1) as Elem;
+                    let mask = a1[i].wrapping_add(a2[i]);
+                    m0.push(bit.wrapping_sub(mask));
+                    m1.push((bit ^ 1).wrapping_sub(mask));
+                    w >>= 1;
+                    i += 1;
+                }
+            }
             ot::run(ctx.comm, ctx.seeds, roles, n,
                     ot::Input::Sender { m0: &m0, m1: &m1 })?;
             // P1 holds (x_1, x_2) = (a_1, a_2)
@@ -69,7 +78,7 @@ pub fn b2a(ctx: &Ctx, y: &BitShare) -> Result<Share> {
                              ot::Input::Receiver { c: &y.a })?
                 .expect("receiver output");
             // forward x_0 to P2 (replication)
-            ctx.comm.send_elems(Dir::Prev, &x0);
+            ctx.comm.send_elems(Dir::Prev, &x0)?;
             ctx.comm.round();
             // P0 holds (x_0, x_1) = (y - a, a_1)
             Ok(Share {

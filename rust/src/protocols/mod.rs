@@ -93,27 +93,18 @@ impl<'a> Ctx<'a> {
 
 #[cfg(test)]
 pub(crate) mod testsupport {
-    //! Shared three-party test harness for protocol tests.
+    //! Shared three-party test harness for protocol tests (backed by
+    //! `testutil::threeparty`, which integration tests use directly).
     use super::*;
-    use crate::transport::{local_trio, NetConfig, Stats};
-    use std::thread;
+    use crate::transport::Stats;
 
     /// Run the same closure on three party threads and collect results in
-    /// party order.
+    /// party order (fixed legacy session seed 4242).
     pub fn run3<F, R>(f: F) -> Vec<(R, Stats)>
     where
-        F: Fn(&Ctx) -> R + Send + Sync + Copy + 'static,
-        R: Send + 'static,
+        F: Fn(&Ctx) -> R + Send + Sync,
+        R: Send,
     {
-        let comms = local_trio(NetConfig::zero());
-        let handles: Vec<_> = comms.into_iter().map(|c| {
-            thread::spawn(move || {
-                let seeds = PartySeeds::setup(4242, c.id);
-                let ctx = Ctx::new(&c, &seeds);
-                let r = f(&ctx);
-                (r, c.stats())
-            })
-        }).collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
+        crate::testutil::threeparty::run3_seeded(4242, f)
     }
 }

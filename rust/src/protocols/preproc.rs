@@ -17,9 +17,13 @@
 //! Beaver triples; the serving coordinator tops the reservoir up between
 //! requests, and the ablation bench measures both paths.
 //!
-//! The beta reservoir is two word-packed `BitTensor`s; minting appends
-//! word-wise and `take` is a FIFO bit-level split, so a pool holding
-//! millions of bits costs megabytes, not tens of megabytes.
+//! Every reservoir component is a head-indexed FIFO: the beta bits are
+//! two word-packed `ring::planes::BitQueue`s (the strided layout's
+//! 1-plane case), the arithmetic components are `ElemQueue`s.  Minting
+//! appends; a draw advances a head *index* and copies only what it
+//! returns -- O(n) per take instead of re-shifting/`split_off`-copying
+//! the whole remaining pool -- so a reservoir holding millions of
+//! tuples costs megabytes and its draws stay off the hot path.
 
 use std::cell::RefCell;
 
@@ -27,6 +31,7 @@ use anyhow::Result;
 
 use crate::prf::{domain, PrfStream};
 use crate::ring::bits::BitTensor;
+use crate::ring::planes::BitQueue;
 use crate::ring::{Elem, Tensor};
 use crate::rss::{self, BitShare, Share};
 
@@ -40,12 +45,51 @@ pub struct MsbTuple {
     pub rs: Share,
 }
 
+/// Head-indexed FIFO of ring elements: the arithmetic analogue of
+/// `BitQueue` -- a draw copies only the `n` elements it returns and
+/// advances the head; consumed storage is reclaimed lazily.  (The old
+/// `split_off`-based draw copied the entire remaining pool each take.)
+#[derive(Default)]
+struct ElemQueue {
+    data: Vec<Elem>,
+    head: usize,
+}
+
+/// Reclaim consumed storage once this many elements are stale.
+const ELEM_RECLAIM: usize = 1 << 16;
+
+impl ElemQueue {
+    fn push(&mut self, v: &[Elem]) {
+        self.data.extend_from_slice(v);
+    }
+
+    fn len(&self) -> usize {
+        self.data.len() - self.head
+    }
+
+    fn pop_front(&mut self, n: usize) -> Vec<Elem> {
+        assert!(n <= self.len(), "element queue underflow: need {n}, \
+                                  have {}", self.len());
+        let out = self.data[self.head..self.head + n].to_vec();
+        self.head += n;
+        if self.head >= ELEM_RECLAIM {
+            self.data.drain(..self.head);
+            self.head = 0;
+        }
+        if self.len() == 0 {
+            self.data.clear();
+            self.head = 0;
+        }
+        out
+    }
+}
+
 #[derive(Default)]
 struct Reservoir {
-    beta_a_bits: BitTensor,
-    beta_b_bits: BitTensor,
-    beta_a: (Vec<Elem>, Vec<Elem>),
-    rs: (Vec<Elem>, Vec<Elem>),
+    beta_a_bits: BitQueue,
+    beta_b_bits: BitQueue,
+    beta_a: (ElemQueue, ElemQueue),
+    rs: (ElemQueue, ElemQueue),
 }
 
 /// Flat per-element reservoir of MSB correlated material.  All parties
@@ -88,38 +132,35 @@ impl MsbPool {
         let rs = rss::mul(ctx.comm, ctx.seeds, &r, &s)?;
 
         let mut res = self.r.borrow_mut();
-        res.beta_a_bits.extend(&beta.a);
-        res.beta_b_bits.extend(&beta.b);
-        res.beta_a.0.extend_from_slice(&beta_a.a.data);
-        res.beta_a.1.extend_from_slice(&beta_a.b.data);
-        res.rs.0.extend_from_slice(&rs.a.data);
-        res.rs.1.extend_from_slice(&rs.b.data);
+        res.beta_a_bits.push(&beta.a);
+        res.beta_b_bits.push(&beta.b);
+        res.beta_a.0.push(&beta_a.a.data);
+        res.beta_a.1.push(&beta_a.b.data);
+        res.rs.0.push(&rs.a.data);
+        res.rs.1.push(&rs.b.data);
         Ok(())
     }
 
     /// Draw `n` elements; panics if the reservoir is short (protocol
     /// desync / undersized preprocessing -- a bug, not a runtime state).
+    /// O(n) per draw for every component (head-indexed queues).
     pub fn take(&self, n: usize) -> MsbTuple {
         let mut res = self.r.borrow_mut();
         assert!(res.beta_a_bits.len() >= n,
                 "MSB pool exhausted: need {n}, have {}",
                 res.beta_a_bits.len());
-        let split = |v: &mut Vec<Elem>| -> Vec<Elem> {
-            let rest = v.split_off(n);
-            std::mem::replace(v, rest)
-        };
         MsbTuple {
             beta: BitShare {
-                a: res.beta_a_bits.take_front(n),
-                b: res.beta_b_bits.take_front(n),
+                a: res.beta_a_bits.pop_front(n),
+                b: res.beta_b_bits.pop_front(n),
             },
             beta_a: Share {
-                a: Tensor::from_vec(&[n], split(&mut res.beta_a.0)),
-                b: Tensor::from_vec(&[n], split(&mut res.beta_a.1)),
+                a: Tensor::from_vec(&[n], res.beta_a.0.pop_front(n)),
+                b: Tensor::from_vec(&[n], res.beta_a.1.pop_front(n)),
             },
             rs: Share {
-                a: Tensor::from_vec(&[n], split(&mut res.rs.0)),
-                b: Tensor::from_vec(&[n], split(&mut res.rs.1)),
+                a: Tensor::from_vec(&[n], res.rs.0.pop_front(n)),
+                b: Tensor::from_vec(&[n], res.rs.1.pop_front(n)),
             },
         }
     }

@@ -44,7 +44,7 @@ pub fn relu_ot(ctx: &Ctx, x: &Share, msb: &BitShare) -> Result<Share> {
             let mut sp = PrfStream::new(&ctx.seeds.private, cnt1,
                                         domain::SHARE);
             let a2: Vec<Elem> = (0..n).map(|_| sp.next_elem()).collect();
-            ctx.comm.send_elems(Dir::Next, &a2);
+            ctx.comm.send_elems(Dir::Next, &a2)?;
             let nots = msb.a.xor(&msb.b); // msb_1 ^ msb_2, word-parallel
             let (m0, m1): (Vec<Elem>, Vec<Elem>) = (0..n).map(|i| {
                 let x12 = x.a.data[i].wrapping_add(x.b.data[i]);
@@ -84,7 +84,7 @@ pub fn relu_ot(ctx: &Ctx, x: &Share, msb: &BitShare) -> Result<Share> {
             let a0 = ot::run(ctx.comm, ctx.seeds, roles1, n,
                              ot::Input::Receiver { c: &msb.a })?
                 .expect("ot1 output");
-            ctx.comm.send_elems(Dir::Prev, &a0); // replicate A_0 to P2
+            ctx.comm.send_elems(Dir::Prev, &a0)?; // replicate A_0 to P2
             ctx.comm.round();
             let a_share = Share {
                 a: Tensor::from_vec(&shape, a0),
@@ -127,7 +127,7 @@ pub fn relu_ot(ctx: &Ctx, x: &Share, msb: &BitShare) -> Result<Share> {
             let b2v = ot::run(ctx.comm, ctx.seeds, roles2, n,
                               ot::Input::Receiver { c: &msb.a })?
                 .expect("ot2 output");
-            ctx.comm.send_elems(Dir::Prev, &b2v); // replicate B_2 to P1
+            ctx.comm.send_elems(Dir::Prev, &b2v)?; // replicate B_2 to P1
             ctx.comm.round();
             let mut sga = PrfStream::new(&ctx.seeds.next, cnt2, domain::SHARE);
             let ga: Vec<Elem> = (0..n).map(|_| sga.next_elem()).collect();

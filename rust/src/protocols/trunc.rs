@@ -49,7 +49,7 @@ pub fn trunc(ctx: &Ctx, x: &Share, f: u32) -> Result<Share> {
             let masked: Vec<Elem> = (0..n).map(|i| {
                 x.a.data[i].wrapping_add(shift).wrapping_add(r[i])
             }).collect();
-            ctx.comm.send_elems(Dir::Next, &masked); // P2 = P1.next
+            ctx.comm.send_elems(Dir::Next, &masked)?; // P2 = P1.next
             ctx.comm.round();
             let t = rss::share_input(ctx.comm, ctx.seeds, 2, None,
                                      x.shape())?;

@@ -26,6 +26,7 @@
 //! operates on words.
 
 use crate::prf::PrfStream;
+use crate::ring::kernel;
 
 /// Bits per storage word.
 pub const WORD_BITS: usize = 64;
@@ -104,6 +105,12 @@ impl BitTensor {
         &self.words
     }
 
+    /// Surrender the word buffer (the `BitPlanes` reinterpret boundary --
+    /// the words move, no bits are repacked).
+    pub fn into_words(self) -> Vec<u64> {
+        self.words
+    }
+
     #[inline]
     pub fn get(&self, i: usize) -> u8 {
         debug_assert!(i < self.len);
@@ -128,81 +135,55 @@ impl BitTensor {
 
     /// Number of set bits (word-parallel thanks to the tail invariant).
     pub fn popcount(&self) -> usize {
-        self.words.iter().map(|w| w.count_ones() as usize).sum()
+        kernel::popcount(&self.words)
     }
 
-    // ---- word-parallel boolean ops --------------------------------------
+    // ---- word-parallel boolean ops (ring::kernel, 4-way unrolled) -------
     pub fn xor(&self, rhs: &BitTensor) -> BitTensor {
         assert_eq!(self.len, rhs.len, "xor length mismatch");
-        BitTensor {
-            len: self.len,
-            words: self.words.iter().zip(&rhs.words).map(|(a, b)| a ^ b)
-                .collect(),
-        }
+        let mut words = vec![0u64; self.words.len()];
+        kernel::xor_into(&mut words, &self.words, &rhs.words);
+        BitTensor { len: self.len, words }
     }
 
     pub fn xor_assign(&mut self, rhs: &BitTensor) {
         assert_eq!(self.len, rhs.len, "xor length mismatch");
-        for (a, b) in self.words.iter_mut().zip(&rhs.words) {
-            *a ^= b;
-        }
+        kernel::xor_in_place(&mut self.words, &rhs.words);
     }
 
     pub fn and(&self, rhs: &BitTensor) -> BitTensor {
         assert_eq!(self.len, rhs.len, "and length mismatch");
-        BitTensor {
-            len: self.len,
-            words: self.words.iter().zip(&rhs.words).map(|(a, b)| a & b)
-                .collect(),
-        }
+        let mut words = vec![0u64; self.words.len()];
+        kernel::and_into(&mut words, &self.words, &rhs.words);
+        BitTensor { len: self.len, words }
     }
 
     /// Bitwise complement (tail bits stay zero).
     pub fn not(&self) -> BitTensor {
-        let mut t = BitTensor {
-            len: self.len,
-            words: self.words.iter().map(|w| !w).collect(),
-        };
+        let mut words = vec![0u64; self.words.len()];
+        kernel::not_into(&mut words, &self.words);
+        let mut t = BitTensor { len: self.len, words };
         t.mask_tail();
         t
     }
 
-    // ---- concatenation / slicing (bit-granular) -------------------------
+    // ---- concatenation / slicing (bit-granular, via the shared splice
+    // ---- helpers in ring::kernel) ---------------------------------------
     /// Append `other`'s bits after this tensor's.
     pub fn extend(&mut self, other: &BitTensor) {
-        let off = self.len % WORD_BITS;
-        let new_len = self.len + other.len;
-        if off == 0 {
-            self.words.extend_from_slice(&other.words);
-        } else {
-            for &w in &other.words {
-                // tail of the last word is zero, so OR is safe
-                *self.words.last_mut().unwrap() |= w << off;
-                self.words.push(w >> (WORD_BITS - off));
-            }
-            self.words.truncate(new_len.div_ceil(WORD_BITS));
-        }
-        self.len = new_len;
+        kernel::append_bits(&mut self.words, self.len, &other.words,
+                            other.len);
+        self.len += other.len;
         self.mask_tail();
     }
 
     /// Copy out bits `[start, start + len)` as a fresh tensor.
     pub fn slice(&self, start: usize, len: usize) -> BitTensor {
         assert!(start + len <= self.len, "slice out of range");
-        let nw = len.div_ceil(WORD_BITS);
-        let woff = start / WORD_BITS;
-        let boff = start % WORD_BITS;
-        let mut words = Vec::with_capacity(nw);
-        for k in 0..nw {
-            let lo = self.words[woff + k] >> boff;
-            let hi = if boff > 0 && woff + k + 1 < self.words.len() {
-                self.words[woff + k + 1] << (WORD_BITS - boff)
-            } else {
-                0
-            };
-            words.push(lo | hi);
-        }
-        let mut t = BitTensor { len, words };
+        let mut t = BitTensor {
+            len,
+            words: kernel::copy_bits(&self.words, start, len),
+        };
         t.mask_tail();
         t
     }

@@ -1,0 +1,313 @@
+//! Word-parallel bit kernels shared by `BitTensor` and `BitPlanes`.
+//!
+//! Every boolean-share hot loop in the framework bottoms out here: XOR
+//! (share combine / public unmask), AND (the local term of the boolean
+//! multiplication), NOT, popcount, and the fused 4-term local product of
+//! the RSS AND protocol.  The loops are 4-way unrolled over `u64` words
+//! (`u64x4`-style): on x86-64 the compiler lowers each unrolled body to a
+//! pair of 256-bit loads + one vector op when AVX2 is available, and to
+//! four scalar ops otherwise -- either way the dependency chains are
+//! broken up, which is what the rolled `zip` loops left on the table.
+//!
+//! Callers guarantee equal slice lengths (asserted here once, so the
+//! unrolled bodies index without per-element bounds checks).  Tail
+//! invariants (bits past `len`) are the callers' concern: kernels operate
+//! on raw words.
+
+/// Unroll factor of the word loops (4 u64s = one 256-bit vector).
+pub const UNROLL: usize = 4;
+
+macro_rules! unrolled_binop {
+    ($name:ident, $doc:literal, $op:tt) => {
+        #[doc = $doc]
+        pub fn $name(dst: &mut [u64], a: &[u64], b: &[u64]) {
+            let n = dst.len();
+            assert!(a.len() == n && b.len() == n, "kernel length mismatch");
+            let mut i = 0;
+            while i + UNROLL <= n {
+                dst[i] = a[i] $op b[i];
+                dst[i + 1] = a[i + 1] $op b[i + 1];
+                dst[i + 2] = a[i + 2] $op b[i + 2];
+                dst[i + 3] = a[i + 3] $op b[i + 3];
+                i += UNROLL;
+            }
+            while i < n {
+                dst[i] = a[i] $op b[i];
+                i += 1;
+            }
+        }
+    };
+}
+
+unrolled_binop!(xor_into, "dst = a ^ b, word-parallel.", ^);
+unrolled_binop!(and_into, "dst = a & b, word-parallel.", &);
+unrolled_binop!(or_into, "dst = a | b, word-parallel.", |);
+
+/// dst ^= src, word-parallel.
+pub fn xor_in_place(dst: &mut [u64], src: &[u64]) {
+    let n = dst.len();
+    assert_eq!(src.len(), n, "kernel length mismatch");
+    let mut i = 0;
+    while i + UNROLL <= n {
+        dst[i] ^= src[i];
+        dst[i + 1] ^= src[i + 1];
+        dst[i + 2] ^= src[i + 2];
+        dst[i + 3] ^= src[i + 3];
+        i += UNROLL;
+    }
+    while i < n {
+        dst[i] ^= src[i];
+        i += 1;
+    }
+}
+
+/// dst = !src, word-parallel (tail bits are the caller's to re-mask).
+pub fn not_into(dst: &mut [u64], src: &[u64]) {
+    let n = dst.len();
+    assert_eq!(src.len(), n, "kernel length mismatch");
+    let mut i = 0;
+    while i + UNROLL <= n {
+        dst[i] = !src[i];
+        dst[i + 1] = !src[i + 1];
+        dst[i + 2] = !src[i + 2];
+        dst[i + 3] = !src[i + 3];
+        i += UNROLL;
+    }
+    while i < n {
+        dst[i] = !src[i];
+        i += 1;
+    }
+}
+
+/// dst = a ^ b ^ c, word-parallel (the carry-save sum row).
+pub fn xor3_into(dst: &mut [u64], a: &[u64], b: &[u64], c: &[u64]) {
+    let n = dst.len();
+    assert!(a.len() == n && b.len() == n && c.len() == n,
+            "kernel length mismatch");
+    let mut i = 0;
+    while i + UNROLL <= n {
+        dst[i] = a[i] ^ b[i] ^ c[i];
+        dst[i + 1] = a[i + 1] ^ b[i + 1] ^ c[i + 1];
+        dst[i + 2] = a[i + 2] ^ b[i + 2] ^ c[i + 2];
+        dst[i + 3] = a[i + 3] ^ b[i + 3] ^ c[i + 3];
+        i += UNROLL;
+    }
+    while i < n {
+        dst[i] = a[i] ^ b[i] ^ c[i];
+        i += 1;
+    }
+}
+
+/// Total set bits, 4 accumulators to keep the popcnt units busy.
+pub fn popcount(words: &[u64]) -> usize {
+    let n = words.len();
+    let (mut c0, mut c1, mut c2, mut c3) = (0usize, 0usize, 0usize, 0usize);
+    let mut i = 0;
+    while i + UNROLL <= n {
+        c0 += words[i].count_ones() as usize;
+        c1 += words[i + 1].count_ones() as usize;
+        c2 += words[i + 2].count_ones() as usize;
+        c3 += words[i + 3].count_ones() as usize;
+        i += UNROLL;
+    }
+    while i < n {
+        c0 += words[i].count_ones() as usize;
+        i += 1;
+    }
+    c0 + c1 + c2 + c3
+}
+
+/// The fused local term of the RSS boolean AND:
+///
+/// ```text
+///     dst = (xa & ya) ^ (xa & yb) ^ (xb & ya) ^ mask
+/// ```
+///
+/// i.e. party i's 3-of-3 share of x & y, already masked with its
+/// zero-sharing row.  Fusing the three ANDs and three XORs into one pass
+/// reads each input word once instead of materializing intermediates.
+pub fn and_local_into(dst: &mut [u64], xa: &[u64], xb: &[u64], ya: &[u64],
+                      yb: &[u64], mask: &[u64]) {
+    let n = dst.len();
+    assert!(xa.len() == n && xb.len() == n && ya.len() == n
+            && yb.len() == n && mask.len() == n,
+            "kernel length mismatch");
+    #[inline(always)]
+    fn term(xa: u64, xb: u64, ya: u64, yb: u64, m: u64) -> u64 {
+        (xa & ya) ^ (xa & yb) ^ (xb & ya) ^ m
+    }
+    let mut i = 0;
+    while i + UNROLL <= n {
+        dst[i] = term(xa[i], xb[i], ya[i], yb[i], mask[i]);
+        dst[i + 1] = term(xa[i + 1], xb[i + 1], ya[i + 1], yb[i + 1],
+                          mask[i + 1]);
+        dst[i + 2] = term(xa[i + 2], xb[i + 2], ya[i + 2], yb[i + 2],
+                          mask[i + 2]);
+        dst[i + 3] = term(xa[i + 3], xb[i + 3], ya[i + 3], yb[i + 3],
+                          mask[i + 3]);
+        i += UNROLL;
+    }
+    while i < n {
+        dst[i] = term(xa[i], xb[i], ya[i], yb[i], mask[i]);
+        i += 1;
+    }
+}
+
+// ---- bit-granular splice helpers (the ONE home of the straddled-word
+// ---- shift arithmetic; BitTensor extend/slice and BitQueue push/pop all
+// ---- route here) ---------------------------------------------------------
+
+/// Append `src_len` bits (word-packed, LSB-first in `src`) after bit
+/// `end` of a word buffer.  Precondition: `dst.len() == end.div_ceil(64)`
+/// and bits past `end` in the last word are zero.  Postcondition:
+/// `dst.len() == (end + src_len).div_ceil(64)`; bits past the new end
+/// are whatever `src`'s tail held shifted in -- callers re-mask their
+/// own tail invariant.
+pub fn append_bits(dst: &mut Vec<u64>, end: usize, src: &[u64],
+                   src_len: usize) {
+    debug_assert_eq!(dst.len(), end.div_ceil(64));
+    let off = end % 64;
+    if off == 0 {
+        dst.extend_from_slice(src);
+    } else {
+        for &w in src {
+            // tail of the last word is zero, so OR is safe
+            *dst.last_mut().unwrap() |= w << off;
+            dst.push(w >> (64 - off));
+        }
+    }
+    dst.truncate((end + src_len).div_ceil(64));
+}
+
+/// Copy `n` bits starting at bit `start` of a word buffer into fresh
+/// words.  Bits past `n` in the last output word are NOT masked --
+/// callers re-establish their tail invariant (`BitTensor::from_words`
+/// does).
+pub fn copy_bits(src: &[u64], start: usize, n: usize) -> Vec<u64> {
+    let woff = start / 64;
+    let boff = start % 64;
+    let nw = n.div_ceil(64);
+    let mut out = Vec::with_capacity(nw);
+    for k in 0..nw {
+        let lo = src[woff + k] >> boff;
+        let hi = if boff > 0 && woff + k + 1 < src.len() {
+            src[woff + k + 1] << (64 - boff)
+        } else {
+            0
+        };
+        out.push(lo | hi);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{prop, Rng};
+
+    fn words(rng: &mut Rng, n: usize) -> Vec<u64> {
+        (0..n).map(|_| rng.next_u64()).collect()
+    }
+
+    #[test]
+    fn unrolled_ops_match_rolled_reference() {
+        // lengths straddle every unroll remainder (0..=3 leftover words)
+        prop(50, |rng: &mut Rng| {
+            let n = rng.range(0, 23);
+            let a = words(rng, n);
+            let b = words(rng, n);
+            let c = words(rng, n);
+            let mut dst = vec![0u64; n];
+
+            xor_into(&mut dst, &a, &b);
+            let want: Vec<u64> =
+                a.iter().zip(&b).map(|(x, y)| x ^ y).collect();
+            assert_eq!(dst, want);
+
+            and_into(&mut dst, &a, &b);
+            let want: Vec<u64> =
+                a.iter().zip(&b).map(|(x, y)| x & y).collect();
+            assert_eq!(dst, want);
+
+            or_into(&mut dst, &a, &b);
+            let want: Vec<u64> =
+                a.iter().zip(&b).map(|(x, y)| x | y).collect();
+            assert_eq!(dst, want);
+
+            not_into(&mut dst, &a);
+            let want: Vec<u64> = a.iter().map(|x| !x).collect();
+            assert_eq!(dst, want);
+
+            xor3_into(&mut dst, &a, &b, &c);
+            let want: Vec<u64> = (0..n).map(|i| a[i] ^ b[i] ^ c[i]).collect();
+            assert_eq!(dst, want);
+
+            let mut acc = a.clone();
+            xor_in_place(&mut acc, &b);
+            let want: Vec<u64> =
+                a.iter().zip(&b).map(|(x, y)| x ^ y).collect();
+            assert_eq!(acc, want);
+
+            let want: usize =
+                a.iter().map(|w| w.count_ones() as usize).sum();
+            assert_eq!(popcount(&a), want);
+        });
+    }
+
+    #[test]
+    fn splice_helpers_match_bit_oracle() {
+        prop(60, |rng: &mut Rng| {
+            // build two bit strings, append word-wise, then copy random
+            // windows back out and compare against a Vec<u8> oracle
+            let n1 = rng.range(0, 200);
+            let n2 = rng.range(0, 200);
+            let bits1: Vec<u8> = (0..n1).map(|_| rng.bit()).collect();
+            let bits2: Vec<u8> = (0..n2).map(|_| rng.bit()).collect();
+            let pack = |bits: &[u8]| -> Vec<u64> {
+                let mut w = vec![0u64; bits.len().div_ceil(64)];
+                for (i, &b) in bits.iter().enumerate() {
+                    w[i / 64] |= u64::from(b) << (i % 64);
+                }
+                w
+            };
+            let mut words = pack(&bits1);
+            append_bits(&mut words, n1, &pack(&bits2), n2);
+            let mut oracle = bits1;
+            oracle.extend_from_slice(&bits2);
+            let total = oracle.len();
+            assert_eq!(words.len(), total.div_ceil(64));
+            for (i, &b) in oracle.iter().enumerate() {
+                assert_eq!(((words[i / 64] >> (i % 64)) & 1) as u8, b,
+                           "bit {i} after append");
+            }
+            if total > 0 {
+                let start = rng.range(0, total);
+                let len = rng.range(0, total - start + 1);
+                let got = copy_bits(&words, start, len);
+                for (j, &b) in oracle[start..start + len].iter().enumerate()
+                {
+                    assert_eq!(((got[j / 64] >> (j % 64)) & 1) as u8, b,
+                               "bit {j} of window [{start}; {len})");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn fused_and_local_matches_composition() {
+        prop(50, |rng: &mut Rng| {
+            let n = rng.range(1, 19);
+            let xa = words(rng, n);
+            let xb = words(rng, n);
+            let ya = words(rng, n);
+            let yb = words(rng, n);
+            let mask = words(rng, n);
+            let mut dst = vec![0u64; n];
+            and_local_into(&mut dst, &xa, &xb, &ya, &yb, &mask);
+            let want: Vec<u64> = (0..n).map(|i| {
+                (xa[i] & ya[i]) ^ (xa[i] & yb[i]) ^ (xb[i] & ya[i]) ^ mask[i]
+            }).collect();
+            assert_eq!(dst, want);
+        });
+    }
+}

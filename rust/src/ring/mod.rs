@@ -6,9 +6,12 @@
 //! artifacts, so the PJRT path and the native path are bit-identical.
 
 pub mod bits;
+pub mod kernel;
+pub mod planes;
 pub mod tensor;
 
 pub use bits::BitTensor;
+pub use planes::{BitPlanes, BitQueue, PlanesView};
 pub use tensor::Tensor;
 
 /// Ring element (alias to make intent explicit at API boundaries).

@@ -1,0 +1,643 @@
+//! Strided bit-plane matrices: the batch representation for boolean
+//! adder circuits.
+//!
+//! The bit-decomposition baseline (and any future boolean circuit over
+//! ring elements) works on L = 32 *bit-planes* of n elements each.  PR 1
+//! stored each plane as its own `BitTensor` and stitched the per-level
+//! Kogge-Stone operands together with `extend`/`slice`, copying O(L*n)
+//! bits per adder level.  `BitPlanes` removes those copies structurally:
+//!
+//! * **plane-major, equal stride** -- plane `p` occupies words
+//!   `[p*W, (p+1)*W)` of one contiguous allocation, `W = ceil(len/64)`.
+//!   A *range of planes* is therefore a contiguous word slice, and every
+//!   Kogge-Stone operand (`p[dist..L]`, `g[0..L-dist]`, ...) is a
+//!   zero-copy row selection;
+//! * **`shift_planes(dist)`** remaps row indices instead of moving bits:
+//!   row `r` of the shifted view reads row `r - dist` of the source
+//!   (all-zero below the shift) -- the carry wire `t = (maj ^ b) << 1`
+//!   costs pointer arithmetic, not a 32n-bit copy;
+//! * **whole-matrix ops** (XOR/AND/NOT/popcount) run over the backing
+//!   words through `ring::kernel`'s unrolled loops;
+//! * **wire reinterpret** -- the word buffer *is* a valid `BitTensor`
+//!   word buffer of `planes * W * 64` bits, so transport ships a
+//!   `BitPlanes` verbatim (`into_tensor`/`from_tensor`, no repack).
+//!   Each plane keeps the `BitTensor` tail invariant (bits past `len`
+//!   zero), which `from_tensor` re-establishes against dirty peer
+//!   padding.
+//!
+//! The module also hosts `BitQueue`, the 1-plane degenerate case of the
+//! same idea: a FIFO bit reservoir that advances a *head index* on draw
+//! instead of re-shifting the whole pool (`protocols::preproc`).
+
+use std::ops::Range;
+
+use crate::ring::bits::{BitTensor, WORD_BITS};
+use crate::ring::kernel;
+
+/// A `planes x len` bit matrix, plane-major, every plane padded to the
+/// same word width.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitPlanes {
+    planes: usize,
+    /// Bits per plane.
+    len: usize,
+    /// Words per plane: `len.div_ceil(64)`.
+    width: usize,
+    /// `planes * width` words, plane-major.
+    words: Vec<u64>,
+}
+
+impl BitPlanes {
+    // ---- constructors ---------------------------------------------------
+    pub fn zeros(planes: usize, len: usize) -> Self {
+        let width = len.div_ceil(WORD_BITS);
+        BitPlanes { planes, len, width, words: vec![0u64; planes * width] }
+    }
+
+    /// Copy equal-length tensors in as planes (plaintext/test boundary).
+    pub fn from_tensors(rows: &[BitTensor]) -> Self {
+        let len = rows.first().map_or(0, BitTensor::len);
+        let mut out = Self::zeros(rows.len(), len);
+        for (p, t) in rows.iter().enumerate() {
+            assert_eq!(t.len(), len, "plane length mismatch");
+            out.plane_words_mut(p).copy_from_slice(t.words());
+        }
+        out
+    }
+
+    /// The arithmetic -> boolean packing boundary: plane `p`, bit `i` is
+    /// bit `p` of `vals[i]`.  Writes straight into the strided buffer --
+    /// one allocation for all `planes` planes, no per-plane tensors.
+    pub fn from_elem_bits(vals: &[i32], planes: usize) -> Self {
+        assert!(planes <= 32, "i32 has 32 bit-planes");
+        let mut out = Self::zeros(planes, vals.len());
+        let width = out.width;
+        for (w, chunk) in vals.chunks(WORD_BITS).enumerate() {
+            for p in 0..planes {
+                let mut word = 0u64;
+                for (b, &v) in chunk.iter().enumerate() {
+                    word |= u64::from((v as u32 >> p) & 1) << b;
+                }
+                out.words[p * width + w] = word;
+            }
+        }
+        out
+    }
+
+    // ---- accessors ------------------------------------------------------
+    pub fn planes(&self) -> usize {
+        self.planes
+    }
+
+    /// Bits per plane.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.planes == 0 || self.len == 0
+    }
+
+    /// Words per plane (the row stride).
+    pub fn width_words(&self) -> usize {
+        self.width
+    }
+
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    pub fn plane_words(&self, p: usize) -> &[u64] {
+        &self.words[p * self.width..(p + 1) * self.width]
+    }
+
+    /// Mutable words of one plane (kernel write target; the caller keeps
+    /// the per-plane tail invariant, e.g. via `mask_tails`).
+    pub fn plane_words_mut(&mut self, p: usize) -> &mut [u64] {
+        &mut self.words[p * self.width..(p + 1) * self.width]
+    }
+
+    /// Copy one plane out as a `BitTensor` (share/wire boundary for
+    /// single-plane results; `W` words, tail already clean).
+    pub fn plane(&self, p: usize) -> BitTensor {
+        BitTensor::from_words(self.len, self.plane_words(p).to_vec())
+    }
+
+    #[inline]
+    pub fn get(&self, p: usize, i: usize) -> u8 {
+        debug_assert!(p < self.planes && i < self.len);
+        let w = self.words[p * self.width + i / WORD_BITS];
+        ((w >> (i % WORD_BITS)) & 1) as u8
+    }
+
+    /// Total padded bit count (`planes * width * 64`): the length of the
+    /// reinterpreted wire tensor.
+    pub fn padded_bits(&self) -> usize {
+        self.planes * self.width * WORD_BITS
+    }
+
+    // ---- whole-matrix word-parallel ops ---------------------------------
+    fn assert_shape(&self, rhs: &BitPlanes) {
+        assert!(self.planes == rhs.planes && self.len == rhs.len,
+                "plane shape mismatch: {}x{} vs {}x{}",
+                self.planes, self.len, rhs.planes, rhs.len);
+    }
+
+    pub fn xor(&self, rhs: &BitPlanes) -> BitPlanes {
+        self.assert_shape(rhs);
+        let mut out = self.clone();
+        kernel::xor_in_place(&mut out.words, &rhs.words);
+        out
+    }
+
+    pub fn xor_assign(&mut self, rhs: &BitPlanes) {
+        self.assert_shape(rhs);
+        kernel::xor_in_place(&mut self.words, &rhs.words);
+    }
+
+    pub fn and(&self, rhs: &BitPlanes) -> BitPlanes {
+        self.assert_shape(rhs);
+        let mut out = Self::zeros(self.planes, self.len);
+        kernel::and_into(&mut out.words, &self.words, &rhs.words);
+        out
+    }
+
+    /// Complement every plane (per-plane tails re-masked).
+    pub fn not(&self) -> BitPlanes {
+        let mut out = Self::zeros(self.planes, self.len);
+        kernel::not_into(&mut out.words, &self.words);
+        out.mask_tails();
+        out
+    }
+
+    pub fn popcount(&self) -> usize {
+        kernel::popcount(&self.words)
+    }
+
+    // ---- zero-copy views ------------------------------------------------
+    /// View of all planes.
+    pub fn view(&self) -> PlanesView<'_> {
+        PlanesView { src: self, start: 0, count: self.planes }
+    }
+
+    /// View of a contiguous plane range (zero-copy row selection).
+    pub fn rows(&self, r: Range<usize>) -> PlanesView<'_> {
+        assert!(r.start <= r.end && r.end <= self.planes,
+                "plane range out of bounds");
+        PlanesView { src: self, start: r.start as isize,
+                     count: r.end - r.start }
+    }
+
+    /// The level-shift trick: a view of the same plane count whose row
+    /// `r` reads source row `r - dist` (all-zero for `r < dist`).  This is
+    /// `matrix << dist` along the plane axis by *index remap* -- no bits
+    /// move.
+    pub fn shift_planes(&self, dist: usize) -> PlanesView<'_> {
+        PlanesView { src: self, start: -(dist as isize), count: self.planes }
+    }
+
+    // ---- word-aligned row mutation (the Kogge-Stone update step) --------
+    /// `self[dst_start + j] = src[src_rows.start + j]` for each row of the
+    /// range: one contiguous word-level memcpy (rows are adjacent in both
+    /// matrices), never a bit-granular shift.
+    pub fn copy_rows_from(&mut self, dst_start: usize, src: &BitPlanes,
+                          src_rows: Range<usize>) {
+        assert_eq!(self.len, src.len, "row length mismatch");
+        let k = src_rows.end - src_rows.start;
+        assert!(dst_start + k <= self.planes && src_rows.end <= src.planes,
+                "row range out of bounds");
+        let w = self.width;
+        self.words[dst_start * w..(dst_start + k) * w]
+            .copy_from_slice(&src.words[src_rows.start * w..src_rows.end * w]);
+    }
+
+    /// `self[dst_start + j] ^= src[src_rows.start + j]`, word-parallel
+    /// over the whole contiguous row block.
+    pub fn xor_rows_from(&mut self, dst_start: usize, src: &BitPlanes,
+                         src_rows: Range<usize>) {
+        assert_eq!(self.len, src.len, "row length mismatch");
+        let k = src_rows.end - src_rows.start;
+        assert!(dst_start + k <= self.planes && src_rows.end <= src.planes,
+                "row range out of bounds");
+        let w = self.width;
+        kernel::xor_in_place(
+            &mut self.words[dst_start * w..(dst_start + k) * w],
+            &src.words[src_rows.start * w..src_rows.end * w]);
+    }
+
+    // ---- wire reinterpret (no repack) -----------------------------------
+    /// Reinterpret as a `BitTensor` of `padded_bits()` bits: the word
+    /// buffer moves, nothing is repacked.  The padded length is a
+    /// multiple of 64, so the tensor's tail invariant holds trivially;
+    /// per-plane tails were already zero.
+    pub fn into_tensor(self) -> BitTensor {
+        let bits = self.padded_bits();
+        BitTensor::from_words(bits, self.words)
+    }
+
+    /// Inverse reinterpret: adopt a received tensor's word buffer as a
+    /// `planes x len` matrix.  Returns `None` when the tensor's bit count
+    /// is not exactly the padded size -- the caller treats that as a
+    /// malformed message.  Per-plane tail bits (wire padding a malicious
+    /// peer controls) are cleared.
+    pub fn from_tensor(t: BitTensor, planes: usize, len: usize)
+                       -> Option<BitPlanes> {
+        let width = len.div_ceil(WORD_BITS);
+        if t.len() != planes * width * WORD_BITS {
+            return None;
+        }
+        let mut out = BitPlanes { planes, len, width, words: t.into_words() };
+        out.mask_tails();
+        Some(out)
+    }
+
+    // ---- internal -------------------------------------------------------
+    pub(crate) fn mask_tails(&mut self) {
+        let off = self.len % WORD_BITS;
+        if off == 0 || self.width == 0 {
+            return;
+        }
+        let mask = (1u64 << off) - 1;
+        let w = self.width;
+        for p in 0..self.planes {
+            self.words[p * w + w - 1] &= mask;
+        }
+    }
+}
+
+/// A zero-copy row-remapped window over a `BitPlanes`: row `r` reads
+/// source row `start + r`, and rows that fall outside the source
+/// (`shift_planes`) read as all-zero.
+#[derive(Clone, Copy)]
+pub struct PlanesView<'a> {
+    src: &'a BitPlanes,
+    /// Source row of view row 0 (negative for a shifted-in zero prefix).
+    start: isize,
+    count: usize,
+}
+
+impl<'a> PlanesView<'a> {
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Bits per plane.
+    pub fn len(&self) -> usize {
+        self.src.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn width_words(&self) -> usize {
+        self.src.width
+    }
+
+    /// The words of view row `r`, or `None` for an all-zero (shifted-in)
+    /// row.
+    pub fn row_words(&self, r: usize) -> Option<&'a [u64]> {
+        assert!(r < self.count, "view row out of bounds");
+        let s = self.start + r as isize;
+        if s < 0 || s as usize >= self.src.planes {
+            None
+        } else {
+            Some(self.src.plane_words(s as usize))
+        }
+    }
+
+    /// Materialize the view (copies; boundary/test use only -- protocol
+    /// code consumes views directly).
+    pub fn materialize(&self) -> BitPlanes {
+        let mut out = BitPlanes::zeros(self.count, self.src.len);
+        for r in 0..self.count {
+            if let Some(row) = self.row_words(r) {
+                out.plane_words_mut(r).copy_from_slice(row);
+            }
+        }
+        out
+    }
+
+    /// `self ^ rhs`, materialized (zero rows XOR as zero).
+    pub fn xor(&self, rhs: &PlanesView<'_>) -> BitPlanes {
+        assert!(self.count == rhs.count && self.src.len == rhs.src.len,
+                "view shape mismatch");
+        let mut out = BitPlanes::zeros(self.count, self.src.len);
+        for r in 0..self.count {
+            let dst = &mut out.words
+                [r * self.src.width..(r + 1) * self.src.width];
+            match (self.row_words(r), rhs.row_words(r)) {
+                (Some(a), Some(b)) => kernel::xor_into(dst, a, b),
+                (Some(a), None) | (None, Some(a)) => dst.copy_from_slice(a),
+                (None, None) => {}
+            }
+        }
+        out
+    }
+}
+
+/// Word-aligned FIFO bit reservoir: `push` appends word-packed bits,
+/// `pop_front` draws from the head by advancing an *index* -- O(drawn)
+/// per draw instead of the O(pool) re-shift that `BitTensor::take_front`
+/// pays.  Consumed whole words are reclaimed lazily.
+#[derive(Clone, Debug, Default)]
+pub struct BitQueue {
+    words: Vec<u64>,
+    /// Bits consumed from the front of `words` (stale storage before the
+    /// head is reclaimed once it exceeds `RECLAIM_WORDS`).
+    head: usize,
+    /// Live bits.
+    len: usize,
+}
+
+/// Reclaim consumed storage once this many whole words are stale.
+const RECLAIM_WORDS: usize = 1024;
+
+impl BitQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Append a word-packed tensor's bits at the tail (shared splice
+    /// arithmetic: `kernel::append_bits`).
+    pub fn push(&mut self, bits: &BitTensor) {
+        if bits.is_empty() {
+            return;
+        }
+        let end = self.head + self.len;
+        kernel::append_bits(&mut self.words, end, bits.words(), bits.len());
+        self.len += bits.len();
+    }
+
+    /// Draw the first `n` bits (FIFO).  Panics on underflow -- a protocol
+    /// desync, not a runtime state (mirrors the preprocessing contract).
+    pub fn pop_front(&mut self, n: usize) -> BitTensor {
+        assert!(n <= self.len, "bit queue underflow: need {n}, have {}",
+                self.len);
+        let out = kernel::copy_bits(&self.words, self.head, n);
+        let t = BitTensor::from_words(n, out); // masks the tail
+        self.head += n;
+        self.len -= n;
+        if self.head >= RECLAIM_WORDS * WORD_BITS {
+            let stale = self.head / WORD_BITS;
+            self.words.drain(..stale);
+            self.head %= WORD_BITS;
+        }
+        if self.len == 0 {
+            self.words.clear();
+            self.head = 0;
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{prop, Rng};
+
+    fn rand_tensor(rng: &mut Rng, n: usize) -> BitTensor {
+        BitTensor::from_fn(n, |_| rng.bit())
+    }
+
+    #[test]
+    fn plane_roundtrip_and_strides() {
+        prop(40, |rng: &mut Rng| {
+            let planes = rng.range(1, 33);
+            let n = rng.range(1, 200);
+            let rows: Vec<BitTensor> =
+                (0..planes).map(|_| rand_tensor(rng, n)).collect();
+            let m = BitPlanes::from_tensors(&rows);
+            assert_eq!(m.planes(), planes);
+            assert_eq!(m.len(), n);
+            assert_eq!(m.width_words(), n.div_ceil(64));
+            assert_eq!(m.words().len(), planes * m.width_words());
+            for (p, row) in rows.iter().enumerate() {
+                assert_eq!(&m.plane(p), row, "plane {p}");
+                for i in 0..n {
+                    assert_eq!(m.get(p, i), row.get(i));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn from_elem_bits_matches_per_plane_extraction() {
+        prop(40, |rng: &mut Rng| {
+            let n = rng.range(1, 150);
+            let vals: Vec<i32> = (0..n).map(|_| rng.next_i32()).collect();
+            let m = BitPlanes::from_elem_bits(&vals, 32);
+            for p in 0..32u32 {
+                let want = BitTensor::from_fn(n, |i| {
+                    ((vals[i] as u32 >> p) & 1) as u8
+                });
+                assert_eq!(m.plane(p as usize), want, "plane {p}");
+            }
+        });
+    }
+
+    #[test]
+    fn whole_matrix_ops_match_per_plane_ops() {
+        prop(40, |rng: &mut Rng| {
+            let planes = rng.range(1, 8);
+            let n = rng.range(1, 130);
+            let a: Vec<BitTensor> =
+                (0..planes).map(|_| rand_tensor(rng, n)).collect();
+            let b: Vec<BitTensor> =
+                (0..planes).map(|_| rand_tensor(rng, n)).collect();
+            let ma = BitPlanes::from_tensors(&a);
+            let mb = BitPlanes::from_tensors(&b);
+            let x = ma.xor(&mb);
+            let y = ma.and(&mb);
+            let z = ma.not();
+            let mut pc = 0;
+            for p in 0..planes {
+                assert_eq!(x.plane(p), a[p].xor(&b[p]));
+                assert_eq!(y.plane(p), a[p].and(&b[p]));
+                assert_eq!(z.plane(p), a[p].not());
+                pc += a[p].popcount();
+            }
+            assert_eq!(ma.popcount(), pc);
+            let mut acc = ma.clone();
+            acc.xor_assign(&mb);
+            assert_eq!(acc, x);
+        });
+    }
+
+    #[test]
+    fn shift_planes_is_row_remap() {
+        let mut rng = Rng::new(3);
+        let rows: Vec<BitTensor> =
+            (0..8).map(|_| rand_tensor(&mut rng, 77)).collect();
+        let m = BitPlanes::from_tensors(&rows);
+        for dist in 0..9 {
+            let v = m.shift_planes(dist);
+            assert_eq!(v.count(), 8);
+            let mat = v.materialize();
+            for r in 0..8 {
+                if r < dist {
+                    assert_eq!(mat.plane(r), BitTensor::zeros(77),
+                               "zero row {r} at dist {dist}");
+                    assert!(v.row_words(r).is_none());
+                } else {
+                    assert_eq!(mat.plane(r), rows[r - dist],
+                               "row {r} at dist {dist}");
+                    assert_eq!(v.row_words(r).unwrap(),
+                               m.plane_words(r - dist));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rows_view_is_zero_copy_selection() {
+        let mut rng = Rng::new(5);
+        let rows: Vec<BitTensor> =
+            (0..10).map(|_| rand_tensor(&mut rng, 65)).collect();
+        let m = BitPlanes::from_tensors(&rows);
+        let v = m.rows(3..7);
+        assert_eq!(v.count(), 4);
+        for r in 0..4 {
+            // the view hands back the *same* backing words, not a copy
+            let got = v.row_words(r).unwrap();
+            assert!(std::ptr::eq(got.as_ptr(), m.plane_words(3 + r).as_ptr()));
+            assert_eq!(v.materialize().plane(r), rows[3 + r]);
+        }
+    }
+
+    #[test]
+    fn view_xor_handles_zero_rows() {
+        let mut rng = Rng::new(9);
+        let a: Vec<BitTensor> =
+            (0..6).map(|_| rand_tensor(&mut rng, 100)).collect();
+        let b: Vec<BitTensor> =
+            (0..6).map(|_| rand_tensor(&mut rng, 100)).collect();
+        let ma = BitPlanes::from_tensors(&a);
+        let mb = BitPlanes::from_tensors(&b);
+        let x = ma.view().xor(&mb.shift_planes(2));
+        for r in 0..6 {
+            let want = if r < 2 {
+                a[r].clone()
+            } else {
+                a[r].xor(&b[r - 2])
+            };
+            assert_eq!(x.plane(r), want, "row {r}");
+        }
+    }
+
+    #[test]
+    fn row_mutation_matches_per_plane_ops() {
+        let mut rng = Rng::new(11);
+        let a: Vec<BitTensor> =
+            (0..8).map(|_| rand_tensor(&mut rng, 90)).collect();
+        let s: Vec<BitTensor> =
+            (0..8).map(|_| rand_tensor(&mut rng, 90)).collect();
+        let src = BitPlanes::from_tensors(&s);
+        let mut m = BitPlanes::from_tensors(&a);
+        m.copy_rows_from(3, &src, 1..5);
+        for r in 0..8 {
+            let want = if (3..7).contains(&r) { &s[r - 2] } else { &a[r] };
+            assert_eq!(&m.plane(r), want, "copy row {r}");
+        }
+        let mut m = BitPlanes::from_tensors(&a);
+        m.xor_rows_from(2, &src, 0..4);
+        for r in 0..8 {
+            let want = if (2..6).contains(&r) {
+                a[r].xor(&s[r - 2])
+            } else {
+                a[r].clone()
+            };
+            assert_eq!(m.plane(r), want, "xor row {r}");
+        }
+    }
+
+    #[test]
+    fn tensor_reinterpret_roundtrips_without_repack() {
+        prop(40, |rng: &mut Rng| {
+            let planes = rng.range(1, 10);
+            let n = rng.range(1, 150);
+            let rows: Vec<BitTensor> =
+                (0..planes).map(|_| rand_tensor(rng, n)).collect();
+            let m = BitPlanes::from_tensors(&rows);
+            let words = m.words().to_vec();
+            let t = m.clone().into_tensor();
+            assert_eq!(t.len(), planes * n.div_ceil(64) * 64);
+            assert_eq!(t.words(), &words[..], "reinterpret moved bits");
+            let back = BitPlanes::from_tensor(t, planes, n).unwrap();
+            assert_eq!(back, m);
+        });
+    }
+
+    #[test]
+    fn from_tensor_rejects_wrong_geometry_and_masks_padding() {
+        // wrong padded size -> None (malformed message, not a panic)
+        let t = BitTensor::zeros(128);
+        assert!(BitPlanes::from_tensor(t.clone(), 3, 64).is_none());
+        assert!(BitPlanes::from_tensor(t.clone(), 2, 65).is_none());
+        assert!(BitPlanes::from_tensor(t, 2, 64).is_some());
+        // dirty per-plane padding from the wire is cleared
+        let dirty = BitTensor::ones(128);
+        let m = BitPlanes::from_tensor(dirty, 2, 5).unwrap();
+        assert_eq!(m.popcount(), 10, "padding leaked into planes");
+        for p in 0..2 {
+            assert_eq!(m.plane(p), BitTensor::ones(5));
+        }
+    }
+
+    #[test]
+    fn bit_queue_is_fifo_across_misaligned_pushes() {
+        prop(40, |rng: &mut Rng| {
+            let mut q = BitQueue::new();
+            let mut oracle: Vec<u8> = Vec::new();
+            for _ in 0..rng.range(1, 8) {
+                let n = rng.range(0, 200);
+                let t = rand_tensor(rng, n);
+                oracle.extend(t.to_bits());
+                q.push(&t);
+                assert_eq!(q.len(), oracle.len());
+                if !oracle.is_empty() {
+                    let k = rng.range(0, oracle.len() + 1);
+                    let got = q.pop_front(k);
+                    let want: Vec<u8> = oracle.drain(..k).collect();
+                    assert_eq!(got.to_bits(), want);
+                    assert_eq!(q.len(), oracle.len());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn bit_queue_reclaims_consumed_words() {
+        let mut q = BitQueue::new();
+        let mut rng = Rng::new(4);
+        let big = rand_tensor(&mut rng, 80_000);
+        q.push(&big);
+        let mut drawn = Vec::new();
+        while q.len() > 0 {
+            let k = q.len().min(977);
+            drawn.extend(q.pop_front(k).to_bits());
+        }
+        assert_eq!(drawn, big.to_bits());
+        // everything consumed: storage reset, further pushes start clean
+        assert_eq!(q.len(), 0);
+        let t = rand_tensor(&mut rng, 65);
+        q.push(&t);
+        assert_eq!(q.pop_front(65).to_bits(), t.to_bits());
+    }
+
+    #[test]
+    #[should_panic(expected = "underflow")]
+    fn bit_queue_underflow_panics() {
+        let mut q = BitQueue::new();
+        q.push(&BitTensor::ones(3));
+        let _ = q.pop_front(4);
+    }
+}

@@ -16,6 +16,7 @@
 
 use crate::prf::PartySeeds;
 use crate::ring::bits::BitTensor;
+use crate::ring::planes::{BitPlanes, PlanesView};
 use crate::ring::{Elem, Tensor};
 use crate::transport::{Comm, Dir, WireError};
 
@@ -144,6 +145,108 @@ impl BitShare {
     }
 }
 
+/// One party's RSS share of a whole bit-plane matrix: both components are
+/// strided `BitPlanes`, so plane-range operands of the boolean adder
+/// circuits are zero-copy row selections (see `ring::planes`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlaneShare {
+    pub a: BitPlanes,
+    pub b: BitPlanes,
+}
+
+/// A borrowed, row-remapped window over a `PlaneShare` (both components
+/// share the same remap).  Copy-cheap: two pointers + a range.
+#[derive(Clone, Copy)]
+pub struct PlaneShareView<'a> {
+    pub a: PlanesView<'a>,
+    pub b: PlanesView<'a>,
+}
+
+impl PlaneShare {
+    pub fn zeros(planes: usize, len: usize) -> PlaneShare {
+        PlaneShare {
+            a: BitPlanes::zeros(planes, len),
+            b: BitPlanes::zeros(planes, len),
+        }
+    }
+
+    pub fn planes(&self) -> usize {
+        self.a.planes()
+    }
+
+    /// Bits per plane.
+    pub fn len(&self) -> usize {
+        self.a.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.a.is_empty()
+    }
+
+    /// Whole-matrix share XOR (local, word-parallel).
+    pub fn xor(&self, rhs: &PlaneShare) -> PlaneShare {
+        PlaneShare { a: self.a.xor(&rhs.a), b: self.b.xor(&rhs.b) }
+    }
+
+    /// Copy one plane out as a 1-plane `BitShare` (the wire/share type).
+    pub fn plane(&self, p: usize) -> BitShare {
+        BitShare { a: self.a.plane(p), b: self.b.plane(p) }
+    }
+
+    pub fn view(&self) -> PlaneShareView<'_> {
+        PlaneShareView { a: self.a.view(), b: self.b.view() }
+    }
+
+    /// Zero-copy contiguous plane-range selection.
+    pub fn rows(&self, r: std::ops::Range<usize>) -> PlaneShareView<'_> {
+        PlaneShareView { a: self.a.rows(r.clone()), b: self.b.rows(r) }
+    }
+
+    /// Zero-copy level shift: row `r` reads row `r - dist` (zero below).
+    pub fn shifted(&self, dist: usize) -> PlaneShareView<'_> {
+        PlaneShareView {
+            a: self.a.shift_planes(dist),
+            b: self.b.shift_planes(dist),
+        }
+    }
+
+    /// `self[dst_start..][..k] ^= src[src_rows]`, both components,
+    /// word-parallel over the contiguous row blocks.
+    pub fn xor_rows_from(&mut self, dst_start: usize, src: &PlaneShare,
+                         src_rows: std::ops::Range<usize>) {
+        self.a.xor_rows_from(dst_start, &src.a, src_rows.clone());
+        self.b.xor_rows_from(dst_start, &src.b, src_rows);
+    }
+
+    /// `self[dst_start..][..k] = src[src_rows]`, both components (one
+    /// word-aligned memcpy each).
+    pub fn copy_rows_from(&mut self, dst_start: usize, src: &PlaneShare,
+                          src_rows: std::ops::Range<usize>) {
+        self.a.copy_rows_from(dst_start, &src.a, src_rows.clone());
+        self.b.copy_rows_from(dst_start, &src.b, src_rows);
+    }
+}
+
+impl<'a> PlaneShareView<'a> {
+    pub fn count(&self) -> usize {
+        self.a.count()
+    }
+
+    /// Bits per plane.
+    pub fn len(&self) -> usize {
+        self.a.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.a.is_empty()
+    }
+
+    /// `self ^ rhs`, materialized into a fresh share.
+    pub fn xor(&self, rhs: &PlaneShareView<'_>) -> PlaneShare {
+        PlaneShare { a: self.a.xor(&rhs.a), b: self.b.xor(&rhs.b) }
+    }
+}
+
 // -------------------------------------------------------------------------
 // dealer-style sharing (tests, model loading on the owner)
 // -------------------------------------------------------------------------
@@ -218,7 +321,7 @@ pub fn reshare(comm: &Comm, seeds: &PartySeeds, zi: &Tensor)
     let mask = seeds.zero3(cnt, zi.len());
     let masked: Vec<Elem> = zi.data.iter().zip(&mask)
         .map(|(&z, &m)| z.wrapping_add(m)).collect();
-    comm.send_elems(Dir::Prev, &masked);
+    comm.send_elems(Dir::Prev, &masked)?;
     let from_next = expect_len(comm.recv_elems(Dir::Next)?, zi.len())?;
     comm.round();
     Ok(Share {
@@ -246,7 +349,7 @@ pub fn mul(comm: &Comm, seeds: &PartySeeds, x: &Share, y: &Share)
 /// the next party (so everyone gains the one missing additive term).
 /// One round, one ring message per party.
 pub fn reveal(comm: &Comm, x: &Share) -> Result<Tensor, WireError> {
-    comm.send_elems(Dir::Next, &x.a.data);
+    comm.send_elems(Dir::Next, &x.a.data)?;
     // x_{i-1} = the missing term
     let x_prev = expect_len(comm.recv_elems(Dir::Prev)?, x.len())?;
     comm.round();
@@ -279,8 +382,8 @@ pub fn share_input(comm: &Comm, seeds: &PartySeeds, owner: usize,
         let x_prev: Vec<Elem> = (0..n).map(|i| {
             x.data[i].wrapping_sub(x_next[i])
         }).collect();
-        comm.send_elems(Dir::Prev, &x_prev);
-        comm.send_elems(Dir::Next, &x_prev);
+        comm.send_elems(Dir::Prev, &x_prev)?;
+        comm.send_elems(Dir::Next, &x_prev)?;
         comm.round();
         Ok(Share {
             a: Tensor::zeros(shape),

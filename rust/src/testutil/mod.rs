@@ -3,6 +3,11 @@
 //! proptest is not in the offline crate set (see DESIGN.md substitutions),
 //! so invariants are exercised with a seeded xoshiro generator and a
 //! `prop(n, |rng| ...)` loop that reports the failing iteration's seed.
+//! `threeparty` adds the secure-protocol harness: the same closure run as
+//! all three parties over in-memory channels, with edge-case input
+//! tables for the randomized round-trip tests.
+
+pub mod threeparty;
 
 use crate::ring::Tensor;
 

@@ -1,0 +1,142 @@
+//! Three-party property-test harness: run the same protocol closure on
+//! three in-memory party threads with deterministic seeds, collect every
+//! party's output and comm stats, and let the caller reconstruct against
+//! a plaintext reference.
+//!
+//! Unlike the old `protocols::testsupport::run3` (which this now backs),
+//! the harness uses scoped threads, so closures may borrow test-local
+//! state (lengths, value tables) instead of being `'static + Copy` --
+//! which is what makes table-driven property tests over edge lengths
+//! ergonomic.
+
+use crate::prf::PartySeeds;
+use crate::protocols::Ctx;
+use crate::testutil::Rng;
+use crate::transport::{local_trio, NetConfig, Stats};
+
+/// Run `f` as all three parties of one session over in-memory channels.
+/// `session` seeds the correlated PRF randomness deterministically;
+/// results come back in party order with each party's comm stats.
+pub fn run3_seeded<F, R>(session: u64, f: F) -> Vec<(R, Stats)>
+where
+    F: Fn(&Ctx) -> R + Send + Sync,
+    R: Send,
+{
+    let comms = local_trio(NetConfig::zero());
+    let f = &f;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = comms.into_iter().map(|c| {
+            scope.spawn(move || {
+                let seeds = PartySeeds::setup(session, c.id);
+                let ctx = Ctx::new(&c, &seeds);
+                let r = f(&ctx);
+                (r, c.stats())
+            })
+        }).collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+/// The lengths every randomized protocol test sweeps: word-boundary
+/// stragglers plus a four-digit batch.
+pub const EDGE_LENGTHS: [usize; 5] = [1, 63, 64, 65, 1000];
+
+/// A bounded-input value table for the masked protocols: the edge cases
+/// {0, 1, -1, 2^bound_bits - 1, -(2^bound_bits - 1)} up front, dense
+/// seeded-random filler (within the bound) behind them.
+pub fn edge_values(rng: &mut Rng, n: usize, bound_bits: u32) -> Vec<i32> {
+    let max = (1i32 << bound_bits) - 1;
+    let specials = [0, 1, -1, max, -max];
+    (0..n).map(|i| {
+        if i < specials.len() {
+            specials[i]
+        } else {
+            rng.small(max)
+        }
+    }).collect()
+}
+
+/// A bit table with forced all-zero/all-one prefixes plus random filler.
+pub fn edge_bits(rng: &mut Rng, n: usize) -> Vec<u8> {
+    (0..n).map(|i| match i {
+        0 => 0,
+        1 => 1,
+        _ => rng.bit(),
+    }).collect()
+}
+
+/// A tiny model manifest exercising every `Op` variant: Matmul(conv),
+/// Sign, PoolBits, Pm1, Depthwise, Flatten, Matmul(fc), Relu.  Used by
+/// the engine/coordinator tests that need a real layer program without
+/// exported artifacts.
+pub fn every_op_model() -> crate::nn::Model {
+    let manifest = r#"{
+      "name": "everyop", "dataset": "synthetic",
+      "input": {"c": 1, "h": 6, "w": 6},
+      "s_in": 0, "ring_bits": 32,
+      "layers": [
+        {"op": "matmul", "conv": true, "m": 2, "kdim": 9, "n": 16,
+         "k": 3, "stride": 1, "pad_lo": 0, "pad_hi": 0, "cout": 2,
+         "w": {"off": 0, "len": 18}, "b": {"off": 18, "len": 2},
+         "s_in": 0, "s_out": 0},
+        {"op": "sign", "c": 2, "t": {"off": 20, "len": 2},
+         "flip": {"off": 22, "len": 2}},
+        {"op": "pool_bits", "c": 2, "k": 2, "stride": 2},
+        {"op": "pm1"},
+        {"op": "depthwise", "cout": 2, "k": 1, "stride": 1,
+         "pad_lo": 0, "pad_hi": 0, "w": {"off": 24, "len": 2},
+         "s_in": 0, "s_out": 0},
+        {"op": "flatten", "c": 2, "h": 2, "w": 2},
+        {"op": "matmul", "conv": false, "m": 3, "kdim": 8, "n": 1,
+         "w": {"off": 26, "len": 24}, "b": {"off": 50, "len": 3},
+         "s_in": 0, "s_out": 0},
+        {"op": "relu", "trunc": 2}
+      ]
+    }"#;
+    // small deterministic weights; values only need to stay inside the
+    // MSB bound
+    let pool: Vec<i32> = (0..53).map(|v| (v % 7) - 3).collect();
+    crate::nn::Model::from_json(manifest, pool).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::Dir;
+
+    #[test]
+    fn harness_borrows_and_orders_parties() {
+        // closures may borrow test-local state (no 'static bound)
+        let table: Vec<i32> = vec![10, 20, 30];
+        let results = run3_seeded(1, |ctx| {
+            ctx.comm.send_elems(Dir::Next, &[table[ctx.id()]]).unwrap();
+            let got = ctx.comm.recv_elems(Dir::Prev).unwrap();
+            ctx.comm.round();
+            (ctx.id(), got[0])
+        });
+        for (i, ((id, from_prev), stats)) in results.iter().enumerate() {
+            assert_eq!(*id, i, "party order");
+            assert_eq!(*from_prev, table[(i + 2) % 3]);
+            assert_eq!(stats.rounds, 1);
+        }
+    }
+
+    #[test]
+    fn edge_tables_hit_the_corners() {
+        let mut rng = Rng::new(0);
+        let v = edge_values(&mut rng, 100, 24);
+        let max = (1 << 24) - 1;
+        assert_eq!(&v[..5], &[0, 1, -1, max, -max]);
+        assert!(v.iter().all(|&x| x.abs() <= max));
+        let b = edge_bits(&mut rng, 10);
+        assert_eq!(b[0], 0);
+        assert_eq!(b[1], 1);
+        assert!(b.iter().all(|&x| x <= 1));
+    }
+
+    #[test]
+    fn every_op_model_loads() {
+        let m = every_op_model();
+        assert_eq!(m.ops.len(), 8);
+    }
+}

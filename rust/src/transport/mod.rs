@@ -15,6 +15,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::{Duration, Instant};
 
 use crate::ring::bits::BitTensor;
+use crate::ring::planes::BitPlanes;
 
 /// Upper bound on a single wire message; a claimed length beyond this is
 /// rejected before any allocation (attacker-controlled length hardening).
@@ -130,7 +131,13 @@ pub enum Dir {
 }
 
 impl Comm {
-    fn send_raw(&self, dir: Dir, payload: Vec<u8>) {
+    /// Ship one framed message.  A hung-up peer surfaces as
+    /// `WireError::Closed` (local links) or `WireError::Io` (TCP) so the
+    /// party thread retires cleanly instead of panicking mid-protocol --
+    /// the send path is hardened to match the receive path.  Public so
+    /// wire-format tests can craft adversarial frames.
+    pub fn send_raw(&self, dir: Dir, payload: Vec<u8>)
+                    -> Result<(), WireError> {
         let now = Instant::now();
         let busy = match dir {
             Dir::Next => &self.busy_next,
@@ -149,13 +156,15 @@ impl Comm {
         }
         match (dir, &self.tx_next, &self.tx_prev) {
             (Dir::Next, LinkTx::Local(tx), _) | (Dir::Prev, _, LinkTx::Local(tx)) => {
-                tx.send(Msg { payload, arrival }).expect("peer hung up");
+                tx.send(Msg { payload, arrival })
+                    .map_err(|_| WireError::Closed)
             }
             (Dir::Next, LinkTx::Tcp(s), _) | (Dir::Prev, _, LinkTx::Tcp(s)) => {
                 let mut s = s.borrow_mut();
                 let len = (payload.len() as u64).to_le_bytes();
-                s.write_all(&len).and_then(|_| s.write_all(&payload))
-                    .expect("tcp send failed");
+                s.write_all(&len)?;
+                s.write_all(&payload)?;
+                Ok(())
             }
         }
     }
@@ -190,12 +199,13 @@ impl Comm {
     }
 
     // ---- typed helpers --------------------------------------------------
-    pub fn send_elems(&self, dir: Dir, data: &[i32]) {
+    pub fn send_elems(&self, dir: Dir, data: &[i32])
+                      -> Result<(), WireError> {
         let mut bytes = Vec::with_capacity(4 * data.len());
         for v in data {
             bytes.extend_from_slice(&v.to_le_bytes());
         }
-        self.send_raw(dir, bytes);
+        self.send_raw(dir, bytes)
     }
 
     pub fn recv_elems(&self, dir: Dir) -> Result<Vec<i32>, WireError> {
@@ -215,11 +225,12 @@ impl Comm {
     /// protocols cheap on the wire.  The payload is the `BitTensor` word
     /// buffer shipped verbatim (truncated to ceil(n/8) bytes) -- no per-bit
     /// repack loop; the format is bit-identical to the seed's packer.
-    pub fn send_bits(&self, dir: Dir, bits: &BitTensor) {
+    pub fn send_bits(&self, dir: Dir, bits: &BitTensor)
+                     -> Result<(), WireError> {
         let mut bytes = Vec::with_capacity(8 + bits.len().div_ceil(8));
         bytes.extend_from_slice(&(bits.len() as u64).to_le_bytes());
         bytes.extend_from_slice(&bits.packed_bytes());
-        self.send_raw(dir, bytes);
+        self.send_raw(dir, bytes)
     }
 
     pub fn recv_bits(&self, dir: Dir) -> Result<BitTensor, WireError> {
@@ -239,6 +250,36 @@ impl Comm {
             WireError::Malformed(format!(
                 "bit payload of {} bytes does not match the claimed {n} bits",
                 bytes.len() - 8))
+        })
+    }
+
+    /// A `BitPlanes` travels as its reinterpreted `BitTensor`: the word
+    /// buffer verbatim, bit count = `padded_bits()` (a multiple of 64).
+    /// No repack on either end -- this is the `BitPlanes ⇄ BitTensor`
+    /// reinterpret applied at the wire.
+    pub fn send_planes(&self, dir: Dir, p: &BitPlanes)
+                       -> Result<(), WireError> {
+        let nbytes = p.words().len() * 8;
+        let mut bytes = Vec::with_capacity(8 + nbytes);
+        bytes.extend_from_slice(&(p.padded_bits() as u64).to_le_bytes());
+        for w in p.words() {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        self.send_raw(dir, bytes)
+    }
+
+    /// Receive a `planes x len` matrix: the frame is validated as a bit
+    /// message, then the claimed bit count must be exactly the padded
+    /// size of the expected geometry; per-plane padding a malicious peer
+    /// set is cleared by the reinterpret.
+    pub fn recv_planes(&self, dir: Dir, planes: usize, len: usize)
+                       -> Result<BitPlanes, WireError> {
+        let t = self.recv_bits(dir)?;
+        let got = t.len();
+        BitPlanes::from_tensor(t, planes, len).ok_or_else(|| {
+            WireError::Malformed(format!(
+                "plane payload of {got} bits does not match the expected \
+                 {planes}x{len} matrix"))
         })
     }
 
@@ -380,7 +421,7 @@ mod tests {
     fn ring_pass_delivers() {
         let stats = run3(NetConfig::zero(), |c| {
             let data = vec![c.id as i32; 8];
-            c.send_elems(Dir::Next, &data);
+            c.send_elems(Dir::Next, &data).unwrap();
             let got = c.recv_elems(Dir::Prev).unwrap();
             let prev = (c.id + 2) % 3;
             assert_eq!(got, vec![prev as i32; 8]);
@@ -397,7 +438,7 @@ mod tests {
     fn bits_pack_tightly() {
         let stats = run3(NetConfig::zero(), |c| {
             let bits = BitTensor::ones(100);
-            c.send_bits(Dir::Next, &bits);
+            c.send_bits(Dir::Next, &bits).unwrap();
             let got = c.recv_bits(Dir::Prev).unwrap();
             assert_eq!(got, bits);
         });
@@ -417,7 +458,7 @@ mod tests {
                 thread::spawn(move || {
                     let mut rng = crate::testutil::Rng::new(n as u64);
                     let bits = BitTensor::from_fn(n, |_| rng.bit());
-                    c.send_bits(Dir::Next, &bits);
+                    c.send_bits(Dir::Next, &bits).unwrap();
                     let got = c.recv_bits(Dir::Prev).unwrap();
                     assert_eq!(got.len(), n);
                     c.stats()
@@ -436,8 +477,8 @@ mod tests {
         let stats = run3(NetConfig::zero(), |c| {
             let mut rng = crate::testutil::Rng::new(7 + c.id as u64);
             let bits = BitTensor::from_fn(77, |_| rng.bit());
-            c.send_bits(Dir::Next, &bits);
-            c.send_bits(Dir::Prev, &bits);
+            c.send_bits(Dir::Next, &bits).unwrap();
+            c.send_bits(Dir::Prev, &bits).unwrap();
             let from_prev = c.recv_bits(Dir::Prev).unwrap();
             let from_next = c.recv_bits(Dir::Next).unwrap();
             let mut prev_rng =
@@ -460,14 +501,14 @@ mod tests {
         let handles: Vec<_> = comms.into_iter().map(|c| {
             thread::spawn(move || {
                 if c.id == 0 {
-                    c.send_raw(Dir::Next, vec![0u8; 5]);
+                    c.send_raw(Dir::Next, vec![0u8; 5]).unwrap();
                     // undersized bit message (no full header)
-                    c.send_raw(Dir::Next, vec![0u8; 3]);
+                    c.send_raw(Dir::Next, vec![0u8; 3]).unwrap();
                     // bit message whose payload contradicts its header
                     let mut lie = Vec::new();
                     lie.extend_from_slice(&100u64.to_le_bytes());
                     lie.push(0xFF); // 1 byte instead of 13
-                    c.send_raw(Dir::Next, lie);
+                    c.send_raw(Dir::Next, lie).unwrap();
                     None
                 } else if c.id == 1 {
                     let a = c.recv_elems(Dir::Prev);
@@ -490,7 +531,7 @@ mod tests {
                               bandwidth: f64::INFINITY };
         let t0 = Instant::now();
         run3(net, |c| {
-            c.send_elems(Dir::Next, &[1]);
+            c.send_elems(Dir::Next, &[1]).unwrap();
             let _ = c.recv_elems(Dir::Prev).unwrap();
         });
         assert!(t0.elapsed() >= Duration::from_millis(20));
@@ -503,7 +544,7 @@ mod tests {
         run3(net, |c| {
             // 400 KB at 1 MB/s ~ 400 ms
             let data = vec![0i32; 100_000];
-            c.send_elems(Dir::Next, &data);
+            c.send_elems(Dir::Next, &data).unwrap();
             let _ = c.recv_elems(Dir::Prev).unwrap();
         });
         assert!(t0.elapsed() >= Duration::from_millis(300));
@@ -512,12 +553,71 @@ mod tests {
     #[test]
     fn bidirectional_same_round() {
         run3(NetConfig::zero(), |c| {
-            c.send_elems(Dir::Next, &[c.id as i32]);
-            c.send_elems(Dir::Prev, &[c.id as i32]);
+            c.send_elems(Dir::Next, &[c.id as i32]).unwrap();
+            c.send_elems(Dir::Prev, &[c.id as i32]).unwrap();
             let a = c.recv_elems(Dir::Prev).unwrap();
             let b = c.recv_elems(Dir::Next).unwrap();
             assert_eq!(a[0] as usize, (c.id + 2) % 3);
             assert_eq!(b[0] as usize, (c.id + 1) % 3);
         });
+    }
+
+    #[test]
+    fn send_to_hung_up_peer_is_error_not_panic() {
+        // drop party 2's endpoints entirely; its neighbours' sends must
+        // surface WireError::Closed (the ROADMAP send-path hardening gap)
+        let [c0, c1, c2] = local_trio(NetConfig::zero());
+        drop(c2);
+        assert!(c0.send_elems(Dir::Next, &[1]).is_ok()); // P1 still alive
+        let err = c0.send_elems(Dir::Prev, &[1]).unwrap_err();
+        assert!(matches!(err, WireError::Closed), "{err:?}");
+        let err = c1.send_bits(Dir::Next, &BitTensor::ones(9)).unwrap_err();
+        assert!(matches!(err, WireError::Closed), "{err:?}");
+        let err = c1.send_raw(Dir::Next, vec![0u8; 4]).unwrap_err();
+        assert!(matches!(err, WireError::Closed), "{err:?}");
+    }
+
+    #[test]
+    fn planes_travel_as_reinterpreted_tensors() {
+        let stats = run3(NetConfig::zero(), |c| {
+            let mut rng = crate::testutil::Rng::new(13);
+            let rows: Vec<BitTensor> =
+                (0..4).map(|_| BitTensor::from_fn(70, |_| rng.bit()))
+                .collect();
+            let m = BitPlanes::from_tensors(&rows);
+            c.send_planes(Dir::Next, &m).unwrap();
+            let got = c.recv_planes(Dir::Prev, 4, 70).unwrap();
+            assert_eq!(got, m);
+            for (p, row) in rows.iter().enumerate() {
+                assert_eq!(&got.plane(p), row);
+            }
+        });
+        // 4 planes x 2 words x 8 bytes + 8-byte header, per party
+        for s in stats {
+            assert_eq!(s.bytes_sent, (4 * 2 * 8 + 8) as u64);
+        }
+    }
+
+    #[test]
+    fn recv_planes_rejects_geometry_lies() {
+        let comms = local_trio(NetConfig::zero());
+        let handles: Vec<_> = comms.into_iter().map(|c| {
+            thread::spawn(move || {
+                if c.id == 0 {
+                    // an honest 2x64 matrix received as 4x32 is fine
+                    // (same padded words) -- but a 3-plane claim is not
+                    let m = BitPlanes::zeros(2, 64);
+                    c.send_planes(Dir::Next, &m).unwrap();
+                    None
+                } else if c.id == 1 {
+                    Some(c.recv_planes(Dir::Prev, 3, 64).is_err())
+                } else {
+                    None
+                }
+            })
+        }).collect();
+        let results: Vec<_> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(results[1], Some(true));
     }
 }

@@ -1,0 +1,215 @@
+//! Adversarial wire-format tests: everything that crosses a party
+//! boundary is attacker-controlled, so truncated, oversized, and
+//! dirty-padding frames must surface as `WireError` -- never a panic --
+//! and padding bits must never reach word-parallel computation.
+
+use std::thread;
+
+use cbnn::ring::bits::BitTensor;
+use cbnn::ring::planes::BitPlanes;
+use cbnn::testutil::Rng;
+use cbnn::transport::{local_trio, Comm, Dir, NetConfig, WireError,
+                      MAX_MSG_BYTES};
+
+/// Run a crafting closure on P0 and a checking closure on P1 (P2 idles).
+fn craft_and_check<C, K, R>(craft: C, check: K) -> R
+where
+    C: FnOnce(&Comm) + Send,
+    K: FnOnce(&Comm) -> R + Send,
+    R: Send,
+{
+    let [c0, c1, _c2] = local_trio(NetConfig::zero());
+    thread::scope(|s| {
+        let sender = s.spawn(move || craft(&c0));
+        let checker = s.spawn(move || check(&c1));
+        sender.join().unwrap();
+        checker.join().unwrap()
+    })
+}
+
+// ---- codec-level (no transport) -----------------------------------------
+
+#[test]
+fn packed_bytes_codec_rejects_bad_byte_counts() {
+    // truncated and oversized payloads for a claimed bit count
+    for n in [1usize, 7, 8, 9, 64, 65, 100] {
+        let good = n.div_ceil(8);
+        assert!(BitTensor::from_packed_bytes(n, &vec![0u8; good]).is_some());
+        for bad in [0usize, good - 1, good + 1, good + 8] {
+            if bad == good {
+                continue;
+            }
+            assert!(BitTensor::from_packed_bytes(n, &vec![0u8; bad])
+                    .is_none(), "n={n} bytes={bad} must be rejected");
+        }
+    }
+}
+
+#[test]
+fn packed_bytes_codec_masks_dirty_padding() {
+    // attacker sets every padding bit; they must be cleared on decode so
+    // popcount/eq/wire stay word-wise safe
+    let t = BitTensor::from_packed_bytes(3, &[0xFF]).unwrap();
+    assert_eq!(t.popcount(), 3);
+    assert_eq!(t, BitTensor::ones(3));
+    let t = BitTensor::from_packed_bytes(9, &[0xFF, 0xFF]).unwrap();
+    assert_eq!(t.popcount(), 9);
+    assert_eq!(t.packed_bytes(), vec![0xFF, 0x01], "re-encode leaked padding");
+}
+
+#[test]
+fn planes_codec_is_bit_identical_to_tensor_codec() {
+    // BitPlanes ships as a reinterpreted BitTensor: the bytes on the wire
+    // must match packing the padded tensor directly, bit for bit
+    let mut rng = Rng::new(7);
+    for (planes, n) in [(1usize, 1usize), (4, 63), (32, 65), (8, 128)] {
+        let rows: Vec<BitTensor> =
+            (0..planes).map(|_| BitTensor::from_fn(n, |_| rng.bit()))
+            .collect();
+        let m = BitPlanes::from_tensors(&rows);
+        let t = m.clone().into_tensor();
+        assert_eq!(t.len(), m.padded_bits());
+        // same words, same packed bytes -- no repack happened
+        assert_eq!(t.words(), m.words());
+        let bytes = t.packed_bytes();
+        let back = BitTensor::from_packed_bytes(t.len(), &bytes).unwrap();
+        let back = BitPlanes::from_tensor(back, planes, n).unwrap();
+        assert_eq!(back, m);
+        for (p, row) in rows.iter().enumerate() {
+            assert_eq!(&back.plane(p), row, "plane {p}");
+        }
+    }
+}
+
+// ---- transport-level ----------------------------------------------------
+
+#[test]
+fn truncated_bit_header_is_malformed() {
+    let err = craft_and_check(
+        |c| {
+            // 3 bytes cannot even hold the 8-byte bit-count header
+            c.send_raw(Dir::Next, vec![0u8; 3]).unwrap();
+        },
+        |c| c.recv_bits(Dir::Prev).unwrap_err(),
+    );
+    assert!(matches!(err, WireError::Malformed(_)), "{err:?}");
+}
+
+#[test]
+fn payload_contradicting_bit_header_is_malformed() {
+    for (claimed, body) in [(100u64, 1usize), (8, 0), (1, 13)] {
+        let err = craft_and_check(
+            move |c| {
+                let mut lie = Vec::new();
+                lie.extend_from_slice(&claimed.to_le_bytes());
+                lie.extend(std::iter::repeat(0xFFu8).take(body));
+                c.send_raw(Dir::Next, lie).unwrap();
+            },
+            |c| c.recv_bits(Dir::Prev).unwrap_err(),
+        );
+        assert!(matches!(err, WireError::Malformed(_)),
+                "claimed={claimed} body={body}: {err:?}");
+    }
+}
+
+#[test]
+fn oversized_bit_count_is_rejected_before_allocation() {
+    // headers claiming more than the 1 GiB message cap's worth of bits
+    // (incl. u64::MAX) must be rejected without allocating the claim
+    for claimed in [MAX_MSG_BYTES * 8 + 1, u64::MAX] {
+        let err = craft_and_check(
+            move |c| {
+                c.send_raw(Dir::Next, claimed.to_le_bytes().to_vec())
+                    .unwrap();
+            },
+            |c| c.recv_bits(Dir::Prev).unwrap_err(),
+        );
+        assert!(matches!(err, WireError::Malformed(_)),
+                "claimed={claimed}: {err:?}");
+    }
+}
+
+#[test]
+fn ragged_ring_payload_is_malformed() {
+    for bytes in [1usize, 5, 7, 9] {
+        let err = craft_and_check(
+            move |c| c.send_raw(Dir::Next, vec![0u8; bytes]).unwrap(),
+            |c| c.recv_elems(Dir::Prev).unwrap_err(),
+        );
+        assert!(matches!(err, WireError::Malformed(_)),
+                "{bytes} bytes: {err:?}");
+    }
+}
+
+#[test]
+fn wire_padding_never_reaches_computation() {
+    // a peer that sets the padding bits of a bit message: decode must
+    // mask them so word-parallel XOR/popcount see clean tails
+    let got = craft_and_check(
+        |c| {
+            let mut msg = Vec::new();
+            msg.extend_from_slice(&5u64.to_le_bytes()); // 5 bits, 1 byte
+            msg.push(0xFF); // 3 dirty padding bits
+            c.send_raw(Dir::Next, msg).unwrap();
+        },
+        |c| c.recv_bits(Dir::Prev).unwrap(),
+    );
+    assert_eq!(got.len(), 5);
+    assert_eq!(got.popcount(), 5);
+    assert_eq!(got, BitTensor::ones(5));
+}
+
+#[test]
+fn plane_padding_never_reaches_computation() {
+    // dirty per-plane padding in a planes frame (2 planes of 5 bits,
+    // padded to one word each) is cleared by the reinterpret
+    let got = craft_and_check(
+        |c| {
+            let mut msg = Vec::new();
+            msg.extend_from_slice(&128u64.to_le_bytes()); // 2*1*64 bits
+            msg.extend(std::iter::repeat(0xFFu8).take(16));
+            c.send_raw(Dir::Next, msg).unwrap();
+        },
+        |c| c.recv_planes(Dir::Prev, 2, 5).unwrap(),
+    );
+    assert_eq!(got.popcount(), 10, "plane padding leaked");
+    for p in 0..2 {
+        assert_eq!(got.plane(p), BitTensor::ones(5));
+    }
+}
+
+#[test]
+fn planes_frame_with_wrong_geometry_is_malformed() {
+    // an honest 2x64 frame received as 3x64 / 2x65 / 1x64 must be
+    // rejected as malformed, not mis-sliced
+    for (planes, len) in [(3usize, 64usize), (2, 65), (1, 64)] {
+        let err = craft_and_check(
+            move |c| {
+                let m = BitPlanes::zeros(2, 64);
+                c.send_planes(Dir::Next, &m).unwrap();
+            },
+            move |c| c.recv_planes(Dir::Prev, planes, len).unwrap_err(),
+        );
+        assert!(matches!(err, WireError::Malformed(_)),
+                "{planes}x{len}: {err:?}");
+    }
+}
+
+#[test]
+fn hung_up_peer_errors_on_both_paths() {
+    let [c0, c1, c2] = local_trio(NetConfig::zero());
+    drop(c1);
+    drop(c2);
+    // send path: both neighbours are gone
+    assert!(matches!(c0.send_elems(Dir::Next, &[1]).unwrap_err(),
+                     WireError::Closed));
+    assert!(matches!(c0.send_bits(Dir::Prev, &BitTensor::ones(4))
+                     .unwrap_err(), WireError::Closed));
+    assert!(matches!(c0.send_planes(Dir::Next, &BitPlanes::zeros(1, 4))
+                     .unwrap_err(), WireError::Closed));
+    // receive path: nothing will ever arrive
+    assert!(matches!(c0.recv_elems(Dir::Next).unwrap_err(),
+                     WireError::Closed));
+    assert!(matches!(c0.recv_bits(Dir::Prev).unwrap_err(),
+                     WireError::Closed));
+}
