@@ -7,9 +7,13 @@
 //!      prefix pass over 32 planes, once with per-level `extend`/`slice`
 //!      churn (the PR 1 layout) and once over `BitPlanes` row views
 //!      (zero operand copies) -- the acceptance target is >= 2x.
+//!   4. (offline split) online-only MSB latency with warm preprocessed
+//!      material vs generation inline on the request path -- the number
+//!      the `offline::TupleBank` producers buy the serving stack.
 //!
-//! Results are printed as a table and recorded to `BENCH_bitops.json` at
-//! the workspace root so the bench trajectory is diffable.
+//! Results are printed as a table and recorded to `BENCH_bitops.json`
+//! (tiers 1-3) and `BENCH_offline.json` (tier 4) at the workspace root
+//! so the bench trajectory is diffable.
 //!
 //!   cargo bench --bench bitops
 
@@ -18,9 +22,13 @@ use std::hint::black_box;
 use std::path::Path;
 use std::time::Instant;
 
+use cbnn::protocols::preproc::{mint, msb_online, MsbPool};
 use cbnn::ring::bits::BitTensor;
 use cbnn::ring::kernel;
 use cbnn::ring::planes::BitPlanes;
+use cbnn::ring::Tensor;
+use cbnn::rss::deal;
+use cbnn::testutil::threeparty::run3_seeded;
 use cbnn::testutil::Rng;
 
 /// Median-of-reps wall time for `f`, in seconds.
@@ -261,16 +269,66 @@ fn plane_tier(rows: &mut Vec<Row>) {
     }
 }
 
-fn write_json(rows: &[Row]) {
+/// Tier 4: the offline/online split.  Per party, over three in-memory
+/// parties: online MSB with warm preprocessed material (`msb_online`
+/// drawing from a pre-minted reservoir -- what a warm `TupleBank` serves)
+/// vs minting that material synchronously on the request path.  The gap
+/// is the request-latency the background producers remove.
+fn offline_tier(rows: &mut Vec<Row>) {
+    println!("== tier 4: online MSB, warm bank vs inline generation ==\n");
+    println!("{:<10} {:<10} {:>12} {:>12} {:>9}",
+             "op", "elems", "inline(ms)", "warm(ms)", "speedup");
+    println!("{}", "-".repeat(58));
+
+    for &n in &[1_000usize, 10_000, 100_000] {
+        let reps = if n >= 100_000 { 5 } else { 11 };
+        let results = run3_seeded(n as u64, |ctx| {
+            let mut rng = Rng::new(n as u64);
+            let vals: Vec<i32> =
+                (0..n).map(|_| rng.small(1 << 20)).collect();
+            let x = Tensor::from_vec(&[n], vals);
+            let shares = deal(&x, &mut rng);
+            let me = &shares[ctx.id()];
+            // warm arm: generation happened off the request path
+            let pool = MsbPool::new();
+            pool.generate(ctx, n * reps).unwrap();
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                black_box(
+                    msb_online(ctx, me, pool.take(n).unwrap()).unwrap());
+            }
+            let warm = t0.elapsed();
+            // inline arm: every request pays the mint
+            let t1 = Instant::now();
+            for _ in 0..reps {
+                let tup = mint(ctx, n).unwrap();
+                black_box(msb_online(ctx, me, tup).unwrap());
+            }
+            let inline = t1.elapsed();
+            (warm.as_secs_f64() / reps as f64,
+             inline.as_secs_f64() / reps as f64)
+        });
+        let (warm, inline) = results[0].0;
+        println!("{:<10} {:<10} {:>12.3} {:>12.3} {:>8.1}x",
+                 "msb", n, inline * 1e3, warm * 1e3, inline / warm);
+        rows.push(Row { section: "warm_bank_vs_inline", op: "msb".into(),
+                        n, baseline_ms: inline * 1e3,
+                        fast_ms: warm * 1e3 });
+        println!();
+    }
+}
+
+fn write_json(file: &str, bench: &str, acceptance: &[(&str, &str)],
+              rows: &[Row]) {
     let mut s = String::from("{\n");
-    let _ = writeln!(s, "  \"bench\": \"bitops\",");
+    let _ = writeln!(s, "  \"bench\": \"{bench}\",");
     let _ = writeln!(s,
         "  \"generated_by\": \"cargo bench --bench bitops\",");
     let _ = writeln!(s, "  \"acceptance\": {{");
-    let _ = writeln!(s,
-        "    \"byte_vs_packed\": \"xor/and speedup >= 8x\",");
-    let _ = writeln!(s,
-        "    \"ks_concat_vs_strided\": \"ks-5lvl speedup >= 2x\"");
+    for (i, (k, v)) in acceptance.iter().enumerate() {
+        let comma = if i + 1 == acceptance.len() { "" } else { "," };
+        let _ = writeln!(s, "    \"{k}\": \"{v}\"{comma}");
+    }
     let _ = writeln!(s, "  }},");
     let _ = writeln!(s, "  \"results\": [");
     for (i, r) in rows.iter().enumerate() {
@@ -287,8 +345,8 @@ fn write_json(rows: &[Row]) {
     // workspace root next to DESIGN.md
     let path = Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()
-        .map(|p| p.join("BENCH_bitops.json"))
-        .unwrap_or_else(|| "BENCH_bitops.json".into());
+        .map(|p| p.join(file))
+        .unwrap_or_else(|| file.into());
     match std::fs::write(&path, &s) {
         Ok(()) => println!("recorded {}", path.display()),
         Err(e) => eprintln!("could not record {}: {e}", path.display()),
@@ -300,7 +358,18 @@ fn main() {
     representation_tier(&mut rows);
     kernel_tier(&mut rows);
     plane_tier(&mut rows);
+    let mut offline_rows = Vec::new();
+    offline_tier(&mut offline_rows);
     println!("(acceptance: packed XOR/AND >= 8x byte-per-bit; strided \
-              Kogge-Stone levels >= 2x concat)");
-    write_json(&rows);
+              Kogge-Stone levels >= 2x concat; warm-bank online MSB \
+              >= 2x inline generation)");
+    write_json("BENCH_bitops.json", "bitops",
+               &[("byte_vs_packed", "xor/and speedup >= 8x"),
+                 ("ks_concat_vs_strided", "ks-5lvl speedup >= 2x")],
+               &rows);
+    write_json("BENCH_offline.json", "offline",
+               &[("warm_bank_vs_inline",
+                  "online-only msb latency >= 2x faster than inline \
+                   generation")],
+               &offline_rows);
 }

@@ -70,10 +70,12 @@ fn main() -> anyhow::Result<()> {
 
     let batched = run_stream(&model, &data, &cfg, requests,
                              BatchPolicy { max_batch: 8,
-                                           max_wait: Duration::from_millis(10) })?;
+                                           max_wait: Duration::from_millis(10),
+                                           ..Default::default() })?;
     let single = run_stream(&model, &data, &cfg, requests,
                             BatchPolicy { max_batch: 1,
-                                          max_wait: Duration::ZERO })?;
+                                          max_wait: Duration::ZERO,
+                                          ..Default::default() })?;
 
     println!("\n{:<18} {:>12} {:>10} {:>10} {:>10}",
              "policy", "throughput", "p50", "p99", "accuracy");

@@ -89,6 +89,45 @@ pub fn parse_backend(name: &str) -> Result<crate::runtime::BackendKind, String> 
     }
 }
 
+/// Resolve the serving-bank watermark flags (`--bank-low`, `--bank-high`,
+/// `--bank-chunk`, `--bank-capacity`; tuple-element counts).  `None` when
+/// no flag is present -- the Service then auto-scales the bank to the
+/// model's per-max-batch demand.  Omitted flags default *relative to
+/// whichever flags were given* (any single flag anchors a consistent
+/// config: low = high/2, chunk = high - low, capacity = high + chunk).
+pub fn parse_bank(args: &Args)
+                  -> Result<Option<crate::offline::BankConfig>, String> {
+    let get = |k: &str| -> Result<Option<usize>, String> {
+        match args.get(k) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| {
+                format!("--{k} expects an integer, got '{v}'")
+            }),
+        }
+    };
+    let low_f = get("bank-low")?;
+    let high_f = get("bank-high")?;
+    let chunk_f = get("bank-chunk")?;
+    let cap_f = get("bank-capacity")?;
+    if low_f.is_none() && high_f.is_none() && chunk_f.is_none()
+        && cap_f.is_none() {
+        return Ok(None);
+    }
+    // anchor the high watermark on whichever flag was given, then derive
+    // the rest relative to it
+    let high = high_f
+        .or(low_f.map(|l| 2 * l.max(1)))
+        .or(cap_f.map(|c| c / 2))
+        .or(chunk_f.map(|c| 4 * c))
+        .unwrap_or(0);
+    let low = low_f.unwrap_or(high / 2);
+    let chunk = chunk_f.unwrap_or_else(|| (high - low.min(high)).max(1));
+    let capacity = cap_f.unwrap_or(high + chunk);
+    let cfg = crate::offline::BankConfig { low, high, chunk, capacity };
+    cfg.validate().map_err(|e| format!("bank flags: {e}"))?;
+    Ok(Some(cfg))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -126,5 +165,38 @@ mod tests {
         assert!(parse_net("dsl").is_err());
         assert!(parse_backend("pjrt-pallas").is_ok());
         assert!(parse_backend("gpu").is_err());
+    }
+
+    #[test]
+    fn bank_flags_resolve_with_relative_defaults() {
+        // no flags: auto-scaling (None)
+        assert_eq!(parse_bank(&parse(&["serve"])).unwrap().map(|_| ()),
+                   None);
+        // one flag: the rest default relative to it and validate
+        let cfg = parse_bank(&parse(&["serve", "--bank-low", "100"]))
+            .unwrap().unwrap();
+        assert_eq!(cfg.low, 100);
+        assert_eq!(cfg.high, 200);
+        assert_eq!(cfg.chunk, 100);
+        assert_eq!(cfg.capacity, 300);
+        assert!(cfg.validate().is_ok());
+        // every single-flag anchor yields a valid config (the defaults
+        // are relative, not absolute)
+        for flags in [["serve", "--bank-high", "500"],
+                      ["serve", "--bank-capacity", "2000"],
+                      ["serve", "--bank-chunk", "50"]] {
+            let cfg = parse_bank(&parse(&flags)).unwrap().unwrap();
+            assert!(cfg.validate().is_ok(), "{flags:?} -> {cfg:?}");
+        }
+        let cfg = parse_bank(&parse(&["serve", "--bank-high", "500"]))
+            .unwrap().unwrap();
+        assert_eq!((cfg.low, cfg.high), (250, 500));
+        // explicit contradiction is rejected
+        let bad = parse_bank(&parse(&["serve", "--bank-low", "10",
+                                      "--bank-high", "5"]));
+        assert!(bad.is_err());
+        // non-integers are rejected
+        assert!(parse_bank(&parse(&["serve", "--bank-chunk", "soup"]))
+                .is_err());
     }
 }

@@ -8,6 +8,19 @@
 //! size/deadline -- batching in 3PC amortizes *rounds*, which is the
 //! dominant WAN cost (the protocols are batched across samples inside the
 //! engine, so a batch of 8 pays the same round count as a batch of 1).
+//!
+//! **Offline/online split.**  Each party thread spawns a background tuple
+//! producer that mints MSB correlated material over the tagged
+//! `Chan::Offline` transport channel into a watermark-managed
+//! `offline::TupleBank`.  `Service::start` pre-fills every bank to the
+//! high watermark before serving; the refill pump (`top_up_to`, driven by
+//! the batcher's `BatchPolicy::prefetch` knob) broadcasts chunk-sized
+//! refill jobs whenever deterministic headroom drops below the low
+//! watermark.  Refill and infer jobs share one broadcast lock, so all
+//! three parties observe the identical command order and agree on every
+//! pooled-vs-fallback decision -- with a warm bank, a request performs
+//! *zero* synchronous mints on its critical path (asserted by
+//! `PreprocMetrics::underflow_calls == 0`).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -17,38 +30,65 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::engine::session::SessionConfig;
-use crate::engine::{infer_batch_pooled, share_model, SharedModel};
-use crate::metrics::{Histogram, Throughput};
+use crate::engine::{infer_batch_pooled, msb_demand_for, share_model,
+                    SharedModel};
+use crate::metrics::{Histogram, PreprocMetrics, Throughput};
 use crate::nn::Model;
+use crate::offline::{offline_seeds, run_producer, BankConfig, TupleBank,
+                     TupleSource};
 use crate::prf::PartySeeds;
 use crate::protocols::Ctx;
 use crate::ring::Tensor;
 use crate::runtime::make_backend;
-use crate::transport::{local_trio, Stats};
+use crate::transport::{local_trio, Chan, Stats};
 
 enum Job {
     Infer { inputs: Vec<Tensor>, batch: usize },
+    /// Mint `n` more tuple elements in the background (forwarded to the
+    /// party's producer thread; the bank is credited in broadcast order).
+    Refill(usize),
     Shutdown,
+}
+
+/// Broadcast state: the three job senders plus the pump's dispatch
+/// accounting.  One lock for both, so every party sees refill and infer
+/// jobs in the same order (the determinism the bank's credit accounting
+/// relies on).
+struct Sched {
+    txs: Vec<Sender<Job>>,
+    /// Elements promised by dispatched refill jobs.
+    dispatched: usize,
 }
 
 /// A persistent three-party inference service for one model.
 pub struct Service {
-    job_txs: Vec<Sender<Job>>,
+    sched: Mutex<Sched>,
     logits_rx: Receiver<Result<Vec<Vec<i32>>>>,
     handles: Vec<JoinHandle<Stats>>,
+    banks: Vec<Arc<TupleBank>>,
+    bank_cfg: BankConfig,
+    preprocess: bool,
+    model: Arc<Model>,
     pub model_name: String,
     pub setup_time: Duration,
 }
 
 impl Service {
-    /// Spin up the party threads, share the model, warm the PJRT caches.
+    /// Spin up the party threads, share the model, warm the PJRT caches,
+    /// and pre-fill the tuple banks to the high watermark.
     pub fn start(model: Arc<Model>, cfg: SessionConfig) -> Result<Service> {
+        let bank_cfg = cfg.bank.unwrap_or_else(|| {
+            BankConfig::auto(msb_demand_for(&model, cfg.max_batch.max(1)))
+        });
+        bank_cfg.validate().map_err(|e| anyhow!("bank config: {e}"))?;
         let comms = local_trio(cfg.net);
+        let banks: Vec<Arc<TupleBank>> =
+            (0..3).map(|_| Arc::new(TupleBank::new(bank_cfg))).collect();
         let (logits_tx, logits_rx) = channel();
         let mut job_txs = Vec::new();
         let mut handles = Vec::new();
         let (ready_tx, ready_rx) = channel();
-        for comm in comms {
+        for (comm, bank) in comms.into_iter().zip(banks.iter().cloned()) {
             let model = Arc::clone(&model);
             let cfg = cfg.clone();
             let logits_tx = logits_tx.clone();
@@ -78,26 +118,49 @@ impl Service {
                             return comm.stats();
                         }
                     };
-                // offline phase: pre-mint MSB material for several max
-                // batches; topped up after each served batch, off the
-                // request's critical path.
-                let pool = crate::protocols::preproc::MsbPool::new();
-                let per_batch = crate::engine::msb_demand(&shared, 8);
-                if cfg.opts.preprocess {
-                    if let Err(e) = pool.generate(&ctx, per_batch * 4) {
-                        let _ = ready_tx.send(Err(anyhow!("preproc: {e}")));
-                        return comm.stats();
-                    }
-                }
+                // background tuple producer: its own thread, its own PRF
+                // domain, the offline logical channel of the same links.
+                // Refill jobs are forwarded to it so minting overlaps
+                // with online inference instead of riding the request.
+                let (prod_tx, prod_rx) = channel::<usize>();
+                let producer = if cfg.opts.preprocess {
+                    let off_comm = comm.channel(Chan::Offline);
+                    let off_seeds = offline_seeds(cfg.session_seed, comm.id);
+                    let proto = cfg.proto;
+                    let pbank = Arc::clone(&bank);
+                    Some(thread::spawn(move || {
+                        let octx = Ctx::with_cfg(&off_comm, &off_seeds,
+                                                 proto);
+                        if let Err(e) = run_producer(&octx, pbank.as_ref(),
+                                                     prod_rx) {
+                            eprintln!("[service {}] offline producer \
+                                       failed: {e}", off_comm.id);
+                            pbank.close();
+                        }
+                    }))
+                } else {
+                    None
+                };
                 let _ = ready_tx.send(Ok(comm.id));
                 while let Ok(job) = jrx.recv() {
                     match job {
                         Job::Shutdown => break,
+                        Job::Refill(n) => {
+                            // credit in broadcast order (deterministic
+                            // across parties), then hand the mint to the
+                            // background producer
+                            bank.credit(n);
+                            let _ = prod_tx.send(n);
+                        }
                         Job::Infer { inputs, batch } => {
-                            let p = cfg.opts.preprocess.then_some(&pool);
+                            let src = if cfg.opts.preprocess {
+                                TupleSource::Bank(bank.as_ref())
+                            } else {
+                                TupleSource::Inline
+                            };
                             let r = infer_batch_pooled(
                                 &ctx, &shared, backend.as_ref(), cfg.opts,
-                                &inputs, batch, p);
+                                &inputs, batch, &src);
                             let failed = r.is_err();
                             if comm.id == 0 {
                                 let _ = logits_tx.send(
@@ -115,18 +178,17 @@ impl Service {
                                 // instead of hanging the Service
                                 break;
                             }
-                            // top the reservoir back up between requests
-                            if cfg.opts.preprocess
-                                && pool.available() < per_batch {
-                                if let Err(e) =
-                                    pool.generate(&ctx, per_batch * 2) {
-                                    eprintln!("[service {}] preproc \
-                                               top-up failed: {e}", comm.id);
-                                    break;
-                                }
-                            }
                         }
                     }
+                }
+                // graceful drain: wake any backpressured delivery, let
+                // the producer finish its queued chunks (identical on
+                // all parties, so the interactive mints complete), and
+                // join it before this party's links drop
+                bank.close();
+                drop(prod_tx);
+                if let Some(h) = producer {
+                    let _ = h.join();
                 }
                 comm.stats()
             }));
@@ -135,32 +197,106 @@ impl Service {
         for _ in 0..3 {
             ready_rx.recv().map_err(|_| anyhow!("party died in setup"))??;
         }
-        Ok(Service {
-            job_txs,
+        let svc = Service {
+            sched: Mutex::new(Sched { txs: job_txs, dispatched: 0 }),
             logits_rx,
             handles,
+            banks,
+            bank_cfg,
+            preprocess: cfg.opts.preprocess,
             model_name: model.name.clone(),
+            model,
             setup_time: t0.elapsed(),
-        })
+        };
+        // offline prefill: reach the high watermark before serving, so
+        // the first request already runs the 2-round online MSB
+        if svc.preprocess {
+            svc.top_up_to(svc.bank_cfg.high);
+            for b in &svc.banks {
+                b.wait_level(svc.bank_cfg.high)
+                    .map_err(|e| anyhow!("offline prefill: {e}"))?;
+            }
+        }
+        Ok(svc)
+    }
+
+    /// MSB tuple demand of one `batch`-sized request (public manifest
+    /// arithmetic; the pump's refill unit).
+    pub fn demand_for(&self, batch: usize) -> usize {
+        msb_demand_for(&self.model, batch)
+    }
+
+    /// Largest single MSB draw a `batch`-sized request makes.  Draws
+    /// above `capacity - chunk` always fall back (deadlock freedom), so
+    /// the batcher checks this against the bank at startup.
+    pub fn max_draw_for(&self, batch: usize) -> usize {
+        crate::engine::msb_sizes_of(&self.model.ops, self.model.input,
+                                    batch)
+            .into_iter().max().unwrap_or(0)
+    }
+
+    /// Party `i`'s tuple bank (observability: levels and
+    /// `PreprocMetrics`; all parties' banks evolve identically).
+    pub fn bank_handle(&self, party: usize) -> Arc<TupleBank> {
+        Arc::clone(&self.banks[party])
+    }
+
+    /// The watermark pump: when deterministic headroom (dispatched minus
+    /// reserved elements) is below the low watermark or below
+    /// `target_elems`, broadcast chunk-sized refill jobs until it reaches
+    /// `max(target_elems, high)` (clamped to capacity).  Deterministic:
+    /// refills share the infer broadcast lock, so every party folds them
+    /// into its credit accounting at the same point of the job order.
+    pub fn top_up_to(&self, target_elems: usize) {
+        if !self.preprocess {
+            return;
+        }
+        let goal = target_elems
+            .max(self.bank_cfg.high)
+            .min(self.bank_cfg.capacity);
+        let mut sched = self.sched.lock().unwrap();
+        let reserved = self.banks[0].reserved_elems();
+        let mut avail = sched.dispatched.saturating_sub(reserved);
+        if avail >= self.bank_cfg.low && avail >= target_elems {
+            return;
+        }
+        while avail < goal {
+            for tx in &sched.txs {
+                let _ = tx.send(Job::Refill(self.bank_cfg.chunk));
+            }
+            sched.dispatched += self.bank_cfg.chunk;
+            avail += self.bank_cfg.chunk;
+        }
     }
 
     /// Run one batch through the session (blocking).
     pub fn infer(&self, inputs: Vec<Tensor>) -> Result<Vec<Vec<i32>>> {
         let batch = inputs.len();
-        for (id, tx) in self.job_txs.iter().enumerate() {
-            let job = Job::Infer {
-                inputs: if id == 0 { inputs.clone() } else { vec![] },
-                batch,
-            };
-            tx.send(job).map_err(|_| anyhow!("party {id} gone"))?;
+        // keep the bank at its own watermarks even without a Coordinator
+        // in front: the refill jobs land ahead of this infer in every
+        // party's queue (same broadcast lock), so the producers overlap
+        // this batch instead of draining the prefill dry
+        self.top_up_to(0);
+        {
+            let sched = self.sched.lock().unwrap();
+            for (id, tx) in sched.txs.iter().enumerate() {
+                let job = Job::Infer {
+                    inputs: if id == 0 { inputs.clone() } else { vec![] },
+                    batch,
+                };
+                tx.send(job).map_err(|_| anyhow!("party {id} gone"))?;
+            }
         }
         self.logits_rx.recv().map_err(|_| anyhow!("no response"))?
     }
 
     /// Stop the party threads and collect their comm stats.
     pub fn shutdown(self) -> [Stats; 3] {
-        for tx in &self.job_txs {
-            let _ = tx.send(Job::Shutdown);
+        {
+            let sched = self.sched.lock().unwrap();
+            for tx in &sched.txs {
+                let _ = tx.send(Job::Shutdown);
+            }
         }
         let stats: Vec<Stats> = self.handles.into_iter()
             .map(|h| h.join().unwrap_or_default()).collect();
@@ -188,11 +324,16 @@ pub struct Response {
 pub struct BatchPolicy {
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Tuple prefetch depth: keep `prefetch * demand(max_batch)` elements
+    /// of deterministic bank headroom ahead of the online stream (0
+    /// disables the batcher's pump; the service prefill still applies).
+    pub prefetch: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) }
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5),
+                      prefetch: 2 }
     }
 }
 
@@ -200,11 +341,26 @@ impl Default for BatchPolicy {
 pub struct Coordinator {
     req_tx: Sender<Pending>,
     batcher: Option<JoinHandle<(Histogram, Throughput)>>,
+    bank0: Arc<TupleBank>,
 }
 
 impl Coordinator {
     pub fn start(svc: Service, policy: BatchPolicy) -> Coordinator {
         let (req_tx, req_rx) = channel::<Pending>();
+        let bank0 = svc.bank_handle(0);
+        let prefetch_unit = svc.demand_for(policy.max_batch.max(1));
+        if svc.preprocess {
+            let bc = bank0.config();
+            let max_draw = svc.max_draw_for(policy.max_batch.max(1));
+            if max_draw + bc.chunk > bc.capacity {
+                eprintln!(
+                    "[coordinator] bank capacity {} cannot admit a full \
+                     batch's largest MSB draw ({max_draw} elements at \
+                     batch {}); such draws will mint inline -- raise \
+                     --bank-capacity or match the service max_batch to \
+                     the policy", bc.capacity, policy.max_batch);
+            }
+        }
         let batcher = thread::spawn(move || {
             let mut hist = Histogram::default();
             let mut served = 0u64;
@@ -228,6 +384,12 @@ impl Coordinator {
                         Err(_) => break,
                     }
                 }
+                // pump the producers *before* the batch: the refill jobs
+                // land ahead of the infer job in every party's queue, so
+                // minting overlaps this batch's online phase
+                if policy.prefetch > 0 {
+                    svc.top_up_to(policy.prefetch * prefetch_unit);
+                }
                 let images: Vec<Tensor> =
                     batch.iter().map(|p| p.image.clone()).collect();
                 match svc.infer(images) {
@@ -250,7 +412,7 @@ impl Coordinator {
             let _ = svc.shutdown();
             (hist, Throughput { requests: served, wall: t0.elapsed() })
         });
-        Coordinator { req_tx, batcher: Some(batcher) }
+        Coordinator { req_tx, batcher: Some(batcher), bank0 }
     }
 
     /// Submit a request; returns the channel the response arrives on.
@@ -262,6 +424,13 @@ impl Coordinator {
             respond: tx,
         });
         rx
+    }
+
+    /// Party 0's offline-preprocessing counters (identical trajectories
+    /// on all parties): the request path is clean iff
+    /// `underflow_calls == 0`.
+    pub fn preproc_metrics(&self) -> PreprocMetrics {
+        self.bank0.metrics()
     }
 
     /// Drop the ingress and wait for the batcher to drain; returns the
@@ -287,6 +456,50 @@ mod tests {
         let p = BatchPolicy::default();
         assert!(p.max_batch >= 1);
         assert!(p.max_wait > Duration::ZERO);
+        assert!(p.prefetch >= 1);
+    }
+
+    #[test]
+    fn service_prefills_bank_to_high_watermark() {
+        let model = Arc::new(every_op_model());
+        let cfg = SessionConfig::new("artifacts/hlo");
+        let svc = Service::start(model, cfg).expect("setup");
+        let high = svc.bank_cfg.high;
+        for p in 0..3 {
+            let b = svc.bank_handle(p);
+            assert!(b.level() >= high,
+                    "party {p} bank at {} < high watermark {high}",
+                    b.level());
+            assert_eq!(b.metrics().underflow_calls, 0);
+        }
+        let _ = svc.shutdown();
+    }
+
+    #[test]
+    fn warm_bank_serves_with_zero_request_path_generation() {
+        // the PR acceptance gate: Coordinator::submit -> response with a
+        // warm TupleBank performs zero synchronous mints on the request
+        // path, asserted via the underflow metrics counter
+        let model = Arc::new(every_op_model());
+        let cfg = SessionConfig::new("artifacts/hlo");
+        let svc = Service::start(model, cfg).expect("setup");
+        let coord = Coordinator::start(svc, BatchPolicy::default());
+        let mut rng = Rng::new(11);
+        let rxs: Vec<_> = (0..6).map(|_| {
+            coord.submit(rng.tensor_small(&[1, 36], 15))
+        }).collect();
+        for rx in rxs {
+            let resp = rx.recv().expect("response");
+            assert_eq!(resp.logits.len(), 3);
+        }
+        let m = coord.preproc_metrics();
+        let (hist, thr) = coord.finish();
+        assert_eq!(thr.requests, 6);
+        assert_eq!(hist.count(), 6);
+        assert_eq!(m.underflow_calls, 0,
+                   "request path minted inline: {m:?}");
+        assert_eq!(m.fallback_elems, 0);
+        assert!(m.drawn > 0, "bank never drawn from: {m:?}");
     }
 
     #[test]
@@ -300,7 +513,7 @@ mod tests {
         let svc = Service::start(model, cfg).expect("setup with all parties");
         // kill party 2's thread: it drains its job queue, hits Shutdown,
         // and drops its Comm endpoints
-        svc.job_txs[2].send(Job::Shutdown).unwrap();
+        svc.sched.lock().unwrap().txs[2].send(Job::Shutdown).unwrap();
         let mut rng = Rng::new(3);
         let input = rng.tensor_small(&[1, 36], 15);
         let got = svc.infer(vec![input]);

@@ -14,6 +14,7 @@
 use anyhow::{anyhow, Result};
 
 use crate::nn::{Model, Op};
+use crate::offline::TupleSource;
 use crate::protocols::linear::LinearBackend;
 use crate::protocols::relu::{relu_mul, relu_ot};
 use crate::protocols::trunc::trunc;
@@ -45,10 +46,18 @@ impl Default for EngineOptions {
 /// order -- used to size the preprocessing pool.  Must mirror the op walk
 /// in `infer_batch` exactly (asserted by the pool's size checks).
 pub fn msb_sizes(model: &SharedModel, batch: usize) -> Vec<usize> {
-    let (c0, h0, w0) = model.input;
+    msb_sizes_of(&model.ops, model.input, batch)
+}
+
+/// `msb_sizes` over the public program structure alone: the op list and
+/// input geometry are in every party's manifest (and in the coordinator's
+/// plaintext `Model`), so demand can be computed without a shared model.
+pub fn msb_sizes_of(ops: &[Op], input: (usize, usize, usize),
+                    batch: usize) -> Vec<usize> {
+    let (c0, h0, w0) = input;
     let (mut c, mut h, mut w) = (c0, h0, w0);
     let mut sizes = Vec::new();
-    for op in &model.ops {
+    for op in ops {
         match op {
             Op::Matmul { conv: true, geom, cout, .. } => {
                 let (k, s, pl, ph) = *geom;
@@ -90,6 +99,12 @@ pub fn msb_demand(model: &SharedModel, batch: usize) -> usize {
     msb_sizes(model, batch).iter().sum()
 }
 
+/// `msb_demand` from the plaintext model manifest (the coordinator's
+/// refill pump sizes watermarks before any session exists).
+pub fn msb_demand_for(model: &Model, batch: usize) -> usize {
+    msb_sizes_of(&model.ops, model.input, batch).iter().sum()
+}
+
 /// AOT artifact keys of every linear layer -- the set a backend should
 /// precompile at session setup (see LinearBackend::warmup).
 pub fn hlo_keys(model: &Model) -> Vec<String> {
@@ -107,14 +122,32 @@ pub fn preprocess_for(ctx: &Ctx, model: &SharedModel, batch: usize)
     Ok(pool)
 }
 
-/// MSB through the pool when one is supplied, inline Algorithm 3
-/// otherwise.
-fn msb_via(ctx: &Ctx, pool: Option<&crate::protocols::preproc::MsbPool>,
-           x: &Share) -> Result<crate::protocols::msb::MsbOut> {
-    match pool {
-        Some(p) => crate::protocols::preproc::msb_online(
-            ctx, x, p.take(x.len())),
-        None => crate::protocols::msb::msb_extract_full(ctx, x),
+/// MSB through the configured tuple source.
+///
+/// * `Inline` -- full Algorithm 3, no preprocessing.
+/// * `Pool` -- a pre-minted reservoir; exhaustion is a hard error
+///   (protocol desync / undersized preprocessing for one-shot sessions).
+/// * `Bank` -- the serving path.  The pooled-vs-fallback decision uses
+///   the bank's *deterministic* credit accounting, so all three parties
+///   agree on it regardless of producer speed; a committed draw blocks
+///   until the producer delivers, a refusal (genuine underflow, counted
+///   in `PreprocMetrics`) mints synchronously on the online channel --
+///   also lock-step, because the decision was.
+fn msb_via(ctx: &Ctx, src: &TupleSource<'_>, x: &Share)
+           -> Result<crate::protocols::msb::MsbOut> {
+    use crate::protocols::preproc;
+    match src {
+        TupleSource::Inline => crate::protocols::msb::msb_extract_full(ctx, x),
+        TupleSource::Pool(p) => preproc::msb_online(ctx, x, p.take(x.len())?),
+        TupleSource::Bank(b) => {
+            let n = x.len();
+            let tup = if b.try_reserve(n) {
+                b.take(n)?
+            } else {
+                preproc::mint(ctx, n)?
+            };
+            preproc::msb_online(ctx, x, tup)
+        }
     }
 }
 
@@ -293,14 +326,16 @@ pub fn infer_batch(ctx: &Ctx, model: &SharedModel,
                    backend: &dyn LinearBackend, opts: EngineOptions,
                    inputs: &[Tensor], batch: usize)
                    -> Result<InferenceOutput> {
-    infer_batch_pooled(ctx, model, backend, opts, inputs, batch, None)
+    infer_batch_pooled(ctx, model, backend, opts, inputs, batch,
+                       &TupleSource::Inline)
 }
 
-/// `infer_batch` with an optional preprocessing pool (see preproc::).
+/// `infer_batch` drawing MSB correlated material from `tuples` (an
+/// inline pool, a producer-fed `offline::TupleBank`, or nothing).
 pub fn infer_batch_pooled(
     ctx: &Ctx, model: &SharedModel, backend: &dyn LinearBackend,
     opts: EngineOptions, inputs: &[Tensor], batch: usize,
-    pool: Option<&crate::protocols::preproc::MsbPool>)
+    tuples: &TupleSource<'_>)
     -> Result<InferenceOutput> {
     let me = ctx.id();
     let (c0, h0, w0) = model.input;
@@ -388,14 +423,14 @@ pub fn infer_batch_pooled(
                 let shapes: Vec<Vec<usize>> =
                     d.iter().map(|s| s.shape().to_vec()).collect();
                 let joined = concat(&d);
-                let bits = msb_via(ctx, pool, &joined)?.sign_a;
+                let bits = msb_via(ctx, tuples, &joined)?.sign_a;
                 acts = split(bits, &shapes);
             }
             Op::Relu { trunc: f } => {
                 let shapes: Vec<Vec<usize>> =
                     acts.iter().map(|s| s.shape().to_vec()).collect();
                 let joined = concat(&acts);
-                let m = msb_via(ctx, pool, &joined)?.bits;
+                let m = msb_via(ctx, tuples, &joined)?.bits;
                 let r = if opts.relu_via_ot {
                     relu_ot(ctx, &joined, &m)?
                 } else {
@@ -419,7 +454,7 @@ pub fn infer_batch_pooled(
                     sums.push(summed);
                 }
                 let joined = concat(&sums);
-                let bits = msb_via(ctx, pool, &joined)?.sign_a;
+                let bits = msb_via(ctx, tuples, &joined)?.sign_a;
                 acts = split(bits, &shapes);
             }
             Op::Pm1 => {
@@ -491,7 +526,7 @@ mod tests {
     fn msb_sizes_mirrors_infer_batch_pool_drain() {
         // Contract: `msb_sizes` must predict the engine's MSB walk exactly.
         // Over-prediction leaves material in the pool (asserted to be zero
-        // below); under-prediction would panic inside `MsbPool::take`.
+        // below); under-prediction would err inside `MsbPool::take`.
         let results = run3(|ctx| {
             let model = every_op_model();
             let shared = share_model(ctx, &model, true).unwrap();
@@ -501,6 +536,10 @@ mod tests {
             // Sign on (2,4,4), PoolBits to (2,2,2), Relu on the 3 logits
             assert_eq!(sizes, vec![64, 16, 6]);
             assert_eq!(msb_demand(&shared, batch), 86);
+            // the manifest-only variant agrees (the coordinator pump
+            // sizes watermarks from the plaintext model)
+            assert_eq!(msb_demand_for(&model, batch), 86);
+            assert_eq!(msb_sizes_of(&model.ops, model.input, batch), sizes);
             let pool = crate::protocols::preproc::MsbPool::new();
             pool.generate(ctx, msb_demand(&shared, batch)).unwrap();
             let inputs: Vec<Tensor> = if ctx.id() == 0 {
@@ -511,7 +550,7 @@ mod tests {
             };
             let pooled = infer_batch_pooled(
                 ctx, &shared, &NativeBackend, EngineOptions::default(),
-                &inputs, batch, Some(&pool)).unwrap();
+                &inputs, batch, &TupleSource::Pool(&pool)).unwrap();
             // fully drained: zero remaining, zero over-take
             assert_eq!(pool.available(), 0,
                        "msb_sizes over-estimated the engine's MSB walk");
@@ -519,7 +558,7 @@ mod tests {
             // Algorithm 3
             let inline = infer_batch_pooled(
                 ctx, &shared, &NativeBackend, EngineOptions::default(),
-                &inputs, batch, None).unwrap();
+                &inputs, batch, &TupleSource::Inline).unwrap();
             (pooled.logits, inline.logits)
         });
         let (pooled, inline) = results[0].0.clone();
@@ -536,6 +575,33 @@ mod tests {
         }
         // non-owners learn nothing
         assert!(results[1].0 .0.is_empty() && results[2].0 .0.is_empty());
+    }
+
+    #[test]
+    fn undersized_pool_surfaces_typed_error_not_abort() {
+        // satellite hardening: exhaustion propagates as a Result through
+        // msb_via and infer_batch_pooled -- every party errs at the same
+        // lock-step point, nobody panics, nobody hangs
+        let results = run3(|ctx| {
+            let model = every_op_model();
+            let shared = share_model(ctx, &model, true).unwrap();
+            let pool = crate::protocols::preproc::MsbPool::new();
+            pool.generate(ctx, 10).unwrap(); // first Sign needs 64
+            let inputs: Vec<Tensor> = if ctx.id() == 0 {
+                let mut rng = crate::testutil::Rng::new(8);
+                vec![rng.tensor_small(&[1, 36], 15)]
+            } else {
+                vec![]
+            };
+            infer_batch_pooled(ctx, &shared, &NativeBackend,
+                               EngineOptions::default(), &inputs, 1,
+                               &TupleSource::Pool(&pool))
+                .map(|_| ()).map_err(|e| e.to_string())
+        });
+        for (r, _) in &results {
+            let err = r.as_ref().expect_err("undersized pool must err");
+            assert!(err.contains("exhausted"), "unexpected error: {err}");
+        }
     }
 
     #[test]

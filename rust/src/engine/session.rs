@@ -27,6 +27,13 @@ pub struct SessionConfig {
     pub proto: ProtoConfig,
     pub hlo_dir: PathBuf,
     pub session_seed: u64,
+    /// Serving-bank watermarks (`coordinator::Service` only); `None`
+    /// auto-scales to the model's demand at `max_batch`.
+    pub bank: Option<crate::offline::BankConfig>,
+    /// Largest batch the serving front will form (`BatchPolicy::
+    /// max_batch`); sizes the auto bank so its capacity always admits a
+    /// full batch's largest MSB draw.
+    pub max_batch: usize,
 }
 
 impl SessionConfig {
@@ -38,6 +45,8 @@ impl SessionConfig {
             proto: ProtoConfig::default(),
             hlo_dir: hlo_dir.into(),
             session_seed: 7,
+            bank: None,
+            max_batch: 8,
         }
     }
 
@@ -48,6 +57,11 @@ impl SessionConfig {
 
     pub fn with_backend(mut self, b: BackendKind) -> Self {
         self.backend = b;
+        self
+    }
+
+    pub fn with_bank(mut self, bank: crate::offline::BankConfig) -> Self {
+        self.bank = Some(bank);
         self
     }
 }
@@ -107,12 +121,16 @@ pub fn run_inference(model: &Arc<Model>, inputs: Vec<Tensor>,
             } else {
                 None
             };
+            let tuples = match &pool {
+                Some(p) => crate::offline::TupleSource::Pool(p),
+                None => crate::offline::TupleSource::Inline,
+            };
             let setup = t0.elapsed();
             comm.reset_stats(); // report online cost separately
             let t1 = Instant::now();
             let out = super::infer_batch_pooled(
                 &ctx, &shared, backend.as_ref(), cfg.opts, &inputs, batch,
-                pool.as_ref())?;
+                &tuples)?;
             let online = t1.elapsed();
             Ok((out.logits, online, setup, comm.stats()))
         }));

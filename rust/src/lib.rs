@@ -8,6 +8,10 @@
 //! * `protocols` -- the paper's contributions: Algorithm 2 linear layers,
 //!   Algorithm 3 MSB extraction, Algorithm 4/5 Sign and ReLU, truncation,
 //!   Sign-fused maxpooling, BN folding (done at export time).
+//! * `offline` -- the offline/online split as a serving subsystem:
+//!   watermark-managed `TupleBank`s fed by background producers over the
+//!   tagged offline transport channel, so preprocessing never rides the
+//!   request path.
 //! * `nn`, `engine` -- the quantized layer IR and the per-party secure
 //!   executor.
 //! * `runtime` -- PJRT client loading the AOT artifacts lowered from the
@@ -29,6 +33,7 @@ pub mod engine;
 pub mod jsonio;
 pub mod metrics;
 pub mod nn;
+pub mod offline;
 pub mod ot;
 pub mod prf;
 pub mod protocols;

@@ -16,7 +16,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Context, Result};
 
-use cbnn::cli::{parse_backend, parse_net, Args};
+use cbnn::cli::{parse_backend, parse_bank, parse_net, Args};
 use cbnn::coordinator::{BatchPolicy, Coordinator, Service};
 use cbnn::datasets::EvalSet;
 use cbnn::engine::session::{run_inference, secure_accuracy, SessionConfig};
@@ -26,7 +26,9 @@ use cbnn::nn::Model;
 fn usage() -> &'static str {
     "usage: cbnn <infer|serve|acc|info> --model <name> \
      [--artifacts artifacts] [--net lan|wan|zero] \
-     [--backend native|pjrt-pallas|pjrt-xla] [--batch N] [--requests N]"
+     [--backend native|pjrt-pallas|pjrt-xla] [--batch N] [--requests N] \
+     [--prefetch N] [--bank-low N] [--bank-high N] [--bank-chunk N] \
+     [--bank-capacity N]"
 }
 
 fn main() -> Result<()> {
@@ -93,12 +95,21 @@ fn main() -> Result<()> {
                 .map_err(anyhow::Error::msg)?;
             let max_batch = args.get_usize("batch", 8)
                 .map_err(anyhow::Error::msg)?;
+            let prefetch = args.get_usize("prefetch", 2)
+                .map_err(anyhow::Error::msg)?;
+            let mut cfg = cfg;
+            cfg.max_batch = max_batch;
+            if let Some(bank) = parse_bank(&args)
+                .map_err(anyhow::Error::msg)? {
+                cfg.bank = Some(bank);
+            }
             let svc = Service::start(Arc::clone(&model), cfg)?;
             println!("service up: model={} setup={}", svc.model_name,
                      fmt_duration(svc.setup_time));
             let coord = Coordinator::start(svc, BatchPolicy {
                 max_batch,
                 max_wait: Duration::from_millis(10),
+                prefetch,
             });
             let mut rxs = Vec::new();
             for i in 0..requests {
@@ -112,9 +123,14 @@ fn main() -> Result<()> {
                     correct += 1;
                 }
             }
+            let pm = coord.preproc_metrics();
             let (hist, thr) = coord.finish();
             println!("served {} requests: {:.1} req/s", thr.requests,
                      thr.per_sec());
+            println!("offline bank: minted={} drawn={} request-path \
+                      fallbacks={} ({} elems)",
+                     pm.minted, pm.drawn, pm.underflow_calls,
+                     pm.fallback_elems);
             println!("latency mean={} p50={} p99={} max={}",
                      fmt_duration(hist.mean()),
                      fmt_duration(hist.quantile(0.5)),

@@ -63,6 +63,25 @@ impl Histogram {
     }
 }
 
+/// Offline-preprocessing counters for one party's `offline::TupleBank`.
+/// The acceptance gate for the serving path is `underflow_calls == 0`
+/// with a warm bank: zero synchronous mints on the request path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PreprocMetrics {
+    /// Elements delivered by the background producer.
+    pub minted: u64,
+    /// Elements consumed by pooled draws.
+    pub drawn: u64,
+    /// Producer deliveries (refill chunks completed).
+    pub refill_chunks: u64,
+    /// MSB invocations that fell back to request-path generation.
+    pub underflow_calls: u64,
+    /// Elements generated synchronously on the request path.
+    pub fallback_elems: u64,
+    /// High-water mark of stored elements (≤ bank capacity).
+    pub max_level: u64,
+}
+
 /// Simple mean/throughput aggregate for a run.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Throughput {

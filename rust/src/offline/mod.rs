@@ -1,0 +1,433 @@
+//! Offline preprocessing subsystem: watermark-managed tuple banks fed by
+//! background producers over the tagged `Chan::Offline` transport channel.
+//!
+//! CBNN's protocols split into an offline phase (the β/βᴬ/rs MSB tuples)
+//! and a 2-round online phase, but a pool minted inline still pays the
+//! offline cost on the request path.  This module decouples them for the
+//! serving stack:
+//!
+//! * each party thread spawns one **producer** thread holding a
+//!   `Comm::channel(Chan::Offline)` handle and its own PRF seed domain
+//!   (`offline_seeds`), so producer traffic multiplexes over the same
+//!   three-party links without interleaving into online frames and
+//!   without perturbing the online PRF counter trajectory;
+//! * a **`TupleBank`** sits between producer and consumer: a
+//!   `Mutex`+condvar reservoir with a hard `capacity` (delivery blocks
+//!   when full -- backpressure), low/high watermarks driving the
+//!   coordinator's refill pump, and a `close()` drain for shutdown;
+//! * draws are decided by **deterministic credit accounting**, not the
+//!   racy actual fill level: every party observes the identical
+//!   refill/infer command order (the coordinator broadcasts under one
+//!   lock), so `credited - reserved` evolves identically on all three
+//!   parties and they agree on every pooled-vs-fallback decision even
+//!   though their producers run at different speeds.  A committed draw
+//!   then *blocks* until the producer delivers; a refused draw falls
+//!   back to synchronous generation on the online channel (counted in
+//!   `PreprocMetrics`).
+//!
+//! Deadlock freedom: a delivery blocks only while `level + chunk >
+//! capacity`, i.e. a blocked producer guarantees `level > capacity -
+//! chunk`; `try_reserve` refuses any draw larger than `capacity -
+//! chunk`, so a committed draw is always satisfiable from a
+//! backpressured bank -- producer and consumer can never wait on each
+//! other.  Online protocol frames never depend on offline frames (and
+//! vice versa), so the per-link channel demux cannot cycle either.
+//!
+//! **Leakage / reuse boundary**: every tuple is consumed exactly once
+//! (the FIFO pop is destructive) and a bank is owned by one session's
+//! party thread -- tuples are never shared across sessions.  Reusing an
+//! MSB tuple would reveal linear relations between the two masked
+//! reveals; the single-use FIFO discipline is the security argument, see
+//! DESIGN.md §Offline/online split.
+
+use std::sync::mpsc::Receiver;
+use std::sync::{Condvar, Mutex};
+
+use anyhow::Result;
+
+use crate::metrics::PreprocMetrics;
+use crate::prf::PartySeeds;
+use crate::protocols::preproc::{self, MsbPool, MsbTuple, PreprocError,
+                                Reservoir};
+use crate::protocols::Ctx;
+
+/// Producer PRF streams are domain-separated from the online session's:
+/// minting never advances the online counters, so a served batch is
+/// bit-identical whether its tuples came from a warm bank or an inline
+/// pool minted with the same chunk schedule.
+pub const OFFLINE_SEED_SALT: u64 = 0x0FF1_CE5E_ED00_57A6;
+
+/// The producer-side seed derivation for `session_seed` (identical on
+/// all parties, so producer-minted tuples reconstruct consistently).
+pub fn offline_seeds(session_seed: u64, party: usize) -> PartySeeds {
+    PartySeeds::setup(session_seed ^ OFFLINE_SEED_SALT, party)
+}
+
+/// Watermark policy for one `TupleBank`, in tuple elements.
+#[derive(Clone, Copy, Debug)]
+pub struct BankConfig {
+    /// Refill trigger: the pump tops up when deterministic headroom
+    /// (`credited - reserved`) falls below this.
+    pub low: usize,
+    /// Top-up / prefill target.
+    pub high: usize,
+    /// Elements per refill job (one producer mint).
+    pub chunk: usize,
+    /// Hard storage cap: deliveries block above it (backpressure).
+    pub capacity: usize,
+}
+
+impl Default for BankConfig {
+    fn default() -> Self {
+        BankConfig { low: 1024, high: 2048, chunk: 512, capacity: 2560 }
+    }
+}
+
+impl BankConfig {
+    /// Scale the policy to a model's per-max-batch MSB demand: one batch
+    /// of headroom triggers a refill, three are kept warm, chunks are one
+    /// batch so a refill never straddles more than one mint.
+    pub fn auto(demand_per_batch: usize) -> BankConfig {
+        let unit = demand_per_batch.max(1);
+        BankConfig { low: unit, high: 3 * unit, chunk: unit,
+                     capacity: 4 * unit }
+    }
+
+    /// Structural validity: non-empty chunks, ordered watermarks, and a
+    /// capacity that leaves one chunk of headroom above `high` (this is
+    /// what makes prefill-to-high reachable without tripping
+    /// backpressure, and part of the deadlock-freedom argument above).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.chunk == 0 {
+            return Err("bank chunk must be positive".into());
+        }
+        if self.low > self.high {
+            return Err(format!(
+                "low watermark {} above high watermark {}",
+                self.low, self.high));
+        }
+        if self.high + self.chunk > self.capacity {
+            return Err(format!(
+                "capacity {} leaves no chunk headroom above the high \
+                 watermark {} (chunk {})",
+                self.capacity, self.high, self.chunk));
+        }
+        Ok(())
+    }
+}
+
+struct BankState {
+    res: Reservoir,
+    /// Elements promised by dispatched refill jobs (deterministic:
+    /// advanced by the party thread in broadcast order).
+    credited: usize,
+    /// Elements committed to pooled draws (deterministic: advanced by
+    /// the engine walk).
+    reserved: usize,
+    closed: bool,
+    m: PreprocMetrics,
+}
+
+/// Per-party reservoir of MSB tuples shared between the party's online
+/// thread (draws) and its background producer (deliveries).
+pub struct TupleBank {
+    cfg: BankConfig,
+    st: Mutex<BankState>,
+    /// Signalled on delivery / close: wakes blocked draws and prefill.
+    data: Condvar,
+    /// Signalled on draw / close: wakes backpressured deliveries.
+    space: Condvar,
+}
+
+impl TupleBank {
+    pub fn new(cfg: BankConfig) -> TupleBank {
+        if let Err(e) = cfg.validate() {
+            panic!("invalid BankConfig: {e}");
+        }
+        TupleBank {
+            cfg,
+            st: Mutex::new(BankState {
+                res: Reservoir::default(),
+                credited: 0,
+                reserved: 0,
+                closed: false,
+                m: PreprocMetrics::default(),
+            }),
+            data: Condvar::new(),
+            space: Condvar::new(),
+        }
+    }
+
+    pub fn config(&self) -> BankConfig {
+        self.cfg
+    }
+
+    /// Record a dispatched refill job of `n` elements.  Called by the
+    /// party thread when it forwards the job to its producer, i.e. in
+    /// the broadcast order every party observes identically.
+    pub fn credit(&self, n: usize) {
+        self.st.lock().unwrap().credited += n;
+    }
+
+    /// Deterministic headroom: promised minus committed elements.  This
+    /// is the quantity the pump and the draw decision agree on across
+    /// parties, independent of producer speed.
+    pub fn credited_available(&self) -> usize {
+        let st = self.st.lock().unwrap();
+        st.credited - st.reserved
+    }
+
+    /// Elements committed to pooled draws so far (monotonic).
+    pub fn reserved_elems(&self) -> usize {
+        self.st.lock().unwrap().reserved
+    }
+
+    /// Actually stored elements (racy against the producer; use only for
+    /// observability and prefill waits, never for draw decisions).
+    pub fn level(&self) -> usize {
+        self.st.lock().unwrap().res.len()
+    }
+
+    pub fn metrics(&self) -> PreprocMetrics {
+        self.st.lock().unwrap().m
+    }
+
+    /// Commit to a pooled draw of `n` elements iff the deterministic
+    /// headroom covers it and `n <= capacity - chunk` (a backpressured
+    /// producer only guarantees `capacity - chunk` deliverable elements,
+    /// so anything larger could deadlock against a blocked delivery --
+    /// it falls back instead).  The decision deliberately ignores the
+    /// party-local `closed` flag: all inputs are deterministic across
+    /// parties, so the trio always agrees; a closed bank surfaces as
+    /// `PreprocError::Closed` from the subsequent `take`, which errs the
+    /// inference instead of desynchronizing it.  A refusal is the
+    /// *underflow* the metrics count: the caller mints synchronously on
+    /// the request path.
+    pub fn try_reserve(&self, n: usize) -> bool {
+        let mut st = self.st.lock().unwrap();
+        if n + self.cfg.chunk <= self.cfg.capacity
+            && st.credited - st.reserved >= n {
+            st.reserved += n;
+            true
+        } else {
+            st.m.underflow_calls += 1;
+            st.m.fallback_elems += n as u64;
+            false
+        }
+    }
+
+    /// Draw `n` elements, blocking until the producer has delivered them.
+    /// Only valid after a successful `try_reserve(n)`; errs `Closed` if
+    /// the bank is drained out from under the draw.
+    pub fn take(&self, n: usize) -> Result<MsbTuple, PreprocError> {
+        let mut st = self.st.lock().unwrap();
+        while st.res.len() < n && !st.closed {
+            st = self.data.wait(st).unwrap();
+        }
+        if st.res.len() < n {
+            return Err(PreprocError::Closed);
+        }
+        let t = st.res.pop(n);
+        st.m.drawn += n as u64;
+        drop(st);
+        self.space.notify_all();
+        Ok(t)
+    }
+
+    /// Producer delivery.  Blocks while the bank is full (backpressure);
+    /// a closed bank swallows the tuple so shutdown drains cleanly.
+    pub fn deliver(&self, t: MsbTuple) {
+        let n = t.len();
+        let mut st = self.st.lock().unwrap();
+        while !st.closed && st.res.len() + n > self.cfg.capacity {
+            st = self.space.wait(st).unwrap();
+        }
+        if st.closed {
+            return;
+        }
+        st.res.push(&t);
+        st.m.minted += n as u64;
+        st.m.refill_chunks += 1;
+        st.m.max_level = st.m.max_level.max(st.res.len() as u64);
+        drop(st);
+        self.data.notify_all();
+    }
+
+    /// Stop the bank: wakes every blocked draw (they err `Closed`) and
+    /// every backpressured delivery (dropped).  Idempotent.
+    pub fn close(&self) {
+        self.st.lock().unwrap().closed = true;
+        self.data.notify_all();
+        self.space.notify_all();
+    }
+
+    /// Block until the stored level reaches `target` (prefill barrier).
+    pub fn wait_level(&self, target: usize) -> Result<usize, PreprocError> {
+        let mut st = self.st.lock().unwrap();
+        while st.res.len() < target && !st.closed {
+            st = self.data.wait(st).unwrap();
+        }
+        if st.res.len() < target {
+            return Err(PreprocError::Closed);
+        }
+        Ok(st.res.len())
+    }
+}
+
+/// Producer loop: mint one chunk per refill token and deliver it.  Runs
+/// on a dedicated thread per party with `ctx` bound to the offline
+/// channel and the offline seed domain; exits when the token channel
+/// closes (graceful drain: queued tokens are identical on all parties,
+/// so the interactive mints complete in lock-step before exit).  A mint
+/// failure (peer death) is returned so the caller can close the bank.
+pub fn run_producer(ctx: &Ctx, bank: &TupleBank, tokens: Receiver<usize>)
+                    -> Result<()> {
+    while let Ok(n) = tokens.recv() {
+        let t = preproc::mint(ctx, n)?;
+        bank.deliver(t);
+    }
+    Ok(())
+}
+
+/// Where `infer_batch_pooled` draws MSB correlated material from.
+pub enum TupleSource<'a> {
+    /// No preprocessing: run full Algorithm 3 inline per invocation.
+    Inline,
+    /// A pre-minted inline pool (one-shot sessions; errs on exhaustion).
+    Pool(&'a MsbPool),
+    /// A producer-fed bank (serving): deterministic reserve, blocking
+    /// draw, synchronous-generation fallback on genuine underflow.
+    Bank(&'a TupleBank),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ring::Tensor;
+    use crate::rss::{BitShare, Share};
+    use std::sync::Arc;
+    use std::thread;
+
+    fn tup(n: usize) -> MsbTuple {
+        MsbTuple {
+            beta: BitShare::zeros(n),
+            beta_a: Share { a: Tensor::zeros(&[n]), b: Tensor::zeros(&[n]) },
+            rs: Share { a: Tensor::zeros(&[n]), b: Tensor::zeros(&[n]) },
+        }
+    }
+
+    #[test]
+    fn config_validation_catches_bad_watermarks() {
+        assert!(BankConfig::default().validate().is_ok());
+        assert!(BankConfig::auto(86).validate().is_ok());
+        assert!(BankConfig { low: 2, high: 1, chunk: 1, capacity: 4 }
+                .validate().is_err());
+        assert!(BankConfig { low: 0, high: 4, chunk: 0, capacity: 8 }
+                .validate().is_err());
+        assert!(BankConfig { low: 0, high: 8, chunk: 4, capacity: 8 }
+                .validate().is_err(), "no chunk headroom above high");
+    }
+
+    #[test]
+    fn reserve_is_credit_accounted_not_level_accounted() {
+        let bank = TupleBank::new(BankConfig {
+            low: 0, high: 8, chunk: 4, capacity: 16 });
+        // no credit: refuse (and count the underflow)
+        assert!(!bank.try_reserve(1));
+        assert_eq!(bank.metrics().underflow_calls, 1);
+        assert_eq!(bank.metrics().fallback_elems, 1);
+        // credit without delivery: reserve succeeds (the take would
+        // block until the producer catches up)
+        bank.credit(8);
+        assert!(bank.try_reserve(5));
+        assert_eq!(bank.credited_available(), 3);
+        assert!(!bank.try_reserve(4), "over-reserve must refuse");
+        // draws above capacity - chunk always fall back, credit
+        // notwithstanding: a backpressured producer only guarantees
+        // capacity - chunk deliverable elements (deadlock freedom)
+        bank.credit(1000);
+        assert!(!bank.try_reserve(13));
+        assert!(bank.try_reserve(12));
+        assert_eq!(bank.reserved_elems(), 17);
+    }
+
+    #[test]
+    fn delivery_backpressure_blocks_at_capacity() {
+        let cfg = BankConfig { low: 8, high: 24, chunk: 8, capacity: 40 };
+        let bank = Arc::new(TupleBank::new(cfg));
+        bank.credit(1000);
+        let b = Arc::clone(&bank);
+        // 10 chunks of 8 = 80 elements into a 40-capacity bank: the
+        // producer must block until draws free space
+        let producer = thread::spawn(move || {
+            for _ in 0..10 {
+                b.deliver(tup(8));
+            }
+        });
+        bank.wait_level(cfg.capacity).unwrap();
+        assert_eq!(bank.level(), cfg.capacity);
+        for _ in 0..2 {
+            assert!(bank.try_reserve(24));
+            let t = bank.take(24).unwrap();
+            assert_eq!(t.len(), 24);
+        }
+        producer.join().unwrap();
+        let m = bank.metrics();
+        assert_eq!(m.minted, 80);
+        assert_eq!(m.drawn, 48);
+        assert_eq!(m.refill_chunks, 10);
+        assert!(m.max_level as usize <= cfg.capacity,
+                "level exceeded capacity: {m:?}");
+        assert_eq!(bank.level(), 32);
+    }
+
+    #[test]
+    fn close_wakes_blocked_draws_and_deliveries() {
+        let bank = Arc::new(TupleBank::new(BankConfig {
+            low: 0, high: 8, chunk: 4, capacity: 12 }));
+        bank.credit(100);
+        assert!(bank.try_reserve(8));
+        let b = Arc::clone(&bank);
+        let taker = thread::spawn(move || b.take(8));
+        bank.close();
+        assert_eq!(taker.join().unwrap().unwrap_err(), PreprocError::Closed);
+        // delivery into a closed bank is a silent drop (shutdown drain)
+        bank.deliver(tup(4));
+        assert_eq!(bank.level(), 0);
+        // reserve stays deterministic (credit-only, ignores closed);
+        // the draw itself surfaces Closed
+        assert!(bank.try_reserve(1));
+        assert_eq!(bank.take(1).unwrap_err(), PreprocError::Closed);
+        assert!(bank.wait_level(1).is_err());
+    }
+
+    #[test]
+    fn fifo_splices_across_chunk_boundaries() {
+        let bank = TupleBank::new(BankConfig {
+            low: 0, high: 16, chunk: 8, capacity: 32 });
+        bank.credit(20);
+        bank.deliver(tup(8));
+        bank.deliver(tup(8));
+        assert!(bank.try_reserve(11));
+        assert_eq!(bank.take(11).unwrap().len(), 11);
+        assert_eq!(bank.level(), 5);
+        bank.deliver(tup(4));
+        assert!(bank.try_reserve(9));
+        assert_eq!(bank.take(9).unwrap().len(), 9);
+        assert_eq!(bank.level(), 0);
+    }
+
+    #[test]
+    fn offline_seeds_are_salted_per_party_consistent() {
+        // different domain than the online seeds, same derivation on all
+        // parties: producer tuples must reconstruct across the trio
+        let a = offline_seeds(7, 0);
+        let online = PartySeeds::setup(7, 0);
+        assert_ne!(a.zero3(0, 8), online.zero3(0, 8));
+        let b = offline_seeds(7, 1);
+        // replication: P0's `next` stream is P1's `mine` stream
+        let (_, p0b) = a.rand2(0, 16);
+        let (p1a, _) = b.rand2(0, 16);
+        assert_eq!(p0b, p1a);
+    }
+}

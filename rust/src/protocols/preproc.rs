@@ -14,8 +14,12 @@
 //! ```
 //!
 //! i.e. 2 online rounds instead of 7.  Same offline/online trick as
-//! Beaver triples; the serving coordinator tops the reservoir up between
-//! requests, and the ablation bench measures both paths.
+//! Beaver triples.  `mint` is the interactive generation step; where the
+//! material *lives* is the caller's choice: the inline `MsbPool`
+//! reservoir (one-shot sessions, tests) or the serving stack's
+//! watermark-managed `offline::TupleBank`, whose background producers
+//! call `mint` over the offline transport channel so generation never
+//! touches the request path.
 //!
 //! Every reservoir component is a head-indexed FIFO: the beta bits are
 //! two word-packed `ring::planes::BitQueue`s (the strided layout's
@@ -44,6 +48,43 @@ pub struct MsbTuple {
     /// [r * (1 - 2*beta)]
     pub rs: Share,
 }
+
+impl MsbTuple {
+    /// Elements covered by this tuple slice.
+    pub fn len(&self) -> usize {
+        self.beta.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.beta.is_empty()
+    }
+}
+
+/// Typed preprocessing failure.  Draws validate availability and return
+/// this instead of asserting, so an undersized reservoir surfaces as a
+/// `Result` through `msb_via`/the coordinator rather than aborting a
+/// party thread mid-session.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PreprocError {
+    /// The reservoir cannot cover the draw.
+    Exhausted { need: usize, have: usize },
+    /// The serving bank was closed (producer death or shutdown drain)
+    /// while a draw was outstanding.
+    Closed,
+}
+
+impl std::fmt::Display for PreprocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PreprocError::Exhausted { need, have } => write!(
+                f, "MSB preprocessing exhausted: need {need}, have {have}"),
+            PreprocError::Closed => write!(
+                f, "preprocessing bank closed mid-draw"),
+        }
+    }
+}
+
+impl std::error::Error for PreprocError {}
 
 /// Head-indexed FIFO of ring elements: the arithmetic analogue of
 /// `BitQueue` -- a draw copies only the `n` elements it returns and
@@ -84,12 +125,85 @@ impl ElemQueue {
     }
 }
 
+/// FIFO storage of minted MSB material.  Shared by the inline `MsbPool`
+/// (single-thread, `RefCell`) and the serving `offline::TupleBank`
+/// (`Mutex` + condvars); all methods take `&mut self` so the wrapper
+/// chooses the synchronization.
 #[derive(Default)]
-struct Reservoir {
+pub(crate) struct Reservoir {
     beta_a_bits: BitQueue,
     beta_b_bits: BitQueue,
     beta_a: (ElemQueue, ElemQueue),
     rs: (ElemQueue, ElemQueue),
+}
+
+impl Reservoir {
+    pub(crate) fn len(&self) -> usize {
+        self.beta_a_bits.len()
+    }
+
+    /// Append a minted tuple slice (FIFO: draws splice across push
+    /// boundaries exactly like one contiguous mint).
+    pub(crate) fn push(&mut self, t: &MsbTuple) {
+        self.beta_a_bits.push(&t.beta.a);
+        self.beta_b_bits.push(&t.beta.b);
+        self.beta_a.0.push(&t.beta_a.a.data);
+        self.beta_a.1.push(&t.beta_a.b.data);
+        self.rs.0.push(&t.rs.a.data);
+        self.rs.1.push(&t.rs.b.data);
+    }
+
+    /// Draw the front `n` elements.  Callers validate `n <= len()` first
+    /// (and surface `PreprocError`); this only asserts the internal
+    /// invariant.
+    pub(crate) fn pop(&mut self, n: usize) -> MsbTuple {
+        debug_assert!(n <= self.len());
+        MsbTuple {
+            beta: BitShare {
+                a: self.beta_a_bits.pop_front(n),
+                b: self.beta_b_bits.pop_front(n),
+            },
+            beta_a: Share {
+                a: Tensor::from_vec(&[n], self.beta_a.0.pop_front(n)),
+                b: Tensor::from_vec(&[n], self.beta_a.1.pop_front(n)),
+            },
+            rs: Share {
+                a: Tensor::from_vec(&[n], self.rs.0.pop_front(n)),
+                b: Tensor::from_vec(&[n], self.rs.1.pop_front(n)),
+            },
+        }
+    }
+}
+
+/// Mint `n` elements of MSB correlated material: the input-independent
+/// prefix of Algorithm 3 (B2A of beta, r-share, one multiplication -- ~5
+/// rounds).  Interactive: all parties call it in lock-step with the same
+/// `n`, over whichever transport channel `ctx.comm` is bound to -- the
+/// inline pool mints on the online channel during setup, the serving
+/// producers on the offline channel concurrently with inference.
+pub fn mint(ctx: &Ctx, n: usize) -> Result<MsbTuple> {
+    let me = ctx.id();
+    let cnt = ctx.seeds.next_cnt();
+    let (ba, bb) = ctx.seeds.rand_bits2(cnt, n);
+    let beta = BitShare { a: ba, b: bb };
+    let beta_a = b2a(ctx, &beta)?;
+
+    let rcnt = ctx.seeds.next_cnt();
+    let r_plain = if me == 1 {
+        let mut s = PrfStream::new(&ctx.seeds.private, rcnt,
+                                   domain::SHARE);
+        let max = 1i64 << ctx.cfg.mask_bits;
+        Some(Tensor::from_vec(&[n], (0..n).map(|_| {
+            ((s.next_u32() as i64 & (max - 1)) + 1) as Elem
+        }).collect()))
+    } else {
+        None
+    };
+    let r = rss::share_input(ctx.comm, ctx.seeds, 1, r_plain.as_ref(),
+                             &[n])?;
+    let s = beta_a.scale(-2).add_const(me, 1);
+    let rs = rss::mul(ctx.comm, ctx.seeds, &r, &s)?;
+    Ok(MsbTuple { beta, beta_a, rs })
 }
 
 /// Flat per-element reservoir of MSB correlated material.  All parties
@@ -105,68 +219,28 @@ impl MsbPool {
         Self::default()
     }
 
-    /// Mint `n` more elements (runs the input-independent prefix of
-    /// Algorithm 3: B2A of beta, r-share, one multiplication -- ~5
-    /// rounds, all off the request path).
+    /// Mint `n` more elements into the reservoir (see `mint`).
     pub fn generate(&self, ctx: &Ctx, n: usize) -> Result<()> {
-        let me = ctx.id();
-        let cnt = ctx.seeds.next_cnt();
-        let (ba, bb) = ctx.seeds.rand_bits2(cnt, n);
-        let beta = BitShare { a: ba, b: bb };
-        let beta_a = b2a(ctx, &beta)?;
-
-        let rcnt = ctx.seeds.next_cnt();
-        let r_plain = if me == 1 {
-            let mut s = PrfStream::new(&ctx.seeds.private, rcnt,
-                                       domain::SHARE);
-            let max = 1i64 << ctx.cfg.mask_bits;
-            Some(Tensor::from_vec(&[n], (0..n).map(|_| {
-                ((s.next_u32() as i64 & (max - 1)) + 1) as Elem
-            }).collect()))
-        } else {
-            None
-        };
-        let r = rss::share_input(ctx.comm, ctx.seeds, 1, r_plain.as_ref(),
-                                 &[n])?;
-        let s = beta_a.scale(-2).add_const(me, 1);
-        let rs = rss::mul(ctx.comm, ctx.seeds, &r, &s)?;
-
-        let mut res = self.r.borrow_mut();
-        res.beta_a_bits.push(&beta.a);
-        res.beta_b_bits.push(&beta.b);
-        res.beta_a.0.push(&beta_a.a.data);
-        res.beta_a.1.push(&beta_a.b.data);
-        res.rs.0.push(&rs.a.data);
-        res.rs.1.push(&rs.b.data);
+        let t = mint(ctx, n)?;
+        self.r.borrow_mut().push(&t);
         Ok(())
     }
 
-    /// Draw `n` elements; panics if the reservoir is short (protocol
-    /// desync / undersized preprocessing -- a bug, not a runtime state).
-    /// O(n) per draw for every component (head-indexed queues).
-    pub fn take(&self, n: usize) -> MsbTuple {
+    /// Draw `n` elements; `PreprocError::Exhausted` if the reservoir is
+    /// short (protocol desync / undersized preprocessing) -- the caller
+    /// decides whether that is fatal or a fallback trigger.  O(n) per
+    /// draw for every component (head-indexed queues).
+    pub fn take(&self, n: usize) -> Result<MsbTuple, PreprocError> {
         let mut res = self.r.borrow_mut();
-        assert!(res.beta_a_bits.len() >= n,
-                "MSB pool exhausted: need {n}, have {}",
-                res.beta_a_bits.len());
-        MsbTuple {
-            beta: BitShare {
-                a: res.beta_a_bits.pop_front(n),
-                b: res.beta_b_bits.pop_front(n),
-            },
-            beta_a: Share {
-                a: Tensor::from_vec(&[n], res.beta_a.0.pop_front(n)),
-                b: Tensor::from_vec(&[n], res.beta_a.1.pop_front(n)),
-            },
-            rs: Share {
-                a: Tensor::from_vec(&[n], res.rs.0.pop_front(n)),
-                b: Tensor::from_vec(&[n], res.rs.1.pop_front(n)),
-            },
+        if res.len() < n {
+            return Err(PreprocError::Exhausted { need: n,
+                                                 have: res.len() });
         }
+        Ok(res.pop(n))
     }
 
     pub fn available(&self) -> usize {
-        self.r.borrow().beta_a_bits.len()
+        self.r.borrow().len()
     }
 }
 
@@ -214,7 +288,8 @@ mod tests {
             let xs = deal(&x, &mut rng);
             let pool = MsbPool::new();
             pool.generate(ctx, 200).unwrap();
-            let out = msb_online(ctx, &xs[ctx.id()], pool.take(120)).unwrap();
+            let out = msb_online(ctx, &xs[ctx.id()],
+                                 pool.take(120).unwrap()).unwrap();
             assert_eq!(pool.available(), 80);
             (out.bits, out.sign_a, vals)
         });
@@ -241,7 +316,8 @@ mod tests {
             let pool = MsbPool::new();
             pool.generate(ctx, 32).unwrap();
             ctx.comm.reset_stats();
-            let _ = msb_online(ctx, &xs[ctx.id()], pool.take(32)).unwrap();
+            let _ = msb_online(ctx, &xs[ctx.id()],
+                               pool.take(32).unwrap()).unwrap();
         });
         for (_, st) in &results {
             assert_eq!(st.rounds, 2, "online rounds = {}", st.rounds);
@@ -257,11 +333,11 @@ mod tests {
             pool.generate(ctx, 10).unwrap();
             pool.generate(ctx, 5).unwrap();
             assert_eq!(pool.available(), 15);
-            let t = pool.take(12);
+            let t = pool.take(12).unwrap();
             assert_eq!(t.beta.len(), 12);
             assert_eq!(t.beta_a.len(), 12);
             assert_eq!(pool.available(), 3);
-            let rest = pool.take(3);
+            let rest = pool.take(3).unwrap();
             assert_eq!(rest.beta.len(), 3);
             assert_eq!(pool.available(), 0);
         });
@@ -276,8 +352,8 @@ mod tests {
             let pool = MsbPool::new();
             pool.generate(ctx, 70).unwrap();
             pool.generate(ctx, 70).unwrap();
-            let _burn = pool.take(33); // misalign the word boundary
-            let t = pool.take(90);
+            let _burn = pool.take(33).unwrap(); // misalign the boundary
+            let t = pool.take(90).unwrap();
             (t.beta, t.beta_a)
         });
         let bits: [BitShare; 3] =
@@ -292,9 +368,27 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "exhausted")]
-    fn empty_pool_panics() {
+    fn empty_pool_is_typed_error_not_abort() {
+        // the satellite hardening: exhaustion propagates as PreprocError
+        // instead of asserting the party thread away
         let pool = MsbPool::new();
-        let _ = pool.take(4);
+        let err = pool.take(4).unwrap_err();
+        assert_eq!(err, PreprocError::Exhausted { need: 4, have: 0 });
+        assert!(err.to_string().contains("exhausted"));
+    }
+
+    #[test]
+    fn partial_pool_error_reports_counts() {
+        let results = run3(|ctx| {
+            let pool = MsbPool::new();
+            pool.generate(ctx, 6).unwrap();
+            let err = pool.take(10).unwrap_err();
+            assert_eq!(err, PreprocError::Exhausted { need: 10, have: 6 });
+            // the failed draw must not consume anything
+            assert_eq!(pool.available(), 6);
+            let ok = pool.take(6).unwrap();
+            assert_eq!(ok.len(), 6);
+        });
+        assert_eq!(results.len(), 3);
     }
 }

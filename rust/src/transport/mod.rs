@@ -1,4 +1,5 @@
-//! Party-to-party transport with network simulation and cost accounting.
+//! Party-to-party transport with network simulation, cost accounting,
+//! and tagged logical channels.
 //!
 //! The three parties run as threads (in-process, `Link::Local`) or as
 //! separate processes (`Link::Tcp`).  Every link models the paper's
@@ -7,11 +8,22 @@
 //! each other).  Byte, message, and round counts are recorded per party --
 //! the round counter is advanced explicitly by the protocol layer so the
 //! per-protocol round budgets in DESIGN.md are testable.
+//!
+//! **Logical channels.**  Every frame carries a one-byte channel tag
+//! (`Chan::Online` / `Chan::Offline`), so the serving stack's background
+//! tuple producers can run the preprocessing protocols over the *same*
+//! three-party links concurrently with online inference without their
+//! frames interleaving: a receive bound to one channel demuxes frames for
+//! the other channel into a per-link queue instead of consuming them (see
+//! DESIGN.md §Offline/online split).  `Comm::channel` derives a handle
+//! bound to another channel over the shared links; `Stats` reports both
+//! aggregate and per-channel bytes/messages/rounds.
 
-use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::ring::bits::BitTensor;
@@ -52,6 +64,39 @@ impl From<std::io::Error> for WireError {
     }
 }
 
+/// Logical channel multiplexed over one physical link.  The tag byte is
+/// the first byte of every frame; anything else is `Malformed`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Chan {
+    /// The request critical path: every protocol round of an inference.
+    Online,
+    /// Background preprocessing traffic (tuple producers).
+    Offline,
+}
+
+impl Chan {
+    pub(crate) const COUNT: usize = 2;
+
+    fn tag(self) -> u8 {
+        match self {
+            Chan::Online => 0,
+            Chan::Offline => 1,
+        }
+    }
+
+    fn from_tag(tag: u8) -> Option<Chan> {
+        match tag {
+            0 => Some(Chan::Online),
+            1 => Some(Chan::Offline),
+            _ => None,
+        }
+    }
+
+    fn index(self) -> usize {
+        self.tag() as usize
+    }
+}
+
 /// One-way network model.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct NetConfig {
@@ -87,40 +132,103 @@ impl NetConfig {
     }
 }
 
-/// Communication statistics for one party.
+/// Per-channel communication counters.
 #[derive(Clone, Copy, Debug, Default)]
-pub struct Stats {
+pub struct ChanStats {
     pub bytes_sent: u64,
     pub messages: u64,
     pub rounds: u64,
 }
 
+/// Communication statistics for one party: totals across both logical
+/// channels, plus the per-channel breakdown (the online row is what the
+/// paper's tables report; the offline row is the amortized producer cost).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Stats {
+    pub bytes_sent: u64,
+    pub messages: u64,
+    pub rounds: u64,
+    pub online: ChanStats,
+    pub offline: ChanStats,
+}
+
+impl Stats {
+    pub fn chan(&self, c: Chan) -> ChanStats {
+        match c {
+            Chan::Online => self.online,
+            Chan::Offline => self.offline,
+        }
+    }
+
+    fn chan_mut(&mut self, c: Chan) -> &mut ChanStats {
+        match c {
+            Chan::Online => &mut self.online,
+            Chan::Offline => &mut self.offline,
+        }
+    }
+}
+
 struct Msg {
-    payload: Vec<u8>,
+    /// Tagged frame: channel byte + payload.
+    body: Vec<u8>,
     arrival: Instant,
 }
 
 enum LinkTx {
     Local(Sender<Msg>),
-    Tcp(RefCell<TcpStream>),
+    Tcp(TcpStream),
 }
 
 enum LinkRx {
     Local(Receiver<Msg>),
-    Tcp(RefCell<TcpStream>),
+    Tcp(TcpStream),
 }
 
-/// A party's endpoints to its two neighbours plus accounting.
-pub struct Comm {
-    pub id: usize,
-    tx_next: LinkTx,
-    tx_prev: LinkTx,
-    rx_next: LinkRx,
-    rx_prev: LinkRx,
+struct TxLane {
+    link: LinkTx,
+    busy: Instant,
+}
+
+/// Demux bookkeeping for one receive direction.  `reading` is a reader
+/// token: at most one thread reads the underlying link at a time, and it
+/// does so *without* holding the state lock, so the other channel's
+/// thread can wait on the condvar and be handed its frame the moment the
+/// reader routes it.  The reader therefore pumps frames for both
+/// channels while it waits for its own -- which is what makes the
+/// two-channel protocols deadlock-free even when one channel's thread
+/// races ahead of the other's (see DESIGN.md §Offline/online split).
+struct RxState {
+    /// Frames parked per channel, FIFO.
+    queues: [VecDeque<Vec<u8>>; Chan::COUNT],
+    /// A thread currently owns the link read.
+    reading: bool,
+}
+
+struct RxLane {
+    link: Mutex<LinkRx>,
+    state: Mutex<RxState>,
+    cv: Condvar,
+}
+
+/// The shared state behind every channel handle of one party: both link
+/// directions plus accounting.  Lanes are independently locked so the
+/// online thread and the offline producer serialize per direction, never
+/// against each other's opposite-direction traffic.
+struct Core {
     net: NetConfig,
-    busy_next: Cell<Instant>,
-    busy_prev: Cell<Instant>,
-    stats: RefCell<Stats>,
+    tx: [Mutex<TxLane>; 2],
+    rx: [RxLane; 2],
+    stats: Mutex<Stats>,
+}
+
+/// A party's endpoints to its two neighbours plus accounting, bound to one
+/// logical channel.  `channel()` derives a handle for the other channel
+/// over the same links; handles are `Send + Sync` and cheap to clone via
+/// the shared core.
+pub struct Comm {
+    core: Arc<Core>,
+    pub id: usize,
+    chan: Chan,
 }
 
 /// Which neighbour.
@@ -130,70 +238,145 @@ pub enum Dir {
     Prev,
 }
 
+impl Dir {
+    fn index(self) -> usize {
+        match self {
+            Dir::Next => 0,
+            Dir::Prev => 1,
+        }
+    }
+}
+
 impl Comm {
-    /// Ship one framed message.  A hung-up peer surfaces as
-    /// `WireError::Closed` (local links) or `WireError::Io` (TCP) so the
-    /// party thread retires cleanly instead of panicking mid-protocol --
-    /// the send path is hardened to match the receive path.  Public so
-    /// wire-format tests can craft adversarial frames.
+    /// A handle over the same links bound to `chan`: sends tag frames with
+    /// `chan`, receives demux to `chan`, rounds/bytes account to `chan`.
+    pub fn channel(&self, chan: Chan) -> Comm {
+        Comm { core: Arc::clone(&self.core), id: self.id, chan }
+    }
+
+    /// The logical channel this handle is bound to.
+    pub fn chan(&self) -> Chan {
+        self.chan
+    }
+
+    /// A frame buffer pre-seeded with this handle's channel tag; the
+    /// typed send helpers append their payload directly so the tag costs
+    /// no extra pass over the data.
+    fn tagged_body(&self, payload_cap: usize) -> Vec<u8> {
+        let mut body = Vec::with_capacity(1 + payload_cap);
+        body.push(self.chan.tag());
+        body
+    }
+
+    /// Ship one framed message on this handle's channel.  A hung-up peer
+    /// surfaces as `WireError::Closed` (local links) or `WireError::Io`
+    /// (TCP) so the party thread retires cleanly instead of panicking
+    /// mid-protocol.  Public so wire-format tests can craft adversarial
+    /// payloads (the channel tag is still prepended; see `send_frame` for
+    /// tag-level adversarial frames).
     pub fn send_raw(&self, dir: Dir, payload: Vec<u8>)
                     -> Result<(), WireError> {
+        let mut body = self.tagged_body(payload.len());
+        body.extend_from_slice(&payload);
+        self.ship(dir, body)
+    }
+
+    /// Ship a raw frame *without* prepending the channel tag: the first
+    /// byte of `frame` travels as the tag.  Only for adversarial
+    /// wire-format tests (unknown tags, tagless frames).
+    pub fn send_frame(&self, dir: Dir, frame: Vec<u8>)
+                      -> Result<(), WireError> {
+        self.ship(dir, frame)
+    }
+
+    fn ship(&self, dir: Dir, body: Vec<u8>) -> Result<(), WireError> {
+        let mut lane = self.core.tx[dir.index()].lock().unwrap();
         let now = Instant::now();
-        let busy = match dir {
-            Dir::Next => &self.busy_next,
-            Dir::Prev => &self.busy_prev,
-        };
         // serialization occupies the link; propagation (latency) overlaps
         // across back-to-back messages
-        let start = busy.get().max(now);
-        let sent = start + self.net.serialize(payload.len());
-        busy.set(sent);
-        let arrival = sent + self.net.latency;
+        let start = lane.busy.max(now);
+        let sent = start + self.core.net.serialize(body.len());
+        lane.busy = sent;
+        let arrival = sent + self.core.net.latency;
         {
-            let mut st = self.stats.borrow_mut();
-            st.bytes_sent += payload.len() as u64;
+            let mut st = self.core.stats.lock().unwrap();
+            st.bytes_sent += body.len() as u64;
             st.messages += 1;
+            let c = st.chan_mut(self.chan);
+            c.bytes_sent += body.len() as u64;
+            c.messages += 1;
         }
-        match (dir, &self.tx_next, &self.tx_prev) {
-            (Dir::Next, LinkTx::Local(tx), _) | (Dir::Prev, _, LinkTx::Local(tx)) => {
-                tx.send(Msg { payload, arrival })
-                    .map_err(|_| WireError::Closed)
-            }
-            (Dir::Next, LinkTx::Tcp(s), _) | (Dir::Prev, _, LinkTx::Tcp(s)) => {
-                let mut s = s.borrow_mut();
-                let len = (payload.len() as u64).to_le_bytes();
+        match &mut lane.link {
+            LinkTx::Local(tx) => tx.send(Msg { body, arrival })
+                .map_err(|_| WireError::Closed),
+            LinkTx::Tcp(s) => {
+                let len = (body.len() as u64).to_le_bytes();
                 s.write_all(&len)?;
-                s.write_all(&payload)?;
+                s.write_all(&body)?;
                 Ok(())
             }
         }
     }
 
-    fn recv_raw(&self, dir: Dir) -> Result<Vec<u8>, WireError> {
-        match (dir, &self.rx_next, &self.rx_prev) {
-            (Dir::Next, LinkRx::Local(rx), _) | (Dir::Prev, _, LinkRx::Local(rx)) => {
-                let msg = rx.recv().map_err(|_| WireError::Closed)?;
-                let now = Instant::now();
-                if msg.arrival > now {
-                    std::thread::sleep(msg.arrival - now);
-                }
-                Ok(msg.payload)
+    /// Receive the next frame for this handle's channel.  Frames tagged
+    /// for the *other* channel are parked in the lane's demux queue (they
+    /// belong to the other channel's thread); an unknown tag or a frame
+    /// too short to hold one is `Malformed`.  One thread at a time owns
+    /// the link read (the `reading` token) and it routes every frame it
+    /// pulls -- parked frames are queued *before* waiters are woken, so a
+    /// woken thread either finds its frame or takes over the read.
+    /// Receive one frame body for this handle's channel, tag byte still
+    /// in place at `body[0]` (typed helpers slice past it -- stripping
+    /// in place would memmove the whole payload).
+    fn recv_body(&self, dir: Dir) -> Result<Vec<u8>, WireError> {
+        let lane = &self.core.rx[dir.index()];
+        let mut st = lane.state.lock().unwrap();
+        loop {
+            if let Some(p) = st.queues[self.chan.index()].pop_front() {
+                return Ok(p);
             }
-            (Dir::Next, LinkRx::Tcp(s), _) | (Dir::Prev, _, LinkRx::Tcp(s)) => {
-                let mut s = s.borrow_mut();
-                let mut len = [0u8; 8];
-                s.read_exact(&mut len)?;
-                let n = u64::from_le_bytes(len);
-                if n > MAX_MSG_BYTES {
-                    return Err(WireError::Malformed(format!(
-                        "claimed length {n} exceeds the {MAX_MSG_BYTES}-byte \
-                         cap")));
+            if st.reading {
+                // someone else is on the link; they will queue our frame
+                // (then notify) or relinquish the token
+                st = lane.cv.wait(st).unwrap();
+                continue;
+            }
+            st.reading = true;
+            drop(st);
+            let got = {
+                let mut link = lane.link.lock().unwrap();
+                read_frame(&mut link)
+            };
+            st = lane.state.lock().unwrap();
+            let routed = got.and_then(|body| {
+                if body.is_empty() {
+                    return Err(WireError::Malformed(
+                        "empty frame cannot hold a channel tag".into()));
                 }
-                let mut buf = vec![0u8; n as usize];
-                s.read_exact(&mut buf)?;
-                // latency simulation applies on the sender side only for
-                // local links; real TCP has real latency.
-                Ok(buf)
+                let tag = body[0];
+                let chan = Chan::from_tag(tag).ok_or_else(|| {
+                    WireError::Malformed(format!(
+                        "unknown channel tag {tag:#04x}"))
+                })?;
+                Ok((chan, body))
+            });
+            match routed {
+                Err(e) => {
+                    st.reading = false;
+                    lane.cv.notify_all();
+                    return Err(e);
+                }
+                Ok((chan, body)) if chan == self.chan => {
+                    st.reading = false;
+                    lane.cv.notify_all();
+                    return Ok(body);
+                }
+                Ok((chan, body)) => {
+                    // park for the other channel FIRST, then wake it
+                    st.queues[chan.index()].push_back(body);
+                    st.reading = false;
+                    lane.cv.notify_all();
+                }
             }
         }
     }
@@ -201,15 +384,16 @@ impl Comm {
     // ---- typed helpers --------------------------------------------------
     pub fn send_elems(&self, dir: Dir, data: &[i32])
                       -> Result<(), WireError> {
-        let mut bytes = Vec::with_capacity(4 * data.len());
+        let mut body = self.tagged_body(4 * data.len());
         for v in data {
-            bytes.extend_from_slice(&v.to_le_bytes());
+            body.extend_from_slice(&v.to_le_bytes());
         }
-        self.send_raw(dir, bytes)
+        self.ship(dir, body)
     }
 
     pub fn recv_elems(&self, dir: Dir) -> Result<Vec<i32>, WireError> {
-        let bytes = self.recv_raw(dir)?;
+        let body = self.recv_body(dir)?;
+        let bytes = &body[1..];
         if bytes.len() % 4 != 0 {
             return Err(WireError::Malformed(format!(
                 "ring payload of {} bytes is not a multiple of 4",
@@ -221,20 +405,22 @@ impl Comm {
     }
 
     /// Binary shares travel bit-packed: n bits cost ceil(n/8) bytes (plus
-    /// the 8-byte bit-count header), which is what makes the B-share
-    /// protocols cheap on the wire.  The payload is the `BitTensor` word
-    /// buffer shipped verbatim (truncated to ceil(n/8) bytes) -- no per-bit
-    /// repack loop; the format is bit-identical to the seed's packer.
+    /// the 8-byte bit-count header and the channel tag), which is what
+    /// makes the B-share protocols cheap on the wire.  The payload is the
+    /// `BitTensor` word buffer shipped verbatim (truncated to ceil(n/8)
+    /// bytes) -- no per-bit repack loop; the packed bytes are bit-identical
+    /// to the seed's packer.
     pub fn send_bits(&self, dir: Dir, bits: &BitTensor)
                      -> Result<(), WireError> {
-        let mut bytes = Vec::with_capacity(8 + bits.len().div_ceil(8));
-        bytes.extend_from_slice(&(bits.len() as u64).to_le_bytes());
-        bytes.extend_from_slice(&bits.packed_bytes());
-        self.send_raw(dir, bytes)
+        let mut body = self.tagged_body(8 + bits.len().div_ceil(8));
+        body.extend_from_slice(&(bits.len() as u64).to_le_bytes());
+        body.extend_from_slice(&bits.packed_bytes());
+        self.ship(dir, body)
     }
 
     pub fn recv_bits(&self, dir: Dir) -> Result<BitTensor, WireError> {
-        let bytes = self.recv_raw(dir)?;
+        let body = self.recv_body(dir)?;
+        let bytes = &body[1..];
         if bytes.len() < 8 {
             return Err(WireError::Malformed(format!(
                 "bit message of {} bytes is shorter than its header",
@@ -260,12 +446,12 @@ impl Comm {
     pub fn send_planes(&self, dir: Dir, p: &BitPlanes)
                        -> Result<(), WireError> {
         let nbytes = p.words().len() * 8;
-        let mut bytes = Vec::with_capacity(8 + nbytes);
-        bytes.extend_from_slice(&(p.padded_bits() as u64).to_le_bytes());
+        let mut body = self.tagged_body(8 + nbytes);
+        body.extend_from_slice(&(p.padded_bits() as u64).to_le_bytes());
         for w in p.words() {
-            bytes.extend_from_slice(&w.to_le_bytes());
+            body.extend_from_slice(&w.to_le_bytes());
         }
-        self.send_raw(dir, bytes)
+        self.ship(dir, body)
     }
 
     /// Receive a `planes x len` matrix: the frame is validated as a bit
@@ -284,25 +470,85 @@ impl Comm {
     }
 
     /// Advance the round counter -- called by the protocol layer at each
-    /// communication phase boundary.
+    /// communication phase boundary.  Accounted to this handle's channel.
     pub fn round(&self) {
-        self.stats.borrow_mut().rounds += 1;
+        let mut st = self.core.stats.lock().unwrap();
+        st.rounds += 1;
+        st.chan_mut(self.chan).rounds += 1;
     }
 
     pub fn stats(&self) -> Stats {
-        *self.stats.borrow()
+        *self.core.stats.lock().unwrap()
     }
 
     pub fn reset_stats(&self) {
-        *self.stats.borrow_mut() = Stats::default();
+        *self.core.stats.lock().unwrap() = Stats::default();
     }
 
     pub fn net(&self) -> NetConfig {
-        self.net
+        self.core.net
     }
 }
 
-/// Build the three in-process parties' endpoints for one session.
+/// Pull one raw frame off the link.  Called only by the thread holding
+/// the lane's reader token; the state lock is NOT held, so the other
+/// channel's thread stays responsive on the condvar.
+fn read_frame(link: &mut LinkRx) -> Result<Vec<u8>, WireError> {
+    match link {
+        LinkRx::Local(rx) => {
+            let msg = rx.recv().map_err(|_| WireError::Closed)?;
+            let now = Instant::now();
+            if msg.arrival > now {
+                std::thread::sleep(msg.arrival - now);
+            }
+            Ok(msg.body)
+        }
+        LinkRx::Tcp(s) => {
+            let mut len = [0u8; 8];
+            s.read_exact(&mut len)?;
+            let n = u64::from_le_bytes(len);
+            if n > MAX_MSG_BYTES {
+                return Err(WireError::Malformed(format!(
+                    "claimed length {n} exceeds the {MAX_MSG_BYTES}-byte \
+                     cap")));
+            }
+            let mut buf = vec![0u8; n as usize];
+            s.read_exact(&mut buf)?;
+            // latency simulation applies on the sender side only for
+            // local links; real TCP has real latency.
+            Ok(buf)
+        }
+    }
+}
+
+fn make_comm(id: usize, net: NetConfig,
+             tx_next: LinkTx, tx_prev: LinkTx,
+             rx_next: LinkRx, rx_prev: LinkRx) -> Comm {
+    let now = Instant::now();
+    let lane_tx = |link| Mutex::new(TxLane { link, busy: now });
+    let lane_rx = |link| RxLane {
+        link: Mutex::new(link),
+        state: Mutex::new(RxState {
+            queues: [VecDeque::new(), VecDeque::new()],
+            reading: false,
+        }),
+        cv: Condvar::new(),
+    };
+    Comm {
+        core: Arc::new(Core {
+            net,
+            tx: [lane_tx(tx_next), lane_tx(tx_prev)],
+            rx: [lane_rx(rx_next), lane_rx(rx_prev)],
+            stats: Mutex::new(Stats::default()),
+        }),
+        id,
+        chan: Chan::Online,
+    }
+}
+
+/// Build the three in-process parties' endpoints for one session.  The
+/// returned handles are bound to `Chan::Online`; derive producer handles
+/// with `Comm::channel(Chan::Offline)`.
 pub fn local_trio(net: NetConfig) -> [Comm; 3] {
     // channels[i][j] carries i -> j
     let mut txs: Vec<Vec<Option<Sender<Msg>>>> =
@@ -322,52 +568,110 @@ pub fn local_trio(net: NetConfig) -> [Comm; 3] {
     for i in (0..3).rev() {
         let next = (i + 1) % 3;
         let prev = (i + 2) % 3;
-        out.push(Comm {
-            id: i,
-            tx_next: LinkTx::Local(txs[i][next].take().unwrap()),
-            tx_prev: LinkTx::Local(txs[i][prev].take().unwrap()),
-            rx_next: LinkRx::Local(rxs[next][i].take().unwrap()),
-            rx_prev: LinkRx::Local(rxs[prev][i].take().unwrap()),
-            net,
-            busy_next: Cell::new(Instant::now()),
-            busy_prev: Cell::new(Instant::now()),
-            stats: RefCell::new(Stats::default()),
-        });
+        out.push(make_comm(
+            i, net,
+            LinkTx::Local(txs[i][next].take().unwrap()),
+            LinkTx::Local(txs[i][prev].take().unwrap()),
+            LinkRx::Local(rxs[next][i].take().unwrap()),
+            LinkRx::Local(rxs[prev][i].take().unwrap()),
+        ));
     }
     out.reverse();
     let arr: [Comm; 3] = out.try_into().map_err(|_| ()).unwrap();
     arr
 }
 
+/// Bounded-retry dial policy for TCP session setup: party start order is
+/// no longer fragile (a peer that is not up yet is retried with
+/// exponential backoff), but a peer that never comes up surfaces as
+/// `TimedOut` instead of spinning forever (the first slice of the ROADMAP
+/// "TCP session recovery" item).
+#[derive(Clone, Copy, Debug)]
+pub struct DialPolicy {
+    /// Give up once this much wall time has elapsed.
+    pub deadline: Duration,
+    /// First retry delay; doubles per attempt up to `max_backoff`.
+    pub initial_backoff: Duration,
+    pub max_backoff: Duration,
+}
+
+impl Default for DialPolicy {
+    fn default() -> Self {
+        DialPolicy {
+            deadline: Duration::from_secs(10),
+            initial_backoff: Duration::from_millis(25),
+            max_backoff: Duration::from_millis(400),
+        }
+    }
+}
+
+/// Dial `host:port`, retrying with exponential backoff until the policy's
+/// deadline.  Each attempt is itself bounded by the *remaining* deadline
+/// budget (`connect_timeout`), so a blackholed peer cannot stretch one
+/// attempt past the policy (the OS default connect timeout is minutes).
+/// Returns the last connect error wrapped as `TimedOut` when the deadline
+/// passes.
+pub fn connect_with_retry(host: &str, port: u16, policy: DialPolicy)
+                          -> std::io::Result<TcpStream> {
+    use std::net::ToSocketAddrs;
+    let start = Instant::now();
+    let mut backoff = policy.initial_backoff;
+    let attempt = || -> std::io::Result<TcpStream> {
+        let remaining = policy.deadline.saturating_sub(start.elapsed());
+        if remaining.is_zero() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::TimedOut, "deadline exhausted"));
+        }
+        let addr = (host, port).to_socket_addrs()?.next().ok_or_else(|| {
+            std::io::Error::new(std::io::ErrorKind::InvalidInput,
+                                "address resolved to nothing")
+        })?;
+        TcpStream::connect_timeout(&addr, remaining)
+    };
+    loop {
+        match attempt() {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if start.elapsed() + backoff >= policy.deadline {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::TimedOut,
+                        format!("dialing {host}:{port}: no answer within \
+                                 {:?} (last error: {e})", policy.deadline)));
+                }
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(policy.max_backoff);
+            }
+        }
+    }
+}
+
 /// TCP deployment: party `id` listens for its inbound links and dials its
-/// outbound ones.  `addrs[i]` is the base address of party i; port+0
-/// accepts from next, port+1 accepts from prev.
+/// outbound ones with the default `DialPolicy`.  `addrs[i]` is the base
+/// address of party i; port+0 accepts from next, port+1 accepts from prev.
 pub fn tcp_party(id: usize, addrs: &[String; 3], net: NetConfig)
                  -> std::io::Result<Comm> {
+    tcp_party_with(id, addrs, net, DialPolicy::default())
+}
+
+/// `tcp_party` with an explicit dial-retry policy.
+pub fn tcp_party_with(id: usize, addrs: &[String; 3], net: NetConfig,
+                      dial: DialPolicy) -> std::io::Result<Comm> {
     let next = (id + 1) % 3;
     let prev = (id + 2) % 3;
     let (base_host, base_port) = split_addr(&addrs[id])?;
-    // deterministic connection order avoids deadlock: lower id listens
-    // first on each pairwise link.
-    let connect = |host: &str, port: u16| -> std::io::Result<TcpStream> {
-        loop {
-            match TcpStream::connect((host, port)) {
-                Ok(s) => return Ok(s),
-                Err(_) => std::thread::sleep(Duration::from_millis(50)),
-            }
-        }
-    };
     let accept = |port: u16| -> std::io::Result<TcpStream> {
         let l = TcpListener::bind((base_host.as_str(), port))?;
         Ok(l.accept()?.0)
     };
+    // deterministic connection order avoids deadlock: lower id listens
+    // first on each pairwise link.
     // link to next: lower id accepts
     let (tx_next, rx_next) = if id < next {
         let a = accept(base_port)?;
         (a.try_clone()?, a)
     } else {
         let (h, p) = split_addr(&addrs[next])?;
-        let c = connect(&h, p)?;
+        let c = connect_with_retry(&h, p, dial)?;
         (c.try_clone()?, c)
     };
     let (tx_prev, rx_prev) = if id < prev {
@@ -375,20 +679,12 @@ pub fn tcp_party(id: usize, addrs: &[String; 3], net: NetConfig)
         (a.try_clone()?, a)
     } else {
         let (h, p) = split_addr(&addrs[prev])?;
-        let c = connect(&h, p + 1)?;
+        let c = connect_with_retry(&h, p + 1, dial)?;
         (c.try_clone()?, c)
     };
-    Ok(Comm {
-        id,
-        tx_next: LinkTx::Tcp(RefCell::new(tx_next)),
-        tx_prev: LinkTx::Tcp(RefCell::new(tx_prev)),
-        rx_next: LinkRx::Tcp(RefCell::new(rx_next)),
-        rx_prev: LinkRx::Tcp(RefCell::new(rx_prev)),
-        net,
-        busy_next: Cell::new(Instant::now()),
-        busy_prev: Cell::new(Instant::now()),
-        stats: RefCell::new(Stats::default()),
-    })
+    Ok(make_comm(id, net,
+                 LinkTx::Tcp(tx_next), LinkTx::Tcp(tx_prev),
+                 LinkRx::Tcp(rx_next), LinkRx::Tcp(rx_prev)))
 }
 
 fn split_addr(a: &str) -> std::io::Result<(String, u16)> {
@@ -427,10 +723,13 @@ mod tests {
             assert_eq!(got, vec![prev as i32; 8]);
             c.round();
         });
+        // 32 payload bytes + 1 channel tag
         for s in stats {
-            assert_eq!(s.bytes_sent, 32);
+            assert_eq!(s.bytes_sent, 33);
             assert_eq!(s.messages, 1);
             assert_eq!(s.rounds, 1);
+            assert_eq!(s.online.bytes_sent, 33);
+            assert_eq!(s.offline.bytes_sent, 0);
         }
     }
 
@@ -442,16 +741,17 @@ mod tests {
             let got = c.recv_bits(Dir::Prev).unwrap();
             assert_eq!(got, bits);
         });
-        // 100 bits -> 13 bytes + 8 length header
+        // 100 bits -> 13 bytes + 8 length header + 1 channel tag
         for s in stats {
-            assert_eq!(s.bytes_sent, 21);
+            assert_eq!(s.bytes_sent, 22);
         }
     }
 
     #[test]
-    fn bit_wire_cost_is_ceil_n_over_8_plus_header() {
+    fn bit_wire_cost_is_ceil_n_over_8_plus_framing() {
         // Stats-verified wire format: n bits cost exactly ceil(n/8) + 8
-        // bytes, for lengths straddling byte and word boundaries.
+        // header + 1 tag bytes, for lengths straddling byte and word
+        // boundaries.
         for n in [1usize, 7, 8, 9, 63, 64, 65, 100, 128, 1000] {
             let comms = local_trio(NetConfig::zero());
             let handles: Vec<_> = comms.into_iter().map(|c| {
@@ -466,7 +766,7 @@ mod tests {
             }).collect();
             for h in handles {
                 let s = h.join().unwrap();
-                assert_eq!(s.bytes_sent, (n.div_ceil(8) + 8) as u64,
+                assert_eq!(s.bytes_sent, (n.div_ceil(8) + 9) as u64,
                            "wire bytes for {n} bits");
             }
         }
@@ -592,9 +892,9 @@ mod tests {
                 assert_eq!(&got.plane(p), row);
             }
         });
-        // 4 planes x 2 words x 8 bytes + 8-byte header, per party
+        // 4 planes x 2 words x 8 bytes + 8-byte header + 1 tag, per party
         for s in stats {
-            assert_eq!(s.bytes_sent, (4 * 2 * 8 + 8) as u64);
+            assert_eq!(s.bytes_sent, (4 * 2 * 8 + 9) as u64);
         }
     }
 
@@ -619,5 +919,111 @@ mod tests {
         let results: Vec<_> =
             handles.into_iter().map(|h| h.join().unwrap()).collect();
         assert_eq!(results[1], Some(true));
+    }
+
+    // ---- tagged-channel behaviour --------------------------------------
+
+    #[test]
+    fn channel_handles_split_stats_per_channel() {
+        let stats = run3(NetConfig::zero(), |c| {
+            let off = c.channel(Chan::Offline);
+            assert_eq!(off.chan(), Chan::Offline);
+            c.send_elems(Dir::Next, &[1, 2]).unwrap(); // 8 + 1 bytes
+            off.send_elems(Dir::Next, &[3]).unwrap(); // 4 + 1 bytes
+            let on = c.recv_elems(Dir::Prev).unwrap();
+            let of = off.recv_elems(Dir::Prev).unwrap();
+            assert_eq!(on.len(), 2);
+            assert_eq!(of, vec![3]);
+            c.round();
+            off.round();
+            off.round();
+        });
+        for s in stats {
+            assert_eq!(s.online.bytes_sent, 9);
+            assert_eq!(s.offline.bytes_sent, 5);
+            assert_eq!(s.bytes_sent, 14);
+            assert_eq!(s.online.messages, 1);
+            assert_eq!(s.offline.messages, 1);
+            assert_eq!(s.online.rounds, 1);
+            assert_eq!(s.offline.rounds, 2);
+            assert_eq!(s.rounds, 3);
+        }
+    }
+
+    #[test]
+    fn demux_parks_other_channels_frames() {
+        // an offline frame sent *first* must not satisfy an online recv;
+        // it is parked and later consumed by the offline handle, in FIFO
+        // order per channel
+        let comms = local_trio(NetConfig::zero());
+        let handles: Vec<_> = comms.into_iter().map(|c| {
+            thread::spawn(move || {
+                let off = c.channel(Chan::Offline);
+                let prev = ((c.id + 2) % 3) as i32;
+                off.send_elems(Dir::Next, &[100 + c.id as i32]).unwrap();
+                c.send_elems(Dir::Next, &[c.id as i32]).unwrap();
+                off.send_elems(Dir::Next, &[200 + c.id as i32]).unwrap();
+                assert_eq!(c.recv_elems(Dir::Prev).unwrap(), vec![prev]);
+                assert_eq!(off.recv_elems(Dir::Prev).unwrap(),
+                           vec![100 + prev]);
+                assert_eq!(off.recv_elems(Dir::Prev).unwrap(),
+                           vec![200 + prev]);
+            })
+        }).collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn concurrent_channel_threads_share_one_link() {
+        // two threads per party -- one per channel -- exchange disjoint
+        // streams over the same links concurrently; each stream arrives
+        // intact on its own channel
+        let comms = local_trio(NetConfig::zero());
+        let handles: Vec<_> = comms.into_iter().map(|c| {
+            thread::spawn(move || {
+                let off = c.channel(Chan::Offline);
+                let online = thread::spawn(move || {
+                    for i in 0..50i32 {
+                        c.send_elems(Dir::Next, &[i]).unwrap();
+                        let got = c.recv_elems(Dir::Prev).unwrap();
+                        assert_eq!(got, vec![i]);
+                    }
+                });
+                for i in 0..50i32 {
+                    off.send_elems(Dir::Next, &[1000 + i]).unwrap();
+                    let got = off.recv_elems(Dir::Prev).unwrap();
+                    assert_eq!(got, vec![1000 + i]);
+                }
+                online.join().unwrap();
+            })
+        }).collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn dial_retry_gives_up_at_the_deadline() {
+        // a port with nothing listening: connect_with_retry must retry
+        // with backoff, then surface TimedOut once the deadline passes
+        let port = {
+            let l = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+            l.local_addr().unwrap().port()
+            // listener dropped: the port now refuses connections
+        };
+        let policy = DialPolicy {
+            deadline: Duration::from_millis(120),
+            initial_backoff: Duration::from_millis(20),
+            max_backoff: Duration::from_millis(40),
+        };
+        let t0 = Instant::now();
+        let err = connect_with_retry("127.0.0.1", port, policy).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::TimedOut, "{err}");
+        // it did retry (at least one backoff sleep), and did not spin
+        // forever past the deadline
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+        assert!(t0.elapsed() < Duration::from_secs(5));
     }
 }

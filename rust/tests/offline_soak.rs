@@ -1,0 +1,74 @@
+//! Offline-soak: many small batches against a deliberately low-watermark
+//! bank.  The coordinator's refill pump must keep the background
+//! producers ahead of the online stream -- zero request-path generation
+//! (`underflow_calls == 0`), every response delivered, and the bank's
+//! storage bounded by its capacity throughout.
+//!
+//! The fast entry runs in the default suite; the `--ignored` entry is the
+//! CI soak job (`CBNN_SOAK_BATCHES` scales it).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use cbnn::coordinator::{BatchPolicy, Coordinator, Service};
+use cbnn::engine::msb_demand_for;
+use cbnn::engine::session::SessionConfig;
+use cbnn::offline::BankConfig;
+use cbnn::testutil::threeparty::every_op_model;
+use cbnn::testutil::Rng;
+
+fn soak(batches: usize) {
+    let model = Arc::new(every_op_model());
+    // per-request demand (the batcher runs batch=1): Sign 32 + Pool 8 +
+    // Relu 3 elements on the every-Op model
+    let unit = msb_demand_for(&model, 1);
+    assert_eq!(unit, 43);
+    // low-watermark bank: roughly one request of headroom triggers the
+    // pump, chunks are half a request, so refill/drain churn constantly
+    let cfg = SessionConfig::new("artifacts/hlo").with_bank(BankConfig {
+        low: unit,
+        high: 2 * unit,
+        chunk: unit.div_ceil(2),
+        capacity: 3 * unit,
+    });
+    let svc = Service::start(Arc::clone(&model), cfg).expect("setup");
+    let bank0 = svc.bank_handle(0);
+    let capacity = bank0.config().capacity;
+    let coord = Coordinator::start(svc, BatchPolicy {
+        max_batch: 1,
+        max_wait: Duration::ZERO,
+        prefetch: 2,
+    });
+    let mut rng = Rng::new(33);
+    for i in 0..batches {
+        let img = rng.tensor_small(&[1, 36], 15);
+        let resp = coord.submit(img).recv().expect("response");
+        assert_eq!(resp.logits.len(), 3, "batch {i}");
+        assert!(bank0.level() <= capacity, "batch {i}: bank overflowed");
+    }
+    let m = coord.preproc_metrics();
+    let (hist, thr) = coord.finish();
+    assert_eq!(thr.requests, batches as u64);
+    assert_eq!(hist.count(), batches as u64);
+    assert_eq!(m.underflow_calls, 0,
+               "request path minted inline under soak: {m:?}");
+    assert_eq!(m.fallback_elems, 0);
+    assert_eq!(m.drawn, (unit * batches) as u64);
+    assert!(m.max_level as usize <= capacity, "{m:?}");
+}
+
+#[test]
+fn soak_small_batches_low_watermark() {
+    soak(12);
+}
+
+#[test]
+#[ignore = "CI soak job: run with `cargo test --test offline_soak -- \
+            --ignored` (CBNN_SOAK_BATCHES scales the run)"]
+fn soak_many_small_batches() {
+    let batches = std::env::var("CBNN_SOAK_BATCHES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(300);
+    soak(batches);
+}

@@ -149,9 +149,9 @@ fn check_msb_online(seed: u64, n: usize) {
         let pool = MsbPool::new();
         pool.generate(ctx, n / 2 + 3).unwrap();
         pool.generate(ctx, n).unwrap();
-        let _burn = pool.take(3); // misalign the head
+        let _burn = pool.take(3).unwrap(); // misalign the head
         let out = cbnn::protocols::preproc::msb_online(
-            ctx, &shares[ctx.id()], pool.take(n)).unwrap();
+            ctx, &shares[ctx.id()], pool.take(n).unwrap()).unwrap();
         (out.bits, vals)
     });
     let vals = results[0].0 .1.clone();
@@ -161,6 +161,214 @@ fn check_msb_online(seed: u64, n: usize) {
     for (i, &v) in vals.iter().enumerate() {
         assert_eq!(got[i], ring::msb(v),
                    "online msb({v}) at n={n} seed={seed}");
+    }
+}
+
+// ---- offline TupleBank properties ---------------------------------------
+
+mod bank {
+    use std::sync::mpsc::channel;
+    use std::thread;
+
+    use cbnn::engine::{infer_batch_pooled, msb_demand, share_model,
+                       EngineOptions};
+    use cbnn::metrics::PreprocMetrics;
+    use cbnn::offline::{offline_seeds, run_producer, BankConfig,
+                        TupleBank, TupleSource};
+    use cbnn::protocols::linear::NativeBackend;
+    use cbnn::protocols::preproc::MsbPool;
+    use cbnn::protocols::Ctx;
+    use cbnn::ring::Tensor;
+    use cbnn::testutil::threeparty::{every_op_model, run3_seeded};
+    use cbnn::testutil::Rng;
+    use cbnn::transport::Chan;
+
+    const BATCH: usize = 2;
+
+    fn inputs_for(id: usize) -> Vec<Tensor> {
+        if id == 0 {
+            let mut rng = Rng::new(5);
+            (0..BATCH).map(|_| rng.tensor_small(&[1, 36], 15)).collect()
+        } else {
+            vec![]
+        }
+    }
+
+    /// Serve one batched inference drawing from a producer-fed bank: the
+    /// producer mints `schedule`-sized chunks over the offline channel
+    /// *concurrently* with the online walk (draws block on the condvar
+    /// until delivery).  Returns (logits, per-party metrics).
+    fn bank_arm(seed: u64, schedule: &[usize], credit: &[usize])
+                -> Vec<(Vec<Vec<i32>>, PreprocMetrics)> {
+        run3_seeded(seed, |ctx| {
+            let model = every_op_model();
+            let shared = share_model(ctx, &model, true).unwrap();
+            let demand = msb_demand(&shared, BATCH);
+            let chunk_max = schedule.iter().copied().max().unwrap_or(1);
+            let bank = TupleBank::new(BankConfig {
+                low: 0,
+                high: demand,
+                chunk: chunk_max,
+                capacity: demand + chunk_max,
+            });
+            let (tx, rx) = channel();
+            for &c in schedule {
+                tx.send(c).unwrap();
+            }
+            for &c in credit {
+                bank.credit(c);
+            }
+            drop(tx);
+            let off_comm = ctx.comm.channel(Chan::Offline);
+            let off_seeds = offline_seeds(seed, ctx.id());
+            let proto = ctx.cfg;
+            let bank_ref = &bank;
+            let logits = thread::scope(|s| {
+                s.spawn(move || {
+                    let octx = Ctx::with_cfg(&off_comm, &off_seeds, proto);
+                    run_producer(&octx, bank_ref, rx).unwrap();
+                });
+                infer_batch_pooled(ctx, &shared, &NativeBackend,
+                                   EngineOptions::default(),
+                                   &inputs_for(ctx.id()), BATCH,
+                                   &TupleSource::Bank(&bank))
+                    .unwrap().logits
+            });
+            (logits, bank.metrics())
+        }).into_iter().map(|(r, _)| r).collect()
+    }
+
+    #[test]
+    fn prop_bank_logits_bit_identical_to_inline_pool() {
+        // concurrent refill/drain equivalence: a bank fed by background
+        // producers over the offline channel must compute *bit-identical*
+        // logits to an MsbPool minted inline with the same chunk schedule
+        // -- possible because producer PRF streams are domain-separated
+        // (offline_seeds), so the online trajectory is untouched.
+        let seed = 4711u64;
+        let schedule = [40usize, 30, 16]; // sums to the demand of 86
+        let banked = bank_arm(seed, &schedule, &schedule);
+        let pooled = run3_seeded(seed, |ctx| {
+            let model = every_op_model();
+            let shared = share_model(ctx, &model, true).unwrap();
+            // mint inline, but from the same salted seed domain and
+            // chunk schedule the producers would use
+            let off_seeds = offline_seeds(seed, ctx.id());
+            let octx = Ctx::with_cfg(ctx.comm, &off_seeds, ctx.cfg);
+            let pool = MsbPool::new();
+            for &c in &schedule {
+                pool.generate(&octx, c).unwrap();
+            }
+            infer_batch_pooled(ctx, &shared, &NativeBackend,
+                               EngineOptions::default(),
+                               &inputs_for(ctx.id()), BATCH,
+                               &TupleSource::Pool(&pool))
+                .unwrap().logits
+        });
+        assert!(!banked[0].0.is_empty());
+        assert_eq!(banked[0].0, pooled[0].0,
+                   "bank-fed and inline-pool logits diverged");
+        // non-owners learn nothing either way
+        for p in 1..3 {
+            assert!(banked[p].0.is_empty() && pooled[p].0.is_empty());
+        }
+        // the whole demand was served from the bank, nothing fell back
+        for (p, (_, m)) in banked.iter().enumerate() {
+            assert_eq!(m.underflow_calls, 0, "party {p}: {m:?}");
+            assert_eq!(m.drawn, 86, "party {p}: {m:?}");
+            assert_eq!(m.minted, 86, "party {p}: {m:?}");
+        }
+    }
+
+    #[test]
+    fn prop_bank_underflow_falls_back_and_counts() {
+        // credit only the first MSB invocation's worth: the Sign draw is
+        // pooled, the PoolBits and Relu draws under-run the deterministic
+        // credit and fall back to synchronous generation -- identically
+        // on every party, with correct results and counted underflows
+        let seed = 2024u64;
+        let banked = bank_arm(seed, &[64], &[64]);
+        let inline = run3_seeded(seed, |ctx| {
+            let model = every_op_model();
+            let shared = share_model(ctx, &model, true).unwrap();
+            infer_batch_pooled(ctx, &shared, &NativeBackend,
+                               EngineOptions::default(),
+                               &inputs_for(ctx.id()), BATCH,
+                               &TupleSource::Inline)
+                .unwrap().logits
+        });
+        for (p, (_, m)) in banked.iter().enumerate() {
+            assert_eq!(m.drawn, 64, "party {p}: {m:?}");
+            assert_eq!(m.underflow_calls, 2, "party {p}: {m:?}");
+            assert_eq!(m.fallback_elems, 16 + 6, "party {p}: {m:?}");
+        }
+        // fallback arm computes the same function (the final Relu's
+        // truncation draws different masks, so ±1 LSB on the logits)
+        for (br, ir) in banked[0].0.iter().zip(&inline[0].0) {
+            for (b, i) in br.iter().zip(ir) {
+                assert!((b - i).abs() <= 1,
+                        "bank {b} vs inline {i} beyond trunc tolerance");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_bank_watermark_invariants_under_churn() {
+        // a protocol-free bank: deliveries race draws across threads; the
+        // stored level must never exceed capacity, credit accounting must
+        // refuse over-draws, and close() must drain cleanly
+        use cbnn::protocols::preproc::MsbTuple;
+        use cbnn::rss::{BitShare, Share};
+        use std::sync::Arc;
+
+        fn tup(n: usize) -> MsbTuple {
+            MsbTuple {
+                beta: BitShare::zeros(n),
+                beta_a: Share { a: Tensor::zeros(&[n]),
+                                b: Tensor::zeros(&[n]) },
+                rs: Share { a: Tensor::zeros(&[n]),
+                            b: Tensor::zeros(&[n]) },
+            }
+        }
+
+        let cfg = BankConfig { low: 8, high: 16, chunk: 8, capacity: 24 };
+        let bank = Arc::new(TupleBank::new(cfg));
+        bank.credit(25 * 8);
+        let feeder = {
+            let b = Arc::clone(&bank);
+            thread::spawn(move || {
+                for _ in 0..25 {
+                    b.deliver(tup(8)); // 200 elems through a 24-cap bank
+                }
+            })
+        };
+        let mut drawn = 0usize;
+        while drawn < 25 * 8 {
+            let n = 8.min(25 * 8 - drawn);
+            assert!(bank.try_reserve(n), "credit must cover {n}");
+            let t = bank.take(n).unwrap();
+            assert_eq!(t.len(), n);
+            drawn += n;
+            assert!(bank.level() <= cfg.capacity,
+                    "level {} exceeded capacity", bank.level());
+        }
+        feeder.join().unwrap();
+        let m = bank.metrics();
+        assert_eq!(m.minted, 200);
+        assert_eq!(m.drawn, 200);
+        assert!(m.max_level as usize <= cfg.capacity, "{m:?}");
+        // all credit consumed: the next reserve is a counted underflow
+        assert!(!bank.try_reserve(1));
+        assert_eq!(bank.metrics().underflow_calls, 1);
+        // close drains: blocked draws err instead of hanging
+        bank.credit(8);
+        assert!(bank.try_reserve(8));
+        let waiter = {
+            let b = Arc::clone(&bank);
+            thread::spawn(move || b.take(8))
+        };
+        bank.close();
+        assert!(waiter.join().unwrap().is_err());
     }
 }
 

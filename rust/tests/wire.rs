@@ -8,7 +8,7 @@ use std::thread;
 use cbnn::ring::bits::BitTensor;
 use cbnn::ring::planes::BitPlanes;
 use cbnn::testutil::Rng;
-use cbnn::transport::{local_trio, Comm, Dir, NetConfig, WireError,
+use cbnn::transport::{local_trio, Chan, Comm, Dir, NetConfig, WireError,
                       MAX_MSG_BYTES};
 
 /// Run a crafting closure on P0 and a checking closure on P1 (P2 idles).
@@ -193,6 +193,97 @@ fn planes_frame_with_wrong_geometry_is_malformed() {
         assert!(matches!(err, WireError::Malformed(_)),
                 "{planes}x{len}: {err:?}");
     }
+}
+
+// ---- tagged channel frames ----------------------------------------------
+
+#[test]
+fn unknown_channel_tag_is_malformed() {
+    // the tag byte is attacker-controlled like everything else: a frame
+    // tagged outside {online, offline} must be Malformed, not mis-routed
+    for tag in [2u8, 7, 0x80, 0xFF] {
+        let err = craft_and_check(
+            move |c| {
+                let mut frame = vec![tag];
+                frame.extend_from_slice(&5u64.to_le_bytes());
+                frame.push(0x1F);
+                c.send_frame(Dir::Next, frame).unwrap();
+            },
+            |c| c.recv_bits(Dir::Prev).unwrap_err(),
+        );
+        assert!(matches!(err, WireError::Malformed(_)), "tag {tag}: {err:?}");
+    }
+}
+
+#[test]
+fn frame_too_short_for_its_tag_is_malformed() {
+    // tag/length mismatch: a zero-length frame cannot even hold the
+    // channel tag the header format promises
+    let err = craft_and_check(
+        |c| c.send_frame(Dir::Next, vec![]).unwrap(),
+        |c| c.recv_elems(Dir::Prev).unwrap_err(),
+    );
+    assert!(matches!(err, WireError::Malformed(_)), "{err:?}");
+    // a tag-only frame parses as an empty payload: fine for the elems
+    // codec (zero elements), Malformed for the bit codec (no header)
+    let got = craft_and_check(
+        |c| c.send_frame(Dir::Next, vec![0u8]).unwrap(),
+        |c| c.recv_elems(Dir::Prev).unwrap(),
+    );
+    assert!(got.is_empty());
+    let err = craft_and_check(
+        |c| c.send_frame(Dir::Next, vec![0u8]).unwrap(),
+        |c| c.recv_bits(Dir::Prev).unwrap_err(),
+    );
+    assert!(matches!(err, WireError::Malformed(_)), "{err:?}");
+}
+
+#[test]
+fn offline_frame_during_pending_online_recv_is_parked_not_consumed() {
+    // the checker's online recv is already pending when the offline
+    // frame lands: the demux must park it for the offline handle and
+    // keep waiting for the online frame
+    let (online, offline) = craft_and_check(
+        |c| {
+            let off = c.channel(Chan::Offline);
+            off.send_bits(Dir::Next, &BitTensor::ones(9)).unwrap();
+            // give the pending online recv a chance to be the thread
+            // that reads (and must park) the offline frame
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            c.send_bits(Dir::Next, &BitTensor::zeros(5)).unwrap();
+        },
+        |c| {
+            let online = c.recv_bits(Dir::Prev).unwrap();
+            let offline = c.channel(Chan::Offline)
+                .recv_bits(Dir::Prev).unwrap();
+            (online, offline)
+        },
+    );
+    assert_eq!(online, BitTensor::zeros(5));
+    assert_eq!(offline, BitTensor::ones(9));
+}
+
+#[test]
+fn online_frames_park_symmetrically_for_offline_recv() {
+    let (offline, online1, online2) = craft_and_check(
+        |c| {
+            c.send_elems(Dir::Next, &[1]).unwrap();
+            c.send_elems(Dir::Next, &[2]).unwrap();
+            c.channel(Chan::Offline).send_elems(Dir::Next, &[3]).unwrap();
+        },
+        |c| {
+            // the offline recv must skip over (and park, in order) both
+            // online frames
+            let off = c.channel(Chan::Offline).recv_elems(Dir::Prev)
+                .unwrap();
+            (off,
+             c.recv_elems(Dir::Prev).unwrap(),
+             c.recv_elems(Dir::Prev).unwrap())
+        },
+    );
+    assert_eq!(offline, vec![3]);
+    assert_eq!(online1, vec![1]);
+    assert_eq!(online2, vec![2]);
 }
 
 #[test]
