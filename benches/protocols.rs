@@ -30,7 +30,7 @@ where
     }).collect();
     let stats: Vec<Stats> = handles.into_iter().map(|h| h.join().unwrap())
         .collect();
-    (t0.elapsed().as_secs_f64(), [stats[0], stats[1], stats[2]])
+    (t0.elapsed().as_secs_f64(), stats.try_into().expect("three parties"))
 }
 
 macro_rules! bench_proto {

@@ -1,17 +1,32 @@
 //! Minimal command-line parsing (clap is not in the offline crate set).
 //!
-//! Supports `subcommand --flag value --bool-flag positional` style:
+//! Supports `subcommand --flag value --bool-flag positional` style, with
+//! repeatable flags (every occurrence is kept; `get` returns the last):
 //!
+//! ```text
 //!   cbnn infer --model mnistnet3 --net wan --batch 8
-//!   cbnn serve --model cifarnet2 --backend pjrt-pallas
+//!   cbnn serve --model mnistnet1 --model tiny=path/to/tiny.manifest.json
 //!   cbnn bench --table 1
+//! ```
 
 use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 
+/// Every flag the `serve` subcommand accepts.  The single source of
+/// truth for the usage string and for the OPERATIONS.md coverage check
+/// (`rust/tests/docs.rs`): a flag added here without documentation
+/// fails CI.
+pub const SERVE_FLAGS: &[&str] = &[
+    "model", "artifacts", "net", "backend", "batch", "requests",
+    "prefetch", "bank-low", "bank-high", "bank-chunk", "bank-capacity",
+];
+
+/// Parsed argv: one optional subcommand, `--flag [value]` pairs (a flag
+/// may repeat -- all values are kept in order), and positional tokens.
 #[derive(Debug, Default)]
 pub struct Args {
     pub subcommand: Option<String>,
-    pub flags: BTreeMap<String, String>,
+    flags: BTreeMap<String, Vec<String>>,
     pub positional: Vec<String>,
 }
 
@@ -26,13 +41,13 @@ impl Args {
                     return Err("bare '--' not supported".into());
                 }
                 if let Some((k, v)) = name.split_once('=') {
-                    out.flags.insert(k.to_string(), v.to_string());
+                    out.push_flag(k, v.to_string());
                 } else if iter.peek().map(|n| !n.starts_with("--"))
                     .unwrap_or(false) {
                     let v = iter.next().unwrap();
-                    out.flags.insert(name.to_string(), v);
+                    out.push_flag(name, v);
                 } else {
-                    out.flags.insert(name.to_string(), "true".to_string());
+                    out.push_flag(name, "true".to_string());
                 }
             } else if out.subcommand.is_none() {
                 out.subcommand = Some(tok);
@@ -43,12 +58,26 @@ impl Args {
         Ok(out)
     }
 
+    fn push_flag(&mut self, key: &str, value: String) {
+        self.flags.entry(key.to_string()).or_default().push(value);
+    }
+
     pub fn from_env() -> Result<Args, String> {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// The last occurrence of `--key` (the usual single-value accessor;
+    /// last-wins matches common CLI conventions).
     pub fn get(&self, key: &str) -> Option<&str> {
-        self.flags.get(key).map(String::as_str)
+        self.flags.get(key)
+            .and_then(|v| v.last())
+            .map(String::as_str)
+    }
+
+    /// Every occurrence of `--key`, in argv order (repeatable flags
+    /// like `serve --model`).
+    pub fn get_all(&self, key: &str) -> &[String] {
+        self.flags.get(key).map(Vec::as_slice).unwrap_or(&[])
     }
 
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
@@ -128,6 +157,47 @@ pub fn parse_bank(args: &Args)
     Ok(Some(cfg))
 }
 
+/// Resolve the repeatable `--model` flag into `(name, manifest path)`
+/// pairs, in flag order (flag order is registry slot order).  Each
+/// occurrence is either
+///
+/// * a bare model name `NAME` -- resolved to
+///   `<artifacts>/models/NAME.manifest.json`, or
+/// * `NAME=PATH` -- an explicit manifest path served under alias `NAME`
+///   (multi-model serving; see OPERATIONS.md).
+///
+/// No `--model` flag defaults to the single model `default_model`.
+/// Name uniqueness is *not* checked here -- the `ModelRegistry` owns
+/// that rule and reports duplicates with a typed error.
+pub fn parse_models(args: &Args, artifacts: &Path, default_model: &str)
+                    -> Result<Vec<(String, PathBuf)>, String> {
+    let from_name = |name: &str| {
+        artifacts.join("models").join(format!("{name}.manifest.json"))
+    };
+    let given = args.get_all("model");
+    if given.is_empty() {
+        return Ok(vec![(default_model.to_string(),
+                        from_name(default_model))]);
+    }
+    let mut out = Vec::with_capacity(given.len());
+    for spec in given {
+        let (name, path) = match spec.split_once('=') {
+            Some((n, p)) => (n, PathBuf::from(p)),
+            None => (spec.as_str(), from_name(spec)),
+        };
+        if name.is_empty() {
+            return Err(format!(
+                "--model '{spec}': model name must be non-empty"));
+        }
+        if path.as_os_str().is_empty() {
+            return Err(format!(
+                "--model '{spec}': manifest path must be non-empty"));
+        }
+        out.push((name.to_string(), path));
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -148,6 +218,47 @@ mod tests {
         // a flag immediately followed by a non-flag token consumes it
         let b = parse(&["x", "--flag", "value"]);
         assert_eq!(b.get("flag"), Some("value"));
+    }
+
+    #[test]
+    fn repeated_flags_keep_every_occurrence_in_order() {
+        let a = parse(&["serve", "--model", "a", "--batch", "4",
+                        "--model=b=path/b.json", "--model", "c"]);
+        assert_eq!(a.get_all("model"),
+                   &["a".to_string(), "b=path/b.json".into(), "c".into()]);
+        // single-value accessors see the last occurrence
+        assert_eq!(a.get("model"), Some("c"));
+        assert_eq!(a.get_all("batch"), &["4".to_string()]);
+        assert!(a.get_all("missing").is_empty());
+    }
+
+    #[test]
+    fn model_specs_resolve_names_and_paths() {
+        let art = Path::new("arts");
+        // default when no flag is given
+        let specs = parse_models(&parse(&["serve"]), art, "mnistnet1")
+            .unwrap();
+        assert_eq!(specs.len(), 1);
+        assert_eq!(specs[0].0, "mnistnet1");
+        assert_eq!(specs[0].1,
+                   Path::new("arts/models/mnistnet1.manifest.json"));
+        // bare names and name=path aliases, in flag order
+        let specs = parse_models(
+            &parse(&["serve", "--model", "mnistnet3",
+                     "--model", "tiny=custom/tiny.json"]),
+            art, "mnistnet1").unwrap();
+        assert_eq!(specs[0].0, "mnistnet3");
+        assert_eq!(specs[0].1,
+                   Path::new("arts/models/mnistnet3.manifest.json"));
+        assert_eq!(specs[1], ("tiny".to_string(),
+                              PathBuf::from("custom/tiny.json")));
+        // malformed occurrences are rejected with the offending spec
+        for bad in ["=path.json", "name="] {
+            let err = parse_models(
+                &parse(&["serve", "--model", bad]), art, "m")
+                .unwrap_err();
+            assert!(err.contains(bad), "{err}");
+        }
     }
 
     #[test]

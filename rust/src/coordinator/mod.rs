@@ -11,7 +11,7 @@
 //!
 //! **Offline/online split.**  Each party thread spawns a background tuple
 //! producer that mints MSB correlated material over the tagged
-//! `Chan::Offline` transport channel into a watermark-managed
+//! per-model offline transport lane into a watermark-managed
 //! `offline::TupleBank`.  `Service::start` pre-fills every bank to the
 //! high watermark before serving; the refill pump (`top_up_to`, driven by
 //! the batcher's `BatchPolicy::prefetch` knob) broadcasts chunk-sized
@@ -21,6 +21,17 @@
 //! pooled-vs-fallback decision -- with a warm bank, a request performs
 //! *zero* synchronous mints on its critical path (asserted by
 //! `PreprocMetrics::underflow_calls == 0`).
+//!
+//! **Multi-model serving.**  A [`ModelRegistry`] hosts N `Service`s over
+//! *one* process's three links: every model gets a channel-id slot
+//! (`ChanId::online(slot)` / `ChanId::offline(slot)`), its own
+//! model-scoped PRF seed domain (`engine::session::model_seed`, so no
+//! two lanes ever share counters), its own auto-sized `TupleBank`, and
+//! its own producer lane in the background minting pool.  Lanes demux
+//! per frame at the transport layer, so interleaved batches for
+//! different models compute exactly what their single-model sessions
+//! would -- bit-identically (asserted by `rust/tests/multimodel.rs`).
+//! See DESIGN.md §Multi-model multiplexing.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -29,10 +40,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::engine::session::SessionConfig;
+use crate::engine::session::{model_seed, SessionConfig};
 use crate::engine::{infer_batch_pooled, msb_demand_for, share_model,
                     SharedModel};
-use crate::metrics::{Histogram, PreprocMetrics, Throughput};
+use crate::metrics::{Histogram, ModelRollup, PreprocMetrics, Throughput};
 use crate::nn::Model;
 use crate::offline::{offline_seeds, run_producer, BankConfig, TupleBank,
                      TupleSource};
@@ -40,7 +51,7 @@ use crate::prf::PartySeeds;
 use crate::protocols::Ctx;
 use crate::ring::Tensor;
 use crate::runtime::make_backend;
-use crate::transport::{local_trio, Chan, Stats};
+use crate::transport::{local_trio, ChanId, Comm, Stats};
 
 enum Job {
     Infer { inputs: Vec<Tensor>, batch: usize },
@@ -60,7 +71,18 @@ struct Sched {
     dispatched: usize,
 }
 
-/// A persistent three-party inference service for one model.
+/// A persistent three-party inference service for one model: pinned
+/// party threads, a shared secret-shared model, per-party `TupleBank`s
+/// kept warm by background producers, and a broadcast job queue whose
+/// order every party observes identically (the determinism the bank's
+/// credit accounting relies on).
+///
+/// A service either owns its own links (`Service::start`) or shares one
+/// process's links with other models (`Service::start_on`, used by
+/// [`ModelRegistry`]): its online protocol traffic runs on
+/// `ChanId::online(slot)`, its producers on `ChanId::offline(slot)`,
+/// and its PRF streams live in the model-scoped seed domain
+/// `model_seed(session_seed, slot)`.
 pub struct Service {
     sched: Mutex<Sched>,
     logits_rx: Receiver<Result<Vec<Vec<i32>>>>,
@@ -69,26 +91,66 @@ pub struct Service {
     bank_cfg: BankConfig,
     preprocess: bool,
     model: Arc<Model>,
+    /// The channel-id model slot this service's lanes are bound to.
+    pub slot: u8,
     pub model_name: String,
     pub setup_time: Duration,
 }
 
 impl Service {
-    /// Spin up the party threads, share the model, warm the PJRT caches,
-    /// and pre-fill the tuple banks to the high watermark.
+    /// Spin up the party threads over fresh in-process links, share the
+    /// model, warm the PJRT caches, and pre-fill the tuple banks to the
+    /// high watermark.
     pub fn start(model: Arc<Model>, cfg: SessionConfig) -> Result<Service> {
+        Service::start_at(model, cfg, 0)
+    }
+
+    /// `start` pinned to channel-id model slot `slot` (fresh links).
+    /// The single-model reference arm for multi-model tests: a service
+    /// started at slot s standalone runs the identical seed domain and
+    /// lane ids as slot s of a registry, so logits are bit-comparable.
+    pub fn start_at(model: Arc<Model>, cfg: SessionConfig, slot: u8)
+                    -> Result<Service> {
+        let comms = local_trio(cfg.net);
+        Service::start_on(model, cfg, comms, slot)
+    }
+
+    /// Spin up this model's party threads over *externally provided*
+    /// links -- the multi-model entry point.  `comms` are the three
+    /// parties' handles of one shared link trio (any lane binding); the
+    /// service derives -- and thereby registers, before any of its
+    /// threads spawn -- its own `ChanId::online(slot)` /
+    /// `ChanId::offline(slot)` lane pair, so its frames never
+    /// interleave with another model's.  All PRF streams (online and
+    /// producer) are drawn from the model-scoped seed domain
+    /// `model_seed(cfg.session_seed, slot)`.
+    pub fn start_on(model: Arc<Model>, cfg: SessionConfig,
+                    comms: [Comm; 3], slot: u8) -> Result<Service> {
         let bank_cfg = cfg.bank.unwrap_or_else(|| {
             BankConfig::auto(msb_demand_for(&model, cfg.max_batch.max(1)))
         });
         bank_cfg.validate().map_err(|e| anyhow!("bank config: {e}"))?;
-        let comms = local_trio(cfg.net);
+        let seed = model_seed(cfg.session_seed, slot);
+        // derive (= register) the lanes on every party BEFORE spawning
+        // anything: a peer's first frame for this slot must find the id
+        // registered, or the demux would reject it as malformed.  The
+        // offline lane is derived only when producers will actually
+        // read it -- registering a never-read id would hand a malicious
+        // peer an unbounded parking queue instead of a Malformed error.
+        let lanes: Vec<(Comm, Option<Comm>)> = comms.into_iter().map(|c| {
+            let on = c.channel(ChanId::online(slot));
+            let off = cfg.opts.preprocess
+                .then(|| on.channel(ChanId::offline(slot)));
+            (on, off)
+        }).collect();
         let banks: Vec<Arc<TupleBank>> =
             (0..3).map(|_| Arc::new(TupleBank::new(bank_cfg))).collect();
         let (logits_tx, logits_rx) = channel();
         let mut job_txs = Vec::new();
         let mut handles = Vec::new();
         let (ready_tx, ready_rx) = channel();
-        for (comm, bank) in comms.into_iter().zip(banks.iter().cloned()) {
+        for ((comm, off_comm), bank) in
+            lanes.into_iter().zip(banks.iter().cloned()) {
             let model = Arc::clone(&model);
             let cfg = cfg.clone();
             let logits_tx = logits_tx.clone();
@@ -96,7 +158,7 @@ impl Service {
             let (jtx, jrx) = channel::<Job>();
             job_txs.push(jtx);
             handles.push(thread::spawn(move || -> Stats {
-                let seeds = PartySeeds::setup(cfg.session_seed, comm.id);
+                let seeds = PartySeeds::setup(seed, comm.id);
                 let ctx = Ctx::with_cfg(&comm, &seeds, cfg.proto);
                 // build the backend, warming the PJRT executable cache
                 // before the first request (warmup is a no-op for native)
@@ -119,16 +181,15 @@ impl Service {
                         }
                     };
                 // background tuple producer: its own thread, its own PRF
-                // domain, the offline logical channel of the same links.
+                // domain, this model's offline lane of the same links.
                 // Refill jobs are forwarded to it so minting overlaps
                 // with online inference instead of riding the request.
                 let (prod_tx, prod_rx) = channel::<usize>();
-                let producer = if cfg.opts.preprocess {
-                    let off_comm = comm.channel(Chan::Offline);
-                    let off_seeds = offline_seeds(cfg.session_seed, comm.id);
+                let producer = off_comm.map(|off_comm| {
+                    let off_seeds = offline_seeds(seed, comm.id);
                     let proto = cfg.proto;
                     let pbank = Arc::clone(&bank);
-                    Some(thread::spawn(move || {
+                    thread::spawn(move || {
                         let octx = Ctx::with_cfg(&off_comm, &off_seeds,
                                                  proto);
                         if let Err(e) = run_producer(&octx, pbank.as_ref(),
@@ -137,10 +198,8 @@ impl Service {
                                        failed: {e}", off_comm.id);
                             pbank.close();
                         }
-                    }))
-                } else {
-                    None
-                };
+                    })
+                });
                 let _ = ready_tx.send(Ok(comm.id));
                 while let Ok(job) = jrx.recv() {
                     match job {
@@ -204,6 +263,7 @@ impl Service {
             banks,
             bank_cfg,
             preprocess: cfg.opts.preprocess,
+            slot,
             model_name: model.name.clone(),
             model,
             setup_time: t0.elapsed(),
@@ -269,7 +329,13 @@ impl Service {
         }
     }
 
-    /// Run one batch through the session (blocking).
+    /// Run one batch through the session (blocking).  Over a service's
+    /// own links a failed protocol surfaces as `Err` (the failing
+    /// party's retirement drops the link cores and `Closed` unblocks
+    /// its peers); in a registry the shared links outlive one lane's
+    /// threads, so a *partial* lane failure can leave this call
+    /// blocked -- see DESIGN.md §Multi-model multiplexing, failure
+    /// isolation.
     pub fn infer(&self, inputs: Vec<Tensor>) -> Result<Vec<Vec<i32>>> {
         let batch = inputs.len();
         // keep the bank at its own watermarks even without a Coordinator
@@ -290,7 +356,10 @@ impl Service {
         self.logits_rx.recv().map_err(|_| anyhow!("no response"))?
     }
 
-    /// Stop the party threads and collect their comm stats.
+    /// Stop the party threads and collect their comm stats.  In a
+    /// registry, the returned stats are *link-wide* (the cores are
+    /// shared); use `Stats::chan`/`Stats::model` with this service's
+    /// `slot` for its own rows.
     pub fn shutdown(self) -> [Stats; 3] {
         {
             let sched = self.sched.lock().unwrap();
@@ -300,7 +369,164 @@ impl Service {
         }
         let stats: Vec<Stats> = self.handles.into_iter()
             .map(|h| h.join().unwrap_or_default()).collect();
-        [stats[0], stats[1], stats[2]]
+        stats.try_into().expect("three party threads")
+    }
+}
+
+/// One model entry for [`ModelRegistry::start`]: a unique name (the
+/// routing key), the manifest-loaded model, and an optional per-model
+/// bank override (`None` auto-scales via `BankConfig::auto` to the
+/// model's own demand at the session's `max_batch`).
+pub struct ModelSpec {
+    pub name: String,
+    pub model: Arc<Model>,
+    pub bank: Option<BankConfig>,
+}
+
+impl ModelSpec {
+    pub fn new(name: impl Into<String>, model: Arc<Model>) -> ModelSpec {
+        ModelSpec { name: name.into(), model, bank: None }
+    }
+}
+
+/// Typed registry failure: what was wrong with a spec list or a lookup,
+/// inspectable by callers (the CLI maps these to flag hints).
+#[derive(Debug)]
+pub enum RegistryError {
+    /// `start` needs at least one model spec.
+    Empty,
+    /// Two specs share a name; the name is the routing key.
+    DuplicateModel(String),
+    /// More models than the channel-id space has slots.
+    TooManyModels { count: usize, max: usize },
+    /// `infer`/`service` lookup for a name nobody registered.
+    UnknownModel(String),
+    /// A model's `Service` failed to start or serve.
+    Service { model: String, source: anyhow::Error },
+}
+
+impl std::fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegistryError::Empty =>
+                write!(f, "registry needs at least one model spec"),
+            RegistryError::DuplicateModel(n) =>
+                write!(f, "duplicate model name '{n}': registry names \
+                           are routing keys and must be unique"),
+            RegistryError::TooManyModels { count, max } =>
+                write!(f, "{count} models exceed the {max}-slot channel \
+                           id space"),
+            RegistryError::UnknownModel(n) =>
+                write!(f, "no model named '{n}' in the registry"),
+            RegistryError::Service { model, source } =>
+                write!(f, "model '{model}': {source}"),
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {}
+
+/// N per-model [`Service`]s multiplexed over *one* process's three
+/// links: the multi-model serving front.  Each model slot gets its own
+/// channel-id lane pair, PRF seed domain, `TupleBank`, and producer
+/// lane; requests route by model name.  Slots are assigned in spec
+/// order, so a given spec list is reproducible run-to-run (and against
+/// `Service::start_at` reference arms).
+pub struct ModelRegistry {
+    links: [Comm; 3],
+    entries: Vec<(String, Service)>,
+}
+
+impl ModelRegistry {
+    /// Bring up every model's service over one fresh link trio,
+    /// sequentially (model sharing and bank prefill are interactive;
+    /// one model's setup completes before the next begins).  Spec
+    /// validation -- non-empty, unique names, at most
+    /// `ChanId::MAX_MODELS` -- happens before any thread spawns.
+    pub fn start(specs: Vec<ModelSpec>, cfg: &SessionConfig)
+                 -> Result<ModelRegistry, RegistryError> {
+        if specs.is_empty() {
+            return Err(RegistryError::Empty);
+        }
+        if specs.len() > ChanId::MAX_MODELS {
+            return Err(RegistryError::TooManyModels {
+                count: specs.len(),
+                max: ChanId::MAX_MODELS,
+            });
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for spec in &specs {
+            if !seen.insert(spec.name.clone()) {
+                return Err(RegistryError::DuplicateModel(
+                    spec.name.clone()));
+            }
+        }
+        let links = local_trio(cfg.net);
+        let mut entries = Vec::with_capacity(specs.len());
+        for (slot, spec) in specs.into_iter().enumerate() {
+            let mut mcfg = cfg.clone();
+            mcfg.bank = spec.bank.or(cfg.bank);
+            let comms =
+                [links[0].clone(), links[1].clone(), links[2].clone()];
+            let svc = Service::start_on(spec.model, mcfg, comms,
+                                        slot as u8)
+                .map_err(|e| RegistryError::Service {
+                    model: spec.name.clone(),
+                    source: e,
+                })?;
+            entries.push((spec.name, svc));
+        }
+        Ok(ModelRegistry { links, entries })
+    }
+
+    /// Registered model names, in slot order.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    /// The service bound to `name`.
+    pub fn service(&self, name: &str) -> Result<&Service, RegistryError> {
+        self.entries.iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| s)
+            .ok_or_else(|| RegistryError::UnknownModel(name.to_string()))
+    }
+
+    /// Route one batch to `name`'s service (blocking).
+    pub fn infer(&self, name: &str, inputs: Vec<Tensor>)
+                 -> Result<Vec<Vec<i32>>, RegistryError> {
+        let svc = self.service(name)?;
+        svc.infer(inputs).map_err(|e| RegistryError::Service {
+            model: name.to_string(),
+            source: e,
+        })
+    }
+
+    /// Party `party`'s link-wide comm stats (totals plus every model
+    /// lane's `ChanStats` row; rows sum to the totals).
+    pub fn link_stats(&self, party: usize) -> Stats {
+        self.links[party].stats()
+    }
+
+    /// Per-model serving rollups (party 0's view): each model's online
+    /// and offline lane traffic plus its bank counters.
+    pub fn rollups(&self) -> Vec<ModelRollup> {
+        let stats = self.link_stats(0);
+        self.entries.iter().map(|(name, svc)| ModelRollup {
+            name: name.clone(),
+            slot: svc.slot,
+            online: stats.chan(ChanId::online(svc.slot)),
+            offline: stats.chan(ChanId::offline(svc.slot)),
+            preproc: svc.bank_handle(0).metrics(),
+        }).collect()
+    }
+
+    /// Stop every service (slot order) and return each model's name
+    /// with the link-wide stats its party threads observed at exit.
+    pub fn shutdown(self) -> Vec<(String, [Stats; 3])> {
+        self.entries.into_iter()
+            .map(|(n, s)| (n, s.shutdown()))
+            .collect()
     }
 }
 
@@ -520,5 +746,52 @@ mod tests {
         assert!(got.is_err(), "inference with a dead peer must error");
         // the remaining party threads retired cleanly: shutdown joins
         let _ = svc.shutdown();
+    }
+
+    // ---- model registry -------------------------------------------------
+
+    #[test]
+    fn registry_rejects_bad_spec_lists_with_typed_errors() {
+        let cfg = SessionConfig::new("artifacts/hlo");
+        // empty list
+        let err = ModelRegistry::start(vec![], &cfg).err().unwrap();
+        assert!(matches!(err, RegistryError::Empty), "{err:?}");
+        // duplicate names (satellite: typed, inspectable error naming
+        // the offending model)
+        let model = Arc::new(every_op_model());
+        let specs = vec![
+            ModelSpec::new("everyop", Arc::clone(&model)),
+            ModelSpec::new("everyop", Arc::clone(&model)),
+        ];
+        let err = ModelRegistry::start(specs, &cfg).err().unwrap();
+        match &err {
+            RegistryError::DuplicateModel(n) => assert_eq!(n, "everyop"),
+            other => panic!("expected DuplicateModel, got {other:?}"),
+        }
+        assert!(err.to_string().contains("everyop"), "{err}");
+        // the typed-error check spawns nothing: no links were built, so
+        // the error arrives without any party/producer threads to reap
+    }
+
+    #[test]
+    fn registry_routes_by_name_and_rejects_unknown_models() {
+        let model = Arc::new(every_op_model());
+        let cfg = SessionConfig::new("artifacts/hlo");
+        let reg = ModelRegistry::start(
+            vec![ModelSpec::new("a", Arc::clone(&model))], &cfg)
+            .expect("registry up");
+        assert_eq!(reg.names(), vec!["a"]);
+        assert_eq!(reg.service("a").unwrap().slot, 0);
+        let err = reg.service("nope").err().unwrap();
+        assert!(matches!(err, RegistryError::UnknownModel(_)), "{err:?}");
+        let mut rng = Rng::new(17);
+        let err = reg.infer("nope", vec![rng.tensor_small(&[1, 36], 15)])
+            .err().unwrap();
+        assert!(matches!(err, RegistryError::UnknownModel(_)), "{err:?}");
+        let logits = reg.infer("a", vec![rng.tensor_small(&[1, 36], 15)])
+            .expect("routed batch");
+        assert_eq!(logits.len(), 1);
+        assert_eq!(logits[0].len(), 3);
+        reg.shutdown();
     }
 }

@@ -297,7 +297,7 @@ fn reshare_batched(ctx: &Ctx, zis: Vec<Tensor>, shapes: &[Vec<usize>])
 }
 
 /// Broadcast-subtract a per-channel shared threshold and apply the public
-/// flip: d[c][j] = (z[c][j] - t[c]) * flip[c]  (local).
+/// flip: `d[c][j] = (z[c][j] - t[c]) * flip[c]`  (local).
 fn sub_thresh_flip(z: &Share, t: &Share, flip: &[i32]) -> Share {
     let (c, n) = z.a.dims2();
     let apply = |zc: &Tensor, tc: &Tensor| {

@@ -19,6 +19,22 @@ use crate::transport::{local_trio, NetConfig, Stats};
 
 use super::{argmax, share_model, EngineOptions};
 
+/// Per-model seed-domain separator for multi-model serving (see
+/// `model_seed`).  An odd multiplier (the 64-bit golden-ratio constant)
+/// so every slot lands in a distinct domain.
+pub const MODEL_SEED_SALT: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// The model-scoped session seed for model slot `slot`: every model
+/// served over shared links derives its PRF streams (online *and*
+/// offline, see `offline::offline_seeds`) from its own seed domain, so
+/// no two lanes ever share counters and no correlated-randomness stream
+/// is consumed by two models.  Slot 0 is the identity -- single-model
+/// sessions are bit-for-bit unchanged.  Distinctness of all 2x128 lane
+/// domains for a fixed session seed is pinned by a test.
+pub fn model_seed(session_seed: u64, slot: u8) -> u64 {
+    session_seed ^ (slot as u64).wrapping_mul(MODEL_SEED_SALT)
+}
+
 #[derive(Clone, Debug)]
 pub struct SessionConfig {
     pub net: NetConfig,
@@ -141,12 +157,13 @@ pub fn run_inference(model: &Arc<Model>, inputs: Vec<Tensor>,
     }
     let logits = results[0].0.clone();
     let preds = logits.iter().map(|l| argmax(l)).collect();
+    let stats: Vec<Stats> = results.iter().map(|r| r.3.clone()).collect();
     Ok(SessionReport {
         preds,
         logits,
         online: results[0].1,
         setup: results[0].2,
-        stats: [results[0].3, results[1].3, results[2].3],
+        stats: stats.try_into().expect("three parties"),
     })
 }
 
@@ -166,4 +183,31 @@ pub fn secure_accuracy(model: &Arc<Model>, inputs: &[Tensor], labels: &[i32],
         done += chunk.len();
     }
     Ok(correct as f64 / done as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_seed_domains_are_distinct_across_all_lanes() {
+        // one session seed spans up to 128 model slots x 2 lanes; every
+        // lane's PRF seed domain must be distinct, or two lanes could
+        // share counters / reuse correlated randomness
+        for session in [0u64, 7, u64::MAX, 0x1234_5678_9ABC_DEF0] {
+            let mut seen = std::collections::BTreeSet::new();
+            for slot in 0..128u8 {
+                let online = model_seed(session, slot);
+                let offline = online ^ crate::offline::OFFLINE_SEED_SALT;
+                assert!(seen.insert(online),
+                        "online domain collision at slot {slot}");
+                assert!(seen.insert(offline),
+                        "offline domain collision at slot {slot}");
+            }
+            assert_eq!(seen.len(), 256);
+        }
+        // slot 0 is the identity: single-model sessions are unchanged
+        assert_eq!(model_seed(42, 0), 42);
+        assert_ne!(model_seed(42, 1), 42);
+    }
 }

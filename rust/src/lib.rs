@@ -17,7 +17,9 @@
 //! * `runtime` -- PJRT client loading the AOT artifacts lowered from the
 //!   L1 Pallas kernels (HLO text interchange).
 //! * `coordinator` -- serving front: request queue, dynamic batcher,
-//!   session management, metrics.
+//!   session management, metrics, and the multi-model `ModelRegistry`
+//!   (N models over one process's links, one channel-id lane pair and
+//!   tuple bank per model).
 //! * `baselines` -- SecureBiNN-/Falcon-style protocol arms and published
 //!   cost-model rows for the comparison tables.
 //!

@@ -2,33 +2,57 @@
 //!
 //! Subcommands:
 //!   infer  -- one batched secure inference, print predictions + cost
-//!   serve  -- start the coordinator, replay a synthetic request stream,
-//!             print latency/throughput
+//!   serve  -- start the serving stack, replay a synthetic request
+//!             stream, print latency/throughput.  One `--model` serves
+//!             through the dynamic-batching Coordinator; repeated
+//!             `--model` flags serve every model from one process's
+//!             links via the ModelRegistry (see OPERATIONS.md)
 //!   acc    -- secure accuracy over the exported eval set
 //!   info   -- describe a model manifest
 //!
-//! Common flags: --model <name> --artifacts <dir> --net lan|wan|zero
+//! Common flags: --model NAME | --model NAME=MANIFEST (repeatable)
+//!               --artifacts DIR --net lan|wan|zero
 //!               --backend native|pjrt-pallas|pjrt-xla --batch N
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
-use cbnn::cli::{parse_backend, parse_bank, parse_net, Args};
-use cbnn::coordinator::{BatchPolicy, Coordinator, Service};
+use cbnn::cli::{parse_backend, parse_bank, parse_models, parse_net, Args,
+                SERVE_FLAGS};
+use cbnn::coordinator::{BatchPolicy, Coordinator, ModelRegistry, ModelSpec,
+                        Service};
 use cbnn::datasets::EvalSet;
 use cbnn::engine::session::{run_inference, secure_accuracy, SessionConfig};
 use cbnn::metrics::fmt_duration;
 use cbnn::nn::Model;
+use cbnn::ring::Tensor;
 
-fn usage() -> &'static str {
-    "usage: cbnn <infer|serve|acc|info> --model <name> \
-     [--artifacts artifacts] [--net lan|wan|zero] \
-     [--backend native|pjrt-pallas|pjrt-xla] [--batch N] [--requests N] \
-     [--prefetch N] [--bank-low N] [--bank-high N] [--bank-chunk N] \
-     [--bank-capacity N]"
+/// Usage text.  The serve flag list renders from `cli::SERVE_FLAGS`
+/// (the same list the OPERATIONS.md CI gate checks), so the help
+/// cannot drift from the documented flag surface.
+fn usage() -> String {
+    let serve: Vec<String> =
+        SERVE_FLAGS.iter().map(|f| format!("[--{f} ..]")).collect();
+    format!(
+        "usage: cbnn <infer|serve|acc|info> --model <name|name=manifest>\n\
+         serve flags (--model repeatable): {}\n\
+         values: --net lan|wan|zero, --backend \
+         native|pjrt-pallas|pjrt-xla; see OPERATIONS.md",
+        serve.join(" "))
+}
+
+fn load_model(name: &str, path: &Path) -> Result<Arc<Model>> {
+    Ok(Arc::new(Model::load(path)
+        .with_context(|| format!("loading model '{name}' from {}",
+                                 path.display()))?))
+}
+
+fn load_data(art: &Path, model: &Model) -> Result<EvalSet> {
+    EvalSet::load(&art.join("data").join(format!("{}.bin", model.dataset)))
+        .context("eval data (run `make artifacts`)")
 }
 
 fn main() -> Result<()> {
@@ -37,10 +61,8 @@ fn main() -> Result<()> {
         .ok_or_else(|| anyhow!("missing subcommand\n{}", usage()))?;
 
     let art = PathBuf::from(args.get_or("artifacts", "artifacts"));
-    let name = args.get_or("model", "mnistnet1").to_string();
-    let model = Arc::new(Model::load(
-        &art.join("models").join(format!("{name}.manifest.json")))
-        .with_context(|| format!("loading model '{name}'"))?);
+    let specs = parse_models(&args, &art, "mnistnet1")
+        .map_err(anyhow::Error::msg)?;
 
     let cfg = SessionConfig::new(art.join("hlo"))
         .with_net(parse_net(args.get_or("net", "lan"))
@@ -48,12 +70,12 @@ fn main() -> Result<()> {
         .with_backend(parse_backend(args.get_or("backend", "pjrt-pallas"))
                       .map_err(anyhow::Error::msg)?);
 
-    let data = EvalSet::load(&art.join("data")
-                             .join(format!("{}.bin", model.dataset)))
-        .context("eval data (run `make artifacts`)")?;
+    // info/infer/acc are single-model commands: last --model wins
+    let (name, path) = specs.last().expect("parse_models is non-empty");
 
     match sub.as_str() {
         "info" => {
+            let model = load_model(name, path)?;
             println!("model      : {}", model.name);
             println!("dataset    : {}", model.dataset);
             println!("input CHW  : {:?}", model.input);
@@ -64,6 +86,8 @@ fn main() -> Result<()> {
             }
         }
         "infer" => {
+            let model = load_model(name, path)?;
+            let data = load_data(&art, &model)?;
             let batch = args.get_usize("batch", 4)
                 .map_err(anyhow::Error::msg)?;
             let inputs = data.images[..batch.min(data.images.len())].to_vec();
@@ -82,6 +106,8 @@ fn main() -> Result<()> {
             }
         }
         "acc" => {
+            let model = load_model(name, path)?;
+            let data = load_data(&art, &model)?;
             let n = args.get_usize("n", 64).map_err(anyhow::Error::msg)?;
             let batch = args.get_usize("batch", 8)
                 .map_err(anyhow::Error::msg)?;
@@ -91,56 +117,151 @@ fn main() -> Result<()> {
             println!("secure accuracy over {n} samples: {:.2}%", acc * 100.0);
         }
         "serve" => {
-            let requests = args.get_usize("requests", 32)
-                .map_err(anyhow::Error::msg)?;
-            let max_batch = args.get_usize("batch", 8)
-                .map_err(anyhow::Error::msg)?;
-            let prefetch = args.get_usize("prefetch", 2)
-                .map_err(anyhow::Error::msg)?;
-            let mut cfg = cfg;
-            cfg.max_batch = max_batch;
-            if let Some(bank) = parse_bank(&args)
-                .map_err(anyhow::Error::msg)? {
-                cfg.bank = Some(bank);
+            if specs.len() == 1 {
+                serve_single(&args, &art, cfg, name, path)?;
+            } else {
+                serve_multi(&args, &art, cfg, &specs)?;
             }
-            let svc = Service::start(Arc::clone(&model), cfg)?;
-            println!("service up: model={} setup={}", svc.model_name,
-                     fmt_duration(svc.setup_time));
-            let coord = Coordinator::start(svc, BatchPolicy {
-                max_batch,
-                max_wait: Duration::from_millis(10),
-                prefetch,
-            });
-            let mut rxs = Vec::new();
-            for i in 0..requests {
-                rxs.push((i, coord.submit(
-                    data.images[i % data.images.len()].clone())));
-            }
-            let mut correct = 0;
-            for (i, rx) in rxs {
-                let resp = rx.recv().context("response")?;
-                if resp.pred == data.labels[i % data.labels.len()] as usize {
-                    correct += 1;
-                }
-            }
-            let pm = coord.preproc_metrics();
-            let (hist, thr) = coord.finish();
-            println!("served {} requests: {:.1} req/s", thr.requests,
-                     thr.per_sec());
-            println!("offline bank: minted={} drawn={} request-path \
-                      fallbacks={} ({} elems)",
-                     pm.minted, pm.drawn, pm.underflow_calls,
-                     pm.fallback_elems);
-            println!("latency mean={} p50={} p99={} max={}",
-                     fmt_duration(hist.mean()),
-                     fmt_duration(hist.quantile(0.5)),
-                     fmt_duration(hist.quantile(0.99)),
-                     fmt_duration(hist.max()));
-            println!("accuracy on served stream: {:.1}%",
-                     100.0 * f64::from(correct) / requests as f64);
         }
         other => return Err(anyhow!("unknown subcommand '{other}'\n{}",
                                     usage())),
     }
+    Ok(())
+}
+
+/// One model behind the dynamic-batching `Coordinator` (the PR 3 path).
+fn serve_single(args: &Args, art: &Path, cfg: SessionConfig,
+                name: &str, path: &Path) -> Result<()> {
+    let model = load_model(name, path)?;
+    let data = load_data(art, &model)?;
+    let requests = args.get_usize("requests", 32)
+        .map_err(anyhow::Error::msg)?;
+    let max_batch = args.get_usize("batch", 8)
+        .map_err(anyhow::Error::msg)?;
+    let prefetch = args.get_usize("prefetch", 2)
+        .map_err(anyhow::Error::msg)?;
+    let mut cfg = cfg;
+    cfg.max_batch = max_batch;
+    if let Some(bank) = parse_bank(args).map_err(anyhow::Error::msg)? {
+        cfg.bank = Some(bank);
+    }
+    let svc = Service::start(Arc::clone(&model), cfg)?;
+    println!("service up: model={} setup={}", svc.model_name,
+             fmt_duration(svc.setup_time));
+    let coord = Coordinator::start(svc, BatchPolicy {
+        max_batch,
+        max_wait: Duration::from_millis(10),
+        prefetch,
+    });
+    let mut rxs = Vec::new();
+    for i in 0..requests {
+        rxs.push((i, coord.submit(
+            data.images[i % data.images.len()].clone())));
+    }
+    let mut correct = 0;
+    for (i, rx) in rxs {
+        let resp = rx.recv().context("response")?;
+        if resp.pred == data.labels[i % data.labels.len()] as usize {
+            correct += 1;
+        }
+    }
+    let pm = coord.preproc_metrics();
+    let (hist, thr) = coord.finish();
+    println!("served {} requests: {:.1} req/s", thr.requests,
+             thr.per_sec());
+    println!("offline bank: minted={} drawn={} request-path \
+              fallbacks={} ({} elems)",
+             pm.minted, pm.drawn, pm.underflow_calls,
+             pm.fallback_elems);
+    println!("latency mean={} p50={} p99={} max={}",
+             fmt_duration(hist.mean()),
+             fmt_duration(hist.quantile(0.5)),
+             fmt_duration(hist.quantile(0.99)),
+             fmt_duration(hist.max()));
+    println!("accuracy on served stream: {:.1}%",
+             100.0 * f64::from(correct) / requests as f64);
+    Ok(())
+}
+
+/// Every `--model` from one process's three links via the
+/// `ModelRegistry`: interleaved round-robin batches, per-model rollups.
+/// (`--prefetch` drives the single-model batcher only; registry
+/// services keep their own watermarks per request.)
+fn serve_multi(args: &Args, art: &Path, cfg: SessionConfig,
+               specs: &[(String, PathBuf)]) -> Result<()> {
+    let requests = args.get_usize("requests", 32)
+        .map_err(anyhow::Error::msg)?;
+    // clamp like SessionConfig's own max_batch.max(1): --batch 0 would
+    // otherwise loop forever submitting empty batches
+    let batch = args.get_usize("batch", 8)
+        .map_err(anyhow::Error::msg)?.max(1);
+    let mut cfg = cfg;
+    cfg.max_batch = batch;
+    if let Some(bank) = parse_bank(args).map_err(anyhow::Error::msg)? {
+        // one explicit bank config applies to every model; omit the
+        // --bank-* flags to auto-scale each bank to its model's demand
+        cfg.bank = Some(bank);
+    }
+    let mut reg_specs = Vec::with_capacity(specs.len());
+    let mut data = Vec::with_capacity(specs.len());
+    for (name, path) in specs {
+        let model = load_model(name, path)?;
+        data.push(load_data(art, &model)?);
+        reg_specs.push(ModelSpec::new(name.clone(), model));
+    }
+    let t0 = Instant::now();
+    let reg = ModelRegistry::start(reg_specs, &cfg)
+        .map_err(|e| anyhow!("{e}"))?;
+    println!("registry up: {} models over one link trio ({}), setup={}",
+             specs.len(), reg.names().join(", "),
+             fmt_duration(t0.elapsed()));
+
+    let n_models = specs.len();
+    let mut served = vec![0usize; n_models];
+    let mut correct = vec![0usize; n_models];
+    let mut remaining = requests;
+    let t1 = Instant::now();
+    while remaining > 0 {
+        for (m, (name, _)) in specs.iter().enumerate() {
+            if remaining == 0 {
+                break;
+            }
+            let take = batch.min(remaining);
+            let ds = &data[m];
+            let imgs: Vec<Tensor> = (0..take).map(|j| {
+                ds.images[(served[m] + j) % ds.images.len()].clone()
+            }).collect();
+            let logits = reg.infer(name, imgs).map_err(|e| anyhow!("{e}"))?;
+            for (j, l) in logits.iter().enumerate() {
+                let want = ds.labels[(served[m] + j) % ds.labels.len()];
+                if cbnn::engine::argmax(l) == want as usize {
+                    correct[m] += 1;
+                }
+            }
+            served[m] += take;
+            remaining -= take;
+        }
+    }
+    let wall = t1.elapsed();
+    println!("served {requests} requests across {n_models} models in {} \
+              ({:.1} req/s)",
+             fmt_duration(wall),
+             requests as f64 / wall.as_secs_f64().max(1e-9));
+    for r in reg.rollups() {
+        let m = r.slot as usize;
+        println!("model {} (slot {}): {} reqs, {:.1}% acc | online {} B \
+                  / {} rounds, offline {} B | bank minted={} drawn={} \
+                  fallbacks={}",
+                 r.name, r.slot, served[m],
+                 100.0 * correct[m] as f64 / served[m].max(1) as f64,
+                 r.online.bytes_sent, r.online.rounds,
+                 r.offline.bytes_sent,
+                 r.preproc.minted, r.preproc.drawn,
+                 r.preproc.underflow_calls);
+    }
+    let link = reg.link_stats(0);
+    println!("link totals (party 0): {} B, {} messages, {} rounds",
+             link.bytes_sent, link.messages, link.rounds);
+    reg.shutdown();
     Ok(())
 }

@@ -1,8 +1,11 @@
 //! Serving metrics: latency histogram + throughput counters for the
-//! coordinator (criterion is not in the offline crate set; the bench
-//! harness and the coordinator share these primitives).
+//! coordinator, plus per-model rollups for multi-model serving
+//! (criterion is not in the offline crate set; the bench harness and
+//! the coordinator share these primitives).
 
 use std::time::Duration;
+
+use crate::transport::ChanStats;
 
 /// Fixed-bucket log-scale latency histogram (microseconds).
 #[derive(Clone, Debug)]
@@ -80,6 +83,32 @@ pub struct PreprocMetrics {
     pub fallback_elems: u64,
     /// High-water mark of stored elements (≤ bank capacity).
     pub max_level: u64,
+}
+
+/// One model's serving rollup in a multi-model process: its two lanes'
+/// shares of the link traffic (`transport::Stats::chan` rows, which sum
+/// with every other model's rows to the link totals) plus its
+/// `TupleBank` counters.  Produced by `ModelRegistry::rollups`.
+#[derive(Clone, Debug, Default)]
+pub struct ModelRollup {
+    /// Registry routing key.
+    pub name: String,
+    /// Channel-id model slot.
+    pub slot: u8,
+    /// Request-critical-path traffic (the paper-comparable row).
+    pub online: ChanStats,
+    /// Amortized background producer traffic.
+    pub offline: ChanStats,
+    /// The model's bank counters (party 0; identical trajectories on
+    /// all parties).
+    pub preproc: PreprocMetrics,
+}
+
+impl ModelRollup {
+    /// The model's total share of link bytes (both lanes).
+    pub fn total_bytes(&self) -> u64 {
+        self.online.bytes_sent + self.offline.bytes_sent
+    }
 }
 
 /// Simple mean/throughput aggregate for a run.

@@ -1,16 +1,21 @@
 //! Offline preprocessing subsystem: watermark-managed tuple banks fed by
-//! background producers over the tagged `Chan::Offline` transport channel.
+//! background producers over tagged offline transport channels.
 //!
 //! CBNN's protocols split into an offline phase (the β/βᴬ/rs MSB tuples)
 //! and a 2-round online phase, but a pool minted inline still pays the
 //! offline cost on the request path.  This module decouples them for the
 //! serving stack:
 //!
-//! * each party thread spawns one **producer** thread holding a
-//!   `Comm::channel(Chan::Offline)` handle and its own PRF seed domain
-//!   (`offline_seeds`), so producer traffic multiplexes over the same
-//!   three-party links without interleaving into online frames and
-//!   without perturbing the online PRF counter trajectory;
+//! * each model's party thread spawns one **producer** thread holding a
+//!   `Comm::channel(ChanId::offline(slot))` handle and its own PRF seed
+//!   domain (`offline_seeds` over the model-scoped session seed), so
+//!   producer traffic multiplexes over the same three-party links
+//!   without interleaving into online frames and without perturbing the
+//!   online PRF counter trajectory.  In a multi-model process every
+//!   model slot gets its own producer lane and its own `TupleBank`
+//!   (banks are never shared across models: their seed domains differ,
+//!   so one model's tuples cannot reconstruct in another's session --
+//!   see DESIGN.md §Multi-model multiplexing);
 //! * a **`TupleBank`** sits between producer and consumer: a
 //!   `Mutex`+condvar reservoir with a hard `capacity` (delivery blocks
 //!   when full -- backpressure), low/high watermarks driving the
@@ -97,20 +102,30 @@ impl BankConfig {
     /// capacity that leaves one chunk of headroom above `high` (this is
     /// what makes prefill-to-high reachable without tripping
     /// backpressure, and part of the deadlock-freedom argument above).
+    /// Every rejection names the offending field and its value, so a
+    /// bad `--bank-*` flag combination is diagnosable from the message
+    /// alone.
     pub fn validate(&self) -> Result<(), String> {
         if self.chunk == 0 {
-            return Err("bank chunk must be positive".into());
+            return Err(format!(
+                "bank field `chunk` = {}: refill chunks must be a \
+                 positive element count",
+                self.chunk));
         }
         if self.low > self.high {
             return Err(format!(
-                "low watermark {} above high watermark {}",
+                "bank field `low` = {} exceeds field `high` = {}: \
+                 watermarks must satisfy low <= high",
                 self.low, self.high));
         }
         if self.high + self.chunk > self.capacity {
             return Err(format!(
-                "capacity {} leaves no chunk headroom above the high \
-                 watermark {} (chunk {})",
-                self.capacity, self.high, self.chunk));
+                "bank field `capacity` = {} is below `high` + `chunk` \
+                 = {} + {} = {}: one chunk of headroom above the high \
+                 watermark is required (prefill reachability / deadlock \
+                 freedom)",
+                self.capacity, self.high, self.chunk,
+                self.high + self.chunk));
         }
         Ok(())
     }
@@ -326,6 +341,24 @@ mod tests {
                 .validate().is_err());
         assert!(BankConfig { low: 0, high: 8, chunk: 4, capacity: 8 }
                 .validate().is_err(), "no chunk headroom above high");
+    }
+
+    #[test]
+    fn config_validation_errors_name_field_and_value() {
+        // the operator-facing contract: every rejection says which
+        // field, with its value, so a bad --bank-* combination is
+        // diagnosable from the message alone
+        let e = BankConfig { low: 0, high: 4, chunk: 0, capacity: 8 }
+            .validate().unwrap_err();
+        assert!(e.contains("`chunk` = 0"), "{e}");
+        let e = BankConfig { low: 7, high: 3, chunk: 1, capacity: 8 }
+            .validate().unwrap_err();
+        assert!(e.contains("`low` = 7") && e.contains("`high` = 3"),
+                "{e}");
+        let e = BankConfig { low: 0, high: 8, chunk: 4, capacity: 11 }
+            .validate().unwrap_err();
+        assert!(e.contains("`capacity` = 11") && e.contains("8 + 4"),
+                "{e}");
     }
 
     #[test]

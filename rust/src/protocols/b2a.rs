@@ -1,7 +1,7 @@
 //! Binary-to-arithmetic share conversion via the 3-party OT (paper
 //! Section 3.3 "Share Conversion").
 //!
-//! Given RSS bit shares [y]^B with components (y_0, y_1, y_2):
+//! Given RSS bit shares `[y]^B` with components (y_0, y_1, y_2):
 //!
 //! * P1 knows (y_1, y_2) and acts as OT *sender* with messages
 //!   m_i = (i XOR y_1 XOR y_2) - a, where the mask a = a_1 + a_2,

@@ -34,17 +34,17 @@ use super::{b2a::b2a, Ctx};
 /// of Sign(x) = 1 ^ MSB(x).
 ///
 /// The protocol reveals beta' = MSB(u) publicly and already holds
-/// [beta]^A from the B2A step; since MSB(x) = beta' ^ beta and beta' is
-/// public, Sign(x) = (1 ^ beta') ^ beta = c ^ beta = (1-2c)*beta + c is a
-/// local affine map of [beta]^A.  Algorithm 4 therefore costs zero extra
-/// rounds on top of Algorithm 3.
+/// `[beta]^A` from the B2A step; since MSB(x) = beta' ^ beta and beta'
+/// is public, Sign(x) = (1 ^ beta') ^ beta = c ^ beta = (1-2c)*beta + c
+/// is a local affine map of `[beta]^A`.  Algorithm 4 therefore costs
+/// zero extra rounds on top of Algorithm 3.
 pub struct MsbOut {
     pub bits: BitShare,
-    /// [Sign(x)]^A = [1 ^ MSB(x)]^A, in {0,1}.
+    /// `[Sign(x)]^A = [1 ^ MSB(x)]^A`, in {0,1}.
     pub sign_a: Share,
 }
 
-/// Extract [MSB(x)]^B from [x]^A.  All parties call in lock-step.
+/// Extract `[MSB(x)]^B` from `[x]^A`.  All parties call in lock-step.
 pub fn msb_extract(ctx: &Ctx, x: &Share) -> Result<BitShare> {
     Ok(msb_extract_full(ctx, x)?.bits)
 }

@@ -1,9 +1,9 @@
 //! Input-independent preprocessing for MSB extraction (the perf-pass
 //! online/offline split, EXPERIMENTS.md §Perf).
 //!
-//! Algorithm 3 consumes, per element: a shared random bit [beta]^B, its
-//! arithmetic conversion [beta]^A, and the masked multiplier
-//! [rs] = [r * (1 - 2*beta)] with r a small positive secret.  None of
+//! Algorithm 3 consumes, per element: a shared random bit `[beta]^B`,
+//! its arithmetic conversion `[beta]^A`, and the masked multiplier
+//! `[rs] = [r * (1 - 2*beta)]` with r a small positive secret.  None of
 //! these depend on x, so a session mints them ahead of time (a flat
 //! per-element reservoir, so any batch size can draw) and the *online*
 //! MSB collapses to

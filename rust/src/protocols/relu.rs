@@ -1,4 +1,4 @@
-//! Secure ReLU (Algorithm 5): [ReLU(x)]^A = [(1 XOR MSB(x)) * x]^A.
+//! Secure ReLU (Algorithm 5): `[ReLU(x)]^A = [(1 XOR MSB(x)) * x]^A`.
 //!
 //! Two implementations with identical outputs:
 //!

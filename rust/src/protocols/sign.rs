@@ -10,7 +10,7 @@ use crate::rss::{BitShare, Share};
 
 use super::{msb::msb_extract_full, Ctx};
 
-/// [Sign(x)]^B = NOT [MSB(x)]^B -- local (one word-parallel XOR with the
+/// `[Sign(x)]^B = NOT [MSB(x)]^B` -- local (one word-parallel XOR with the
 /// public all-ones vector, folded into the y_0 slot).
 pub fn sign_bits(ctx: &Ctx, msb: &BitShare) -> BitShare {
     msb.not(ctx.id())

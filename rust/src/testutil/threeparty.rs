@@ -70,6 +70,17 @@ pub fn edge_bits(rng: &mut Rng, n: usize) -> Vec<u8> {
 /// the engine/coordinator tests that need a real layer program without
 /// exported artifacts.
 pub fn every_op_model() -> crate::nn::Model {
+    every_op_model_variant("everyop", 0)
+}
+
+/// `every_op_model` with a distinct name and weight pool (values
+/// rotated by `shift`): a cheap *second* model for multi-model serving
+/// tests -- same program structure and demand, different parameters, so
+/// two registry entries compute visibly different functions.  `shift`
+/// must keep every sign-flip entry non-zero; 3 does (asserted by a
+/// test).
+pub fn every_op_model_variant(name: &str, shift: usize)
+                              -> crate::nn::Model {
     let manifest = r#"{
       "name": "everyop", "dataset": "synthetic",
       "input": {"c": 1, "h": 6, "w": 6},
@@ -92,11 +103,12 @@ pub fn every_op_model() -> crate::nn::Model {
          "s_in": 0, "s_out": 0},
         {"op": "relu", "trunc": 2}
       ]
-    }"#;
+    }"#.replace("\"everyop\"", &format!("{name:?}"));
     // small deterministic weights; values only need to stay inside the
     // MSB bound
-    let pool: Vec<i32> = (0..53).map(|v| (v % 7) - 3).collect();
-    crate::nn::Model::from_json(manifest, pool).unwrap()
+    let pool: Vec<i32> =
+        (0..53).map(|v| ((v + shift as i32) % 7) - 3).collect();
+    crate::nn::Model::from_json(&manifest, pool).unwrap()
 }
 
 #[cfg(test)]
@@ -138,5 +150,18 @@ mod tests {
     fn every_op_model_loads() {
         let m = every_op_model();
         assert_eq!(m.ops.len(), 8);
+    }
+
+    #[test]
+    fn model_variant_renames_and_reweights() {
+        let a = every_op_model();
+        let b = every_op_model_variant("everyop-b", 3);
+        assert_eq!(a.name, "everyop");
+        assert_eq!(b.name, "everyop-b");
+        assert_eq!(a.ops.len(), b.ops.len(), "same program structure");
+        // the shift-3 pool keeps the sign flips (pool[22..24]) non-zero
+        let flips = b.tensor(crate::nn::PoolRef { off: 22, len: 2 },
+                             &[2]);
+        assert!(flips.data.iter().all(|&f| f != 0), "{:?}", flips.data);
     }
 }

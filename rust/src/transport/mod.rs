@@ -9,19 +9,23 @@
 //! the round counter is advanced explicitly by the protocol layer so the
 //! per-protocol round budgets in DESIGN.md are testable.
 //!
-//! **Logical channels.**  Every frame carries a one-byte channel tag
-//! (`Chan::Online` / `Chan::Offline`), so the serving stack's background
-//! tuple producers can run the preprocessing protocols over the *same*
-//! three-party links concurrently with online inference without their
-//! frames interleaving: a receive bound to one channel demuxes frames for
-//! the other channel into a per-link queue instead of consuming them (see
-//! DESIGN.md §Offline/online split).  `Comm::channel` derives a handle
-//! bound to another channel over the shared links; `Stats` reports both
-//! aggregate and per-channel bytes/messages/rounds.
+//! **Logical channels.**  Every frame carries a one-byte channel id
+//! (`ChanId`: an online or offline *lane* of one *model slot*), so the
+//! serving stack can run many protocol threads over the *same* three
+//! links concurrently without their frames interleaving: background
+//! tuple producers next to online inference (PR 3), and several models'
+//! lanes next to each other (multi-model serving, see DESIGN.md
+//! §Multi-model multiplexing).  A receive bound to one channel demuxes
+//! frames for any *other* registered channel into a per-link queue
+//! instead of consuming them; a frame tagged with an id nobody
+//! registered is `Malformed`.  `Comm::channel` derives (and registers) a
+//! handle bound to another channel over the shared links; `Stats`
+//! reports aggregate totals plus a per-channel-id breakdown.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -64,36 +68,85 @@ impl From<std::io::Error> for WireError {
     }
 }
 
-/// Logical channel multiplexed over one physical link.  The tag byte is
-/// the first byte of every frame; anything else is `Malformed`.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Chan {
-    /// The request critical path: every protocol round of an inference.
-    Online,
-    /// Background preprocessing traffic (tuple producers).
-    Offline,
+/// Logical channel id multiplexed over one physical link: one byte
+/// encoding a **lane** (online / offline) and a **model slot**, so every
+/// model served by a process gets its own pair of non-interleaving
+/// streams over the shared links.
+///
+/// Wire encoding (the first byte of every frame):
+///
+/// ```text
+///     tag = slot << 1 | lane        lane 0 = online, 1 = offline
+/// ```
+///
+/// so `0x00`/`0x01` are model slot 0's lanes -- byte-identical to the
+/// PR 3 two-channel format, which keeps single-model deployments'
+/// frames unchanged.  A slot is at most [`ChanId::MAX_MODELS`]` - 1`.
+/// Ids are *registered* per party (deriving a handle with
+/// [`Comm::channel`] registers its id; only the default-bound
+/// `ChanId::ONLINE` is pre-registered at construction); an arriving
+/// frame whose tag was never registered is `WireError::Malformed` --
+/// the tag byte is peer-controlled input like everything else, and a
+/// registered id nobody reads would be an unbounded parking queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ChanId(u8);
+
+impl ChanId {
+    /// Size of the model-slot space: tags are one byte, one bit names
+    /// the lane, leaving 7 bits of slot.
+    pub const MAX_MODELS: usize = 128;
+
+    /// Model slot 0's request critical path (the PR 3 `Chan::Online`).
+    pub const ONLINE: ChanId = ChanId(0);
+
+    /// Model slot 0's background preprocessing lane (the PR 3
+    /// `Chan::Offline`).
+    pub const OFFLINE: ChanId = ChanId(1);
+
+    /// The online (request critical path) lane of model slot `slot`.
+    pub fn online(slot: u8) -> ChanId {
+        assert!((slot as usize) < Self::MAX_MODELS,
+                "model slot {slot} outside the {}-slot channel id space",
+                Self::MAX_MODELS);
+        ChanId(slot << 1)
+    }
+
+    /// The offline (background producer) lane of model slot `slot`.
+    pub fn offline(slot: u8) -> ChanId {
+        assert!((slot as usize) < Self::MAX_MODELS,
+                "model slot {slot} outside the {}-slot channel id space",
+                Self::MAX_MODELS);
+        ChanId((slot << 1) | 1)
+    }
+
+    /// The model slot this id belongs to.
+    pub fn model(self) -> u8 {
+        self.0 >> 1
+    }
+
+    /// Whether this is an offline (background producer) lane.
+    pub fn is_offline(self) -> bool {
+        self.0 & 1 == 1
+    }
+
+    /// The one-byte wire tag.
+    pub fn tag(self) -> u8 {
+        self.0
+    }
+
+    /// The id a wire tag names.  Every byte is structurally a `ChanId`;
+    /// whether it is *accepted* is decided by per-party registration in
+    /// the receive path.
+    pub fn from_tag(tag: u8) -> ChanId {
+        ChanId(tag)
+    }
 }
 
-impl Chan {
-    pub(crate) const COUNT: usize = 2;
-
-    fn tag(self) -> u8 {
-        match self {
-            Chan::Online => 0,
-            Chan::Offline => 1,
-        }
-    }
-
-    fn from_tag(tag: u8) -> Option<Chan> {
-        match tag {
-            0 => Some(Chan::Online),
-            1 => Some(Chan::Offline),
-            _ => None,
-        }
-    }
-
-    fn index(self) -> usize {
-        self.tag() as usize
+impl std::fmt::Display for ChanId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}",
+               if self.is_offline() { "offline" } else { "online" },
+               self.model())
     }
 }
 
@@ -132,39 +185,70 @@ impl NetConfig {
     }
 }
 
-/// Per-channel communication counters.
-#[derive(Clone, Copy, Debug, Default)]
+/// Per-channel communication counters (one logical lane's share of the
+/// link totals).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ChanStats {
     pub bytes_sent: u64,
     pub messages: u64,
     pub rounds: u64,
 }
 
-/// Communication statistics for one party: totals across both logical
-/// channels, plus the per-channel breakdown (the online row is what the
-/// paper's tables report; the offline row is the amortized producer cost).
-#[derive(Clone, Copy, Debug, Default)]
+impl ChanStats {
+    fn add(&mut self, other: &ChanStats) {
+        self.bytes_sent += other.bytes_sent;
+        self.messages += other.messages;
+        self.rounds += other.rounds;
+    }
+}
+
+/// Communication statistics for one party: totals across every logical
+/// channel of its links, plus a per-channel-id breakdown.  An online
+/// row is the paper-comparable request cost of that model; an offline
+/// row is its amortized producer cost.  The breakdown always sums to
+/// the totals (asserted in `transport::tests`), so per-model rollups
+/// are exact.
+#[derive(Clone, Debug, Default)]
 pub struct Stats {
     pub bytes_sent: u64,
     pub messages: u64,
     pub rounds: u64,
-    pub online: ChanStats,
-    pub offline: ChanStats,
+    /// Per-channel counters, keyed by wire tag.  Only channels that
+    /// actually moved traffic (or advanced a round) have an entry.
+    channels: BTreeMap<u8, ChanStats>,
 }
 
 impl Stats {
-    pub fn chan(&self, c: Chan) -> ChanStats {
-        match c {
-            Chan::Online => self.online,
-            Chan::Offline => self.offline,
-        }
+    /// Counters of one channel id (all-zero if it never moved traffic).
+    pub fn chan(&self, c: ChanId) -> ChanStats {
+        self.channels.get(&c.tag()).copied().unwrap_or_default()
     }
 
-    fn chan_mut(&mut self, c: Chan) -> &mut ChanStats {
-        match c {
-            Chan::Online => &mut self.online,
-            Chan::Offline => &mut self.offline,
-        }
+    /// Model slot 0's online row (single-model sessions' request cost).
+    pub fn online(&self) -> ChanStats {
+        self.chan(ChanId::ONLINE)
+    }
+
+    /// Model slot 0's offline row (single-model producer cost).
+    pub fn offline(&self) -> ChanStats {
+        self.chan(ChanId::OFFLINE)
+    }
+
+    /// Both lanes of one model slot combined: the slot's total share of
+    /// the link traffic.
+    pub fn model(&self, slot: u8) -> ChanStats {
+        let mut out = self.chan(ChanId::online(slot));
+        out.add(&self.chan(ChanId::offline(slot)));
+        out
+    }
+
+    /// Every channel that moved traffic, in tag order.
+    pub fn channels(&self) -> impl Iterator<Item = (ChanId, ChanStats)> + '_ {
+        self.channels.iter().map(|(&t, &s)| (ChanId::from_tag(t), s))
+    }
+
+    fn chan_mut(&mut self, c: ChanId) -> &mut ChanStats {
+        self.channels.entry(c.tag()).or_default()
     }
 }
 
@@ -198,8 +282,11 @@ struct TxLane {
 /// two-channel protocols deadlock-free even when one channel's thread
 /// races ahead of the other's (see DESIGN.md §Offline/online split).
 struct RxState {
-    /// Frames parked per channel, FIFO.
-    queues: [VecDeque<Vec<u8>>; Chan::COUNT],
+    /// Frames parked per channel tag, FIFO.  A dynamic table (entries
+    /// appear as channels actually park traffic) instead of the PR 3
+    /// fixed two-queue array, so one link carries any number of
+    /// registered model lanes.
+    queues: BTreeMap<u8, VecDeque<Vec<u8>>>,
     /// A thread currently owns the link read.
     reading: bool,
 }
@@ -219,16 +306,39 @@ struct Core {
     tx: [Mutex<TxLane>; 2],
     rx: [RxLane; 2],
     stats: Mutex<Stats>,
+    /// Bitmap over the 256 tag values: which channel ids this party has
+    /// registered (derived a handle for).  A received frame with an
+    /// unregistered tag is `Malformed` -- it cannot belong to any
+    /// protocol thread of this process.  Registration happens before
+    /// the owning threads spawn (handles are derived first), so a plain
+    /// SeqCst bitmap suffices.
+    registered: [AtomicU64; 4],
+}
+
+impl Core {
+    fn register(&self, c: ChanId) {
+        let tag = c.tag() as usize;
+        self.registered[tag / 64]
+            .fetch_or(1u64 << (tag % 64), Ordering::SeqCst);
+    }
+
+    fn is_registered(&self, tag: u8) -> bool {
+        let tag = tag as usize;
+        self.registered[tag / 64].load(Ordering::SeqCst)
+            & (1u64 << (tag % 64)) != 0
+    }
 }
 
 /// A party's endpoints to its two neighbours plus accounting, bound to one
-/// logical channel.  `channel()` derives a handle for the other channel
-/// over the same links; handles are `Send + Sync` and cheap to clone via
-/// the shared core.
+/// logical channel.  `channel()` derives (and registers) a handle for
+/// another channel over the same links; `clone()` duplicates a handle on
+/// its existing channel.  Handles are `Send + Sync` and cheap -- they
+/// share one core.
+#[derive(Clone)]
 pub struct Comm {
     core: Arc<Core>,
     pub id: usize,
-    chan: Chan,
+    chan: ChanId,
 }
 
 /// Which neighbour.
@@ -250,12 +360,17 @@ impl Dir {
 impl Comm {
     /// A handle over the same links bound to `chan`: sends tag frames with
     /// `chan`, receives demux to `chan`, rounds/bytes account to `chan`.
-    pub fn channel(&self, chan: Chan) -> Comm {
+    /// Deriving a handle *registers* `chan` on this party -- do it
+    /// before the first peer frame for that channel can arrive (in
+    /// practice: before spawning the threads that serve it), or the
+    /// receive path rejects the frame as an unregistered id.
+    pub fn channel(&self, chan: ChanId) -> Comm {
+        self.core.register(chan);
         Comm { core: Arc::clone(&self.core), id: self.id, chan }
     }
 
     /// The logical channel this handle is bound to.
-    pub fn chan(&self) -> Chan {
+    pub fn chan(&self) -> ChanId {
         self.chan
     }
 
@@ -332,7 +447,8 @@ impl Comm {
         let lane = &self.core.rx[dir.index()];
         let mut st = lane.state.lock().unwrap();
         loop {
-            if let Some(p) = st.queues[self.chan.index()].pop_front() {
+            if let Some(p) = st.queues.get_mut(&self.chan.tag())
+                .and_then(VecDeque::pop_front) {
                 return Ok(p);
             }
             if st.reading {
@@ -354,11 +470,12 @@ impl Comm {
                         "empty frame cannot hold a channel tag".into()));
                 }
                 let tag = body[0];
-                let chan = Chan::from_tag(tag).ok_or_else(|| {
-                    WireError::Malformed(format!(
-                        "unknown channel tag {tag:#04x}"))
-                })?;
-                Ok((chan, body))
+                if !self.core.is_registered(tag) {
+                    return Err(WireError::Malformed(format!(
+                        "unregistered channel id {tag:#04x} ({})",
+                        ChanId::from_tag(tag))));
+                }
+                Ok((ChanId::from_tag(tag), body))
             });
             match routed {
                 Err(e) => {
@@ -373,7 +490,7 @@ impl Comm {
                 }
                 Ok((chan, body)) => {
                     // park for the other channel FIRST, then wake it
-                    st.queues[chan.index()].push_back(body);
+                    st.queues.entry(chan.tag()).or_default().push_back(body);
                     st.reading = false;
                     lane.cv.notify_all();
                 }
@@ -478,7 +595,7 @@ impl Comm {
     }
 
     pub fn stats(&self) -> Stats {
-        *self.core.stats.lock().unwrap()
+        self.core.stats.lock().unwrap().clone()
     }
 
     pub fn reset_stats(&self) {
@@ -529,26 +646,35 @@ fn make_comm(id: usize, net: NetConfig,
     let lane_rx = |link| RxLane {
         link: Mutex::new(link),
         state: Mutex::new(RxState {
-            queues: [VecDeque::new(), VecDeque::new()],
+            queues: BTreeMap::new(),
             reading: false,
         }),
         cv: Condvar::new(),
     };
-    Comm {
-        core: Arc::new(Core {
-            net,
-            tx: [lane_tx(tx_next), lane_tx(tx_prev)],
-            rx: [lane_rx(rx_next), lane_rx(rx_prev)],
-            stats: Mutex::new(Stats::default()),
-        }),
-        id,
-        chan: Chan::Online,
-    }
+    let core = Core {
+        net,
+        tx: [lane_tx(tx_next), lane_tx(tx_prev)],
+        rx: [lane_rx(rx_next), lane_rx(rx_prev)],
+        stats: Mutex::new(Stats::default()),
+        registered: [AtomicU64::new(0), AtomicU64::new(0),
+                     AtomicU64::new(0), AtomicU64::new(0)],
+    };
+    // only the default-bound online lane is pre-registered (this handle
+    // IS its consumer); every other channel, slot 0's offline lane
+    // included, registers when a handle is derived.  Registration is
+    // permanent for the process lifetime -- an unregister on handle
+    // drop would make a *stale* in-flight frame of a retired lane kill
+    // a healthy lane's recv, so a retired lane's frames park (bounded
+    // by what a semi-honest peer sends) instead; see DESIGN.md
+    // §Multi-model multiplexing.
+    core.register(ChanId::ONLINE);
+    Comm { core: Arc::new(core), id, chan: ChanId::ONLINE }
 }
 
 /// Build the three in-process parties' endpoints for one session.  The
-/// returned handles are bound to `Chan::Online`; derive producer handles
-/// with `Comm::channel(Chan::Offline)`.
+/// returned handles are bound to `ChanId::ONLINE`; derive further lane
+/// handles with `Comm::channel` (e.g. `ChanId::OFFLINE`, or another
+/// model slot's lanes for multi-model serving).
 pub fn local_trio(net: NetConfig) -> [Comm; 3] {
     // channels[i][j] carries i -> j
     let mut txs: Vec<Vec<Option<Sender<Msg>>>> =
@@ -728,8 +854,8 @@ mod tests {
             assert_eq!(s.bytes_sent, 33);
             assert_eq!(s.messages, 1);
             assert_eq!(s.rounds, 1);
-            assert_eq!(s.online.bytes_sent, 33);
-            assert_eq!(s.offline.bytes_sent, 0);
+            assert_eq!(s.online().bytes_sent, 33);
+            assert_eq!(s.offline().bytes_sent, 0);
         }
     }
 
@@ -926,8 +1052,8 @@ mod tests {
     #[test]
     fn channel_handles_split_stats_per_channel() {
         let stats = run3(NetConfig::zero(), |c| {
-            let off = c.channel(Chan::Offline);
-            assert_eq!(off.chan(), Chan::Offline);
+            let off = c.channel(ChanId::OFFLINE);
+            assert_eq!(off.chan(), ChanId::OFFLINE);
             c.send_elems(Dir::Next, &[1, 2]).unwrap(); // 8 + 1 bytes
             off.send_elems(Dir::Next, &[3]).unwrap(); // 4 + 1 bytes
             let on = c.recv_elems(Dir::Prev).unwrap();
@@ -939,14 +1065,117 @@ mod tests {
             off.round();
         });
         for s in stats {
-            assert_eq!(s.online.bytes_sent, 9);
-            assert_eq!(s.offline.bytes_sent, 5);
+            assert_eq!(s.online().bytes_sent, 9);
+            assert_eq!(s.offline().bytes_sent, 5);
             assert_eq!(s.bytes_sent, 14);
-            assert_eq!(s.online.messages, 1);
-            assert_eq!(s.offline.messages, 1);
-            assert_eq!(s.online.rounds, 1);
-            assert_eq!(s.offline.rounds, 2);
+            assert_eq!(s.online().messages, 1);
+            assert_eq!(s.offline().messages, 1);
+            assert_eq!(s.online().rounds, 1);
+            assert_eq!(s.offline().rounds, 2);
             assert_eq!(s.rounds, 3);
+        }
+    }
+
+    #[test]
+    fn chan_id_encoding_round_trips() {
+        assert_eq!(ChanId::ONLINE, ChanId::online(0));
+        assert_eq!(ChanId::OFFLINE, ChanId::offline(0));
+        for slot in [0u8, 1, 2, 63, 127] {
+            let on = ChanId::online(slot);
+            let off = ChanId::offline(slot);
+            assert_ne!(on, off);
+            assert_eq!(on.model(), slot);
+            assert_eq!(off.model(), slot);
+            assert!(!on.is_offline());
+            assert!(off.is_offline());
+            assert_eq!(ChanId::from_tag(on.tag()), on);
+            assert_eq!(ChanId::from_tag(off.tag()), off);
+        }
+        assert_eq!(format!("{}", ChanId::online(3)), "online/3");
+        assert_eq!(format!("{}", ChanId::offline(3)), "offline/3");
+    }
+
+    #[test]
+    #[should_panic(expected = "model slot 128")]
+    fn chan_id_rejects_slots_past_the_space() {
+        let _ = ChanId::online(128);
+    }
+
+    #[test]
+    fn per_channel_stats_sum_to_link_totals() {
+        // the acceptance invariant the multi-model rollups rely on: the
+        // per-channel breakdown is exhaustive, so summing every
+        // channel's row reproduces the totals exactly
+        let stats = run3(NetConfig::zero(), |c| {
+            let lanes = [
+                c.channel(ChanId::online(0)),
+                c.channel(ChanId::offline(0)),
+                c.channel(ChanId::online(1)),
+                c.channel(ChanId::offline(1)),
+                c.channel(ChanId::online(5)),
+            ];
+            for (i, lane) in lanes.iter().enumerate() {
+                for _ in 0..=i {
+                    lane.send_elems(Dir::Next, &[i as i32]).unwrap();
+                    let got = lane.recv_elems(Dir::Prev).unwrap();
+                    assert_eq!(got, vec![i as i32]);
+                }
+                lane.round();
+            }
+        });
+        for s in stats {
+            let mut sum = ChanStats::default();
+            let mut seen = 0;
+            for (_, cs) in s.channels() {
+                sum.add(&cs);
+                seen += 1;
+            }
+            assert_eq!(seen, 5, "five lanes moved traffic");
+            assert_eq!(sum.bytes_sent, s.bytes_sent);
+            assert_eq!(sum.messages, s.messages);
+            assert_eq!(sum.rounds, s.rounds);
+            // model() combines a slot's two lanes
+            let m0 = s.model(0);
+            assert_eq!(m0.bytes_sent,
+                       s.chan(ChanId::online(0)).bytes_sent
+                       + s.chan(ChanId::offline(0)).bytes_sent);
+            // lanes 2 and 3 (model slot 1) sent 3 and 4 messages
+            assert_eq!(s.model(1).messages, 3 + 4);
+            assert_eq!(s.model(1).rounds, 2);
+        }
+    }
+
+    #[test]
+    fn model_lanes_demux_independently_over_one_link() {
+        // two model slots' four lanes exchange disjoint streams over the
+        // same links; frames sent out of order park per lane and arrive
+        // intact (the multi-model generalization of the PR 3 two-channel
+        // parking test)
+        let comms = local_trio(NetConfig::zero());
+        let handles: Vec<_> = comms.into_iter().map(|c| {
+            thread::spawn(move || {
+                let lanes = [
+                    c.channel(ChanId::online(1)),
+                    c.channel(ChanId::offline(1)),
+                    c.channel(ChanId::online(2)),
+                    c.channel(ChanId::offline(2)),
+                ];
+                // send every lane's frame before receiving any: each
+                // recv must skip (and park) up to three foreign frames
+                for (i, lane) in lanes.iter().enumerate() {
+                    lane.send_elems(Dir::Next,
+                                    &[100 * i as i32 + c.id as i32])
+                        .unwrap();
+                }
+                let prev = ((c.id + 2) % 3) as i32;
+                for (i, lane) in lanes.iter().enumerate().rev() {
+                    let got = lane.recv_elems(Dir::Prev).unwrap();
+                    assert_eq!(got, vec![100 * i as i32 + prev]);
+                }
+            })
+        }).collect();
+        for h in handles {
+            h.join().unwrap();
         }
     }
 
@@ -958,7 +1187,7 @@ mod tests {
         let comms = local_trio(NetConfig::zero());
         let handles: Vec<_> = comms.into_iter().map(|c| {
             thread::spawn(move || {
-                let off = c.channel(Chan::Offline);
+                let off = c.channel(ChanId::OFFLINE);
                 let prev = ((c.id + 2) % 3) as i32;
                 off.send_elems(Dir::Next, &[100 + c.id as i32]).unwrap();
                 c.send_elems(Dir::Next, &[c.id as i32]).unwrap();
@@ -983,7 +1212,7 @@ mod tests {
         let comms = local_trio(NetConfig::zero());
         let handles: Vec<_> = comms.into_iter().map(|c| {
             thread::spawn(move || {
-                let off = c.channel(Chan::Offline);
+                let off = c.channel(ChanId::OFFLINE);
                 let online = thread::spawn(move || {
                     for i in 0..50i32 {
                         c.send_elems(Dir::Next, &[i]).unwrap();

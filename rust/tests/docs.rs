@@ -1,0 +1,68 @@
+//! Documentation gate (runs in the CI `docs` job next to the rustdoc
+//! `-D warnings` build): OPERATIONS.md must cover every `serve` flag
+//! that exists (`cli::SERVE_FLAGS` is the single source of truth -- a
+//! flag added there without documentation fails here) plus the operator
+//! workflows ISSUE 4 requires it to describe.
+
+use cbnn::cli::SERVE_FLAGS;
+
+fn repo_doc(name: &str) -> String {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join(name);
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("{} at the repo root: {e}", name))
+}
+
+#[test]
+fn operations_covers_every_serve_flag() {
+    let ops = repo_doc("OPERATIONS.md");
+    for flag in SERVE_FLAGS {
+        assert!(ops.contains(&format!("--{flag}")),
+                "OPERATIONS.md does not document `--{flag}`");
+    }
+}
+
+#[test]
+fn operations_covers_subcommands_and_operator_workflows() {
+    let ops = repo_doc("OPERATIONS.md");
+    for sub in ["serve", "infer", "acc", "info"] {
+        assert!(ops.contains(&format!("`{sub}`"))
+                || ops.contains(&format!("cbnn {sub}")),
+                "OPERATIONS.md does not mention the `{sub}` subcommand");
+    }
+    // the operator topics ISSUE 4 names: party startup & dial retries,
+    // metrics reading, and watermark tuning
+    for needle in ["DialPolicy", "watermark", "PreprocMetrics",
+                   "underflow_calls", "ChanStats"] {
+        assert!(ops.contains(needle),
+                "OPERATIONS.md does not cover {needle}");
+    }
+}
+
+#[test]
+fn operations_has_a_worked_multi_model_example() {
+    let ops = repo_doc("OPERATIONS.md");
+    assert!(ops.lines().any(|l| l.matches("--model").count() >= 2),
+            "OPERATIONS.md has no invocation with two --model flags");
+}
+
+#[test]
+fn design_documents_the_channel_id_space() {
+    let design = repo_doc("DESIGN.md");
+    for needle in ["Multi-model multiplexing", "slot << 1", "ChanId",
+                   "unregistered"] {
+        assert!(design.contains(needle),
+                "DESIGN.md does not cover {needle}");
+    }
+}
+
+#[test]
+fn readme_maps_paper_sections_to_modules() {
+    let readme = repo_doc("README.md");
+    for needle in ["transport", "protocols", "coordinator", "offline",
+                   "Algorithm"] {
+        assert!(readme.contains(needle),
+                "README.md paper-to-module map misses {needle}");
+    }
+}

@@ -181,7 +181,7 @@ mod bank {
     use cbnn::ring::Tensor;
     use cbnn::testutil::threeparty::{every_op_model, run3_seeded};
     use cbnn::testutil::Rng;
-    use cbnn::transport::Chan;
+    use cbnn::transport::ChanId;
 
     const BATCH: usize = 2;
 
@@ -219,7 +219,7 @@ mod bank {
                 bank.credit(c);
             }
             drop(tx);
-            let off_comm = ctx.comm.channel(Chan::Offline);
+            let off_comm = ctx.comm.channel(ChanId::OFFLINE);
             let off_seeds = offline_seeds(seed, ctx.id());
             let proto = ctx.cfg;
             let bank_ref = &bank;

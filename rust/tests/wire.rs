@@ -8,7 +8,7 @@ use std::thread;
 use cbnn::ring::bits::BitTensor;
 use cbnn::ring::planes::BitPlanes;
 use cbnn::testutil::Rng;
-use cbnn::transport::{local_trio, Chan, Comm, Dir, NetConfig, WireError,
+use cbnn::transport::{local_trio, ChanId, Comm, Dir, NetConfig, WireError,
                       MAX_MSG_BYTES};
 
 /// Run a crafting closure on P0 and a checking closure on P1 (P2 idles).
@@ -198,10 +198,17 @@ fn planes_frame_with_wrong_geometry_is_malformed() {
 // ---- tagged channel frames ----------------------------------------------
 
 #[test]
-fn unknown_channel_tag_is_malformed() {
+fn unregistered_channel_id_is_malformed() {
     // the tag byte is attacker-controlled like everything else: a frame
-    // tagged outside {online, offline} must be Malformed, not mis-routed
-    for tag in [2u8, 7, 0x80, 0xFF] {
+    // tagged with a channel id nobody registered -- another model
+    // slot's lanes (0x02..), or the far end of the id space -- must be
+    // Malformed, not mis-routed and not parked forever
+    // includes slot 0's OFFLINE tag: the receiver never derived an
+    // offline handle, so even the "default" producer lane is
+    // unregistered until someone actually consumes it
+    for tag in [ChanId::OFFLINE.tag(), ChanId::online(1).tag(),
+                ChanId::offline(1).tag(), ChanId::online(63).tag(),
+                0x80, 0xFF] {
         let err = craft_and_check(
             move |c| {
                 let mut frame = vec![tag];
@@ -213,6 +220,41 @@ fn unknown_channel_tag_is_malformed() {
         );
         assert!(matches!(err, WireError::Malformed(_)), "tag {tag}: {err:?}");
     }
+}
+
+#[test]
+fn registering_a_model_lane_turns_malformed_into_parked() {
+    // a model-slot-1 frame is Malformed while the lane is unregistered
+    // (and consumed by the failing recv), but an identical frame read
+    // *after* the receiver registers the lane is parked and delivered
+    // -- registration at read time is the demux's source of truth
+    let on1_tag = ChanId::online(1).tag();
+    let (err_before, ok_after) = craft_and_check(
+        move |c| {
+            // two slot-1 frames, then a slot-0 frame; all are queued
+            // before the checker reads anything
+            for v in [1i32, 3] {
+                let mut frame = vec![on1_tag];
+                frame.extend_from_slice(&v.to_le_bytes());
+                c.send_frame(Dir::Next, frame).unwrap();
+            }
+            c.send_elems(Dir::Next, &[2]).unwrap();
+        },
+        |c| {
+            // NOT registered: the first slot-1 frame errs the slot-0
+            // recv (and is dropped with it)
+            let err = c.recv_elems(Dir::Prev).unwrap_err();
+            // register slot 1: the second slot-1 frame now parks for
+            // the new lane while the slot-0 recv skips past it
+            let on1 = c.channel(ChanId::online(1));
+            let a = c.recv_elems(Dir::Prev).unwrap();
+            let b = on1.recv_elems(Dir::Prev).unwrap();
+            (err, (a, b))
+        },
+    );
+    assert!(matches!(err_before, WireError::Malformed(_)),
+            "{err_before:?}");
+    assert_eq!(ok_after, (vec![2], vec![3]));
 }
 
 #[test]
@@ -245,7 +287,7 @@ fn offline_frame_during_pending_online_recv_is_parked_not_consumed() {
     // keep waiting for the online frame
     let (online, offline) = craft_and_check(
         |c| {
-            let off = c.channel(Chan::Offline);
+            let off = c.channel(ChanId::OFFLINE);
             off.send_bits(Dir::Next, &BitTensor::ones(9)).unwrap();
             // give the pending online recv a chance to be the thread
             // that reads (and must park) the offline frame
@@ -253,9 +295,11 @@ fn offline_frame_during_pending_online_recv_is_parked_not_consumed() {
             c.send_bits(Dir::Next, &BitTensor::zeros(5)).unwrap();
         },
         |c| {
+            // derive (= register) the offline lane up front, as every
+            // real producer does before traffic can flow
+            let off = c.channel(ChanId::OFFLINE);
             let online = c.recv_bits(Dir::Prev).unwrap();
-            let offline = c.channel(Chan::Offline)
-                .recv_bits(Dir::Prev).unwrap();
+            let offline = off.recv_bits(Dir::Prev).unwrap();
             (online, offline)
         },
     );
@@ -269,12 +313,12 @@ fn online_frames_park_symmetrically_for_offline_recv() {
         |c| {
             c.send_elems(Dir::Next, &[1]).unwrap();
             c.send_elems(Dir::Next, &[2]).unwrap();
-            c.channel(Chan::Offline).send_elems(Dir::Next, &[3]).unwrap();
+            c.channel(ChanId::OFFLINE).send_elems(Dir::Next, &[3]).unwrap();
         },
         |c| {
             // the offline recv must skip over (and park, in order) both
             // online frames
-            let off = c.channel(Chan::Offline).recv_elems(Dir::Prev)
+            let off = c.channel(ChanId::OFFLINE).recv_elems(Dir::Prev)
                 .unwrap();
             (off,
              c.recv_elems(Dir::Prev).unwrap(),
@@ -284,6 +328,74 @@ fn online_frames_park_symmetrically_for_offline_recv() {
     assert_eq!(offline, vec![3]);
     assert_eq!(online1, vec![1]);
     assert_eq!(online2, vec![2]);
+}
+
+#[test]
+fn two_models_frames_park_across_all_four_lanes() {
+    // the multi-model mirror of the PR 3 cross-channel parking tests:
+    // two model slots' online+offline lanes over one link, every frame
+    // sent before any recv, received in reverse lane order -- each recv
+    // must skip (and park, FIFO per lane) every foreign frame
+    let lanes_of = |c: &Comm| {
+        [c.channel(ChanId::online(1)), c.channel(ChanId::offline(1)),
+         c.channel(ChanId::online(2)), c.channel(ChanId::offline(2))]
+    };
+    let got = craft_and_check(
+        move |c| {
+            let lanes = lanes_of(c);
+            for (i, lane) in lanes.iter().enumerate() {
+                // two frames per lane: FIFO order within a lane must
+                // survive the cross-lane parking
+                lane.send_elems(Dir::Next, &[10 * i as i32]).unwrap();
+                lane.send_elems(Dir::Next, &[10 * i as i32 + 1]).unwrap();
+            }
+        },
+        move |c| {
+            let lanes = lanes_of(c);
+            let mut got = Vec::new();
+            for lane in lanes.iter().rev() {
+                let a = lane.recv_elems(Dir::Prev).unwrap();
+                let b = lane.recv_elems(Dir::Prev).unwrap();
+                got.push((a[0], b[0]));
+            }
+            got
+        },
+    );
+    assert_eq!(got, vec![(30, 31), (20, 21), (10, 11), (0, 1)]);
+}
+
+#[test]
+fn offline_lane_recv_pending_while_other_models_frames_arrive() {
+    // an offline-lane recv of model 1 is already blocked on the link
+    // when model 2's frames (and model 1's online frame) land: it must
+    // pump and park them, then deliver its own
+    let (off1, on1, on2) = craft_and_check(
+        |c| {
+            let on1 = c.channel(ChanId::online(1));
+            let on2 = c.channel(ChanId::online(2));
+            let off1 = c.channel(ChanId::offline(1));
+            on2.send_bits(Dir::Next, &BitTensor::zeros(3)).unwrap();
+            on1.send_bits(Dir::Next, &BitTensor::ones(7)).unwrap();
+            // give the pending offline recv a chance to be the reader
+            // that routes the foreign frames
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            off1.send_bits(Dir::Next, &BitTensor::ones(9)).unwrap();
+        },
+        |c| {
+            // register every lane first (frames may arrive before the
+            // handles would otherwise exist)
+            let on1 = c.channel(ChanId::online(1));
+            let on2 = c.channel(ChanId::online(2));
+            let off1 = c.channel(ChanId::offline(1));
+            let off = off1.recv_bits(Dir::Prev).unwrap();
+            (off,
+             on1.recv_bits(Dir::Prev).unwrap(),
+             on2.recv_bits(Dir::Prev).unwrap())
+        },
+    );
+    assert_eq!(off1, BitTensor::ones(9));
+    assert_eq!(on1, BitTensor::ones(7));
+    assert_eq!(on2, BitTensor::zeros(3));
 }
 
 #[test]
