@@ -1,0 +1,70 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: compare a fresh bench JSON against the
+committed baseline.
+
+Usage: bench_compare.py BASELINE.json FRESH.json
+
+Every (section, op, n) row recorded in the baseline must exist in the
+fresh run with `fast_ms` no more than TOLERANCE times the baseline's
+(lower is better; the `baseline_ms` column is the *slow reference arm*
+inside one run, not the regression baseline, so only `fast_ms` is
+gated).  A baseline with an empty `results` list -- the committed stubs
+from before a toolchain was available -- skips the comparison, so the
+job cannot fail before a real baseline has been promoted.
+"""
+
+import json
+import sys
+
+TOLERANCE = 1.20  # fail on >20% regression
+
+
+def key(row):
+    return (row["section"], row["op"], row["n"])
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    base_path, fresh_path = sys.argv[1], sys.argv[2]
+    with open(base_path) as f:
+        base = json.load(f)
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+
+    base_rows = base.get("results") or []
+    if not base_rows:
+        print(f"{base_path}: no committed baseline yet (empty results) "
+              "-- skipping comparison; promote a green run's artifact "
+              "to enable the gate")
+        return 0
+
+    fresh_rows = {key(r): r for r in fresh.get("results") or []}
+    failures = []
+    for row in base_rows:
+        got = fresh_rows.get(key(row))
+        if got is None:
+            failures.append(f"{key(row)}: row missing from fresh run")
+            continue
+        if got["fast_ms"] > row["fast_ms"] * TOLERANCE:
+            failures.append(
+                f"{key(row)}: fast_ms {got['fast_ms']:.3f} vs baseline "
+                f"{row['fast_ms']:.3f} "
+                f"(+{100 * (got['fast_ms'] / row['fast_ms'] - 1):.0f}%, "
+                f"limit +{100 * (TOLERANCE - 1):.0f}%)")
+
+    checked = len(base_rows)
+    if failures:
+        print(f"{fresh_path}: {len(failures)}/{checked} rows regressed "
+              f"past {TOLERANCE:.2f}x:")
+        for f_ in failures:
+            print(f"  {f_}")
+        return 1
+    print(f"{fresh_path}: {checked} rows within {TOLERANCE:.2f}x of "
+          f"{base_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,6 +19,7 @@ use std::path::{Path, PathBuf};
 pub const SERVE_FLAGS: &[&str] = &[
     "model", "artifacts", "net", "backend", "batch", "requests",
     "prefetch", "bank-low", "bank-high", "bank-chunk", "bank-capacity",
+    "max-parked-bytes", "admin",
 ];
 
 /// Parsed argv: one optional subcommand, `--flag [value]` pairs (a flag

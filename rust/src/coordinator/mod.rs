@@ -32,7 +32,25 @@
 //! different models compute exactly what their single-model sessions
 //! would -- bit-identically (asserted by `rust/tests/multimodel.rs`).
 //! See DESIGN.md §Multi-model multiplexing.
+//!
+//! **Registry lifecycle.**  Registry slots carry a typed state machine
+//! ([`SlotState`]: `Starting -> Serving -> Draining -> Quarantined ->
+//! Serving`).  A desynchronized slot is [`ModelRegistry::quarantine`]d:
+//! its lanes are retired at the transport (waking any party thread
+//! blocked mid-protocol with `WireError::Closed`), its threads joined,
+//! its `TupleBank`s drained and dropped -- the other models sharing the
+//! links never notice.  [`ModelRegistry::respawn`] restarts the slot on
+//! the *same* `ChanId` lanes under a fresh seed epoch
+//! (`engine::session::epoch_seed`).  [`ModelRegistry::add_model`] /
+//! [`ModelRegistry::remove_model`] hot-swap models on a live registry:
+//! removal quiesces (queued batches finish), retires the lanes (purging
+//! their parked frames at the demux), and returns the slot id to a free
+//! list that the next add reuses lowest-first.  Per-slot
+//! `metrics::LifecycleCounters` record the history.  Pinned by
+//! `rust/tests/lifecycle.rs`.
 
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::{self, JoinHandle};
@@ -40,10 +58,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::engine::session::{model_seed, SessionConfig};
+use crate::engine::session::{epoch_seed, model_seed, SessionConfig};
 use crate::engine::{infer_batch_pooled, msb_demand_for, share_model,
                     SharedModel};
-use crate::metrics::{Histogram, ModelRollup, PreprocMetrics, Throughput};
+use crate::metrics::{Histogram, LifecycleCounters, ModelRollup,
+                     PreprocMetrics, Throughput};
 use crate::nn::Model;
 use crate::offline::{offline_seeds, run_producer, BankConfig, TupleBank,
                      TupleSource};
@@ -51,7 +70,7 @@ use crate::prf::PartySeeds;
 use crate::protocols::Ctx;
 use crate::ring::Tensor;
 use crate::runtime::make_backend;
-use crate::transport::{local_trio, ChanId, Comm, Stats};
+use crate::transport::{local_trio, ChanControl, ChanId, Comm, Stats};
 
 enum Job {
     Infer { inputs: Vec<Tensor>, batch: usize },
@@ -59,6 +78,10 @@ enum Job {
     /// party's producer thread; the bank is credited in broadcast order).
     Refill(usize),
     Shutdown,
+    /// Fault injection (tests, ops drills): the party thread returns
+    /// immediately, skipping the graceful drain -- exactly the shape of
+    /// a crashed thread.
+    Die,
 }
 
 /// Broadcast state: the three job senders plus the pump's dispatch
@@ -85,14 +108,28 @@ struct Sched {
 /// `model_seed(session_seed, slot)`.
 pub struct Service {
     sched: Mutex<Sched>,
-    logits_rx: Receiver<Result<Vec<Vec<i32>>>>,
-    handles: Vec<JoinHandle<Stats>>,
+    /// Mutex so concurrent holders (registry `Arc<Service>`) serialize
+    /// batches exactly like the single-owner path always has.
+    logits_rx: Mutex<Receiver<Result<Vec<Vec<i32>>>>>,
+    /// Party thread handles until joined; `joined` caches the outcome
+    /// (stats plus any drain failure) so shutdown/abort are idempotent
+    /// -- a retried drain re-reports the same panic instead of
+    /// upgrading it to a silent success.
+    handles: Mutex<Vec<JoinHandle<Stats>>>,
+    joined: Mutex<Option<([Stats; 3], Option<String>)>>,
+    cancelled: AtomicBool,
+    /// Per-party weak lifecycle levers on the links: retire this
+    /// service's lanes without keeping the links alive (a dropped trio
+    /// already surfaces `Closed` on its own).
+    controls: Vec<ChanControl>,
     banks: Vec<Arc<TupleBank>>,
     bank_cfg: BankConfig,
     preprocess: bool,
     model: Arc<Model>,
     /// The channel-id model slot this service's lanes are bound to.
     pub slot: u8,
+    /// The seed epoch this service runs (bumped per quarantine/respawn).
+    pub epoch: u32,
     pub model_name: String,
     pub setup_time: Duration,
 }
@@ -111,8 +148,19 @@ impl Service {
     /// lane ids as slot s of a registry, so logits are bit-comparable.
     pub fn start_at(model: Arc<Model>, cfg: SessionConfig, slot: u8)
                     -> Result<Service> {
+        Service::start_at_epoch(model, cfg, slot, 0)
+    }
+
+    /// `start_at` on an explicit seed epoch: the reference arm for
+    /// respawned registry slots (a standalone service at the same slot
+    /// and epoch is bit-comparable to the respawned one).
+    pub fn start_at_epoch(model: Arc<Model>, cfg: SessionConfig, slot: u8,
+                          epoch: u32) -> Result<Service> {
         let comms = local_trio(cfg.net);
-        Service::start_on(model, cfg, comms, slot)
+        for c in &comms {
+            c.set_parked_cap(cfg.max_parked_bytes);
+        }
+        Service::start_on_epoch(model, cfg, comms, slot, epoch)
     }
 
     /// Spin up this model's party threads over *externally provided*
@@ -126,11 +174,22 @@ impl Service {
     /// `model_seed(cfg.session_seed, slot)`.
     pub fn start_on(model: Arc<Model>, cfg: SessionConfig,
                     comms: [Comm; 3], slot: u8) -> Result<Service> {
+        Service::start_on_epoch(model, cfg, comms, slot, 0)
+    }
+
+    /// `start_on` on an explicit seed epoch (see
+    /// `engine::session::epoch_seed`): the registry's respawn path --
+    /// same `ChanId` lanes, fresh PRF domains, so the new service can
+    /// never resume the quarantined epoch's correlated-randomness
+    /// streams.
+    pub fn start_on_epoch(model: Arc<Model>, cfg: SessionConfig,
+                          comms: [Comm; 3], slot: u8, epoch: u32)
+                          -> Result<Service> {
         let bank_cfg = cfg.bank.unwrap_or_else(|| {
             BankConfig::auto(msb_demand_for(&model, cfg.max_batch.max(1)))
         });
         bank_cfg.validate().map_err(|e| anyhow!("bank config: {e}"))?;
-        let seed = model_seed(cfg.session_seed, slot);
+        let seed = epoch_seed(model_seed(cfg.session_seed, slot), epoch);
         // derive (= register) the lanes on every party BEFORE spawning
         // anything: a peer's first frame for this slot must find the id
         // registered, or the demux would reject it as malformed.  The
@@ -143,8 +202,15 @@ impl Service {
                 .then(|| on.channel(ChanId::offline(slot)));
             (on, off)
         }).collect();
-        let banks: Vec<Arc<TupleBank>> =
-            (0..3).map(|_| Arc::new(TupleBank::new(bank_cfg))).collect();
+        // weak lifecycle levers (cancel/quarantine); weak so a retired
+        // standalone service still drops its links (peers see Closed)
+        let controls: Vec<ChanControl> =
+            lanes.iter().map(|(on, _)| on.control()).collect();
+        let mut banks: Vec<Arc<TupleBank>> = Vec::with_capacity(3);
+        for _ in 0..3 {
+            banks.push(Arc::new(TupleBank::try_new(bank_cfg)
+                .map_err(|e| anyhow!("bank config: {e}"))?));
+        }
         let (logits_tx, logits_rx) = channel();
         let mut job_txs = Vec::new();
         let mut handles = Vec::new();
@@ -204,6 +270,7 @@ impl Service {
                 while let Ok(job) = jrx.recv() {
                     match job {
                         Job::Shutdown => break,
+                        Job::Die => return comm.stats(),
                         Job::Refill(n) => {
                             // credit in broadcast order (deterministic
                             // across parties), then hand the mint to the
@@ -258,12 +325,16 @@ impl Service {
         }
         let svc = Service {
             sched: Mutex::new(Sched { txs: job_txs, dispatched: 0 }),
-            logits_rx,
-            handles,
+            logits_rx: Mutex::new(logits_rx),
+            handles: Mutex::new(handles),
+            joined: Mutex::new(None),
+            cancelled: AtomicBool::new(false),
+            controls,
             banks,
             bank_cfg,
             preprocess: cfg.opts.preprocess,
             slot,
+            epoch,
             model_name: model.name.clone(),
             model,
             setup_time: t0.elapsed(),
@@ -333,9 +404,9 @@ impl Service {
     /// own links a failed protocol surfaces as `Err` (the failing
     /// party's retirement drops the link cores and `Closed` unblocks
     /// its peers); in a registry the shared links outlive one lane's
-    /// threads, so a *partial* lane failure can leave this call
-    /// blocked -- see DESIGN.md §Multi-model multiplexing, failure
-    /// isolation.
+    /// threads, so a *partial* lane failure leaves this call blocked
+    /// until [`ModelRegistry::quarantine`] retires the slot's lanes --
+    /// at which point it returns `Err` instead of hanging.
     pub fn infer(&self, inputs: Vec<Tensor>) -> Result<Vec<Vec<i32>>> {
         let batch = inputs.len();
         // keep the bank at its own watermarks even without a Coordinator
@@ -343,6 +414,7 @@ impl Service {
         // party's queue (same broadcast lock), so the producers overlap
         // this batch instead of draining the prefill dry
         self.top_up_to(0);
+        let rx = self.logits_rx.lock().unwrap();
         {
             let sched = self.sched.lock().unwrap();
             for (id, tx) in sched.txs.iter().enumerate() {
@@ -353,23 +425,117 @@ impl Service {
                 tx.send(job).map_err(|_| anyhow!("party {id} gone"))?;
             }
         }
-        self.logits_rx.recv().map_err(|_| anyhow!("no response"))?
+        rx.recv().map_err(|_| anyhow!("no response"))?
     }
 
-    /// Stop the party threads and collect their comm stats.  In a
-    /// registry, the returned stats are *link-wide* (the cores are
-    /// shared); use `Stats::chan`/`Stats::model` with this service's
-    /// `slot` for its own rows.
-    pub fn shutdown(self) -> [Stats; 3] {
-        {
-            let sched = self.sched.lock().unwrap();
-            for tx in &sched.txs {
-                let _ = tx.send(Job::Shutdown);
+    /// Ask every party thread to stop once its queued jobs are done
+    /// (the graceful half of `shutdown`).
+    fn request_stop(&self) {
+        let sched = self.sched.lock().unwrap();
+        for tx in &sched.txs {
+            let _ = tx.send(Job::Shutdown);
+        }
+    }
+
+    /// Forcefully cancel this service: drain+close its banks (waking
+    /// backpressured producers and blocked draws), ask the party
+    /// threads to stop, and retire both of its lanes on every party --
+    /// which turns any recv blocked mid-protocol into
+    /// `WireError::Closed`, so a desynchronized slot's threads unwind
+    /// instead of hanging on the shared links.  Idempotent; pair with
+    /// [`Service::join_parties`] (or call [`Service::abort`]).
+    pub fn cancel(&self) {
+        if self.cancelled.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        for b in &self.banks {
+            let _ = b.drain();
+        }
+        self.request_stop();
+        for ctl in &self.controls {
+            ctl.close_chan(ChanId::online(self.slot));
+            ctl.close_chan(ChanId::offline(self.slot));
+        }
+    }
+
+    /// Join the party threads and collect their comm stats, typed: a
+    /// panicked thread surfaces as an error instead of a silent
+    /// default.  Idempotent (the first join's stats are cached).  In a
+    /// registry the stats are *link-wide* (the cores are shared); use
+    /// `Stats::chan`/`Stats::model` with this service's `slot` for its
+    /// own rows.
+    pub fn join_parties(&self) -> Result<[Stats; 3]> {
+        if let Some((stats, err)) = self.joined.lock().unwrap().clone() {
+            return match err {
+                None => Ok(stats),
+                Some(e) => Err(anyhow!(e)),
+            };
+        }
+        let handles: Vec<_> = {
+            let mut h = self.handles.lock().unwrap();
+            h.drain(..).collect()
+        };
+        if handles.len() != 3 {
+            return Err(anyhow!(
+                "party threads already being joined elsewhere"));
+        }
+        // join ALL three before reporting: stopping at the first panic
+        // would detach the remaining threads and lose their stats
+        let mut stats = Vec::with_capacity(3);
+        let mut panicked = Vec::new();
+        for (i, h) in handles.into_iter().enumerate() {
+            match h.join() {
+                Ok(s) => stats.push(s),
+                Err(_) => {
+                    panicked.push(i);
+                    stats.push(Stats::default());
+                }
             }
         }
-        let stats: Vec<Stats> = self.handles.into_iter()
-            .map(|h| h.join().unwrap_or_default()).collect();
-        stats.try_into().expect("three party threads")
+        let arr: [Stats; 3] = stats.try_into().map_err(|_| anyhow!(
+            "expected exactly three party threads"))?;
+        let err = (!panicked.is_empty()).then(|| format!(
+            "party thread(s) {panicked:?} panicked during drain (their \
+             stats rows are empty)"));
+        *self.joined.lock().unwrap() = Some((arr.clone(), err.clone()));
+        match err {
+            None => Ok(arr),
+            Some(e) => Err(anyhow!(e)),
+        }
+    }
+
+    /// Graceful stop: queued batches finish, producers drain, then the
+    /// party threads are joined.  Only safe while the trio is healthy
+    /// (a desynchronized slot must be [`Service::abort`]ed -- its
+    /// threads never reach their queues).
+    pub fn shutdown(&self) -> Result<[Stats; 3]> {
+        self.request_stop();
+        self.join_parties()
+    }
+
+    /// Forceful stop: [`Service::cancel`] then join.  The quarantine
+    /// path -- works even with party threads blocked mid-protocol.
+    pub fn abort(&self) -> Result<[Stats; 3]> {
+        self.cancel();
+        self.join_parties()
+    }
+
+    /// Fault injection for tests and ops drills: abruptly kill one
+    /// party thread (it exits without the graceful drain, exactly like
+    /// a crashed thread), leaving its peers blocked mid-protocol on the
+    /// shared links.  Pair with [`ModelRegistry::quarantine`] to
+    /// exercise recovery.
+    pub fn inject_fault(&self, party: usize) {
+        let sched = self.sched.lock().unwrap();
+        let _ = sched.txs[party].send(Job::Die);
+    }
+
+    /// Fault injection: retire this service's online lane on one party
+    /// only, so that party's next protocol recv dies mid-batch while
+    /// its peers block -- the lane-desync shape the quarantine path
+    /// exists for.
+    pub fn sever_lane(&self, party: usize) {
+        self.controls[party].close_chan(ChanId::online(self.slot));
     }
 }
 
@@ -389,8 +555,39 @@ impl ModelSpec {
     }
 }
 
-/// Typed registry failure: what was wrong with a spec list or a lookup,
-/// inspectable by callers (the CLI maps these to flag hints).
+/// Lifecycle state of one registry slot.  The machine is `Starting ->
+/// Serving -> Draining -> Quarantined -> (respawn) Starting -> Serving`;
+/// `remove_model` leaves from `Serving` (via `Draining`) or
+/// `Quarantined`, returning the slot id to the free list.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SlotState {
+    /// A service is being brought up for this slot (add/respawn).
+    Starting,
+    /// Healthy: routing `infer` by name.
+    Serving,
+    /// Lifecycle transition in progress: quiescing (remove) or
+    /// cancelling (quarantine).
+    Draining,
+    /// Cancelled after a desync: lanes retired, bank drained, threads
+    /// joined.  `respawn` restarts it; `remove_model` frees the slot.
+    Quarantined,
+}
+
+impl std::fmt::Display for SlotState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            SlotState::Starting => "starting",
+            SlotState::Serving => "serving",
+            SlotState::Draining => "draining",
+            SlotState::Quarantined => "quarantined",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Typed registry failure: what was wrong with a spec list, a lookup,
+/// or a lifecycle transition, inspectable by callers (the CLI maps
+/// these to flag hints / admin messages).
 #[derive(Debug)]
 pub enum RegistryError {
     /// `start` needs at least one model spec.
@@ -403,6 +600,13 @@ pub enum RegistryError {
     UnknownModel(String),
     /// A model's `Service` failed to start or serve.
     Service { model: String, source: anyhow::Error },
+    /// The slot exists but is not in a state the operation accepts
+    /// (e.g. `infer` on a quarantined model, `respawn` on a serving
+    /// one).
+    SlotUnavailable { model: String, state: SlotState },
+    /// A drain/join failed (party thread panicked) -- the slot's state
+    /// transition still happened; the detail says what was lost.
+    Drain { model: String, detail: String },
 }
 
 impl std::fmt::Display for RegistryError {
@@ -420,21 +624,66 @@ impl std::fmt::Display for RegistryError {
                 write!(f, "no model named '{n}' in the registry"),
             RegistryError::Service { model, source } =>
                 write!(f, "model '{model}': {source}"),
+            RegistryError::SlotUnavailable { model, state } =>
+                write!(f, "model '{model}' is {state}, not serving this \
+                           operation"),
+            RegistryError::Drain { model, detail } =>
+                write!(f, "model '{model}' drain: {detail}"),
         }
     }
 }
 
 impl std::error::Error for RegistryError {}
 
+/// One registry slot's bookkeeping: the occupying model, its lifecycle
+/// state, and (while serving) the live service.
+struct Entry {
+    name: String,
+    model: Arc<Model>,
+    bank: Option<BankConfig>,
+    slot: u8,
+    epoch: u32,
+    state: SlotState,
+    service: Option<Arc<Service>>,
+}
+
+/// Interior registry state, one lock: lifecycle transitions hold it
+/// only briefly (never across a blocking batch or a service start), so
+/// healthy models keep serving while one slot churns.
+struct Inner {
+    entries: Vec<Entry>,
+    /// Slot ids retired by `remove_model`, reused lowest-first.
+    free_slots: Vec<u8>,
+    /// Next never-used slot id.
+    next_slot: u8,
+    /// Per-slot lifecycle counters, surviving the models that occupy
+    /// the slot.
+    lifecycle: BTreeMap<u8, LifecycleCounters>,
+}
+
+impl Inner {
+    fn entry_mut(&mut self, name: &str)
+                 -> Result<&mut Entry, RegistryError> {
+        self.entries.iter_mut()
+            .find(|e| e.name == name)
+            .ok_or_else(|| RegistryError::UnknownModel(name.to_string()))
+    }
+}
+
 /// N per-model [`Service`]s multiplexed over *one* process's three
 /// links: the multi-model serving front.  Each model slot gets its own
 /// channel-id lane pair, PRF seed domain, `TupleBank`, and producer
-/// lane; requests route by model name.  Slots are assigned in spec
-/// order, so a given spec list is reproducible run-to-run (and against
-/// `Service::start_at` reference arms).
+/// lane; requests route by model name.  Initial slots are assigned in
+/// spec order, so a given spec list is reproducible run-to-run (and
+/// against `Service::start_at` reference arms); hot-added models reuse
+/// freed slot ids lowest-first.  All lifecycle operations take `&self`
+/// (state is behind one internal lock), so an admin thread can
+/// quarantine a stuck slot while other threads keep serving -- and
+/// while a request is blocked *on* that slot.
 pub struct ModelRegistry {
     links: [Comm; 3],
-    entries: Vec<(String, Service)>,
+    cfg: SessionConfig,
+    inner: Mutex<Inner>,
 }
 
 impl ModelRegistry {
@@ -462,37 +711,102 @@ impl ModelRegistry {
             }
         }
         let links = local_trio(cfg.net);
-        let mut entries = Vec::with_capacity(specs.len());
+        for c in &links {
+            c.set_parked_cap(cfg.max_parked_bytes);
+        }
+        let reg = ModelRegistry {
+            links,
+            cfg: cfg.clone(),
+            inner: Mutex::new(Inner {
+                entries: Vec::with_capacity(specs.len()),
+                free_slots: Vec::new(),
+                next_slot: specs.len() as u8,
+                lifecycle: BTreeMap::new(),
+            }),
+        };
         for (slot, spec) in specs.into_iter().enumerate() {
-            let mut mcfg = cfg.clone();
-            mcfg.bank = spec.bank.or(cfg.bank);
-            let comms =
-                [links[0].clone(), links[1].clone(), links[2].clone()];
-            let svc = Service::start_on(spec.model, mcfg, comms,
-                                        slot as u8)
+            let svc = reg.start_slot(&spec.model, spec.bank, slot as u8, 0)
                 .map_err(|e| RegistryError::Service {
                     model: spec.name.clone(),
                     source: e,
                 })?;
-            entries.push((spec.name, svc));
+            reg.inner.lock().unwrap().entries.push(Entry {
+                name: spec.name,
+                model: spec.model,
+                bank: spec.bank,
+                slot: slot as u8,
+                epoch: 0,
+                state: SlotState::Serving,
+                service: Some(Arc::new(svc)),
+            });
         }
-        Ok(ModelRegistry { links, entries })
+        Ok(reg)
     }
 
-    /// Registered model names, in slot order.
-    pub fn names(&self) -> Vec<&str> {
-        self.entries.iter().map(|(n, _)| n.as_str()).collect()
+    /// Bring up one slot's service over the shared links (the
+    /// start/add/respawn workhorse; never called with the inner lock
+    /// held -- setup is interactive and healthy slots must keep
+    /// serving).
+    fn start_slot(&self, model: &Arc<Model>, bank: Option<BankConfig>,
+                  slot: u8, epoch: u32) -> Result<Service> {
+        let mut mcfg = self.cfg.clone();
+        mcfg.bank = bank.or(self.cfg.bank);
+        let comms =
+            [self.links[0].clone(), self.links[1].clone(),
+             self.links[2].clone()];
+        Service::start_on_epoch(Arc::clone(model), mcfg, comms, slot,
+                                epoch)
     }
 
-    /// The service bound to `name`.
-    pub fn service(&self, name: &str) -> Result<&Service, RegistryError> {
-        self.entries.iter()
-            .find(|(n, _)| n == name)
-            .map(|(_, s)| s)
-            .ok_or_else(|| RegistryError::UnknownModel(name.to_string()))
+    /// Registered model names (any state), in slot order.
+    pub fn names(&self) -> Vec<String> {
+        let inner = self.inner.lock().unwrap();
+        let mut rows: Vec<(u8, String)> = inner.entries.iter()
+            .map(|e| (e.slot, e.name.clone())).collect();
+        rows.sort();
+        rows.into_iter().map(|(_, n)| n).collect()
     }
 
-    /// Route one batch to `name`'s service (blocking).
+    /// Every slot's (name, slot, state, epoch), in slot order -- the
+    /// admin `status` view.
+    pub fn status(&self) -> Vec<(String, u8, SlotState, u32)> {
+        let inner = self.inner.lock().unwrap();
+        let mut rows: Vec<_> = inner.entries.iter()
+            .map(|e| (e.name.clone(), e.slot, e.state, e.epoch))
+            .collect();
+        rows.sort_by_key(|r| r.1);
+        rows
+    }
+
+    /// The current lifecycle state of `name`'s slot.
+    pub fn state(&self, name: &str) -> Result<SlotState, RegistryError> {
+        let mut inner = self.inner.lock().unwrap();
+        Ok(inner.entry_mut(name)?.state)
+    }
+
+    /// Per-slot lifecycle counters (quarantines, respawns, swaps),
+    /// keyed by slot id; slots that never churned have no entry.
+    pub fn lifecycle_counters(&self) -> BTreeMap<u8, LifecycleCounters> {
+        self.inner.lock().unwrap().lifecycle.clone()
+    }
+
+    /// The live service bound to `name` (must be `Serving`).
+    pub fn service(&self, name: &str)
+                   -> Result<Arc<Service>, RegistryError> {
+        let mut inner = self.inner.lock().unwrap();
+        let e = inner.entry_mut(name)?;
+        match (&e.service, e.state) {
+            (Some(svc), SlotState::Serving) => Ok(Arc::clone(svc)),
+            _ => Err(RegistryError::SlotUnavailable {
+                model: name.to_string(),
+                state: e.state,
+            }),
+        }
+    }
+
+    /// Route one batch to `name`'s service (blocking).  The registry
+    /// lock is released before the batch runs, so other models -- and
+    /// lifecycle operations on *this* model -- proceed concurrently.
     pub fn infer(&self, name: &str, inputs: Vec<Tensor>)
                  -> Result<Vec<Vec<i32>>, RegistryError> {
         let svc = self.service(name)?;
@@ -502,31 +816,275 @@ impl ModelRegistry {
         })
     }
 
+    /// Cancel one slot after a desync (`Serving -> Draining ->
+    /// Quarantined`): retire its lanes at the transport (any request
+    /// blocked on it errs instead of hanging), join its party threads,
+    /// drain+drop its banks.  The other slots sharing the links are
+    /// untouched.  `respawn` restarts it; `remove_model` frees it.
+    pub fn quarantine(&self, name: &str) -> Result<(), RegistryError> {
+        let svc = {
+            let mut inner = self.inner.lock().unwrap();
+            let e = inner.entry_mut(name)?;
+            if e.state != SlotState::Serving {
+                return Err(RegistryError::SlotUnavailable {
+                    model: name.to_string(),
+                    state: e.state,
+                });
+            }
+            let Some(svc) = e.service.clone() else {
+                return Err(RegistryError::Drain {
+                    model: name.to_string(),
+                    detail: "serving slot has no service handle".into(),
+                });
+            };
+            e.state = SlotState::Draining;
+            svc
+        };
+        let joined = svc.abort();
+        let mut inner = self.inner.lock().unwrap();
+        let slot = {
+            let e = inner.entry_mut(name)?;
+            e.state = SlotState::Quarantined;
+            e.service = None; // drops the drained banks with the service
+            e.slot
+        };
+        inner.lifecycle.entry(slot).or_default().quarantines += 1;
+        joined.map(|_| ()).map_err(|err| RegistryError::Drain {
+            model: name.to_string(),
+            detail: err.to_string(),
+        })
+    }
+
+    /// Restart a quarantined slot on the same `ChanId` lanes under a
+    /// fresh seed epoch (`Quarantined -> Starting -> Serving`).  Stale
+    /// frames of the dead epoch are swept off the links before the
+    /// lanes re-open; the sweep is best-effort (`Comm::sweep` documents
+    /// the residual race and its containment -- a misdelivered stale
+    /// frame desyncs the new epoch, which is simply quarantined again).
+    pub fn respawn(&self, name: &str) -> Result<(), RegistryError> {
+        let (model, bank, slot, epoch) = {
+            let mut inner = self.inner.lock().unwrap();
+            let e = inner.entry_mut(name)?;
+            if e.state != SlotState::Quarantined {
+                return Err(RegistryError::SlotUnavailable {
+                    model: name.to_string(),
+                    state: e.state,
+                });
+            }
+            e.state = SlotState::Starting;
+            (Arc::clone(&e.model), e.bank, e.slot, e.epoch + 1)
+        };
+        for c in &self.links {
+            c.sweep();
+        }
+        let started = self.start_slot(&model, bank, slot, epoch);
+        let mut inner = self.inner.lock().unwrap();
+        match started {
+            Ok(svc) => {
+                {
+                    let e = inner.entry_mut(name)?;
+                    e.service = Some(Arc::new(svc));
+                    e.state = SlotState::Serving;
+                    e.epoch = epoch;
+                }
+                let lc = inner.lifecycle.entry(slot).or_default();
+                lc.respawns += 1;
+                lc.epoch = epoch;
+                Ok(())
+            }
+            Err(err) => {
+                inner.entry_mut(name)?.state = SlotState::Quarantined;
+                Err(RegistryError::Service {
+                    model: name.to_string(),
+                    source: err,
+                })
+            }
+        }
+    }
+
+    /// Hot-add a model to the live registry: the lowest freed slot id
+    /// is reused (else the next fresh one), the service is brought up
+    /// on its lanes, and the name routes once it is `Serving`.  Returns
+    /// the slot id.
+    pub fn add_model(&self, spec: ModelSpec)
+                     -> Result<u8, RegistryError> {
+        let slot = {
+            let mut inner = self.inner.lock().unwrap();
+            if inner.entries.iter().any(|e| e.name == spec.name) {
+                return Err(RegistryError::DuplicateModel(spec.name));
+            }
+            let slot = if inner.free_slots.is_empty() {
+                if inner.next_slot as usize >= ChanId::MAX_MODELS {
+                    return Err(RegistryError::TooManyModels {
+                        count: inner.entries.len() + 1,
+                        max: ChanId::MAX_MODELS,
+                    });
+                }
+                let s = inner.next_slot;
+                inner.next_slot += 1;
+                s
+            } else {
+                // sorted ascending: index 0 is the lowest freed id
+                inner.free_slots.remove(0)
+            };
+            inner.entries.push(Entry {
+                name: spec.name.clone(),
+                model: Arc::clone(&spec.model),
+                bank: spec.bank,
+                slot,
+                epoch: 0,
+                state: SlotState::Starting,
+                service: None,
+            });
+            slot
+        };
+        // a reused slot may have dead-epoch frames still queued on the
+        // links (a quarantined-then-removed occupant): sweep before the
+        // lanes re-open, exactly like respawn does
+        for c in &self.links {
+            c.sweep();
+        }
+        let started = self.start_slot(&spec.model, spec.bank, slot, 0);
+        let mut inner = self.inner.lock().unwrap();
+        match started {
+            Ok(svc) => {
+                {
+                    let e = inner.entry_mut(&spec.name)?;
+                    e.service = Some(Arc::new(svc));
+                    e.state = SlotState::Serving;
+                }
+                let lc = inner.lifecycle.entry(slot).or_default();
+                lc.swaps_in += 1;
+                lc.epoch = 0;
+                Ok(slot)
+            }
+            Err(err) => {
+                inner.entries.retain(|e| e.name != spec.name);
+                inner.free_slots.push(slot);
+                inner.free_slots.sort_unstable();
+                Err(RegistryError::Service {
+                    model: spec.name,
+                    source: err,
+                })
+            }
+        }
+    }
+
+    /// Hot-remove a model from the live registry: a serving slot is
+    /// quiesced (`Serving -> Draining`: queued batches finish, the
+    /// producers drain), its lanes are retired with their parked frames
+    /// purged at the demux, and the slot id returns to the free list.
+    /// A quarantined slot (lanes already retired) is simply freed.
+    pub fn remove_model(&self, name: &str) -> Result<(), RegistryError> {
+        let svc = {
+            let mut inner = self.inner.lock().unwrap();
+            let e = inner.entry_mut(name)?;
+            match e.state {
+                SlotState::Serving => {
+                    e.state = SlotState::Draining;
+                    e.service.clone()
+                }
+                SlotState::Quarantined => {
+                    // claim the slot while unlocked below: a concurrent
+                    // respawn must not revive it mid-removal (two live
+                    // services on one lane pair)
+                    e.state = SlotState::Draining;
+                    None
+                }
+                state => {
+                    return Err(RegistryError::SlotUnavailable {
+                        model: name.to_string(),
+                        state,
+                    });
+                }
+            }
+        };
+        let mut drain_err = None;
+        if let Some(svc) = &svc {
+            // quiesce-then-close: the graceful drain finishes queued
+            // batches before the threads exit; only then are the lanes
+            // retired (closing them first would kill those batches)
+            if let Err(e) = svc.shutdown() {
+                drain_err = Some(e.to_string());
+            }
+            for c in &self.links {
+                c.close_chan(ChanId::online(svc.slot));
+                c.close_chan(ChanId::offline(svc.slot));
+            }
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let slot = inner.entry_mut(name)?.slot;
+        inner.entries.retain(|e| e.name != name);
+        inner.free_slots.push(slot);
+        inner.free_slots.sort_unstable();
+        inner.lifecycle.entry(slot).or_default().swaps_out += 1;
+        match drain_err {
+            None => Ok(()),
+            Some(detail) => Err(RegistryError::Drain {
+                model: name.to_string(),
+                detail,
+            }),
+        }
+    }
+
     /// Party `party`'s link-wide comm stats (totals plus every model
     /// lane's `ChanStats` row; rows sum to the totals).
     pub fn link_stats(&self, party: usize) -> Stats {
         self.links[party].stats()
     }
 
-    /// Per-model serving rollups (party 0's view): each model's online
-    /// and offline lane traffic plus its bank counters.
+    /// Per-model serving rollups (party 0's view), in slot order: each
+    /// model's online and offline lane traffic, its bank counters (a
+    /// quarantined slot reports its last-drained defaults), and its
+    /// slot's lifecycle history.
     pub fn rollups(&self) -> Vec<ModelRollup> {
         let stats = self.link_stats(0);
-        self.entries.iter().map(|(name, svc)| ModelRollup {
-            name: name.clone(),
-            slot: svc.slot,
-            online: stats.chan(ChanId::online(svc.slot)),
-            offline: stats.chan(ChanId::offline(svc.slot)),
-            preproc: svc.bank_handle(0).metrics(),
-        }).collect()
+        let inner = self.inner.lock().unwrap();
+        let mut rows: Vec<ModelRollup> = inner.entries.iter()
+            .map(|e| ModelRollup {
+                name: e.name.clone(),
+                slot: e.slot,
+                online: stats.chan(ChanId::online(e.slot)),
+                offline: stats.chan(ChanId::offline(e.slot)),
+                preproc: e.service.as_ref()
+                    .map(|s| s.bank_handle(0).metrics())
+                    .unwrap_or_default(),
+                lifecycle: inner.lifecycle.get(&e.slot).copied()
+                    .unwrap_or_default(),
+            }).collect();
+        rows.sort_by_key(|r| r.slot);
+        rows
     }
 
-    /// Stop every service (slot order) and return each model's name
-    /// with the link-wide stats its party threads observed at exit.
-    pub fn shutdown(self) -> Vec<(String, [Stats; 3])> {
-        self.entries.into_iter()
-            .map(|(n, s)| (n, s.shutdown()))
-            .collect()
+    /// Stop every live service (slot order, graceful) and return each
+    /// model's name with the link-wide stats its party threads observed
+    /// at exit.  Every slot is drained even when one fails (a panic in
+    /// one model's drain must not detach the others' threads); the
+    /// first failure is then reported as `Drain`.
+    pub fn shutdown(self)
+                    -> Result<Vec<(String, [Stats; 3])>, RegistryError> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.entries.sort_by_key(|e| e.slot);
+        let mut out = Vec::new();
+        let mut first_err = None;
+        for e in &inner.entries {
+            if let Some(svc) = &e.service {
+                match svc.shutdown() {
+                    Ok(stats) => out.push((e.name.clone(), stats)),
+                    Err(err) if first_err.is_none() => {
+                        first_err = Some(RegistryError::Drain {
+                            model: e.name.clone(),
+                            detail: err.to_string(),
+                        });
+                    }
+                    Err(_) => {}
+                }
+            }
+        }
+        match first_err {
+            None => Ok(out),
+            Some(e) => Err(e),
+        }
     }
 }
 
@@ -660,11 +1218,16 @@ impl Coordinator {
     }
 
     /// Drop the ingress and wait for the batcher to drain; returns the
-    /// latency histogram and throughput aggregate.
+    /// latency histogram and throughput aggregate.  A panicked (or
+    /// already-reaped) batcher yields empty aggregates instead of
+    /// propagating the panic through the drain path.
     pub fn finish(mut self) -> (Histogram, Throughput) {
         drop(self.req_tx);
-        self.batcher.take().unwrap().join()
-            .unwrap_or((Histogram::default(), Throughput::default()))
+        match self.batcher.take() {
+            Some(h) => h.join()
+                .unwrap_or((Histogram::default(), Throughput::default())),
+            None => (Histogram::default(), Throughput::default()),
+        }
     }
 }
 
@@ -737,15 +1300,29 @@ mod tests {
         let model = Arc::new(every_op_model());
         let cfg = SessionConfig::new("artifacts/hlo");
         let svc = Service::start(model, cfg).expect("setup with all parties");
-        // kill party 2's thread: it drains its job queue, hits Shutdown,
-        // and drops its Comm endpoints
-        svc.sched.lock().unwrap().txs[2].send(Job::Shutdown).unwrap();
+        // kill party 2's thread abruptly: it exits without draining,
+        // dropping its Comm endpoints
+        svc.inject_fault(2);
         let mut rng = Rng::new(3);
         let input = rng.tensor_small(&[1, 36], 15);
         let got = svc.infer(vec![input]);
         assert!(got.is_err(), "inference with a dead peer must error");
-        // the remaining party threads retired cleanly: shutdown joins
-        let _ = svc.shutdown();
+        // the remaining party threads retired: abort joins them (the
+        // graceful path is not guaranteed after a fault)
+        let _ = svc.abort();
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_typed() {
+        let model = Arc::new(every_op_model());
+        let cfg = SessionConfig::new("artifacts/hlo");
+        let svc = Service::start(model, cfg).expect("setup");
+        let first = svc.shutdown().expect("clean drain");
+        let second = svc.shutdown().expect("cached drain");
+        assert_eq!(first[0].bytes_sent, second[0].bytes_sent);
+        // abort after shutdown is a no-op returning the same stats
+        let third = svc.abort().expect("cached drain");
+        assert_eq!(first[0].bytes_sent, third[0].bytes_sent);
     }
 
     // ---- model registry -------------------------------------------------
@@ -792,6 +1369,6 @@ mod tests {
             .expect("routed batch");
         assert_eq!(logits.len(), 1);
         assert_eq!(logits[0].len(), 3);
-        reg.shutdown();
+        let _ = reg.shutdown();
     }
 }

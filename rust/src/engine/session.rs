@@ -35,6 +35,21 @@ pub fn model_seed(session_seed: u64, slot: u8) -> u64 {
     session_seed ^ (slot as u64).wrapping_mul(MODEL_SEED_SALT)
 }
 
+/// Per-respawn seed-domain separator (see `epoch_seed`).  A different
+/// odd constant than `MODEL_SEED_SALT` so epoch and slot displacements
+/// cannot cancel for small indices.
+pub const EPOCH_SEED_SALT: u64 = 0xC2B2_AE3D_27D4_EB4F;
+
+/// The epoch-scoped seed for one model slot: every quarantine/respawn
+/// cycle serves from a fresh PRF domain, so a respawned slot can never
+/// resume (or collide with) the desynchronized epoch's correlated
+/// randomness streams.  Epoch 0 is the identity -- a slot that never
+/// quarantined is bit-for-bit the PR 4 seed domain.  Distinctness
+/// across slots x epochs x lanes is pinned by a test below.
+pub fn epoch_seed(model_seed: u64, epoch: u32) -> u64 {
+    model_seed ^ u64::from(epoch).wrapping_mul(EPOCH_SEED_SALT)
+}
+
 #[derive(Clone, Debug)]
 pub struct SessionConfig {
     pub net: NetConfig,
@@ -50,6 +65,11 @@ pub struct SessionConfig {
     /// max_batch`); sizes the auto bank so its capacity always admits a
     /// full batch's largest MSB draw.
     pub max_batch: usize,
+    /// Per-lane, per-direction cap on parked demux frames at the
+    /// transport (`Comm::set_parked_cap`; the CLI's
+    /// `serve --max-parked-bytes`).  Bounds what a malicious peer can
+    /// park on a registered-but-idle lane.
+    pub max_parked_bytes: usize,
 }
 
 impl SessionConfig {
@@ -63,6 +83,7 @@ impl SessionConfig {
             session_seed: 7,
             bank: None,
             max_batch: 8,
+            max_parked_bytes: crate::transport::DEFAULT_PARKED_CAP,
         }
     }
 
@@ -209,5 +230,35 @@ mod tests {
         // slot 0 is the identity: single-model sessions are unchanged
         assert_eq!(model_seed(42, 0), 42);
         assert_ne!(model_seed(42, 1), 42);
+    }
+
+    #[test]
+    fn epoch_seed_domains_are_distinct_across_slots_and_lanes() {
+        // a quarantined slot respawns into a fresh domain: for a fixed
+        // session seed, every (slot, epoch, lane) triple must map to a
+        // distinct PRF seed over the ranges a long-lived registry can
+        // realistically visit
+        for session in [0u64, 7, u64::MAX] {
+            let mut seen = std::collections::BTreeSet::new();
+            for slot in 0..16u8 {
+                for epoch in 0..16u32 {
+                    let online = epoch_seed(model_seed(session, slot),
+                                            epoch);
+                    let offline =
+                        online ^ crate::offline::OFFLINE_SEED_SALT;
+                    assert!(seen.insert(online),
+                            "online collision at slot {slot} epoch \
+                             {epoch}");
+                    assert!(seen.insert(offline),
+                            "offline collision at slot {slot} epoch \
+                             {epoch}");
+                }
+            }
+            assert_eq!(seen.len(), 16 * 16 * 2);
+        }
+        // epoch 0 is the identity: a never-quarantined slot is
+        // bit-for-bit the PR 4 seed domain
+        assert_eq!(epoch_seed(99, 0), 99);
+        assert_ne!(epoch_seed(99, 1), 99);
     }
 }

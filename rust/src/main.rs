@@ -14,6 +14,8 @@
 //!               --artifacts DIR --net lan|wan|zero
 //!               --backend native|pjrt-pallas|pjrt-xla --batch N
 
+use std::collections::BTreeMap;
+use std::io::BufRead;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -64,11 +66,14 @@ fn main() -> Result<()> {
     let specs = parse_models(&args, &art, "mnistnet1")
         .map_err(anyhow::Error::msg)?;
 
-    let cfg = SessionConfig::new(art.join("hlo"))
+    let mut cfg = SessionConfig::new(art.join("hlo"))
         .with_net(parse_net(args.get_or("net", "lan"))
                   .map_err(anyhow::Error::msg)?)
         .with_backend(parse_backend(args.get_or("backend", "pjrt-pallas"))
                       .map_err(anyhow::Error::msg)?);
+    cfg.max_parked_bytes = args
+        .get_usize("max-parked-bytes", cfg.max_parked_bytes)
+        .map_err(anyhow::Error::msg)?;
 
     // info/infer/acc are single-model commands: last --model wins
     let (name, path) = specs.last().expect("parse_models is non-empty");
@@ -262,6 +267,102 @@ fn serve_multi(args: &Args, art: &Path, cfg: SessionConfig,
     let link = reg.link_stats(0);
     println!("link totals (party 0): {} B, {} messages, {} rounds",
              link.bytes_sent, link.messages, link.rounds);
-    reg.shutdown();
+    if args.get_bool("admin") {
+        admin_repl(&reg, art, &mut data_by_name(specs, data))?;
+    }
+    reg.shutdown().map_err(|e| anyhow!("{e}"))?;
+    Ok(())
+}
+
+fn data_by_name(specs: &[(String, PathBuf)], data: Vec<EvalSet>)
+                -> BTreeMap<String, EvalSet> {
+    specs.iter().map(|(n, _)| n.clone()).zip(data).collect()
+}
+
+/// Stdin admin loop for the live-registry demo (`serve --model a
+/// --model b --admin`): hot-swap, quarantine, and respawn models while
+/// the registry serves.  See OPERATIONS.md §Lifecycle runbook.
+fn admin_repl(reg: &ModelRegistry, art: &Path,
+              data: &mut BTreeMap<String, EvalSet>) -> Result<()> {
+    println!("admin> commands: status | add NAME[=MANIFEST] | \
+              remove NAME | quarantine NAME | respawn NAME | \
+              infer NAME [N] | quit");
+    let stdin = std::io::stdin();
+    for line in stdin.lock().lines() {
+        let line = line?;
+        let mut it = line.split_whitespace();
+        let Some(cmd) = it.next() else { continue };
+        let arg = it.next().unwrap_or("");
+        let res: Result<()> = match cmd {
+            "quit" | "exit" => break,
+            "status" => {
+                for (name, slot, state, epoch) in reg.status() {
+                    println!("  {name} (slot {slot}): {state}, \
+                              epoch {epoch}");
+                }
+                for (slot, lc) in reg.lifecycle_counters() {
+                    println!("  slot {slot} lifecycle: quarantines={} \
+                              respawns={} swaps_in={} swaps_out={}",
+                             lc.quarantines, lc.respawns, lc.swaps_in,
+                             lc.swaps_out);
+                }
+                Ok(())
+            }
+            "add" => admin_add(reg, art, data, arg),
+            "remove" => reg.remove_model(arg).map_err(|e| anyhow!("{e}"))
+                .map(|()| println!("  removed {arg} (slot freed)")),
+            "quarantine" => reg.quarantine(arg)
+                .map_err(|e| anyhow!("{e}"))
+                .map(|()| println!("  {arg} quarantined")),
+            "respawn" => reg.respawn(arg).map_err(|e| anyhow!("{e}"))
+                .map(|()| println!("  {arg} respawned on a fresh epoch")),
+            "infer" => admin_infer(reg, data, arg,
+                                   it.next().unwrap_or("1")),
+            other => Err(anyhow!("unknown admin command '{other}'")),
+        };
+        if let Err(e) = res {
+            println!("  error: {e}");
+        }
+    }
+    Ok(())
+}
+
+/// `admin> add NAME[=MANIFEST]`: load the model (and its eval set) and
+/// hot-add it to the live registry.
+fn admin_add(reg: &ModelRegistry, art: &Path,
+             data: &mut BTreeMap<String, EvalSet>, arg: &str)
+             -> Result<()> {
+    let (name, path) = match arg.split_once('=') {
+        Some((n, p)) => (n.to_string(), PathBuf::from(p)),
+        None => (arg.to_string(),
+                 art.join("models").join(format!("{arg}.manifest.json"))),
+    };
+    if name.is_empty() {
+        return Err(anyhow!("usage: add NAME[=MANIFEST]"));
+    }
+    let model = load_model(&name, &path)?;
+    let ds = load_data(art, &model)?;
+    let slot = reg.add_model(ModelSpec::new(name.clone(), model))
+        .map_err(|e| anyhow!("{e}"))?;
+    data.insert(name.clone(), ds);
+    println!("  added {name} at slot {slot}");
+    Ok(())
+}
+
+/// `admin> infer NAME [N]`: drive N requests at a model from its eval
+/// set (demo traffic).
+fn admin_infer(reg: &ModelRegistry, data: &BTreeMap<String, EvalSet>,
+               name: &str, count: &str) -> Result<()> {
+    let n: usize = count.parse()
+        .map_err(|_| anyhow!("infer NAME [N]: bad count '{count}'"))?;
+    let ds = data.get(name)
+        .ok_or_else(|| anyhow!("no eval data loaded for '{name}'"))?;
+    let imgs: Vec<Tensor> = (0..n.max(1))
+        .map(|j| ds.images[j % ds.images.len()].clone())
+        .collect();
+    let logits = reg.infer(name, imgs).map_err(|e| anyhow!("{e}"))?;
+    let preds: Vec<usize> =
+        logits.iter().map(|l| cbnn::engine::argmax(l)).collect();
+    println!("  {name}: preds {preds:?}");
     Ok(())
 }

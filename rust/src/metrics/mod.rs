@@ -85,6 +85,24 @@ pub struct PreprocMetrics {
     pub max_level: u64,
 }
 
+/// Lifecycle counters for one registry slot, surviving the models that
+/// occupy it: how often the slot was quarantined, respawned, or
+/// hot-swapped, and which seed epoch it currently serves.  Produced by
+/// `ModelRegistry` (rollups and `lifecycle_counters`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LifecycleCounters {
+    /// Slot cancellations after a desync/`WireError` (`quarantine`).
+    pub quarantines: u64,
+    /// Quarantined-slot restarts on a fresh seed epoch (`respawn`).
+    pub respawns: u64,
+    /// Models hot-added into this slot on a live registry.
+    pub swaps_in: u64,
+    /// Models retired out of this slot on a live registry.
+    pub swaps_out: u64,
+    /// Seed epoch currently served (0 = never quarantined).
+    pub epoch: u32,
+}
+
 /// One model's serving rollup in a multi-model process: its two lanes'
 /// shares of the link traffic (`transport::Stats::chan` rows, which sum
 /// with every other model's rows to the link totals) plus its
@@ -102,6 +120,8 @@ pub struct ModelRollup {
     /// The model's bank counters (party 0; identical trajectories on
     /// all parties).
     pub preproc: PreprocMetrics,
+    /// The slot's lifecycle history (quarantines, respawns, swaps).
+    pub lifecycle: LifecycleCounters,
 }
 
 impl ModelRollup {

@@ -155,11 +155,21 @@ pub struct TupleBank {
 }
 
 impl TupleBank {
+    /// `try_new` for callers that already validated (tests, fixed
+    /// configs); panics on an invalid config.
     pub fn new(cfg: BankConfig) -> TupleBank {
-        if let Err(e) = cfg.validate() {
-            panic!("invalid BankConfig: {e}");
+        match Self::try_new(cfg) {
+            Ok(b) => b,
+            Err(e) => panic!("invalid BankConfig: {e}"),
         }
-        TupleBank {
+    }
+
+    /// Build a bank, surfacing an invalid config as a typed error (the
+    /// serving stack routes it through `RegistryError` instead of
+    /// panicking a lifecycle operation).
+    pub fn try_new(cfg: BankConfig) -> Result<TupleBank, String> {
+        cfg.validate()?;
+        Ok(TupleBank {
             cfg,
             st: Mutex::new(BankState {
                 res: Reservoir::default(),
@@ -170,7 +180,7 @@ impl TupleBank {
             }),
             data: Condvar::new(),
             space: Condvar::new(),
-        }
+        })
     }
 
     pub fn config(&self) -> BankConfig {
@@ -274,6 +284,26 @@ impl TupleBank {
         self.st.lock().unwrap().closed = true;
         self.data.notify_all();
         self.space.notify_all();
+    }
+
+    /// Close the bank and discard its stored tuples, reporting how many
+    /// elements were thrown away.  The quarantine/retire drain path:
+    /// typed and assert-free, because a drained bank is an expected
+    /// lifecycle outcome, not a programmer error -- discarded epochs
+    /// never reconstruct, so dropping their material is safe (and
+    /// mandatory: the respawned epoch mints its own).  Idempotent
+    /// (subsequent calls report 0).
+    pub fn drain(&self) -> usize {
+        let mut st = self.st.lock().unwrap();
+        st.closed = true;
+        let n = st.res.len();
+        if n > 0 {
+            let _ = st.res.pop(n);
+        }
+        drop(st);
+        self.data.notify_all();
+        self.space.notify_all();
+        n
     }
 
     /// Block until the stored level reaches `target` (prefill barrier).
@@ -432,6 +462,31 @@ mod tests {
         assert!(bank.try_reserve(1));
         assert_eq!(bank.take(1).unwrap_err(), PreprocError::Closed);
         assert!(bank.wait_level(1).is_err());
+    }
+
+    #[test]
+    fn drain_discards_and_reports_then_is_idempotent() {
+        let bank = TupleBank::new(BankConfig {
+            low: 0, high: 8, chunk: 4, capacity: 16 });
+        bank.credit(12);
+        bank.deliver(tup(8));
+        bank.deliver(tup(4));
+        assert_eq!(bank.level(), 12);
+        assert_eq!(bank.drain(), 12, "drain reports discarded elements");
+        assert_eq!(bank.level(), 0);
+        assert_eq!(bank.drain(), 0, "second drain finds nothing");
+        // drained == closed: draws err typed, deliveries are swallowed
+        assert_eq!(bank.take(1).unwrap_err(), PreprocError::Closed);
+        bank.deliver(tup(4));
+        assert_eq!(bank.level(), 0);
+    }
+
+    #[test]
+    fn try_new_surfaces_invalid_configs_as_typed_errors() {
+        let err = TupleBank::try_new(BankConfig {
+            low: 0, high: 8, chunk: 4, capacity: 8 }).err().unwrap();
+        assert!(err.contains("`capacity`"), "{err}");
+        assert!(TupleBank::try_new(BankConfig::default()).is_ok());
     }
 
     #[test]

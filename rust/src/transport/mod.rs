@@ -21,13 +21,32 @@
 //! registered is `Malformed`.  `Comm::channel` derives (and registers) a
 //! handle bound to another channel over the shared links; `Stats`
 //! reports aggregate totals plus a per-channel-id breakdown.
+//!
+//! **Lane lifecycle.**  A registered lane can be *retired*
+//! ([`Comm::close_chan`]): its parked frames are purged, pending and
+//! future receives on it return `WireError::Closed` (blocked receivers
+//! are woken, including a receiver holding the link read -- the read
+//! polls at frame boundaries), and frames that still arrive for it are
+//! silently dropped instead of poisoning a healthy lane's receive.
+//! Re-deriving the lane (`Comm::channel`) re-opens it for a fresh
+//! epoch, purging anything stale first.  This is what lets the
+//! coordinator quarantine and respawn one model slot -- or hot-swap a
+//! model -- without touching the other lanes sharing the links.
+//!
+//! **Bounded demux memory.**  Parked frames are capped per lane and
+//! direction (`Comm::set_parked_cap`, default [`DEFAULT_PARKED_CAP`]):
+//! a peer flooding a registered-but-idle lane trips the cap, which
+//! frees that lane's parked frames and marks it poisoned -- its next
+//! receive is `Malformed` -- while every other lane's traffic is
+//! untouched.  This closes the queue-growth hole that permanent
+//! registration would otherwise hand a malicious peer.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::time::{Duration, Instant};
 
 use crate::ring::bits::BitTensor;
@@ -36,6 +55,17 @@ use crate::ring::planes::BitPlanes;
 /// Upper bound on a single wire message; a claimed length beyond this is
 /// rejected before any allocation (attacker-controlled length hardening).
 pub const MAX_MSG_BYTES: u64 = 1 << 30;
+
+/// Default per-lane, per-direction cap on parked demux frames (bytes).
+/// Sized for dozens of in-flight batches of the largest layer messages;
+/// override per deployment with `Comm::set_parked_cap` (the CLI's
+/// `serve --max-parked-bytes`).
+pub const DEFAULT_PARKED_CAP: usize = 64 << 20;
+
+/// How often a blocked link read re-checks lane retirement.  Receives
+/// with traffic in flight never wait on this; it only bounds how long a
+/// cancelled lane's receiver can stay blocked on an idle link.
+const READ_POLL: Duration = Duration::from_millis(10);
 
 /// Wire-level failure.  Receive paths return this instead of panicking the
 /// party thread: lengths and structure arrive from the peer and must be
@@ -273,6 +303,14 @@ struct TxLane {
     busy: Instant,
 }
 
+/// One lane's parked frames on one receive direction, with their byte
+/// total (the quantity the parked cap bounds).
+#[derive(Default)]
+struct LaneQ {
+    frames: VecDeque<Vec<u8>>,
+    bytes: usize,
+}
+
 /// Demux bookkeeping for one receive direction.  `reading` is a reader
 /// token: at most one thread reads the underlying link at a time, and it
 /// does so *without* holding the state lock, so the other channel's
@@ -286,7 +324,11 @@ struct RxState {
     /// appear as channels actually park traffic) instead of the PR 3
     /// fixed two-queue array, so one link carries any number of
     /// registered model lanes.
-    queues: BTreeMap<u8, VecDeque<Vec<u8>>>,
+    queues: BTreeMap<u8, LaneQ>,
+    /// Lanes that overflowed the parked cap: the next receive on a
+    /// poisoned lane is `Malformed` (with this reason).  Cleared when
+    /// the lane is retired or re-registered.
+    poisoned: BTreeMap<u8, String>,
     /// A thread currently owns the link read.
     reading: bool,
 }
@@ -313,19 +355,158 @@ struct Core {
     /// the owning threads spawn (handles are derived first), so a plain
     /// SeqCst bitmap suffices.
     registered: [AtomicU64; 4],
+    /// Bitmap of *retired* lanes (`close_chan`): still registered --
+    /// stale in-flight frames must not poison a healthy lane's recv as
+    /// "unregistered" -- but receives on them fail `Closed` and
+    /// arriving frames are dropped, until the lane is re-derived.
+    retired: [AtomicU64; 4],
+    /// Per-lane, per-direction cap on parked frame bytes.
+    parked_cap: AtomicUsize,
+}
+
+fn bit_set(map: &[AtomicU64; 4], tag: usize) {
+    map[tag / 64].fetch_or(1u64 << (tag % 64), Ordering::SeqCst);
+}
+
+fn bit_clear(map: &[AtomicU64; 4], tag: usize) {
+    map[tag / 64].fetch_and(!(1u64 << (tag % 64)), Ordering::SeqCst);
+}
+
+fn bit_get(map: &[AtomicU64; 4], tag: usize) -> bool {
+    map[tag / 64].load(Ordering::SeqCst) & (1u64 << (tag % 64)) != 0
+}
+
+/// Park `body` for lane `tag`, enforcing the parked-bytes cap: an
+/// overflow frees the lane's parked frames and poisons it (its next
+/// recv is `Malformed`) instead of growing without bound -- the frame
+/// and the queue memory are the attacker's loss, not the process's.
+fn park_frame(st: &mut RxState, cap: usize, tag: u8, body: Vec<u8>) {
+    if st.poisoned.contains_key(&tag) {
+        // the lane already overflowed: keep dropping until it is
+        // retired or re-registered (its consumer sees the Malformed)
+        return;
+    }
+    let lane = st.queues.entry(tag).or_default();
+    if lane.bytes + body.len() > cap {
+        lane.frames.clear();
+        lane.bytes = 0;
+        st.poisoned.insert(tag, format!(
+            "channel {} overflowed the {cap}-byte parked cap",
+            ChanId::from_tag(tag)));
+    } else {
+        lane.bytes += body.len();
+        lane.frames.push_back(body);
+    }
 }
 
 impl Core {
     fn register(&self, c: ChanId) {
         let tag = c.tag() as usize;
-        self.registered[tag / 64]
-            .fetch_or(1u64 << (tag % 64), Ordering::SeqCst);
+        if bit_get(&self.retired, tag) {
+            // re-opening a retired lane (slot respawn / hot-swap): purge
+            // anything stale from the previous epoch before frames for
+            // the new one can be confused with it
+            self.purge(c.tag());
+            bit_clear(&self.retired, tag);
+        }
+        bit_set(&self.registered, tag);
     }
 
     fn is_registered(&self, tag: u8) -> bool {
-        let tag = tag as usize;
-        self.registered[tag / 64].load(Ordering::SeqCst)
-            & (1u64 << (tag % 64)) != 0
+        bit_get(&self.registered, tag as usize)
+    }
+
+    fn is_retired(&self, tag: u8) -> bool {
+        bit_get(&self.retired, tag as usize)
+    }
+
+    /// Drop every parked frame (and any poison mark) of `tag`, both
+    /// directions.
+    fn purge(&self, tag: u8) {
+        for lane in &self.rx {
+            let mut st = lane.state.lock().unwrap();
+            st.queues.remove(&tag);
+            st.poisoned.remove(&tag);
+        }
+    }
+
+    /// Retire a lane: purge its parked frames and wake every blocked
+    /// receiver on both directions (they observe the retirement and
+    /// return `Closed`).  Arriving frames for a retired lane are
+    /// silently dropped.  Idempotent; `register` re-opens.
+    fn close_chan(&self, c: ChanId) {
+        bit_set(&self.retired, c.tag() as usize);
+        self.purge(c.tag());
+        for lane in &self.rx {
+            lane.cv.notify_all();
+        }
+    }
+
+    /// Best-effort non-blocking drain of one receive direction: every
+    /// frame already queued on the link is routed -- parked for its
+    /// (healthy) lane, dropped if its lane is retired or unknown.  The
+    /// coordinator calls this before re-opening a quarantined slot's
+    /// lanes so a stale frame of the dead epoch is not delivered into
+    /// the new one (best-effort; see `Comm::sweep` for the residual
+    /// race).  Returns `false` when another lane's receiver holds the
+    /// reader token and nothing could be drained.  Local links only (a
+    /// TCP deployment drains via its active readers); latency
+    /// simulation is skipped for swept frames -- an admin-path
+    /// tradeoff, not a protocol one.
+    fn sweep(&self, dir: usize) -> bool {
+        let lane = &self.rx[dir];
+        let mut st = lane.state.lock().unwrap();
+        if st.reading {
+            // an active reader is pumping this link; it drops retired
+            // lanes' frames as it encounters them
+            return false;
+        }
+        st.reading = true;
+        drop(st);
+        let mut drained = Vec::new();
+        {
+            let mut link = lane.link.lock().unwrap();
+            if let LinkRx::Local(rx) = &mut *link {
+                while let Ok(msg) = rx.try_recv() {
+                    drained.push(msg.body);
+                }
+            }
+        }
+        let cap = self.parked_cap.load(Ordering::SeqCst);
+        st = lane.state.lock().unwrap();
+        for body in drained {
+            if body.is_empty() {
+                continue;
+            }
+            let tag = body[0];
+            if self.is_retired(tag) || !self.is_registered(tag) {
+                continue;
+            }
+            park_frame(&mut st, cap, tag, body);
+        }
+        st.reading = false;
+        drop(st);
+        lane.cv.notify_all();
+        true
+    }
+}
+
+/// A weak lifecycle lever on one party's links: lets the coordinator
+/// retire a model slot's lanes (waking its blocked party threads)
+/// without keeping the links alive -- if every strong handle is gone,
+/// the peers already observe `Closed` and there is nothing to cancel.
+#[derive(Clone)]
+pub struct ChanControl {
+    core: Weak<Core>,
+}
+
+impl ChanControl {
+    /// Retire `c` on this party (see [`Comm::close_chan`]).  A no-op
+    /// once the links are dropped.
+    pub fn close_chan(&self, c: ChanId) {
+        if let Some(core) = self.core.upgrade() {
+            core.close_chan(c);
+        }
     }
 }
 
@@ -372,6 +553,70 @@ impl Comm {
     /// The logical channel this handle is bound to.
     pub fn chan(&self) -> ChanId {
         self.chan
+    }
+
+    /// Retire lane `c` on this party: purge its parked frames, turn its
+    /// pending and future receives into `WireError::Closed` (blocked
+    /// receivers are woken), and silently drop frames that still arrive
+    /// for it.  Other lanes are untouched.  Re-deriving the lane with
+    /// [`Comm::channel`] re-opens it (purging anything stale first) --
+    /// the quarantine/respawn and hot-swap primitive.
+    pub fn close_chan(&self, c: ChanId) {
+        self.core.close_chan(c);
+    }
+
+    /// A weak lifecycle handle on this party's links (does not keep
+    /// them alive).
+    pub fn control(&self) -> ChanControl {
+        ChanControl { core: Arc::downgrade(&self.core) }
+    }
+
+    /// Set the per-lane, per-direction cap on parked demux bytes
+    /// (default [`DEFAULT_PARKED_CAP`]).  A lane that overflows it is
+    /// poisoned: its parked frames are freed and its next receive is
+    /// `Malformed`.
+    pub fn set_parked_cap(&self, bytes: usize) {
+        self.core.parked_cap.store(bytes, Ordering::SeqCst);
+    }
+
+    /// The active parked-bytes cap.
+    pub fn parked_cap(&self) -> usize {
+        self.core.parked_cap.load(Ordering::SeqCst)
+    }
+
+    /// Bytes currently parked for lane `c` across both receive
+    /// directions (observability; bounded by `2 * parked_cap`).
+    pub fn parked_bytes(&self, c: ChanId) -> usize {
+        self.core.rx.iter().map(|lane| {
+            lane.state.lock().unwrap().queues.get(&c.tag())
+                .map_or(0, |q| q.bytes)
+        }).sum()
+    }
+
+    /// Drain frames already queued on both receive directions, parking
+    /// healthy lanes' frames and dropping retired ones (see
+    /// `Core::sweep`).  Retries briefly when another lane's receiver
+    /// holds a link's reader token, since that reader may be busy
+    /// routing rather than draining.
+    ///
+    /// Best-effort, not a guarantee: a reader that is *blocked* on an
+    /// idle link (or mid latency-sleep holding one pulled frame) keeps
+    /// the token for the whole retry budget, so a stale frame of a
+    /// retired lane can in principle survive the sweep and be parked
+    /// into that lane's *next* epoch once it re-registers.  The
+    /// misdelivery is contained -- the new epoch desyncs and is
+    /// quarantined again -- and the structural fix (an epoch byte in
+    /// the frame header) is a ROADMAP item.
+    pub fn sweep(&self) {
+        for dir in 0..2 {
+            for attempt in 0..5u64 {
+                if self.core.sweep(dir) {
+                    break;
+                }
+                // token held: give the reader a beat to finish routing
+                std::thread::sleep(Duration::from_millis(2 * attempt + 1));
+            }
+        }
     }
 
     /// A frame buffer pre-seeded with this handle's channel tag; the
@@ -445,11 +690,23 @@ impl Comm {
     /// in place would memmove the whole payload).
     fn recv_body(&self, dir: Dir) -> Result<Vec<u8>, WireError> {
         let lane = &self.core.rx[dir.index()];
+        let my_tag = self.chan.tag();
         let mut st = lane.state.lock().unwrap();
         loop {
-            if let Some(p) = st.queues.get_mut(&self.chan.tag())
-                .and_then(VecDeque::pop_front) {
-                return Ok(p);
+            // lane lifecycle first: a retired lane's receives fail
+            // `Closed` (quarantine/hot-swap cancellation), a poisoned
+            // one's fail `Malformed` (parked-cap overflow)
+            if self.core.is_retired(my_tag) {
+                return Err(WireError::Closed);
+            }
+            if let Some(reason) = st.poisoned.get(&my_tag) {
+                return Err(WireError::Malformed(reason.clone()));
+            }
+            if let Some(q) = st.queues.get_mut(&my_tag) {
+                if let Some(p) = q.frames.pop_front() {
+                    q.bytes -= p.len();
+                    return Ok(p);
+                }
             }
             if st.reading {
                 // someone else is on the link; they will queue our frame
@@ -459,9 +716,10 @@ impl Comm {
             }
             st.reading = true;
             drop(st);
+            let stop = || self.core.is_retired(my_tag);
             let got = {
                 let mut link = lane.link.lock().unwrap();
-                read_frame(&mut link)
+                read_frame(&mut link, &stop)
             };
             st = lane.state.lock().unwrap();
             let routed = got.and_then(|body| {
@@ -470,12 +728,18 @@ impl Comm {
                         "empty frame cannot hold a channel tag".into()));
                 }
                 let tag = body[0];
+                if self.core.is_retired(tag) {
+                    // stale frame of a retired lane: drop it (it cannot
+                    // have a consumer, and it must not err a healthy
+                    // lane's recv)
+                    return Ok(None);
+                }
                 if !self.core.is_registered(tag) {
                     return Err(WireError::Malformed(format!(
                         "unregistered channel id {tag:#04x} ({})",
                         ChanId::from_tag(tag))));
                 }
-                Ok((ChanId::from_tag(tag), body))
+                Ok(Some((ChanId::from_tag(tag), body)))
             });
             match routed {
                 Err(e) => {
@@ -483,14 +747,19 @@ impl Comm {
                     lane.cv.notify_all();
                     return Err(e);
                 }
-                Ok((chan, body)) if chan == self.chan => {
+                Ok(None) => {
+                    st.reading = false;
+                    lane.cv.notify_all();
+                }
+                Ok(Some((chan, body))) if chan == self.chan => {
                     st.reading = false;
                     lane.cv.notify_all();
                     return Ok(body);
                 }
-                Ok((chan, body)) => {
+                Ok(Some((chan, body))) => {
                     // park for the other channel FIRST, then wake it
-                    st.queues.entry(chan.tag()).or_default().push_back(body);
+                    let cap = self.core.parked_cap.load(Ordering::SeqCst);
+                    park_frame(&mut st, cap, chan.tag(), body);
                     st.reading = false;
                     lane.cv.notify_all();
                 }
@@ -609,20 +878,36 @@ impl Comm {
 
 /// Pull one raw frame off the link.  Called only by the thread holding
 /// the lane's reader token; the state lock is NOT held, so the other
-/// channel's thread stays responsive on the condvar.
-fn read_frame(link: &mut LinkRx) -> Result<Vec<u8>, WireError> {
+/// channel's thread stays responsive on the condvar.  `stop` is checked
+/// at frame boundaries every `READ_POLL` while the link is idle (never
+/// mid-frame -- a partially consumed frame would desynchronize every
+/// lane of the link): a reader whose own lane was retired relinquishes
+/// the token with `Closed` instead of blocking forever.
+fn read_frame(link: &mut LinkRx, stop: &dyn Fn() -> bool)
+              -> Result<Vec<u8>, WireError> {
     match link {
-        LinkRx::Local(rx) => {
-            let msg = rx.recv().map_err(|_| WireError::Closed)?;
-            let now = Instant::now();
-            if msg.arrival > now {
-                std::thread::sleep(msg.arrival - now);
+        LinkRx::Local(rx) => loop {
+            match rx.recv_timeout(READ_POLL) {
+                Ok(msg) => {
+                    let now = Instant::now();
+                    if msg.arrival > now {
+                        std::thread::sleep(msg.arrival - now);
+                    }
+                    return Ok(msg.body);
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if stop() {
+                        return Err(WireError::Closed);
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(WireError::Closed);
+                }
             }
-            Ok(msg.body)
-        }
+        },
         LinkRx::Tcp(s) => {
             let mut len = [0u8; 8];
-            s.read_exact(&mut len)?;
+            read_full(s, &mut len, stop, true)?;
             let n = u64::from_le_bytes(len);
             if n > MAX_MSG_BYTES {
                 return Err(WireError::Malformed(format!(
@@ -630,12 +915,36 @@ fn read_frame(link: &mut LinkRx) -> Result<Vec<u8>, WireError> {
                      cap")));
             }
             let mut buf = vec![0u8; n as usize];
-            s.read_exact(&mut buf)?;
+            read_full(s, &mut buf, stop, false)?;
             // latency simulation applies on the sender side only for
             // local links; real TCP has real latency.
             Ok(buf)
         }
     }
+}
+
+/// `read_exact` over a socket with a `READ_POLL` read timeout (set at
+/// session setup), honouring `stop` only before the first byte of the
+/// buffer (`at_boundary`) -- once a frame is partially consumed it must
+/// be finished or the whole link desynchronizes.
+fn read_full(s: &mut TcpStream, buf: &mut [u8], stop: &dyn Fn() -> bool,
+             at_boundary: bool) -> Result<(), WireError> {
+    let mut off = 0;
+    while off < buf.len() {
+        match s.read(&mut buf[off..]) {
+            Ok(0) => return Err(WireError::Closed),
+            Ok(n) => off += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock
+                || e.kind() == std::io::ErrorKind::TimedOut => {
+                if at_boundary && off == 0 && stop() {
+                    return Err(WireError::Closed);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
 }
 
 fn make_comm(id: usize, net: NetConfig,
@@ -647,6 +956,7 @@ fn make_comm(id: usize, net: NetConfig,
         link: Mutex::new(link),
         state: Mutex::new(RxState {
             queues: BTreeMap::new(),
+            poisoned: BTreeMap::new(),
             reading: false,
         }),
         cv: Condvar::new(),
@@ -658,15 +968,19 @@ fn make_comm(id: usize, net: NetConfig,
         stats: Mutex::new(Stats::default()),
         registered: [AtomicU64::new(0), AtomicU64::new(0),
                      AtomicU64::new(0), AtomicU64::new(0)],
+        retired: [AtomicU64::new(0), AtomicU64::new(0),
+                  AtomicU64::new(0), AtomicU64::new(0)],
+        parked_cap: AtomicUsize::new(DEFAULT_PARKED_CAP),
     };
     // only the default-bound online lane is pre-registered (this handle
     // IS its consumer); every other channel, slot 0's offline lane
-    // included, registers when a handle is derived.  Registration is
-    // permanent for the process lifetime -- an unregister on handle
-    // drop would make a *stale* in-flight frame of a retired lane kill
-    // a healthy lane's recv, so a retired lane's frames park (bounded
-    // by what a semi-honest peer sends) instead; see DESIGN.md
-    // §Multi-model multiplexing.
+    // included, registers when a handle is derived.  An id stays
+    // registered until explicitly retired (`close_chan`) -- an
+    // unregister on handle drop would make a *stale* in-flight frame of
+    // a retired lane kill a healthy lane's recv as "unregistered";
+    // retirement instead drops such frames silently and the parked cap
+    // bounds what an idle registered lane can accumulate.  See
+    // DESIGN.md §Multi-model multiplexing.
     core.register(ChanId::ONLINE);
     Comm { core: Arc::new(core), id, chan: ChanId::ONLINE }
 }
@@ -808,6 +1122,13 @@ pub fn tcp_party_with(id: usize, addrs: &[String; 3], net: NetConfig,
         let c = connect_with_retry(&h, p + 1, dial)?;
         (c.try_clone()?, c)
     };
+    // receive paths poll at READ_POLL so a retired lane's blocked
+    // reader can observe the cancellation (local links poll via
+    // recv_timeout); read_full hides the timeouts from frame reads.  A
+    // failure here would silently void close_chan's wakeup guarantee,
+    // so it fails session setup instead.
+    rx_next.set_read_timeout(Some(READ_POLL))?;
+    rx_prev.set_read_timeout(Some(READ_POLL))?;
     Ok(make_comm(id, net,
                  LinkTx::Tcp(tx_next), LinkTx::Tcp(tx_prev),
                  LinkRx::Tcp(rx_next), LinkRx::Tcp(rx_prev)))
@@ -1231,6 +1552,107 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    // ---- lane lifecycle -------------------------------------------------
+
+    #[test]
+    fn close_chan_wakes_a_blocked_recv_with_closed() {
+        // a receiver blocked on an idle link (it holds the reader token)
+        // must observe the retirement within the poll interval instead
+        // of blocking forever -- the quarantine primitive
+        let [c0, c1, c2] = local_trio(NetConfig::zero());
+        let ctl = c1.control();
+        let waiter = thread::spawn(move || c1.recv_elems(Dir::Prev));
+        thread::sleep(Duration::from_millis(30)); // let it block
+        let t0 = Instant::now();
+        ctl.close_chan(ChanId::ONLINE);
+        let err = waiter.join().unwrap().unwrap_err();
+        assert!(matches!(err, WireError::Closed), "{err:?}");
+        assert!(t0.elapsed() < Duration::from_secs(2),
+                "retirement took too long to observe");
+        drop((c0, c2));
+    }
+
+    #[test]
+    fn close_chan_purges_parked_frames_and_register_reopens() {
+        let [c0, c1, c2] = local_trio(NetConfig::zero());
+        let lane = ChanId::online(4);
+        let c0l = c0.channel(lane);
+        let c1l = c1.channel(lane);
+        // park two lane-4 frames at c1 by receiving an ONLINE frame
+        // sent after them
+        c0l.send_elems(Dir::Next, &[1]).unwrap();
+        c0l.send_elems(Dir::Next, &[2]).unwrap();
+        c0.send_elems(Dir::Next, &[0]).unwrap();
+        assert_eq!(c1.recv_elems(Dir::Prev).unwrap(), vec![0]);
+        assert!(c1.parked_bytes(lane) > 0);
+        // retire: parked frames purged, recv on the lane fails Closed
+        c1.close_chan(lane);
+        assert_eq!(c1.parked_bytes(lane), 0);
+        let err = c1l.recv_elems(Dir::Prev).unwrap_err();
+        assert!(matches!(err, WireError::Closed), "{err:?}");
+        // frames arriving while retired are dropped, not Malformed and
+        // not delivered: a healthy recv skips straight past them
+        c0l.send_elems(Dir::Next, &[3]).unwrap();
+        c0.send_elems(Dir::Next, &[9]).unwrap();
+        assert_eq!(c1.recv_elems(Dir::Prev).unwrap(), vec![9]);
+        // re-derive = re-open for a fresh epoch: only frames sent after
+        // the reopen arrive
+        let c1l = c1.channel(lane);
+        c0l.send_elems(Dir::Next, &[7]).unwrap();
+        assert_eq!(c1l.recv_elems(Dir::Prev).unwrap(), vec![7]);
+        drop(c2);
+    }
+
+    #[test]
+    fn parked_cap_poisons_the_flooded_lane_only() {
+        let [c0, c1, c2] = local_trio(NetConfig::zero());
+        c1.set_parked_cap(256);
+        assert_eq!(c1.parked_cap(), 256);
+        let idle = c1.channel(ChanId::online(3)); // registered, unread
+        let tag = ChanId::online(3).tag();
+        // interleave flood frames (64 B each, 10x = 640 B > 256) with
+        // healthy ONLINE traffic; every healthy recv must succeed while
+        // the flood overflows the idle lane's parked queue
+        for i in 0..10i32 {
+            let mut frame = vec![tag];
+            frame.extend_from_slice(&[0u8; 64]);
+            c0.send_frame(Dir::Next, frame).unwrap();
+            c0.send_elems(Dir::Next, &[i]).unwrap();
+            assert_eq!(c1.recv_elems(Dir::Prev).unwrap(), vec![i],
+                       "healthy lane perturbed at frame {i}");
+        }
+        // the flooded lane's storage is bounded (freed at overflow) and
+        // its next recv reports the overflow as Malformed
+        assert!(c1.parked_bytes(ChanId::online(3)) <= 256);
+        let err = idle.recv_elems(Dir::Prev).unwrap_err();
+        assert!(matches!(err, WireError::Malformed(_)), "{err:?}");
+        drop(c2);
+    }
+
+    #[test]
+    fn sweep_drops_retired_frames_and_parks_healthy_ones() {
+        let [c0, c1, c2] = local_trio(NetConfig::zero());
+        let lane = ChanId::online(5);
+        let c0l = c0.channel(lane);
+        let c1l = c1.channel(lane);
+        // a stale lane-5 frame and a healthy ONLINE frame sit unread on
+        // the link when the lane is retired
+        c0l.send_elems(Dir::Next, &[1]).unwrap();
+        c0.send_elems(Dir::Next, &[2]).unwrap();
+        // frames are in flight; wait for the local link to hold them
+        thread::sleep(Duration::from_millis(10));
+        c1.close_chan(lane);
+        c1.sweep();
+        // the stale frame is gone; the healthy frame was parked
+        assert_eq!(c1.parked_bytes(lane), 0);
+        assert_eq!(c1.recv_elems(Dir::Prev).unwrap(), vec![2]);
+        // reopen: a fresh frame arrives cleanly (the stale one cannot)
+        let c1l2 = c1.channel(lane);
+        c0l.send_elems(Dir::Next, &[4]).unwrap();
+        assert_eq!(c1l2.recv_elems(Dir::Prev).unwrap(), vec![4]);
+        drop((c1l, c2));
     }
 
     #[test]

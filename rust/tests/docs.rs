@@ -48,6 +48,26 @@ fn operations_has_a_worked_multi_model_example() {
 }
 
 #[test]
+fn operations_covers_the_lifecycle_runbook() {
+    // ISSUE 5: the lifecycle runbook must document quarantine symptoms,
+    // the swap procedure, parked-bytes sizing, and the admin surface --
+    // CI-gated like the serve flags so the runbook cannot rot
+    let ops = repo_doc("OPERATIONS.md");
+    for needle in ["quarantine", "respawn", "Quarantined", "epoch",
+                   "parked", "--max-parked-bytes", "--admin", "swap",
+                   "free list", "SlotState"] {
+        assert!(ops.contains(needle),
+                "OPERATIONS.md lifecycle runbook misses {needle}");
+    }
+    // every admin command is documented
+    for cmd in ["status", "add ", "remove ", "quarantine ", "respawn ",
+                "infer "] {
+        assert!(ops.contains(cmd),
+                "OPERATIONS.md does not document admin command `{cmd}`");
+    }
+}
+
+#[test]
 fn design_documents_the_channel_id_space() {
     let design = repo_doc("DESIGN.md");
     for needle in ["Multi-model multiplexing", "slot << 1", "ChanId",

@@ -100,7 +100,7 @@ fn two_services_share_links_bit_identically_with_clean_banks() {
                 "rollup {}: {r:?}", r.name);
         assert!(r.total_bytes() >= r.online.bytes_sent);
     }
-    reg.shutdown();
+    let _ = reg.shutdown();
 
     // acceptance: bit-identical logits vs. single-model runs at the
     // same slots (same seed domains, same bank chunk schedules)
@@ -130,14 +130,16 @@ fn registry_slot_seeding_separates_equal_models() {
         .map(|b| reg.infer("first", b.clone()).unwrap()).collect();
     let second: Vec<_> = inputs.iter()
         .map(|b| reg.infer("second", b.clone()).unwrap()).collect();
-    reg.shutdown();
+    let _ = reg.shutdown();
     // same function: predictions agree (identical model + inputs); the
-    // raw logits may differ by the truncation protocol's +-1 LSB, which
-    // is mask-dependent and the domains are separated on purpose
+    // raw logits may each differ from the exact value by the truncation
+    // protocol's +-1 LSB, which is mask-dependent and the domains are
+    // separated on purpose -- so two independent runs can be up to 2
+    // apart (one at exact+1, the other at exact-1)
     for (fb, sb) in first.iter().zip(&second) {
         for (fl, sl) in fb.iter().zip(sb) {
             for (a, b) in fl.iter().zip(sl) {
-                assert!((a - b).abs() <= 1,
+                assert!((a - b).abs() <= 2,
                         "slot outputs beyond trunc tolerance: {a} vs {b}");
             }
         }

@@ -399,6 +399,51 @@ fn offline_lane_recv_pending_while_other_models_frames_arrive() {
 }
 
 #[test]
+fn parked_cap_flood_is_malformed_and_recoverable() {
+    // ISSUE 5 satellite: a peer that floods a registered-but-idle lane
+    // must trip the per-lane parked-bytes cap -- surfacing as Malformed
+    // on that lane -- without affecting a healthy lane's throughput;
+    // retiring and re-deriving the lane recovers it
+    let [c0, c1, _c2] = local_trio(NetConfig::zero());
+    c1.set_parked_cap(300);
+    let flood_lane = ChanId::offline(7);
+    thread::scope(|s| {
+        let sender = s.spawn(|| {
+            let flooder = c0.channel(flood_lane);
+            for i in 0..20i32 {
+                // 80 B of flood (plus tag) per healthy frame: the idle
+                // lane overflows its 300 B cap on the fourth frame
+                flooder.send_raw(Dir::Next, vec![0u8; 80]).unwrap();
+                c0.send_elems(Dir::Next, &[i]).unwrap();
+            }
+            // post-flood traffic for the recovered lane
+            c0.channel(flood_lane).send_elems(Dir::Next, &[99]).unwrap();
+        });
+        let checker = s.spawn(|| {
+            let idle = c1.channel(flood_lane); // registered, unread
+            // every healthy frame arrives, in order, while the flood
+            // lands and overflows
+            for i in 0..20i32 {
+                assert_eq!(c1.recv_elems(Dir::Prev).unwrap(), vec![i],
+                           "healthy lane perturbed at frame {i}");
+            }
+            // bounded memory: the overflow freed the parked flood
+            assert!(c1.parked_bytes(flood_lane) <= 300);
+            let err = idle.recv_elems(Dir::Prev).unwrap_err();
+            assert!(matches!(&err, WireError::Malformed(m)
+                             if m.contains("parked cap")), "{err:?}");
+            // recovery: retire the poisoned lane, re-derive it, and the
+            // post-flood frame (sent after the flood) arrives cleanly
+            c1.close_chan(flood_lane);
+            let fresh = c1.channel(flood_lane);
+            assert_eq!(fresh.recv_elems(Dir::Prev).unwrap(), vec![99]);
+        });
+        sender.join().unwrap();
+        checker.join().unwrap();
+    });
+}
+
+#[test]
 fn hung_up_peer_errors_on_both_paths() {
     let [c0, c1, c2] = local_trio(NetConfig::zero());
     drop(c1);
