@@ -10,10 +10,14 @@
 //!   4. (offline split) online-only MSB latency with warm preprocessed
 //!      material vs generation inline on the request path -- the number
 //!      the `offline::TupleBank` producers buy the serving stack.
+//!   5. (fusion) fused vs unfused hidden-layer walk over a fully
+//!      binarizable sign -> pool -> +-1 linear chain: end-to-end batch
+//!      latency plus the hidden-segment wire bytes (deterministic; the
+//!      ISSUE 6 >= 8x reduction claim, recorded so CI can gate it).
 //!
 //! Results are printed as a table and recorded to `BENCH_bitops.json`
-//! (tiers 1-3) and `BENCH_offline.json` (tier 4) at the workspace root
-//! so the bench trajectory is diffable.
+//! (tiers 1-3), `BENCH_offline.json` (tier 4) and `BENCH_fusion.json`
+//! (tier 5) at the workspace root so the bench trajectory is diffable.
 //!
 //!   cargo bench --bench bitops
 
@@ -318,6 +322,139 @@ fn offline_tier(rows: &mut Vec<Row>) {
     }
 }
 
+/// Tier 5: binary-domain fusion.  One three-party session per batch
+/// size runs the same fully-binarizable hidden chain twice -- the
+/// arithmetic walk (`infer_batch_pooled`) and the fused boolean walk
+/// (`infer_batch_fused`) -- over warm tuple pools, so the measured gap
+/// is the online representation change, not preprocessing.  The chain
+/// is trunc-free, so the two walks must agree bit-for-bit (asserted
+/// before timing).  Alongside latency, party 0's per-op cost rows give
+/// the hidden-segment bytes (ops 2..=5: pool, pm1, +-1 depthwise, the
+/// folded sign) -- a deterministic number CI gates exactly.
+fn fusion_tier(rows: &mut Vec<Row>) {
+    use cbnn::engine::fusion::{infer_batch_fused, plan_fused};
+    use cbnn::engine::{infer_batch_pooled, msb_demand, share_model,
+                       EngineOptions};
+    use cbnn::offline::TupleSource;
+    use cbnn::protocols::linear::NativeBackend;
+
+    println!("== tier 5: fused vs unfused hidden-layer walk ==\n");
+    println!("{:<12} {:<8} {:>12} {:>12} {:>9}",
+             "metric", "batch", "unfused", "fused", "ratio");
+    println!("{}", "-".repeat(58));
+
+    let manifest = r#"{
+      "name": "bnnchain", "dataset": "synthetic",
+      "input": {"c": 1, "h": 12, "w": 12},
+      "s_in": 0, "ring_bits": 32,
+      "layers": [
+        {"op": "matmul", "conv": true, "m": 4, "kdim": 9, "n": 100,
+         "k": 3, "stride": 1, "pad_lo": 0, "pad_hi": 0, "cout": 4,
+         "w": {"off": 0, "len": 36}, "b": {"off": 36, "len": 4},
+         "s_in": 0, "s_out": 0},
+        {"op": "sign", "c": 4, "t": {"off": 40, "len": 4},
+         "flip": {"off": 44, "len": 4}},
+        {"op": "pool_bits", "c": 4, "k": 2, "stride": 2},
+        {"op": "pm1"},
+        {"op": "depthwise", "cout": 4, "k": 1, "stride": 1,
+         "pad_lo": 0, "pad_hi": 0, "w": {"off": 48, "len": 4},
+         "s_in": 0, "s_out": 0},
+        {"op": "sign", "c": 4, "t": {"off": 52, "len": 4},
+         "flip": {"off": 56, "len": 4}},
+        {"op": "pm1"},
+        {"op": "flatten", "c": 4, "h": 5, "w": 5},
+        {"op": "matmul", "conv": false, "m": 3, "kdim": 100, "n": 1,
+         "w": {"off": 60, "len": 300}, "s_in": 0, "s_out": 0}
+      ]
+    }"#;
+    let mut pool = vec![0i32; 360];
+    for (i, v) in pool.iter_mut().enumerate().take(36) {
+        *v = (i as i32 % 5) - 2;
+    }
+    pool[36..40].copy_from_slice(&[1, -1, 2, 0]);
+    pool[40..44].copy_from_slice(&[0, 1, -1, 2]);
+    pool[44..48].copy_from_slice(&[1, -1, 2, -2]);
+    pool[48..52].copy_from_slice(&[1, -1, 1, -1]);
+    pool[52..56].copy_from_slice(&[1, 3, -2, 0]);
+    pool[56..60].copy_from_slice(&[2, -1, 1, -3]);
+    for (i, v) in pool.iter_mut().enumerate().skip(60) {
+        *v = if (i + i / 7) % 2 == 0 { 1 } else { -1 };
+    }
+    let model = cbnn::nn::Model::from_json(manifest, pool).unwrap();
+    let plan = plan_fused(&model).expect("chain must lower");
+
+    for &batch in &[1usize, 4] {
+        let reps = 7usize;
+        let results = run3_seeded(60 + batch as u64, |ctx| {
+            let shared = share_model(ctx, &model, true).unwrap();
+            let inputs: Vec<Tensor> = if ctx.id() == 0 {
+                let mut rng = Rng::new(batch as u64);
+                (0..batch).map(|_| rng.tensor_small(&[1, 144], 15))
+                    .collect()
+            } else {
+                vec![]
+            };
+            let opts = EngineOptions::default();
+            let u_demand = msb_demand(&shared, batch);
+            let f_demand = plan.msb_demand(batch);
+            // warm pools for every rep: preprocessing off the path
+            let upool = MsbPool::new();
+            upool.generate(ctx, u_demand * (reps + 1)).unwrap();
+            let fpool = MsbPool::new();
+            fpool.generate(ctx, f_demand * (reps + 1)).unwrap();
+            let usrc = TupleSource::Pool(&upool);
+            let fsrc = TupleSource::Pool(&fpool);
+            // equivalence sanity before timing (trunc-free chain)
+            let u0 = infer_batch_pooled(ctx, &shared, &NativeBackend,
+                                        opts, &inputs, batch, &usrc)
+                .unwrap();
+            let f0 = infer_batch_fused(ctx, &shared, &plan,
+                                       &NativeBackend, opts, &inputs,
+                                       batch, &fsrc)
+                .unwrap();
+            assert_eq!(u0.logits, f0.logits, "fused walk diverged");
+            let seg = |costs: &[cbnn::metrics::OpCost]| costs.iter()
+                .filter(|r| (2..=5).contains(&r.index))
+                .map(|r| r.bytes_sent)
+                .sum::<u64>();
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                black_box(infer_batch_pooled(
+                    ctx, &shared, &NativeBackend, opts, &inputs, batch,
+                    &usrc).unwrap());
+            }
+            let unfused = t0.elapsed();
+            let t1 = Instant::now();
+            for _ in 0..reps {
+                black_box(infer_batch_fused(
+                    ctx, &shared, &plan, &NativeBackend, opts, &inputs,
+                    batch, &fsrc).unwrap());
+            }
+            let fused = t1.elapsed();
+            (unfused.as_secs_f64() / reps as f64,
+             fused.as_secs_f64() / reps as f64,
+             seg(&u0.op_costs), seg(&f0.op_costs))
+        });
+        let (u_ms, f_ms, u_bytes, f_bytes) = results[0].0;
+        println!("{:<12} {:<8} {:>10.3}ms {:>10.3}ms {:>8.1}x",
+                 "latency", batch, u_ms * 1e3, f_ms * 1e3, u_ms / f_ms);
+        rows.push(Row { section: "fused_vs_unfused", op: "latency".into(),
+                        n: batch, baseline_ms: u_ms * 1e3,
+                        fast_ms: f_ms * 1e3 });
+        println!("{:<12} {:<8} {:>11}B {:>11}B {:>8.1}x",
+                 "hidden-bytes", batch, u_bytes, f_bytes,
+                 u_bytes as f64 / f_bytes.max(1) as f64);
+        // byte rows ride the same schema (the *_ms columns carry bytes);
+        // ci/bench_compare.py gates *_bytes sections exactly, since wire
+        // accounting is deterministic
+        rows.push(Row { section: "fused_vs_unfused_bytes",
+                        op: "hidden-segment".into(), n: batch,
+                        baseline_ms: u_bytes as f64,
+                        fast_ms: f_bytes as f64 });
+        println!();
+    }
+}
+
 fn write_json(file: &str, bench: &str, acceptance: &[(&str, &str)],
               rows: &[Row]) {
     let mut s = String::from("{\n");
@@ -360,9 +497,12 @@ fn main() {
     plane_tier(&mut rows);
     let mut offline_rows = Vec::new();
     offline_tier(&mut offline_rows);
+    let mut fusion_rows = Vec::new();
+    fusion_tier(&mut fusion_rows);
     println!("(acceptance: packed XOR/AND >= 8x byte-per-bit; strided \
               Kogge-Stone levels >= 2x concat; warm-bank online MSB \
-              >= 2x inline generation)");
+              >= 2x inline generation; fused hidden segment >= 8x fewer \
+              bytes than the arithmetic walk)");
     write_json("BENCH_bitops.json", "bitops",
                &[("byte_vs_packed", "xor/and speedup >= 8x"),
                  ("ks_concat_vs_strided", "ks-5lvl speedup >= 2x")],
@@ -372,4 +512,9 @@ fn main() {
                   "online-only msb latency >= 2x faster than inline \
                    generation")],
                &offline_rows);
+    write_json("BENCH_fusion.json", "fusion",
+               &[("fused_vs_unfused_bytes",
+                  "fused hidden segment ships >= 8x fewer online bytes \
+                   than the arithmetic walk")],
+               &fusion_rows);
 }

@@ -8,7 +8,10 @@ Every (section, op, n) row recorded in the baseline must exist in the
 fresh run with `fast_ms` no more than TOLERANCE times the baseline's
 (lower is better; the `baseline_ms` column is the *slow reference arm*
 inside one run, not the regression baseline, so only `fast_ms` is
-gated).  A baseline with an empty `results` list -- the committed stubs
+gated).  Sections whose name ends in `_bytes` carry deterministic wire
+accounting in the `*_ms` columns (e.g. the fusion bench's
+hidden-segment bytes), so they are gated exactly: any byte growth
+fails.  A baseline with an empty `results` list -- the committed stubs
 from before a toolchain was available -- skips the comparison, so the
 job cannot fail before a real baseline has been promoted.
 """
@@ -17,6 +20,11 @@ import json
 import sys
 
 TOLERANCE = 1.20  # fail on >20% regression
+
+
+def tolerance_for(row):
+    """Timing rows get the noise tolerance; byte rows are exact."""
+    return 1.0 if row["section"].endswith("_bytes") else TOLERANCE
 
 
 def key(row):
@@ -47,12 +55,13 @@ def main() -> int:
         if got is None:
             failures.append(f"{key(row)}: row missing from fresh run")
             continue
-        if got["fast_ms"] > row["fast_ms"] * TOLERANCE:
+        tol = tolerance_for(row)
+        if got["fast_ms"] > row["fast_ms"] * tol:
             failures.append(
                 f"{key(row)}: fast_ms {got['fast_ms']:.3f} vs baseline "
                 f"{row['fast_ms']:.3f} "
                 f"(+{100 * (got['fast_ms'] / row['fast_ms'] - 1):.0f}%, "
-                f"limit +{100 * (TOLERANCE - 1):.0f}%)")
+                f"limit +{100 * (tol - 1):.0f}%)")
 
     checked = len(base_rows)
     if failures:

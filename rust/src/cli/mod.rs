@@ -19,8 +19,19 @@ use std::path::{Path, PathBuf};
 pub const SERVE_FLAGS: &[&str] = &[
     "model", "artifacts", "net", "backend", "batch", "requests",
     "prefetch", "bank-low", "bank-high", "bank-chunk", "bank-capacity",
-    "max-parked-bytes", "admin",
+    "max-parked-bytes", "admin", "fuse", "max-infer-errors",
 ];
+
+/// Resolve an `on|off` toggle flag (`--fuse on`); absent -> `default`.
+pub fn parse_on_off(args: &Args, key: &str, default: bool)
+                    -> Result<bool, String> {
+    match args.get(key) {
+        None => Ok(default),
+        Some("on") | Some("true") | Some("1") => Ok(true),
+        Some("off") | Some("false") | Some("0") => Ok(false),
+        Some(v) => Err(format!("--{key} expects on|off, got '{v}'")),
+    }
+}
 
 /// Parsed argv: one optional subcommand, `--flag [value]` pairs (a flag
 /// may repeat -- all values are kept in order), and positional tokens.
@@ -260,6 +271,19 @@ mod tests {
                 .unwrap_err();
             assert!(err.contains(bad), "{err}");
         }
+    }
+
+    #[test]
+    fn on_off_flags_resolve() {
+        let a = parse(&["serve", "--fuse", "on"]);
+        assert!(parse_on_off(&a, "fuse", false).unwrap());
+        let b = parse(&["serve", "--fuse", "off"]);
+        assert!(!parse_on_off(&b, "fuse", true).unwrap());
+        let c = parse(&["serve"]);
+        assert!(!parse_on_off(&c, "fuse", false).unwrap());
+        assert!(parse_on_off(&c, "fuse", true).unwrap());
+        let bad = parse(&["serve", "--fuse", "sideways"]);
+        assert!(parse_on_off(&bad, "fuse", false).is_err());
     }
 
     #[test]

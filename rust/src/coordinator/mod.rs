@@ -125,6 +125,10 @@ pub struct Service {
     banks: Vec<Arc<TupleBank>>,
     bank_cfg: BankConfig,
     preprocess: bool,
+    /// The binary-domain lowering when `opts.fuse` is on (public model
+    /// structure, computed once at start; start fails on a model the
+    /// planner rejects).  Tuple demand and the per-batch walk follow it.
+    plan: Option<Arc<crate::engine::fusion::FusedPlan>>,
     model: Arc<Model>,
     /// The channel-id model slot this service's lanes are bound to.
     pub slot: u8,
@@ -185,8 +189,22 @@ impl Service {
     pub fn start_on_epoch(model: Arc<Model>, cfg: SessionConfig,
                           comms: [Comm; 3], slot: u8, epoch: u32)
                           -> Result<Service> {
+        // fused plans are public structure shared by all parties; a
+        // model the planner rejects fails start with the typed reason
+        // before any thread or lane exists
+        let plan = if cfg.opts.fuse {
+            Some(Arc::new(crate::engine::fusion::plan_fused(&model)?))
+        } else {
+            None
+        };
         let bank_cfg = cfg.bank.unwrap_or_else(|| {
-            BankConfig::auto(msb_demand_for(&model, cfg.max_batch.max(1)))
+            let demand = match &plan {
+                // fused demand is strictly no larger: folded signs and
+                // OR-pools draw no tuples
+                Some(p) => p.msb_demand(cfg.max_batch.max(1)),
+                None => msb_demand_for(&model, cfg.max_batch.max(1)),
+            };
+            BankConfig::auto(demand)
         });
         bank_cfg.validate().map_err(|e| anyhow!("bank config: {e}"))?;
         let seed = epoch_seed(model_seed(cfg.session_seed, slot), epoch);
@@ -218,6 +236,7 @@ impl Service {
         for ((comm, off_comm), bank) in
             lanes.into_iter().zip(banks.iter().cloned()) {
             let model = Arc::clone(&model);
+            let plan = plan.clone();
             let cfg = cfg.clone();
             let logits_tx = logits_tx.clone();
             let ready_tx = ready_tx.clone();
@@ -284,9 +303,15 @@ impl Service {
                             } else {
                                 TupleSource::Inline
                             };
-                            let r = infer_batch_pooled(
-                                &ctx, &shared, backend.as_ref(), cfg.opts,
-                                &inputs, batch, &src);
+                            let r = match &plan {
+                                Some(p) => crate::engine::fusion::
+                                    infer_batch_fused(
+                                        &ctx, &shared, p, backend.as_ref(),
+                                        cfg.opts, &inputs, batch, &src),
+                                None => infer_batch_pooled(
+                                    &ctx, &shared, backend.as_ref(),
+                                    cfg.opts, &inputs, batch, &src),
+                            };
                             let failed = r.is_err();
                             if comm.id == 0 {
                                 let _ = logits_tx.send(
@@ -333,6 +358,7 @@ impl Service {
             banks,
             bank_cfg,
             preprocess: cfg.opts.preprocess,
+            plan,
             slot,
             epoch,
             model_name: model.name.clone(),
@@ -352,18 +378,25 @@ impl Service {
     }
 
     /// MSB tuple demand of one `batch`-sized request (public manifest
-    /// arithmetic; the pump's refill unit).
+    /// arithmetic; the pump's refill unit).  Follows the fused plan when
+    /// fusion is on -- folded signs and OR-pools draw nothing.
     pub fn demand_for(&self, batch: usize) -> usize {
-        msb_demand_for(&self.model, batch)
+        match &self.plan {
+            Some(p) => p.msb_demand(batch),
+            None => msb_demand_for(&self.model, batch),
+        }
     }
 
     /// Largest single MSB draw a `batch`-sized request makes.  Draws
     /// above `capacity - chunk` always fall back (deadlock freedom), so
     /// the batcher checks this against the bank at startup.
     pub fn max_draw_for(&self, batch: usize) -> usize {
-        crate::engine::msb_sizes_of(&self.model.ops, self.model.input,
-                                    batch)
-            .into_iter().max().unwrap_or(0)
+        let sizes = match &self.plan {
+            Some(p) => p.msb_sizes(batch),
+            None => crate::engine::msb_sizes_of(&self.model.ops,
+                                                self.model.input, batch),
+        };
+        sizes.into_iter().max().unwrap_or(0)
     }
 
     /// Party `i`'s tuple bank (observability: levels and
@@ -645,6 +678,9 @@ struct Entry {
     epoch: u32,
     state: SlotState,
     service: Option<Arc<Service>>,
+    /// Consecutive `infer` failures since the last success (the
+    /// auto-quarantine watchdog's input; reset on success and respawn).
+    consec_errors: u32,
 }
 
 /// Interior registry state, one lock: lifecycle transitions hold it
@@ -738,6 +774,7 @@ impl ModelRegistry {
                 epoch: 0,
                 state: SlotState::Serving,
                 service: Some(Arc::new(svc)),
+                consec_errors: 0,
             });
         }
         Ok(reg)
@@ -807,13 +844,53 @@ impl ModelRegistry {
     /// Route one batch to `name`'s service (blocking).  The registry
     /// lock is released before the batch runs, so other models -- and
     /// lifecycle operations on *this* model -- proceed concurrently.
+    ///
+    /// **Auto-quarantine watchdog.**  Consecutive failures on one slot
+    /// are counted (successes reset the count); on reaching the
+    /// configured threshold (`SessionConfig::max_consecutive_errors`,
+    /// default 3, 0 disables) the slot is force-quarantined so a wedged
+    /// or desynchronized model stops eating requests -- subsequent
+    /// `infer`s get `SlotUnavailable` until an operator `respawn`s it.
+    /// Trips are counted in `LifecycleCounters::watchdog_trips`.
     pub fn infer(&self, name: &str, inputs: Vec<Tensor>)
                  -> Result<Vec<Vec<i32>>, RegistryError> {
         let svc = self.service(name)?;
-        svc.infer(inputs).map_err(|e| RegistryError::Service {
-            model: name.to_string(),
-            source: e,
-        })
+        match svc.infer(inputs) {
+            Ok(logits) => {
+                let mut inner = self.inner.lock().unwrap();
+                if let Ok(e) = inner.entry_mut(name) {
+                    e.consec_errors = 0;
+                }
+                Ok(logits)
+            }
+            Err(e) => {
+                let threshold = self.cfg.max_consecutive_errors;
+                let trip = {
+                    let mut inner = self.inner.lock().unwrap();
+                    match inner.entry_mut(name) {
+                        Ok(en) => {
+                            en.consec_errors =
+                                en.consec_errors.saturating_add(1);
+                            (threshold > 0
+                             && en.consec_errors >= threshold)
+                                .then_some(en.slot)
+                        }
+                        Err(_) => None, // removed concurrently
+                    }
+                };
+                if let Some(slot) = trip {
+                    // force-quarantine; the trip is recorded whatever
+                    // the drain reported (the state transition happened)
+                    let _ = self.quarantine(name);
+                    self.inner.lock().unwrap().lifecycle
+                        .entry(slot).or_default().watchdog_trips += 1;
+                }
+                Err(RegistryError::Service {
+                    model: name.to_string(),
+                    source: e,
+                })
+            }
+        }
     }
 
     /// Cancel one slot after a desync (`Serving -> Draining ->
@@ -886,6 +963,7 @@ impl ModelRegistry {
                     e.service = Some(Arc::new(svc));
                     e.state = SlotState::Serving;
                     e.epoch = epoch;
+                    e.consec_errors = 0; // fresh epoch, clean slate
                 }
                 let lc = inner.lifecycle.entry(slot).or_default();
                 lc.respawns += 1;
@@ -935,6 +1013,7 @@ impl ModelRegistry {
                 epoch: 0,
                 state: SlotState::Starting,
                 service: None,
+                consec_errors: 0,
             });
             slot
         };

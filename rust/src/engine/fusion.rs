@@ -1,0 +1,860 @@
+//! Binary-domain graph fusion: pattern-match `Sign -> {Matmul |
+//! Depthwise | PoolBits | Flatten}` chains in the op plan and lower
+//! them so hidden activations cross layer boundaries as word-packed
+//! boolean shares instead of 32-bit arithmetic shares.
+//!
+//! The planner (`plan_fused`) walks the plaintext program tracking the
+//! activation domain:
+//!
+//! * `Sign` enters the binary domain: the MSB protocol's boolean output
+//!   is kept (`MsbOut::bits`, complemented locally) instead of being
+//!   converted to arithmetic.
+//! * `PoolBits` over bits lowers to an OR tree (max of bits = OR) --
+//!   zero MSB tuples, log2(k^2) AND rounds.
+//! * `Pm1`/`Flatten` over bits are pure metadata (an encoding flag and
+//!   a geometry change; the packed bits never move).
+//! * `Matmul`/`Depthwise` with all-±1 weights, no bias, and no padding
+//!   lower to XNOR + secret-shared popcount (`protocols::binlinear`).
+//!   A directly following `Sign` folds into the popcount threshold:
+//!   with `dot = 2*pc - K`, `sign((dot - t) * flip)` becomes
+//!   `pc >= ceil((K + t)/2)` (flip > 0), `NOT(pc >= floor((K + t)/2)
+//!   + 1)` (flip < 0), or constant 1 (flip = 0); thresholds clamp to
+//!   [0, K+1], where the adder arithmetic realizes the constant cases.
+//! * Everything else ends the binary region: one batched `b2a` (plus
+//!   the local ±1 affine if `Pm1` was applied) re-enters arithmetic,
+//!   and the op runs through the same `run_arith_op` as the unfused
+//!   walk.
+//!
+//! Sequences with no consistent lowering are rejected with a typed
+//! `FusionError` at *plan* time (never a panic mid-protocol): `Pm1`
+//! over arithmetic or already-±1 activations, and `PoolBits` over ±1
+//! bits (an OR there would silently change the function -- the
+//! arithmetic path computes a majority, not a max).
+//!
+//! Secrecy: fused ±1 weight masks and folded thresholds are treated as
+//! public model metadata (the paper's customized BNNs publish their
+//! binarized structure); activations -- the XNOR inputs, every CSA
+//! partial sum, and the popcounts -- stay secret-shared throughout.
+//! The arithmetic entry/exit layers keep their secret-shared weights.
+//! DESIGN.md "Binary-domain fusion" has the full argument.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::nn::{Model, Op};
+use crate::offline::TupleSource;
+use crate::protocols::b2a::b2a;
+use crate::protocols::binlinear::{gather_share, or_planes, popcount_ge,
+                                  popcount_to_arith};
+use crate::protocols::linear::LinearBackend;
+use crate::protocols::Ctx;
+use crate::ring::bits::BitTensor;
+use crate::ring::Tensor;
+use crate::rss::{BitShare, Share};
+
+use super::{concat, cost_row, msb_via, reveal_to_p0, run_arith_op,
+            share_inputs, split, sub_thresh_flip, EngineOptions,
+            InferenceOutput, SharedModel};
+
+/// Typed planner rejection: the op at `index` cannot be lowered into a
+/// consistent fused plan.  Surfaced before any share or protocol state
+/// exists, so `serve --fuse on` fails fast at model-start time.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FusionError {
+    pub index: usize,
+    pub op: &'static str,
+    pub reason: &'static str,
+}
+
+impl std::fmt::Display for FusionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "fusion: op {} ({}) cannot be lowered: {}",
+               self.index, self.op, self.reason)
+    }
+}
+
+impl std::error::Error for FusionError {}
+
+/// One step of a fused plan.  Indices refer to `Model::ops`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FusedOp {
+    /// Run the op unchanged in the arithmetic domain.
+    Arith(usize),
+    /// `Sign` entering the binary domain (keep the MSB bits).
+    SignEnter(usize),
+    /// `PoolBits` lowered to an OR tree over window bit planes.
+    OrPool(usize),
+    /// `Pm1` lowered to an encoding flag (no share op).
+    Pm1Bits(usize),
+    /// `Flatten` lowered to a geometry change (bits never move).
+    FlattenBits(usize),
+    /// `Matmul`/`Depthwise` lowered to XNOR + popcount; the spec in
+    /// `FusedPlan::bins` says whether a following `Sign` is folded in.
+    BinLinear(usize),
+    /// Leave the binary domain (batched b2a + optional ±1 affine)
+    /// before op `before` (or before the final reveal).
+    ToArith { before: usize },
+}
+
+/// Threshold fold of the `Sign` directly after a binary linear layer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct FoldSpec {
+    /// The folded sign op's index (cost attribution).
+    sign_index: usize,
+    /// Per-output-row popcount threshold, clamped to [0, K+1].
+    thresh: Vec<u32>,
+    /// Per-output-row output complement (flip < 0 rows).
+    negate: Vec<bool>,
+}
+
+/// Public lowering data for one binary linear layer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct BinSpec {
+    depthwise: bool,
+    /// Spatial conv (vs FC); always true for depthwise.
+    conv: bool,
+    /// Output rows: `m` (matmul) or channels (depthwise).
+    rows: usize,
+    /// Reduction width K.
+    kdim: usize,
+    /// (k, stride, pad_lo, pad_hi); pads are 0 by construction.
+    geom: (usize, usize, usize, usize),
+    /// Per-row XNOR mask: bit r set iff `w[row][r] == -1`.
+    neg: Vec<BitTensor>,
+    fold: Option<FoldSpec>,
+}
+
+/// A lowered program: the fused op list plus per-layer lowering data
+/// and the plan's (shrunken) MSB tuple demand.
+#[derive(Clone, Debug)]
+pub struct FusedPlan {
+    pub fops: Vec<FusedOp>,
+    bins: BTreeMap<usize, BinSpec>,
+    /// Per-sample element counts of every MSB draw, in order.
+    msb_units: Vec<usize>,
+}
+
+impl FusedPlan {
+    /// Element counts of every MSB invocation the fused walk makes for
+    /// `batch` samples (the fused analogue of `engine::msb_sizes`).
+    pub fn msb_sizes(&self, batch: usize) -> Vec<usize> {
+        self.msb_units.iter().map(|u| u * batch).collect()
+    }
+
+    /// Total MSB elements one fused batched inference consumes.
+    pub fn msb_demand(&self, batch: usize) -> usize {
+        self.msb_sizes(batch).iter().sum()
+    }
+}
+
+/// Fused-plan tuple demand straight from the plaintext model (the
+/// coordinator sizes `TupleBank` watermarks with this when fusion is
+/// on; folded signs and OR-pools consume zero tuples, so the demand is
+/// strictly no larger than `msb_demand_for`).
+pub fn msb_demand_fused(model: &Model, batch: usize)
+                        -> Result<usize, FusionError> {
+    Ok(plan_fused(model)?.msb_demand(batch))
+}
+
+/// `msb_demand_fused`'s per-invocation sizes.
+pub fn msb_sizes_fused(model: &Model, batch: usize)
+                       -> Result<Vec<usize>, FusionError> {
+    Ok(plan_fused(model)?.msb_sizes(batch))
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Dom {
+    Arith,
+    Bits { pm1: bool },
+}
+
+/// Can this linear layer run as XNOR + popcount?  Requires all-±1
+/// weights, no bias, and zero padding (zero is not representable in
+/// the ±1 encoding).
+fn bin_spec(model: &Model, op: &Op) -> Option<BinSpec> {
+    match op {
+        Op::Matmul { conv, m, kdim, geom, w, b, .. } => {
+            if b.is_some() {
+                return None;
+            }
+            let (_k, _s, pl, ph) = *geom;
+            if *conv && (pl != 0 || ph != 0) {
+                return None;
+            }
+            let vals = model.pool_slice(*w);
+            if !vals.iter().all(|&v| v == 1 || v == -1) {
+                return None;
+            }
+            let neg = (0..*m).map(|o| {
+                BitTensor::from_fn(*kdim,
+                                   |r| u8::from(vals[o * kdim + r] == -1))
+            }).collect();
+            Some(BinSpec { depthwise: false, conv: *conv, rows: *m,
+                           kdim: *kdim, geom: *geom, neg, fold: None })
+        }
+        Op::Depthwise { c, geom, w, .. } => {
+            let (k, _s, pl, ph) = *geom;
+            if pl != 0 || ph != 0 {
+                return None;
+            }
+            let vals = model.pool_slice(*w);
+            if !vals.iter().all(|&v| v == 1 || v == -1) {
+                return None;
+            }
+            let kk = k * k;
+            let neg = (0..*c).map(|ci| {
+                BitTensor::from_fn(kk,
+                                   |r| u8::from(vals[ci * kk + r] == -1))
+            }).collect();
+            Some(BinSpec { depthwise: true, conv: true, rows: *c,
+                           kdim: kk, geom: *geom, neg, fold: None })
+        }
+        _ => None,
+    }
+}
+
+/// Fold a sign threshold into a popcount threshold (see module doc for
+/// the algebra; thresholds clamp to [0, K+1] so the constant cases
+/// fall out of the adder).
+fn fold_spec(model: &Model, sign_index: usize, t: crate::nn::PoolRef,
+             flip: crate::nn::PoolRef, kdim: usize) -> FoldSpec {
+    let ts = model.pool_slice(t);
+    let fs = model.pool_slice(flip);
+    let k = kdim as i64;
+    let mut thresh = Vec::with_capacity(ts.len());
+    let mut negate = Vec::with_capacity(ts.len());
+    for (tv, fv) in ts.iter().zip(fs) {
+        let (thr, neg) = if *fv > 0 {
+            ((k + i64::from(*tv) + 1).div_euclid(2), false)
+        } else if *fv < 0 {
+            ((k + i64::from(*tv)).div_euclid(2) + 1, true)
+        } else {
+            (0, false) // sign(0 * flip) = 1, constant
+        };
+        thresh.push(thr.clamp(0, k + 1) as u32);
+        negate.push(neg);
+    }
+    FoldSpec { sign_index, thresh, negate }
+}
+
+/// Lower a model into a fused plan, or reject it with a typed error.
+pub fn plan_fused(model: &Model) -> Result<FusedPlan, FusionError> {
+    let mut fops = Vec::new();
+    let mut bins = BTreeMap::new();
+    let mut msb_units = Vec::new();
+    let mut dom = Dom::Arith;
+    let (mut c, mut h, mut w) = model.input;
+    let err = |i: usize, op: &Op, reason: &'static str| FusionError {
+        index: i, op: op.name(), reason,
+    };
+
+    let n_ops = model.ops.len();
+    let mut i = 0;
+    while i < n_ops {
+        let op = &model.ops[i];
+        match op {
+            Op::Sign { .. } => {
+                // an unfolded sign over bits re-enters arithmetic first
+                if matches!(dom, Dom::Bits { .. }) {
+                    fops.push(FusedOp::ToArith { before: i });
+                }
+                fops.push(FusedOp::SignEnter(i));
+                msb_units.push(c * h * w);
+                dom = Dom::Bits { pm1: false };
+            }
+            Op::PoolBits { k, stride, .. } => {
+                match dom {
+                    Dom::Bits { pm1: false } => fops.push(FusedOp::OrPool(i)),
+                    Dom::Bits { pm1: true } => {
+                        return Err(err(i, op, "pool over ±1-encoded bits: \
+                                               OR-pool needs the 0/1 \
+                                               encoding (the arithmetic \
+                                               path computes a majority \
+                                               here, not a max)"));
+                    }
+                    Dom::Arith => fops.push(FusedOp::Arith(i)),
+                }
+                h = (h - k) / stride + 1;
+                w = (w - k) / stride + 1;
+                if dom == Dom::Arith {
+                    msb_units.push(c * h * w);
+                }
+            }
+            Op::Pm1 => match dom {
+                Dom::Bits { pm1: false } => {
+                    fops.push(FusedOp::Pm1Bits(i));
+                    dom = Dom::Bits { pm1: true };
+                }
+                Dom::Bits { pm1: true } => {
+                    return Err(err(i, op, "pm1 applied to already \
+                                           ±1-encoded activations"));
+                }
+                Dom::Arith => {
+                    return Err(err(i, op, "pm1 assumes bit-encoded \
+                                           activations; none are live in \
+                                           the fused plan here"));
+                }
+            },
+            Op::Flatten { .. } => {
+                fops.push(match dom {
+                    Dom::Bits { .. } => FusedOp::FlattenBits(i),
+                    Dom::Arith => FusedOp::Arith(i),
+                });
+                c *= h * w;
+                h = 1;
+                w = 1;
+            }
+            Op::Relu { .. } => {
+                if matches!(dom, Dom::Bits { .. }) {
+                    fops.push(FusedOp::ToArith { before: i });
+                    dom = Dom::Arith;
+                }
+                fops.push(FusedOp::Arith(i));
+                msb_units.push(c * h * w);
+            }
+            Op::Matmul { .. } | Op::Depthwise { .. } => {
+                let spec = if dom == (Dom::Bits { pm1: true }) {
+                    bin_spec(model, op)
+                } else {
+                    None
+                };
+                // geometry after the layer
+                let (oc, oh, ow) = match op {
+                    Op::Matmul { conv: true, geom, cout, .. } => {
+                        let (k, s, pl, ph) = *geom;
+                        (*cout, (h + pl + ph - k) / s + 1,
+                         (w + pl + ph - k) / s + 1)
+                    }
+                    Op::Matmul { conv: false, m, .. } => (*m, 1, 1),
+                    Op::Depthwise { geom, .. } => {
+                        let (k, s, pl, ph) = *geom;
+                        (c, (h + pl + ph - k) / s + 1,
+                         (w + pl + ph - k) / s + 1)
+                    }
+                    _ => unreachable!(),
+                };
+                match spec {
+                    Some(mut spec) => {
+                        // fold a directly following matching Sign
+                        let folded = match model.ops.get(i + 1) {
+                            Some(Op::Sign { c: sc, t, flip })
+                                if *sc == spec.rows => {
+                                spec.fold = Some(fold_spec(
+                                    model, i + 1, *t, *flip, spec.kdim));
+                                true
+                            }
+                            _ => false,
+                        };
+                        dom = if folded {
+                            Dom::Bits { pm1: false }
+                        } else {
+                            Dom::Arith // popcount materializes via b2a
+                        };
+                        bins.insert(i, spec);
+                        fops.push(FusedOp::BinLinear(i));
+                        if folded {
+                            i += 1; // the sign op is consumed
+                        }
+                    }
+                    None => {
+                        if matches!(dom, Dom::Bits { .. }) {
+                            fops.push(FusedOp::ToArith { before: i });
+                            dom = Dom::Arith;
+                        }
+                        fops.push(FusedOp::Arith(i));
+                    }
+                }
+                (c, h, w) = (oc, oh, ow);
+            }
+        }
+        i += 1;
+    }
+    if matches!(dom, Dom::Bits { .. }) {
+        fops.push(FusedOp::ToArith { before: n_ops });
+    }
+    Ok(FusedPlan { fops, bins, msb_units })
+}
+
+// ------------------------------------------------------------------
+// the fused walk
+// ------------------------------------------------------------------
+
+/// Batched activation state: per-sample arithmetic shares, or one
+/// batch-concatenated boolean share (sample-major, (c, h, w)
+/// row-major within a sample -- the same element order as the
+/// arithmetic `[c, h*w]` layout, so domain crossings never permute).
+enum Acts {
+    Arith(Vec<Share>),
+    Bits { bs: BitShare, pm1: bool },
+}
+
+/// Build the XNOR'd bit planes of one binary linear layer: plane `r`
+/// holds, for every output element (sample, row, window), the input
+/// bit at reduction index `r` XORed with the public `w == -1` mask.
+/// Returns (planes, element count, output geometry).
+fn xnor_planes(me: usize, bs: &BitShare, spec: &BinSpec, batch: usize,
+               cin: (usize, usize, usize))
+               -> (Vec<BitShare>, usize, (usize, usize, usize)) {
+    let (cc, hh, ww) = cin;
+    let (k, st, _, _) = spec.geom;
+    let (oh, ow) = if spec.conv {
+        ((hh - k) / st + 1, (ww - k) / st + 1)
+    } else {
+        (1, 1)
+    };
+    let rows = spec.rows;
+    let nwin = oh * ow;
+    let nout = batch * rows * nwin;
+    let per = cc * hh * ww;
+    let mut planes = Vec::with_capacity(spec.kdim);
+    for r in 0..spec.kdim {
+        // source coordinates of reduction index r (im2col row order
+        // for conv: ((ky*k)+kx)*c + ci; w[ci][ky*k+kx] for depthwise)
+        let (ci, ky, kx) = if spec.depthwise {
+            (0, r / k, r % k) // channel follows the output row
+        } else if spec.conv {
+            (r % cc, (r / cc) / k, (r / cc) % k)
+        } else {
+            (r, 0, 0)
+        };
+        let mut idx = Vec::with_capacity(nout);
+        for s in 0..batch {
+            for o in 0..rows {
+                let src_c = if spec.depthwise { o } else { ci };
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let iy = oy * st + ky;
+                        let ix = ox * st + kx;
+                        idx.push(s * per + src_c * hh * ww + iy * ww + ix);
+                    }
+                }
+            }
+        }
+        let mask = BitTensor::from_fn(nout, |e| {
+            spec.neg[(e / nwin) % rows].get(r)
+        });
+        planes.push(gather_share(bs, &idx).xor_const(me, &mask));
+    }
+    (planes, nout, (rows, oh, ow))
+}
+
+/// Run a fused plan for a batch.  The contract mirrors
+/// `infer_batch_pooled` (same sharing, same reveal, same tuple
+/// sources); logits are bit-identical to the unfused walk because the
+/// only value-affecting randomness -- truncation masks -- advances on
+/// its own PRF counter lane (`PartySeeds::next_trunc_cnt`).
+pub fn infer_batch_fused(
+    ctx: &Ctx, model: &SharedModel, plan: &FusedPlan,
+    backend: &dyn LinearBackend, opts: EngineOptions, inputs: &[Tensor],
+    batch: usize, tuples: &TupleSource<'_>)
+    -> Result<InferenceOutput> {
+    let me = ctx.id();
+    let mut acts = Acts::Arith(share_inputs(ctx, model.input, inputs,
+                                            batch)?);
+    let mut geoms: Vec<(usize, usize, usize)> = vec![model.input; batch];
+    let mut op_costs = Vec::with_capacity(plan.fops.len());
+    let drift = || anyhow!("fused plan drift: activation domain does \
+                            not match the plan");
+
+    for fop in &plan.fops {
+        let before = ctx.comm.stats();
+        let mut label: Option<(usize, String)> = None;
+        match fop {
+            FusedOp::Arith(i) => {
+                let Acts::Arith(ref mut v) = acts else {
+                    return Err(drift());
+                };
+                let op = &model.ops[*i];
+                run_arith_op(ctx, model, backend, opts, tuples, *i, op,
+                             v, &mut geoms)?;
+                label = Some((*i, op.name().to_string()));
+            }
+            FusedOp::SignEnter(i) => {
+                let Acts::Arith(ref v) = acts else {
+                    return Err(drift());
+                };
+                let t = model.thresholds[*i].as_ref().unwrap();
+                let flip = model.flips[*i].as_ref().unwrap();
+                let d: Vec<Share> = v.iter().zip(geoms.iter())
+                    .map(|(s, gm)| {
+                        let (cc, hh, ww) = *gm;
+                        let z = s.clone().reshape(&[cc, hh * ww]);
+                        sub_thresh_flip(&z, t, flip)
+                    }).collect();
+                let joined = concat(&d);
+                let m = msb_via(ctx, tuples, &joined)?;
+                // sign = NOT msb, local on the boolean share
+                acts = Acts::Bits { bs: m.bits.not(me), pm1: false };
+                label = Some((*i, "sign[bits]".to_string()));
+            }
+            FusedOp::OrPool(i) => {
+                let Acts::Bits { ref bs, pm1: false } = acts else {
+                    return Err(drift());
+                };
+                let Op::PoolBits { k, stride, .. } = &model.ops[*i] else {
+                    return Err(drift());
+                };
+                let (cc, hh, ww) = geoms[0];
+                let oh = (hh - k) / stride + 1;
+                let ow = (ww - k) / stride + 1;
+                let nout = batch * cc * oh * ow;
+                let mut planes = Vec::with_capacity(k * k);
+                for ky in 0..*k {
+                    for kx in 0..*k {
+                        let mut idx = Vec::with_capacity(nout);
+                        for s in 0..batch {
+                            for ci in 0..cc {
+                                for oy in 0..oh {
+                                    for ox in 0..ow {
+                                        let iy = oy * stride + ky;
+                                        let ix = ox * stride + kx;
+                                        idx.push(s * cc * hh * ww
+                                                 + ci * hh * ww
+                                                 + iy * ww + ix);
+                                    }
+                                }
+                            }
+                        }
+                        planes.push(gather_share(bs, &idx));
+                    }
+                }
+                let out = or_planes(ctx, planes)?;
+                acts = Acts::Bits { bs: out, pm1: false };
+                geoms = vec![(cc, oh, ow); batch];
+                label = Some((*i, "pool_bits[or]".to_string()));
+            }
+            FusedOp::Pm1Bits(i) => {
+                let Acts::Bits { ref mut pm1, .. } = acts else {
+                    return Err(drift());
+                };
+                *pm1 = true; // encoding flag only; the bits never move
+                label = Some((*i, "pm1[mark]".to_string()));
+            }
+            FusedOp::FlattenBits(i) => {
+                if !matches!(acts, Acts::Bits { .. }) {
+                    return Err(drift());
+                }
+                let (cc, hh, ww) = geoms[0];
+                geoms = vec![(cc * hh * ww, 1, 1); batch];
+                label = Some((*i, "flatten[bits]".to_string()));
+            }
+            FusedOp::BinLinear(i) => {
+                let Acts::Bits { ref bs, pm1: true } = acts else {
+                    return Err(drift());
+                };
+                let spec = &plan.bins[i];
+                let (planes, nout, out_geom) =
+                    xnor_planes(me, bs, spec, batch, geoms[0]);
+                let (rows, oh, ow) = out_geom;
+                let nwin = oh * ow;
+                let base = if spec.depthwise { "depthwise" } else { "matmul" };
+                match &spec.fold {
+                    Some(f) => {
+                        let thresh: Vec<u32> = (0..nout)
+                            .map(|e| f.thresh[(e / nwin) % rows]).collect();
+                        let mut out = popcount_ge(ctx, planes, &thresh)?;
+                        let negpat = BitTensor::from_fn(nout, |e| {
+                            u8::from(f.negate[(e / nwin) % rows])
+                        });
+                        if negpat.popcount() > 0 {
+                            out = out.xor_const(me, &negpat);
+                        }
+                        acts = Acts::Bits { bs: out, pm1: false };
+                        label = Some((*i, format!("{base}[xnor+sign]")));
+                    }
+                    None => {
+                        // dot = 2*pc - K, materialized via one b2a
+                        let pc = popcount_to_arith(ctx, planes)?;
+                        let dot = pc.scale(2)
+                            .add_const(me, -(spec.kdim as i32));
+                        let shapes = vec![vec![rows, nwin]; batch];
+                        acts = Acts::Arith(split(dot, &shapes));
+                        label = Some((*i, format!("{base}[xnor]")));
+                    }
+                }
+                geoms = vec![out_geom; batch];
+            }
+            FusedOp::ToArith { before } => {
+                let Acts::Bits { ref bs, pm1 } = acts else {
+                    return Err(drift());
+                };
+                let ar = b2a(ctx, bs)?;
+                let ar = if pm1 { ar.pm1(me) } else { ar };
+                let (cc, hh, ww) = geoms[0];
+                let shapes = vec![vec![cc, hh * ww]; batch];
+                acts = Acts::Arith(split(ar, &shapes));
+                label = Some((*before, "b2a[boundary]".to_string()));
+            }
+        }
+        let (index, op) = label.unwrap();
+        op_costs.push(cost_row(ctx, index, op, &before));
+    }
+
+    let Acts::Arith(ref v) = acts else {
+        return Err(drift()); // plan always ends arithmetic
+    };
+    let joined = concat(v);
+    let logits = reveal_to_p0(ctx, &joined)?;
+    if me == 0 {
+        let lv = logits.unwrap();
+        let per = lv.len() / batch;
+        Ok(InferenceOutput {
+            logits: lv.chunks(per).map(<[i32]>::to_vec).collect(),
+            op_costs,
+        })
+    } else {
+        Ok(InferenceOutput { logits: vec![], op_costs })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{infer_batch_pooled, msb_demand_for, share_model};
+    use crate::protocols::linear::NativeBackend;
+    use crate::protocols::preproc::MsbPool;
+    use crate::protocols::testsupport::run3;
+    use crate::testutil::threeparty::every_op_model;
+
+    fn model_json(layers: &str, input: (usize, usize, usize),
+                  pool: Vec<i32>) -> Model {
+        let manifest = format!(r#"{{
+          "name": "t", "dataset": "synthetic",
+          "input": {{"c": {}, "h": {}, "w": {}}},
+          "s_in": 0, "ring_bits": 32,
+          "layers": [{}]
+        }}"#, input.0, input.1, input.2, layers);
+        Model::from_json(&manifest, pool).unwrap()
+    }
+
+    /// flatten -> fc(+bias) -> sign -> pm1 -> fc(±1, no bias): the
+    /// canonical Sign -> Matmul chain with a binary linear tail.
+    fn sign_matmul_chain() -> Model {
+        let layers = r#"
+            {"op": "flatten", "c": 1, "h": 2, "w": 2},
+            {"op": "matmul", "conv": false, "m": 4, "kdim": 4, "n": 1,
+             "w": {"off": 0, "len": 16}, "b": {"off": 16, "len": 4},
+             "s_in": 0, "s_out": 0},
+            {"op": "sign", "c": 4, "t": {"off": 20, "len": 4},
+             "flip": {"off": 24, "len": 4}},
+            {"op": "pm1"},
+            {"op": "matmul", "conv": false, "m": 3, "kdim": 4, "n": 1,
+             "w": {"off": 28, "len": 12}, "s_in": 0, "s_out": 0}"#;
+        let mut pool: Vec<i32> = (0..28).map(|v| (v % 5) - 2).collect();
+        pool[24..28].copy_from_slice(&[1, -1, 1, 1]); // non-zero flips
+        // ±1 weights for the binary fc
+        pool.extend((0..12).map(|v| if v % 3 == 0 { -1 } else { 1 }));
+        model_json(layers, (1, 2, 2), pool)
+    }
+
+    #[test]
+    fn planner_lowers_the_every_op_model() {
+        let model = every_op_model();
+        let plan = plan_fused(&model).unwrap();
+        // conv stays arithmetic; sign enters bits; pool_bits -> OR;
+        // pm1 -> flag; depthwise weights are {0,1} (not ±1) so the
+        // region ends there; the tail runs arithmetic
+        assert_eq!(plan.fops, vec![
+            FusedOp::Arith(0),
+            FusedOp::SignEnter(1),
+            FusedOp::OrPool(2),
+            FusedOp::Pm1Bits(3),
+            FusedOp::ToArith { before: 4 },
+            FusedOp::Arith(4),
+            FusedOp::Arith(5),
+            FusedOp::Arith(6),
+            FusedOp::Arith(7),
+        ]);
+        // tuple demand shrinks: the pooled sign disappears (OR-pool
+        // draws nothing), only the entry sign and the relu remain
+        assert_eq!(plan.msb_sizes(2), vec![64, 6]);
+        assert_eq!(plan.msb_demand(2), 70);
+        assert_eq!(msb_demand_fused(&model, 2).unwrap(), 70);
+        assert!(plan.msb_demand(2) < msb_demand_for(&model, 2));
+    }
+
+    #[test]
+    fn planner_folds_sign_into_binary_linear() {
+        let layers = r#"
+            {"op": "flatten", "c": 1, "h": 2, "w": 2},
+            {"op": "matmul", "conv": false, "m": 4, "kdim": 4, "n": 1,
+             "w": {"off": 0, "len": 16}, "b": {"off": 16, "len": 4},
+             "s_in": 0, "s_out": 0},
+            {"op": "sign", "c": 4, "t": {"off": 20, "len": 4},
+             "flip": {"off": 24, "len": 4}},
+            {"op": "pm1"},
+            {"op": "matmul", "conv": false, "m": 2, "kdim": 4, "n": 1,
+             "w": {"off": 28, "len": 8}, "s_in": 0, "s_out": 0},
+            {"op": "sign", "c": 2, "t": {"off": 36, "len": 2},
+             "flip": {"off": 38, "len": 2}}"#;
+        let mut pool: Vec<i32> = (0..28).map(|v| (v % 5) - 2).collect();
+        pool[24..28].copy_from_slice(&[1, 1, -1, 1]);
+        pool.extend([1, -1, -1, 1, 1, 1, -1, -1]); // ±1 fc
+        pool.extend([1, -3]); // t
+        pool.extend([1, -1]); // flip
+        let model = model_json(layers, (1, 2, 2), pool);
+        let plan = plan_fused(&model).unwrap();
+        assert_eq!(plan.fops, vec![
+            FusedOp::Arith(0),
+            FusedOp::Arith(1),
+            FusedOp::SignEnter(2),
+            FusedOp::Pm1Bits(3),
+            FusedOp::BinLinear(4),
+            FusedOp::ToArith { before: 6 },
+        ]);
+        let spec = &plan.bins[&4];
+        let fold = spec.fold.as_ref().expect("sign must fold");
+        assert_eq!(fold.sign_index, 5);
+        // K=4: flip=+1, t=1 -> ceil(5/2) = 3; flip=-1, t=-3 ->
+        // floor(1/2)+1 = 1, negated
+        assert_eq!(fold.thresh, vec![3, 1]);
+        assert_eq!(fold.negate, vec![false, true]);
+        // only the entry sign draws tuples
+        assert_eq!(plan.msb_sizes(1), vec![4]);
+    }
+
+    #[test]
+    fn planner_rejects_inconsistent_sequences_with_typed_errors() {
+        // pm1 over arithmetic activations (no live bits)
+        let layers = r#"
+            {"op": "flatten", "c": 1, "h": 2, "w": 2},
+            {"op": "matmul", "conv": false, "m": 2, "kdim": 4, "n": 1,
+             "w": {"off": 0, "len": 8}, "s_in": 0, "s_out": 0},
+            {"op": "pm1"}"#;
+        let model = model_json(layers, (1, 2, 2), (0..8).collect());
+        let e = plan_fused(&model).unwrap_err();
+        assert_eq!((e.index, e.op), (2, "pm1"));
+        assert!(e.to_string().contains("cannot be lowered"), "{e}");
+
+        // double pm1
+        let layers = r#"
+            {"op": "matmul", "conv": true, "m": 2, "kdim": 4, "n": 9,
+             "k": 2, "stride": 1, "pad_lo": 0, "pad_hi": 0, "cout": 2,
+             "w": {"off": 0, "len": 8}, "s_in": 0, "s_out": 0},
+            {"op": "sign", "c": 2, "t": {"off": 8, "len": 2},
+             "flip": {"off": 10, "len": 2}},
+            {"op": "pm1"},
+            {"op": "pm1"}"#;
+        let mut pool: Vec<i32> = (0..10).map(|v| (v % 3) - 1).collect();
+        pool.extend([1, 1]);
+        let model = model_json(layers, (1, 4, 4), pool.clone());
+        let e = plan_fused(&model).unwrap_err();
+        assert_eq!((e.index, e.op), (3, "pm1"));
+
+        // pool over ±1-encoded bits (an OR would change the function)
+        let layers = r#"
+            {"op": "matmul", "conv": true, "m": 2, "kdim": 4, "n": 9,
+             "k": 2, "stride": 1, "pad_lo": 0, "pad_hi": 0, "cout": 2,
+             "w": {"off": 0, "len": 8}, "s_in": 0, "s_out": 0},
+            {"op": "sign", "c": 2, "t": {"off": 8, "len": 2},
+             "flip": {"off": 10, "len": 2}},
+            {"op": "pm1"},
+            {"op": "pool_bits", "c": 2, "k": 3, "stride": 1}"#;
+        let model = model_json(layers, (1, 4, 4), pool);
+        let e = plan_fused(&model).unwrap_err();
+        assert_eq!((e.index, e.op), (3, "pool_bits"));
+    }
+
+    #[test]
+    fn fused_and_unfused_meet_design_round_budgets() {
+        // DESIGN.md budgets, made executable via the per-op cost rows:
+        // linear+reshare = 1 round, online Sign (pooled MSB) = 2, B2A
+        // boundary = 3; the fused binary fc stays inside the CSA+KS
+        // bound.  Logits are bit-identical (no truncation in this
+        // model, and trunc randomness has its own lane anyway).
+        let results = run3(|ctx| {
+            let model = sign_matmul_chain();
+            let shared = share_model(ctx, &model, true).unwrap();
+            let plan = plan_fused(&model).unwrap();
+            let inputs: Vec<Tensor> = if ctx.id() == 0 {
+                let mut rng = crate::testutil::Rng::new(12);
+                vec![rng.tensor_small(&[1, 4], 15),
+                     rng.tensor_small(&[1, 4], 15)]
+            } else {
+                vec![]
+            };
+            let pool = MsbPool::new();
+            pool.generate(ctx, msb_demand_for(&model, 2)).unwrap();
+            let unfused = infer_batch_pooled(
+                ctx, &shared, &NativeBackend, EngineOptions::default(),
+                &inputs, 2, &TupleSource::Pool(&pool)).unwrap();
+            let fpool = MsbPool::new();
+            fpool.generate(ctx, plan.msb_demand(2)).unwrap();
+            let fused = infer_batch_fused(
+                ctx, &shared, &plan, &NativeBackend,
+                EngineOptions::default(), &inputs, 2,
+                &TupleSource::Pool(&fpool)).unwrap();
+            assert_eq!(fpool.available(), 0,
+                       "plan.msb_sizes must mirror the fused walk");
+            (unfused.logits, fused.logits,
+             unfused.op_costs, fused.op_costs)
+        });
+        let (u_logits, f_logits, u_costs, f_costs) = results[0].0.clone();
+        assert_eq!(u_logits, f_logits, "fused logits must be identical");
+        let row = |costs: &[crate::metrics::OpCost], op: &str|
+            costs.iter().find(|r| r.op == op).cloned()
+                .unwrap_or_else(|| panic!("no {op} row"));
+        // unfused: Sign = 2 rounds (pooled MSB), fc matmul = 1
+        assert_eq!(row(&u_costs, "sign").rounds, 2);
+        assert_eq!(row(&u_costs, "matmul").rounds, 1);
+        // fused: the entry sign keeps the 2-round budget; pm1 is free;
+        // the binary fc (K=4, B=3) fits CSA levels + 1 + log2(B) + B2A
+        assert_eq!(row(&f_costs, "sign[bits]").rounds, 2);
+        assert_eq!(row(&f_costs, "pm1[mark]").rounds, 0);
+        assert_eq!(row(&f_costs, "pm1[mark]").bytes_sent, 0);
+        let bin = row(&f_costs, "matmul[xnor]");
+        assert!(bin.rounds >= 4 && bin.rounds <= 9,
+                "binary fc rounds = {}", bin.rounds);
+        // every party agrees on the cost rows (lock-step protocols)
+        for p in 1..3 {
+            assert_eq!(results[p].0 .3.iter().map(|r| r.rounds)
+                       .collect::<Vec<_>>(),
+                       f_costs.iter().map(|r| r.rounds)
+                       .collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn b2a_boundary_meets_the_design_budget() {
+        // a model that ends in the binary domain exercises the final
+        // ToArith: DESIGN's B2A budget is 3 rounds
+        let layers = r#"
+            {"op": "flatten", "c": 1, "h": 2, "w": 2},
+            {"op": "matmul", "conv": false, "m": 3, "kdim": 4, "n": 1,
+             "w": {"off": 0, "len": 12}, "b": {"off": 12, "len": 3},
+             "s_in": 0, "s_out": 0},
+            {"op": "sign", "c": 3, "t": {"off": 15, "len": 3},
+             "flip": {"off": 18, "len": 3}}"#;
+        let mut pool: Vec<i32> = (0..18).map(|v| (v % 5) - 2).collect();
+        pool.extend([1, -1, 1]);
+        let model = model_json(layers, (1, 2, 2), pool);
+        let results = run3(|ctx| {
+            let shared = share_model(ctx, &model, true).unwrap();
+            let plan = plan_fused(&model).unwrap();
+            assert!(matches!(plan.fops.last(),
+                             Some(FusedOp::ToArith { before: 3 })));
+            let inputs: Vec<Tensor> = if ctx.id() == 0 {
+                let mut rng = crate::testutil::Rng::new(13);
+                vec![rng.tensor_small(&[1, 4], 15)]
+            } else {
+                vec![]
+            };
+            let fpool = MsbPool::new();
+            fpool.generate(ctx, plan.msb_demand(1)).unwrap();
+            let fused = infer_batch_fused(
+                ctx, &shared, &plan, &NativeBackend,
+                EngineOptions::default(), &inputs, 1,
+                &TupleSource::Pool(&fpool)).unwrap();
+            let unfused = infer_batch_pooled(
+                ctx, &shared, &NativeBackend, EngineOptions::default(),
+                &inputs, 1, &TupleSource::Inline).unwrap();
+            (fused.logits, unfused.logits, fused.op_costs)
+        });
+        let (f_logits, u_logits, costs) = results[0].0.clone();
+        assert_eq!(f_logits, u_logits);
+        let b2a_row = costs.iter().find(|r| r.op == "b2a[boundary]")
+            .expect("b2a row");
+        assert_eq!(b2a_row.rounds, 3, "B2A budget (DESIGN.md)");
+    }
+}

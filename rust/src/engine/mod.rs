@@ -33,12 +33,18 @@ pub struct EngineOptions {
     /// Mint MSB correlated material during setup so the online MSB is
     /// 2 rounds (EXPERIMENTS.md §Perf); off = run Algorithm 3 inline.
     pub preprocess: bool,
+    /// Binary-domain layer fusion: keep hidden activations as boolean
+    /// shares across `Sign -> {Matmul|Depthwise|PoolBits|Flatten}`
+    /// chains (`engine::fusion`), converting to arithmetic only where
+    /// the plan demands it.  Off by default: fused plans additionally
+    /// require the planner to accept the model (`plan_fused`).
+    pub fuse: bool,
 }
 
 impl Default for EngineOptions {
     fn default() -> Self {
         EngineOptions { relu_via_ot: true, fused_pool: true,
-                        preprocess: true }
+                        preprocess: true, fuse: false }
     }
 }
 
@@ -318,6 +324,9 @@ fn sub_thresh_flip(z: &Share, t: &Share, flip: &[i32]) -> Share {
 pub struct InferenceOutput {
     /// Revealed logits -- only populated on the data owner (P0).
     pub logits: Vec<Vec<i32>>,
+    /// Per-op wire cost rows for this party's walk (DESIGN.md round
+    /// budgets made executable; see `metrics::op_cost_table`).
+    pub op_costs: Vec<crate::metrics::OpCost>,
 }
 
 /// Run the full layer program for a batch.  `inputs` is non-empty only on
@@ -330,6 +339,40 @@ pub fn infer_batch(ctx: &Ctx, model: &SharedModel,
                        &TupleSource::Inline)
 }
 
+/// Share the request batch (one round): P0 concatenates its samples,
+/// everyone splits the dealt share back per sample.
+fn share_inputs(ctx: &Ctx, input: (usize, usize, usize),
+                inputs: &[Tensor], batch: usize) -> Result<Vec<Share>> {
+    let (c0, h0, w0) = input;
+    let joined = if ctx.id() == 0 {
+        assert_eq!(inputs.len(), batch);
+        let mut all = Vec::with_capacity(batch * c0 * h0 * w0);
+        for x in inputs {
+            assert_eq!(x.len(), c0 * h0 * w0, "input shape mismatch");
+            all.extend_from_slice(&x.data);
+        }
+        Some(Tensor::from_vec(&[batch * c0 * h0 * w0], all))
+    } else {
+        None
+    };
+    let shared = rss::share_input(ctx.comm, ctx.seeds, 0, joined.as_ref(),
+                                  &[batch * c0 * h0 * w0])?;
+    let shapes = vec![vec![c0, h0 * w0]; batch];
+    Ok(split(shared, &shapes))
+}
+
+/// Attribute the wire delta since `before` to one op-cost row.
+fn cost_row(ctx: &Ctx, index: usize, op: String,
+            before: &crate::transport::Stats) -> crate::metrics::OpCost {
+    let now = ctx.comm.stats();
+    crate::metrics::OpCost {
+        index,
+        op,
+        rounds: now.rounds - before.rounds,
+        bytes_sent: now.bytes_sent - before.bytes_sent,
+    }
+}
+
 /// `infer_batch` drawing MSB correlated material from `tuples` (an
 /// inline pool, a producer-fed `offline::TupleBank`, or nothing).
 pub fn infer_batch_pooled(
@@ -338,31 +381,45 @@ pub fn infer_batch_pooled(
     tuples: &TupleSource<'_>)
     -> Result<InferenceOutput> {
     let me = ctx.id();
-    let (c0, h0, w0) = model.input;
-    // ---- share the inputs (one round, batched) -------------------------
-    let mut acts: Vec<Share>;
-    {
-        let joined = if me == 0 {
-            assert_eq!(inputs.len(), batch);
-            let mut all = Vec::with_capacity(batch * c0 * h0 * w0);
-            for x in inputs {
-                assert_eq!(x.len(), c0 * h0 * w0, "input shape mismatch");
-                all.extend_from_slice(&x.data);
-            }
-            Some(Tensor::from_vec(&[batch * c0 * h0 * w0], all))
-        } else {
-            None
-        };
-        let shared = rss::share_input(ctx.comm, ctx.seeds, 0,
-                                      joined.as_ref(),
-                                      &[batch * c0 * h0 * w0])?;
-        let shapes = vec![vec![c0, h0 * w0]; batch];
-        acts = split(shared, &shapes);
-    }
-
-    let mut geom: Vec<(usize, usize, usize)> = vec![(c0, h0, w0); batch];
+    let mut acts = share_inputs(ctx, model.input, inputs, batch)?;
+    let mut geom: Vec<(usize, usize, usize)> =
+        vec![model.input; batch];
+    let mut op_costs = Vec::with_capacity(model.ops.len());
     // ---- walk the program ----------------------------------------------
     for (i, op) in model.ops.iter().enumerate() {
+        let before = ctx.comm.stats();
+        run_arith_op(ctx, model, backend, opts, tuples, i, op,
+                     &mut acts, &mut geom)?;
+        op_costs.push(cost_row(ctx, i, op.name().to_string(), &before));
+    }
+
+    // ---- reveal logits to the data owner only --------------------------
+    let joined = concat(&acts);
+    let logits = reveal_to_p0(ctx, &joined)?;
+    if me == 0 {
+        let v = logits.unwrap();
+        let per = v.len() / batch;
+        Ok(InferenceOutput {
+            logits: v.chunks(per).map(<[i32]>::to_vec).collect(),
+            op_costs,
+        })
+    } else {
+        Ok(InferenceOutput { logits: vec![], op_costs })
+    }
+}
+
+/// Execute one arithmetic-domain op over the per-sample share batch.
+/// The unfused walk runs every op through this; fused plans
+/// (`engine::fusion`) call it for the segments the planner left in the
+/// arithmetic domain, so the two walks cannot drift apart.
+fn run_arith_op(ctx: &Ctx, model: &SharedModel,
+                backend: &dyn LinearBackend, opts: EngineOptions,
+                tuples: &TupleSource<'_>, i: usize, op: &Op,
+                acts: &mut Vec<Share>,
+                geom: &mut Vec<(usize, usize, usize)>) -> Result<()> {
+    let me = ctx.id();
+    let batch = acts.len();
+    {
         match op {
             Op::Matmul { conv, m, kdim, geom: g, cout, hlo, .. } => {
                 let w = model.weights[i].as_ref().unwrap();
@@ -390,7 +447,7 @@ pub fn infer_batch_pooled(
                     shapes.push(zi.shape.clone());
                     zis.push(zi);
                 }
-                acts = reshare_batched(ctx, zis, &shapes)?;
+                *acts = reshare_batched(ctx, zis, &shapes)?;
             }
             Op::Depthwise { geom: g, hlo, .. } => {
                 let w = model.weights[i].as_ref().unwrap();
@@ -409,13 +466,13 @@ pub fn infer_batch_pooled(
                     shapes.push(zi.shape.clone());
                     zis.push(zi);
                 }
-                acts = reshare_batched(ctx, zis, &shapes)?;
+                *acts = reshare_batched(ctx, zis, &shapes)?;
             }
             Op::Sign { .. } => {
                 let t = model.thresholds[i].as_ref().unwrap();
                 let flip = model.flips[i].as_ref().unwrap();
                 // local threshold + flip, then ONE batched sign protocol
-                let d: Vec<Share> = acts.iter().zip(&geom).map(|(s, gm)| {
+                let d: Vec<Share> = acts.iter().zip(geom.iter()).map(|(s, gm)| {
                     let (cc, hh, ww) = *gm;
                     let z = s.clone().reshape(&[cc, hh * ww]);
                     sub_thresh_flip(&z, t, flip)
@@ -424,7 +481,7 @@ pub fn infer_batch_pooled(
                     d.iter().map(|s| s.shape().to_vec()).collect();
                 let joined = concat(&d);
                 let bits = msb_via(ctx, tuples, &joined)?.sign_a;
-                acts = split(bits, &shapes);
+                *acts = split(bits, &shapes);
             }
             Op::Relu { trunc: f } => {
                 let shapes: Vec<Vec<usize>> =
@@ -437,7 +494,7 @@ pub fn infer_batch_pooled(
                     relu_mul(ctx, &joined, &m)?
                 };
                 let truncated = trunc(ctx, &r, *f)?;
-                acts = split(truncated, &shapes);
+                *acts = split(truncated, &shapes);
             }
             Op::PoolBits { k, stride, .. } => {
                 // local window sums per sample, one batched Sign
@@ -455,7 +512,7 @@ pub fn infer_batch_pooled(
                 }
                 let joined = concat(&sums);
                 let bits = msb_via(ctx, tuples, &joined)?.sign_a;
-                acts = split(bits, &shapes);
+                *acts = split(bits, &shapes);
             }
             Op::Pm1 => {
                 for s in acts.iter_mut() {
@@ -471,20 +528,7 @@ pub fn infer_batch_pooled(
             }
         }
     }
-
-    // ---- reveal logits to the data owner only --------------------------
-    let joined = concat(&acts);
-    let logits = reveal_to_p0(ctx, &joined)?;
-    let out = if me == 0 {
-        let v = logits.unwrap();
-        let per = v.len() / batch;
-        Ok(InferenceOutput {
-            logits: v.chunks(per).map(<[i32]>::to_vec).collect(),
-        })
-    } else {
-        Ok(InferenceOutput { logits: vec![] })
-    };
-    out
+    Ok(())
 }
 
 /// Reveal a share to P0 only: P1 sends its x_2 component to P0.
@@ -513,6 +557,7 @@ pub fn argmax(logits: &[i32]) -> usize {
         .max_by_key(|(_, &v)| v).map(|(i, _)| i).unwrap_or(0)
 }
 
+pub mod fusion;
 pub mod session;
 
 #[cfg(test)]

@@ -70,6 +70,11 @@ pub struct SessionConfig {
     /// `serve --max-parked-bytes`).  Bounds what a malicious peer can
     /// park on a registered-but-idle lane.
     pub max_parked_bytes: usize,
+    /// Consecutive `Service::infer` failures a registry slot tolerates
+    /// before the watchdog force-quarantines it (`ModelRegistry`;
+    /// counted in `LifecycleCounters::watchdog_trips`).  0 disables the
+    /// watchdog; the CLI's `serve --max-infer-errors`.
+    pub max_consecutive_errors: u32,
 }
 
 impl SessionConfig {
@@ -84,6 +89,7 @@ impl SessionConfig {
             bank: None,
             max_batch: 8,
             max_parked_bytes: crate::transport::DEFAULT_PARKED_CAP,
+            max_consecutive_errors: 3,
         }
     }
 
@@ -113,6 +119,9 @@ pub struct SessionReport {
     /// Model-sharing setup wall time.
     pub setup: Duration,
     pub stats: [Stats; 3],
+    /// Party 0's per-op wire-cost rows for the online walk (the CLI's
+    /// `infer` table; see `metrics::op_cost_table`).
+    pub op_costs: Vec<crate::metrics::OpCost>,
 }
 
 impl SessionReport {
@@ -144,17 +153,33 @@ pub fn run_inference(model: &Arc<Model>, inputs: Vec<Tensor>,
         let cfg = cfg.clone();
         let inputs = if comm.id == 0 { inputs.clone() } else { vec![] };
         handles.push(thread::spawn(move || -> Result<(
-            Vec<Vec<i32>>, Duration, Duration, Stats)> {
+            Vec<Vec<i32>>, Duration, Duration, Stats,
+            Vec<crate::metrics::OpCost>)> {
             let seeds = PartySeeds::setup(cfg.session_seed, comm.id);
             let ctx = Ctx::with_cfg(&comm, &seeds, cfg.proto);
             let backend = make_backend(cfg.backend, &cfg.hlo_dir)?;
             let t0 = Instant::now();
             // compile the layer executables during setup, never online
             backend.warmup(&super::hlo_keys(&model));
+            // fused plans are public structure: every party lowers the
+            // manifest identically (or rejects it identically, at setup)
+            let plan = if cfg.opts.fuse {
+                Some(super::fusion::plan_fused(&model)?)
+            } else {
+                None
+            };
             let shared = share_model(&ctx, &model, true)?;
-            // offline phase: mint the MSB correlated material
+            // offline phase: mint the MSB correlated material (fused
+            // plans demand strictly less -- folded signs and OR-pools
+            // draw nothing)
             let pool = if cfg.opts.preprocess {
-                Some(super::preprocess_for(&ctx, &shared, batch)?)
+                let demand = match &plan {
+                    Some(p) => p.msb_demand(batch),
+                    None => super::msb_demand(&shared, batch),
+                };
+                let pool = crate::protocols::preproc::MsbPool::new();
+                pool.generate(&ctx, demand)?;
+                Some(pool)
             } else {
                 None
             };
@@ -165,11 +190,16 @@ pub fn run_inference(model: &Arc<Model>, inputs: Vec<Tensor>,
             let setup = t0.elapsed();
             comm.reset_stats(); // report online cost separately
             let t1 = Instant::now();
-            let out = super::infer_batch_pooled(
-                &ctx, &shared, backend.as_ref(), cfg.opts, &inputs, batch,
-                &tuples)?;
+            let out = match &plan {
+                Some(p) => super::fusion::infer_batch_fused(
+                    &ctx, &shared, p, backend.as_ref(), cfg.opts, &inputs,
+                    batch, &tuples)?,
+                None => super::infer_batch_pooled(
+                    &ctx, &shared, backend.as_ref(), cfg.opts, &inputs,
+                    batch, &tuples)?,
+            };
             let online = t1.elapsed();
-            Ok((out.logits, online, setup, comm.stats()))
+            Ok((out.logits, online, setup, comm.stats(), out.op_costs))
         }));
     }
     let mut results = Vec::new();
@@ -185,6 +215,7 @@ pub fn run_inference(model: &Arc<Model>, inputs: Vec<Tensor>,
         online: results[0].1,
         setup: results[0].2,
         stats: stats.try_into().expect("three parties"),
+        op_costs: results[0].4.clone(),
     })
 }
 

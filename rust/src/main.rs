@@ -22,8 +22,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
-use cbnn::cli::{parse_backend, parse_bank, parse_models, parse_net, Args,
-                SERVE_FLAGS};
+use cbnn::cli::{parse_backend, parse_bank, parse_models, parse_net,
+                parse_on_off, Args, SERVE_FLAGS};
 use cbnn::coordinator::{BatchPolicy, Coordinator, ModelRegistry, ModelSpec,
                         Service};
 use cbnn::datasets::EvalSet;
@@ -42,7 +42,9 @@ fn usage() -> String {
         "usage: cbnn <infer|serve|acc|info> --model <name|name=manifest>\n\
          serve flags (--model repeatable): {}\n\
          values: --net lan|wan|zero, --backend \
-         native|pjrt-pallas|pjrt-xla; see OPERATIONS.md",
+         native|pjrt-pallas|pjrt-xla, --fuse on|off (binary-domain \
+         layer fusion), --max-infer-errors N (0 disables the \
+         auto-quarantine watchdog); see OPERATIONS.md",
         serve.join(" "))
 }
 
@@ -74,6 +76,11 @@ fn main() -> Result<()> {
     cfg.max_parked_bytes = args
         .get_usize("max-parked-bytes", cfg.max_parked_bytes)
         .map_err(anyhow::Error::msg)?;
+    cfg.opts.fuse = parse_on_off(&args, "fuse", false)
+        .map_err(anyhow::Error::msg)?;
+    cfg.max_consecutive_errors = args
+        .get_usize("max-infer-errors", cfg.max_consecutive_errors as usize)
+        .map_err(anyhow::Error::msg)? as u32;
 
     // info/infer/acc are single-model commands: last --model wins
     let (name, path) = specs.last().expect("parse_models is non-empty");
@@ -97,14 +104,17 @@ fn main() -> Result<()> {
                 .map_err(anyhow::Error::msg)?;
             let inputs = data.images[..batch.min(data.images.len())].to_vec();
             let rep = run_inference(&model, inputs, &cfg)?;
-            println!("model={} batch={} net={}", model.name, batch,
-                     args.get_or("net", "lan"));
+            println!("model={} batch={} net={} fuse={}", model.name,
+                     batch, args.get_or("net", "lan"),
+                     if cfg.opts.fuse { "on" } else { "off" });
             println!("setup  : {}", fmt_duration(rep.setup));
             println!("online : {}  ({} per sample)",
                      fmt_duration(rep.online),
                      fmt_duration(rep.online / batch as u32));
             println!("comm   : {:.3} MB, {} rounds (max over parties)",
                      rep.comm_mb(), rep.max_rounds());
+            println!("per-op wire cost (party 0):");
+            print!("{}", cbnn::metrics::op_cost_table(&rep.op_costs));
             for (i, (p, l)) in rep.preds.iter()
                 .zip(&data.labels).enumerate() {
                 println!("  sample {i}: pred={p} label={l}");
@@ -302,9 +312,10 @@ fn admin_repl(reg: &ModelRegistry, art: &Path,
                 }
                 for (slot, lc) in reg.lifecycle_counters() {
                     println!("  slot {slot} lifecycle: quarantines={} \
-                              respawns={} swaps_in={} swaps_out={}",
+                              respawns={} swaps_in={} swaps_out={} \
+                              watchdog_trips={}",
                              lc.quarantines, lc.respawns, lc.swaps_in,
-                             lc.swaps_out);
+                             lc.swaps_out, lc.watchdog_trips);
                 }
                 Ok(())
             }

@@ -99,8 +99,45 @@ pub struct LifecycleCounters {
     pub swaps_in: u64,
     /// Models retired out of this slot on a live registry.
     pub swaps_out: u64,
+    /// Quarantines forced by the consecutive-infer-error watchdog (a
+    /// subset of `quarantines`).
+    pub watchdog_trips: u64,
     /// Seed epoch currently served (0 = never quarantined).
     pub epoch: u32,
+}
+
+/// One engine op's share of the wire cost during an inference walk:
+/// rounds and bytes attributed by snapshotting `transport::Stats`
+/// around the op.  `index` is the op's position in the model program
+/// (fused plans may emit several rows per op, e.g. a `b2a-boundary`
+/// row before an arithmetic layer, and zero rows for folded signs).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct OpCost {
+    /// Position in `Model::ops` this row is attributed to.
+    pub index: usize,
+    /// Human label: the op name, plus a `[...]` qualifier on the
+    /// fused binary-domain lowerings.
+    pub op: String,
+    /// Protocol rounds this op contributed on the critical path.
+    pub rounds: u64,
+    /// Bytes this party sent for the op (payload + tags).
+    pub bytes_sent: u64,
+}
+
+/// Render per-op costs as an aligned table (the `infer` subcommand's
+/// per-layer budget view; budgets in DESIGN.md are asserted against
+/// these rows by the engine tests).
+pub fn op_cost_table(rows: &[OpCost]) -> String {
+    let mut out = String::from(
+        "  op                     rounds      bytes\n");
+    for r in rows {
+        out.push_str(&format!("  {:2} {:<20} {:>6} {:>10}\n",
+                              r.index, r.op, r.rounds, r.bytes_sent));
+    }
+    let rounds: u64 = rows.iter().map(|r| r.rounds).sum();
+    let bytes: u64 = rows.iter().map(|r| r.bytes_sent).sum();
+    out.push_str(&format!("  total{:>24} {:>10}\n", rounds, bytes));
+    out
 }
 
 /// One model's serving rollup in a multi-model process: its two lanes'
@@ -170,6 +207,20 @@ mod tests {
         assert!(h.mean() >= Duration::from_millis(20));
         assert!(h.max() >= Duration::from_millis(100));
         assert!(h.quantile(0.5) <= h.quantile(0.99));
+    }
+
+    #[test]
+    fn op_cost_table_sums_rows() {
+        let rows = vec![
+            OpCost { index: 0, op: "matmul".into(), rounds: 1,
+                     bytes_sent: 400 },
+            OpCost { index: 1, op: "sign[bits]".into(), rounds: 2,
+                     bytes_sent: 120 },
+        ];
+        let t = op_cost_table(&rows);
+        assert!(t.contains("matmul"));
+        assert!(t.contains("sign[bits]"));
+        assert!(t.contains("520"), "{t}");
     }
 
     #[test]

@@ -209,6 +209,12 @@ impl Model {
         Tensor::from_vec(shape, self.pool[r.off..r.off + r.len].to_vec())
     }
 
+    /// Borrow a pool region without copying (the fusion planner reads
+    /// weights and thresholds to decide lowerings and fold constants).
+    pub fn pool_slice(&self, r: PoolRef) -> &[i32] {
+        &self.pool[r.off..r.off + r.len]
+    }
+
     /// Number of secret parameters (weights + biases + thresholds).
     pub fn param_count(&self) -> usize {
         self.ops.iter().flat_map(|o| o.pool_refs()).map(|r| r.len).sum()
@@ -254,6 +260,19 @@ impl Model {
 }
 
 impl Op {
+    /// Manifest name of the op (cost-table rows, planner errors).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Matmul { .. } => "matmul",
+            Op::Depthwise { .. } => "depthwise",
+            Op::Sign { .. } => "sign",
+            Op::Relu { .. } => "relu",
+            Op::PoolBits { .. } => "pool_bits",
+            Op::Pm1 => "pm1",
+            Op::Flatten { .. } => "flatten",
+        }
+    }
+
     fn pool_refs(&self) -> Vec<PoolRef> {
         match self {
             Op::Matmul { w, b, .. } => {

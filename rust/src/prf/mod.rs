@@ -154,6 +154,7 @@ pub mod domain {
     pub const OT_MASK: u32 = 3; // OT pad between sender and receiver
     pub const SHARE: u32 = 4;   // dealer input sharing
     pub const BITS: u32 = 5;    // shared random bits
+    pub const TRUNC: u32 = 6;   // truncation masks (own counter lane)
 }
 
 /// The seeds party `i` holds: (k_i, k_{i+1}) plus a private key of its own.
@@ -167,6 +168,7 @@ pub struct PartySeeds {
     /// sampling in MSB extraction).
     pub private: ChaCha20,
     cnt: std::cell::Cell<u64>,
+    trunc_cnt: std::cell::Cell<u64>,
 }
 
 impl PartySeeds {
@@ -182,6 +184,7 @@ impl PartySeeds {
             private: ChaCha20::from_seed(
                 session.wrapping_mul(31).wrapping_add(1000 + party as u64)),
             cnt: std::cell::Cell::new(0),
+            trunc_cnt: std::cell::Cell::new(0),
         }
     }
 
@@ -190,6 +193,20 @@ impl PartySeeds {
     pub fn next_cnt(&self) -> u64 {
         let c = self.cnt.get();
         self.cnt.set(c + 1);
+        c
+    }
+
+    /// Truncation masks advance on their own counter lane (with the
+    /// `domain::TRUNC` tag).  Truncation is the one protocol whose
+    /// *output value* depends on the mask drawn (the floor-borrow LSB),
+    /// so its randomness must not shift when surrounding protocols
+    /// draw more or less from the shared `cnt` lane -- this is what
+    /// makes fused and unfused plans of the same model produce
+    /// bit-identical logits (they call `trunc` in the same order even
+    /// though everything around it differs).
+    pub fn next_trunc_cnt(&self) -> u64 {
+        let c = self.trunc_cnt.get();
+        self.trunc_cnt.set(c + 1);
         c
     }
 

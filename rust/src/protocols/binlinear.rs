@@ -1,0 +1,432 @@
+//! Binary-domain linear layers: secure XNOR + popcount over replicated
+//! boolean shares (the fused hot path of the customized BNNs).
+//!
+//! With ±1 activations encoded as bits (x = 2b - 1) and *public* ±1
+//! weights, a dot product over K positions is
+//!
+//!     dot = 2 * popcount(XNOR(b, wbit)) - K
+//!
+//! XNOR against a public weight is local: `xnor = b ^ [w == -1]`
+//! (`BitShare::xor_const`).  Only the popcount is interactive, and it
+//! stays *secret-shared* throughout: the bit planes feed a carry-save
+//! adder tree (one batched AND round per level -- `maj(a,b,c) =
+//! ((a^b)&(b^c))^b`), finished by a Kogge-Stone carry-propagate add.
+//! No popcount, partial sum, or comparison result is ever revealed.
+//!
+//! The next layer's sign `t`/`flip` folds into a popcount threshold
+//! (see `engine::fusion` for the algebra): comparison against a public
+//! per-element threshold t' is done by adding the public constant
+//! `2^B - t'` into the same adder tree and reading the carry bit B --
+//! no extra protocol, just more public addend planes.
+//!
+//! Round/byte costs (n output elements, K reduction width, B = bits of
+//! K): `popcount_ge` ~ (CSA levels + 1 + log2(B+1)) AND rounds of O(n)
+//! bits each; `popcount_to_arith` the same CSA plus ONE batched `b2a`
+//! of B*n bits; `or_planes` log2(k) AND rounds.  Versus the arithmetic
+//! path's 4 bytes per element per reshare/mul/reveal, every message
+//! here is bits.
+
+use anyhow::Result;
+
+use crate::baselines::bitdecomp::and_bits;
+use crate::protocols::b2a::b2a;
+use crate::ring::bits::BitTensor;
+use crate::ring::Tensor;
+use crate::rss::{BitShare, Share};
+
+use super::Ctx;
+
+/// Boolean share of a PUBLIC bit vector: folded into the y_0 component
+/// (held by P0 as `a`, P2 as `b`), the same convention as `xor_const`.
+pub fn public_bits(me: usize, bits: &BitTensor) -> BitShare {
+    BitShare::zeros(bits.len()).xor_const(me, bits)
+}
+
+/// Gather both components of a share by index (bit-level im2col).
+pub fn gather_share(x: &BitShare, idx: &[usize]) -> BitShare {
+    BitShare { a: x.a.gather(idx), b: x.b.gather(idx) }
+}
+
+/// Smallest B with 2^B > k (the adder width that holds a popcount of k).
+pub fn width_for(k: usize) -> usize {
+    (usize::BITS - k.leading_zeros()) as usize
+}
+
+/// Carry-save adder tree over weighted bit planes, mod 2^width.
+///
+/// `addends` are (bit position, plane) pairs; all planes share one
+/// element length.  Returns `width` sum planes, little-endian.  Each
+/// CSA level compresses every column with >= 3 planes through full
+/// adders (`sum = a^b^c` local, `carry = maj` = one AND), with ALL the
+/// level's ANDs batched into a single `and_bits` round; the remaining
+/// two-plane columns go through a Kogge-Stone carry-propagate add.
+pub fn csa_tree(ctx: &Ctx, addends: Vec<(usize, BitShare)>, width: usize)
+                -> Result<Vec<BitShare>> {
+    let n = addends.first().map_or(0, |(_, p)| p.len());
+    let mut cols: Vec<Vec<BitShare>> = vec![Vec::new(); width];
+    for (pos, p) in addends {
+        assert_eq!(p.len(), n, "addend plane lengths differ");
+        assert!(pos < width, "addend past the adder width");
+        cols[pos].push(p);
+    }
+
+    // carry-save levels: run until every column is <= 2 planes high
+    loop {
+        let mut triples: Vec<(usize, BitShare, BitShare, BitShare)> =
+            Vec::new();
+        for (j, col) in cols.iter_mut().enumerate() {
+            while col.len() >= 3 {
+                let a = col.pop().unwrap();
+                let b = col.pop().unwrap();
+                let c = col.pop().unwrap();
+                triples.push((j, a, b, c));
+            }
+        }
+        if triples.is_empty() {
+            break;
+        }
+        let mut lhs = BitShare::empty();
+        let mut rhs = BitShare::empty();
+        for (_, a, b, c) in &triples {
+            lhs.extend(&a.xor(b));
+            rhs.extend(&b.xor(c));
+        }
+        let anded = and_bits(ctx, &lhs, &rhs)?;
+        for (t, (j, a, b, c)) in triples.into_iter().enumerate() {
+            let maj = anded.slice(t * n, n).xor(&b);
+            cols[j].push(a.xor(&b).xor(&c)); // full-adder sum, local
+            if j + 1 < width {
+                cols[j + 1].push(maj); // carry; top-column carry drops
+            }
+        }
+    }
+
+    // two remaining numbers A, B per column; Kogge-Stone add
+    let zero = || BitShare::zeros(n);
+    let av: Vec<BitShare> = (0..width)
+        .map(|j| cols[j].first().cloned().unwrap_or_else(zero)).collect();
+    let bv: Vec<BitShare> = (0..width)
+        .map(|j| cols[j].get(1).cloned().unwrap_or_else(zero)).collect();
+    kogge_stone_add(ctx, &av, &bv)
+}
+
+/// Kogge-Stone addition of two plane vectors (mod 2^width): one AND
+/// round for the generate bits, then log2(width) prefix rounds.  The
+/// XOR-for-OR merge is sound because `G` and `P & G'` are never both
+/// set (a fully-propagating span cannot also generate).
+fn kogge_stone_add(ctx: &Ctx, a: &[BitShare], b: &[BitShare])
+                   -> Result<Vec<BitShare>> {
+    let width = a.len();
+    assert_eq!(b.len(), width);
+    if width == 0 {
+        return Ok(Vec::new());
+    }
+    let n = a[0].len();
+    let psum: Vec<BitShare> =
+        (0..width).map(|j| a[j].xor(&b[j])).collect();
+    // g_j = a_j & b_j, one batched round
+    let mut lhs = BitShare::empty();
+    let mut rhs = BitShare::empty();
+    for j in 0..width {
+        lhs.extend(&a[j]);
+        rhs.extend(&b[j]);
+    }
+    let anded = and_bits(ctx, &lhs, &rhs)?;
+    let mut g: Vec<BitShare> =
+        (0..width).map(|j| anded.slice(j * n, n)).collect();
+    let mut p = psum.clone();
+
+    let mut dist = 1;
+    while dist < width {
+        // batched: for j >= dist, G_j ^= P_j & G_{j-dist}; P_j &= P_{j-dist}
+        let mut lhs = BitShare::empty();
+        let mut rhs = BitShare::empty();
+        for j in dist..width {
+            lhs.extend(&p[j]);
+            rhs.extend(&g[j - dist]);
+        }
+        for j in dist..width {
+            lhs.extend(&p[j]);
+            rhs.extend(&p[j - dist]);
+        }
+        let anded = and_bits(ctx, &lhs, &rhs)?;
+        let m = width - dist;
+        for (t, j) in (dist..width).enumerate() {
+            g[j] = g[j].xor(&anded.slice(t * n, n));
+        }
+        for (t, j) in (dist..width).enumerate() {
+            p[j] = anded.slice((m + t) * n, n);
+        }
+        dist *= 2;
+    }
+
+    // sum_j = p_j ^ carry_in_j, carry_in_j = G_{j-1}
+    Ok((0..width).map(|j| {
+        if j == 0 { psum[0].clone() } else { psum[j].xor(&g[j - 1]) }
+    }).collect())
+}
+
+/// Secret-shared popcount compared against a public per-element
+/// threshold: `out[e] = [popcount_e >= thresh[e]]`, over `planes.len()`
+/// = K bit planes of shared bits.  Thresholds must lie in [0, K+1]
+/// (callers clamp; 0 gives constant 1, K+1 constant 0 -- both fall out
+/// of the adder arithmetic, no special cases).  The comparison adds the
+/// public constant `2^B - thresh` into the CSA and reads carry bit B.
+pub fn popcount_ge(ctx: &Ctx, planes: Vec<BitShare>, thresh: &[u32])
+                   -> Result<BitShare> {
+    let k = planes.len();
+    assert!(k > 0, "popcount over zero planes");
+    let n = planes[0].len();
+    assert_eq!(thresh.len(), n, "one threshold per output element");
+    debug_assert!(thresh.iter().all(|&t| t as usize <= k + 1),
+                  "thresholds must be clamped to [0, K+1]");
+    let b = width_for(k);
+    let width = b + 1; // max sum = K + 2^B < 2^{B+1}
+    let me = ctx.id();
+
+    let mut addends: Vec<(usize, BitShare)> =
+        planes.into_iter().map(|p| (0, p)).collect();
+    // constant addend C_e = 2^B - thresh[e], one public plane per bit
+    for j in 0..width {
+        let plane = BitTensor::from_fn(n, |e| {
+            let c = (1u64 << b) - u64::from(thresh[e]);
+            ((c >> j) & 1) as u8
+        });
+        if plane.popcount() > 0 {
+            addends.push((j, public_bits(me, &plane)));
+        }
+    }
+    let sum = csa_tree(ctx, addends, width)?;
+    Ok(sum[b].clone())
+}
+
+/// Secret-shared popcount materialized as arithmetic shares (the
+/// binary -> arithmetic boundary at unfoldable layers / final logits):
+/// CSA-reduce the planes, then ONE batched `b2a` over the B result
+/// planes and a local power-of-two fold.
+pub fn popcount_to_arith(ctx: &Ctx, planes: Vec<BitShare>)
+                         -> Result<Share> {
+    let k = planes.len();
+    assert!(k > 0, "popcount over zero planes");
+    let n = planes[0].len();
+    let b = width_for(k);
+    let addends: Vec<(usize, BitShare)> =
+        planes.into_iter().map(|p| (0, p)).collect();
+    let sum = csa_tree(ctx, addends, b)?;
+
+    let mut cat = BitShare::empty();
+    for plane in &sum {
+        cat.extend(plane);
+    }
+    let ar = b2a(ctx, &cat)?;
+    let mut out = Share::zeros(&[n]);
+    for j in 0..b {
+        for e in 0..n {
+            let w = |t: &Tensor| t.data[j * n + e].wrapping_shl(j as u32);
+            out.a.data[e] = out.a.data[e].wrapping_add(w(&ar.a));
+            out.b.data[e] = out.b.data[e].wrapping_add(w(&ar.b));
+        }
+    }
+    Ok(out)
+}
+
+/// Boolean OR across planes: `out[e] = OR_i planes[i][e]`, via
+/// De Morgan (`NOT(AND of NOTs)`) with a log-depth AND tree -- the
+/// binary-domain lowering of `PoolBits` (max of bits = OR), costing
+/// zero MSB tuples.
+pub fn or_planes(ctx: &Ctx, planes: Vec<BitShare>) -> Result<BitShare> {
+    assert!(!planes.is_empty(), "or over zero planes");
+    let me = ctx.id();
+    let n = planes[0].len();
+    let mut cur: Vec<BitShare> =
+        planes.iter().map(|p| p.not(me)).collect();
+    while cur.len() > 1 {
+        let mut lhs = BitShare::empty();
+        let mut rhs = BitShare::empty();
+        let pairs = cur.len() / 2;
+        for t in 0..pairs {
+            lhs.extend(&cur[2 * t]);
+            rhs.extend(&cur[2 * t + 1]);
+        }
+        let anded = and_bits(ctx, &lhs, &rhs)?;
+        let mut next: Vec<BitShare> =
+            (0..pairs).map(|t| anded.slice(t * n, n)).collect();
+        if cur.len() % 2 == 1 {
+            next.push(cur.pop().unwrap());
+        }
+        cur = next;
+    }
+    Ok(cur.pop().unwrap().not(me))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocols::testsupport::run3;
+    use crate::rss::{deal_bits, reconstruct, reconstruct_bits, Share};
+    use crate::testutil::threeparty::EDGE_LENGTHS;
+    use crate::testutil::Rng;
+
+    fn bit_matrix(rng: &mut Rng, k: usize, n: usize) -> Vec<Vec<u8>> {
+        (0..k).map(|_| (0..n).map(|_| rng.bit()).collect()).collect()
+    }
+
+    fn deal_planes(rows: &[Vec<u8>], rng: &mut Rng)
+                   -> Vec<[crate::rss::BitShare; 3]> {
+        rows.iter().map(|r| deal_bits(r, rng)).collect()
+    }
+
+    #[test]
+    fn popcount_ge_matches_plaintext_across_edge_lengths() {
+        for (case, &n) in EDGE_LENGTHS.iter().enumerate() {
+            for k in [1usize, 3, 9] {
+                let mut rng = Rng::new((case * 10 + k) as u64);
+                let rows = bit_matrix(&mut rng, k, n);
+                let thresh: Vec<u32> = (0..n)
+                    .map(|_| rng.range(0, k + 2) as u32).collect();
+                let shares = deal_planes(&rows, &mut rng);
+                let results = run3(|ctx| {
+                    let planes: Vec<_> = shares.iter()
+                        .map(|s| s[ctx.id()].clone()).collect();
+                    popcount_ge(ctx, planes, &thresh).unwrap()
+                });
+                let out: [crate::rss::BitShare; 3] =
+                    std::array::from_fn(|i| results[i].0.clone());
+                let got = reconstruct_bits(&out);
+                for e in 0..n {
+                    let pc: u32 = rows.iter().map(|r| u32::from(r[e])).sum();
+                    let want = u8::from(pc >= thresh[e]);
+                    assert_eq!(got[e], want,
+                               "n={n} k={k} e={e} pc={pc} t={}", thresh[e]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn popcount_ge_handles_always_and_never_thresholds() {
+        // t' = 0 -> constant 1, t' = K+1 -> constant 0: the clamped
+        // fold edge cases ride the adder arithmetic, no special path
+        let n = 70;
+        let k = 5;
+        let mut rng = Rng::new(77);
+        let rows = bit_matrix(&mut rng, k, n);
+        let thresh: Vec<u32> = (0..n)
+            .map(|e| if e % 2 == 0 { 0 } else { (k + 1) as u32 }).collect();
+        let shares = deal_planes(&rows, &mut rng);
+        let results = run3(|ctx| {
+            let planes: Vec<_> = shares.iter()
+                .map(|s| s[ctx.id()].clone()).collect();
+            popcount_ge(ctx, planes, &thresh).unwrap()
+        });
+        let out: [crate::rss::BitShare; 3] =
+            std::array::from_fn(|i| results[i].0.clone());
+        let got = reconstruct_bits(&out);
+        for e in 0..n {
+            assert_eq!(got[e], u8::from(e % 2 == 0), "e={e}");
+        }
+    }
+
+    #[test]
+    fn popcount_to_arith_matches_plaintext() {
+        for &n in &[1usize, 64, 65, 200] {
+            for k in [1usize, 4, 100] {
+                let mut rng = Rng::new((n + k) as u64);
+                let rows = bit_matrix(&mut rng, k, n);
+                let shares = deal_planes(&rows, &mut rng);
+                let results = run3(|ctx| {
+                    let planes: Vec<_> = shares.iter()
+                        .map(|s| s[ctx.id()].clone()).collect();
+                    popcount_to_arith(ctx, planes).unwrap()
+                });
+                let out: [Share; 3] =
+                    std::array::from_fn(|i| results[i].0.clone());
+                let got = reconstruct(&out);
+                for e in 0..n {
+                    let pc: i32 = rows.iter().map(|r| i32::from(r[e])).sum();
+                    assert_eq!(got.data[e], pc, "n={n} k={k} e={e}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn or_planes_matches_plaintext() {
+        for k in [1usize, 2, 4, 9] {
+            let n = 130;
+            let mut rng = Rng::new(k as u64);
+            let rows = bit_matrix(&mut rng, k, n);
+            let shares = deal_planes(&rows, &mut rng);
+            let results = run3(|ctx| {
+                let planes: Vec<_> = shares.iter()
+                    .map(|s| s[ctx.id()].clone()).collect();
+                or_planes(ctx, planes).unwrap()
+            });
+            let out: [crate::rss::BitShare; 3] =
+                std::array::from_fn(|i| results[i].0.clone());
+            let got = reconstruct_bits(&out);
+            for e in 0..n {
+                let want = rows.iter().map(|r| r[e]).max().unwrap();
+                assert_eq!(got[e], want, "k={k} e={e}");
+            }
+        }
+    }
+
+    #[test]
+    fn xnor_against_public_mask_is_local_and_correct() {
+        // xnor(x, w) for ±1 values = x_bit ^ [w == -1]; with the mask
+        // public the op is share-local (xor_const), zero rounds
+        let n = 100;
+        let mut rng = Rng::new(3);
+        let bits: Vec<u8> = (0..n).map(|_| rng.bit()).collect();
+        let mask = BitTensor::from_fn(n, |_| rng.bit());
+        let shares = deal_bits(&bits, &mut rng);
+        let results = run3(|ctx| {
+            let out = shares[ctx.id()].xor_const(ctx.id(), &mask);
+            (out, ctx.comm.stats().rounds)
+        });
+        let out: [crate::rss::BitShare; 3] =
+            std::array::from_fn(|i| results[i].0 .0.clone());
+        let got = reconstruct_bits(&out);
+        for e in 0..n {
+            assert_eq!(got[e], bits[e] ^ mask.get(e));
+            assert_eq!(results[0].0 .1, 0, "xnor must be local");
+        }
+    }
+
+    #[test]
+    fn round_budget_is_logarithmic() {
+        // K = 9 planes + threshold constants: CSA compresses to 2 rows
+        // in <= 5 levels, KS adds 1 + ceil(log2(B+1)) = 3 more; assert
+        // the whole popcount_ge stays inside 10 rounds
+        let n = 64;
+        let k = 9;
+        let mut rng = Rng::new(11);
+        let rows = bit_matrix(&mut rng, k, n);
+        let thresh = vec![5u32; n];
+        let shares = deal_planes(&rows, &mut rng);
+        let results = run3(|ctx| {
+            let planes: Vec<_> = shares.iter()
+                .map(|s| s[ctx.id()].clone()).collect();
+            popcount_ge(ctx, planes, &thresh).unwrap();
+            ctx.comm.stats().rounds
+        });
+        for (rounds, _) in &results {
+            assert!(*rounds <= 10, "popcount_ge rounds = {rounds}");
+        }
+    }
+
+    #[test]
+    fn gather_share_rearranges_both_components() {
+        let mut rng = Rng::new(6);
+        let bits: Vec<u8> = (0..50).map(|_| rng.bit()).collect();
+        let shares = deal_bits(&bits, &mut rng);
+        let idx: Vec<usize> = (0..80).map(|_| rng.range(0, 50)).collect();
+        let out: [crate::rss::BitShare; 3] =
+            std::array::from_fn(|i| gather_share(&shares[i], &idx));
+        let got = reconstruct_bits(&out);
+        for (j, &i) in idx.iter().enumerate() {
+            assert_eq!(got[j], bits[i]);
+        }
+    }
+}

@@ -17,8 +17,11 @@
 //! | ReLU (Alg 5, two OTs)  | MSB + 4                |
 //! | truncation             | 2                      |
 //! | maxpool (Sign-fused)   | 0 extra linear rounds (reuses Sign) |
+//! | binary linear (fused)  | CSA levels + 1 + ceil(log2(B+1)) AND rounds, bit-width wires |
+//! | OR-pool (fused)        | ceil(log2(k^2)) AND rounds, 0 tuples |
 
 pub mod b2a;
+pub mod binlinear;
 pub mod linear;
 pub mod maxpool;
 pub mod msb;

@@ -33,7 +33,8 @@ pub fn trunc(ctx: &Ctx, x: &Share, f: u32) -> Result<Share> {
     let bound = ctx.cfg.bound_bits;
     let shift: Elem = 1 << bound;
     let r_range: i64 = (1i64 << 31) - (1i64 << (bound + 1));
-    let cnt = ctx.seeds.next_cnt();
+    // dedicated counter lane: see `PartySeeds::next_trunc_cnt`
+    let cnt = ctx.seeds.next_trunc_cnt();
 
     // r known to P0 (seeds.next = k_1) and P1 (seeds.mine = k_1)
     let r: Option<Vec<Elem>> = match me {
@@ -96,7 +97,7 @@ pub fn trunc(ctx: &Ctx, x: &Share, f: u32) -> Result<Share> {
 
 fn stream_range(prf: &crate::prf::ChaCha20, cnt: u64, n: usize,
                 range: i64) -> Vec<Elem> {
-    let mut s = PrfStream::new(prf, cnt, domain::SHARE);
+    let mut s = PrfStream::new(prf, cnt, domain::TRUNC);
     (0..n).map(|_| ((u64::from(s.next_u32()) * range as u64) >> 32) as Elem)
         .collect()
 }

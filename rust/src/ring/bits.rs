@@ -188,6 +188,20 @@ impl BitTensor {
         t
     }
 
+    /// Gather bits by index: `out[j] = self[idx[j]]`.  The bit-level
+    /// im2col used by the binary linear layers -- rearrangement only,
+    /// each output bit is a copy of an input bit, so applying it to both
+    /// components of a replicated share preserves the sharing.
+    pub fn gather(&self, idx: &[usize]) -> BitTensor {
+        let mut t = Self::zeros(idx.len());
+        for (j, &i) in idx.iter().enumerate() {
+            debug_assert!(i < self.len, "gather index out of range");
+            t.words[j / WORD_BITS] |=
+                u64::from(self.get(i)) << (j % WORD_BITS);
+        }
+        t
+    }
+
     /// Remove and return the first `n` bits (FIFO draw, used by the
     /// preprocessing reservoir).
     pub fn take_front(&mut self, n: usize) -> BitTensor {
@@ -361,6 +375,19 @@ mod tests {
             let len = rng.range(0, n - start + 1);
             assert_eq!(t.slice(start, len).to_bits(),
                        bits[start..start + len].to_vec());
+        });
+    }
+
+    #[test]
+    fn gather_matches_index_map() {
+        prop(50, |rng: &mut Rng| {
+            let n = rng.range(1, 300);
+            let bits = rand_bits(rng, n);
+            let t = BitTensor::from_bits(&bits);
+            let m = rng.range(0, 200);
+            let idx: Vec<usize> = (0..m).map(|_| rng.range(0, n)).collect();
+            let want: Vec<u8> = idx.iter().map(|&i| bits[i]).collect();
+            assert_eq!(t.gather(&idx).to_bits(), want);
         });
     }
 

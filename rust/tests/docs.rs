@@ -78,6 +78,23 @@ fn design_documents_the_channel_id_space() {
 }
 
 #[test]
+fn design_documents_binary_domain_fusion() {
+    // ISSUE 6: the fusion section must state the lowering rules, the
+    // XNOR+popcount evaluation, the threshold-folding algebra, and the
+    // leakage argument (popcounts stay secret-shared end to end)
+    let design = repo_doc("DESIGN.md");
+    for needle in ["Binary-domain fusion", "XNOR", "popcount",
+                   "threshold folding", "secret-shared", "carry-save",
+                   "b2a", "--fuse"] {
+        assert!(design.contains(needle),
+                "DESIGN.md fusion section misses {needle}");
+    }
+    let ops = repo_doc("OPERATIONS.md");
+    assert!(ops.contains("--fuse on"),
+            "OPERATIONS.md does not show `--fuse on`");
+}
+
+#[test]
 fn readme_maps_paper_sections_to_modules() {
     let readme = repo_doc("README.md");
     for needle in ["transport", "protocols", "coordinator", "offline",

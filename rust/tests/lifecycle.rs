@@ -217,6 +217,67 @@ fn flooded_idle_lane_is_capped_without_hurting_healthy_lanes() {
     drop(c2);
 }
 
+/// Auto-quarantine watchdog (ISSUE 6): consecutive `Service::infer`
+/// failures on one slot trip the configured threshold, the registry
+/// force-quarantines the slot (counted in
+/// `LifecycleCounters::watchdog_trips`), and an operator `respawn`
+/// restores service with the error streak reset.
+#[test]
+fn watchdog_quarantines_after_consecutive_infer_errors() {
+    let model_a = Arc::new(every_op_model());
+    let model_b = Arc::new(every_op_model_variant("everyop-b", 3));
+    let mut cfg = SessionConfig::new("artifacts/hlo");
+    cfg.max_consecutive_errors = 2;
+    let reg = ModelRegistry::start(vec![
+        ModelSpec::new("a", Arc::clone(&model_a)),
+        ModelSpec::new("b", Arc::clone(&model_b)),
+    ], &cfg).expect("registry up");
+    let in_a = batches_for(100);
+
+    // a healthy batch first: successes keep the streak at zero
+    assert!(reg.infer("a", in_a[0].clone()).is_ok());
+
+    // kill one of a's party threads abruptly: every subsequent infer
+    // errors promptly (the dead thread's job queue is closed)
+    reg.service("a").unwrap().inject_fault(2);
+
+    // first failure: below the threshold of 2, the slot keeps serving
+    assert!(reg.infer("a", in_a[1].clone()).is_err());
+    assert_eq!(reg.state("a").unwrap(), SlotState::Serving,
+               "one failure must not trip a threshold of 2");
+    assert_eq!(reg.lifecycle_counters().get(&0)
+                   .map_or(0, |c| c.watchdog_trips), 0);
+
+    // second consecutive failure trips the watchdog
+    assert!(reg.infer("a", in_a[2].clone()).is_err());
+    assert_eq!(reg.state("a").unwrap(), SlotState::Quarantined,
+               "watchdog must force-quarantine at the threshold");
+    let lc = reg.lifecycle_counters();
+    assert_eq!(lc.get(&0).map(|c| (c.watchdog_trips, c.quarantines)),
+               Some((1, 1)));
+
+    // routing to the tripped slot is the typed unavailable error now
+    match reg.infer("a", in_a[0].clone()) {
+        Err(RegistryError::SlotUnavailable { state, .. }) =>
+            assert_eq!(state, SlotState::Quarantined),
+        other => panic!("expected SlotUnavailable, got {other:?}"),
+    }
+
+    // the neighbour slot never noticed
+    assert!(reg.infer("b", batches_for(200)[0].clone()).is_ok());
+
+    // respawn: fresh epoch, streak reset -- one new failure must NOT
+    // re-trip (the counter does not carry across the respawn)
+    reg.respawn("a").expect("respawn a");
+    assert_eq!(reg.state("a").unwrap(), SlotState::Serving);
+    assert!(reg.infer("a", in_a[0].clone()).is_ok(),
+            "respawned slot must serve again");
+    assert_eq!(reg.lifecycle_counters().get(&0)
+                   .map_or(99, |c| c.watchdog_trips), 1,
+               "trip count must not grow on healthy traffic");
+    let _ = reg.shutdown();
+}
+
 /// The CI churn soak: add/remove/quarantine/respawn under traffic for N
 /// iterations, asserting zero request-path mints and exact `ChanStats`
 /// rollups after every churn step.

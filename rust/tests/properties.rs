@@ -372,6 +372,268 @@ mod bank {
     }
 }
 
+// ---- binary-domain fusion properties (ISSUE 6) --------------------------
+
+mod fusion {
+    use std::sync::Arc;
+
+    use cbnn::coordinator::Service;
+    use cbnn::engine::fusion::{infer_batch_fused, plan_fused};
+    use cbnn::engine::session::SessionConfig;
+    use cbnn::engine::{infer_batch_pooled, msb_demand, share_model,
+                       EngineOptions};
+    use cbnn::metrics::OpCost;
+    use cbnn::nn::Model;
+    use cbnn::offline::TupleSource;
+    use cbnn::protocols::binlinear::{or_planes, popcount_ge,
+                                     popcount_to_arith};
+    use cbnn::protocols::linear::NativeBackend;
+    use cbnn::protocols::preproc::MsbPool;
+    use cbnn::ring::Tensor;
+    use cbnn::rss::{deal_bits, reconstruct, reconstruct_bits, BitShare,
+                    Share};
+    use cbnn::testutil::threeparty::{edge_bits, every_op_model,
+                                     run3_seeded, EDGE_LENGTHS};
+    use cbnn::testutil::Rng;
+
+    fn inputs_for(id: usize, batch: usize, flat: usize, seed: u64)
+                  -> Vec<Tensor> {
+        if id == 0 {
+            let mut rng = Rng::new(seed);
+            (0..batch).map(|_| rng.tensor_small(&[1, flat], 15)).collect()
+        } else {
+            vec![]
+        }
+    }
+
+    /// One pooled inference arm in its own fresh session at `seed`:
+    /// fused or unfused walk over the same model and inputs.  Separate
+    /// sessions at the same seed see identical TRUNC-lane randomness
+    /// (the counter lane advances only on trunc calls, which both walks
+    /// issue identically), so logits are comparable bit-for-bit.
+    /// Returns party 0's (logits, per-op cost rows, msb demand).
+    fn arm(model: &Model, seed: u64, batch: usize, fuse: bool)
+           -> (Vec<Vec<i32>>, Vec<OpCost>, usize) {
+        let (c, h, w) = model.input;
+        let flat = c * h * w;
+        let plan = if fuse {
+            Some(plan_fused(model).expect("plan must lower"))
+        } else {
+            None
+        };
+        let results = run3_seeded(seed, |ctx| {
+            let shared = share_model(ctx, model, true).unwrap();
+            let demand = match &plan {
+                Some(p) => p.msb_demand(batch),
+                None => msb_demand(&shared, batch),
+            };
+            let pool = MsbPool::new();
+            pool.generate(ctx, demand).unwrap();
+            let src = TupleSource::Pool(&pool);
+            let inputs = inputs_for(ctx.id(), batch, flat, seed ^ 0xF00D);
+            let out = match &plan {
+                Some(p) => infer_batch_fused(
+                    ctx, &shared, p, &NativeBackend,
+                    EngineOptions::default(), &inputs, batch, &src)
+                    .unwrap(),
+                None => infer_batch_pooled(
+                    ctx, &shared, &NativeBackend, EngineOptions::default(),
+                    &inputs, batch, &src)
+                    .unwrap(),
+            };
+            (out.logits, out.op_costs, demand)
+        });
+        results.into_iter().next().unwrap().0
+    }
+
+    /// A fully fusable hidden chain: conv -> sign enters the binary
+    /// domain, then OR-pool, pm1, a +-1 depthwise with its sign folded,
+    /// pm1, flatten, and a +-1 FC (K=100) leaving via the popcount b2a
+    /// boundary.  No ReLU, so the whole program is trunc-free and
+    /// fused/unfused logits must match bit-for-bit even across session
+    /// interleavings.
+    fn bnn_chain_model() -> Model {
+        let manifest = r#"{
+          "name": "bnnchain", "dataset": "synthetic",
+          "input": {"c": 1, "h": 12, "w": 12},
+          "s_in": 0, "ring_bits": 32,
+          "layers": [
+            {"op": "matmul", "conv": true, "m": 4, "kdim": 9, "n": 100,
+             "k": 3, "stride": 1, "pad_lo": 0, "pad_hi": 0, "cout": 4,
+             "w": {"off": 0, "len": 36}, "b": {"off": 36, "len": 4},
+             "s_in": 0, "s_out": 0},
+            {"op": "sign", "c": 4, "t": {"off": 40, "len": 4},
+             "flip": {"off": 44, "len": 4}},
+            {"op": "pool_bits", "c": 4, "k": 2, "stride": 2},
+            {"op": "pm1"},
+            {"op": "depthwise", "cout": 4, "k": 1, "stride": 1,
+             "pad_lo": 0, "pad_hi": 0, "w": {"off": 48, "len": 4},
+             "s_in": 0, "s_out": 0},
+            {"op": "sign", "c": 4, "t": {"off": 52, "len": 4},
+             "flip": {"off": 56, "len": 4}},
+            {"op": "pm1"},
+            {"op": "flatten", "c": 4, "h": 5, "w": 5},
+            {"op": "matmul", "conv": false, "m": 3, "kdim": 100, "n": 1,
+             "w": {"off": 60, "len": 300}, "s_in": 0, "s_out": 0}
+          ]
+        }"#;
+        let mut pool = vec![0i32; 360];
+        for (i, v) in pool.iter_mut().enumerate().take(36) {
+            *v = (i as i32 % 5) - 2; // conv weights, arbitrary small
+        }
+        pool[36..40].copy_from_slice(&[1, -1, 2, 0]); // conv bias
+        pool[40..44].copy_from_slice(&[0, 1, -1, 2]); // sign thresholds
+        pool[44..48].copy_from_slice(&[1, -1, 2, -2]); // sign flips
+        pool[48..52].copy_from_slice(&[1, -1, 1, -1]); // +-1 depthwise
+        // folded sign: thresholds/flips picked to hit the identity,
+        // negate, constant-0 and constant-1 fold branches (K = 1)
+        pool[52..56].copy_from_slice(&[1, 3, -2, 0]);
+        pool[56..60].copy_from_slice(&[2, -1, 1, -3]);
+        for (i, v) in pool.iter_mut().enumerate().skip(60) {
+            *v = if (i + i / 7) % 2 == 0 { 1 } else { -1 }; // +-1 FC
+        }
+        Model::from_json(manifest, pool).unwrap()
+    }
+
+    #[test]
+    fn prop_fused_logits_bit_identical_on_every_op_model() {
+        // the every-op program (conv, sign, pool, pm1, depthwise,
+        // flatten, fc, relu) crosses the fusion boundary both ways;
+        // fused logits must equal the unfused walk bit-for-bit, while
+        // drawing strictly fewer MSB tuples
+        let model = every_op_model();
+        for batch in [1usize, 2, 3] {
+            let seed = 0xF5ED + batch as u64;
+            let (u_logits, _, u_demand) = arm(&model, seed, batch, false);
+            let (f_logits, _, f_demand) = arm(&model, seed, batch, true);
+            assert!(!u_logits.is_empty());
+            assert_eq!(u_logits, f_logits,
+                       "fused logits diverged at batch {batch}");
+            assert_eq!(u_demand, 43 * batch, "unfused draws per sample");
+            assert_eq!(f_demand, 35 * batch,
+                       "fused must skip the pool-bits draw");
+        }
+    }
+
+    #[test]
+    fn prop_fused_hidden_segment_ships_8x_fewer_bytes() {
+        // the acceptance claim: across the hidden binary segment
+        // (pool -> pm1 -> +-1 depthwise -> folded sign, op indices
+        // 2..=5) the fused walk ships word-packed boolean shares where
+        // the arithmetic walk ships ring words and MSB extractions
+        let model = bnn_chain_model();
+        let seg = |costs: &[OpCost]| costs.iter()
+            .filter(|r| (2..=5).contains(&r.index))
+            .map(|r| r.bytes_sent)
+            .sum::<u64>();
+        for batch in [1usize, 2] {
+            let seed = 0xB17 + batch as u64;
+            let (u_logits, u_costs, u_demand) =
+                arm(&model, seed, batch, false);
+            let (f_logits, f_costs, f_demand) =
+                arm(&model, seed, batch, true);
+            assert_eq!(u_logits, f_logits,
+                       "bnn chain diverged at batch {batch}");
+            // only the sign *entering* the binary domain draws tuples
+            assert_eq!(u_demand, 600 * batch);
+            assert_eq!(f_demand, 400 * batch);
+            let (ub, fb) = (seg(&u_costs), seg(&f_costs));
+            assert!(fb > 0, "fused segment must still talk");
+            assert!(ub >= 8 * fb,
+                    "hidden segment: unfused {ub} B vs fused {fb} B -- \
+                     need >= 8x reduction (batch {batch})");
+            // and the whole walk is cheaper end to end, b2a included
+            let total = |costs: &[OpCost]| costs.iter()
+                .map(|r| r.bytes_sent).sum::<u64>();
+            assert!(total(&f_costs) < total(&u_costs));
+        }
+    }
+
+    fn check_popcount(seed: u64, n: usize) {
+        // the fused comparator primitives over one plane set: secure
+        // popcount >= per-element threshold, popcount to arithmetic,
+        // and the OR tree, against plaintext references
+        const K: usize = 5;
+        let results = run3_seeded(seed, |ctx| {
+            let mut rng = Rng::new(seed ^ 0x9C0);
+            let planes: Vec<Vec<u8>> =
+                (0..K).map(|_| edge_bits(&mut rng, n)).collect();
+            let thr: Vec<u32> =
+                (0..n).map(|i| (i % (K + 2)) as u32).collect();
+            let dealt: Vec<[BitShare; 3]> =
+                planes.iter().map(|p| deal_bits(p, &mut rng)).collect();
+            let mine: Vec<BitShare> =
+                dealt.iter().map(|d| d[ctx.id()].clone()).collect();
+            let ge = popcount_ge(ctx, mine.clone(), &thr).unwrap();
+            let pc = popcount_to_arith(ctx, mine.clone()).unwrap();
+            let or = or_planes(ctx, mine).unwrap();
+            (ge, pc, or, planes, thr)
+        });
+        let (_, _, _, planes, thr) = results[0].0.clone();
+        let ge: [BitShare; 3] =
+            std::array::from_fn(|i| results[i].0 .0.clone());
+        let pc: [Share; 3] =
+            std::array::from_fn(|i| results[i].0 .1.clone());
+        let or: [BitShare; 3] =
+            std::array::from_fn(|i| results[i].0 .2.clone());
+        let ge = reconstruct_bits(&ge);
+        let pc = reconstruct(&pc);
+        let or = reconstruct_bits(&or);
+        for i in 0..n {
+            let count: u32 =
+                planes.iter().map(|p| u32::from(p[i])).sum();
+            assert_eq!(ge[i], u8::from(count >= thr[i]),
+                       "popcount_ge({count} >= {}) at {i} n={n}", thr[i]);
+            assert_eq!(pc.data[i], count as i32,
+                       "popcount_to_arith at {i} n={n}");
+            assert_eq!(or[i], u8::from(count > 0), "or at {i} n={n}");
+        }
+    }
+
+    #[test]
+    fn prop_popcount_primitives_round_trip_across_edge_lengths() {
+        for &n in &EDGE_LENGTHS {
+            check_popcount(41, n);
+        }
+    }
+
+    #[test]
+    fn prop_fused_service_serves_with_zero_request_path_mints() {
+        // coordinator-level: a fused service auto-sizes its tuple bank
+        // to the *smaller* fused demand and still never mints on the
+        // request path; logits match an unfused service bit-for-bit
+        // (same slot/seed domain, so TRUNC-lane draws align)
+        let model = Arc::new(every_op_model());
+        let mut fcfg = SessionConfig::new("artifacts/hlo");
+        fcfg.opts.fuse = true;
+        let fused = Service::start(Arc::clone(&model), fcfg).unwrap();
+        let unfused = Service::start(
+            Arc::clone(&model), SessionConfig::new("artifacts/hlo"))
+            .unwrap();
+        assert_eq!(unfused.demand_for(2), 86);
+        assert_eq!(fused.demand_for(2), 70,
+                   "fused bank must auto-size below the unfused demand");
+        let mut rng = Rng::new(9);
+        for _ in 0..3 {
+            let batch: Vec<Tensor> =
+                (0..2).map(|_| rng.tensor_small(&[1, 36], 15)).collect();
+            let f = fused.infer(batch.clone()).expect("fused batch");
+            let u = unfused.infer(batch).expect("unfused batch");
+            assert_eq!(f.len(), 2);
+            assert_eq!(f[0].len(), 3);
+            assert_eq!(f, u, "fused service diverged");
+        }
+        for p in 0..3 {
+            let m = fused.bank_handle(p).metrics();
+            assert_eq!(m.underflow_calls, 0,
+                       "party {p} minted on the request path: {m:?}");
+            assert!(m.drawn > 0, "party {p} never drew from the bank");
+        }
+        let _ = fused.shutdown();
+        let _ = unfused.shutdown();
+    }
+}
+
 // ---- fixed-seed entries (the CI property job) ---------------------------
 
 #[test]
