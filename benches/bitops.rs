@@ -14,10 +14,17 @@
 //!      binarizable sign -> pool -> +-1 linear chain: end-to-end batch
 //!      latency plus the hidden-segment wire bytes (deterministic; the
 //!      ISSUE 6 >= 8x reduction claim, recorded so CI can gate it).
+//!   6. (wan) LAN vs WAN inference latency under the `transport::shim`
+//!      virtual clock: the same inferences priced at 0.2ms and 80ms
+//!      one-way latency without sleeping.  The `n` column records the
+//!      critical-path round count, so a round added anywhere changes
+//!      the row key and the bench gate fails alongside
+//!      `tests/budgets.rs`.
 //!
 //! Results are printed as a table and recorded to `BENCH_bitops.json`
-//! (tiers 1-3), `BENCH_offline.json` (tier 4) and `BENCH_fusion.json`
-//! (tier 5) at the workspace root so the bench trajectory is diffable.
+//! (tiers 1-3), `BENCH_offline.json` (tier 4), `BENCH_fusion.json`
+//! (tier 5) and `BENCH_wan.json` (tier 6) at the workspace root so the
+//! bench trajectory is diffable.
 //!
 //!   cargo bench --bench bitops
 
@@ -343,44 +350,7 @@ fn fusion_tier(rows: &mut Vec<Row>) {
              "metric", "batch", "unfused", "fused", "ratio");
     println!("{}", "-".repeat(58));
 
-    let manifest = r#"{
-      "name": "bnnchain", "dataset": "synthetic",
-      "input": {"c": 1, "h": 12, "w": 12},
-      "s_in": 0, "ring_bits": 32,
-      "layers": [
-        {"op": "matmul", "conv": true, "m": 4, "kdim": 9, "n": 100,
-         "k": 3, "stride": 1, "pad_lo": 0, "pad_hi": 0, "cout": 4,
-         "w": {"off": 0, "len": 36}, "b": {"off": 36, "len": 4},
-         "s_in": 0, "s_out": 0},
-        {"op": "sign", "c": 4, "t": {"off": 40, "len": 4},
-         "flip": {"off": 44, "len": 4}},
-        {"op": "pool_bits", "c": 4, "k": 2, "stride": 2},
-        {"op": "pm1"},
-        {"op": "depthwise", "cout": 4, "k": 1, "stride": 1,
-         "pad_lo": 0, "pad_hi": 0, "w": {"off": 48, "len": 4},
-         "s_in": 0, "s_out": 0},
-        {"op": "sign", "c": 4, "t": {"off": 52, "len": 4},
-         "flip": {"off": 56, "len": 4}},
-        {"op": "pm1"},
-        {"op": "flatten", "c": 4, "h": 5, "w": 5},
-        {"op": "matmul", "conv": false, "m": 3, "kdim": 100, "n": 1,
-         "w": {"off": 60, "len": 300}, "s_in": 0, "s_out": 0}
-      ]
-    }"#;
-    let mut pool = vec![0i32; 360];
-    for (i, v) in pool.iter_mut().enumerate().take(36) {
-        *v = (i as i32 % 5) - 2;
-    }
-    pool[36..40].copy_from_slice(&[1, -1, 2, 0]);
-    pool[40..44].copy_from_slice(&[0, 1, -1, 2]);
-    pool[44..48].copy_from_slice(&[1, -1, 2, -2]);
-    pool[48..52].copy_from_slice(&[1, -1, 1, -1]);
-    pool[52..56].copy_from_slice(&[1, 3, -2, 0]);
-    pool[56..60].copy_from_slice(&[2, -1, 1, -3]);
-    for (i, v) in pool.iter_mut().enumerate().skip(60) {
-        *v = if (i + i / 7) % 2 == 0 { 1 } else { -1 };
-    }
-    let model = cbnn::nn::Model::from_json(manifest, pool).unwrap();
+    let model = chain_model();
     let plan = plan_fused(&model).expect("chain must lower");
 
     for &batch in &[1usize, 4] {
@@ -455,6 +425,138 @@ fn fusion_tier(rows: &mut Vec<Row>) {
     }
 }
 
+/// The fully-binarizable hidden chain tiers 5 and 6 run: conv -> sign
+/// -> OR-pool -> pm1 -> +-1 depthwise with folded sign -> pm1 ->
+/// flatten -> +-1 FC (same model `tests/properties.rs` proves
+/// bit-identical fused vs unfused).
+fn chain_model() -> cbnn::nn::Model {
+    let manifest = r#"{
+      "name": "bnnchain", "dataset": "synthetic",
+      "input": {"c": 1, "h": 12, "w": 12},
+      "s_in": 0, "ring_bits": 32,
+      "layers": [
+        {"op": "matmul", "conv": true, "m": 4, "kdim": 9, "n": 100,
+         "k": 3, "stride": 1, "pad_lo": 0, "pad_hi": 0, "cout": 4,
+         "w": {"off": 0, "len": 36}, "b": {"off": 36, "len": 4},
+         "s_in": 0, "s_out": 0},
+        {"op": "sign", "c": 4, "t": {"off": 40, "len": 4},
+         "flip": {"off": 44, "len": 4}},
+        {"op": "pool_bits", "c": 4, "k": 2, "stride": 2},
+        {"op": "pm1"},
+        {"op": "depthwise", "cout": 4, "k": 1, "stride": 1,
+         "pad_lo": 0, "pad_hi": 0, "w": {"off": 48, "len": 4},
+         "s_in": 0, "s_out": 0},
+        {"op": "sign", "c": 4, "t": {"off": 52, "len": 4},
+         "flip": {"off": 56, "len": 4}},
+        {"op": "pm1"},
+        {"op": "flatten", "c": 4, "h": 5, "w": 5},
+        {"op": "matmul", "conv": false, "m": 3, "kdim": 100, "n": 1,
+         "w": {"off": 60, "len": 300}, "s_in": 0, "s_out": 0}
+      ]
+    }"#;
+    let mut pool = vec![0i32; 360];
+    for (i, v) in pool.iter_mut().enumerate().take(36) {
+        *v = (i as i32 % 5) - 2;
+    }
+    pool[36..40].copy_from_slice(&[1, -1, 2, 0]);
+    pool[40..44].copy_from_slice(&[0, 1, -1, 2]);
+    pool[44..48].copy_from_slice(&[1, -1, 2, -2]);
+    pool[48..52].copy_from_slice(&[1, -1, 1, -1]);
+    pool[52..56].copy_from_slice(&[1, 3, -2, 0]);
+    pool[56..60].copy_from_slice(&[2, -1, 1, -3]);
+    for (i, v) in pool.iter_mut().enumerate().skip(60) {
+        *v = if (i + i / 7) % 2 == 0 { 1 } else { -1 };
+    }
+    cbnn::nn::Model::from_json(manifest, pool).unwrap()
+}
+
+/// Tier 6: LAN vs WAN inference latency under the virtual clock.  The
+/// shim prices every flight (latency + serialization) on a
+/// deterministic virtual clock, so the recorded numbers are data-flow
+/// time, not wall time, and reproduce exactly across machines.  The
+/// row key's `n` column is the measured critical-path round count:
+/// adding a round anywhere changes the key and the bench gate fails
+/// together with `tests/budgets.rs`.
+fn wan_tier(rows: &mut Vec<Row>) {
+    use cbnn::engine::fusion::{infer_batch_fused, plan_fused};
+    use cbnn::engine::{infer_batch_pooled, msb_demand, share_model,
+                       EngineOptions};
+    use cbnn::offline::TupleSource;
+    use cbnn::protocols::linear::NativeBackend;
+    use cbnn::testutil::threeparty::{every_op_model, run3_seeded_net};
+    use cbnn::transport::NetConfig;
+
+    println!("== tier 6: LAN vs WAN virtual-clock latency ==\n");
+    println!("{:<18} {:<8} {:>12} {:>12} {:>9}",
+             "model", "rounds", "wan(ms)", "lan(ms)", "ratio");
+    println!("{}", "-".repeat(62));
+
+    let batch = 2usize;
+    let measure = |model: &cbnn::nn::Model, flat: usize, fuse: bool,
+                   net: NetConfig| -> (f64, u64) {
+        let plan = fuse.then(|| plan_fused(model).expect("must lower"));
+        let results = run3_seeded_net(6_000 + flat as u64, net, |ctx| {
+            let shared = share_model(ctx, model, true).unwrap();
+            let demand = match &plan {
+                Some(p) => p.msb_demand(batch),
+                None => msb_demand(&shared, batch),
+            };
+            let inputs: Vec<Tensor> = if ctx.id() == 0 {
+                let mut rng = Rng::new(flat as u64);
+                (0..batch).map(|_| rng.tensor_small(&[1, flat], 15))
+                    .collect()
+            } else {
+                vec![]
+            };
+            let pool = MsbPool::new();
+            pool.generate(ctx, demand).unwrap();
+            let src = TupleSource::Pool(&pool);
+            let t0 = ctx.comm.virtual_now();
+            let r0 = ctx.comm.stats().rounds;
+            let out = match &plan {
+                Some(p) => infer_batch_fused(
+                    ctx, &shared, p, &NativeBackend,
+                    EngineOptions::default(), &inputs, batch, &src)
+                    .unwrap(),
+                None => infer_batch_pooled(
+                    ctx, &shared, &NativeBackend, EngineOptions::default(),
+                    &inputs, batch, &src)
+                    .unwrap(),
+            };
+            black_box(out.logits);
+            ((ctx.comm.virtual_now() - t0).as_secs_f64(),
+             ctx.comm.stats().rounds - r0)
+        });
+        let ms = results.iter()
+            .map(|(r, _)| r.0 * 1e3)
+            .fold(0.0f64, f64::max);
+        let rounds = results.iter().map(|(r, _)| r.1).max().unwrap();
+        (ms, rounds)
+    };
+
+    let everyop = every_op_model();
+    let chain = chain_model();
+    let cases: [(&str, &cbnn::nn::Model, usize, bool); 3] = [
+        ("everyop-unfused", &everyop, 36, false),
+        ("everyop-fused", &everyop, 36, true),
+        ("bnnchain-fused", &chain, 144, true),
+    ];
+    for (label, model, flat, fuse) in cases {
+        let lan = NetConfig::lan().with_virtual_clock();
+        let wan = NetConfig::wan().with_virtual_clock();
+        let (lan_ms, lan_rounds) = measure(model, flat, fuse, lan);
+        let (wan_ms, wan_rounds) = measure(model, flat, fuse, wan);
+        assert_eq!(lan_rounds, wan_rounds,
+                   "round count must not depend on the link profile");
+        println!("{:<18} {:<8} {:>12.3} {:>12.3} {:>8.1}x",
+                 label, wan_rounds, wan_ms, lan_ms, wan_ms / lan_ms);
+        rows.push(Row { section: "lan_vs_wan_virtual", op: label.into(),
+                        n: wan_rounds as usize, baseline_ms: wan_ms,
+                        fast_ms: lan_ms });
+    }
+    println!();
+}
+
 fn write_json(file: &str, bench: &str, acceptance: &[(&str, &str)],
               rows: &[Row]) {
     let mut s = String::from("{\n");
@@ -499,10 +601,13 @@ fn main() {
     offline_tier(&mut offline_rows);
     let mut fusion_rows = Vec::new();
     fusion_tier(&mut fusion_rows);
+    let mut wan_rows = Vec::new();
+    wan_tier(&mut wan_rows);
     println!("(acceptance: packed XOR/AND >= 8x byte-per-bit; strided \
               Kogge-Stone levels >= 2x concat; warm-bank online MSB \
               >= 2x inline generation; fused hidden segment >= 8x fewer \
-              bytes than the arithmetic walk)");
+              bytes than the arithmetic walk; WAN virtual latency <= \
+              critical-path rounds x RTT x 1.25)");
     write_json("BENCH_bitops.json", "bitops",
                &[("byte_vs_packed", "xor/and speedup >= 8x"),
                  ("ks_concat_vs_strided", "ks-5lvl speedup >= 2x")],
@@ -517,4 +622,10 @@ fn main() {
                   "fused hidden segment ships >= 8x fewer online bytes \
                    than the arithmetic walk")],
                &fusion_rows);
+    write_json("BENCH_wan.json", "wan",
+               &[("lan_vs_wan_virtual",
+                  "virtual-clock WAN latency stays within critical-path \
+                   rounds x 160ms RTT x 1.25; the n column pins the \
+                   round count")],
+               &wan_rows);
 }

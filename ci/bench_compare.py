@@ -10,21 +10,25 @@ fresh run with `fast_ms` no more than TOLERANCE times the baseline's
 inside one run, not the regression baseline, so only `fast_ms` is
 gated).  Sections whose name ends in `_bytes` carry deterministic wire
 accounting in the `*_ms` columns (e.g. the fusion bench's
-hidden-segment bytes), so they are gated exactly: any byte growth
-fails.  A baseline with an empty `results` list -- the committed stubs
-from before a toolchain was available -- skips the comparison, so the
-job cannot fail before a real baseline has been promoted.
+hidden-segment bytes), so they are gated exactly: ANY divergence --
+growth or shrink -- fails and names the diverging key and both byte
+values, because a deterministic counter that moved is a wire-format
+change someone must sign off on by re-promoting the baseline.
+
+Section coverage is gated in both directions: a section the fresh run
+produced with no baseline rows fails loudly (a new bench tier must be
+promoted into the baseline, not left unwatched), and a baseline
+section the fresh run never produced fails loudly (the tier silently
+stopped executing).  A baseline with an empty `results` list -- the
+committed stubs from before a toolchain was available -- skips the
+comparison, so the job cannot fail before a real baseline has been
+promoted.
 """
 
 import json
 import sys
 
 TOLERANCE = 1.20  # fail on >20% regression
-
-
-def tolerance_for(row):
-    """Timing rows get the noise tolerance; byte rows are exact."""
-    return 1.0 if row["section"].endswith("_bytes") else TOLERANCE
 
 
 def key(row):
@@ -48,30 +52,55 @@ def main() -> int:
               "to enable the gate")
         return 0
 
-    fresh_rows = {key(r): r for r in fresh.get("results") or []}
+    fresh_list = fresh.get("results") or []
+    fresh_rows = {key(r): r for r in fresh_list}
     failures = []
+
+    # section coverage must match in both directions
+    base_sections = {r["section"] for r in base_rows}
+    fresh_sections = {r["section"] for r in fresh_list}
+    for sec in sorted(fresh_sections - base_sections):
+        failures.append(
+            f"section `{sec}`: fresh run produced it but the baseline "
+            f"has no rows for it -- promote a baseline that includes "
+            f"the new tier; the gate refuses to leave it unwatched")
+    for sec in sorted(base_sections - fresh_sections):
+        failures.append(
+            f"section `{sec}`: recorded in the baseline but missing "
+            f"entirely from the fresh run -- the bench tier did not "
+            f"execute")
+
     for row in base_rows:
         got = fresh_rows.get(key(row))
         if got is None:
             failures.append(f"{key(row)}: row missing from fresh run")
             continue
-        tol = tolerance_for(row)
-        if got["fast_ms"] > row["fast_ms"] * tol:
+        if row["section"].endswith("_bytes"):
+            if got["fast_ms"] != row["fast_ms"]:
+                delta = got["fast_ms"] - row["fast_ms"]
+                failures.append(
+                    f"{key(row)}: exact byte gate: {got['fast_ms']:.0f} "
+                    f"bytes vs baseline {row['fast_ms']:.0f} "
+                    f"({delta:+.0f}) -- byte rows are deterministic, so "
+                    f"any drift is a wire-format change; re-promote the "
+                    f"baseline only if it is intended")
+            continue
+        if got["fast_ms"] > row["fast_ms"] * TOLERANCE:
             failures.append(
                 f"{key(row)}: fast_ms {got['fast_ms']:.3f} vs baseline "
                 f"{row['fast_ms']:.3f} "
                 f"(+{100 * (got['fast_ms'] / row['fast_ms'] - 1):.0f}%, "
-                f"limit +{100 * (tol - 1):.0f}%)")
+                f"limit +{100 * (TOLERANCE - 1):.0f}%)")
 
     checked = len(base_rows)
     if failures:
-        print(f"{fresh_path}: {len(failures)}/{checked} rows regressed "
-              f"past {TOLERANCE:.2f}x:")
+        print(f"{fresh_path}: {len(failures)} gate failures "
+              f"({checked} baseline rows checked):")
         for f_ in failures:
             print(f"  {f_}")
         return 1
     print(f"{fresh_path}: {checked} rows within {TOLERANCE:.2f}x of "
-          f"{base_path}")
+          f"{base_path} (byte rows exact, sections matched)")
     return 0
 
 

@@ -110,13 +110,11 @@ impl Args {
 }
 
 /// Resolve the shared network / backend flags into engine config pieces.
+/// Accepts the named profiles (`lan|wan|zero|none`) plus the custom
+/// `--net` spec grammar (`rtt=40ms,bw=40MBps,jitter=1ms[,virtual]`) --
+/// see `transport::shim::parse_net_spec` for the full grammar.
 pub fn parse_net(name: &str) -> Result<crate::transport::NetConfig, String> {
-    match name {
-        "lan" => Ok(crate::transport::NetConfig::lan()),
-        "wan" => Ok(crate::transport::NetConfig::wan()),
-        "zero" | "none" => Ok(crate::transport::NetConfig::zero()),
-        other => Err(format!("unknown net '{other}' (lan|wan|zero)")),
-    }
+    crate::transport::shim::parse_net_spec(name)
 }
 
 pub fn parse_backend(name: &str) -> Result<crate::runtime::BackendKind, String> {
@@ -299,6 +297,11 @@ mod tests {
     fn net_and_backend_resolution() {
         assert!(parse_net("lan").is_ok());
         assert!(parse_net("dsl").is_err());
+        // custom WAN specs route through transport::shim
+        let net = parse_net("rtt=40ms,bw=40MBps,virtual").unwrap();
+        assert_eq!(net.latency, std::time::Duration::from_millis(20));
+        assert!(net.virtual_clock);
+        assert!(parse_net("rtt=40").is_err());
         assert!(parse_backend("pjrt-pallas").is_ok());
         assert!(parse_backend("gpu").is_err());
     }

@@ -52,7 +52,7 @@
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::thread::{self, JoinHandle};
 use std::time::{Duration, Instant};
 
@@ -71,6 +71,19 @@ use crate::protocols::Ctx;
 use crate::ring::Tensor;
 use crate::runtime::make_backend;
 use crate::transport::{local_trio, ChanControl, ChanId, Comm, Stats};
+
+/// Acquire coordinator bookkeeping locks, absorbing poisoning.  Every
+/// guarded section here mutates scheduler/registry bookkeeping in
+/// single steps (sends, counter bumps, entry pushes), so a panicking
+/// holder never leaves the state torn -- recovering the guard keeps the
+/// serving and lifecycle paths alive and *typed* (dead party threads
+/// still surface through the existing send/lookup error paths), instead
+/// of cascading one thread's panic into every request that follows.
+/// Pinned by the `poisoned_*` tests below.
+fn recover<T>(r: Result<MutexGuard<'_, T>, PoisonError<MutexGuard<'_, T>>>)
+              -> MutexGuard<'_, T> {
+    r.unwrap_or_else(PoisonError::into_inner)
+}
 
 enum Job {
     Infer { inputs: Vec<Tensor>, batch: usize },
@@ -418,7 +431,7 @@ impl Service {
         let goal = target_elems
             .max(self.bank_cfg.high)
             .min(self.bank_cfg.capacity);
-        let mut sched = self.sched.lock().unwrap();
+        let mut sched = recover(self.sched.lock());
         let reserved = self.banks[0].reserved_elems();
         let mut avail = sched.dispatched.saturating_sub(reserved);
         if avail >= self.bank_cfg.low && avail >= target_elems {
@@ -447,9 +460,9 @@ impl Service {
         // party's queue (same broadcast lock), so the producers overlap
         // this batch instead of draining the prefill dry
         self.top_up_to(0);
-        let rx = self.logits_rx.lock().unwrap();
+        let rx = recover(self.logits_rx.lock());
         {
-            let sched = self.sched.lock().unwrap();
+            let sched = recover(self.sched.lock());
             for (id, tx) in sched.txs.iter().enumerate() {
                 let job = Job::Infer {
                     inputs: if id == 0 { inputs.clone() } else { vec![] },
@@ -464,7 +477,7 @@ impl Service {
     /// Ask every party thread to stop once its queued jobs are done
     /// (the graceful half of `shutdown`).
     fn request_stop(&self) {
-        let sched = self.sched.lock().unwrap();
+        let sched = recover(self.sched.lock());
         for tx in &sched.txs {
             let _ = tx.send(Job::Shutdown);
         }
@@ -498,14 +511,14 @@ impl Service {
     /// `Stats::chan`/`Stats::model` with this service's `slot` for its
     /// own rows.
     pub fn join_parties(&self) -> Result<[Stats; 3]> {
-        if let Some((stats, err)) = self.joined.lock().unwrap().clone() {
+        if let Some((stats, err)) = recover(self.joined.lock()).clone() {
             return match err {
                 None => Ok(stats),
                 Some(e) => Err(anyhow!(e)),
             };
         }
         let handles: Vec<_> = {
-            let mut h = self.handles.lock().unwrap();
+            let mut h = recover(self.handles.lock());
             h.drain(..).collect()
         };
         if handles.len() != 3 {
@@ -530,7 +543,7 @@ impl Service {
         let err = (!panicked.is_empty()).then(|| format!(
             "party thread(s) {panicked:?} panicked during drain (their \
              stats rows are empty)"));
-        *self.joined.lock().unwrap() = Some((arr.clone(), err.clone()));
+        *recover(self.joined.lock()) = Some((arr.clone(), err.clone()));
         match err {
             None => Ok(arr),
             Some(e) => Err(anyhow!(e)),
@@ -559,7 +572,7 @@ impl Service {
     /// shared links.  Pair with [`ModelRegistry::quarantine`] to
     /// exercise recovery.
     pub fn inject_fault(&self, party: usize) {
-        let sched = self.sched.lock().unwrap();
+        let sched = recover(self.sched.lock());
         let _ = sched.txs[party].send(Job::Die);
     }
 
@@ -766,7 +779,7 @@ impl ModelRegistry {
                     model: spec.name.clone(),
                     source: e,
                 })?;
-            reg.inner.lock().unwrap().entries.push(Entry {
+            recover(reg.inner.lock()).entries.push(Entry {
                 name: spec.name,
                 model: spec.model,
                 bank: spec.bank,
@@ -797,7 +810,7 @@ impl ModelRegistry {
 
     /// Registered model names (any state), in slot order.
     pub fn names(&self) -> Vec<String> {
-        let inner = self.inner.lock().unwrap();
+        let inner = recover(self.inner.lock());
         let mut rows: Vec<(u8, String)> = inner.entries.iter()
             .map(|e| (e.slot, e.name.clone())).collect();
         rows.sort();
@@ -807,7 +820,7 @@ impl ModelRegistry {
     /// Every slot's (name, slot, state, epoch), in slot order -- the
     /// admin `status` view.
     pub fn status(&self) -> Vec<(String, u8, SlotState, u32)> {
-        let inner = self.inner.lock().unwrap();
+        let inner = recover(self.inner.lock());
         let mut rows: Vec<_> = inner.entries.iter()
             .map(|e| (e.name.clone(), e.slot, e.state, e.epoch))
             .collect();
@@ -817,20 +830,20 @@ impl ModelRegistry {
 
     /// The current lifecycle state of `name`'s slot.
     pub fn state(&self, name: &str) -> Result<SlotState, RegistryError> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = recover(self.inner.lock());
         Ok(inner.entry_mut(name)?.state)
     }
 
     /// Per-slot lifecycle counters (quarantines, respawns, swaps),
     /// keyed by slot id; slots that never churned have no entry.
     pub fn lifecycle_counters(&self) -> BTreeMap<u8, LifecycleCounters> {
-        self.inner.lock().unwrap().lifecycle.clone()
+        recover(self.inner.lock()).lifecycle.clone()
     }
 
     /// The live service bound to `name` (must be `Serving`).
     pub fn service(&self, name: &str)
                    -> Result<Arc<Service>, RegistryError> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = recover(self.inner.lock());
         let e = inner.entry_mut(name)?;
         match (&e.service, e.state) {
             (Some(svc), SlotState::Serving) => Ok(Arc::clone(svc)),
@@ -857,7 +870,7 @@ impl ModelRegistry {
         let svc = self.service(name)?;
         match svc.infer(inputs) {
             Ok(logits) => {
-                let mut inner = self.inner.lock().unwrap();
+                let mut inner = recover(self.inner.lock());
                 if let Ok(e) = inner.entry_mut(name) {
                     e.consec_errors = 0;
                 }
@@ -866,7 +879,7 @@ impl ModelRegistry {
             Err(e) => {
                 let threshold = self.cfg.max_consecutive_errors;
                 let trip = {
-                    let mut inner = self.inner.lock().unwrap();
+                    let mut inner = recover(self.inner.lock());
                     match inner.entry_mut(name) {
                         Ok(en) => {
                             en.consec_errors =
@@ -882,7 +895,7 @@ impl ModelRegistry {
                     // force-quarantine; the trip is recorded whatever
                     // the drain reported (the state transition happened)
                     let _ = self.quarantine(name);
-                    self.inner.lock().unwrap().lifecycle
+                    recover(self.inner.lock()).lifecycle
                         .entry(slot).or_default().watchdog_trips += 1;
                 }
                 Err(RegistryError::Service {
@@ -900,7 +913,7 @@ impl ModelRegistry {
     /// untouched.  `respawn` restarts it; `remove_model` frees it.
     pub fn quarantine(&self, name: &str) -> Result<(), RegistryError> {
         let svc = {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = recover(self.inner.lock());
             let e = inner.entry_mut(name)?;
             if e.state != SlotState::Serving {
                 return Err(RegistryError::SlotUnavailable {
@@ -918,7 +931,7 @@ impl ModelRegistry {
             svc
         };
         let joined = svc.abort();
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = recover(self.inner.lock());
         let slot = {
             let e = inner.entry_mut(name)?;
             e.state = SlotState::Quarantined;
@@ -940,7 +953,7 @@ impl ModelRegistry {
     /// frame desyncs the new epoch, which is simply quarantined again).
     pub fn respawn(&self, name: &str) -> Result<(), RegistryError> {
         let (model, bank, slot, epoch) = {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = recover(self.inner.lock());
             let e = inner.entry_mut(name)?;
             if e.state != SlotState::Quarantined {
                 return Err(RegistryError::SlotUnavailable {
@@ -955,7 +968,7 @@ impl ModelRegistry {
             c.sweep();
         }
         let started = self.start_slot(&model, bank, slot, epoch);
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = recover(self.inner.lock());
         match started {
             Ok(svc) => {
                 {
@@ -987,7 +1000,7 @@ impl ModelRegistry {
     pub fn add_model(&self, spec: ModelSpec)
                      -> Result<u8, RegistryError> {
         let slot = {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = recover(self.inner.lock());
             if inner.entries.iter().any(|e| e.name == spec.name) {
                 return Err(RegistryError::DuplicateModel(spec.name));
             }
@@ -1024,7 +1037,7 @@ impl ModelRegistry {
             c.sweep();
         }
         let started = self.start_slot(&spec.model, spec.bank, slot, 0);
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = recover(self.inner.lock());
         match started {
             Ok(svc) => {
                 {
@@ -1056,7 +1069,7 @@ impl ModelRegistry {
     /// A quarantined slot (lanes already retired) is simply freed.
     pub fn remove_model(&self, name: &str) -> Result<(), RegistryError> {
         let svc = {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = recover(self.inner.lock());
             let e = inner.entry_mut(name)?;
             match e.state {
                 SlotState::Serving => {
@@ -1091,7 +1104,7 @@ impl ModelRegistry {
                 c.close_chan(ChanId::offline(svc.slot));
             }
         }
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = recover(self.inner.lock());
         let slot = inner.entry_mut(name)?.slot;
         inner.entries.retain(|e| e.name != name);
         inner.free_slots.push(slot);
@@ -1118,7 +1131,7 @@ impl ModelRegistry {
     /// slot's lifecycle history.
     pub fn rollups(&self) -> Vec<ModelRollup> {
         let stats = self.link_stats(0);
-        let inner = self.inner.lock().unwrap();
+        let inner = recover(self.inner.lock());
         let mut rows: Vec<ModelRollup> = inner.entries.iter()
             .map(|e| ModelRollup {
                 name: e.name.clone(),
@@ -1142,7 +1155,7 @@ impl ModelRegistry {
     /// first failure is then reported as `Drain`.
     pub fn shutdown(self)
                     -> Result<Vec<(String, [Stats; 3])>, RegistryError> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = recover(self.inner.lock());
         inner.entries.sort_by_key(|e| e.slot);
         let mut out = Vec::new();
         let mut first_err = None;
@@ -1402,6 +1415,57 @@ mod tests {
         // abort after shutdown is a no-op returning the same stats
         let third = svc.abort().expect("cached drain");
         assert_eq!(first[0].bytes_sent, third[0].bytes_sent);
+    }
+
+    #[test]
+    fn poisoned_scheduler_lock_does_not_panic_the_request_path() {
+        let model = Arc::new(every_op_model());
+        let cfg = SessionConfig::new("artifacts/hlo");
+        let svc = Service::start(model, cfg).expect("setup");
+        // inject: a thread panics while holding the broadcast lock
+        let res = thread::scope(|s| {
+            s.spawn(|| {
+                let _g = svc.sched.lock().unwrap();
+                panic!("injected poison");
+            }).join()
+        });
+        assert!(res.is_err());
+        assert!(svc.sched.is_poisoned(), "injection failed");
+        // the request path recovers the guard instead of cascading the
+        // panic: the guarded state was never left torn, so serving
+        // continues
+        let mut rng = Rng::new(21);
+        let logits = svc.infer(vec![rng.tensor_small(&[1, 36], 15)])
+            .expect("poisoned sched lock must not fail serving");
+        assert_eq!(logits[0].len(), 3);
+        let _ = svc.shutdown();
+    }
+
+    #[test]
+    fn poisoned_registry_lock_keeps_lifecycle_typed() {
+        let model = Arc::new(every_op_model());
+        let cfg = SessionConfig::new("artifacts/hlo");
+        let reg = ModelRegistry::start(
+            vec![ModelSpec::new("a", Arc::clone(&model))], &cfg)
+            .expect("registry up");
+        let res = thread::scope(|s| {
+            s.spawn(|| {
+                let _g = reg.inner.lock().unwrap();
+                panic!("injected poison");
+            }).join()
+        });
+        assert!(res.is_err());
+        assert!(reg.inner.is_poisoned(), "injection failed");
+        // lookups, routing, and lifecycle transitions stay panic-free
+        // and typed after the poison
+        assert_eq!(reg.state("a").unwrap(), SlotState::Serving);
+        assert!(matches!(reg.state("nope").unwrap_err(),
+                         RegistryError::UnknownModel(_)));
+        let mut rng = Rng::new(23);
+        let logits = reg.infer("a", vec![rng.tensor_small(&[1, 36], 15)])
+            .expect("serving continues after poison");
+        assert_eq!(logits.len(), 1);
+        let _ = reg.shutdown();
     }
 
     // ---- model registry -------------------------------------------------

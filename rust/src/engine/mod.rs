@@ -362,9 +362,17 @@ fn share_inputs(ctx: &Ctx, input: (usize, usize, usize),
 }
 
 /// Attribute the wire delta since `before` to one op-cost row.
+///
+/// Diffs the *bound channel's* counters, not the link totals: a serving
+/// party's other model slots and offline lanes move traffic concurrently
+/// on the same links, and diffing totals silently billed their rounds
+/// and bytes to whatever op happened to be running here (the budget
+/// tests in `tests/budgets.rs` pin the fix under a noisy neighbour).
 fn cost_row(ctx: &Ctx, index: usize, op: String,
             before: &crate::transport::Stats) -> crate::metrics::OpCost {
-    let now = ctx.comm.stats();
+    let chan = ctx.comm.chan();
+    let now = ctx.comm.stats().chan(chan);
+    let before = before.chan(chan);
     crate::metrics::OpCost {
         index,
         op,

@@ -11,7 +11,8 @@
 //!   info   -- describe a model manifest
 //!
 //! Common flags: --model NAME | --model NAME=MANIFEST (repeatable)
-//!               --artifacts DIR --net lan|wan|zero
+//!               --artifacts DIR
+//!               --net lan|wan|zero|rtt=40ms,bw=40MBps,jitter=1ms[,virtual]
 //!               --backend native|pjrt-pallas|pjrt-xla --batch N
 
 use std::collections::BTreeMap;
@@ -41,7 +42,8 @@ fn usage() -> String {
     format!(
         "usage: cbnn <infer|serve|acc|info> --model <name|name=manifest>\n\
          serve flags (--model repeatable): {}\n\
-         values: --net lan|wan|zero, --backend \
+         values: --net lan|wan|zero|rtt=40ms,bw=40MBps,jitter=1ms\
+         [,virtual], --backend \
          native|pjrt-pallas|pjrt-xla, --fuse on|off (binary-domain \
          layer fusion), --max-infer-errors N (0 disables the \
          auto-quarantine watchdog); see OPERATIONS.md",

@@ -46,7 +46,7 @@
 //! DESIGN.md §Offline/online split.
 
 use std::sync::mpsc::Receiver;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, MutexGuard};
 
 use anyhow::Result;
 
@@ -187,34 +187,65 @@ impl TupleBank {
         self.cfg
     }
 
+    /// Lock the bank state, absorbing lock poisoning: a producer or
+    /// consumer that panicked mid-section leaves counters that are at
+    /// worst stale, never unsound (tuples are only popped under the
+    /// lock), so instead of cascading the panic into every thread that
+    /// touches the bank we mark it closed -- blocked draws err
+    /// `PreprocError::Closed` and the inference fails typed, exactly
+    /// like a peer-death drain.  Pinned by `poisoned_bank_closes_typed`.
+    fn lock_st(&self) -> MutexGuard<'_, BankState> {
+        match self.st.lock() {
+            Ok(g) => g,
+            Err(p) => {
+                let mut g = p.into_inner();
+                g.closed = true;
+                g
+            }
+        }
+    }
+
+    /// `Condvar::wait` with the same poison-means-closed policy.
+    fn wait_on<'a>(&self, cv: &Condvar, g: MutexGuard<'a, BankState>)
+                   -> MutexGuard<'a, BankState> {
+        match cv.wait(g) {
+            Ok(g) => g,
+            Err(p) => {
+                let mut g = p.into_inner();
+                g.closed = true;
+                g
+            }
+        }
+    }
+
     /// Record a dispatched refill job of `n` elements.  Called by the
     /// party thread when it forwards the job to its producer, i.e. in
     /// the broadcast order every party observes identically.
     pub fn credit(&self, n: usize) {
-        self.st.lock().unwrap().credited += n;
+        self.lock_st().credited += n;
     }
 
     /// Deterministic headroom: promised minus committed elements.  This
     /// is the quantity the pump and the draw decision agree on across
     /// parties, independent of producer speed.
     pub fn credited_available(&self) -> usize {
-        let st = self.st.lock().unwrap();
+        let st = self.lock_st();
         st.credited - st.reserved
     }
 
     /// Elements committed to pooled draws so far (monotonic).
     pub fn reserved_elems(&self) -> usize {
-        self.st.lock().unwrap().reserved
+        self.lock_st().reserved
     }
 
     /// Actually stored elements (racy against the producer; use only for
     /// observability and prefill waits, never for draw decisions).
     pub fn level(&self) -> usize {
-        self.st.lock().unwrap().res.len()
+        self.lock_st().res.len()
     }
 
     pub fn metrics(&self) -> PreprocMetrics {
-        self.st.lock().unwrap().m
+        self.lock_st().m
     }
 
     /// Commit to a pooled draw of `n` elements iff the deterministic
@@ -229,7 +260,7 @@ impl TupleBank {
     /// *underflow* the metrics count: the caller mints synchronously on
     /// the request path.
     pub fn try_reserve(&self, n: usize) -> bool {
-        let mut st = self.st.lock().unwrap();
+        let mut st = self.lock_st();
         if n + self.cfg.chunk <= self.cfg.capacity
             && st.credited - st.reserved >= n {
             st.reserved += n;
@@ -245,9 +276,9 @@ impl TupleBank {
     /// Only valid after a successful `try_reserve(n)`; errs `Closed` if
     /// the bank is drained out from under the draw.
     pub fn take(&self, n: usize) -> Result<MsbTuple, PreprocError> {
-        let mut st = self.st.lock().unwrap();
+        let mut st = self.lock_st();
         while st.res.len() < n && !st.closed {
-            st = self.data.wait(st).unwrap();
+            st = self.wait_on(&self.data, st);
         }
         if st.res.len() < n {
             return Err(PreprocError::Closed);
@@ -263,9 +294,9 @@ impl TupleBank {
     /// a closed bank swallows the tuple so shutdown drains cleanly.
     pub fn deliver(&self, t: MsbTuple) {
         let n = t.len();
-        let mut st = self.st.lock().unwrap();
+        let mut st = self.lock_st();
         while !st.closed && st.res.len() + n > self.cfg.capacity {
-            st = self.space.wait(st).unwrap();
+            st = self.wait_on(&self.space, st);
         }
         if st.closed {
             return;
@@ -281,7 +312,7 @@ impl TupleBank {
     /// Stop the bank: wakes every blocked draw (they err `Closed`) and
     /// every backpressured delivery (dropped).  Idempotent.
     pub fn close(&self) {
-        self.st.lock().unwrap().closed = true;
+        self.lock_st().closed = true;
         self.data.notify_all();
         self.space.notify_all();
     }
@@ -294,7 +325,7 @@ impl TupleBank {
     /// mandatory: the respawned epoch mints its own).  Idempotent
     /// (subsequent calls report 0).
     pub fn drain(&self) -> usize {
-        let mut st = self.st.lock().unwrap();
+        let mut st = self.lock_st();
         st.closed = true;
         let n = st.res.len();
         if n > 0 {
@@ -308,9 +339,9 @@ impl TupleBank {
 
     /// Block until the stored level reaches `target` (prefill barrier).
     pub fn wait_level(&self, target: usize) -> Result<usize, PreprocError> {
-        let mut st = self.st.lock().unwrap();
+        let mut st = self.lock_st();
         while st.res.len() < target && !st.closed {
-            st = self.data.wait(st).unwrap();
+            st = self.wait_on(&self.data, st);
         }
         if st.res.len() < target {
             return Err(PreprocError::Closed);
@@ -487,6 +518,32 @@ mod tests {
             low: 0, high: 8, chunk: 4, capacity: 8 }).err().unwrap();
         assert!(err.contains("`capacity`"), "{err}");
         assert!(TupleBank::try_new(BankConfig::default()).is_ok());
+    }
+
+    #[test]
+    fn poisoned_bank_closes_typed() {
+        // a thread panicking while holding the bank lock must not turn
+        // every later bank call into a panic: poison degrades to the
+        // closed state, so draws err `PreprocError::Closed` and the
+        // serving stack fails the inference typed (same path as a peer
+        // death) instead of aborting party threads
+        let bank = Arc::new(TupleBank::new(BankConfig {
+            low: 0, high: 8, chunk: 4, capacity: 16 }));
+        bank.credit(8);
+        let b = Arc::clone(&bank);
+        let _ = thread::spawn(move || {
+            let _g = b.st.lock().unwrap();
+            panic!("injected poison");
+        }).join();
+        assert!(bank.st.is_poisoned(), "injection failed");
+        // every entry point stays panic-free; blocking draws resolve
+        assert!(bank.try_reserve(4), "reserve stays credit-accounted");
+        assert_eq!(bank.take(4).unwrap_err(), PreprocError::Closed);
+        bank.deliver(tup(4)); // swallowed, like any closed bank
+        assert_eq!(bank.wait_level(1).unwrap_err(), PreprocError::Closed);
+        let _ = bank.metrics();
+        let _ = bank.level();
+        bank.close();
     }
 
     #[test]

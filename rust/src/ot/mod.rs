@@ -58,6 +58,20 @@ pub enum Input<'a> {
     Helper { c: &'a BitTensor },
 }
 
+/// Elements piggybacked on the sender->helper payload frame.  Callers
+/// that would otherwise send a separate mask-distribution message to the
+/// helper in the same flight (B2A's `a_2`, ReLU's `alpha_2`) ride it on
+/// the OT's first frame instead: one frame per peer per flight, not one
+/// frame per operand.
+pub enum Extra<'a> {
+    /// Nothing piggybacked.
+    None,
+    /// Sender side: prepend these elements to the payload frame.
+    Send(&'a [Elem]),
+    /// Helper side: expect this many prepended elements (returned).
+    Recv(usize),
+}
+
 /// Direction from `me` to `to` along the ring.
 fn dir_to(me: usize, to: usize) -> Dir {
     if to == (me + 1) % 3 { Dir::Next } else { Dir::Prev }
@@ -69,6 +83,16 @@ fn dir_to(me: usize, to: usize) -> Dir {
 /// Received lengths are validated (peer input is untrusted).
 pub fn run(comm: &Comm, seeds: &PartySeeds, roles: Roles, n: usize,
            input: Input<'_>) -> Result<Option<Vec<Elem>>, WireError> {
+    Ok(run_piggybacked(comm, seeds, roles, n, input, Extra::None)?.0)
+}
+
+/// `run` with an optional rider on the sender->helper frame.  Returns
+/// `(receiver_output, helper_rider)`; the rider is `Some` only on the
+/// helper when `Extra::Recv(k)` was passed.  Round counts are identical
+/// to `run` -- the rider merges a would-be separate frame, not a round.
+pub fn run_piggybacked(comm: &Comm, seeds: &PartySeeds, roles: Roles,
+                       n: usize, input: Input<'_>, extra: Extra<'_>)
+    -> Result<(Option<Vec<Elem>>, Option<Vec<Elem>>), WireError> {
     let me = comm.id;
     let cnt = seeds.next_cnt();
     match input {
@@ -76,9 +100,15 @@ pub fn run(comm: &Comm, seeds: &PartySeeds, roles: Roles, n: usize,
             assert_eq!(me, roles.sender);
             assert_eq!(m0.len(), n);
             assert_eq!(m1.len(), n);
+            let rider: &[Elem] = match extra {
+                Extra::None => &[],
+                Extra::Send(r) => r,
+                Extra::Recv(_) => panic!("Extra::Recv is helper-side"),
+            };
             let prf = pair_prf(seeds, me, roles.receiver);
             let mut s = PrfStream::new(prf, cnt, domain::OT_MASK);
-            let mut payload = Vec::with_capacity(2 * n);
+            let mut payload = Vec::with_capacity(rider.len() + 2 * n);
+            payload.extend_from_slice(rider);
             // masks drawn pairwise: (mask0, mask1) per element
             let mut masked1 = Vec::with_capacity(n);
             for i in 0..n {
@@ -90,20 +120,27 @@ pub fn run(comm: &Comm, seeds: &PartySeeds, roles: Roles, n: usize,
             payload.extend_from_slice(&masked1);
             comm.send_elems(dir_to(me, roles.helper), &payload)?;
             comm.round();
-            Ok(None)
+            Ok((None, None))
         }
         Input::Helper { c } => {
             assert_eq!(me, roles.helper);
             assert_eq!(c.len(), n);
+            let want = match extra {
+                Extra::None => 0,
+                Extra::Recv(k) => k,
+                Extra::Send(_) => panic!("Extra::Send is sender-side"),
+            };
             let payload = crate::rss::expect_len(
-                comm.recv_elems(dir_to(me, roles.sender))?, 2 * n)?;
+                comm.recv_elems(dir_to(me, roles.sender))?, want + 2 * n)?;
             comm.round();
+            let rider = if want > 0 { Some(payload[..want].to_vec()) }
+                        else { None };
             let sel: Vec<Elem> = (0..n).map(|i| {
-                payload[if c.get(i) == 0 { i } else { n + i }]
+                payload[want + if c.get(i) == 0 { i } else { n + i }]
             }).collect();
             comm.send_elems(dir_to(me, roles.receiver), &sel)?;
             comm.round();
-            Ok(None)
+            Ok((None, rider))
         }
         Input::Receiver { c } => {
             assert_eq!(me, roles.receiver);
@@ -121,7 +158,7 @@ pub fn run(comm: &Comm, seeds: &PartySeeds, roles: Roles, n: usize,
                 let mask = if c.get(i) == 0 { masks[i].0 } else { masks[i].1 };
                 sel[i].wrapping_sub(mask)
             }).collect();
-            Ok(Some(out))
+            Ok((Some(out), None))
         }
     }
 }

@@ -13,7 +13,8 @@
 //!   x_0 = y - a (P0, P2), x_1 = a_1 (P0, P1), x_2 = a_2 (P1, P2).
 //!
 //! Critical path: OT (2 rounds) + the P0->P2 forward (1 round); the
-//! a_2 distribution overlaps the OT's first round.
+//! a_2 distribution is piggybacked on the OT's sender->helper payload
+//! frame, so P1 ships exactly one frame to P2 per conversion.
 //!
 //! The bit shares stay word-packed end to end: the sender's y_1 ^ y_2 is
 //! one word-parallel XOR, and the choice bits feed the OT as `BitTensor`s.
@@ -44,7 +45,6 @@ pub fn b2a(ctx: &Ctx, y: &BitShare) -> Result<Share> {
             // a_2 private, sent to P2
             let mut sp = PrfStream::new(&ctx.seeds.private, cnt, domain::SHARE);
             let a2: Vec<Elem> = (0..n).map(|_| sp.next_elem()).collect();
-            ctx.comm.send_elems(Dir::Next, &a2)?; // P2 is P1's next
             let y12 = y.a.xor(&y.b); // y_1 ^ y_2, word-parallel (kernel)
             // message walk iterates the packed words directly: one shift
             // per bit instead of a div/mod-indexed get() per element
@@ -63,8 +63,10 @@ pub fn b2a(ctx: &Ctx, y: &BitShare) -> Result<Share> {
                     i += 1;
                 }
             }
-            ot::run(ctx.comm, ctx.seeds, roles, n,
-                    ot::Input::Sender { m0: &m0, m1: &m1 })?;
+            // a_2 rides the OT payload frame: one frame P1->P2
+            ot::run_piggybacked(ctx.comm, ctx.seeds, roles, n,
+                                ot::Input::Sender { m0: &m0, m1: &m1 },
+                                ot::Extra::Send(&a2))?;
             // P1 holds (x_1, x_2) = (a_1, a_2)
             Ok(Share {
                 a: Tensor::from_vec(&shape, a1),
@@ -87,10 +89,12 @@ pub fn b2a(ctx: &Ctx, y: &BitShare) -> Result<Share> {
             })
         }
         2 => {
-            let a2 = expect_elems(ctx.comm.recv_elems(Dir::Prev)?, n)?;
-            // helper input: choice bit y_0 = this party's `b` component
-            ot::run(ctx.comm, ctx.seeds, roles, n,
-                    ot::Input::Helper { c: &y.b })?;
+            // helper input: choice bit y_0 = this party's `b` component;
+            // a_2 arrives prepended to the OT payload frame
+            let (_, rider) = ot::run_piggybacked(
+                ctx.comm, ctx.seeds, roles, n,
+                ot::Input::Helper { c: &y.b }, ot::Extra::Recv(n))?;
+            let a2 = rider.expect("piggybacked a_2");
             let x0 = expect_elems(ctx.comm.recv_elems(Dir::Next)?, n)?;
             ctx.comm.round();
             // P2 holds (x_2, x_0) = (a_2, y - a)

@@ -5,7 +5,10 @@
 //! the same function in lock-step with their own shares; tests reconstruct
 //! the outputs and compare to the plaintext oracle.
 //!
-//! Round budgets (asserted in tests, cf. DESIGN.md):
+//! Round budgets: the normative per-protocol table lives in DESIGN.md
+//! ("Round budgets") and is executable -- `tests/budgets.rs` parses it
+//! and asserts the measured `transport::Stats` round counts against it,
+//! so this summary is informational only:
 //!
 //! | protocol               | rounds (critical path) |
 //! |------------------------|------------------------|
@@ -13,8 +16,8 @@
 //! | 3-OT                   | 2                      |
 //! | B2A (via 3-OT)         | 3                      |
 //! | MSB extraction         | 6 (B2A ∥ r-share, 2 mul, reveal) |
-//! | Sign (MSB + B2A)       | MSB + 3                |
-//! | ReLU (Alg 5, two OTs)  | MSB + 4                |
+//! | Sign (Alg 4)           | MSB + 0 (sign_a is free, see MsbOut) |
+//! | ReLU select (Alg 5)    | 6 (two role-switched OTs + replications) |
 //! | truncation             | 2                      |
 //! | maxpool (Sign-fused)   | 0 extra linear rounds (reuses Sign) |
 //! | binary linear (fused)  | CSA levels + 1 + ceil(log2(B+1)) AND rounds, bit-width wires |

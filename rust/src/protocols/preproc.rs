@@ -176,18 +176,20 @@ impl Reservoir {
 }
 
 /// Mint `n` elements of MSB correlated material: the input-independent
-/// prefix of Algorithm 3 (B2A of beta, r-share, one multiplication -- ~5
-/// rounds).  Interactive: all parties call it in lock-step with the same
-/// `n`, over whichever transport channel `ctx.comm` is bound to -- the
-/// inline pool mints on the online channel during setup, the serving
-/// producers on the offline channel concurrently with inference.
+/// prefix of Algorithm 3 (B2A of beta with the r-share flight overlapped,
+/// one multiplication -- 4 rounds).  Interactive: all parties call it in
+/// lock-step with the same `n`, over whichever transport channel
+/// `ctx.comm` is bound to -- the inline pool mints on the online channel
+/// during setup, the serving producers on the offline channel
+/// concurrently with inference.
 pub fn mint(ctx: &Ctx, n: usize) -> Result<MsbTuple> {
     let me = ctx.id();
     let cnt = ctx.seeds.next_cnt();
     let (ba, bb) = ctx.seeds.rand_bits2(cnt, n);
     let beta = BitShare { a: ba, b: bb };
-    let beta_a = b2a(ctx, &beta)?;
 
+    // r-share first so its flight overlaps the B2A choreography (same
+    // ordering argument as msb_extract_full)
     let rcnt = ctx.seeds.next_cnt();
     let r_plain = if me == 1 {
         let mut s = PrfStream::new(&ctx.seeds.private, rcnt,
@@ -199,8 +201,9 @@ pub fn mint(ctx: &Ctx, n: usize) -> Result<MsbTuple> {
     } else {
         None
     };
-    let r = rss::share_input(ctx.comm, ctx.seeds, 1, r_plain.as_ref(),
-                             &[n])?;
+    let r = rss::share_input_overlapped(ctx.comm, ctx.seeds, 1,
+                                        r_plain.as_ref(), &[n])?;
+    let beta_a = b2a(ctx, &beta)?;
     let s = beta_a.scale(-2).add_const(me, 1);
     let rs = rss::mul(ctx.comm, ctx.seeds, &r, &s)?;
     Ok(MsbTuple { beta, beta_a, rs })

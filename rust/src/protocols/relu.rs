@@ -44,7 +44,6 @@ pub fn relu_ot(ctx: &Ctx, x: &Share, msb: &BitShare) -> Result<Share> {
             let mut sp = PrfStream::new(&ctx.seeds.private, cnt1,
                                         domain::SHARE);
             let a2: Vec<Elem> = (0..n).map(|_| sp.next_elem()).collect();
-            ctx.comm.send_elems(Dir::Next, &a2)?;
             let nots = msb.a.xor(&msb.b); // msb_1 ^ msb_2, word-parallel
             let (m0, m1): (Vec<Elem>, Vec<Elem>) = (0..n).map(|i| {
                 let x12 = x.a.data[i].wrapping_add(x.b.data[i]);
@@ -56,8 +55,10 @@ pub fn relu_ot(ctx: &Ctx, x: &Share, msb: &BitShare) -> Result<Share> {
                     .wrapping_sub(mask);
                 (v0, v1)
             }).unzip();
-            ot::run(ctx.comm, ctx.seeds, roles1, n,
-                    ot::Input::Sender { m0: &m0, m1: &m1 })?;
+            // alpha_2 rides the OT payload frame: one frame P1->P2
+            ot::run_piggybacked(ctx.comm, ctx.seeds, roles1, n,
+                                ot::Input::Sender { m0: &m0, m1: &m1 },
+                                ot::Extra::Send(&a2))?;
             // A-shares for P1: (A_1, A_2) = (alpha_1, alpha_2)
             let a_share = Share {
                 a: Tensor::from_vec(&shape, a1),
@@ -113,10 +114,12 @@ pub fn relu_ot(ctx: &Ctx, x: &Share, msb: &BitShare) -> Result<Share> {
             Ok(a_share.add(&b_share))
         }
         2 => {
-            let a2 = expect_elems(ctx.comm.recv_elems(Dir::Prev)?, n)?;
-            // OT 1: helper with choice msb_0 (= b component on P2)
-            ot::run(ctx.comm, ctx.seeds, roles1, n,
-                    ot::Input::Helper { c: &msb.b })?;
+            // OT 1: helper with choice msb_0 (= b component on P2);
+            // alpha_2 arrives prepended to the OT payload frame
+            let (_, rider) = ot::run_piggybacked(
+                ctx.comm, ctx.seeds, roles1, n,
+                ot::Input::Helper { c: &msb.b }, ot::Extra::Recv(n))?;
+            let a2 = rider.expect("piggybacked alpha_2");
             let a0 = expect_elems(ctx.comm.recv_elems(Dir::Next)?, n)?;
             ctx.comm.round();
             let a_share = Share {

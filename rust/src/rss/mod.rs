@@ -368,6 +368,24 @@ pub fn reveal(comm: &Comm, x: &Share) -> Result<Tensor, WireError> {
 pub fn share_input(comm: &Comm, seeds: &PartySeeds, owner: usize,
                    x: Option<&Tensor>, shape: &[usize])
                    -> Result<Share, WireError> {
+    share_input_inner(comm, seeds, owner, x, shape, true)
+}
+
+/// `share_input` whose flight the caller overlaps with a concurrent
+/// protocol's first round (the owner sends before entering it, the
+/// receivers' frames are already in flight when they get here): identical
+/// wire traffic, but no round of its own is counted.  Callers must keep
+/// the per-direction frame order identical on both ends (the MSB path
+/// calls this *before* B2A on every party for exactly that reason).
+pub fn share_input_overlapped(comm: &Comm, seeds: &PartySeeds, owner: usize,
+                              x: Option<&Tensor>, shape: &[usize])
+                              -> Result<Share, WireError> {
+    share_input_inner(comm, seeds, owner, x, shape, false)
+}
+
+fn share_input_inner(comm: &Comm, seeds: &PartySeeds, owner: usize,
+                     x: Option<&Tensor>, shape: &[usize], count_round: bool)
+                     -> Result<Share, WireError> {
     use crate::prf::{domain, PrfStream};
     let cnt = seeds.next_cnt();
     let n: usize = shape.iter().product();
@@ -384,7 +402,9 @@ pub fn share_input(comm: &Comm, seeds: &PartySeeds, owner: usize,
         }).collect();
         comm.send_elems(Dir::Prev, &x_prev)?;
         comm.send_elems(Dir::Next, &x_prev)?;
-        comm.round();
+        if count_round {
+            comm.round();
+        }
         Ok(Share {
             a: Tensor::zeros(shape),
             b: Tensor::from_vec(shape, x_next),
@@ -394,7 +414,9 @@ pub fn share_input(comm: &Comm, seeds: &PartySeeds, owner: usize,
         let mut s = PrfStream::new(&seeds.mine, cnt, domain::SHARE);
         let x_mine: Vec<Elem> = (0..n).map(|_| s.next_elem()).collect();
         let x_prev = expect_len(comm.recv_elems(Dir::Prev)?, n)?;
-        comm.round();
+        if count_round {
+            comm.round();
+        }
         Ok(Share {
             a: Tensor::from_vec(shape, x_mine),
             b: Tensor::from_vec(shape, x_prev),
@@ -402,7 +424,9 @@ pub fn share_input(comm: &Comm, seeds: &PartySeeds, owner: usize,
     } else {
         // me == owner + 2: holds (x_{me} = received, x_{me+1} = 0 (owner's))
         let x_mine = expect_len(comm.recv_elems(Dir::Next)?, n)?;
-        comm.round();
+        if count_round {
+            comm.round();
+        }
         Ok(Share {
             a: Tensor::from_vec(shape, x_mine),
             b: Tensor::zeros(shape),

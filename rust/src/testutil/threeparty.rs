@@ -22,7 +22,19 @@ where
     F: Fn(&Ctx) -> R + Send + Sync,
     R: Send,
 {
-    let comms = local_trio(NetConfig::zero());
+    run3_seeded_net(session, NetConfig::zero(), f)
+}
+
+/// `run3_seeded` over a conditioned network (see `transport::shim`):
+/// the WAN-soak tests pass a virtual-clock `NetConfig` and read each
+/// party's `Comm::virtual_now` inside the closure.
+pub fn run3_seeded_net<F, R>(session: u64, net: NetConfig, f: F)
+                             -> Vec<(R, Stats)>
+where
+    F: Fn(&Ctx) -> R + Send + Sync,
+    R: Send,
+{
+    let comms = local_trio(net);
     let f = &f;
     std::thread::scope(|scope| {
         let handles: Vec<_> = comms.into_iter().map(|c| {

@@ -41,12 +41,14 @@
 //! untouched.  This closes the queue-growth hole that permanent
 //! registration would otherwise hand a malicious peer.
 
+pub mod shim;
+
 use std::collections::{BTreeMap, VecDeque};
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError, Weak};
 use std::time::{Duration, Instant};
 
 use crate::ring::bits::BitTensor;
@@ -180,29 +182,45 @@ impl std::fmt::Display for ChanId {
     }
 }
 
-/// One-way network model.
+/// One-way network model (the link-conditioning shim; parse specs with
+/// [`shim::parse_net_spec`]).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct NetConfig {
     pub latency: Duration,
     /// Bytes per second; `f64::INFINITY` disables the bandwidth term.
     pub bandwidth: f64,
+    /// Maximum extra per-frame propagation delay, drawn deterministically
+    /// per frame (see `shim::jitter`); `ZERO` disables it.
+    pub jitter: Duration,
+    /// Deterministic virtual-clock mode: instead of sleeping, each party
+    /// advances a virtual nanosecond clock ([`Comm::virtual_now`]) by the
+    /// same latency/bandwidth/jitter model.  Tests get WAN timing
+    /// without WAN wall time.  Local links only.
+    pub virtual_clock: bool,
 }
 
 impl NetConfig {
     /// Paper LAN: 0.2 ms RTT-ish latency, 625 MBps.
     pub fn lan() -> Self {
         NetConfig { latency: Duration::from_micros(200),
-                    bandwidth: 625.0e6 }
+                    bandwidth: 625.0e6, ..NetConfig::zero() }
     }
 
     /// Paper WAN: 80 ms latency, 40 MBps.
     pub fn wan() -> Self {
-        NetConfig { latency: Duration::from_millis(80), bandwidth: 40.0e6 }
+        NetConfig { latency: Duration::from_millis(80), bandwidth: 40.0e6,
+                    ..NetConfig::zero() }
     }
 
     /// No simulation (unit tests).
     pub fn zero() -> Self {
-        NetConfig { latency: Duration::ZERO, bandwidth: f64::INFINITY }
+        NetConfig { latency: Duration::ZERO, bandwidth: f64::INFINITY,
+                    jitter: Duration::ZERO, virtual_clock: false }
+    }
+
+    /// This config with the deterministic virtual clock enabled.
+    pub fn with_virtual_clock(self) -> Self {
+        NetConfig { virtual_clock: true, ..self }
     }
 
     /// Time the link is *occupied* transmitting (serialization).
@@ -286,6 +304,11 @@ struct Msg {
     /// Tagged frame: channel byte + payload.
     body: Vec<u8>,
     arrival: Instant,
+    /// Virtual-clock arrival stamp in nanoseconds (0 in wall-clock
+    /// mode): the sender's virtual send-completion time plus latency and
+    /// jitter.  The receiver advances its own virtual clock to at least
+    /// this when it pulls the frame off the link.
+    varrival: u64,
 }
 
 enum LinkTx {
@@ -301,6 +324,12 @@ enum LinkRx {
 struct TxLane {
     link: LinkTx,
     busy: Instant,
+    /// Virtual-clock analogue of `busy`: when this direction's link
+    /// finishes serializing its last frame, in virtual nanoseconds.
+    vbusy: u64,
+    /// Frames shipped on this direction so far; seeds the deterministic
+    /// per-frame jitter draw.
+    sent_frames: u64,
 }
 
 /// One lane's parked frames on one receive direction, with their byte
@@ -362,6 +391,19 @@ struct Core {
     retired: [AtomicU64; 4],
     /// Per-lane, per-direction cap on parked frame bytes.
     parked_cap: AtomicUsize,
+    /// This party's virtual clock (nanoseconds since session start),
+    /// advanced by frame arrival stamps in virtual-clock mode.
+    vnow: AtomicU64,
+}
+
+/// Recover a mutex guard from a peer thread's panic.  Used only on
+/// counter/lifecycle state whose invariants hold field-by-field (stats,
+/// demux bookkeeping on admin paths); request-path locks map poisoning
+/// to `WireError::Closed` instead so one panicking party thread degrades
+/// into a typed wire error, not a cross-thread panic cascade.
+fn recover<T>(r: Result<MutexGuard<'_, T>, PoisonError<MutexGuard<'_, T>>>)
+              -> MutexGuard<'_, T> {
+    r.unwrap_or_else(PoisonError::into_inner)
 }
 
 fn bit_set(map: &[AtomicU64; 4], tag: usize) {
@@ -424,7 +466,7 @@ impl Core {
     /// directions.
     fn purge(&self, tag: u8) {
         for lane in &self.rx {
-            let mut st = lane.state.lock().unwrap();
+            let mut st = recover(lane.state.lock());
             st.queues.remove(&tag);
             st.poisoned.remove(&tag);
         }
@@ -455,7 +497,7 @@ impl Core {
     /// tradeoff, not a protocol one.
     fn sweep(&self, dir: usize) -> bool {
         let lane = &self.rx[dir];
-        let mut st = lane.state.lock().unwrap();
+        let mut st = recover(lane.state.lock());
         if st.reading {
             // an active reader is pumping this link; it drops retired
             // lanes' frames as it encounters them
@@ -465,15 +507,16 @@ impl Core {
         drop(st);
         let mut drained = Vec::new();
         {
-            let mut link = lane.link.lock().unwrap();
+            let mut link = recover(lane.link.lock());
             if let LinkRx::Local(rx) = &mut *link {
                 while let Ok(msg) = rx.try_recv() {
+                    self.vnow.fetch_max(msg.varrival, Ordering::SeqCst);
                     drained.push(msg.body);
                 }
             }
         }
         let cap = self.parked_cap.load(Ordering::SeqCst);
-        st = lane.state.lock().unwrap();
+        st = recover(lane.state.lock());
         for body in drained {
             if body.is_empty() {
                 continue;
@@ -588,7 +631,7 @@ impl Comm {
     /// directions (observability; bounded by `2 * parked_cap`).
     pub fn parked_bytes(&self, c: ChanId) -> usize {
         self.core.rx.iter().map(|lane| {
-            lane.state.lock().unwrap().queues.get(&c.tag())
+            recover(lane.state.lock()).queues.get(&c.tag())
                 .map_or(0, |q| q.bytes)
         }).sum()
     }
@@ -650,16 +693,37 @@ impl Comm {
     }
 
     fn ship(&self, dir: Dir, body: Vec<u8>) -> Result<(), WireError> {
-        let mut lane = self.core.tx[dir.index()].lock().unwrap();
+        // a poisoned tx lane means a sibling thread died mid-send: the
+        // stream may hold a truncated frame, so fail typed, not recover
+        let mut lane = self.core.tx[dir.index()].lock()
+            .map_err(|_| WireError::Closed)?;
+        let net = &self.core.net;
+        let jit = shim::jitter(
+            (self.id as u64) << 32 | (dir.index() as u64) << 16
+                | self.chan.tag() as u64,
+            lane.sent_frames, net.jitter);
+        lane.sent_frames += 1;
         let now = Instant::now();
-        // serialization occupies the link; propagation (latency) overlaps
-        // across back-to-back messages
-        let start = lane.busy.max(now);
-        let sent = start + self.core.net.serialize(body.len());
-        lane.busy = sent;
-        let arrival = sent + self.core.net.latency;
+        let (arrival, varrival) = if net.virtual_clock {
+            // same model, virtual time: serialization queues behind the
+            // lane's backlog, propagation (+jitter) overlaps
+            let vnow = self.core.vnow.load(Ordering::SeqCst);
+            let vstart = lane.vbusy.max(vnow);
+            let vsent = vstart
+                + net.serialize(body.len()).as_nanos() as u64;
+            lane.vbusy = vsent;
+            (now, vsent + net.latency.as_nanos() as u64
+                 + jit.as_nanos() as u64)
+        } else {
+            // serialization occupies the link; propagation (latency)
+            // overlaps across back-to-back messages
+            let start = lane.busy.max(now);
+            let sent = start + net.serialize(body.len());
+            lane.busy = sent;
+            (sent + net.latency + jit, 0)
+        };
         {
-            let mut st = self.core.stats.lock().unwrap();
+            let mut st = recover(self.core.stats.lock());
             st.bytes_sent += body.len() as u64;
             st.messages += 1;
             let c = st.chan_mut(self.chan);
@@ -667,7 +731,7 @@ impl Comm {
             c.messages += 1;
         }
         match &mut lane.link {
-            LinkTx::Local(tx) => tx.send(Msg { body, arrival })
+            LinkTx::Local(tx) => tx.send(Msg { body, arrival, varrival })
                 .map_err(|_| WireError::Closed),
             LinkTx::Tcp(s) => {
                 let len = (body.len() as u64).to_le_bytes();
@@ -691,7 +755,9 @@ impl Comm {
     fn recv_body(&self, dir: Dir) -> Result<Vec<u8>, WireError> {
         let lane = &self.core.rx[dir.index()];
         let my_tag = self.chan.tag();
-        let mut st = lane.state.lock().unwrap();
+        // a poisoned demux lock means a sibling receiver thread died
+        // mid-route; surface a typed Closed instead of cascading panics
+        let mut st = lane.state.lock().map_err(|_| WireError::Closed)?;
         loop {
             // lane lifecycle first: a retired lane's receives fail
             // `Closed` (quarantine/hot-swap cancellation), a poisoned
@@ -711,18 +777,23 @@ impl Comm {
             if st.reading {
                 // someone else is on the link; they will queue our frame
                 // (then notify) or relinquish the token
-                st = lane.cv.wait(st).unwrap();
+                st = lane.cv.wait(st).map_err(|_| WireError::Closed)?;
                 continue;
             }
             st.reading = true;
             drop(st);
             let stop = || self.core.is_retired(my_tag);
             let got = {
-                let mut link = lane.link.lock().unwrap();
+                let mut link = lane.link.lock()
+                    .map_err(|_| WireError::Closed)?;
                 read_frame(&mut link, &stop)
             };
-            st = lane.state.lock().unwrap();
-            let routed = got.and_then(|body| {
+            if let Ok((_, varrival)) = &got {
+                // virtual clock: pulling the frame observes its arrival
+                self.core.vnow.fetch_max(*varrival, Ordering::SeqCst);
+            }
+            st = lane.state.lock().map_err(|_| WireError::Closed)?;
+            let routed = got.and_then(|(body, _)| {
                 if body.is_empty() {
                     return Err(WireError::Malformed(
                         "empty frame cannot hold a channel tag".into()));
@@ -856,19 +927,29 @@ impl Comm {
     }
 
     /// Advance the round counter -- called by the protocol layer at each
-    /// communication phase boundary.  Accounted to this handle's channel.
+    /// communication phase boundary.  Accounted to this handle's channel
+    /// (the link total and the channel row move under one lock, so the
+    /// per-channel breakdown always sums to the totals, rounds included).
     pub fn round(&self) {
-        let mut st = self.core.stats.lock().unwrap();
+        let mut st = recover(self.core.stats.lock());
         st.rounds += 1;
         st.chan_mut(self.chan).rounds += 1;
     }
 
     pub fn stats(&self) -> Stats {
-        self.core.stats.lock().unwrap().clone()
+        recover(self.core.stats.lock()).clone()
     }
 
     pub fn reset_stats(&self) {
-        *self.core.stats.lock().unwrap() = Stats::default();
+        *recover(self.core.stats.lock()) = Stats::default();
+    }
+
+    /// This party's virtual clock (virtual-clock mode only; stuck at
+    /// zero otherwise).  Monotone: advanced to each pulled frame's
+    /// arrival stamp.  The difference across a protocol run is the
+    /// simulated network critical path through this party.
+    pub fn virtual_now(&self) -> Duration {
+        Duration::from_nanos(self.core.vnow.load(Ordering::SeqCst))
     }
 
     pub fn net(&self) -> NetConfig {
@@ -884,7 +965,7 @@ impl Comm {
 /// lane of the link): a reader whose own lane was retired relinquishes
 /// the token with `Closed` instead of blocking forever.
 fn read_frame(link: &mut LinkRx, stop: &dyn Fn() -> bool)
-              -> Result<Vec<u8>, WireError> {
+              -> Result<(Vec<u8>, u64), WireError> {
     match link {
         LinkRx::Local(rx) => loop {
             match rx.recv_timeout(READ_POLL) {
@@ -893,7 +974,7 @@ fn read_frame(link: &mut LinkRx, stop: &dyn Fn() -> bool)
                     if msg.arrival > now {
                         std::thread::sleep(msg.arrival - now);
                     }
-                    return Ok(msg.body);
+                    return Ok((msg.body, msg.varrival));
                 }
                 Err(RecvTimeoutError::Timeout) => {
                     if stop() {
@@ -918,7 +999,7 @@ fn read_frame(link: &mut LinkRx, stop: &dyn Fn() -> bool)
             read_full(s, &mut buf, stop, false)?;
             // latency simulation applies on the sender side only for
             // local links; real TCP has real latency.
-            Ok(buf)
+            Ok((buf, 0))
         }
     }
 }
@@ -951,7 +1032,9 @@ fn make_comm(id: usize, net: NetConfig,
              tx_next: LinkTx, tx_prev: LinkTx,
              rx_next: LinkRx, rx_prev: LinkRx) -> Comm {
     let now = Instant::now();
-    let lane_tx = |link| Mutex::new(TxLane { link, busy: now });
+    let lane_tx = |link| Mutex::new(TxLane {
+        link, busy: now, vbusy: 0, sent_frames: 0,
+    });
     let lane_rx = |link| RxLane {
         link: Mutex::new(link),
         state: Mutex::new(RxState {
@@ -971,6 +1054,7 @@ fn make_comm(id: usize, net: NetConfig,
         retired: [AtomicU64::new(0), AtomicU64::new(0),
                   AtomicU64::new(0), AtomicU64::new(0)],
         parked_cap: AtomicUsize::new(DEFAULT_PARKED_CAP),
+        vnow: AtomicU64::new(0),
     };
     // only the default-bound online lane is pre-registered (this handle
     // IS its consumer); every other channel, slot 0's offline lane
@@ -1096,6 +1180,13 @@ pub fn tcp_party(id: usize, addrs: &[String; 3], net: NetConfig)
 /// `tcp_party` with an explicit dial-retry policy.
 pub fn tcp_party_with(id: usize, addrs: &[String; 3], net: NetConfig,
                       dial: DialPolicy) -> std::io::Result<Comm> {
+    if net.virtual_clock {
+        // virtual stamps don't travel over TCP frames; a real deployment
+        // has real latency anyway
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::Unsupported,
+            "the virtual clock is for in-process (local) links only"));
+    }
     let next = (id + 1) % 3;
     let prev = (id + 2) % 3;
     let (base_host, base_port) = split_addr(&addrs[id])?;
@@ -1275,7 +1366,7 @@ mod tests {
     #[test]
     fn latency_is_simulated() {
         let net = NetConfig { latency: Duration::from_millis(20),
-                              bandwidth: f64::INFINITY };
+                              ..NetConfig::zero() };
         let t0 = Instant::now();
         run3(net, |c| {
             c.send_elems(Dir::Next, &[1]).unwrap();
@@ -1286,7 +1377,7 @@ mod tests {
 
     #[test]
     fn bandwidth_term_applies() {
-        let net = NetConfig { latency: Duration::ZERO, bandwidth: 1e6 };
+        let net = NetConfig { bandwidth: 1e6, ..NetConfig::zero() };
         let t0 = Instant::now();
         run3(net, |c| {
             // 400 KB at 1 MB/s ~ 400 ms
@@ -1295,6 +1386,130 @@ mod tests {
             let _ = c.recv_elems(Dir::Prev).unwrap();
         });
         assert!(t0.elapsed() >= Duration::from_millis(300));
+    }
+
+    #[test]
+    fn virtual_clock_advances_without_sleeping() {
+        // 20 ms one-way latency under the virtual clock: the receiver's
+        // virtual clock crosses the latency while wall time stays
+        // loopback-fast (the whole point of the deterministic shim)
+        let net = NetConfig { latency: Duration::from_millis(20),
+                              ..NetConfig::zero() }.with_virtual_clock();
+        let t0 = Instant::now();
+        let comms = local_trio(net);
+        let handles: Vec<_> = comms.into_iter().map(|c| {
+            thread::spawn(move || {
+                for _ in 0..10 {
+                    c.send_elems(Dir::Next, &[1]).unwrap();
+                    let _ = c.recv_elems(Dir::Prev).unwrap();
+                    c.round();
+                }
+                c.virtual_now()
+            })
+        }).collect();
+        for h in handles {
+            let vt = h.join().unwrap();
+            // 10 serial flights x 20 ms = 200 ms of virtual time
+            assert!(vt >= Duration::from_millis(200), "virtual {vt:?}");
+            assert!(vt < Duration::from_secs(2), "virtual {vt:?}");
+        }
+        assert!(t0.elapsed() < Duration::from_millis(150),
+                "virtual mode must not sleep ({:?})", t0.elapsed());
+    }
+
+    #[test]
+    fn virtual_clock_includes_the_bandwidth_term() {
+        // 1 MB at 1 MBps = 1 s of virtual serialization; latency zero
+        let net = NetConfig { bandwidth: 1e6, ..NetConfig::zero() }
+            .with_virtual_clock();
+        let comms = local_trio(net);
+        let handles: Vec<_> = comms.into_iter().map(|c| {
+            thread::spawn(move || {
+                let data = vec![0i32; 250_000]; // 1 MB payload
+                c.send_elems(Dir::Next, &data).unwrap();
+                let _ = c.recv_elems(Dir::Prev).unwrap();
+                c.virtual_now()
+            })
+        }).collect();
+        for h in handles {
+            let vt = h.join().unwrap();
+            assert!(vt >= Duration::from_millis(990), "virtual {vt:?}");
+        }
+    }
+
+    #[test]
+    fn virtual_clock_and_jitter_are_deterministic() {
+        let net = NetConfig { latency: Duration::from_millis(5),
+                              jitter: Duration::from_millis(2),
+                              ..NetConfig::zero() }.with_virtual_clock();
+        let run = || {
+            let comms = local_trio(net);
+            let handles: Vec<_> = comms.into_iter().map(|c| {
+                thread::spawn(move || {
+                    for i in 0..7i32 {
+                        c.send_elems(Dir::Next, &[i]).unwrap();
+                        let _ = c.recv_elems(Dir::Prev).unwrap();
+                    }
+                    c.virtual_now()
+                })
+            }).collect();
+            handles.into_iter().map(|h| h.join().unwrap())
+                .collect::<Vec<_>>()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same spec, same virtual timeline");
+        // jitter actually perturbs the timeline beyond pure latency
+        assert!(a.iter().any(|vt| *vt > Duration::from_millis(35)),
+                "jitter never drew above zero: {a:?}");
+    }
+
+    // ---- poison containment ---------------------------------------------
+
+    /// Poison `m` by panicking a thread while it holds the lock.
+    fn poison<T: Send>(m: &Mutex<T>) {
+        // the mutex lives inside an Arc'd Core that outlives the thread;
+        // scoped threads keep the borrow checker satisfied
+        std::thread::scope(|s| {
+            let h = s.spawn(|| {
+                let _g = m.lock().unwrap();
+                panic!("injected poison");
+            });
+            assert!(h.join().is_err());
+        });
+    }
+
+    #[test]
+    fn poisoned_stats_lock_recovers_instead_of_cascading() {
+        let [c0, c1, c2] = local_trio(NetConfig::zero());
+        poison(&c0.core.stats);
+        // counters stay serviceable: round/stats/reset must not panic
+        c0.round();
+        assert_eq!(c0.stats().rounds, 1);
+        c0.reset_stats();
+        assert_eq!(c0.stats().rounds, 0);
+        drop((c1, c2));
+    }
+
+    #[test]
+    fn poisoned_tx_lane_fails_closed_not_panics() {
+        let [c0, c1, c2] = local_trio(NetConfig::zero());
+        poison(&c0.core.tx[Dir::Next.index()]);
+        let err = c0.send_elems(Dir::Next, &[1]).unwrap_err();
+        assert!(matches!(err, WireError::Closed), "{err:?}");
+        // the other direction is untouched
+        c0.send_elems(Dir::Prev, &[2]).unwrap();
+        assert_eq!(c2.recv_elems(Dir::Next).unwrap(), vec![2]);
+        drop(c1);
+    }
+
+    #[test]
+    fn poisoned_demux_state_fails_closed_not_panics() {
+        let [c0, c1, c2] = local_trio(NetConfig::zero());
+        poison(&c1.core.rx[Dir::Prev.index()].state);
+        let err = c1.recv_elems(Dir::Prev).unwrap_err();
+        assert!(matches!(err, WireError::Closed), "{err:?}");
+        drop((c0, c2));
     }
 
     #[test]
@@ -1463,6 +1678,39 @@ mod tests {
             // lanes 2 and 3 (model slot 1) sent 3 and 4 messages
             assert_eq!(s.model(1).messages, 3 + 4);
             assert_eq!(s.model(1).rounds, 2);
+        }
+    }
+
+    #[test]
+    fn concurrent_lane_rounds_sum_to_link_totals() {
+        // rounds obey the same exhaustive-breakdown invariant as bytes
+        // even when two lanes' threads advance them concurrently (the
+        // total and the channel row move under one lock): the rollup
+        // regression pinned alongside per_channel_stats_sum_to_link_totals
+        let comms = local_trio(NetConfig::zero());
+        let handles: Vec<_> = comms.into_iter().map(|c| {
+            thread::spawn(move || {
+                let off = c.channel(ChanId::OFFLINE);
+                let on = c.clone();
+                let t = thread::spawn(move || {
+                    for _ in 0..500 {
+                        on.round();
+                    }
+                });
+                for _ in 0..300 {
+                    off.round();
+                }
+                t.join().unwrap();
+                c.stats()
+            })
+        }).collect();
+        for h in handles {
+            let s = h.join().unwrap();
+            assert_eq!(s.online().rounds, 500);
+            assert_eq!(s.offline().rounds, 300);
+            assert_eq!(s.rounds, 800);
+            let sum: u64 = s.channels().map(|(_, cs)| cs.rounds).sum();
+            assert_eq!(sum, s.rounds);
         }
     }
 

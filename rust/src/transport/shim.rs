@@ -1,0 +1,207 @@
+//! Link conditioning: named network profiles and custom WAN specs.
+//!
+//! Every link in this crate is already "shimmed" -- [`super::NetConfig`]
+//! models one-way latency, bandwidth serialization, and per-frame jitter
+//! on every local link, in either wall-clock mode (receives sleep; for
+//! benches) or deterministic virtual-clock mode (each party advances a
+//! virtual nanosecond clock instead; for tests -- WAN timing without WAN
+//! wall time, see [`super::Comm::virtual_now`]).  This module is the
+//! operator surface: it parses the `--net` flag grammar shared by
+//! `serve`, `infer`, and the bench harness into a `NetConfig`, and owns
+//! the deterministic jitter draw.
+//!
+//! Grammar (case-sensitive keys, case-insensitive named profiles):
+//!
+//! ```text
+//!   lan | wan | zero | none          named profiles (paper settings)
+//!   key=value[,key=value...]         custom spec
+//!       rtt=DUR      round-trip time (one-way latency = rtt/2)
+//!       lat=DUR      one-way latency (alternative to rtt)
+//!       bw=RATE      bandwidth: 40MBps, 1GBps, 625KBps, inf
+//!       jitter=DUR   max extra per-frame delay, drawn deterministically
+//!       virtual      deterministic virtual clock (no sleeping)
+//!       wall         wall-clock simulation (default)
+//!   DUR: float + ns|us|ms|s          e.g. 40ms, 1.5s, 200us
+//! ```
+//!
+//! Examples: `--net wan`, `--net rtt=40ms,bw=40MBps`,
+//! `--net rtt=40ms,jitter=1ms,virtual`.
+
+use std::time::Duration;
+
+use super::NetConfig;
+
+/// Parse a `--net` network spec (see the module docs for the grammar).
+pub fn parse_net_spec(s: &str) -> Result<NetConfig, String> {
+    match s.to_ascii_lowercase().as_str() {
+        "lan" => return Ok(NetConfig::lan()),
+        "wan" => return Ok(NetConfig::wan()),
+        "zero" | "none" => return Ok(NetConfig::zero()),
+        _ => {}
+    }
+    if !s.contains('=') && s != "virtual" && s != "wall" {
+        return Err(format!(
+            "unknown network spec '{s}': expected lan|wan|zero|none or a \
+             custom spec like rtt=40ms,bw=40MBps,jitter=1ms[,virtual]"));
+    }
+    let mut net = NetConfig::zero();
+    for field in s.split(',') {
+        let field = field.trim();
+        match field.split_once('=') {
+            None => match field {
+                "virtual" => net.virtual_clock = true,
+                "wall" => net.virtual_clock = false,
+                _ => return Err(format!(
+                    "unknown network spec field '{field}' (expected \
+                     rtt=, lat=, bw=, jitter=, virtual, or wall)")),
+            },
+            Some(("rtt", v)) => net.latency = parse_duration(v)? / 2,
+            Some(("lat", v)) => net.latency = parse_duration(v)?,
+            Some(("bw", v)) => net.bandwidth = parse_bandwidth(v)?,
+            Some(("jitter", v)) => net.jitter = parse_duration(v)?,
+            Some((k, _)) => return Err(format!(
+                "unknown network spec key '{k}' (expected rtt, lat, bw, \
+                 or jitter)")),
+        }
+    }
+    Ok(net)
+}
+
+/// Parse a duration literal: float value + ns/us/ms/s suffix (bare `0`
+/// is accepted).
+pub fn parse_duration(s: &str) -> Result<Duration, String> {
+    if s == "0" {
+        return Ok(Duration::ZERO);
+    }
+    let (num, scale) = if let Some(v) = s.strip_suffix("ns") {
+        (v, 1e-9)
+    } else if let Some(v) = s.strip_suffix("us") {
+        (v, 1e-6)
+    } else if let Some(v) = s.strip_suffix("ms") {
+        (v, 1e-3)
+    } else if let Some(v) = s.strip_suffix('s') {
+        (v, 1.0)
+    } else {
+        return Err(format!(
+            "duration '{s}' needs a ns/us/ms/s suffix (e.g. 40ms)"));
+    };
+    let v: f64 = num.parse().map_err(|_| {
+        format!("bad duration value '{num}' in '{s}'")
+    })?;
+    if !(v >= 0.0) || !v.is_finite() {
+        return Err(format!("duration '{s}' must be finite and >= 0"));
+    }
+    Ok(Duration::from_secs_f64(v * scale))
+}
+
+/// Parse a bandwidth literal: float value + Bps/KBps/MBps/GBps suffix,
+/// or `inf` for an unconstrained link.
+pub fn parse_bandwidth(s: &str) -> Result<f64, String> {
+    if s.eq_ignore_ascii_case("inf") {
+        return Ok(f64::INFINITY);
+    }
+    let (num, scale) = if let Some(v) = s.strip_suffix("GBps") {
+        (v, 1e9)
+    } else if let Some(v) = s.strip_suffix("MBps") {
+        (v, 1e6)
+    } else if let Some(v) = s.strip_suffix("KBps") {
+        (v, 1e3)
+    } else if let Some(v) = s.strip_suffix("Bps") {
+        (v, 1.0)
+    } else {
+        return Err(format!(
+            "bandwidth '{s}' needs a Bps/KBps/MBps/GBps suffix or 'inf'"));
+    };
+    let v: f64 = num.parse().map_err(|_| {
+        format!("bad bandwidth value '{num}' in '{s}'")
+    })?;
+    if !(v > 0.0) || !v.is_finite() {
+        return Err(format!("bandwidth '{s}' must be finite and > 0"));
+    }
+    Ok(v * scale)
+}
+
+/// Deterministic per-frame jitter draw in `[0, max]`: a splitmix64 hash
+/// of the lane identity and the lane's frame counter, so every run of
+/// the same spec produces the same timeline (virtual-clock tests stay
+/// reproducible) while frames still spread across the jitter window.
+pub(crate) fn jitter(lane_seed: u64, frame: u64, max: Duration)
+                     -> Duration {
+    if max.is_zero() {
+        return Duration::ZERO;
+    }
+    let h = splitmix64(lane_seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                       ^ frame);
+    Duration::from_nanos(h % (max.as_nanos() as u64 + 1))
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn named_profiles_parse() {
+        assert_eq!(parse_net_spec("lan").unwrap(), NetConfig::lan());
+        assert_eq!(parse_net_spec("wan").unwrap(), NetConfig::wan());
+        assert_eq!(parse_net_spec("WAN").unwrap(), NetConfig::wan());
+        assert_eq!(parse_net_spec("zero").unwrap(), NetConfig::zero());
+        assert_eq!(parse_net_spec("none").unwrap(), NetConfig::zero());
+    }
+
+    #[test]
+    fn custom_specs_parse() {
+        let net = parse_net_spec("rtt=40ms,bw=40MBps,jitter=1ms,virtual")
+            .unwrap();
+        assert_eq!(net.latency, Duration::from_millis(20));
+        assert_eq!(net.bandwidth, 40.0e6);
+        assert_eq!(net.jitter, Duration::from_millis(1));
+        assert!(net.virtual_clock);
+
+        let net = parse_net_spec("lat=5ms").unwrap();
+        assert_eq!(net.latency, Duration::from_millis(5));
+        assert_eq!(net.bandwidth, f64::INFINITY);
+        assert!(!net.virtual_clock);
+
+        let net = parse_net_spec("rtt=1.5s,bw=inf").unwrap();
+        assert_eq!(net.latency, Duration::from_millis(750));
+
+        let net = parse_net_spec("lat=200us,bw=625KBps").unwrap();
+        assert_eq!(net.latency, Duration::from_micros(200));
+        assert_eq!(net.bandwidth, 625.0e3);
+    }
+
+    #[test]
+    fn bad_specs_are_errors() {
+        assert!(parse_net_spec("dsl").is_err());
+        assert!(parse_net_spec("rtt=40").is_err()); // missing unit
+        assert!(parse_net_spec("rtt=-4ms").is_err());
+        assert!(parse_net_spec("bw=0MBps").is_err());
+        assert!(parse_net_spec("speed=1MBps").is_err());
+        assert!(parse_net_spec("rtt=40ms,warp").is_err());
+        assert!(parse_net_spec("").is_err());
+    }
+
+    #[test]
+    fn jitter_is_deterministic_and_bounded() {
+        let max = Duration::from_millis(3);
+        for lane in 0..4u64 {
+            for frame in 0..100u64 {
+                let a = jitter(lane, frame, max);
+                let b = jitter(lane, frame, max);
+                assert_eq!(a, b);
+                assert!(a <= max);
+            }
+        }
+        // not constant across frames
+        let draws: Vec<_> = (0..50).map(|f| jitter(1, f, max)).collect();
+        assert!(draws.windows(2).any(|w| w[0] != w[1]));
+        assert_eq!(jitter(1, 1, Duration::ZERO), Duration::ZERO);
+    }
+}

@@ -95,6 +95,35 @@ fn design_documents_binary_domain_fusion() {
 }
 
 #[test]
+fn design_has_the_normative_round_budget_table() {
+    // ISSUE 7: the "Round budgets" section is the normative table that
+    // tests/budgets.rs parses and asserts -- gate its machine-readable
+    // shape (backticked keys) and the pointer to the executing test so
+    // neither can silently rot
+    let design = repo_doc("DESIGN.md");
+    for needle in ["## Round budgets", "normative", "budgets.rs",
+                   "`msb_online`", "`relu_op`", "`b2a_boundary`",
+                   "`or_pool_k2`", "`mint`", "max-party",
+                   "wan_soak.rs", "virtual_now"] {
+        assert!(design.contains(needle),
+                "DESIGN.md round-budget section misses {needle}");
+    }
+}
+
+#[test]
+fn operations_documents_the_net_spec_grammar_and_wan_tuning() {
+    // ISSUE 7: --net grew a custom-spec grammar and a virtual clock;
+    // the operator doc must show the grammar and a WAN-tuning section
+    let ops = repo_doc("OPERATIONS.md");
+    for needle in ["rtt=", "lat=", "bw=", "jitter=", "`virtual`",
+                   "`wall`", "WAN tuning", "BENCH_wan.json",
+                   "rtt=40ms,bw=40MBps"] {
+        assert!(ops.contains(needle),
+                "OPERATIONS.md --net / WAN-tuning docs miss {needle}");
+    }
+}
+
+#[test]
 fn readme_maps_paper_sections_to_modules() {
     let readme = repo_doc("README.md");
     for needle in ["transport", "protocols", "coordinator", "offline",

@@ -1,0 +1,178 @@
+//! Virtual-clock WAN soak (ISSUE 7): run real inferences through the
+//! latency shim at `rtt=40ms` in virtual-clock mode and assert the
+//! end-to-end latency the clock reports is explained by the round
+//! counts -- at most `rounds x RTT x 1.25` on the critical path (each
+//! round costs one one-way hop, so this leaves ~2.5x headroom), and at
+//! least enough that the shim demonstrably priced every flight.  The
+//! tests complete in milliseconds of wall time: nobody sleeps, the
+//! clock is data-flow time carried on the frames.
+//!
+//! `tests/budgets.rs` pins the per-op round counts against DESIGN.md;
+//! this file pins that those rounds are what latency is made of.
+
+use std::time::Duration;
+
+use cbnn::engine::fusion::{infer_batch_fused, plan_fused};
+use cbnn::engine::{infer_batch_pooled, msb_demand, share_model,
+                   EngineOptions};
+use cbnn::nn::Model;
+use cbnn::offline::TupleSource;
+use cbnn::protocols::linear::NativeBackend;
+use cbnn::protocols::preproc::MsbPool;
+use cbnn::ring::Tensor;
+use cbnn::testutil::threeparty::{every_op_model, run3_seeded_net};
+use cbnn::testutil::Rng;
+use cbnn::transport::shim::parse_net_spec;
+use cbnn::transport::NetConfig;
+
+const RTT: Duration = Duration::from_millis(40);
+
+fn wan() -> NetConfig {
+    let net = parse_net_spec("rtt=40ms,virtual")
+        .expect("the soak spec must parse");
+    assert!(net.virtual_clock, "soak must not sleep for real");
+    assert_eq!(net.latency, RTT / 2);
+    net
+}
+
+/// Measured (virtual elapsed, online rounds) of one inference per
+/// party, pool warmed outside the window.
+fn soak(model: &Model, fuse: bool, flat: usize, seed: u64)
+        -> Vec<(Duration, u64)> {
+    let batch = 2usize;
+    let plan = fuse.then(|| plan_fused(model).expect("model must lower"));
+    let results = run3_seeded_net(seed, wan(), |ctx| {
+        let shared = share_model(ctx, model, true).unwrap();
+        let demand = match &plan {
+            Some(p) => p.msb_demand(batch),
+            None => msb_demand(&shared, batch),
+        };
+        let inputs: Vec<Tensor> = if ctx.id() == 0 {
+            let mut rng = Rng::new(seed ^ 0x50AC);
+            (0..batch).map(|_| rng.tensor_small(&[1, flat], 15)).collect()
+        } else {
+            vec![]
+        };
+        let pool = MsbPool::new();
+        pool.generate(ctx, demand).unwrap();
+        let src = TupleSource::Pool(&pool);
+        let t0 = ctx.comm.virtual_now();
+        let r0 = ctx.comm.stats().rounds;
+        let out = match &plan {
+            Some(p) => infer_batch_fused(
+                ctx, &shared, p, &NativeBackend, EngineOptions::default(),
+                &inputs, batch, &src).unwrap(),
+            None => infer_batch_pooled(
+                ctx, &shared, &NativeBackend, EngineOptions::default(),
+                &inputs, batch, &src).unwrap(),
+        };
+        if ctx.id() == 0 {
+            assert!(!out.logits.is_empty(), "soak inference returned \
+                     nothing to the data owner");
+        }
+        (ctx.comm.virtual_now() - t0, ctx.comm.stats().rounds - r0)
+    });
+    results.into_iter().map(|(r, _)| r).collect()
+}
+
+/// Critical-path latency must be explained by the rounds: bounded above
+/// by `rounds x RTT x 1.25` and below by a quarter of one hop per round
+/// (proves the shim priced the flights -- a zero-latency bug fails).
+fn assert_latency_tracks_rounds(parties: &[(Duration, u64)]) {
+    let elapsed = parties.iter().map(|p| p.0).max().unwrap();
+    let rounds = parties.iter().map(|p| p.1).max().unwrap();
+    assert!(rounds > 0, "no rounds measured; the soak is vacuous");
+    let budget = RTT.mul_f64(rounds as f64 * 1.25);
+    assert!(elapsed <= budget,
+            "WAN latency {elapsed:?} exceeds {rounds} rounds x 40ms RTT \
+             x 1.25 = {budget:?}: a flight is not coalesced or a round \
+             snuck in");
+    let floor = (RTT / 2).mul_f64(rounds as f64 * 0.25);
+    assert!(elapsed >= floor,
+            "WAN latency {elapsed:?} under {floor:?} for {rounds} \
+             rounds: the shim stopped pricing flights");
+    assert!(elapsed >= 2 * RTT,
+            "an inference cannot finish inside {elapsed:?} over a real \
+             40ms-RTT link");
+}
+
+#[test]
+fn every_op_wan_latency_tracks_round_budget() {
+    let model = every_op_model();
+    let parties = soak(&model, false, 36, 0x3A11);
+    // end-to-end pin of the DESIGN.md budget composition: share_input
+    // (1) + [linear 1, msb_online 2, msb_online 2, pm1 0, linear 1,
+    // flatten 0, linear 1, relu_op 10] on the relu critical-path party
+    // (P2, which skips the reveal) = 18
+    let rounds = parties.iter().map(|p| p.1).max().unwrap();
+    assert_eq!(rounds, 18,
+               "every-op pooled walk must cost exactly 18 critical-path \
+                rounds (see DESIGN.md 'Round budgets')");
+    assert_latency_tracks_rounds(&parties);
+}
+
+#[test]
+fn every_op_fused_wan_latency_tracks_rounds() {
+    let model = every_op_model();
+    assert_latency_tracks_rounds(&soak(&model, true, 36, 0x3A12));
+}
+
+#[test]
+fn fused_bnn_chain_wan_latency_tracks_rounds() {
+    // the acceptance soak: the fully fused binary chain (conv -> sign
+    // -> OR-pool -> pm1 -> +-1 depthwise + folded sign -> pm1 ->
+    // flatten -> +-1 FC) under 40ms RTT; BinLinear rounds are
+    // geometry-dependent (CSA levels + Kogge-Stone + b2a), so the
+    // budget is the measured critical path, priced by the clock
+    let model = bnn_chain_model();
+    assert_latency_tracks_rounds(&soak(&model, true, 144, 0x3A13));
+}
+
+#[test]
+fn unfused_bnn_chain_wan_latency_tracks_rounds() {
+    let model = bnn_chain_model();
+    assert_latency_tracks_rounds(&soak(&model, false, 144, 0x3A14));
+}
+
+/// Same chain `tests/properties.rs` proves bit-identical fused vs
+/// unfused; here it is the WAN soak workload.
+fn bnn_chain_model() -> Model {
+    let manifest = r#"{
+      "name": "bnnchain", "dataset": "synthetic",
+      "input": {"c": 1, "h": 12, "w": 12},
+      "s_in": 0, "ring_bits": 32,
+      "layers": [
+        {"op": "matmul", "conv": true, "m": 4, "kdim": 9, "n": 100,
+         "k": 3, "stride": 1, "pad_lo": 0, "pad_hi": 0, "cout": 4,
+         "w": {"off": 0, "len": 36}, "b": {"off": 36, "len": 4},
+         "s_in": 0, "s_out": 0},
+        {"op": "sign", "c": 4, "t": {"off": 40, "len": 4},
+         "flip": {"off": 44, "len": 4}},
+        {"op": "pool_bits", "c": 4, "k": 2, "stride": 2},
+        {"op": "pm1"},
+        {"op": "depthwise", "cout": 4, "k": 1, "stride": 1,
+         "pad_lo": 0, "pad_hi": 0, "w": {"off": 48, "len": 4},
+         "s_in": 0, "s_out": 0},
+        {"op": "sign", "c": 4, "t": {"off": 52, "len": 4},
+         "flip": {"off": 56, "len": 4}},
+        {"op": "pm1"},
+        {"op": "flatten", "c": 4, "h": 5, "w": 5},
+        {"op": "matmul", "conv": false, "m": 3, "kdim": 100, "n": 1,
+         "w": {"off": 60, "len": 300}, "s_in": 0, "s_out": 0}
+      ]
+    }"#;
+    let mut pool = vec![0i32; 360];
+    for (i, v) in pool.iter_mut().enumerate().take(36) {
+        *v = (i as i32 % 5) - 2;
+    }
+    pool[36..40].copy_from_slice(&[1, -1, 2, 0]);
+    pool[40..44].copy_from_slice(&[0, 1, -1, 2]);
+    pool[44..48].copy_from_slice(&[1, -1, 2, -2]);
+    pool[48..52].copy_from_slice(&[1, -1, 1, -1]);
+    pool[52..56].copy_from_slice(&[1, 3, -2, 0]);
+    pool[56..60].copy_from_slice(&[2, -1, 1, -3]);
+    for (i, v) in pool.iter_mut().enumerate().skip(60) {
+        *v = if (i + i / 7) % 2 == 0 { 1 } else { -1 };
+    }
+    Model::from_json(manifest, pool).unwrap()
+}
