@@ -20,11 +20,16 @@
 //!      critical-path round count, so a round added anywhere changes
 //!      the row key and the bench gate fails alongside
 //!      `tests/budgets.rs`.
+//!   7. (obs) traced vs untraced end-to-end inference: the telemetry
+//!      spine's overhead when recording every span, plus the
+//!      deterministic per-party span and send-flight counts (exact-gate
+//!      rows: a count that moved is a choreography change, caught here
+//!      alongside `tests/trace.rs`).
 //!
 //! Results are printed as a table and recorded to `BENCH_bitops.json`
 //! (tiers 1-3), `BENCH_offline.json` (tier 4), `BENCH_fusion.json`
-//! (tier 5) and `BENCH_wan.json` (tier 6) at the workspace root so the
-//! bench trajectory is diffable.
+//! (tier 5), `BENCH_wan.json` (tier 6) and `BENCH_obs.json` (tier 7)
+//! at the workspace root so the bench trajectory is diffable.
 //!
 //!   cargo bench --bench bitops
 
@@ -557,6 +562,77 @@ fn wan_tier(rows: &mut Vec<Row>) {
     println!();
 }
 
+/// Tier 7: the telemetry spine's cost.  The same every-op three-party
+/// session runs untraced (sinks installed but disabled -- the
+/// production default, one relaxed atomic load per potential span) and
+/// traced (every request/op/protocol/flight span recorded), unfused
+/// and fused.  Latency rows carry traced as the baseline arm and
+/// untraced as the gated arm; the `obs_spans_bytes` rows record party
+/// 0's lock-step span count and send-flight count, which are
+/// deterministic per walk -- CI gates them exactly, so a span or
+/// flight added anywhere in the choreography fails the bench together
+/// with `tests/trace.rs`.
+fn obs_tier(rows: &mut Vec<Row>) {
+    use cbnn::engine::session::{run_inference, SessionConfig};
+    use cbnn::testutil::threeparty::every_op_model;
+    use cbnn::trace::SpanKind;
+
+    println!("== tier 7: traced vs untraced inference ==\n");
+    println!("{:<18} {:<8} {:>12} {:>12} {:>9}",
+             "walk", "batch", "traced(ms)", "off(ms)", "overhead");
+    println!("{}", "-".repeat(62));
+
+    let model = every_op_model();
+    let batch = 2usize;
+    let inputs = |seed: u64| -> Vec<Tensor> {
+        let mut rng = Rng::new(seed);
+        (0..batch).map(|_| rng.tensor_small(&[1, 36], 15)).collect()
+    };
+
+    for fuse in [false, true] {
+        let label = if fuse { "everyop-fused" } else { "everyop-unfused" };
+        let reps = 7usize;
+        let mut cfg = SessionConfig::new("artifacts/hlo");
+        cfg.opts.fuse = fuse;
+        let t_off = time(reps, || {
+            black_box(run_inference(&model, inputs(70), &cfg).unwrap());
+        });
+        cfg.trace = true;
+        let t_on = time(reps, || {
+            black_box(run_inference(&model, inputs(70), &cfg).unwrap());
+        });
+        println!("{:<18} {:<8} {:>12.3} {:>12.3} {:>8.2}x",
+                 label, batch, t_on * 1e3, t_off * 1e3, t_on / t_off);
+        rows.push(Row { section: "traced_vs_untraced", op: label.into(),
+                        n: batch, baseline_ms: t_on * 1e3,
+                        fast_ms: t_off * 1e3 });
+
+        // deterministic structure rows: party 0's span counts
+        let rep = run_inference(&model, inputs(70), &cfg).unwrap();
+        let spans = &rep.traces[0];
+        let lockstep = spans.iter()
+            .filter(|s| matches!(s.kind, SpanKind::Request | SpanKind::Op
+                                 | SpanKind::Protocol))
+            .count();
+        let flights = spans.iter()
+            .filter(|s| s.kind == SpanKind::Flight
+                    && s.label.as_str() == "send")
+            .count();
+        println!("{:<18} {:<8} {:>11} lock-step span(s), {} send \
+                  flight(s)",
+                 "", "", lockstep, flights);
+        rows.push(Row { section: "obs_spans_bytes",
+                        op: format!("lockstep-{label}"), n: batch,
+                        baseline_ms: lockstep as f64,
+                        fast_ms: lockstep as f64 });
+        rows.push(Row { section: "obs_spans_bytes",
+                        op: format!("flights-{label}"), n: batch,
+                        baseline_ms: flights as f64,
+                        fast_ms: flights as f64 });
+        println!();
+    }
+}
+
 fn write_json(file: &str, bench: &str, acceptance: &[(&str, &str)],
               rows: &[Row]) {
     let mut s = String::from("{\n");
@@ -603,11 +679,14 @@ fn main() {
     fusion_tier(&mut fusion_rows);
     let mut wan_rows = Vec::new();
     wan_tier(&mut wan_rows);
+    let mut obs_rows = Vec::new();
+    obs_tier(&mut obs_rows);
     println!("(acceptance: packed XOR/AND >= 8x byte-per-bit; strided \
               Kogge-Stone levels >= 2x concat; warm-bank online MSB \
               >= 2x inline generation; fused hidden segment >= 8x fewer \
               bytes than the arithmetic walk; WAN virtual latency <= \
-              critical-path rounds x RTT x 1.25)");
+              critical-path rounds x RTT x 1.25; tracing overhead a \
+              small constant factor, span counts deterministic)");
     write_json("BENCH_bitops.json", "bitops",
                &[("byte_vs_packed", "xor/and speedup >= 8x"),
                  ("ks_concat_vs_strided", "ks-5lvl speedup >= 2x")],
@@ -628,4 +707,14 @@ fn main() {
                    rounds x 160ms RTT x 1.25; the n column pins the \
                    round count")],
                &wan_rows);
+    write_json("BENCH_obs.json", "obs",
+               &[("traced_vs_untraced",
+                  "full tracing stays a small constant factor over the \
+                   untraced walk; tracing off costs one atomic load per \
+                   potential span"),
+                 ("obs_spans_bytes",
+                  "per-party lock-step span and send-flight counts are \
+                   deterministic per walk; any drift is a choreography \
+                   change")],
+               &obs_rows);
 }

@@ -1,0 +1,336 @@
+#!/usr/bin/env python3
+"""Cross-party trace validation (stdlib only, mirrors trace::merge).
+
+Usage:
+    python3 ci/trace_check.py DIR          # validate an exported trace
+    python3 ci/trace_check.py --self-test  # run the built-in fixtures
+
+DIR must hold the files `cbnn serve --trace-out DIR` writes:
+trace-p{0,1,2}.jsonl (one span per line) and stats-p{0,1,2}.json (the
+per-party transport::Stats sidecar).  The checks are the same ones
+`cbnn trace DIR` runs via rust/src/trace/merge.rs:
+
+  1. every span line carries the full schema with sane types;
+  2. the lock-step kinds (request/op/protocol) join rank-to-rank
+     within each (trace_id, kind) group: span counts, labels, and
+     round counts must agree across all three parties;
+  3. each party's summed `send`-flight bytes per channel equal the
+     sidecar's per-channel bytes_sent rows exactly (skipped for a
+     party whose sink overflowed: a partial trace cannot sum to
+     lifetime totals).
+
+Exit status 0 = consistent, 1 = problems found (all printed).
+"""
+
+import json
+import os
+import sys
+
+PARTIES = 3
+LOCKSTEP = ("request", "op", "protocol")
+KINDS = LOCKSTEP + ("flight", "gauge")
+SPAN_FIELDS = {
+    "trace_id": int,
+    "kind": str,
+    "party": int,
+    "chan": int,
+    "index": int,
+    "label": str,
+    "wall_start_us": int,
+    "wall_end_us": int,
+    "virt_start_ns": int,
+    "virt_end_ns": int,
+    "rounds": int,
+    "bytes_sent": int,
+    "value": int,
+}
+SIDECAR_FIELDS = {
+    "party": int,
+    "dropped_events": int,
+    "bytes_sent": int,
+    "messages": int,
+    "rounds": int,
+    "channels": list,
+}
+
+
+def load_spans(path, party, problems):
+    """Parse one party's JSONL, schema-checking every line."""
+    spans = []
+    with open(path, encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, 1):
+            line = line.strip()
+            if not line:
+                continue
+            where = "%s:%d" % (os.path.basename(path), lineno)
+            try:
+                span = json.loads(line)
+            except ValueError as exc:
+                problems.append("%s: bad JSON: %s" % (where, exc))
+                continue
+            bad = False
+            for key, typ in SPAN_FIELDS.items():
+                val = span.get(key)
+                if not isinstance(val, typ) or (typ is int and val < 0):
+                    problems.append(
+                        "%s: field '%s' missing or not a %s"
+                        % (where, key, typ.__name__))
+                    bad = True
+            if bad:
+                continue
+            if span["kind"] not in KINDS:
+                problems.append(
+                    "%s: unknown kind '%s'" % (where, span["kind"]))
+                continue
+            if span["party"] != party:
+                problems.append(
+                    "%s: span says party %d in party %d's file"
+                    % (where, span["party"], party))
+                continue
+            spans.append(span)
+    return spans
+
+
+def load_sidecar(path, party, problems):
+    """Parse one party's stats sidecar; None if it is unusable."""
+    name = os.path.basename(path)
+    with open(path, encoding="utf-8") as fh:
+        try:
+            side = json.load(fh)
+        except ValueError as exc:
+            problems.append("%s: bad JSON: %s" % (name, exc))
+            return None
+    for key, typ in SIDECAR_FIELDS.items():
+        if not isinstance(side.get(key), typ):
+            problems.append(
+                "%s: field '%s' missing or not a %s"
+                % (name, key, typ.__name__))
+            return None
+    if side["party"] != party:
+        problems.append(
+            "%s: sidecar says party %d, expected %d"
+            % (name, side["party"], party))
+        return None
+    chan_bytes = {}
+    for row in side["channels"]:
+        if not isinstance(row.get("chan"), int) \
+                or not isinstance(row.get("bytes_sent"), int):
+            problems.append("%s: malformed channel row %r" % (name, row))
+            return None
+        chan_bytes[row["chan"]] = row["bytes_sent"]
+    side["chan_bytes"] = chan_bytes
+    return side
+
+
+def group(spans, kind):
+    """trace_id -> that trace's spans of `kind`, in record order."""
+    out = {}
+    for span in spans:
+        if span["kind"] == kind:
+            out.setdefault(span["trace_id"], []).append(span)
+    return out
+
+
+def merge_check(parties):
+    """The lock-step join: counts, labels, rounds (merge.rs mirror)."""
+    problems = []
+    joined = 0
+    for kind in LOCKSTEP:
+        grouped = [group(spans, kind) for spans in parties]
+        ids = sorted(set().union(*(g.keys() for g in grouped)))
+        for tid in ids:
+            lists = [g.get(tid, []) for g in grouped]
+            counts = [len(lst) for lst in lists]
+            if len(set(counts)) > 1:
+                problems.append(
+                    "trace %d: %s span counts differ across parties: %s"
+                    % (tid, kind, counts))
+                continue
+            for k in range(counts[0]):
+                first = lists[0][k]
+                for party in range(1, PARTIES):
+                    span = lists[party][k]
+                    if span["label"] != first["label"]:
+                        problems.append(
+                            "trace %d: %s span %d: label '%s' on party "
+                            "0 vs '%s' on party %d"
+                            % (tid, kind, k, first["label"],
+                               span["label"], party))
+                    elif span["rounds"] != first["rounds"]:
+                        problems.append(
+                            "trace %d: %s span %d ('%s'): %d rounds on "
+                            "party 0 vs %d on party %d"
+                            % (tid, kind, k, first["label"],
+                               first["rounds"], span["rounds"], party))
+                joined += 1
+    return joined, problems
+
+
+def check_flights(party, spans, chan_bytes):
+    """Exact per-channel send-flight byte reconciliation."""
+    problems = []
+    traced = {}
+    for span in spans:
+        if span["kind"] == "flight" and span["label"] == "send":
+            traced[span["chan"]] = \
+                traced.get(span["chan"], 0) + span["bytes_sent"]
+    expected = {c: b for c, b in chan_bytes.items() if b > 0}
+    for tag in sorted(set(traced) | set(expected)):
+        got = traced.get(tag, 0)
+        want = expected.get(tag, 0)
+        if got != want:
+            problems.append(
+                "party %d chan %d: traced %d bytes but "
+                "transport::Stats says %d" % (party, tag, got, want))
+    return problems
+
+
+def check_dir(trace_dir):
+    problems = []
+    parties = []
+    sidecars = []
+    for party in range(PARTIES):
+        trace = os.path.join(trace_dir, "trace-p%d.jsonl" % party)
+        stats = os.path.join(trace_dir, "stats-p%d.json" % party)
+        for path in (trace, stats):
+            if not os.path.isfile(path):
+                print("trace_check: missing %s" % path)
+                return 1
+        parties.append(load_spans(trace, party, problems))
+        sidecars.append(load_sidecar(stats, party, problems))
+
+    joined, merge_problems = merge_check(parties)
+    problems.extend(merge_problems)
+
+    for party in range(PARTIES):
+        side = sidecars[party]
+        if side is None:
+            continue
+        if side["dropped_events"] > 0:
+            print("trace_check: party %d dropped %d span(s) -- byte "
+                  "reconciliation skipped (partial trace)"
+                  % (party, side["dropped_events"]))
+            continue
+        problems.extend(
+            check_flights(party, parties[party], side["chan_bytes"]))
+
+    traces = sorted({s["trace_id"]
+                     for spans in parties for s in spans
+                     if s["trace_id"] != 0})
+    print("trace_check: %d trace(s), %d joined lock-step span(s), "
+          "%d span(s) total"
+          % (len(traces), joined, sum(len(p) for p in parties)))
+    for problem in problems:
+        print("trace_check: PROBLEM: %s" % problem)
+    if problems:
+        print("trace_check: FAIL -- %d problem(s)" % len(problems))
+        return 1
+    print("trace_check: OK -- rounds agree on every joined span, "
+          "flight bytes reconcile with link stats")
+    return 0
+
+
+# -- self-test fixtures ---------------------------------------------------
+
+def _span(party, trace_id, kind, label, rounds=0, chan=0,
+          bytes_sent=0):
+    return {
+        "trace_id": trace_id, "kind": kind, "party": party,
+        "chan": chan, "index": 0, "label": label,
+        "wall_start_us": 0, "wall_end_us": 1,
+        "virt_start_ns": 0, "virt_end_ns": 0,
+        "rounds": rounds, "bytes_sent": bytes_sent, "value": 0,
+    }
+
+
+def _write_fixture(trace_dir, mutate=None, dropped=(0, 0, 0)):
+    os.makedirs(trace_dir, exist_ok=True)
+    for party in range(PARTIES):
+        spans = [
+            _span(party, 1, "request", "everyop", rounds=8),
+            _span(party, 1, "op", "sign", rounds=2),
+            _span(party, 1, "protocol", "msb", rounds=2),
+            _span(party, 1, "flight", "send", chan=0, bytes_sent=64),
+            _span(party, 1, "flight", "send", chan=0, bytes_sent=36),
+            _span(party, 1, "flight", "recv", chan=0, bytes_sent=999),
+        ]
+        if mutate:
+            mutate(party, spans)
+        with open(os.path.join(trace_dir, "trace-p%d.jsonl" % party),
+                  "w", encoding="utf-8") as fh:
+            for span in spans:
+                fh.write(json.dumps(span) + "\n")
+        side = {
+            "party": party, "dropped_events": dropped[party],
+            "bytes_sent": 100, "messages": 2, "rounds": 2,
+            "channels": [{"chan": 0, "bytes_sent": 100,
+                          "messages": 2, "rounds": 2}],
+        }
+        with open(os.path.join(trace_dir, "stats-p%d.json" % party),
+                  "w", encoding="utf-8") as fh:
+            json.dump(side, fh)
+            fh.write("\n")
+
+
+def self_test():
+    import shutil
+    import tempfile
+
+    root = tempfile.mkdtemp(prefix="trace_check_")
+    failures = []
+
+    def case(name, want, mutate=None, dropped=(0, 0, 0)):
+        trace_dir = os.path.join(root, name)
+        _write_fixture(trace_dir, mutate=mutate, dropped=dropped)
+        got = check_dir(trace_dir)
+        status = "ok" if got == want else "FAIL"
+        print("self-test %-24s exit %d (want %d) .. %s"
+              % (name, got, want, status))
+        if got != want:
+            failures.append(name)
+
+    case("clean", 0)
+
+    def desync(party, spans):
+        if party == 2:
+            spans[2]["rounds"] = 3  # protocol round diverges
+    case("round-disagreement", 1, mutate=desync)
+
+    def extra_op(party, spans):
+        if party == 1:
+            spans.insert(2, _span(party, 1, "op", "b2a", rounds=1))
+    case("count-mismatch", 1, mutate=extra_op)
+
+    def relabel(party, spans):
+        if party == 0:
+            spans[1]["label"] = "pool_bits"
+    case("label-mismatch", 1, mutate=relabel)
+
+    def short_flight(party, spans):
+        if party == 1:
+            spans[4]["bytes_sent"] = 35  # 99 traced vs 100 in stats
+    case("byte-mismatch", 1, mutate=short_flight)
+
+    # an overflowed sink skips the byte check instead of failing it
+    case("overflow-skips-bytes", 0, mutate=short_flight,
+         dropped=(0, 7, 0))
+
+    shutil.rmtree(root, ignore_errors=True)
+    if failures:
+        print("self-test FAILED: %s" % ", ".join(failures))
+        return 1
+    print("self-test OK")
+    return 0
+
+
+def main(argv):
+    if len(argv) != 2:
+        print(__doc__.strip())
+        return 2
+    if argv[1] == "--self-test":
+        return self_test()
+    return check_dir(argv[1])
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -20,6 +20,7 @@ pub const SERVE_FLAGS: &[&str] = &[
     "model", "artifacts", "net", "backend", "batch", "requests",
     "prefetch", "bank-low", "bank-high", "bank-chunk", "bank-capacity",
     "max-parked-bytes", "admin", "fuse", "max-infer-errors",
+    "trace-out", "metrics-out",
 ];
 
 /// Resolve an `on|off` toggle flag (`--fuse on`); absent -> `default`.

@@ -86,7 +86,14 @@ fn recover<T>(r: Result<MutexGuard<'_, T>, PoisonError<MutexGuard<'_, T>>>)
 }
 
 enum Job {
-    Infer { inputs: Vec<Tensor>, batch: usize },
+    Infer {
+        inputs: Vec<Tensor>,
+        batch: usize,
+        /// The request's trace id (minted by `Service::infer`); party
+        /// threads park it in the thread-local the transport reads to
+        /// attribute flight spans.
+        trace: u64,
+    },
     /// Mint `n` more tuple elements in the background (forwarded to the
     /// party's producer thread; the bank is credited in broadcast order).
     Refill(usize),
@@ -142,6 +149,13 @@ pub struct Service {
     /// structure, computed once at start; start fails on a model the
     /// planner rejects).  Tuple demand and the per-batch walk follow it.
     plan: Option<Arc<crate::engine::fusion::FusedPlan>>,
+    /// Per-party trace sinks.  Installed on (or adopted from) the link
+    /// cores at start -- registry slots sharing one trio share one sink
+    /// per party, so flight-byte reconciliation spans every lane.
+    sinks: Vec<Arc<crate::trace::TraceSink>>,
+    /// Request-latency histogram (admin `stats`; fed by
+    /// `Service::infer` on every successful batch).
+    latency: Mutex<Histogram>,
     model: Arc<Model>,
     /// The channel-id model slot this service's lanes are bound to.
     pub slot: u8,
@@ -237,6 +251,25 @@ impl Service {
         // standalone service still drops its links (peers see Closed)
         let controls: Vec<ChanControl> =
             lanes.iter().map(|(on, _)| on.control()).collect();
+        // one trace sink per party, shared with the link cores: the
+        // first service on a trio installs it, later slots adopt it.
+        // Enabling from link birth is what makes the flight-byte
+        // reconciliation against Stats exact (OPERATIONS.md §3).
+        let sinks: Vec<Arc<crate::trace::TraceSink>> = lanes.iter()
+            .map(|(on, _)| {
+                let s = Arc::new(crate::trace::TraceSink::new());
+                if on.install_tracer(Arc::clone(&s)) {
+                    s
+                } else {
+                    on.tracer_handle().expect("sink just rejected")
+                }
+            })
+            .collect();
+        if cfg.trace {
+            for s in &sinks {
+                s.set_enabled(true);
+            }
+        }
         let mut banks: Vec<Arc<TupleBank>> = Vec::with_capacity(3);
         for _ in 0..3 {
             banks.push(Arc::new(TupleBank::try_new(bank_cfg)
@@ -310,7 +343,11 @@ impl Service {
                             bank.credit(n);
                             let _ = prod_tx.send(n);
                         }
-                        Job::Infer { inputs, batch } => {
+                        Job::Infer { inputs, batch, trace } => {
+                            crate::trace::set_current_trace(trace);
+                            let cur = comm.tracer()
+                                .filter(|t| t.enabled())
+                                .map(|t| t.cursor(&comm));
                             let src = if cfg.opts.preprocess {
                                 TupleSource::Bank(bank.as_ref())
                             } else {
@@ -325,6 +362,15 @@ impl Service {
                                     &ctx, &shared, backend.as_ref(),
                                     cfg.opts, &inputs, batch, &src),
                             };
+                            if let Some(cur) = cur {
+                                if let Some(tr) = comm.tracer() {
+                                    tr.close(
+                                        &comm,
+                                        crate::trace::SpanKind::Request,
+                                        0, &model.name, &cur);
+                                }
+                            }
+                            crate::trace::set_current_trace(0);
                             let failed = r.is_err();
                             if comm.id == 0 {
                                 let _ = logits_tx.send(
@@ -372,6 +418,8 @@ impl Service {
             bank_cfg,
             preprocess: cfg.opts.preprocess,
             plan,
+            sinks,
+            latency: Mutex::new(Histogram::default()),
             slot,
             epoch,
             model_name: model.name.clone(),
@@ -455,11 +503,16 @@ impl Service {
     /// at which point it returns `Err` instead of hanging.
     pub fn infer(&self, inputs: Vec<Tensor>) -> Result<Vec<Vec<i32>>> {
         let batch = inputs.len();
+        // every request gets a trace id whether or not tracing is on:
+        // minting is one relaxed fetch_add, and the id in the job is
+        // what lets `trace on` mid-run attribute the very next batch
+        let trace = crate::trace::next_trace_id();
         // keep the bank at its own watermarks even without a Coordinator
         // in front: the refill jobs land ahead of this infer in every
         // party's queue (same broadcast lock), so the producers overlap
         // this batch instead of draining the prefill dry
         self.top_up_to(0);
+        let t0 = Instant::now();
         let rx = recover(self.logits_rx.lock());
         {
             let sched = recover(self.sched.lock());
@@ -467,11 +520,16 @@ impl Service {
                 let job = Job::Infer {
                     inputs: if id == 0 { inputs.clone() } else { vec![] },
                     batch,
+                    trace,
                 };
                 tx.send(job).map_err(|_| anyhow!("party {id} gone"))?;
             }
         }
-        rx.recv().map_err(|_| anyhow!("no response"))?
+        let out = rx.recv().map_err(|_| anyhow!("no response"))?;
+        if out.is_ok() {
+            recover(self.latency.lock()).record(t0.elapsed());
+        }
+        out
     }
 
     /// Ask every party thread to stop once its queued jobs are done
@@ -582,6 +640,55 @@ impl Service {
     /// exists for.
     pub fn sever_lane(&self, party: usize) {
         self.controls[party].close_chan(ChanId::online(self.slot));
+    }
+
+    /// Party `party`'s trace sink (shared across every slot of the
+    /// trio in a registry).
+    pub fn trace_sink(&self, party: usize)
+                      -> Arc<crate::trace::TraceSink> {
+        Arc::clone(&self.sinks[party])
+    }
+
+    /// A weak handle on party `party`'s links (stats for the trace
+    /// sidecar after the service itself has been consumed, e.g. by a
+    /// `Coordinator`).
+    pub fn chan_control(&self, party: usize) -> ChanControl {
+        self.controls[party].clone()
+    }
+
+    /// Toggle span recording on every party's sink (the admin REPL's
+    /// `trace on|off`).  Turning tracing on mid-run yields a *partial*
+    /// trace: flight bytes recorded from that point on no longer sum
+    /// to the link's lifetime `Stats` (OPERATIONS.md §3 documents the
+    /// caveat; start with `--trace-out` for reconcilable traces).
+    pub fn set_tracing(&self, on: bool) {
+        for s in &self.sinks {
+            s.set_enabled(on);
+        }
+    }
+
+    /// Whether any party is currently recording spans.
+    pub fn tracing(&self) -> bool {
+        self.sinks.iter().any(|s| s.enabled())
+    }
+
+    /// Snapshot of the request-latency histogram (admin `stats`).
+    pub fn latency(&self) -> Histogram {
+        recover(self.latency.lock()).clone()
+    }
+
+    /// Export every party's trace (`trace-p<N>.jsonl`) and stats
+    /// sidecar (`stats-p<N>.json`) under `dir`.  The sidecar carries
+    /// the *link-wide* stats -- in a registry that spans every slot,
+    /// exactly like the shared sinks do.
+    pub fn write_traces(&self, dir: &std::path::Path) -> Result<()> {
+        for (party, (sink, ctl)) in
+            self.sinks.iter().zip(&self.controls).enumerate() {
+            let stats = ctl.stats().unwrap_or_default();
+            crate::trace::write_party_trace(dir, party, sink, &stats)
+                .map_err(|e| anyhow!("trace export: {e}"))?;
+        }
+        Ok(())
     }
 }
 
@@ -732,6 +839,10 @@ impl Inner {
 pub struct ModelRegistry {
     links: [Comm; 3],
     cfg: SessionConfig,
+    /// Per-party trace sinks, installed on the link cores before any
+    /// slot starts (so every model's services adopt the same sinks and
+    /// flight bytes reconcile link-wide).
+    sinks: Vec<Arc<crate::trace::TraceSink>>,
     inner: Mutex<Inner>,
 }
 
@@ -763,9 +874,29 @@ impl ModelRegistry {
         for c in &links {
             c.set_parked_cap(cfg.max_parked_bytes);
         }
+        // install the per-party sinks before any slot exists: every
+        // model's service adopts them, and a trace enabled from link
+        // birth reconciles its flight bytes exactly against the link
+        // Stats
+        let sinks: Vec<Arc<crate::trace::TraceSink>> = links.iter()
+            .map(|c| {
+                let s = Arc::new(crate::trace::TraceSink::new());
+                if c.install_tracer(Arc::clone(&s)) {
+                    s
+                } else {
+                    c.tracer_handle().expect("sink just rejected")
+                }
+            })
+            .collect();
+        if cfg.trace {
+            for s in &sinks {
+                s.set_enabled(true);
+            }
+        }
         let reg = ModelRegistry {
             links,
             cfg: cfg.clone(),
+            sinks,
             inner: Mutex::new(Inner {
                 entries: Vec::with_capacity(specs.len()),
                 free_slots: Vec::new(),
@@ -1123,6 +1254,42 @@ impl ModelRegistry {
     /// lane's `ChanStats` row; rows sum to the totals).
     pub fn link_stats(&self, party: usize) -> Stats {
         self.links[party].stats()
+    }
+
+    /// Party `party`'s trace sink (shared by every slot of the links).
+    pub fn trace_sink(&self, party: usize)
+                      -> Arc<crate::trace::TraceSink> {
+        Arc::clone(&self.sinks[party])
+    }
+
+    /// Toggle span recording on all three parties' sinks (the admin
+    /// REPL's `trace on|off`; see `Service::set_tracing` for the
+    /// mid-run partial-trace caveat).
+    pub fn set_tracing(&self, on: bool) {
+        for s in &self.sinks {
+            s.set_enabled(on);
+        }
+    }
+
+    /// Whether any party is currently recording spans.
+    pub fn tracing(&self) -> bool {
+        self.sinks.iter().any(|s| s.enabled())
+    }
+
+    /// Export every party's trace (`trace-p<N>.jsonl`) and stats
+    /// sidecar (`stats-p<N>.json`) under `dir`; the sidecars carry the
+    /// link-wide stats the merge tool reconciles flight bytes against.
+    pub fn write_traces(&self, dir: &std::path::Path)
+                        -> Result<(), RegistryError> {
+        for (party, sink) in self.sinks.iter().enumerate() {
+            let stats = self.link_stats(party);
+            crate::trace::write_party_trace(dir, party, sink, &stats)
+                .map_err(|e| RegistryError::Service {
+                    model: format!("trace-p{party}"),
+                    source: anyhow!("trace export: {e}"),
+                })?;
+        }
+        Ok(())
     }
 
     /// Per-model serving rollups (party 0's view), in slot order: each

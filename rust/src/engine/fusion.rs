@@ -459,6 +459,8 @@ pub fn infer_batch_fused(
 
     for fop in &plan.fops {
         let before = ctx.comm.stats();
+        let cur = ctx.comm.tracer().filter(|t| t.enabled())
+            .map(|t| t.cursor(ctx.comm));
         let mut label: Option<(usize, String)> = None;
         match fop {
             FusedOp::Arith(i) => {
@@ -588,6 +590,12 @@ pub fn infer_batch_fused(
             }
         }
         let (index, op) = label.unwrap();
+        if let Some(cur) = cur {
+            if let Some(tr) = ctx.comm.tracer() {
+                tr.close(ctx.comm, crate::trace::SpanKind::Op,
+                         index as u32, &op, &cur);
+            }
+        }
         op_costs.push(cost_row(ctx, index, op, &before));
     }
 

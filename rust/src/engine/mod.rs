@@ -396,9 +396,17 @@ pub fn infer_batch_pooled(
     // ---- walk the program ----------------------------------------------
     for (i, op) in model.ops.iter().enumerate() {
         let before = ctx.comm.stats();
+        let cur = ctx.comm.tracer().filter(|t| t.enabled())
+            .map(|t| t.cursor(ctx.comm));
         run_arith_op(ctx, model, backend, opts, tuples, i, op,
                      &mut acts, &mut geom)?;
         op_costs.push(cost_row(ctx, i, op.name().to_string(), &before));
+        if let Some(cur) = cur {
+            if let Some(tr) = ctx.comm.tracer() {
+                tr.close(ctx.comm, crate::trace::SpanKind::Op, i as u32,
+                         op.name(), &cur);
+            }
+        }
     }
 
     // ---- reveal logits to the data owner only --------------------------

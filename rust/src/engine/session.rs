@@ -75,6 +75,11 @@ pub struct SessionConfig {
     /// counted in `LifecycleCounters::watchdog_trips`).  0 disables the
     /// watchdog; the CLI's `serve --max-infer-errors`.
     pub max_consecutive_errors: u32,
+    /// Record per-party trace spans (`trace::TraceSink`): one Request
+    /// span per inference plus the Op/Protocol/Flight spans underneath.
+    /// Off by default -- with tracing off no sink is even installed, so
+    /// the request path pays one `OnceLock::get` returning `None`.
+    pub trace: bool,
 }
 
 impl SessionConfig {
@@ -90,6 +95,7 @@ impl SessionConfig {
             max_batch: 8,
             max_parked_bytes: crate::transport::DEFAULT_PARKED_CAP,
             max_consecutive_errors: 3,
+            trace: false,
         }
     }
 
@@ -122,6 +128,8 @@ pub struct SessionReport {
     /// Party 0's per-op wire-cost rows for the online walk (the CLI's
     /// `infer` table; see `metrics::op_cost_table`).
     pub op_costs: Vec<crate::metrics::OpCost>,
+    /// Per-party recorded spans (empty unless `SessionConfig::trace`).
+    pub traces: Vec<Vec<crate::trace::Span>>,
 }
 
 impl SessionReport {
@@ -147,6 +155,9 @@ pub fn run_inference(model: &Arc<Model>, inputs: Vec<Tensor>,
         return Err(anyhow!("empty batch"));
     }
     let comms = local_trio(cfg.net);
+    // one trace id covers all three parties' Request spans, so the
+    // cross-party merge joins them (`trace::merge`)
+    let trace_id = if cfg.trace { crate::trace::next_trace_id() } else { 0 };
     let mut handles = Vec::new();
     for comm in comms {
         let model = Arc::clone(model);
@@ -154,7 +165,18 @@ pub fn run_inference(model: &Arc<Model>, inputs: Vec<Tensor>,
         let inputs = if comm.id == 0 { inputs.clone() } else { vec![] };
         handles.push(thread::spawn(move || -> Result<(
             Vec<Vec<i32>>, Duration, Duration, Stats,
-            Vec<crate::metrics::OpCost>)> {
+            Vec<crate::metrics::OpCost>, Vec<crate::trace::Span>)> {
+            // installed now, enabled only after `reset_stats` below so
+            // the recorded flights reconcile exactly with the online
+            // Stats the report carries
+            let sink = if cfg.trace {
+                let s = Arc::new(crate::trace::TraceSink::new());
+                comm.install_tracer(Arc::clone(&s));
+                crate::trace::set_current_trace(trace_id);
+                Some(s)
+            } else {
+                None
+            };
             let seeds = PartySeeds::setup(cfg.session_seed, comm.id);
             let ctx = Ctx::with_cfg(&comm, &seeds, cfg.proto);
             let backend = make_backend(cfg.backend, &cfg.hlo_dir)?;
@@ -189,6 +211,10 @@ pub fn run_inference(model: &Arc<Model>, inputs: Vec<Tensor>,
             };
             let setup = t0.elapsed();
             comm.reset_stats(); // report online cost separately
+            if let Some(s) = &sink {
+                s.set_enabled(true);
+            }
+            let cur = sink.as_ref().map(|s| s.cursor(&comm));
             let t1 = Instant::now();
             let out = match &plan {
                 Some(p) => super::fusion::infer_batch_fused(
@@ -199,7 +225,16 @@ pub fn run_inference(model: &Arc<Model>, inputs: Vec<Tensor>,
                     batch, &tuples)?,
             };
             let online = t1.elapsed();
-            Ok((out.logits, online, setup, comm.stats(), out.op_costs))
+            let spans = match (&sink, cur) {
+                (Some(s), Some(cur)) => {
+                    s.close(&comm, crate::trace::SpanKind::Request, 0,
+                            &model.name, &cur);
+                    s.snapshot()
+                }
+                _ => vec![],
+            };
+            Ok((out.logits, online, setup, comm.stats(), out.op_costs,
+                spans))
         }));
     }
     let mut results = Vec::new();
@@ -216,6 +251,7 @@ pub fn run_inference(model: &Arc<Model>, inputs: Vec<Tensor>,
         setup: results[0].2,
         stats: stats.try_into().expect("three parties"),
         op_costs: results[0].4.clone(),
+        traces: results.iter().map(|r| r.5.clone()).collect(),
     })
 }
 

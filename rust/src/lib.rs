@@ -20,6 +20,9 @@
 //!   session management, metrics, and the multi-model `ModelRegistry`
 //!   (N models over one process's links, one channel-id lane pair and
 //!   tuple bank per model).
+//! * `trace` -- the telemetry plane: per-party span recording (requests,
+//!   ops, protocol phases, transport flights, bank gauges), JSONL export,
+//!   Prometheus text metrics, and the cross-party timeline merge.
 //! * `baselines` -- SecureBiNN-/Falcon-style protocol arms and published
 //!   cost-model rows for the comparison tables.
 //!
@@ -43,4 +46,5 @@ pub mod ring;
 pub mod rss;
 pub mod runtime;
 pub mod testutil;
+pub mod trace;
 pub mod transport;

@@ -9,11 +9,15 @@
 //!             links via the ModelRegistry (see OPERATIONS.md)
 //!   acc    -- secure accuracy over the exported eval set
 //!   info   -- describe a model manifest
+//!   trace  -- merge an exported trace directory (three parties'
+//!             JSONL + stats sidecars) into one timeline and check
+//!             the cross-party invariants (see OPERATIONS.md §3)
 //!
 //! Common flags: --model NAME | --model NAME=MANIFEST (repeatable)
 //!               --artifacts DIR
 //!               --net lan|wan|zero|rtt=40ms,bw=40MBps,jitter=1ms[,virtual]
 //!               --backend native|pjrt-pallas|pjrt-xla --batch N
+//!               --trace-out DIR --metrics-out PATH (telemetry export)
 
 use std::collections::BTreeMap;
 use std::io::BufRead;
@@ -29,9 +33,11 @@ use cbnn::coordinator::{BatchPolicy, Coordinator, ModelRegistry, ModelSpec,
                         Service};
 use cbnn::datasets::EvalSet;
 use cbnn::engine::session::{run_inference, secure_accuracy, SessionConfig};
-use cbnn::metrics::fmt_duration;
+use cbnn::metrics::{fmt_duration, prometheus_text, Histogram,
+                    MetricsSnapshot, ModelRollup};
 use cbnn::nn::Model;
 use cbnn::ring::Tensor;
+use cbnn::trace::{self, merge, SpanKind};
 
 /// Usage text.  The serve flag list renders from `cli::SERVE_FLAGS`
 /// (the same list the OPERATIONS.md CI gate checks), so the help
@@ -41,12 +47,15 @@ fn usage() -> String {
         SERVE_FLAGS.iter().map(|f| format!("[--{f} ..]")).collect();
     format!(
         "usage: cbnn <infer|serve|acc|info> --model <name|name=manifest>\n\
+         \x20      cbnn trace <DIR>  (merge an exported trace)\n\
          serve flags (--model repeatable): {}\n\
          values: --net lan|wan|zero|rtt=40ms,bw=40MBps,jitter=1ms\
          [,virtual], --backend \
          native|pjrt-pallas|pjrt-xla, --fuse on|off (binary-domain \
          layer fusion), --max-infer-errors N (0 disables the \
-         auto-quarantine watchdog); see OPERATIONS.md",
+         auto-quarantine watchdog), --trace-out DIR (per-party span \
+         JSONL + stats sidecars), --metrics-out PATH (Prometheus \
+         text); see OPERATIONS.md",
         serve.join(" "))
 }
 
@@ -83,6 +92,9 @@ fn main() -> Result<()> {
     cfg.max_consecutive_errors = args
         .get_usize("max-infer-errors", cfg.max_consecutive_errors as usize)
         .map_err(anyhow::Error::msg)? as u32;
+    // tracing is enabled from link birth whenever an export dir is
+    // given, so flight bytes reconcile exactly against the link stats
+    cfg.trace = args.get("trace-out").is_some();
 
     // info/infer/acc are single-model commands: last --model wins
     let (name, path) = specs.last().expect("parse_models is non-empty");
@@ -121,6 +133,19 @@ fn main() -> Result<()> {
                 .zip(&data.labels).enumerate() {
                 println!("  sample {i}: pred={p} label={l}");
             }
+            if let Some(dir) = args.get("trace-out") {
+                let dir = Path::new(dir);
+                for (party, spans) in rep.traces.iter().enumerate() {
+                    trace::write_trace(dir, party, spans,
+                                       &rep.stats[party], 0)
+                        .with_context(|| format!("trace export to {}",
+                                                 dir.display()))?;
+                }
+                println!("trace  : {} spans/party -> {} \
+                          (merge: cbnn trace {})",
+                         rep.traces.first().map_or(0, Vec::len),
+                         dir.display(), dir.display());
+            }
         }
         "acc" => {
             let model = load_model(name, path)?;
@@ -140,9 +165,75 @@ fn main() -> Result<()> {
                 serve_multi(&args, &art, cfg, &specs)?;
             }
         }
+        "trace" => {
+            let dir = args.positional.first()
+                .ok_or_else(|| anyhow!("usage: cbnn trace <DIR>"))?;
+            trace_report(Path::new(dir))?;
+        }
         other => return Err(anyhow!("unknown subcommand '{other}'\n{}",
                                     usage())),
     }
+    Ok(())
+}
+
+/// `cbnn trace <DIR>`: load the three parties' exported JSONL traces
+/// and stats sidecars, join them into one timeline, print it, and
+/// fail (exit non-zero) on any cross-party disagreement -- the
+/// desync-debugging front door (OPERATIONS.md §3 runbook).
+fn trace_report(dir: &Path) -> Result<()> {
+    let mut parties = Vec::with_capacity(3);
+    let mut sidecars = Vec::with_capacity(3);
+    for p in 0..3 {
+        let tp = trace::trace_path(dir, p);
+        let text = std::fs::read_to_string(&tp)
+            .with_context(|| format!("reading {}", tp.display()))?;
+        parties.push(trace::parse_jsonl(&text)
+            .map_err(|e| anyhow!("{}: {e}", tp.display()))?);
+        let sp = trace::stats_path(dir, p);
+        let text = std::fs::read_to_string(&sp)
+            .with_context(|| format!("reading {}", sp.display()))?;
+        sidecars.push(trace::parse_stats(&text)
+            .map_err(|e| anyhow!("{}: {e}", sp.display()))?);
+    }
+    let report = merge::merge_check(&parties);
+    println!("merged {} parties: {} trace(s), {} lock-step spans \
+              joined", parties.len(), report.traces.len(),
+             report.joined);
+    for &id in &report.traces {
+        for s in parties[0].iter()
+            .filter(|s| s.trace_id == id && s.kind == SpanKind::Request) {
+            println!("trace {id}: request '{}' -- {} rounds, {} B \
+                      sent (party 0), {} us wall",
+                     s.label, s.rounds, s.bytes_sent,
+                     s.wall_end_us - s.wall_start_us);
+        }
+        for s in parties[0].iter()
+            .filter(|s| s.trace_id == id && s.kind == SpanKind::Op) {
+            println!("  [{:>2}] {:<24} {:>3} rounds {:>10} B {:>8} us",
+                     s.index, s.label.as_str(), s.rounds, s.bytes_sent,
+                     s.wall_end_us - s.wall_start_us);
+        }
+    }
+    let mut problems = report.problems;
+    for (p, side) in sidecars.iter().enumerate() {
+        if side.dropped_events > 0 {
+            println!("party {p}: {} spans dropped (sink full) -- \
+                      flight-byte reconciliation skipped",
+                     side.dropped_events);
+            continue;
+        }
+        problems.extend(merge::check_flight_rows(p, &parties[p],
+                                                 &side.chan_bytes));
+    }
+    if !problems.is_empty() {
+        for pr in &problems {
+            eprintln!("problem: {pr}");
+        }
+        return Err(anyhow!("{} cross-party trace problem(s)",
+                           problems.len()));
+    }
+    println!("cross-party invariants hold: rounds agree on every \
+              joined span, flight bytes reconcile with link stats");
     Ok(())
 }
 
@@ -165,6 +256,14 @@ fn serve_single(args: &Args, art: &Path, cfg: SessionConfig,
     let svc = Service::start(Arc::clone(&model), cfg)?;
     println!("service up: model={} setup={}", svc.model_name,
              fmt_duration(svc.setup_time));
+    // the Coordinator consumes the service, so grab the telemetry
+    // handles (sinks for spans, weak controls for the stats sidecar,
+    // party-0 bank for the level gauge) up front
+    let slot = svc.slot;
+    let telemetry: Vec<_> = (0..3)
+        .map(|p| (svc.trace_sink(p), svc.chan_control(p)))
+        .collect();
+    let bank0 = svc.bank_handle(0);
     let coord = Coordinator::start(svc, BatchPolicy {
         max_batch,
         max_wait: Duration::from_millis(10),
@@ -183,6 +282,36 @@ fn serve_single(args: &Args, art: &Path, cfg: SessionConfig,
         }
     }
     let pm = coord.preproc_metrics();
+    // export telemetry while the service (inside the batcher) still
+    // holds the links alive -- after `finish` the weak stats handles
+    // are dead
+    if let Some(dir) = args.get("trace-out") {
+        let dir = Path::new(dir);
+        // let refills triggered by the last draws finish, so the
+        // exported flight bytes reconcile with the stats sidecar
+        let (mut last, mut stable, mut spins) =
+            (bank0.metrics().minted, 0, 0);
+        while stable < 3 && spins < 100 {
+            std::thread::sleep(Duration::from_millis(20));
+            let now = bank0.metrics().minted;
+            if now == last {
+                stable += 1;
+            } else {
+                (stable, last) = (0, now);
+            }
+            spins += 1;
+        }
+        for (party, (sink, ctl)) in telemetry.iter().enumerate() {
+            let stats = ctl.stats().unwrap_or_default();
+            cbnn::trace::write_party_trace(dir, party, sink, &stats)
+                .with_context(|| format!("trace export to {}",
+                                         dir.display()))?;
+        }
+        println!("trace exported -> {} (merge: cbnn trace {})",
+                 dir.display(), dir.display());
+    }
+    let bank_level = bank0.level() as u64;
+    let stats0 = telemetry[0].1.stats().unwrap_or_default();
     let (hist, thr) = coord.finish();
     println!("served {} requests: {:.1} req/s", thr.requests,
              thr.per_sec());
@@ -197,6 +326,28 @@ fn serve_single(args: &Args, art: &Path, cfg: SessionConfig,
              fmt_duration(hist.max()));
     println!("accuracy on served stream: {:.1}%",
              100.0 * f64::from(correct) / requests as f64);
+    if let Some(path) = args.get("metrics-out") {
+        let snap = MetricsSnapshot {
+            requests: thr.requests,
+            latency: hist,
+            models: vec![ModelRollup {
+                name: model.name.clone(),
+                slot,
+                online: stats0.chan(
+                    cbnn::transport::ChanId::online(slot)),
+                offline: stats0.chan(
+                    cbnn::transport::ChanId::offline(slot)),
+                preproc: pm,
+                ..ModelRollup::default()
+            }],
+            bank_levels: vec![(model.name.clone(), bank_level)],
+            trace_dropped: telemetry.iter()
+                .map(|(s, _)| s.dropped_events()).collect(),
+        };
+        std::fs::write(path, prometheus_text(&snap))
+            .with_context(|| format!("writing {path}"))?;
+        println!("metrics written -> {path}");
+    }
     Ok(())
 }
 
@@ -233,6 +384,7 @@ fn serve_multi(args: &Args, art: &Path, cfg: SessionConfig,
              specs.len(), reg.names().join(", "),
              fmt_duration(t0.elapsed()));
 
+    let metrics_out = args.get("metrics-out").map(PathBuf::from);
     let n_models = specs.len();
     let mut served = vec![0usize; n_models];
     let mut correct = vec![0usize; n_models];
@@ -258,6 +410,11 @@ fn serve_multi(args: &Args, art: &Path, cfg: SessionConfig,
             served[m] += take;
             remaining -= take;
         }
+        // the --metrics-out interval tick: rewrite the snapshot after
+        // every round-robin sweep (and once more before exit below)
+        if let Some(path) = &metrics_out {
+            write_registry_metrics(&reg, path)?;
+        }
     }
     let wall = t1.elapsed();
     println!("served {requests} requests across {n_models} models in {} \
@@ -282,8 +439,60 @@ fn serve_multi(args: &Args, art: &Path, cfg: SessionConfig,
     if args.get_bool("admin") {
         admin_repl(&reg, art, &mut data_by_name(specs, data))?;
     }
-    reg.shutdown().map_err(|e| anyhow!("{e}"))?;
+    if let Some(path) = &metrics_out {
+        write_registry_metrics(&reg, path)?;
+        println!("metrics written -> {}", path.display());
+    }
+    // export traces only after shutdown: the last slot's exit stats are
+    // the fully-quiesced link totals, so flight bytes reconcile exactly
+    // (a live export could race a background bank refill)
+    let trace_sinks: Option<Vec<_>> = args.get("trace-out")
+        .map(|_| (0..3).map(|p| reg.trace_sink(p)).collect());
+    let per_model = reg.shutdown().map_err(|e| anyhow!("{e}"))?;
+    if let (Some(dir), Some(sinks)) =
+        (args.get("trace-out"), trace_sinks) {
+        let dir = Path::new(dir);
+        let stats = per_model.last()
+            .map(|(_, s)| s.clone()).unwrap_or_default();
+        for (party, sink) in sinks.iter().enumerate() {
+            trace::write_trace(dir, party, &sink.snapshot(),
+                               &stats[party], sink.dropped_events())
+                .with_context(|| format!("trace export to {}",
+                                         dir.display()))?;
+        }
+        println!("trace exported -> {} (merge: cbnn trace {})",
+                 dir.display(), dir.display());
+    }
     Ok(())
+}
+
+/// Assemble and atomically rewrite the registry's `--metrics-out`
+/// snapshot (Prometheus text exposition; the metric names are part of
+/// the operational contract, documented in OPERATIONS.md §3).
+fn write_registry_metrics(reg: &ModelRegistry, path: &Path) -> Result<()> {
+    let mut latency = Histogram::default();
+    let mut bank_levels = Vec::new();
+    for name in reg.names() {
+        // quarantined/parked slots drop out of the snapshot until they
+        // serve again
+        if let Ok(svc) = reg.service(&name) {
+            latency.merge(&svc.latency());
+            bank_levels.push((name.clone(),
+                              svc.bank_handle(0).level() as u64));
+        }
+    }
+    let snap = MetricsSnapshot {
+        requests: latency.count(),
+        latency,
+        models: reg.rollups(),
+        bank_levels,
+        trace_dropped: (0..3)
+            .map(|p| reg.trace_sink(p).dropped_events()).collect(),
+    };
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, prometheus_text(&snap))
+        .and_then(|()| std::fs::rename(&tmp, path))
+        .with_context(|| format!("writing {}", path.display()))
 }
 
 fn data_by_name(specs: &[(String, PathBuf)], data: Vec<EvalSet>)
@@ -296,9 +505,9 @@ fn data_by_name(specs: &[(String, PathBuf)], data: Vec<EvalSet>)
 /// the registry serves.  See OPERATIONS.md §Lifecycle runbook.
 fn admin_repl(reg: &ModelRegistry, art: &Path,
               data: &mut BTreeMap<String, EvalSet>) -> Result<()> {
-    println!("admin> commands: status | add NAME[=MANIFEST] | \
-              remove NAME | quarantine NAME | respawn NAME | \
-              infer NAME [N] | quit");
+    println!("admin> commands: status | stats | trace on|off | \
+              add NAME[=MANIFEST] | remove NAME | quarantine NAME | \
+              respawn NAME | infer NAME [N] | quit");
     let stdin = std::io::stdin();
     for line in stdin.lock().lines() {
         let line = line?;
@@ -308,9 +517,21 @@ fn admin_repl(reg: &ModelRegistry, art: &Path,
         let res: Result<()> = match cmd {
             "quit" | "exit" => break,
             "status" => {
+                let rollups: BTreeMap<u8, ModelRollup> = reg.rollups()
+                    .into_iter().map(|r| (r.slot, r)).collect();
                 for (name, slot, state, epoch) in reg.status() {
                     println!("  {name} (slot {slot}): {state}, \
                               epoch {epoch}");
+                    if let Some(r) = rollups.get(&slot) {
+                        println!("    online {} B / {} rounds / {} \
+                                  msgs, offline {} B | bank minted={} \
+                                  drawn={} fallbacks={}",
+                                 r.online.bytes_sent, r.online.rounds,
+                                 r.online.messages,
+                                 r.offline.bytes_sent,
+                                 r.preproc.minted, r.preproc.drawn,
+                                 r.preproc.underflow_calls);
+                    }
                 }
                 for (slot, lc) in reg.lifecycle_counters() {
                     println!("  slot {slot} lifecycle: quarantines={} \
@@ -321,6 +542,27 @@ fn admin_repl(reg: &ModelRegistry, art: &Path,
                 }
                 Ok(())
             }
+            "stats" => admin_stats(reg),
+            "trace" => match arg {
+                "on" => {
+                    reg.set_tracing(true);
+                    println!("  tracing on (mid-run: partial trace; \
+                              flight bytes will not reconcile against \
+                              lifetime link stats)");
+                    Ok(())
+                }
+                "off" => {
+                    reg.set_tracing(false);
+                    println!("  tracing off");
+                    Ok(())
+                }
+                "" => {
+                    println!("  tracing is {}",
+                             if reg.tracing() { "on" } else { "off" });
+                    Ok(())
+                }
+                other => Err(anyhow!("trace on|off, got '{other}'")),
+            },
             "add" => admin_add(reg, art, data, arg),
             "remove" => reg.remove_model(arg).map_err(|e| anyhow!("{e}"))
                 .map(|()| println!("  removed {arg} (slot freed)")),
@@ -336,6 +578,36 @@ fn admin_repl(reg: &ModelRegistry, art: &Path,
         if let Err(e) = res {
             println!("  error: {e}");
         }
+    }
+    Ok(())
+}
+
+/// `admin> stats`: per-model rollup rows plus each serving model's
+/// request-latency quantiles and the per-party trace-sink state.
+fn admin_stats(reg: &ModelRegistry) -> Result<()> {
+    for r in reg.rollups() {
+        println!("  {} (slot {}): online {} B / {} rounds / {} msgs, \
+                  offline {} B | bank minted={} drawn={} fallbacks={}",
+                 r.name, r.slot, r.online.bytes_sent, r.online.rounds,
+                 r.online.messages, r.offline.bytes_sent,
+                 r.preproc.minted, r.preproc.drawn,
+                 r.preproc.underflow_calls);
+        if let Ok(svc) = reg.service(&r.name) {
+            let h = svc.latency();
+            println!("    latency: n={} mean={} p50={} p90={} p99={} \
+                      max={}",
+                     h.count(), fmt_duration(h.mean()),
+                     fmt_duration(h.quantile(0.5)),
+                     fmt_duration(h.quantile(0.9)),
+                     fmt_duration(h.quantile(0.99)),
+                     fmt_duration(h.max()));
+        }
+    }
+    for party in 0..3 {
+        let sink = reg.trace_sink(party);
+        println!("  trace p{party}: {} span(s), {} dropped, {}",
+                 sink.len(), sink.dropped_events(),
+                 if sink.enabled() { "recording" } else { "off" });
     }
     Ok(())
 }

@@ -33,6 +33,17 @@ impl Histogram {
         self.max_us = self.max_us.max(us);
     }
 
+    /// Fold `other`'s samples into this histogram (the metrics export
+    /// aggregates every model's per-service histogram into one).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
     pub fn count(&self) -> u64 {
         self.count
     }
@@ -48,8 +59,11 @@ impl Histogram {
         Duration::from_micros(self.max_us)
     }
 
-    /// Approximate quantile from the log buckets (upper bound of the
-    /// bucket containing the q-th sample).
+    /// Approximate quantile from the log buckets: the upper bound of
+    /// the bucket containing the q-th sample, clamped to the observed
+    /// maximum -- a log bucket's bound can overshoot the largest value
+    /// actually recorded into it by nearly 2x, and no quantile may
+    /// report a latency larger than `max()` (pinned below).
     pub fn quantile(&self, q: f64) -> Duration {
         if self.count == 0 {
             return Duration::ZERO;
@@ -59,7 +73,8 @@ impl Histogram {
         for (i, &b) in self.buckets.iter().enumerate() {
             seen += b;
             if seen >= target {
-                return Duration::from_micros(1u64 << (i + 1));
+                let bound = (1u64 << (i + 1)).min(self.max_us);
+                return Duration::from_micros(bound);
             }
         }
         self.max()
@@ -184,6 +199,96 @@ impl Throughput {
     }
 }
 
+/// Everything one machine-readable metrics export reports: the serving
+/// front's request counters and latency histogram, every model's
+/// rollup, each model's live bank level, and the per-party trace-sink
+/// drop counters.  Assembled by the CLI's serve loops on each
+/// `--metrics-out` interval tick.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    /// Requests served so far.
+    pub requests: u64,
+    pub latency: Histogram,
+    pub models: Vec<ModelRollup>,
+    /// Live `TupleBank` level per model name (party 0's bank).
+    pub bank_levels: Vec<(String, u64)>,
+    /// `trace::TraceSink::dropped_events` per party.
+    pub trace_dropped: Vec<u64>,
+}
+
+/// Escape a Prometheus label value (backslash, quote, newline).
+fn prom_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Render a snapshot in the Prometheus text exposition format.  Metric
+/// names are part of the operational contract -- they are documented in
+/// OPERATIONS.md §3 and pinned by `tests/docs.rs`.
+pub fn prometheus_text(snap: &MetricsSnapshot) -> String {
+    let mut o = String::new();
+    o.push_str("# TYPE cbnn_requests_total counter\n");
+    o.push_str(&format!("cbnn_requests_total {}\n", snap.requests));
+    o.push_str("# TYPE cbnn_request_latency_us gauge\n");
+    for (q, l) in [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99")] {
+        o.push_str(&format!(
+            "cbnn_request_latency_us{{quantile=\"{l}\"}} {}\n",
+            snap.latency.quantile(q).as_micros()));
+    }
+    o.push_str(&format!("cbnn_request_latency_us{{quantile=\"max\"}} {}\n",
+                        snap.latency.max().as_micros()));
+    let lane_rows = |o: &mut String, name: &str,
+                     pick: &dyn Fn(&ChanStats) -> u64| {
+        o.push_str(&format!("# TYPE {name} counter\n"));
+        for r in &snap.models {
+            for (lane, st) in [("online", &r.online),
+                               ("offline", &r.offline)] {
+                o.push_str(&format!(
+                    "{name}{{model=\"{}\",slot=\"{}\",lane=\"{lane}\"}} \
+                     {}\n",
+                    prom_label(&r.name), r.slot, pick(st)));
+            }
+        }
+    };
+    lane_rows(&mut o, "cbnn_lane_bytes_total", &|s| s.bytes_sent);
+    lane_rows(&mut o, "cbnn_lane_rounds_total", &|s| s.rounds);
+    lane_rows(&mut o, "cbnn_lane_messages_total", &|s| s.messages);
+    let bank_rows = |o: &mut String, name: &str,
+                     pick: &dyn Fn(&PreprocMetrics) -> u64| {
+        o.push_str(&format!("# TYPE {name} counter\n"));
+        for r in &snap.models {
+            o.push_str(&format!("{name}{{model=\"{}\"}} {}\n",
+                                prom_label(&r.name), pick(&r.preproc)));
+        }
+    };
+    bank_rows(&mut o, "cbnn_bank_minted_total", &|p| p.minted);
+    bank_rows(&mut o, "cbnn_bank_drawn_total", &|p| p.drawn);
+    bank_rows(&mut o, "cbnn_bank_underflow_total",
+              &|p| p.underflow_calls);
+    o.push_str("# TYPE cbnn_bank_level gauge\n");
+    for (model, level) in &snap.bank_levels {
+        o.push_str(&format!("cbnn_bank_level{{model=\"{}\"}} {level}\n",
+                            prom_label(model)));
+    }
+    o.push_str("# TYPE cbnn_lifecycle_quarantines_total counter\n");
+    for r in &snap.models {
+        o.push_str(&format!(
+            "cbnn_lifecycle_quarantines_total{{slot=\"{}\"}} {}\n",
+            r.slot, r.lifecycle.quarantines));
+    }
+    o.push_str("# TYPE cbnn_lifecycle_respawns_total counter\n");
+    for r in &snap.models {
+        o.push_str(&format!(
+            "cbnn_lifecycle_respawns_total{{slot=\"{}\"}} {}\n",
+            r.slot, r.lifecycle.respawns));
+    }
+    o.push_str("# TYPE cbnn_trace_dropped_events_total counter\n");
+    for (party, d) in snap.trace_dropped.iter().enumerate() {
+        o.push_str(&format!(
+            "cbnn_trace_dropped_events_total{{party=\"{party}\"}} {d}\n"));
+    }
+    o
+}
+
 /// Format helper used by benches to print paper-style table rows.
 pub fn fmt_duration(d: Duration) -> String {
     if d.as_secs_f64() >= 1.0 {
@@ -207,6 +312,82 @@ mod tests {
         assert!(h.mean() >= Duration::from_millis(20));
         assert!(h.max() >= Duration::from_millis(100));
         assert!(h.quantile(0.5) <= h.quantile(0.99));
+    }
+
+    #[test]
+    fn merge_folds_counts_and_max() {
+        let mut a = Histogram::default();
+        a.record(Duration::from_millis(1));
+        let mut b = Histogram::default();
+        b.record(Duration::from_millis(8));
+        b.record(Duration::from_millis(2));
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.max(), Duration::from_millis(8));
+        assert!(a.quantile(0.99) <= a.max());
+    }
+
+    #[test]
+    fn quantile_never_exceeds_the_observed_max() {
+        // one 1ms sample: the log bucket [512us, 1024us) used to report
+        // its upper bound 1024us > max -- every quantile must clamp to
+        // the observed maximum
+        let mut h = Histogram::default();
+        h.record(Duration::from_millis(1));
+        assert_eq!(h.max(), Duration::from_millis(1));
+        assert_eq!(h.quantile(0.5), Duration::from_millis(1));
+        for q in [0.1, 0.5, 0.9, 0.99, 1.0] {
+            assert!(h.quantile(q) <= h.max(),
+                    "q{q} = {:?} > max {:?}", h.quantile(q), h.max());
+        }
+        // a multi-sample histogram keeps the invariant too
+        let mut h = Histogram::default();
+        for us in [3u64, 700, 999, 77_000] {
+            h.record(Duration::from_micros(us));
+        }
+        for q in [0.25, 0.5, 0.75, 0.99] {
+            assert!(h.quantile(q) <= h.max());
+        }
+    }
+
+    #[test]
+    fn prometheus_text_exposes_the_documented_names() {
+        let mut latency = Histogram::default();
+        latency.record(Duration::from_millis(2));
+        let snap = MetricsSnapshot {
+            requests: 9,
+            latency,
+            models: vec![ModelRollup {
+                name: "mnist\"a\"".into(),
+                slot: 0,
+                online: ChanStats { bytes_sent: 10, messages: 2,
+                                    rounds: 1 },
+                ..ModelRollup::default()
+            }],
+            bank_levels: vec![("mnist\"a\"".into(), 4096)],
+            trace_dropped: vec![0, 0, 3],
+        };
+        let text = prometheus_text(&snap);
+        for name in ["cbnn_requests_total 9",
+                     "cbnn_request_latency_us{quantile=\"0.5\"}",
+                     "cbnn_lane_bytes_total",
+                     "cbnn_lane_rounds_total",
+                     "cbnn_lane_messages_total",
+                     "cbnn_bank_minted_total",
+                     "cbnn_bank_drawn_total",
+                     "cbnn_bank_underflow_total",
+                     "cbnn_bank_level",
+                     "cbnn_lifecycle_quarantines_total",
+                     "cbnn_lifecycle_respawns_total",
+                     "cbnn_trace_dropped_events_total{party=\"2\"} 3"] {
+            assert!(text.contains(name), "missing {name} in:\n{text}");
+        }
+        // label values are escaped
+        assert!(text.contains("model=\"mnist\\\"a\\\"\""), "{text}");
+        // every sample line follows its # TYPE header
+        let type_lines = text.lines()
+            .filter(|l| l.starts_with("# TYPE")).count();
+        assert!(type_lines >= 10, "{type_lines} TYPE headers");
     }
 
     #[test]

@@ -361,6 +361,14 @@ pub fn run_producer(ctx: &Ctx, bank: &TupleBank, tokens: Receiver<usize>)
     while let Ok(n) = tokens.recv() {
         let t = preproc::mint(ctx, n)?;
         bank.deliver(t);
+        // periodic telemetry: one level/credit gauge sample per
+        // delivered chunk (the bank's natural cadence)
+        if let Some(tr) = ctx.comm.tracer().filter(|tr| tr.enabled()) {
+            let (party, chan) = (ctx.id() as u8, ctx.comm.chan().tag());
+            tr.gauge(party, chan, "bank_level", bank.level() as u64);
+            tr.gauge(party, chan, "bank_credit",
+                     bank.credited_available() as u64);
+        }
     }
     Ok(())
 }

@@ -31,6 +31,10 @@ use super::{expect_elems, Ctx};
 
 /// Convert RSS bit shares into RSS arithmetic shares of the same bits.
 pub fn b2a(ctx: &Ctx, y: &BitShare) -> Result<Share> {
+    ctx.span("b2a", || b2a_inner(ctx, y))
+}
+
+fn b2a_inner(ctx: &Ctx, y: &BitShare) -> Result<Share> {
     let n = y.len();
     let me = ctx.id();
     let cnt = ctx.seeds.next_cnt();

@@ -174,6 +174,11 @@ fn kogge_stone_add(ctx: &Ctx, a: &[BitShare], b: &[BitShare])
 /// public constant `2^B - thresh` into the CSA and reads carry bit B.
 pub fn popcount_ge(ctx: &Ctx, planes: Vec<BitShare>, thresh: &[u32])
                    -> Result<BitShare> {
+    ctx.span("popcount_ge", || popcount_ge_inner(ctx, planes, thresh))
+}
+
+fn popcount_ge_inner(ctx: &Ctx, planes: Vec<BitShare>, thresh: &[u32])
+                     -> Result<BitShare> {
     let k = planes.len();
     assert!(k > 0, "popcount over zero planes");
     let n = planes[0].len();
@@ -206,6 +211,11 @@ pub fn popcount_ge(ctx: &Ctx, planes: Vec<BitShare>, thresh: &[u32])
 /// planes and a local power-of-two fold.
 pub fn popcount_to_arith(ctx: &Ctx, planes: Vec<BitShare>)
                          -> Result<Share> {
+    ctx.span("popcount_b2a", || popcount_to_arith_inner(ctx, planes))
+}
+
+fn popcount_to_arith_inner(ctx: &Ctx, planes: Vec<BitShare>)
+                           -> Result<Share> {
     let k = planes.len();
     assert!(k > 0, "popcount over zero planes");
     let n = planes[0].len();
@@ -235,6 +245,10 @@ pub fn popcount_to_arith(ctx: &Ctx, planes: Vec<BitShare>)
 /// binary-domain lowering of `PoolBits` (max of bits = OR), costing
 /// zero MSB tuples.
 pub fn or_planes(ctx: &Ctx, planes: Vec<BitShare>) -> Result<BitShare> {
+    ctx.span("or_pool", || or_planes_inner(ctx, planes))
+}
+
+fn or_planes_inner(ctx: &Ctx, planes: Vec<BitShare>) -> Result<BitShare> {
     assert!(!planes.is_empty(), "or over zero planes");
     let me = ctx.id();
     let n = planes[0].len();

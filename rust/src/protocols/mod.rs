@@ -95,6 +95,24 @@ impl<'a> Ctx<'a> {
     pub fn id(&self) -> usize {
         self.comm.id
     }
+
+    /// Run `f` under a `Protocol` trace span labelled `label`: the
+    /// span's rounds/bytes are the bound channel's counter deltas
+    /// across the body (the `cost_row` snapshot-diff pattern).  With
+    /// no sink installed or tracing off this is one atomic load and a
+    /// direct call -- the protocol hot path stays allocation-free.
+    pub fn span<R>(&self, label: &str, f: impl FnOnce() -> R) -> R {
+        match self.comm.tracer().filter(|t| t.enabled()) {
+            None => f(),
+            Some(tr) => {
+                let cur = tr.cursor(self.comm);
+                let out = f();
+                tr.close(self.comm, crate::trace::SpanKind::Protocol, 0,
+                         label, &cur);
+                out
+            }
+        }
+    }
 }
 
 #[cfg(test)]

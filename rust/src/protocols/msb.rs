@@ -55,6 +55,10 @@ pub fn msb_extract(ctx: &Ctx, x: &Share) -> Result<BitShare> {
 
 /// Full MSB extraction returning both share forms (see MsbOut).
 pub fn msb_extract_full(ctx: &Ctx, x: &Share) -> Result<MsbOut> {
+    ctx.span("msb", || msb_extract_inner(ctx, x))
+}
+
+fn msb_extract_inner(ctx: &Ctx, x: &Share) -> Result<MsbOut> {
     let n = x.len();
     let me = ctx.id();
 

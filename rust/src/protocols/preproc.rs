@@ -183,6 +183,10 @@ impl Reservoir {
 /// during setup, the serving producers on the offline channel
 /// concurrently with inference.
 pub fn mint(ctx: &Ctx, n: usize) -> Result<MsbTuple> {
+    ctx.span("mint", || mint_inner(ctx, n))
+}
+
+fn mint_inner(ctx: &Ctx, n: usize) -> Result<MsbTuple> {
     let me = ctx.id();
     let cnt = ctx.seeds.next_cnt();
     let (ba, bb) = ctx.seeds.rand_bits2(cnt, n);
@@ -250,6 +254,11 @@ impl MsbPool {
 /// Online MSB with preprocessed material: 2 rounds.
 pub fn msb_online(ctx: &Ctx, x: &Share, tup: MsbTuple)
                   -> Result<super::msb::MsbOut> {
+    ctx.span("msb_online", || msb_online_inner(ctx, x, tup))
+}
+
+fn msb_online_inner(ctx: &Ctx, x: &Share, tup: MsbTuple)
+                    -> Result<super::msb::MsbOut> {
     let me = ctx.id();
     let n = x.len();
     let xp = x.scale(2).add_const(me, 1).reshape(&[n]);

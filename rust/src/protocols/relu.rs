@@ -25,6 +25,10 @@ use super::{b2a::b2a, expect_elems, msb::msb_extract, sign::sign_bits, Ctx};
 
 /// Algorithm 5.  `x` arithmetic shares, `msb` the matching MSB bit shares.
 pub fn relu_ot(ctx: &Ctx, x: &Share, msb: &BitShare) -> Result<Share> {
+    ctx.span("relu_ot", || relu_ot_inner(ctx, x, msb))
+}
+
+fn relu_ot_inner(ctx: &Ctx, x: &Share, msb: &BitShare) -> Result<Share> {
     let n = x.len();
     let me = ctx.id();
     let shape = [n];

@@ -28,6 +28,10 @@ use super::{expect_elems, Ctx};
 
 /// Truncate shared values by `f` fractional bits.
 pub fn trunc(ctx: &Ctx, x: &Share, f: u32) -> Result<Share> {
+    ctx.span("trunc", || trunc_inner(ctx, x, f))
+}
+
+fn trunc_inner(ctx: &Ctx, x: &Share, f: u32) -> Result<Share> {
     let n = x.len();
     let me = ctx.id();
     let bound = ctx.cfg.bound_bits;

@@ -1,0 +1,266 @@
+//! Cross-party trace merge: join the three parties' span streams into
+//! one timeline and check the lock-step invariants.
+//!
+//! Join key: within one `(trace_id, kind)` group, every party emits
+//! its spans in the same program order (the walks and protocol phases
+//! are lock-step), so the k-th span on one party corresponds to the
+//! k-th on every other -- that pair `(trace_id, span path)` is the
+//! join.  Checks:
+//!
+//! * **Span counts** per `(trace_id, kind)` agree across parties (a
+//!   desync shows up as one party missing or growing a span).
+//! * **Labels** agree position-by-position (a misaligned join is a
+//!   label diff, not a silent mis-pair).
+//! * **Rounds** agree position-by-position -- the core protocol
+//!   invariant: every party advances its round counter at the same
+//!   phase boundaries.
+//! * **Flight bytes** per channel sum exactly to the party's
+//!   `transport::Stats` rows (only checkable when the sink dropped
+//!   nothing).
+//!
+//! `ci/trace_check.py` re-implements the same checks over the exported
+//! JSONL so CI can validate traces without a Rust toolchain; the
+//! `cbnn trace <DIR>` subcommand drives this module directly.
+
+use std::collections::BTreeMap;
+
+use super::{Span, SpanKind};
+use crate::transport::Stats;
+
+/// Outcome of a cross-party merge: the joined timeline plus every
+/// invariant violation found (empty = the traces are consistent).
+#[derive(Debug, Default)]
+pub struct MergeReport {
+    /// Distinct trace ids seen across all parties (0 excluded).
+    pub traces: Vec<u64>,
+    /// Lock-step spans joined across all three parties.
+    pub joined: usize,
+    /// Human-readable invariant violations.
+    pub problems: Vec<String>,
+}
+
+impl MergeReport {
+    pub fn ok(&self) -> bool {
+        self.problems.is_empty()
+    }
+}
+
+/// The kinds that are lock-step across parties (flights and gauges
+/// are per-party).
+const LOCKSTEP: [SpanKind; 3] =
+    [SpanKind::Request, SpanKind::Op, SpanKind::Protocol];
+
+fn group<'a>(spans: &'a [Span], kind: SpanKind)
+             -> BTreeMap<u64, Vec<&'a Span>> {
+    let mut out: BTreeMap<u64, Vec<&Span>> = BTreeMap::new();
+    for s in spans {
+        if s.kind == kind {
+            out.entry(s.trace_id).or_default().push(s);
+        }
+    }
+    out
+}
+
+/// Join the parties' spans and check the lock-step invariants (span
+/// counts, labels, rounds).  `parties[i]` is party i's spans in
+/// record order.
+pub fn merge_check(parties: &[Vec<Span>]) -> MergeReport {
+    let mut report = MergeReport::default();
+    let mut traces: Vec<u64> = parties
+        .iter()
+        .flat_map(|p| p.iter().map(|s| s.trace_id))
+        .filter(|&t| t != 0)
+        .collect();
+    traces.sort_unstable();
+    traces.dedup();
+    report.traces = traces;
+
+    for kind in LOCKSTEP {
+        let grouped: Vec<BTreeMap<u64, Vec<&Span>>> =
+            parties.iter().map(|p| group(p, kind)).collect();
+        let mut ids: Vec<u64> =
+            grouped.iter().flat_map(|g| g.keys().copied()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        for id in ids {
+            let lists: Vec<&[&Span]> = grouped
+                .iter()
+                .map(|g| g.get(&id).map(|v| v.as_slice()).unwrap_or(&[]))
+                .collect();
+            let counts: Vec<usize> = lists.iter().map(|l| l.len()).collect();
+            if counts.windows(2).any(|w| w[0] != w[1]) {
+                report.problems.push(format!(
+                    "trace {id}: {} span counts differ across parties: \
+                     {counts:?}",
+                    kind.as_str()));
+                continue;
+            }
+            for k in 0..counts[0] {
+                let first = lists[0][k];
+                for (party, l) in lists.iter().enumerate().skip(1) {
+                    let s = l[k];
+                    if s.label != first.label {
+                        report.problems.push(format!(
+                            "trace {id}: {} span {k}: label '{}' on \
+                             party 0 vs '{}' on party {party}",
+                            kind.as_str(), first.label, s.label));
+                    } else if s.rounds != first.rounds {
+                        report.problems.push(format!(
+                            "trace {id}: {} span {k} ('{}'): {} rounds \
+                             on party 0 vs {} on party {party}",
+                            kind.as_str(), first.label, first.rounds,
+                            s.rounds));
+                    }
+                }
+                report.joined += 1;
+            }
+        }
+    }
+    report
+}
+
+/// Sum of sent-flight bytes per channel tag.
+pub fn flight_bytes_by_chan(spans: &[Span]) -> BTreeMap<u8, u64> {
+    let mut out: BTreeMap<u8, u64> = BTreeMap::new();
+    for s in spans {
+        if s.kind == SpanKind::Flight && s.label.as_str() == "send" {
+            *out.entry(s.chan).or_default() += s.bytes_sent;
+        }
+    }
+    out
+}
+
+/// Reconcile one party's sent-flight bytes against its transport
+/// stats: every channel's traced bytes must equal the `Stats` row
+/// exactly.  Only meaningful when the sink dropped nothing and
+/// tracing covered the links' whole lifetime.
+pub fn check_flights(party: usize, spans: &[Span], stats: &Stats)
+                     -> Vec<String> {
+    let mut expected: BTreeMap<u8, u64> = BTreeMap::new();
+    for (c, s) in stats.channels() {
+        if s.bytes_sent > 0 {
+            expected.insert(c.tag(), s.bytes_sent);
+        }
+    }
+    check_flight_rows(party, spans, &expected)
+}
+
+/// [`check_flights`] against a parsed sidecar's per-channel byte rows
+/// -- the JSONL-import path (`cbnn trace <DIR>`), where no live
+/// `Stats` exists.  Zero-byte rows are ignored on both sides.
+pub fn check_flight_rows(party: usize, spans: &[Span],
+                         expected: &BTreeMap<u8, u64>) -> Vec<String> {
+    let mut problems = Vec::new();
+    let traced = flight_bytes_by_chan(spans);
+    let mut tags: Vec<u8> = traced
+        .keys()
+        .chain(expected.keys())
+        .copied()
+        .collect();
+    tags.sort_unstable();
+    tags.dedup();
+    for tag in tags {
+        let got = traced.get(&tag).copied().unwrap_or(0);
+        let want = expected.get(&tag).copied().unwrap_or(0);
+        if got != want {
+            problems.push(format!(
+                "party {party} chan {tag}: traced {got} bytes but \
+                 transport::Stats says {want}"));
+        }
+    }
+    problems
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Label;
+
+    fn span(party: u8, trace_id: u64, kind: SpanKind, label: &str,
+            rounds: u64) -> Span {
+        Span {
+            trace_id,
+            kind,
+            party,
+            chan: 0,
+            index: 0,
+            label: Label::new(label),
+            wall_start_us: 0,
+            wall_end_us: 0,
+            virt_start_ns: 0,
+            virt_end_ns: 0,
+            rounds,
+            bytes_sent: 0,
+            value: 0,
+        }
+    }
+
+    fn three(f: impl Fn(u8) -> Vec<Span>) -> Vec<Vec<Span>> {
+        (0..3u8).map(f).collect()
+    }
+
+    #[test]
+    fn agreeing_traces_merge_clean() {
+        let parties = three(|p| vec![
+            span(p, 1, SpanKind::Request, "model", 8),
+            span(p, 1, SpanKind::Op, "sign", 2),
+            span(p, 1, SpanKind::Protocol, "msb", 6),
+            // flights differ per party and are not joined
+            span(p, 1, SpanKind::Flight, "send", 0),
+        ]);
+        let r = merge_check(&parties);
+        assert!(r.ok(), "{:?}", r.problems);
+        assert_eq!(r.traces, vec![1]);
+        assert_eq!(r.joined, 3);
+    }
+
+    #[test]
+    fn round_disagreement_is_reported() {
+        let parties = three(|p| vec![span(
+            p, 1, SpanKind::Op, "sign", if p == 2 { 3 } else { 2 })]);
+        let r = merge_check(&parties);
+        assert_eq!(r.problems.len(), 1);
+        assert!(r.problems[0].contains("rounds"), "{}", r.problems[0]);
+    }
+
+    #[test]
+    fn count_mismatch_is_reported() {
+        let parties = three(|p| {
+            let mut v = vec![span(p, 1, SpanKind::Op, "sign", 2)];
+            if p == 1 {
+                v.push(span(p, 1, SpanKind::Op, "b2a", 3));
+            }
+            v
+        });
+        let r = merge_check(&parties);
+        assert_eq!(r.problems.len(), 1);
+        assert!(r.problems[0].contains("span counts differ"),
+                "{}", r.problems[0]);
+    }
+
+    #[test]
+    fn label_mismatch_is_reported() {
+        let parties = three(|p| vec![span(
+            p, 1, SpanKind::Protocol,
+            if p == 0 { "msb" } else { "b2a" }, 3)]);
+        let r = merge_check(&parties);
+        assert_eq!(r.problems.len(), 2);
+        assert!(r.problems[0].contains("label"), "{}", r.problems[0]);
+    }
+
+    #[test]
+    fn flight_bytes_sum_per_chan() {
+        let mut spans = vec![
+            span(0, 1, SpanKind::Flight, "send", 0),
+            span(0, 1, SpanKind::Flight, "send", 0),
+            span(0, 1, SpanKind::Flight, "recv", 0),
+        ];
+        spans[0].bytes_sent = 10;
+        spans[1].bytes_sent = 5;
+        spans[1].chan = 1;
+        spans[2].bytes_sent = 99; // recv flights don't count
+        let sums = flight_bytes_by_chan(&spans);
+        assert_eq!(sums.get(&0), Some(&10));
+        assert_eq!(sums.get(&1), Some(&5));
+    }
+}

@@ -1,0 +1,689 @@
+//! Per-party structured tracing spine (the telemetry plane).
+//!
+//! Every party owns one [`TraceSink`]: a bounded, pre-allocated span
+//! buffer.  Layers above record [`Span`]s into it -- the coordinator a
+//! `Request` span per inference job, the engine walks an `Op` span per
+//! model op (reusing the `cost_row` Stats-snapshot diffing), the
+//! protocol layer a `Protocol` span per phase (msb / b2a / relu / trunc
+//! / binlinear), the transport a `Flight` span per shipped or received
+//! frame (with PR 7's virtual-clock stamps), and the offline bank
+//! periodic `Gauge` samples of its level and credit.
+//!
+//! Design rules:
+//!
+//! * **Off means off.**  With tracing disabled, every hook is a single
+//!   atomic load and an early return: no span is built, nothing
+//!   allocates on the request path (see the tier-7 bench).
+//! * **Bounded, never silent.**  The buffer is sized up front
+//!   ([`TraceSink::with_capacity`]) and never reallocates; once full,
+//!   further spans are counted in [`TraceSink::dropped_events`]
+//!   instead of wedging or silently truncating.  The oldest spans are
+//!   kept (a trace's setup prefix is the part the merge tool needs).
+//! * **Spans are `Copy`.**  Labels are fixed-width inline strings
+//!   ([`Label`]), so recording a span never touches the heap.
+//! * **Cross-party joinable.**  All three parties emit `Op` /
+//!   `Protocol` / `Request` spans in lock-step program order, so the
+//!   k-th span of a `(trace_id, kind)` group on one party corresponds
+//!   to the k-th on every other -- the join key [`merge`] uses.  Round
+//!   counts must agree across parties; byte counts are per-party (the
+//!   roles send different amounts) and instead reconcile against
+//!   `transport::Stats` per channel.
+//!
+//! Trace ids are minted process-globally ([`next_trace_id`]) and
+//! carried to party threads out of band (the coordinator's job queue);
+//! each party thread parks its active id in a thread-local
+//! ([`set_current_trace`]) so the transport can attribute flights
+//! without widening every send signature.
+
+pub mod merge;
+
+use std::cell::Cell;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::Instant;
+
+use crate::jsonio::{self, Json};
+use crate::transport::{ChanStats, Comm, Stats};
+
+/// Default per-party span capacity: ~100 bytes a span, a few MB a
+/// party, comfortably above a soak run's span volume.
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+static NEXT_TRACE: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static CURRENT_TRACE: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Mint a process-globally monotone trace id (never 0; 0 means "no
+/// active request" -- setup and background traffic).
+pub fn next_trace_id() -> u64 {
+    NEXT_TRACE.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Park `id` as this thread's active trace (0 clears it).  Set by the
+/// party thread around each inference job; read by the transport to
+/// attribute flight spans.
+pub fn set_current_trace(id: u64) {
+    CURRENT_TRACE.with(|c| c.set(id));
+}
+
+/// This thread's active trace id (0 when none).
+pub fn current_trace() -> u64 {
+    CURRENT_TRACE.with(|c| c.get())
+}
+
+/// What a span measures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// One inference job end to end (per party).
+    Request,
+    /// One engine op (fused or unfused walk).
+    Op,
+    /// One protocol phase (msb / b2a / relu / trunc / binlinear /
+    /// mint).
+    Protocol,
+    /// One transport frame, sent (`label == "send"`) or received
+    /// (`label == "recv"`).
+    Flight,
+    /// A sampled value (offline bank level / credit); `value` carries
+    /// the sample, the counter fields stay 0.
+    Gauge,
+}
+
+impl SpanKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SpanKind::Request => "request",
+            SpanKind::Op => "op",
+            SpanKind::Protocol => "protocol",
+            SpanKind::Flight => "flight",
+            SpanKind::Gauge => "gauge",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<SpanKind> {
+        Some(match s {
+            "request" => SpanKind::Request,
+            "op" => SpanKind::Op,
+            "protocol" => SpanKind::Protocol,
+            "flight" => SpanKind::Flight,
+            "gauge" => SpanKind::Gauge,
+            _ => return None,
+        })
+    }
+}
+
+/// Fixed-width inline span label: recording never allocates.  Longer
+/// labels are truncated at a char boundary (op names fit; see the
+/// unit test).
+#[derive(Clone, Copy)]
+pub struct Label {
+    buf: [u8; 24],
+    len: u8,
+}
+
+impl Label {
+    pub fn new(s: &str) -> Label {
+        let mut len = s.len().min(24);
+        while !s.is_char_boundary(len) {
+            len -= 1;
+        }
+        let mut buf = [0u8; 24];
+        buf[..len].copy_from_slice(&s.as_bytes()[..len]);
+        Label { buf, len: len as u8 }
+    }
+
+    pub fn as_str(&self) -> &str {
+        std::str::from_utf8(&self.buf[..self.len as usize]).unwrap_or("?")
+    }
+}
+
+impl PartialEq for Label {
+    fn eq(&self, other: &Label) -> bool {
+        self.as_str() == other.as_str()
+    }
+}
+
+impl Eq for Label {}
+
+impl std::fmt::Debug for Label {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:?}", self.as_str())
+    }
+}
+
+impl std::fmt::Display for Label {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One recorded event.  `Copy` on purpose: the hot path moves it into
+/// the pre-allocated buffer without touching the heap.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    /// The request this span belongs to (0 = background / setup).
+    pub trace_id: u64,
+    pub kind: SpanKind,
+    pub party: u8,
+    /// Wire tag of the channel the span's traffic moved on.
+    pub chan: u8,
+    /// Op index (engine ops) or 0.
+    pub index: u32,
+    pub label: Label,
+    /// Wall-clock stamps, microseconds since the sink's origin.
+    pub wall_start_us: u64,
+    pub wall_end_us: u64,
+    /// Virtual-clock stamps, nanoseconds (0 outside virtual-clock
+    /// mode) -- flight spans carry the frame's send/arrival stamps.
+    pub virt_start_ns: u64,
+    pub virt_end_ns: u64,
+    /// Rounds this span advanced on its channel (agrees across
+    /// parties for lock-step kinds).
+    pub rounds: u64,
+    /// Bytes this party sent inside the span (per-party; reconciled
+    /// against `transport::Stats` per channel, not across parties).
+    pub bytes_sent: u64,
+    /// Gauge sample value (0 for non-gauge spans).
+    pub value: u64,
+}
+
+impl Span {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("trace_id", Json::Int(self.trace_id as i64)),
+            ("kind", Json::Str(self.kind.as_str().to_string())),
+            ("party", Json::Int(self.party as i64)),
+            ("chan", Json::Int(self.chan as i64)),
+            ("index", Json::Int(self.index as i64)),
+            ("label", Json::Str(self.label.as_str().to_string())),
+            ("wall_start_us", Json::Int(self.wall_start_us as i64)),
+            ("wall_end_us", Json::Int(self.wall_end_us as i64)),
+            ("virt_start_ns", Json::Int(self.virt_start_ns as i64)),
+            ("virt_end_ns", Json::Int(self.virt_end_ns as i64)),
+            ("rounds", Json::Int(self.rounds as i64)),
+            ("bytes_sent", Json::Int(self.bytes_sent as i64)),
+            ("value", Json::Int(self.value as i64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Span, String> {
+        let int = |key: &str| -> Result<u64, String> {
+            v.field(key)?
+                .as_i64()
+                .and_then(|i| u64::try_from(i).ok())
+                .ok_or_else(|| format!("field '{key}' is not a u64"))
+        };
+        let kind_str = v
+            .field("kind")?
+            .as_str()
+            .ok_or_else(|| "field 'kind' is not a string".to_string())?;
+        let kind = SpanKind::from_str(kind_str)
+            .ok_or_else(|| format!("unknown span kind '{kind_str}'"))?;
+        let label = v
+            .field("label")?
+            .as_str()
+            .ok_or_else(|| "field 'label' is not a string".to_string())?;
+        Ok(Span {
+            trace_id: int("trace_id")?,
+            kind,
+            party: int("party")? as u8,
+            chan: int("chan")? as u8,
+            index: int("index")? as u32,
+            label: Label::new(label),
+            wall_start_us: int("wall_start_us")?,
+            wall_end_us: int("wall_end_us")?,
+            virt_start_ns: int("virt_start_ns")?,
+            virt_end_ns: int("virt_end_ns")?,
+            rounds: int("rounds")?,
+            bytes_sent: int("bytes_sent")?,
+            value: int("value")?,
+        })
+    }
+}
+
+/// Snapshot taken at a span's start; `TraceSink::close` diffs the
+/// bound channel's counters against it -- the same Stats-snapshot
+/// diffing `engine::cost_row` uses, so a span's rounds/bytes are
+/// exactly the channel delta across its body.
+#[derive(Clone, Copy, Debug)]
+pub struct Cursor {
+    pub wall_us: u64,
+    pub virt_ns: u64,
+    pub chan: ChanStats,
+}
+
+fn recover<T>(r: Result<MutexGuard<'_, T>, PoisonError<MutexGuard<'_, T>>>)
+              -> MutexGuard<'_, T> {
+    r.unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Bounded per-party span recorder.  The buffer is allocated in full
+/// on the *first* record (so an installed-but-disabled sink costs a
+/// few machine words, not megabytes) and never grows; a record into a
+/// full sink increments `dropped_events` and keeps the existing spans
+/// (no silent truncation, no wedge).
+pub struct TraceSink {
+    enabled: AtomicBool,
+    origin: Instant,
+    dropped: AtomicU64,
+    ring: Mutex<Vec<Span>>,
+    capacity: usize,
+}
+
+impl TraceSink {
+    pub fn new() -> TraceSink {
+        TraceSink::with_capacity(DEFAULT_CAPACITY)
+    }
+
+    pub fn with_capacity(capacity: usize) -> TraceSink {
+        TraceSink {
+            enabled: AtomicBool::new(false),
+            origin: Instant::now(),
+            dropped: AtomicU64::new(0),
+            ring: Mutex::new(Vec::new()),
+            capacity,
+        }
+    }
+
+    /// The single gate every hook checks first: one atomic load.
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::SeqCst);
+    }
+
+    /// Microseconds since this sink's origin (its construction).
+    pub fn now_us(&self) -> u64 {
+        self.origin.elapsed().as_micros() as u64
+    }
+
+    /// Spans dropped because the buffer was full.
+    pub fn dropped_events(&self) -> u64 {
+        self.dropped.load(Ordering::SeqCst)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        recover(self.ring.lock()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Record one span (no-op unless enabled; counted, not stored,
+    /// when full).
+    pub fn record(&self, span: Span) {
+        if !self.enabled() {
+            return;
+        }
+        let mut ring = recover(self.ring.lock());
+        if ring.len() >= self.capacity {
+            drop(ring);
+            self.dropped.fetch_add(1, Ordering::SeqCst);
+            return;
+        }
+        if ring.capacity() == 0 {
+            // one-time full reservation; pushes below never reallocate
+            ring.reserve_exact(self.capacity);
+        }
+        ring.push(span);
+    }
+
+    /// Copy of every recorded span, in record order.
+    pub fn snapshot(&self) -> Vec<Span> {
+        recover(self.ring.lock()).clone()
+    }
+
+    /// Drop every recorded span and reset the dropped counter.
+    pub fn clear(&self) {
+        recover(self.ring.lock()).clear();
+        self.dropped.store(0, Ordering::SeqCst);
+    }
+
+    /// Open a span over `comm`'s bound channel: snapshot the wall /
+    /// virtual clocks and the channel counters.  Callers gate on
+    /// [`TraceSink::enabled`] first.
+    pub fn cursor(&self, comm: &Comm) -> Cursor {
+        Cursor {
+            wall_us: self.now_us(),
+            virt_ns: comm.virtual_now().as_nanos() as u64,
+            chan: comm.chan_stats(),
+        }
+    }
+
+    /// Close a span opened with [`TraceSink::cursor`]: the span's
+    /// rounds/bytes are the channel deltas across the body.
+    pub fn close(&self, comm: &Comm, kind: SpanKind, index: u32,
+                 label: &str, cur: &Cursor) {
+        let now = comm.chan_stats();
+        self.record(Span {
+            trace_id: current_trace(),
+            kind,
+            party: comm.id as u8,
+            chan: comm.chan().tag(),
+            index,
+            label: Label::new(label),
+            wall_start_us: cur.wall_us,
+            wall_end_us: self.now_us(),
+            virt_start_ns: cur.virt_ns,
+            virt_end_ns: comm.virtual_now().as_nanos() as u64,
+            rounds: now.rounds - cur.chan.rounds,
+            bytes_sent: now.bytes_sent - cur.chan.bytes_sent,
+            value: 0,
+        });
+    }
+
+    /// Record one transport frame (an instantaneous event span).
+    /// Called from the transport send/receive paths with the frame's
+    /// virtual-clock stamps.
+    pub fn flight(&self, party: u8, chan: u8, label: &str, bytes: u64,
+                  virt_start_ns: u64, virt_end_ns: u64) {
+        let now = self.now_us();
+        self.record(Span {
+            trace_id: current_trace(),
+            kind: SpanKind::Flight,
+            party,
+            chan,
+            index: 0,
+            label: Label::new(label),
+            wall_start_us: now,
+            wall_end_us: now,
+            virt_start_ns,
+            virt_end_ns,
+            rounds: 0,
+            bytes_sent: bytes,
+            value: 0,
+        });
+    }
+
+    /// Record one gauge sample (offline bank level / credit).
+    pub fn gauge(&self, party: u8, chan: u8, label: &str, value: u64) {
+        let now = self.now_us();
+        self.record(Span {
+            trace_id: current_trace(),
+            kind: SpanKind::Gauge,
+            party,
+            chan,
+            index: 0,
+            label: Label::new(label),
+            wall_start_us: now,
+            wall_end_us: now,
+            virt_start_ns: 0,
+            virt_end_ns: 0,
+            rounds: 0,
+            bytes_sent: 0,
+            value,
+        });
+    }
+}
+
+impl Default for TraceSink {
+    fn default() -> Self {
+        TraceSink::new()
+    }
+}
+
+// ---------------------------------------------------------------------
+// export plane: JSONL per party + a stats sidecar the merge tool
+// reconciles flight bytes against
+// ---------------------------------------------------------------------
+
+/// Serialize spans as JSON Lines (one span object per line).
+pub fn to_jsonl(spans: &[Span]) -> String {
+    let mut out = String::new();
+    for s in spans {
+        out.push_str(&jsonio::to_string(&s.to_json()));
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a JSONL trace file's contents (blank lines skipped).
+pub fn parse_jsonl(text: &str) -> Result<Vec<Span>, String> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = jsonio::parse(line)
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        out.push(Span::from_json(&v)
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?);
+    }
+    Ok(out)
+}
+
+/// The stats sidecar (`stats-p<N>.json`): the party's link totals,
+/// per-channel rows, and the sink's dropped-span count -- everything
+/// `ci/trace_check.py` needs to reconcile traced flight bytes.
+pub fn stats_json(party: usize, stats: &Stats, dropped: u64) -> Json {
+    let channels: Vec<Json> = stats
+        .channels()
+        .map(|(c, s)| {
+            Json::obj(vec![
+                ("chan", Json::Int(c.tag() as i64)),
+                ("bytes_sent", Json::Int(s.bytes_sent as i64)),
+                ("messages", Json::Int(s.messages as i64)),
+                ("rounds", Json::Int(s.rounds as i64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("party", Json::Int(party as i64)),
+        ("dropped_events", Json::Int(dropped as i64)),
+        ("bytes_sent", Json::Int(stats.bytes_sent as i64)),
+        ("messages", Json::Int(stats.messages as i64)),
+        ("rounds", Json::Int(stats.rounds as i64)),
+        ("channels", Json::Arr(channels)),
+    ])
+}
+
+/// A parsed stats sidecar: what `cbnn trace <DIR>` reconciles an
+/// imported JSONL trace against (the Rust-side mirror of what
+/// `ci/trace_check.py` reads).
+#[derive(Clone, Debug, Default)]
+pub struct Sidecar {
+    pub party: usize,
+    pub dropped_events: u64,
+    pub bytes_sent: u64,
+    pub messages: u64,
+    pub rounds: u64,
+    /// Per-channel sent bytes, keyed by wire tag.
+    pub chan_bytes: std::collections::BTreeMap<u8, u64>,
+}
+
+/// Parse a stats sidecar written by [`stats_json`].
+pub fn parse_stats(text: &str) -> Result<Sidecar, String> {
+    let v = jsonio::parse(text)?;
+    let int = |key: &str| -> Result<u64, String> {
+        v.field(key)?
+            .as_i64()
+            .and_then(|i| u64::try_from(i).ok())
+            .ok_or_else(|| format!("field '{key}' is not a u64"))
+    };
+    let mut out = Sidecar {
+        party: int("party")? as usize,
+        dropped_events: int("dropped_events")?,
+        bytes_sent: int("bytes_sent")?,
+        messages: int("messages")?,
+        rounds: int("rounds")?,
+        chan_bytes: Default::default(),
+    };
+    let rows = v
+        .field("channels")?
+        .as_arr()
+        .ok_or_else(|| "field 'channels' is not an array".to_string())?;
+    for row in rows {
+        let int = |key: &str| -> Result<u64, String> {
+            row.field(key)?
+                .as_i64()
+                .and_then(|i| u64::try_from(i).ok())
+                .ok_or_else(|| format!("channel row: '{key}' is not \
+                                        a u64"))
+        };
+        out.chan_bytes.insert(int("chan")? as u8, int("bytes_sent")?);
+    }
+    Ok(out)
+}
+
+/// Path of party `party`'s trace file under `dir`.
+pub fn trace_path(dir: &Path, party: usize) -> PathBuf {
+    dir.join(format!("trace-p{party}.jsonl"))
+}
+
+/// Path of party `party`'s stats sidecar under `dir`.
+pub fn stats_path(dir: &Path, party: usize) -> PathBuf {
+    dir.join(format!("stats-p{party}.json"))
+}
+
+/// Write one party's already-snapshotted spans plus its stats sidecar
+/// under `dir`, creating the directory if needed (the
+/// `SessionReport::traces` export path, where no live sink remains).
+pub fn write_trace(dir: &Path, party: usize, spans: &[Span],
+                   stats: &Stats, dropped: u64) -> std::io::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(trace_path(dir, party), to_jsonl(spans))?;
+    let sidecar = stats_json(party, stats, dropped);
+    let mut text = jsonio::to_string(&sidecar);
+    text.push('\n');
+    std::fs::write(stats_path(dir, party), text)
+}
+
+/// Write one party's trace (`trace-p<N>.jsonl`) and stats sidecar
+/// (`stats-p<N>.json`) under `dir`, creating it if needed.
+pub fn write_party_trace(dir: &Path, party: usize, sink: &TraceSink,
+                         stats: &Stats) -> std::io::Result<()> {
+    write_trace(dir, party, &sink.snapshot(), stats,
+                sink.dropped_events())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(trace_id: u64, kind: SpanKind, label: &str, rounds: u64)
+            -> Span {
+        Span {
+            trace_id,
+            kind,
+            party: 0,
+            chan: 0,
+            index: 0,
+            label: Label::new(label),
+            wall_start_us: 1,
+            wall_end_us: 2,
+            virt_start_ns: 0,
+            virt_end_ns: 0,
+            rounds,
+            bytes_sent: 10,
+            value: 0,
+        }
+    }
+
+    #[test]
+    fn labels_truncate_on_char_boundaries() {
+        assert_eq!(Label::new("msb").as_str(), "msb");
+        let long = "a-very-long-operation-label-indeed";
+        assert_eq!(Label::new(long).as_str(), &long[..24]);
+        // multibyte char straddling the cut is dropped, not split
+        let uni = format!("{}é", "x".repeat(23));
+        assert_eq!(Label::new(&uni).as_str(), &"x".repeat(23));
+    }
+
+    #[test]
+    fn disabled_sink_records_nothing() {
+        let sink = TraceSink::with_capacity(8);
+        sink.record(span(1, SpanKind::Op, "sign", 2));
+        assert!(sink.is_empty());
+        assert_eq!(sink.dropped_events(), 0);
+    }
+
+    #[test]
+    fn overflow_counts_dropped_events_instead_of_wedging() {
+        let sink = TraceSink::with_capacity(4);
+        sink.set_enabled(true);
+        for i in 0..10 {
+            sink.record(span(i, SpanKind::Flight, "send", 0));
+        }
+        assert_eq!(sink.len(), 4);
+        assert_eq!(sink.dropped_events(), 6);
+        // the oldest spans are the ones kept
+        let kept: Vec<u64> =
+            sink.snapshot().iter().map(|s| s.trace_id).collect();
+        assert_eq!(kept, vec![0, 1, 2, 3]);
+        sink.clear();
+        assert!(sink.is_empty());
+        assert_eq!(sink.dropped_events(), 0);
+    }
+
+    #[test]
+    fn jsonl_roundtrips() {
+        let spans = vec![
+            span(7, SpanKind::Request, "mnistnet1", 21),
+            span(7, SpanKind::Op, "matmul[xnor]", 5),
+            span(0, SpanKind::Gauge, "bank_level", 0),
+        ];
+        let text = to_jsonl(&spans);
+        assert_eq!(text.lines().count(), 3);
+        let back = parse_jsonl(&text).unwrap();
+        assert_eq!(back.len(), 3);
+        for (a, b) in spans.iter().zip(&back) {
+            assert_eq!(a.trace_id, b.trace_id);
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.rounds, b.rounds);
+            assert_eq!(a.bytes_sent, b.bytes_sent);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_lines() {
+        assert!(parse_jsonl("{\"kind\":\"op\"}\n").is_err());
+        assert!(parse_jsonl("not json\n").is_err());
+    }
+
+    #[test]
+    fn stats_sidecar_roundtrips() {
+        let text = jsonio::to_string(&stats_json(2, &Stats::default(), 3));
+        let side = parse_stats(&text).unwrap();
+        assert_eq!(side.party, 2);
+        assert_eq!(side.dropped_events, 3);
+        assert!(side.chan_bytes.is_empty());
+        // channel rows come back keyed by wire tag
+        let side = parse_stats(
+            "{\"party\":0,\"dropped_events\":0,\"bytes_sent\":7,\
+             \"messages\":1,\"rounds\":2,\"channels\":[{\"chan\":4,\
+             \"bytes_sent\":7,\"messages\":1,\"rounds\":2}]}").unwrap();
+        assert_eq!(side.chan_bytes.get(&4), Some(&7));
+        assert!(parse_stats("{\"party\":0}").is_err());
+    }
+
+    #[test]
+    fn trace_ids_are_monotone() {
+        let a = next_trace_id();
+        let b = next_trace_id();
+        assert!(b > a);
+    }
+
+    #[test]
+    fn current_trace_is_thread_local() {
+        set_current_trace(42);
+        assert_eq!(current_trace(), 42);
+        std::thread::spawn(|| {
+            assert_eq!(current_trace(), 0);
+        })
+        .join()
+        .unwrap();
+        set_current_trace(0);
+        assert_eq!(current_trace(), 0);
+    }
+}

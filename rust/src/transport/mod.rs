@@ -48,7 +48,8 @@ use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError, Weak};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError,
+                Weak};
 use std::time::{Duration, Instant};
 
 use crate::ring::bits::BitTensor;
@@ -394,6 +395,11 @@ struct Core {
     /// This party's virtual clock (nanoseconds since session start),
     /// advanced by frame arrival stamps in virtual-clock mode.
     vnow: AtomicU64,
+    /// This party's trace sink, installed once at service start
+    /// ([`Comm::install_tracer`]).  The send/receive paths record a
+    /// `Flight` span per frame when the sink is enabled; absent or
+    /// disabled, the hook is one load and an early return.
+    trace: OnceLock<Arc<crate::trace::TraceSink>>,
 }
 
 /// Recover a mutex guard from a peer thread's panic.  Used only on
@@ -551,6 +557,14 @@ impl ChanControl {
             core.close_chan(c);
         }
     }
+
+    /// This party's link-wide stats, if the links are still alive --
+    /// the trace exporter's stats-sidecar source for a service that
+    /// (by design) holds no strong link handle of its own.
+    pub fn stats(&self) -> Option<Stats> {
+        self.core.upgrade()
+            .map(|core| recover(core.stats.lock()).clone())
+    }
 }
 
 /// A party's endpoints to its two neighbours plus accounting, bound to one
@@ -704,7 +718,7 @@ impl Comm {
             lane.sent_frames, net.jitter);
         lane.sent_frames += 1;
         let now = Instant::now();
-        let (arrival, varrival) = if net.virtual_clock {
+        let (arrival, varrival, vstart) = if net.virtual_clock {
             // same model, virtual time: serialization queues behind the
             // lane's backlog, propagation (+jitter) overlaps
             let vnow = self.core.vnow.load(Ordering::SeqCst);
@@ -713,14 +727,14 @@ impl Comm {
                 + net.serialize(body.len()).as_nanos() as u64;
             lane.vbusy = vsent;
             (now, vsent + net.latency.as_nanos() as u64
-                 + jit.as_nanos() as u64)
+                 + jit.as_nanos() as u64, vstart)
         } else {
             // serialization occupies the link; propagation (latency)
             // overlaps across back-to-back messages
             let start = lane.busy.max(now);
             let sent = start + net.serialize(body.len());
             lane.busy = sent;
-            (sent + net.latency + jit, 0)
+            (sent + net.latency + jit, 0, 0)
         };
         {
             let mut st = recover(self.core.stats.lock());
@@ -729,6 +743,15 @@ impl Comm {
             let c = st.chan_mut(self.chan);
             c.bytes_sent += body.len() as u64;
             c.messages += 1;
+        }
+        if let Some(tr) = self.core.trace.get() {
+            if tr.enabled() {
+                // the recorded bytes are exactly what Stats accounted
+                // above, so per-channel flight sums reconcile to the
+                // Stats rows (the merge tool's byte check)
+                tr.flight(self.id as u8, self.chan.tag(), "send",
+                          body.len() as u64, vstart, varrival);
+            }
         }
         match &mut lane.link {
             LinkTx::Local(tx) => tx.send(Msg { body, arrival, varrival })
@@ -753,6 +776,20 @@ impl Comm {
     /// in place at `body[0]` (typed helpers slice past it -- stripping
     /// in place would memmove the whole payload).
     fn recv_body(&self, dir: Dir) -> Result<Vec<u8>, WireError> {
+        let body = self.recv_body_inner(dir)?;
+        if let Some(tr) = self.core.trace.get() {
+            if tr.enabled() {
+                // arrival flight: the virtual stamp is the party clock
+                // after observing the frame (PR 7's varrival advanced it)
+                let vnow = self.core.vnow.load(Ordering::SeqCst);
+                tr.flight(self.id as u8, self.chan.tag(), "recv",
+                          body.len() as u64, vnow, vnow);
+            }
+        }
+        Ok(body)
+    }
+
+    fn recv_body_inner(&self, dir: Dir) -> Result<Vec<u8>, WireError> {
         let lane = &self.core.rx[dir.index()];
         let my_tag = self.chan.tag();
         // a poisoned demux lock means a sibling receiver thread died
@@ -940,6 +977,33 @@ impl Comm {
         recover(self.core.stats.lock()).clone()
     }
 
+    /// This handle's bound-channel counters only.  Cheaper than
+    /// [`Comm::stats`] (no per-channel map clone); the trace spine's
+    /// span open/close snapshots use it so an enabled trace still
+    /// allocates nothing per span.
+    pub fn chan_stats(&self) -> ChanStats {
+        recover(self.core.stats.lock()).chan(self.chan)
+    }
+
+    /// Install this party's trace sink (shared by every channel handle
+    /// of these links; first installation wins).  Returns whether this
+    /// call installed it.
+    pub fn install_tracer(&self,
+                          sink: Arc<crate::trace::TraceSink>) -> bool {
+        self.core.trace.set(sink).is_ok()
+    }
+
+    /// The installed trace sink, if any.
+    pub fn tracer(&self) -> Option<&crate::trace::TraceSink> {
+        self.core.trace.get().map(|a| a.as_ref())
+    }
+
+    /// An owning handle on the installed trace sink (registry slots
+    /// sharing one link trio adopt the first installation this way).
+    pub fn tracer_handle(&self) -> Option<Arc<crate::trace::TraceSink>> {
+        self.core.trace.get().map(Arc::clone)
+    }
+
     pub fn reset_stats(&self) {
         *recover(self.core.stats.lock()) = Stats::default();
     }
@@ -1055,6 +1119,7 @@ fn make_comm(id: usize, net: NetConfig,
                   AtomicU64::new(0), AtomicU64::new(0)],
         parked_cap: AtomicUsize::new(DEFAULT_PARKED_CAP),
         vnow: AtomicU64::new(0),
+        trace: OnceLock::new(),
     };
     // only the default-bound online lane is pre-registered (this handle
     // IS its consumer); every other channel, slot 0's offline lane
@@ -1268,6 +1333,43 @@ mod tests {
             assert_eq!(s.rounds, 1);
             assert_eq!(s.online().bytes_sent, 33);
             assert_eq!(s.offline().bytes_sent, 0);
+        }
+    }
+
+    #[test]
+    fn traced_flights_reconcile_with_stats() {
+        // every shipped frame leaves a "send" flight span whose bytes
+        // sum (per channel) to the transport::Stats row exactly
+        let comms = local_trio(NetConfig::zero());
+        let sinks: Vec<_> = (0..3)
+            .map(|_| Arc::new(crate::trace::TraceSink::new()))
+            .collect();
+        for (c, s) in comms.iter().zip(&sinks) {
+            assert!(c.install_tracer(Arc::clone(s)));
+            s.set_enabled(true);
+        }
+        thread::scope(|sc| {
+            for c in &comms {
+                sc.spawn(move || {
+                    let data = vec![c.id as i32; 8];
+                    c.send_elems(Dir::Next, &data).unwrap();
+                    c.send_elems(Dir::Prev, &data).unwrap();
+                    c.recv_elems(Dir::Prev).unwrap();
+                    c.recv_elems(Dir::Next).unwrap();
+                });
+            }
+        });
+        for (c, s) in comms.iter().zip(&sinks) {
+            let spans = s.snapshot();
+            let sends = spans.iter()
+                .filter(|sp| sp.label.as_str() == "send").count();
+            let recvs = spans.iter()
+                .filter(|sp| sp.label.as_str() == "recv").count();
+            assert_eq!((sends, recvs), (2, 2));
+            let problems = crate::trace::merge::check_flights(
+                c.id, &spans, &c.stats());
+            assert!(problems.is_empty(), "{problems:?}");
+            assert_eq!(s.dropped_events(), 0);
         }
     }
 

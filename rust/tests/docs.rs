@@ -124,6 +124,51 @@ fn operations_documents_the_net_spec_grammar_and_wan_tuning() {
 }
 
 #[test]
+fn operations_covers_the_telemetry_plane() {
+    // ISSUE 8: the telemetry docs must show the export file layout,
+    // both merge front ends, the Prometheus names exactly as
+    // `metrics::prometheus_text` emits them, the partial-trace caveat,
+    // and the desync runbook -- gated so the contract cannot rot
+    let ops = repo_doc("OPERATIONS.md");
+    for needle in ["--trace-out", "--metrics-out", "trace-p0.jsonl",
+                   "stats-p0.json", "cbnn trace", "trace_check.py",
+                   "dropped_events", "partial", "trace on",
+                   "Debugging a desync"] {
+        assert!(ops.contains(needle),
+                "OPERATIONS.md telemetry docs miss {needle}");
+    }
+    for name in ["cbnn_requests_total", "cbnn_request_latency_us",
+                 "cbnn_lane_bytes_total", "cbnn_lane_rounds_total",
+                 "cbnn_lane_messages_total", "cbnn_bank_minted_total",
+                 "cbnn_bank_drawn_total", "cbnn_bank_underflow_total",
+                 "cbnn_bank_level", "cbnn_lifecycle_quarantines_total",
+                 "cbnn_lifecycle_respawns_total",
+                 "cbnn_trace_dropped_events_total"] {
+        assert!(ops.contains(name),
+                "OPERATIONS.md metric table misses {name}");
+    }
+    // the new admin commands are documented next to the old ones
+    for cmd in ["stats", "trace on"] {
+        assert!(ops.contains(cmd),
+                "OPERATIONS.md does not document admin `{cmd}`");
+    }
+}
+
+#[test]
+fn design_documents_the_telemetry_spine() {
+    // ISSUE 8: span model, the lock-step join key, the overhead
+    // argument, and the leakage argument must all be written down
+    let design = repo_doc("DESIGN.md");
+    for needle in ["Telemetry spine", "TraceSink", "trace_id",
+                   "lock-step", "rank", "dropped_events",
+                   "atomic load", "lazily allocated", "quiescence",
+                   "virt_start_ns", "Leakage"] {
+        assert!(design.contains(needle),
+                "DESIGN.md telemetry section misses {needle}");
+    }
+}
+
+#[test]
 fn readme_maps_paper_sections_to_modules() {
     let readme = repo_doc("README.md");
     for needle in ["transport", "protocols", "coordinator", "offline",

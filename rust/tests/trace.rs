@@ -1,0 +1,218 @@
+//! Trace-integrity acceptance tests (PR 8): a traced three-party
+//! inference produces per-party span streams that merge into one
+//! timeline with zero cross-party round disagreements, per-channel
+//! flight bytes that reconcile *exactly* with `transport::Stats`,
+//! fused/unfused span trees that stay consistent modulo folded signs,
+//! counted (never silent) ring-buffer overflow, and an on-disk JSONL
+//! export that round-trips -- the artifact the `trace-validate` CI job
+//! feeds to `ci/trace_check.py`.
+
+use std::sync::Arc;
+use std::thread;
+
+use cbnn::engine::session::{run_inference, SessionConfig, SessionReport};
+use cbnn::testutil::threeparty::{every_op_model, every_op_model_variant};
+use cbnn::testutil::Rng;
+use cbnn::trace::{self, merge, SpanKind, TraceSink};
+use cbnn::transport::{local_trio, Dir, NetConfig};
+
+fn inputs(seed: u64, n: usize) -> Vec<cbnn::ring::Tensor> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.tensor_small(&[1, 36], 15)).collect()
+}
+
+fn traced_run(fuse: bool) -> SessionReport {
+    let model = every_op_model();
+    let mut cfg = SessionConfig::new("artifacts/hlo");
+    cfg.trace = true;
+    cfg.opts.fuse = fuse;
+    run_inference(&model, inputs(7, 2), &cfg).expect("traced inference")
+}
+
+#[test]
+fn traced_inference_merges_with_zero_round_disagreements() {
+    let model = every_op_model();
+    let rep = traced_run(false);
+    assert_eq!(rep.traces.len(), 3);
+
+    for (party, spans) in rep.traces.iter().enumerate() {
+        assert!(!spans.is_empty(), "party {party} recorded nothing");
+        let count = |k: SpanKind| {
+            spans.iter().filter(|s| s.kind == k).count()
+        };
+        // one request span, one op span per model op, and the
+        // protocol + flight detail underneath them
+        assert_eq!(count(SpanKind::Request), 1, "party {party}");
+        assert_eq!(count(SpanKind::Op), model.ops.len(),
+                   "party {party}");
+        assert!(count(SpanKind::Protocol) > 0, "party {party}");
+        assert!(count(SpanKind::Flight) > 0, "party {party}");
+        // every span belongs to the one request minted for this run
+        let ids: Vec<u64> = spans.iter().map(|s| s.trace_id).collect();
+        assert!(ids.iter().all(|&t| t == ids[0] && t != 0),
+                "party {party}: stray trace ids in {ids:?}");
+        // the request span carries the model name
+        let req = spans.iter()
+            .find(|s| s.kind == SpanKind::Request).unwrap();
+        assert_eq!(req.label.as_str(), "everyop");
+        assert!(req.rounds > 0 && req.bytes_sent > 0);
+    }
+
+    // the acceptance criterion: the cross-party merge joins every
+    // lock-step span and finds zero disagreements
+    let report = merge::merge_check(&rep.traces);
+    assert!(report.ok(), "merge problems: {:?}", report.problems);
+    assert_eq!(report.traces.len(), 1);
+    assert!(report.joined >= 1 + model.ops.len());
+
+    // and every party's traced flight bytes sum per channel exactly
+    // to its transport stats (tracing covered the whole post-reset
+    // window the report's stats cover)
+    for (party, spans) in rep.traces.iter().enumerate() {
+        let problems =
+            merge::check_flights(party, spans, &rep.stats[party]);
+        assert!(problems.is_empty(), "{problems:?}");
+    }
+}
+
+#[test]
+fn fused_and_unfused_span_trees_agree_modulo_folded_signs() {
+    let unfused = traced_run(false);
+    let fused = traced_run(true);
+    for rep in [&unfused, &fused] {
+        let report = merge::merge_check(&rep.traces);
+        assert!(report.ok(), "merge problems: {:?}", report.problems);
+    }
+    let ops = |rep: &SessionReport| -> Vec<(u32, String, u64)> {
+        rep.traces[0].iter()
+            .filter(|s| s.kind == SpanKind::Op)
+            .map(|s| (s.index, s.label.as_str().to_string(), s.rounds))
+            .collect()
+    };
+    let (u, f) = (ops(&unfused), ops(&fused));
+    // the fused walk folds sign/pool/pm1/flatten layers into their
+    // consumers: fewer op spans, each mirroring a fused cost row
+    assert!(f.len() < u.len(), "fusion folded nothing: {f:?}");
+    assert_eq!(f.len(), fused.op_costs.len());
+    assert_eq!(u.len(), unfused.op_costs.len());
+    for (span, cost) in f.iter().zip(&fused.op_costs) {
+        assert_eq!(span.0 as usize, cost.index);
+        assert_eq!(span.1, trace::Label::new(&cost.op).as_str());
+    }
+    // fused labels carry the `[...]` lowering qualifiers
+    assert!(f.iter().any(|(_, l, _)| l.contains('[')), "{f:?}");
+    // binary-domain fusion strictly reduces total online rounds
+    let rounds = |v: &[(u32, String, u64)]| -> u64 {
+        v.iter().map(|(_, _, r)| r).sum()
+    };
+    assert!(rounds(&f) < rounds(&u),
+            "fused {} rounds vs unfused {}", rounds(&f), rounds(&u));
+}
+
+#[test]
+fn tracing_off_records_nothing() {
+    let model = every_op_model();
+    let cfg = SessionConfig::new("artifacts/hlo");
+    assert!(!cfg.trace, "tracing must be off by default");
+    let rep = run_inference(&model, inputs(9, 1), &cfg).unwrap();
+    assert!(rep.traces.iter().all(Vec::is_empty),
+            "spans recorded with tracing off");
+}
+
+#[test]
+fn sink_overflow_is_counted_never_silent() {
+    // a tiny sink on live links: the transport keeps shipping frames
+    // after the buffer fills, and every overflowed span is counted
+    let comms = local_trio(NetConfig::zero());
+    let sinks: Vec<_> = (0..3)
+        .map(|_| Arc::new(TraceSink::with_capacity(4)))
+        .collect();
+    for (c, s) in comms.iter().zip(&sinks) {
+        assert!(c.install_tracer(Arc::clone(s)));
+        s.set_enabled(true);
+    }
+    thread::scope(|sc| {
+        for c in &comms {
+            sc.spawn(move || {
+                for i in 0..8 {
+                    let data = vec![i as i32; 4];
+                    c.send_elems(Dir::Next, &data).unwrap();
+                    c.recv_elems(Dir::Prev).unwrap();
+                }
+            });
+        }
+    });
+    for (c, s) in comms.iter().zip(&sinks) {
+        assert_eq!(s.len(), 4, "party {}", c.id);
+        assert!(s.dropped_events() > 0, "party {}: overflow untracked",
+                c.id);
+        // 8 sends + 8 recvs, 4 kept
+        assert_eq!(s.dropped_events(), 16 - 4, "party {}", c.id);
+    }
+}
+
+/// Exports a traced two-model registry run under `target/traces`
+/// (override with `CBNN_TRACE_DIR`) and re-validates the files through
+/// the import path -- the same directory the `trace-validate` CI job
+/// hands to `ci/trace_check.py`.
+#[test]
+fn traced_registry_export_roundtrips_on_disk() {
+    use cbnn::coordinator::{ModelRegistry, ModelSpec};
+
+    let mut cfg = SessionConfig::new("artifacts/hlo");
+    cfg.trace = true;
+    let reg = ModelRegistry::start(vec![
+        ModelSpec::new("a", Arc::new(every_op_model())),
+        ModelSpec::new("b", Arc::new(every_op_model_variant("b", 3))),
+    ], &cfg).expect("registry up");
+    for i in 0..2u64 {
+        reg.infer("a", inputs(40 + i, 2)).expect("a batch");
+        reg.infer("b", inputs(60 + i, 2)).expect("b batch");
+    }
+
+    // export after shutdown: the last slot's exit stats are the
+    // quiesced link totals, so flight bytes reconcile exactly
+    let sinks: Vec<_> = (0..3).map(|p| reg.trace_sink(p)).collect();
+    let per_model = reg.shutdown().expect("shutdown");
+    let stats = &per_model.last().expect("models").1;
+    let dir = std::env::var("CBNN_TRACE_DIR")
+        .unwrap_or_else(|_| "target/traces".into());
+    let dir = std::path::Path::new(&dir);
+    for (party, sink) in sinks.iter().enumerate() {
+        assert_eq!(sink.dropped_events(), 0, "party {party} overflow");
+        trace::write_trace(dir, party, &sink.snapshot(), &stats[party],
+                           sink.dropped_events())
+            .expect("trace export");
+    }
+
+    // import path: parse the files back, merge, and reconcile --
+    // exactly what `cbnn trace <DIR>` and ci/trace_check.py do
+    let mut parties = Vec::new();
+    for party in 0..3 {
+        let text = std::fs::read_to_string(
+            trace::trace_path(dir, party)).unwrap();
+        parties.push(trace::parse_jsonl(&text).unwrap());
+    }
+    let report = merge::merge_check(&parties);
+    assert!(report.ok(), "merge problems: {:?}", report.problems);
+    // four request batches, every one joined across all parties
+    assert_eq!(report.traces.len(), 4);
+    let reqs = parties[0].iter()
+        .filter(|s| s.kind == SpanKind::Request).count();
+    assert_eq!(reqs, 4);
+    // request spans name the routed models
+    let labels: Vec<&str> = parties[0].iter()
+        .filter(|s| s.kind == SpanKind::Request)
+        .map(|s| s.label.as_str()).collect();
+    assert!(labels.contains(&"everyop") && labels.contains(&"b"),
+            "{labels:?}");
+    for party in 0..3 {
+        let side = trace::parse_stats(&std::fs::read_to_string(
+            trace::stats_path(dir, party)).unwrap()).unwrap();
+        assert_eq!(side.party, party);
+        assert_eq!(side.dropped_events, 0);
+        let problems = merge::check_flight_rows(
+            party, &parties[party], &side.chan_bytes);
+        assert!(problems.is_empty(), "{problems:?}");
+    }
+}
