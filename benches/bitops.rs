@@ -25,11 +25,16 @@
 //!      deterministic per-party span and send-flight counts (exact-gate
 //!      rows: a count that moved is a choreography change, caught here
 //!      alongside `tests/trace.rs`).
+//!   8. (zoo) the exported real models from `fixtures/zoo`: fused vs
+//!      unfused secure latency on lenet5/vgg7 plus deterministic
+//!      per-layer bytes/rounds rows, so the wire cost of every served
+//!      layer of the paper's actual workload is pinned exactly.
 //!
 //! Results are printed as a table and recorded to `BENCH_bitops.json`
 //! (tiers 1-3), `BENCH_offline.json` (tier 4), `BENCH_fusion.json`
-//! (tier 5), `BENCH_wan.json` (tier 6) and `BENCH_obs.json` (tier 7)
-//! at the workspace root so the bench trajectory is diffable.
+//! (tier 5), `BENCH_wan.json` (tier 6), `BENCH_obs.json` (tier 7) and
+//! `BENCH_zoo.json` (tier 8) at the workspace root so the bench
+//! trajectory is diffable.
 //!
 //!   cargo bench --bench bitops
 
@@ -582,7 +587,7 @@ fn obs_tier(rows: &mut Vec<Row>) {
              "walk", "batch", "traced(ms)", "off(ms)", "overhead");
     println!("{}", "-".repeat(62));
 
-    let model = every_op_model();
+    let model = std::sync::Arc::new(every_op_model());
     let batch = 2usize;
     let inputs = |seed: u64| -> Vec<Tensor> {
         let mut rng = Rng::new(seed);
@@ -633,6 +638,82 @@ fn obs_tier(rows: &mut Vec<Row>) {
     }
 }
 
+/// Tier 8: the model zoo -- the paper's real exported workload from
+/// the committed fixtures (fixtures/zoo).  Latency rows compare the
+/// fused against the unfused secure walk on real test images;
+/// `zoo_layer_bytes` rows pin party 0's per-layer wire bytes with the
+/// layer's round count in the `n` column, so any change to a served
+/// layer's wire shape on the real models fails the exact gate -- the
+/// per-layer analogue of `tests/budgets.rs`, priced on the zoo graphs.
+fn zoo_tier(rows: &mut Vec<Row>) {
+    use cbnn::datasets::EvalSet;
+    use cbnn::engine::session::{run_inference, SessionConfig};
+    use cbnn::nn::Model;
+    use std::sync::Arc;
+
+    println!("== tier 8: model zoo (committed fixtures) ==\n");
+    println!("{:<10} {:<8} {:>12} {:>12} {:>9}",
+             "model", "batch", "unfused(ms)", "fused(ms)", "speedup");
+    println!("{}", "-".repeat(60));
+
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent().expect("workspace root")
+        .join("fixtures").join("zoo");
+    for (name, batch, reps) in [("lenet5", 2usize, 5usize), ("vgg7", 1, 3)]
+    {
+        let model = Arc::new(
+            Model::load(&dir.join(format!("{name}.manifest.json")))
+                .expect("zoo fixtures are committed"));
+        let set = EvalSet::load(
+            &dir.join(format!("{}_subset.bin", model.dataset))).unwrap();
+        let inputs: Vec<Tensor> =
+            set.images.iter().take(batch).cloned().collect();
+        let ucfg = SessionConfig::new("artifacts/hlo");
+        let mut fcfg = SessionConfig::new("artifacts/hlo");
+        fcfg.opts.fuse = true;
+        let u0 = run_inference(&model, inputs.clone(), &ucfg).unwrap();
+        let f0 = run_inference(&model, inputs.clone(), &fcfg).unwrap();
+        assert_eq!(u0.logits, f0.logits,
+                   "{name}: fused walk diverged on the zoo fixture");
+        let u_ms = time(reps, || {
+            black_box(run_inference(&model, inputs.clone(), &ucfg)
+                      .unwrap());
+        }) * 1e3;
+        let f_ms = time(reps, || {
+            black_box(run_inference(&model, inputs.clone(), &fcfg)
+                      .unwrap());
+        }) * 1e3;
+        println!("{:<10} {:<8} {:>12.3} {:>12.3} {:>8.1}x",
+                 name, batch, u_ms, f_ms, u_ms / f_ms);
+        rows.push(Row { section: "zoo_fused_vs_unfused", op: name.into(),
+                        n: batch, baseline_ms: u_ms, fast_ms: f_ms });
+        // deterministic wire rows: the unfused walk names every layer,
+        // both walks contribute their totals
+        for (tag, rep0) in [("unfused", &u0), ("fused", &f0)] {
+            let (mut bytes, mut rounds) = (0u64, 0u64);
+            for c in &rep0.op_costs {
+                if tag == "unfused" {
+                    rows.push(Row {
+                        section: "zoo_layer_bytes",
+                        op: format!("{name}/{:02}-{}", c.index, c.op),
+                        n: c.rounds as usize,
+                        baseline_ms: c.bytes_sent as f64,
+                        fast_ms: c.bytes_sent as f64,
+                    });
+                }
+                bytes += c.bytes_sent;
+                rounds += c.rounds;
+            }
+            rows.push(Row { section: "zoo_layer_bytes",
+                            op: format!("{name}/total-{tag}"),
+                            n: rounds as usize,
+                            baseline_ms: bytes as f64,
+                            fast_ms: bytes as f64 });
+        }
+    }
+    println!();
+}
+
 fn write_json(file: &str, bench: &str, acceptance: &[(&str, &str)],
               rows: &[Row]) {
     let mut s = String::from("{\n");
@@ -681,6 +762,8 @@ fn main() {
     wan_tier(&mut wan_rows);
     let mut obs_rows = Vec::new();
     obs_tier(&mut obs_rows);
+    let mut zoo_rows = Vec::new();
+    zoo_tier(&mut zoo_rows);
     println!("(acceptance: packed XOR/AND >= 8x byte-per-bit; strided \
               Kogge-Stone levels >= 2x concat; warm-bank online MSB \
               >= 2x inline generation; fused hidden segment >= 8x fewer \
@@ -717,4 +800,13 @@ fn main() {
                    deterministic per walk; any drift is a choreography \
                    change")],
                &obs_rows);
+    write_json("BENCH_zoo.json", "zoo",
+               &[("zoo_fused_vs_unfused",
+                  "fused secure walk no slower than the arithmetic walk \
+                   on the exported lenet5/vgg7 fixtures"),
+                 ("zoo_layer_bytes",
+                  "per-layer bytes and rounds on the zoo graphs are \
+                   deterministic; any drift is a wire-format change on \
+                   the paper's real workload")],
+               &zoo_rows);
 }

@@ -28,6 +28,19 @@ S_W = 12     # weight fractional bits (upper bound; see _fit_weight_scale)
 BN_EPS = 1e-5
 _SAFE_BITS = 30   # per-layer |z| must stay below 2^_SAFE_BITS (headroom 2)
 
+# Weight-manifest schema version.  v1 = the unversioned legacy schema
+# (no `version` key); v2 adds the key itself plus per-layer
+# `binary: true` markers whose weight planes are exact {-1,+1} with no
+# bias.  The rust loader accepts 1..=MANIFEST_VERSION and rejects
+# anything newer with a typed error.
+MANIFEST_VERSION = 2
+
+
+class ManifestError(ValueError):
+    """A manifest/weights pair that cannot be loaded: version mismatch,
+    out-of-range pool reference, non-+-1 binary plane, or a layer graph
+    whose declared shapes lie.  Mirrored by `nn::LoadError` in rust."""
+
 
 def _same_pads(h, k, stride):
     out = -(-h // stride)
@@ -99,10 +112,23 @@ def quantize(layers, params, input_shape):
 
             wf = np.asarray(p["w"], np.float64)
             bf = np.asarray(p.get("b", 0.0), np.float64)
+            wbin = bool(l.get("wbin"))
             fold_wb = bn_p is not None and act_fn != "sign"
+            if wbin and fold_wb:
+                raise ValueError(
+                    "binary-weight layer must keep its BN folded into the "
+                    "sign threshold (act must be sign), not into W/b")
             if fold_wb:                                     # Eq. 10/11 fold
                 wf = wf * gamma_p                           # broadcast cout
                 bf = beta_p + gamma_p * bf
+
+            def _fit(w2d, max_in, s_start=S_W):
+                """Quantize one (out, K) weight block: exact +-1 planes at
+                scale 0 for binary layers, fitted fixed point otherwise."""
+                if wbin:
+                    return (np.where(np.asarray(w2d, np.float64) >= 0,
+                                     1, -1).astype(np.int64), 0)
+                return _fit_weight_scale(w2d, max_in, s_start=s_start)
 
             max_in = 1 if s_act == 0 else 4 << s_act
             # Separable-conv pairs chain two linear layers with no
@@ -113,24 +139,28 @@ def quantize(layers, params, input_shape):
             if t == "fc":
                 if spatial:
                     raise ValueError("fc before flatten unsupported")
-                wq, s_w = _fit_weight_scale(wf.T, max_in)   # (out, in)
+                wq, s_w = _fit(wf.T, max_in)                # (out, in)
                 s_z = s_act + s_w
                 ql = {"op": "matmul", "conv": False, "w": wq,
-                      "b": _q(bf, s_z), "m": wq.shape[0], "kdim": wq.shape[1]}
+                      "m": wq.shape[0], "kdim": wq.shape[1]}
+                if not wbin:
+                    ql["b"] = _q(bf, s_z)
                 cout = wq.shape[0]
             elif t == "conv":
                 k, stride = l["k"], l["stride"]
                 pl_, ph_ = _pads(h, k, stride, l["pad"])
                 cout = wf.shape[-1]
                 # HWIO -> (cout, K) with K index ((ky*k)+kx)*cin + cin_idx
-                wq, s_w = _fit_weight_scale(
+                wq, s_w = _fit(
                     np.transpose(wf, (3, 0, 1, 2)).reshape(cout, -1), max_in,
                     s_start=sep_cap)
                 s_z = s_act + s_w
                 ql = {"op": "matmul", "conv": True, "w": wq,
-                      "b": _q(bf, s_z), "m": cout, "kdim": wq.shape[1],
+                      "m": cout, "kdim": wq.shape[1],
                       "k": k, "stride": stride, "pad_lo": pl_, "pad_hi": ph_,
                       "cout": cout}
+                if not wbin:
+                    ql["b"] = _q(bf, s_z)
                 oh = (h + pl_ + ph_ - k) // stride + 1
                 ow = (w + pl_ + ph_ - k) // stride + 1
                 h, w, c = oh, ow, cout
@@ -138,7 +168,7 @@ def quantize(layers, params, input_shape):
                 k, stride = l["k"], l["stride"]
                 pl_, ph_ = _pads(h, k, stride, l["pad"])
                 # (k,k,1,C) -> (C, k*k) row per channel, K index ky*k+kx
-                wq, s_w = _fit_weight_scale(
+                wq, s_w = _fit(
                     np.transpose(wf[:, :, 0, :], (2, 0, 1)).reshape(c, -1),
                     max_in, s_start=sep_cap)
                 s_z = s_act + s_w
@@ -153,6 +183,8 @@ def quantize(layers, params, input_shape):
                 cout = c
             ql["n"] = 1 if t == "fc" else h * w
             ql["s_in"], ql["s_out"], ql["s_w"] = s_act, s_z, s_w
+            if wbin:
+                ql["binary"] = True
             q.append(ql)
             s_act = s_z
             prev_was_dw = t == "dwconv"
@@ -229,6 +261,15 @@ def calibrate(q, images, bound_bits=24, margin=1, max_iters=5, log=None):
             lin = q[j - 1]
             assert lin["op"] in ("matmul", "depthwise"), \
                 f"op before {l['op']} is {lin['op']}"
+            if lin.get("binary"):
+                # a +-1 plane cannot be right-scaled without ceasing to
+                # be +-1; binary layers are structurally bounded anyway
+                # (|d| <= K + |t| << 2^bound_bits), so reaching here
+                # means the threshold fold produced garbage
+                raise RuntimeError(
+                    f"calibration wants to rescale binary layer {j - 1} "
+                    f"(peak {peak}); binary sign inputs must stay inside "
+                    f"headroom by construction")
             scale = 1 << excess
             rs = lambda v: np.asarray(np.round(
                 np.asarray(v, np.float64) / scale), np.int64)
@@ -296,7 +337,7 @@ def serialize(name, dataset, input_shape, q, out_dir, hlo_names=None):
         js = {"op": l["op"]}
         for key in ("k", "stride", "pad_lo", "pad_hi", "m", "kdim", "n",
                     "cout", "c", "h", "w", "trunc", "s_in", "s_out", "s_w",
-                    "conv"):
+                    "conv", "binary"):
             if key in l and not isinstance(l[key], np.ndarray):
                 js[key] = l[key] if not isinstance(l[key], (np.integer,)) \
                     else int(l[key])
@@ -310,6 +351,7 @@ def serialize(name, dataset, input_shape, q, out_dir, hlo_names=None):
             li += 1
         layers_js.append(js)
     manifest = {
+        "version": MANIFEST_VERSION,
         "name": name, "dataset": dataset,
         "input": {"c": input_shape[2], "h": input_shape[0],
                   "w": input_shape[1]},
@@ -339,3 +381,158 @@ def export_eval_data(x, y, out_path, n=256):
 def fixed_input(x_nhwc):
     """One NHWC float image -> (C,H,W) int64 ring input."""
     return _q(np.transpose(x_nhwc, (2, 0, 1)), S_IN)
+
+
+# --------------------------------------------------------------------------
+# deserialization (the python mirror of the rust loader)
+# --------------------------------------------------------------------------
+def _pool_slice(pool, ref, what):
+    if (not isinstance(ref, dict) or "off" not in ref or "len" not in ref):
+        raise ManifestError(f"{what}: malformed pool reference {ref!r}")
+    off, ln = int(ref["off"]), int(ref["len"])
+    if off < 0 or ln < 0 or off + ln > pool.size:
+        raise ManifestError(
+            f"{what}: pool reference off={off} len={ln} exceeds weight "
+            f"pool of {pool.size} elements")
+    return pool[off:off + ln].astype(np.int64)
+
+
+def load_manifest(path):
+    """Load `<name>.manifest.json` (+ sibling `.weights.bin`) back into a
+    layer program runnable by `model.forward_fixed`.
+
+    Raises `ManifestError` on a version the loader does not speak, pool
+    references outside the weight pool, binary planes with values outside
+    {-1,+1}, or a layer graph whose declared shapes do not chain -- the
+    same rejections `nn::LoadError` types on the rust side.  Returns
+    (manifest_dict, qlayers).
+    """
+    with open(path) as f:
+        try:
+            man = json.load(f)
+        except json.JSONDecodeError as e:
+            raise ManifestError(f"{path}: not valid JSON: {e}") from e
+    version = int(man.get("version", 1))
+    if not 1 <= version <= MANIFEST_VERSION:
+        raise ManifestError(
+            f"manifest version {version} unsupported (loader speaks "
+            f"1..={MANIFEST_VERSION})")
+    for key in ("name", "dataset", "input", "ring_bits", "layers"):
+        if key not in man:
+            raise ManifestError(f"manifest missing required key `{key}`")
+    if man["ring_bits"] != 32:
+        raise ManifestError(f"ring_bits {man['ring_bits']} != 32")
+    wpath = str(path).replace(".manifest.json", ".weights.bin")
+    pool = np.frombuffer(open(wpath, "rb").read(), dtype="<i4")
+
+    inp = man["input"]
+    c, h, w = int(inp["c"]), int(inp["h"]), int(inp["w"])
+    spatial, feat = True, None
+    q = []
+    for i, js in enumerate(man["layers"]):
+        op = js.get("op")
+        what = f"layer {i} ({op})"
+        l = {k: v for k, v in js.items()}
+        if op == "matmul":
+            l["w"] = _pool_slice(pool, js["w"], what)
+            m, kdim = int(js["m"]), int(js["kdim"])
+            if l["w"].size != m * kdim:
+                raise ManifestError(
+                    f"{what}: weight plane holds {l['w'].size} values, "
+                    f"declared m*kdim = {m * kdim}")
+            l["w"] = l["w"].reshape(m, kdim)
+            if "b" in js:
+                l["b"] = _pool_slice(pool, js["b"], what)
+                if l["b"].size != m:
+                    raise ManifestError(f"{what}: bias len {l['b'].size} "
+                                        f"!= m {m}")
+            if js.get("binary"):
+                if "b" in js:
+                    raise ManifestError(f"{what}: binary layer carries a "
+                                        f"bias")
+                if not np.isin(l["w"], (-1, 1)).all():
+                    raise ManifestError(
+                        f"{what}: binary plane has values outside +-1")
+            if js.get("conv"):
+                if not spatial:
+                    raise ManifestError(f"{what}: conv after flatten")
+                k, stride = int(js["k"]), int(js["stride"])
+                pl_, ph_ = int(js["pad_lo"]), int(js["pad_hi"])
+                if kdim != k * k * c:
+                    raise ManifestError(
+                        f"{what}: kdim {kdim} != k*k*cin = {k * k * c}")
+                h = (h + pl_ + ph_ - k) // stride + 1
+                w = (w + pl_ + ph_ - k) // stride + 1
+                if h <= 0 or w <= 0:
+                    raise ManifestError(f"{what}: kernel {k} does not fit "
+                                        f"the activation")
+                c = int(js["cout"])
+                if m != c:
+                    raise ManifestError(f"{what}: m {m} != cout {c}")
+            else:
+                if spatial:
+                    raise ManifestError(f"{what}: fc before flatten")
+                if kdim != feat:
+                    raise ManifestError(
+                        f"{what}: kdim {kdim} != incoming features {feat}")
+                feat = m
+        elif op == "depthwise":
+            if not spatial:
+                raise ManifestError(f"{what}: depthwise after flatten")
+            k, stride = int(js["k"]), int(js["stride"])
+            l["w"] = _pool_slice(pool, js["w"], what)
+            if l["w"].size != c * k * k:
+                raise ManifestError(
+                    f"{what}: weight plane holds {l['w'].size} values, "
+                    f"declared c*k*k = {c * k * k}")
+            l["w"] = l["w"].reshape(c, k * k)
+            if js.get("binary") and not np.isin(l["w"], (-1, 1)).all():
+                raise ManifestError(
+                    f"{what}: binary plane has values outside +-1")
+            pl_, ph_ = int(js["pad_lo"]), int(js["pad_hi"])
+            h = (h + pl_ + ph_ - k) // stride + 1
+            w = (w + pl_ + ph_ - k) // stride + 1
+            if h <= 0 or w <= 0:
+                raise ManifestError(f"{what}: kernel {k} does not fit")
+        elif op == "sign":
+            l["t"] = _pool_slice(pool, js["t"], what)
+            l["flip"] = _pool_slice(pool, js["flip"], what)
+            want = c if spatial else feat
+            if l["t"].size != want or l["flip"].size != want:
+                raise ManifestError(
+                    f"{what}: threshold/flip len != channel count {want}")
+        elif op == "pool_bits":
+            k, s = int(js["k"]), int(js["stride"])
+            h, w = (h - k) // s + 1, (w - k) // s + 1
+            if h <= 0 or w <= 0:
+                raise ManifestError(f"{what}: pool {k} does not fit")
+        elif op == "flatten":
+            if (int(js["c"]), int(js["h"]), int(js["w"])) != (c, h, w):
+                raise ManifestError(
+                    f"{what}: declares {js['c']}x{js['h']}x{js['w']}, "
+                    f"activation is {c}x{h}x{w}")
+            feat = c * h * w
+            spatial = False
+        elif op in ("pm1", "relu"):
+            pass
+        else:
+            raise ManifestError(f"{what}: unknown op")
+        q.append(l)
+    return man, q
+
+
+def load_eval_data(path):
+    """Read an export_eval_data file back: ((n,c,h,w) int64 images,
+    int labels)."""
+    raw = np.frombuffer(open(path, "rb").read(), dtype="<i4")
+    if raw.size < 4:
+        raise ManifestError(f"{path}: truncated eval-data header")
+    n, c, h, w = (int(v) for v in raw[:4])
+    per = c * h * w
+    if raw.size != 4 + n * per + n:
+        raise ManifestError(
+            f"{path}: payload holds {raw.size - 4} values, header "
+            f"declares {n * per + n}")
+    imgs = raw[4:4 + n * per].astype(np.int64).reshape(n, c, h, w)
+    labels = raw[4 + n * per:].astype(np.int64)
+    return imgs, labels

@@ -17,8 +17,16 @@ Two forward paths:
 from __future__ import annotations
 
 import numpy as np
-import jax
-import jax.numpy as jnp
+
+# jax is only needed for the float/training path; the fixed-point oracle
+# below is pure numpy so fixture-verification environments (the CI
+# model-parity job) can import this module without a jax install.
+try:
+    import jax
+    import jax.numpy as jnp
+except ImportError:  # pragma: no cover - exercised by the CI parity job
+    jax = None
+    jnp = None
 
 from . import networks
 
@@ -28,21 +36,26 @@ MASK32 = (1 << 32) - 1
 # --------------------------------------------------------------------------
 # straight-through sign
 # --------------------------------------------------------------------------
-@jax.custom_vjp
-def sign_ste(x):
-    return jnp.where(x >= 0, 1.0, -1.0)
+if jax is not None:
+    @jax.custom_vjp
+    def sign_ste(x):
+        return jnp.where(x >= 0, 1.0, -1.0)
 
+    def _sign_fwd(x):
+        return sign_ste(x), x
 
-def _sign_fwd(x):
-    return sign_ste(x), x
+    def _sign_bwd(res, g):
+        x = res
+        return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
 
+    sign_ste.defvjp(_sign_fwd, _sign_bwd)
 
-def _sign_bwd(res, g):
-    x = res
-    return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
-
-
-sign_ste.defvjp(_sign_fwd, _sign_bwd)
+    def sign_ste_w(w):
+        """Weight binarization: sign forward, *identity* backward.  Unlike
+        the activation STE (whose |x|<=1 gate matches the paper), latent
+        weights must keep receiving gradients even after drifting past
+        +-1, or they freeze at their first saturation."""
+        return w + jax.lax.stop_gradient(jnp.where(w >= 0, 1.0, -1.0) - w)
 
 
 # --------------------------------------------------------------------------
@@ -54,9 +67,10 @@ def _expand(layers):
     for l in layers:
         if l["type"] == "conv" and l.get("sep") and l["k"] > 1:
             out.append({"type": "dwconv", "k": l["k"], "stride": l["stride"],
-                        "pad": l["pad"]})
+                        "pad": l["pad"], "wbin": l.get("wbin", False)})
             out.append({"type": "conv", "k": 1, "stride": 1, "pad": "SAME",
-                        "cout": l["cout"], "sep": False})
+                        "cout": l["cout"], "sep": False,
+                        "wbin": l.get("wbin", False)})
         else:
             out.append(dict(l))
     return out
@@ -75,7 +89,10 @@ def init_params(layers, input_shape, key):
             key, sub = jax.random.split(key)
             fan = k * k * c
             wgt = jax.random.normal(sub, (k, k, c, co)) * np.sqrt(2.0 / fan)
-            params.append({"w": wgt, "b": jnp.zeros((co,))})
+            # binary-weight layers carry no bias: the following BN's beta
+            # absorbs it, and the +-1 lowering admits none
+            params.append({"w": wgt} if l.get("wbin")
+                          else {"w": wgt, "b": jnp.zeros((co,))})
             if l["pad"] == "VALID":
                 h, w = (h - k) // l["stride"] + 1, (w - k) // l["stride"] + 1
             else:
@@ -95,7 +112,8 @@ def init_params(layers, input_shape, key):
                 feat = h * w * c if h else c
             key, sub = jax.random.split(key)
             wgt = jax.random.normal(sub, (feat, l["out"])) * np.sqrt(2.0 / feat)
-            params.append({"w": wgt, "b": jnp.zeros((l["out"],))})
+            params.append({"w": wgt} if l.get("wbin")
+                          else {"w": wgt, "b": jnp.zeros((l["out"],))})
             feat = l["out"]
         elif t == "bn":
             dim = feat if feat is not None else c
@@ -127,17 +145,24 @@ def forward_float(layers, params, x, train=False, bn_momentum=0.9):
         t = l["type"]
         np_ = p
         if t == "conv":
+            w_eff = sign_ste_w(p["w"]) if l.get("wbin") else p["w"]
             x = jax.lax.conv_general_dilated(
-                x, p["w"], (l["stride"], l["stride"]), l["pad"],
-                dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["b"]
+                x, w_eff, (l["stride"], l["stride"]), l["pad"],
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            if "b" in p:
+                x = x + p["b"]
         elif t == "dwconv":
             cin = x.shape[-1]
+            w_eff = sign_ste_w(p["w"]) if l.get("wbin") else p["w"]
             x = jax.lax.conv_general_dilated(
-                x, p["w"], (l["stride"], l["stride"]), l["pad"],
+                x, w_eff, (l["stride"], l["stride"]), l["pad"],
                 dimension_numbers=("NHWC", "HWIO", "NHWC"),
                 feature_group_count=cin)
         elif t == "fc":
-            x = x @ p["w"] + p["b"]
+            w_eff = sign_ste_w(p["w"]) if l.get("wbin") else p["w"]
+            x = x @ w_eff
+            if "b" in p:
+                x = x + p["b"]
         elif t == "bn":
             axes = tuple(range(x.ndim - 1))
             if train:

@@ -20,13 +20,16 @@ ReLU and full-precision activations.
 from __future__ import annotations
 
 
-def conv(cout, k=3, stride=1, pad="SAME", sep=False):
+def conv(cout, k=3, stride=1, pad="SAME", sep=False, wbin=False):
+    """wbin=True -> weights binarized to {-1,+1} via STE (customized-BNN
+    hidden layers); export emits exact +-1 planes with no bias, which is
+    what lets the secure engine lower the layer to XNOR+popcount."""
     return {"type": "conv", "k": k, "stride": stride, "pad": pad,
-            "cout": cout, "sep": sep}
+            "cout": cout, "sep": sep, "wbin": wbin}
 
 
-def fc(out):
-    return {"type": "fc", "out": out}
+def fc(out, wbin=False):
+    return {"type": "fc", "out": out, "wbin": wbin}
 
 
 def bn():
@@ -89,6 +92,42 @@ def mnistnet4():
             flatten(),
             fc(256), bn(), act("relu"),
             fc(10)]
+
+
+def lenet5():
+    """Canonical zoo target: LeNet5-on-MNIST, customized per the paper --
+    hidden layers use depthwise-separable convolutions and +-1 (wbin)
+    weights with sign activations, so every hidden layer lowers to the
+    engine's binary domain; the first conv and the logits fc stay
+    fixed-point (the standard BNN first/last-layer exception)."""
+    return [conv(6, k=5, pad="VALID"), bn(), act("sign"), pool(),
+            conv(16, k=5, pad="VALID", sep=True, wbin=True), bn(),
+            act("sign"), pool(),
+            flatten(),
+            fc(120, wbin=True), bn(), act("sign"),
+            fc(84, wbin=True), bn(), act("sign"),
+            fc(10)]
+
+
+def vgg7(width=0.5):
+    """Canonical zoo target: VGG7-on-CIFAR10 (6 conv + 1 fc), customized:
+    separable +-1 hidden convolutions, sign activations, VALID padding
+    throughout (the binary lowering admits no zero padding -- a padded 0
+    is not a +-1 value).  Width scales channel counts like the other
+    cifar nets."""
+    w = lambda c: _w(width, c)
+    return [conv(w(64), k=3, pad="VALID"), bn(), act("sign"),
+            conv(w(64), k=3, pad="VALID", sep=True, wbin=True), bn(),
+            act("sign"), pool(),
+            conv(w(128), k=3, pad="VALID", sep=True, wbin=True), bn(),
+            act("sign"),
+            conv(w(128), k=3, pad="VALID", sep=True, wbin=True), bn(),
+            act("sign"), pool(),
+            conv(w(256), k=3, pad="VALID", sep=True, wbin=True), bn(),
+            act("sign"),
+            conv(w(256), k=3, pad="VALID", sep=True, wbin=True), bn(),
+            act("sign"),
+            flatten(), fc(10)]
 
 
 def _w(width, c):
@@ -203,6 +242,8 @@ def cifarnet8(width=0.25):
 
 
 REGISTRY = {
+    "lenet5": (lenet5, "mnist"),
+    "vgg7": (vgg7, "cifar"),
     "mnistnet1": (mnistnet1, "mnist"),
     "mnistnet2": (mnistnet2, "mnist"),
     "mnistnet3": (mnistnet3, "mnist"),

@@ -1,0 +1,146 @@
+"""Model-zoo driver: train the canonical targets (LeNet5 / VGG7) with KD,
+export versioned manifests + golden fixtures, and verify the fixed-point
+accuracy floor before anything is committed.
+
+    python -m compile.zoo                 # both models, full budget
+    python -m compile.zoo --model lenet5  # one model
+    python -m compile.zoo --quick         # smoke-test budget (no floor)
+
+Artifacts land in fixtures/zoo/:
+
+    <name>.manifest.json   versioned weight manifest (layer graph,
+                           +-1 planes, folded sign thresholds)
+    <name>.weights.bin     int32 LE weight pool
+    <name>.golden.json     per-sample reference logits + labels +
+                           fixed-point accuracy + committed floor
+    mnist_subset.bin / cifar_subset.bin
+                           eval subsets (export.export_eval_data format)
+
+The golden logits are produced by `model.forward_fixed`, the bit-exact
+python oracle of the rust engine; `rust/tests/zoo.rs` replays the same
+subset through the secure walks and demands exact agreement.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+from . import datasets, export, kd, networks
+from . import model as M
+from .train import ART, _save_params, _teacher, _train_one, load_params
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "..", "..",
+                        "fixtures", "zoo")
+
+# name -> (dataset, teacher net, accuracy floor, committed subset size)
+ZOO = {
+    "lenet5": ("mnist", "mnistnet4", 0.98, 256),
+    "vgg7": ("cifar", "cifarnet7", 0.84, 128),
+}
+
+
+def _student(name, data, *, teacher, epochs, lr, seed, log, reuse):
+    cache = os.path.join(ART, "models", f"{name}.npz")
+    if reuse and os.path.exists(cache):
+        log(f"[zoo] reusing cached {name}")
+        return load_params(cache)
+    layers, params, hist, _ = _train_one(
+        name, data, teacher=teacher, lam=0.1, epochs=epochs, lr=lr,
+        seed=seed, log=log)
+    os.makedirs(os.path.dirname(cache), exist_ok=True)
+    _save_params(cache, layers, params)
+    log(f"[zoo] {name} float val_acc={hist['val_acc'][-1]:.4f}")
+    return layers, params
+
+
+def export_model(name, layers, params, data, out_dir, *, floor, subset,
+                 check_floor=True, log=print):
+    """quantize -> permute -> calibrate -> serialize -> golden fixtures.
+
+    Returns the fixed-point accuracy on the exported subset.  Raises
+    SystemExit if `check_floor` and the accuracy misses the floor --
+    fixtures below the floor must never be committed.
+    """
+    ds = ZOO[name][0]
+    in_shape = networks.INPUT_SHAPES[ds]
+    _, _, xte, yte = data
+    q = export.quantize(layers, [
+        {k: np.asarray(v) for k, v in p.items()} for p in params], in_shape)
+    q = export.permute_fc_after_flatten(q)
+    calib = [export.fixed_input(xte[i]) for i in range(min(32, len(xte)))]
+    export.calibrate(q, calib, log=log)
+    os.makedirs(out_dir, exist_ok=True)
+    export.serialize(name, ds, in_shape, q, out_dir)
+
+    sub_path = os.path.join(out_dir, f"{ds}_subset.bin")
+    export.export_eval_data(xte, yte, sub_path, n=subset)
+
+    # round-trip through the serialized artifacts so the golden logits
+    # certify the manifest itself, not the in-memory program
+    _, q2 = export.load_manifest(
+        os.path.join(out_dir, f"{name}.manifest.json"))
+    imgs, labels = export.load_eval_data(sub_path)
+    logits = np.stack([M.forward_fixed(q2, img) for img in imgs])
+    acc = float((logits.argmax(axis=1) == labels).mean())
+    log(f"[zoo] {name} fixed-point subset acc={acc:.4f} (floor {floor})")
+
+    golden = {
+        "name": name, "dataset": ds, "subset": os.path.basename(sub_path),
+        "floor": floor, "accuracy": acc, "n": int(len(labels)),
+        "labels": [int(v) for v in labels],
+        "logits": [[int(v) for v in row] for row in logits],
+    }
+    with open(os.path.join(out_dir, f"{name}.golden.json"), "w") as f:
+        json.dump(golden, f, indent=1)
+    if check_floor and acc < floor:
+        raise SystemExit(
+            f"[zoo] {name}: fixed-point accuracy {acc:.4f} is below the "
+            f"committed floor {floor}; fixtures not fit to commit")
+    return acc
+
+
+def run(names, *, quick=False, reuse=True, out_dir=FIXTURES, seed=0,
+        log=print):
+    os.makedirs(os.path.join(ART, "models"), exist_ok=True)
+    accs = {}
+    teachers = {}
+    for name in names:
+        ds, tname, floor, subset = ZOO[name]
+        nm, nc = (800, 300) if quick else (6000, 1200)
+        ep_t, ep_s = (2, 2) if quick else (8, 14)
+        data = datasets.load(ds, nm, nc, seed=seed)
+        if tname not in teachers:
+            teachers[tname] = _teacher(tname, data, ep_t, log=log)
+        layers, params = _student(
+            name, data, teacher=teachers[tname], epochs=ep_s,
+            lr=2e-3, seed=seed, log=log, reuse=reuse)
+        accs[name] = export_model(
+            name, layers, params, data, out_dir, floor=floor,
+            subset=subset, check_floor=not quick, log=log)
+    return accs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", choices=sorted(ZOO), action="append",
+                    help="restrict to one model (repeatable)")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny budget; skips the accuracy-floor gate")
+    ap.add_argument("--retrain", action="store_true",
+                    help="ignore cached student weights")
+    ap.add_argument("--out", default=FIXTURES)
+    args = ap.parse_args()
+    names = args.model or sorted(ZOO)
+    accs = run(names, quick=args.quick, reuse=not args.retrain,
+               out_dir=args.out)
+    print(json.dumps(accs, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,17 +1,31 @@
 """Quantization / folding correctness: the integer layer program must
-agree with the float network it was derived from (argmax agreement), and
-the serialized manifest must round-trip."""
+agree with the float network it was derived from (argmax agreement), the
+serialized manifest must round-trip, and the committed zoo fixtures must
+replay their golden logits bit-exactly.
+
+The golden-vector and malformed-manifest tests below are numpy-only so
+the CI `model-parity` job can run them without jax; the quantization
+tests need jax and skip where it is absent."""
 
 import json
 import os
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
+try:
+    import jax
+    import jax.numpy as jnp
+except ImportError:  # the model-parity CI job installs numpy only
+    jax = None
+
 from compile import datasets, export, networks
 from compile import model as M
+
+needs_jax = pytest.mark.skipif(jax is None, reason="jax not installed")
+
+ZOO_DIR = os.path.join(os.path.dirname(__file__), "..", "..",
+                       "fixtures", "zoo")
 
 
 def _trained_ish(name, seed=0):
@@ -33,6 +47,7 @@ def _trained_ish(name, seed=0):
 # bits flip inside the quantization error and cascade; trained nets have
 # real margins (aot.py records fixed_acc vs plaintext acc on trained nets).
 # Shallow nets must agree strongly even untrained.
+@needs_jax
 @pytest.mark.parametrize("name,thresh", [("mnistnet1", 0.75),
                                          ("mnistnet2", 0.75),
                                          ("mnistnet3", 1 / 3),
@@ -48,6 +63,7 @@ def test_fixed_matches_float_argmax(name, thresh):
     assert np.mean(pf == pq) >= thresh, (pf, pq)
 
 
+@needs_jax
 def test_quantize_structure_mnistnet3():
     layers, params, in_shape, _ = _trained_ish("mnistnet3")
     q = export.quantize(layers, params, in_shape)
@@ -59,6 +75,7 @@ def test_quantize_structure_mnistnet3():
                    "matmul"]
 
 
+@needs_jax
 def test_relu_path_structure_mnistnet2():
     layers, params, in_shape, _ = _trained_ish("mnistnet2")
     q = export.quantize(layers, params, in_shape)
@@ -68,6 +85,7 @@ def test_relu_path_structure_mnistnet2():
     assert q[1]["trunc"] == q[0]["s_w"] > 0
 
 
+@needs_jax
 def test_separable_becomes_depthwise_pointwise():
     layers, params, in_shape, _ = _trained_ish("cifarnet2")
     q = export.quantize(layers, params, in_shape)
@@ -78,6 +96,7 @@ def test_separable_becomes_depthwise_pointwise():
             assert q[i + 1]["op"] == "matmul" and q[i + 1]["k"] == 1
 
 
+@needs_jax
 def test_serialize_roundtrip(tmp_path):
     layers, params, in_shape, _ = _trained_ish("mnistnet1")
     q = export.quantize(layers, params, in_shape)
@@ -109,6 +128,7 @@ def test_eval_data_format(tmp_path):
     assert len(labels) == 8 and imgs.max() <= (1 << export.S_IN)
 
 
+@needs_jax
 def test_threshold_flip_handles_negative_gamma():
     """BN gamma' < 0 must flip the comparison orientation (Eq. 8 caveat)."""
     layers0, in_shape = networks.build("mnistnet1")
@@ -127,6 +147,97 @@ def test_threshold_flip_handles_negative_gamma():
     assert np.mean(np.asarray(pf) == np.asarray(pq)) >= 0.5
 
 
+# --------------------------------------------------------------------------
+# golden-vector cases on the committed zoo fixtures (numpy-only)
+# --------------------------------------------------------------------------
+def _zoo(*parts):
+    return os.path.join(ZOO_DIR, *parts)
+
+
+def test_golden_manifest_reloads_to_identical_logits():
+    """The committed lenet5 manifest reloads and replays its exported
+    golden logits bit-exactly -- the frozen-oracle contract the rust
+    `tests/zoo.rs` asserts from the other side of the wire."""
+    man, q = export.load_manifest(_zoo("lenet5.manifest.json"))
+    assert man["version"] == export.MANIFEST_VERSION
+    with open(_zoo("lenet5.golden.json")) as f:
+        golden = json.load(f)
+    imgs, labels = export.load_eval_data(_zoo("mnist_subset.bin"))
+    assert len(labels) == golden["n"] == len(golden["logits"])
+    for i in range(16):
+        logits = M.forward_fixed(q, imgs[i])
+        assert [int(v) for v in np.ravel(logits)] == golden["logits"][i], i
+
+
+def test_manifest_reserialize_roundtrip(tmp_path):
+    """load -> serialize -> load must reproduce identical logits: the
+    writer and the reader are exact inverses on a real trained model."""
+    man, q = export.load_manifest(_zoo("lenet5.manifest.json"))
+    shape = (man["input"]["h"], man["input"]["w"], man["input"]["c"])
+    export.serialize("again", man["dataset"], shape, q, str(tmp_path))
+    _, q2 = export.load_manifest(str(tmp_path / "again.manifest.json"))
+    imgs, _ = export.load_eval_data(_zoo("mnist_subset.bin"))
+    for i in range(4):
+        a = M.forward_fixed(q, imgs[i])
+        b = M.forward_fixed(q2, imgs[i])
+        assert np.array_equal(np.ravel(a), np.ravel(b)), i
+
+
+def _mutated(tmp_path, mutate):
+    """Copy the committed lenet5 pair into tmp and rewrite the manifest
+    text through `mutate`; returns the path to load."""
+    text = open(_zoo("lenet5.manifest.json")).read()
+    (tmp_path / "m.manifest.json").write_text(mutate(text))
+    (tmp_path / "m.weights.bin").write_bytes(
+        open(_zoo("lenet5.weights.bin"), "rb").read())
+    return str(tmp_path / "m.manifest.json")
+
+
+@pytest.mark.parametrize("label,mutate", [
+    ("truncated", lambda t: t[: len(t) // 2]),
+    ("future-version", lambda t: t.replace('"version": 2',
+                                           '"version": 99', 1)),
+    ("kdim-lie", lambda t: t.replace('"kdim": ', '"kdim": 9', 1)),
+    ("fc-before-flatten", lambda t: t.replace('"conv": true',
+                                              '"conv": false', 1)),
+])
+def test_malformed_manifest_rejected(tmp_path, label, mutate):
+    path = _mutated(tmp_path, mutate)
+    with pytest.raises(export.ManifestError):
+        export.load_manifest(path)
+
+
+def test_truncated_weight_pool_rejected(tmp_path):
+    text = open(_zoo("lenet5.manifest.json")).read()
+    raw = open(_zoo("lenet5.weights.bin"), "rb").read()
+    (tmp_path / "m.manifest.json").write_text(text)
+    (tmp_path / "m.weights.bin").write_bytes(raw[: len(raw) // 2])
+    with pytest.raises(export.ManifestError):
+        export.load_manifest(str(tmp_path / "m.manifest.json"))
+
+
+def test_out_of_pm1_binary_weight_rejected(tmp_path):
+    man = json.load(open(_zoo("lenet5.manifest.json")))
+    binary = next(l for l in man["layers"] if l.get("binary"))
+    raw = bytearray(open(_zoo("lenet5.weights.bin"), "rb").read())
+    poison = (binary["w"]["off"] + binary["w"]["len"] // 2) * 4
+    raw[poison:poison + 4] = np.int32(2).tobytes()
+    (tmp_path / "m.manifest.json").write_text(
+        open(_zoo("lenet5.manifest.json")).read())
+    (tmp_path / "m.weights.bin").write_bytes(bytes(raw))
+    with pytest.raises(export.ManifestError, match="outside"):
+        export.load_manifest(str(tmp_path / "m.manifest.json"))
+
+
+def test_truncated_eval_data_rejected(tmp_path):
+    raw = open(_zoo("mnist_subset.bin"), "rb").read()
+    p = tmp_path / "cut.bin"
+    p.write_bytes(raw[: len(raw) // 2])
+    with pytest.raises(export.ManifestError):
+        export.load_eval_data(str(p))
+
+
+@needs_jax
 def test_calibrate_bounds_sign_inputs():
     """After calibration every sign/relu input on the calibration slice
     stays inside the MSB protocol headroom (2^24)."""

@@ -1,0 +1,75 @@
+"""Model-zoo fixture gate (numpy-only, no jax): the committed manifests,
+eval subsets and golden logits must stay mutually consistent, and the
+python oracle must clear the committed accuracy floors when re-walking
+the full subsets.  The rust side (`rust/tests/zoo.rs`) asserts the same
+contracts against the secure engine; together they pin the paper's real
+workload from both ends of the pipeline."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import export
+from compile import model as M
+
+ZOO_DIR = os.path.join(os.path.dirname(__file__), "..", "..",
+                       "fixtures", "zoo")
+
+# name -> (subset file, committed accuracy floor, minimum subset size)
+ZOO = {
+    "lenet5": ("mnist_subset.bin", 0.98, 256),
+    "vgg7": ("cifar_subset.bin", 0.84, 128),
+}
+
+
+def _zoo(*parts):
+    return os.path.join(ZOO_DIR, *parts)
+
+
+@pytest.fixture(scope="module", params=sorted(ZOO))
+def bundle(request):
+    name = request.param
+    subset, floor, n_min = ZOO[name]
+    man, q = export.load_manifest(_zoo(f"{name}.manifest.json"))
+    with open(_zoo(f"{name}.golden.json")) as f:
+        golden = json.load(f)
+    imgs, labels = export.load_eval_data(_zoo(subset))
+    return name, floor, n_min, man, q, golden, imgs, labels
+
+
+def test_fixture_shapes_agree(bundle):
+    name, floor, n_min, man, q, golden, imgs, labels = bundle
+    assert man["version"] == export.MANIFEST_VERSION
+    assert imgs.shape[0] >= n_min, "committed subset too small"
+    inp = man["input"]
+    assert imgs.shape[1:] == (inp["c"], inp["h"], inp["w"])
+    assert golden["n"] == len(labels) == len(golden["logits"])
+    assert golden["labels"] == [int(v) for v in labels]
+    assert golden["floor"] == floor, "floor drifted from the committed one"
+
+
+def test_zoo_nets_are_binary_and_trunc_free(bundle):
+    name, _, _, man, q, golden, _, _ = bundle
+    ops = [l["op"] for l in man["layers"]]
+    assert "relu" not in ops, (
+        "zoo nets must be sign-only so every secure walk is bit-exact")
+    binary = [l for l in man["layers"] if l.get("binary")]
+    assert len(binary) >= 3, "expected a binary hidden chain"
+    assert not any("b" in l for l in binary), "binary layers are bias-free"
+
+
+def test_full_subset_accuracy_clears_floor(bundle):
+    """Re-walk the whole committed subset and match the exported
+    accuracy exactly -- any drift means oracle and fixtures diverged."""
+    name, floor, _, man, q, golden, imgs, labels = bundle
+    preds = []
+    for i in range(imgs.shape[0]):
+        logits = M.forward_fixed(q, imgs[i])
+        row = [int(v) for v in np.ravel(logits)]
+        assert row == golden["logits"][i], f"{name}: logits row {i}"
+        preds.append(int(np.argmax(np.ravel(logits))))
+    acc = float(np.mean(np.asarray(preds) == np.asarray(labels)))
+    assert acc >= floor, f"{name}: accuracy {acc:.4f} below floor {floor}"
+    assert abs(acc - golden["accuracy"]) < 1e-9

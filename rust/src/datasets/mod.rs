@@ -26,12 +26,20 @@ impl EvalSet {
         }
         let ints: Vec<i32> = raw.chunks_exact(4)
             .map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect();
+        if ints[..4].iter().any(|&v| v < 0) {
+            bail!("negative eval data header {:?}", &ints[..4]);
+        }
         let (n, c, h, w) = (ints[0] as usize, ints[1] as usize,
                             ints[2] as usize, ints[3] as usize);
-        let per = c * h * w;
-        if ints.len() != 4 + n * per + n {
-            bail!("eval data length mismatch: {} vs {}", ints.len(),
-                  4 + n * per + n);
+        // checked: a lying header must error, not wrap and mis-slice
+        let per = c.checked_mul(h).and_then(|v| v.checked_mul(w))
+            .ok_or_else(|| anyhow::anyhow!("eval data header overflow"))?;
+        let want = n.checked_mul(per)
+            .and_then(|v| v.checked_add(n))
+            .and_then(|v| v.checked_add(4))
+            .ok_or_else(|| anyhow::anyhow!("eval data header overflow"))?;
+        if ints.len() != want {
+            bail!("eval data length mismatch: {} vs {}", ints.len(), want);
         }
         let images = (0..n).map(|i| {
             Tensor::from_vec(&[per], ints[4 + i * per..4 + (i + 1) * per]

@@ -6,6 +6,60 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// Typed parse failure: what went wrong and the byte offset it went
+/// wrong at.  Manifest loading (`nn::LoadError::Json`) and the trace
+/// importer surface this instead of a bare string so tests can assert
+/// on the failure class, not on message wording.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JsonError {
+    pub pos: usize,
+    pub kind: JsonErrorKind,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum JsonErrorKind {
+    /// Input ended mid-value (truncated file).
+    Truncated,
+    /// A malformed token (bad literal, bad number, bad escape).
+    BadToken(String),
+    /// Structural violation (missing `:`/`,`, unterminated string...).
+    Syntax(String),
+    /// Bytes left over after the top-level value.
+    TrailingData,
+}
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.kind {
+            JsonErrorKind::Truncated => {
+                write!(f, "unexpected end of input at byte {}", self.pos)
+            }
+            JsonErrorKind::BadToken(m) | JsonErrorKind::Syntax(m) => {
+                write!(f, "{m} at byte {}", self.pos)
+            }
+            JsonErrorKind::TrailingData => {
+                write!(f, "trailing data at byte {}", self.pos)
+            }
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
+
+impl From<JsonError> for String {
+    fn from(e: JsonError) -> String {
+        e.to_string()
+    }
+}
+
+fn err<T>(pos: usize, kind: JsonErrorKind) -> Result<T, JsonError> {
+    Err(JsonError { pos, kind })
+}
+
+fn syntax<T>(pos: usize, msg: impl Into<String>) -> Result<T, JsonError> {
+    err(pos, JsonErrorKind::Syntax(msg.into()))
+}
+
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
     Null,
@@ -79,13 +133,13 @@ impl Json {
 // ---------------------------------------------------------------------
 // parser
 // ---------------------------------------------------------------------
-pub fn parse(s: &str) -> Result<Json, String> {
+pub fn parse(s: &str) -> Result<Json, JsonError> {
     let b = s.as_bytes();
     let mut pos = 0usize;
     let v = parse_value(b, &mut pos)?;
     skip_ws(b, &mut pos);
     if pos != b.len() {
-        return Err(format!("trailing data at byte {pos}"));
+        return err(pos, JsonErrorKind::TrailingData);
     }
     Ok(v)
 }
@@ -96,10 +150,10 @@ fn skip_ws(b: &[u8], pos: &mut usize) {
     }
 }
 
-fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, JsonError> {
     skip_ws(b, pos);
     if *pos >= b.len() {
-        return Err("unexpected end of input".into());
+        return err(*pos, JsonErrorKind::Truncated);
     }
     match b[*pos] {
         b'{' => parse_obj(b, pos),
@@ -112,16 +166,17 @@ fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
     }
 }
 
-fn lit(b: &[u8], pos: &mut usize, word: &str, v: Json) -> Result<Json, String> {
+fn lit(b: &[u8], pos: &mut usize, word: &str, v: Json)
+       -> Result<Json, JsonError> {
     if b[*pos..].starts_with(word.as_bytes()) {
         *pos += word.len();
         Ok(v)
     } else {
-        Err(format!("invalid literal at byte {pos}", pos = *pos))
+        err(*pos, JsonErrorKind::BadToken("invalid literal".into()))
     }
 }
 
-fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json, JsonError> {
     let start = *pos;
     if *pos < b.len() && (b[*pos] == b'-' || b[*pos] == b'+') {
         *pos += 1;
@@ -137,20 +192,25 @@ fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json, String> {
             _ => break,
         }
     }
-    let text = std::str::from_utf8(&b[start..*pos])
-        .map_err(|_| "bad utf8 in number".to_string())?;
+    let Ok(text) = std::str::from_utf8(&b[start..*pos]) else {
+        return err(start, JsonErrorKind::BadToken("bad utf8 in number".into()));
+    };
     if is_float {
-        text.parse::<f64>().map(Json::Float)
-            .map_err(|e| format!("bad float '{text}': {e}"))
+        text.parse::<f64>().map(Json::Float).map_err(|e| JsonError {
+            pos: start,
+            kind: JsonErrorKind::BadToken(format!("bad float '{text}': {e}")),
+        })
     } else {
-        text.parse::<i64>().map(Json::Int)
-            .map_err(|e| format!("bad int '{text}': {e}"))
+        text.parse::<i64>().map(Json::Int).map_err(|e| JsonError {
+            pos: start,
+            kind: JsonErrorKind::BadToken(format!("bad int '{text}': {e}")),
+        })
     }
 }
 
-fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, JsonError> {
     if b[*pos] != b'"' {
-        return Err(format!("expected string at byte {pos}", pos = *pos));
+        return syntax(*pos, "expected string");
     }
     *pos += 1;
     let mut out = String::new();
@@ -176,30 +236,39 @@ fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
                     b'f' => out.push('\u{000C}'),
                     b'u' => {
                         if *pos + 4 >= b.len() {
-                            return Err("truncated \\u escape".into());
+                            return err(*pos, JsonErrorKind::Truncated);
                         }
-                        let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])
-                            .map_err(|_| "bad \\u escape".to_string())?;
-                        let cp = u32::from_str_radix(hex, 16)
-                            .map_err(|_| "bad \\u escape".to_string())?;
+                        let cp = std::str::from_utf8(&b[*pos + 1..*pos + 5])
+                            .ok()
+                            .and_then(|h| u32::from_str_radix(h, 16).ok());
+                        let Some(cp) = cp else {
+                            return err(*pos, JsonErrorKind::BadToken(
+                                "bad \\u escape".into()));
+                        };
                         out.push(char::from_u32(cp).unwrap_or('\u{FFFD}'));
                         *pos += 4;
                     }
-                    c => return Err(format!("bad escape \\{}", c as char)),
+                    c => {
+                        return err(*pos, JsonErrorKind::BadToken(
+                            format!("bad escape \\{}", c as char)));
+                    }
                 }
                 *pos += 1;
             }
             c => {
                 // copy raw utf8 bytes through
                 let len = utf8_len(c);
-                out.push_str(
-                    std::str::from_utf8(&b[*pos..*pos + len])
-                        .map_err(|_| "bad utf8".to_string())?);
+                let Ok(frag) = std::str::from_utf8(
+                    &b[*pos..(*pos + len).min(b.len())]) else {
+                    return err(*pos, JsonErrorKind::BadToken(
+                        "bad utf8".into()));
+                };
+                out.push_str(frag);
                 *pos += len;
             }
         }
     }
-    Err("unterminated string".into())
+    err(b.len(), JsonErrorKind::Truncated)
 }
 
 fn utf8_len(first: u8) -> usize {
@@ -211,7 +280,7 @@ fn utf8_len(first: u8) -> usize {
     }
 }
 
-fn parse_arr(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+fn parse_arr(b: &[u8], pos: &mut usize) -> Result<Json, JsonError> {
     *pos += 1; // '['
     let mut out = Vec::new();
     skip_ws(b, pos);
@@ -228,12 +297,13 @@ fn parse_arr(b: &[u8], pos: &mut usize) -> Result<Json, String> {
                 *pos += 1;
                 return Ok(Json::Arr(out));
             }
-            _ => return Err(format!("expected , or ] at byte {pos}", pos = *pos)),
+            None => return err(*pos, JsonErrorKind::Truncated),
+            _ => return syntax(*pos, "expected , or ]"),
         }
     }
 }
 
-fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Json, JsonError> {
     *pos += 1; // '{'
     let mut out = BTreeMap::new();
     skip_ws(b, pos);
@@ -246,7 +316,7 @@ fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Json, String> {
         let key = parse_string(b, pos)?;
         skip_ws(b, pos);
         if b.get(*pos) != Some(&b':') {
-            return Err(format!("expected : at byte {pos}", pos = *pos));
+            return syntax(*pos, "expected :");
         }
         *pos += 1;
         out.insert(key, parse_value(b, pos)?);
@@ -257,7 +327,8 @@ fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Json, String> {
                 *pos += 1;
                 return Ok(Json::Obj(out));
             }
-            _ => return Err(format!("expected , or }} at byte {pos}", pos = *pos)),
+            None => return err(*pos, JsonErrorKind::Truncated),
+            _ => return syntax(*pos, "expected , or }"),
         }
     }
 }
@@ -383,6 +454,24 @@ mod tests {
         assert!(parse("[1,]").is_err());
         assert!(parse("{}x").is_err());
         assert!(parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn typed_error_kinds() {
+        // a manifest cut off mid-stream is Truncated, not generic syntax
+        let full = r#"{"name": "m", "layers": [{"op": "sign"}]}"#;
+        for cut in [5, 12, 20, full.len() - 1] {
+            let e = parse(&full[..cut]).unwrap_err();
+            assert_eq!(e.kind, JsonErrorKind::Truncated, "cut at {cut}: {e}");
+        }
+        assert_eq!(parse("{}x").unwrap_err().kind,
+                   JsonErrorKind::TrailingData);
+        assert!(matches!(parse("{bad}").unwrap_err().kind,
+                         JsonErrorKind::Syntax(_)));
+        assert!(matches!(parse("trne").unwrap_err().kind,
+                         JsonErrorKind::BadToken(_)));
+        // errors carry the byte position for operator diagnostics
+        assert_eq!(parse("{}x").unwrap_err().pos, 2);
     }
 
     #[test]

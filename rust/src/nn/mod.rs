@@ -17,12 +17,106 @@
 //! (the paper treats gamma' as positive; we surface the orientation bit
 //! instead of assuming it -- see DESIGN.md).
 
-use std::path::Path;
-
-use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
 
 use crate::jsonio::{self, Json};
 use crate::ring::Tensor;
+
+pub mod reference;
+
+/// Highest manifest schema version this loader speaks.  v1 is the
+/// legacy unversioned schema (no `version` key); v2 adds the key plus
+/// per-layer `binary: true` markers whose weight planes must be exact
+/// {-1,+1} with no bias.  Anything newer is rejected with a typed
+/// error instead of being half-parsed.
+pub const MANIFEST_VERSION: i64 = 2;
+
+/// Typed manifest/weights load failure -- the rust mirror of
+/// `export.ManifestError` in python.  Every malformed input (truncated
+/// JSON, out-of-range pool reference, non-+-1 binary plane, layer-graph
+/// shape lie) surfaces here at load time; inference never sees an
+/// unvalidated model, so there is no mid-inference panic path.
+#[derive(Debug)]
+pub enum LoadError {
+    /// Reading the manifest or weight pool off disk failed.
+    Io { path: PathBuf, source: std::io::Error },
+    /// The manifest is not valid JSON (carries the byte position).
+    Json(jsonio::JsonError),
+    /// A required field is missing or has the wrong type.
+    Schema(String),
+    /// Manifest schema newer than this loader.
+    Version { found: i64, max: i64 },
+    /// Ring width other than l = 32.
+    WrongRing { found: i64 },
+    /// weights.bin length is not a multiple of 4 bytes.
+    TruncatedPool { bytes: usize },
+    /// A weight/bias/threshold reference points outside the pool.
+    PoolRef { layer: usize, off: usize, len: usize, pool: usize },
+    /// A layer marked `binary` has weight values outside {-1,+1}.
+    NonBinaryPlane { layer: usize, value: i32 },
+    /// A layer marked `binary` carries a bias (the +-1 lowering admits
+    /// none; BN absorbs it into the sign threshold).
+    BinaryBias { layer: usize },
+    /// The declared layer graph does not chain shape-wise.
+    ShapeChain { layer: usize, what: String },
+    /// An op name the engine does not implement.
+    UnknownOp { layer: usize, op: String },
+}
+
+impl std::fmt::Display for LoadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LoadError::Io { path, source } => {
+                write!(f, "reading {}: {source}", path.display())
+            }
+            LoadError::Json(e) => write!(f, "manifest: {e}"),
+            LoadError::Schema(what) => write!(f, "manifest schema: {what}"),
+            LoadError::Version { found, max } => {
+                write!(f, "manifest version {found} unsupported \
+                           (loader speaks 1..={max})")
+            }
+            LoadError::WrongRing { found } => {
+                write!(f, "only l = 32 supported, manifest says {found}")
+            }
+            LoadError::TruncatedPool { bytes } => {
+                write!(f, "weights.bin length {bytes} not a multiple of 4")
+            }
+            LoadError::PoolRef { layer, off, len, pool } => {
+                write!(f, "layer {layer}: pool ref {off}+{len} out of \
+                           range {pool}")
+            }
+            LoadError::NonBinaryPlane { layer, value } => {
+                write!(f, "layer {layer}: binary plane has value {value} \
+                           outside {{-1,+1}}")
+            }
+            LoadError::BinaryBias { layer } => {
+                write!(f, "layer {layer}: binary layer carries a bias")
+            }
+            LoadError::ShapeChain { layer, what } => {
+                write!(f, "layer {layer}: {what}")
+            }
+            LoadError::UnknownOp { layer, op } => {
+                write!(f, "layer {layer}: unknown op '{op}'")
+            }
+        }
+    }
+}
+
+impl std::error::Error for LoadError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            LoadError::Io { source, .. } => Some(source),
+            LoadError::Json(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<jsonio::JsonError> for LoadError {
+    fn from(e: jsonio::JsonError) -> Self {
+        LoadError::Json(e)
+    }
+}
 
 /// Reference into the weights.bin pool (int32 little-endian elements).
 #[derive(Clone, Copy, Debug)]
@@ -45,6 +139,11 @@ pub enum Op {
         b: Option<PoolRef>,
         s_in: u32,
         s_out: u32,
+        /// Manifest v2 marker: the weight plane is exact {-1,+1} (and
+        /// bias-free), validated at load.  The fusion planner still
+        /// inspects the values; the flag documents intent and lets the
+        /// loader reject corrupted planes before inference.
+        binary: bool,
         hlo: Option<String>,
     },
     Depthwise {
@@ -53,6 +152,7 @@ pub enum Op {
         w: PoolRef,
         s_in: u32,
         s_out: u32,
+        binary: bool,
         hlo: Option<String>,
     },
     Sign {
@@ -82,6 +182,8 @@ pub enum Op {
 pub struct Model {
     pub name: String,
     pub dataset: String,
+    /// Manifest schema version (1 when the key is absent).
+    pub version: i64,
     /// input (C, H, W)
     pub input: (usize, usize, usize),
     pub s_in: u32,
@@ -90,16 +192,20 @@ pub struct Model {
 }
 
 impl Model {
-    pub fn load(manifest_path: &Path) -> Result<Model> {
+    pub fn load(manifest_path: &Path) -> Result<Model, LoadError> {
+        let io = |p: &Path| {
+            let p = p.to_path_buf();
+            move |e: std::io::Error| LoadError::Io { path: p, source: e }
+        };
         let text = std::fs::read_to_string(manifest_path)
-            .with_context(|| format!("reading {}", manifest_path.display()))?;
+            .map_err(io(manifest_path))?;
         let weights_path = manifest_path.to_str()
-            .ok_or_else(|| anyhow!("non-utf8 path"))?
+            .ok_or_else(|| LoadError::Schema("non-utf8 path".into()))?
             .replace(".manifest.json", ".weights.bin");
-        let raw = std::fs::read(&weights_path)
-            .with_context(|| format!("reading {weights_path}"))?;
+        let weights_path = PathBuf::from(weights_path);
+        let raw = std::fs::read(&weights_path).map_err(io(&weights_path))?;
         if raw.len() % 4 != 0 {
-            bail!("weights.bin length not a multiple of 4");
+            return Err(LoadError::TruncatedPool { bytes: raw.len() });
         }
         let pool: Vec<i32> = raw.chunks_exact(4)
             .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
@@ -107,92 +213,196 @@ impl Model {
         Self::from_json(&text, pool)
     }
 
-    pub fn from_json(manifest: &str, pool: Vec<i32>) -> Result<Model> {
-        let j = jsonio::parse(manifest).map_err(|e| anyhow!("manifest: {e}"))?;
-        let name = j.field("name").map_err(anyhow::Error::msg)?
-            .as_str().ok_or_else(|| anyhow!("name not a string"))?.to_string();
-        let dataset = j.field("dataset").map_err(anyhow::Error::msg)?
-            .as_str().unwrap_or("?").to_string();
-        let input = j.field("input").map_err(anyhow::Error::msg)?;
+    pub fn from_json(manifest: &str, pool: Vec<i32>)
+                     -> Result<Model, LoadError> {
+        let j = jsonio::parse(manifest)?;
+        let name = j.get("name").and_then(Json::as_str)
+            .ok_or_else(|| LoadError::Schema("name not a string".into()))?
+            .to_string();
+        let dataset = j.get("dataset").and_then(Json::as_str)
+            .unwrap_or("?").to_string();
+        // absent key = legacy v1; newer than this loader = typed reject
+        let version = match j.get("version") {
+            None => 1,
+            Some(v) => v.as_i64().ok_or_else(|| {
+                LoadError::Schema("version not an int".into())
+            })?,
+        };
+        if !(1..=MANIFEST_VERSION).contains(&version) {
+            return Err(LoadError::Version { found: version,
+                                            max: MANIFEST_VERSION });
+        }
+        let input = j.get("input")
+            .ok_or_else(|| LoadError::Schema("missing input".into()))?;
         let input = (geti(input, "c")?, geti(input, "h")?, geti(input, "w")?);
         let s_in = geti(&j, "s_in")? as u32;
-        let ring_bits = geti(&j, "ring_bits")?;
+        let ring_bits = geti(&j, "ring_bits")? as i64;
         if ring_bits != 32 {
-            bail!("only l = 32 supported, manifest says {ring_bits}");
+            return Err(LoadError::WrongRing { found: ring_bits });
         }
-        let layers = j.field("layers").map_err(anyhow::Error::msg)?
-            .as_arr().ok_or_else(|| anyhow!("layers not an array"))?;
+        let layers = j.get("layers").and_then(Json::as_arr)
+            .ok_or_else(|| LoadError::Schema("layers not an array".into()))?;
         let mut ops = Vec::with_capacity(layers.len());
         for (idx, l) in layers.iter().enumerate() {
-            ops.push(parse_op(l).with_context(|| format!("layer {idx}"))?);
+            ops.push(parse_op(l, idx)?);
         }
-        let model = Model { name, dataset, input, s_in, ops, pool };
+        let model = Model { name, dataset, version, input, s_in, ops, pool };
         model.validate()?;
         Ok(model)
     }
 
-    /// Structural checks: pool refs in range, shapes chain correctly.
-    pub fn validate(&self) -> Result<()> {
+    /// Structural checks: pool refs in range, binary planes exactly
+    /// {-1,+1} and bias-free, shapes chain correctly.
+    pub fn validate(&self) -> Result<(), LoadError> {
         for (i, op) in self.ops.iter().enumerate() {
             for r in op.pool_refs() {
-                if r.off + r.len > self.pool.len() {
-                    bail!("layer {i}: pool ref {}+{} out of range {}",
-                          r.off, r.len, self.pool.len());
+                if r.off.checked_add(r.len)
+                    .map_or(true, |end| end > self.pool.len()) {
+                    return Err(LoadError::PoolRef {
+                        layer: i, off: r.off, len: r.len,
+                        pool: self.pool.len(),
+                    });
+                }
+            }
+            let (binary, w, b) = match op {
+                Op::Matmul { binary, w, b, .. } => (*binary, Some(w), b),
+                Op::Depthwise { binary, w, .. } => (*binary, Some(w), &None),
+                _ => (false, None, &None),
+            };
+            if binary {
+                if b.is_some() {
+                    return Err(LoadError::BinaryBias { layer: i });
+                }
+                if let Some(w) = w {
+                    if let Some(&v) = self.pool_slice(*w).iter()
+                        .find(|&&v| v != 1 && v != -1) {
+                        return Err(LoadError::NonBinaryPlane {
+                            layer: i, value: v,
+                        });
+                    }
                 }
             }
         }
         // walk shapes
+        let shape_err = |layer: usize, what: String| {
+            Err(LoadError::ShapeChain { layer, what })
+        };
+        // sanity cap on every declared dimension so the walk below (and
+        // the engine after it) can multiply geometry without overflow
+        const DIM_LIMIT: usize = 1 << 20;
         let (mut c, mut h, mut w) = self.input;
+        if c > DIM_LIMIT || h > DIM_LIMIT || w > DIM_LIMIT {
+            return Err(LoadError::Schema(format!(
+                "input dims {:?} exceed sanity limit", self.input)));
+        }
         let mut spatial = true;
         let mut vec_len = 0usize;
         for (i, op) in self.ops.iter().enumerate() {
+            let dims: Vec<usize> = match op {
+                Op::Matmul { m, kdim, n, geom, cout, .. } => {
+                    vec![*m, *kdim, *n, geom.0, geom.1, geom.2, geom.3, *cout]
+                }
+                Op::Depthwise { c, geom, .. } => {
+                    vec![*c, geom.0, geom.1, geom.2, geom.3]
+                }
+                Op::Sign { c, .. } => vec![*c],
+                Op::PoolBits { c, k, stride } => vec![*c, *k, *stride],
+                Op::Flatten { c, h, w } => vec![*c, *h, *w],
+                Op::Relu { .. } | Op::Pm1 => vec![],
+            };
+            if dims.iter().any(|&d| d > DIM_LIMIT) {
+                return shape_err(i, "dimension exceeds sanity limit".into());
+            }
             match op {
-                Op::Matmul { conv, m, kdim, geom, cout, .. } => {
+                Op::Matmul { conv, m, kdim, geom, cout, w: wr, b, .. } => {
+                    if *m == 0 || *kdim == 0 {
+                        return shape_err(i, "zero matmul dims".into());
+                    }
+                    if m.checked_mul(*kdim) != Some(wr.len) {
+                        return shape_err(i, format!(
+                            "weight plane holds {} values, declared \
+                             m*kdim = {m}*{kdim}", wr.len));
+                    }
+                    if let Some(b) = b {
+                        if b.len != *m {
+                            return shape_err(i, format!(
+                                "bias len {} != m {m}", b.len));
+                        }
+                    }
                     if *conv {
                         if !spatial {
-                            bail!("layer {i}: conv after flatten");
+                            return shape_err(i, "conv after flatten".into());
                         }
                         let (k, s, pl, ph) = *geom;
                         if *kdim != k * k * c {
-                            bail!("layer {i}: kdim {} != k*k*c {}", kdim,
-                                  k * k * c);
+                            return shape_err(i, format!(
+                                "kdim {kdim} != k*k*c {}", k * k * c));
+                        }
+                        if s == 0 || h + pl + ph < k || w + pl + ph < k {
+                            return shape_err(i, format!(
+                                "kernel {k} does not fit {h}x{w}"));
                         }
                         h = (h + pl + ph - k) / s + 1;
                         w = (w + pl + ph - k) / s + 1;
                         c = *cout;
                     } else {
                         if spatial {
-                            bail!("layer {i}: fc before flatten");
+                            return shape_err(i, "fc before flatten".into());
                         }
                         if *kdim != vec_len {
-                            bail!("layer {i}: fc kdim {} != input {}",
-                                  kdim, vec_len);
+                            return shape_err(i, format!(
+                                "fc kdim {kdim} != input {vec_len}"));
                         }
                         vec_len = *m;
                     }
                 }
-                Op::Depthwise { c: dc, geom, .. } => {
+                Op::Depthwise { c: dc, geom, w: wr, .. } => {
+                    if !spatial {
+                        return shape_err(i, "depthwise after flatten".into());
+                    }
                     if *dc != c {
-                        bail!("layer {i}: depthwise c {} != {}", dc, c);
+                        return shape_err(i, format!(
+                            "depthwise c {dc} != {c}"));
                     }
                     let (k, s, pl, ph) = *geom;
+                    if k.checked_mul(k).and_then(|kk| dc.checked_mul(kk))
+                        != Some(wr.len) {
+                        return shape_err(i, format!(
+                            "weight plane holds {} values, declared \
+                             c*k*k = {dc}*{k}*{k}", wr.len));
+                    }
+                    if s == 0 || h + pl + ph < k || w + pl + ph < k {
+                        return shape_err(i, format!(
+                            "kernel {k} does not fit {h}x{w}"));
+                    }
                     h = (h + pl + ph - k) / s + 1;
                     w = (w + pl + ph - k) / s + 1;
                 }
-                Op::Sign { c: sc, .. } => {
+                Op::Sign { c: sc, t, flip } => {
                     let expect = if spatial { c } else { vec_len };
                     if *sc != expect {
-                        bail!("layer {i}: sign c {} != {}", sc, expect);
+                        return shape_err(i, format!(
+                            "sign c {sc} != {expect}"));
+                    }
+                    if t.len != *sc || flip.len != *sc {
+                        return shape_err(i, format!(
+                            "threshold/flip len {}/{} != channel count {sc}",
+                            t.len, flip.len));
                     }
                 }
                 Op::PoolBits { k, stride, .. } => {
+                    if *stride == 0 || h < *k || w < *k {
+                        return shape_err(i, format!(
+                            "pool {k} does not fit {h}x{w}"));
+                    }
                     h = (h - k) / stride + 1;
                     w = (w - k) / stride + 1;
                 }
                 Op::Flatten { c: fc, h: fh, w: fw } => {
                     if (*fc, *fh, *fw) != (c, h, w) {
-                        bail!("layer {i}: flatten dims {:?} != {:?}",
-                              (fc, fh, fw), (c, h, w));
+                        return shape_err(i, format!(
+                            "flatten dims {:?} != {:?}",
+                            (fc, fh, fw), (c, h, w)));
                     }
                     vec_len = c * h * w;
                     spatial = false;
@@ -289,19 +499,31 @@ impl Op {
     }
 }
 
-fn geti(j: &Json, k: &str) -> Result<usize> {
+fn geti(j: &Json, k: &str) -> Result<usize, LoadError> {
     j.get(k).and_then(Json::as_usize)
-        .ok_or_else(|| anyhow!("missing int field '{k}'"))
+        .ok_or_else(|| LoadError::Schema(format!("missing int field '{k}'")))
 }
 
-fn pool_ref(j: &Json, k: &str) -> Result<PoolRef> {
-    let r = j.get(k).ok_or_else(|| anyhow!("missing pool ref '{k}'"))?;
+fn pool_ref(j: &Json, k: &str) -> Result<PoolRef, LoadError> {
+    let r = j.get(k).ok_or_else(|| {
+        LoadError::Schema(format!("missing pool ref '{k}'"))
+    })?;
     Ok(PoolRef { off: geti(r, "off")?, len: geti(r, "len")? })
 }
 
-fn parse_op(l: &Json) -> Result<Op> {
-    let op = l.field("op").map_err(anyhow::Error::msg)?
-        .as_str().ok_or_else(|| anyhow!("op not a string"))?;
+fn parse_op(l: &Json, idx: usize) -> Result<Op, LoadError> {
+    let in_layer = |e: LoadError| match e {
+        LoadError::Schema(what) => {
+            LoadError::Schema(format!("layer {idx}: {what}"))
+        }
+        other => other,
+    };
+    let geti = |l: &Json, k: &str| geti(l, k).map_err(in_layer);
+    let pool_ref = |l: &Json, k: &str| pool_ref(l, k).map_err(in_layer);
+    let op = l.get("op").and_then(Json::as_str).ok_or_else(|| {
+        LoadError::Schema(format!("layer {idx}: op not a string"))
+    })?;
+    let binary = l.get("binary").and_then(Json::as_bool).unwrap_or(false);
     Ok(match op {
         "matmul" => {
             let conv = l.get("conv").and_then(Json::as_bool).unwrap_or(false);
@@ -319,9 +541,14 @@ fn parse_op(l: &Json) -> Result<Op> {
                 geom,
                 cout: if conv { geti(l, "cout")? } else { geti(l, "m")? },
                 w: pool_ref(l, "w")?,
-                b: pool_ref(l, "b").ok(),
+                b: if l.get("b").is_some() {
+                    Some(pool_ref(l, "b")?)
+                } else {
+                    None
+                },
                 s_in: geti(l, "s_in")? as u32,
                 s_out: geti(l, "s_out")? as u32,
+                binary,
                 hlo: l.get("hlo").and_then(Json::as_str).map(String::from),
             }
         }
@@ -332,6 +559,7 @@ fn parse_op(l: &Json) -> Result<Op> {
             w: pool_ref(l, "w")?,
             s_in: geti(l, "s_in")? as u32,
             s_out: geti(l, "s_out")? as u32,
+            binary,
             hlo: l.get("hlo").and_then(Json::as_str).map(String::from),
         },
         "sign" => Op::Sign {
@@ -351,7 +579,10 @@ fn parse_op(l: &Json) -> Result<Op> {
             h: geti(l, "h")?,
             w: geti(l, "w")?,
         },
-        other => bail!("unknown op '{other}'"),
+        other => {
+            return Err(LoadError::UnknownOp { layer: idx,
+                                              op: other.to_string() });
+        }
     })
 }
 
@@ -385,6 +616,7 @@ mod tests {
     fn parses_and_validates() {
         let (m, pool) = tiny_manifest();
         let model = Model::from_json(m, pool).unwrap();
+        assert_eq!(model.version, 1, "absent version key = legacy v1");
         assert_eq!(model.ops.len(), 5);
         assert_eq!(model.param_count(), 8 + 2 + 2 + 2 + 54 + 3);
         let shapes = model.shapes();
@@ -418,6 +650,90 @@ mod tests {
         let m = r#"{"name": "x", "dataset": "d",
                     "input": {"c":1,"h":1,"w":1},
                     "s_in": 7, "ring_bits": 64, "layers": []}"#;
-        assert!(Model::from_json(m, vec![]).is_err());
+        assert!(matches!(Model::from_json(m, vec![]),
+                         Err(LoadError::WrongRing { found: 64 })));
+    }
+
+    fn versioned(version: &str, layer_extra: &str, pool: Vec<i32>)
+                 -> Result<Model, LoadError> {
+        let m = format!(r#"{{
+          "name": "v", "dataset": "mnist", {version}
+          "input": {{"c": 1, "h": 3, "w": 3}},
+          "s_in": 0, "ring_bits": 32,
+          "layers": [
+            {{"op": "matmul", "conv": true, "m": 2, "kdim": 4, "n": 4,
+              "k": 2, "stride": 1, "pad_lo": 0, "pad_hi": 0, "cout": 2,
+              "w": {{"off": 0, "len": 8}}, "s_in": 0, "s_out": 0
+              {layer_extra}}}
+          ]
+        }}"#);
+        Model::from_json(&m, pool)
+    }
+
+    #[test]
+    fn accepts_current_version_rejects_newer() {
+        let pm1: Vec<i32> = vec![1, -1, 1, -1, -1, 1, -1, 1];
+        let model = versioned("\"version\": 2,", ", \"binary\": true",
+                              pm1.clone()).unwrap();
+        assert_eq!(model.version, 2);
+        assert!(matches!(model.ops[0],
+                         Op::Matmul { binary: true, .. }));
+        let err = versioned("\"version\": 3,", "", pm1).unwrap_err();
+        assert!(matches!(err, LoadError::Version { found: 3, max: 2 }),
+                "{err}");
+    }
+
+    #[test]
+    fn rejects_non_binary_plane_and_binary_bias() {
+        let mut pool: Vec<i32> = vec![1, -1, 1, -1, -1, 1, -1, 1];
+        pool[3] = 7;
+        let err = versioned("\"version\": 2,", ", \"binary\": true", pool)
+            .unwrap_err();
+        assert!(matches!(err, LoadError::NonBinaryPlane { layer: 0,
+                                                          value: 7 }),
+                "{err}");
+        let pool: Vec<i32> = vec![1, -1, 1, -1, -1, 1, -1, 1, 0, 0];
+        let err = versioned(
+            "\"version\": 2,",
+            ", \"binary\": true, \"b\": {\"off\": 8, \"len\": 2}",
+            pool).unwrap_err();
+        assert!(matches!(err, LoadError::BinaryBias { layer: 0 }), "{err}");
+    }
+
+    #[test]
+    fn truncated_manifest_is_a_typed_json_error() {
+        let (m, pool) = tiny_manifest();
+        for cut in [m.len() / 4, m.len() / 2, m.len() - 1] {
+            let err = Model::from_json(&m[..cut], pool.clone()).unwrap_err();
+            assert!(matches!(err, LoadError::Json(_)), "cut {cut}: {err}");
+        }
+    }
+
+    #[test]
+    fn unknown_op_is_typed() {
+        let m = r#"{"name": "x", "dataset": "d",
+                    "input": {"c":1,"h":1,"w":1},
+                    "s_in": 7, "ring_bits": 32,
+                    "layers": [{"op": "conv_transpose"}]}"#;
+        let err = Model::from_json(m, vec![]).unwrap_err();
+        assert!(matches!(err, LoadError::UnknownOp { layer: 0, .. }),
+                "{err}");
+    }
+
+    #[test]
+    fn pool_ref_overflow_is_typed_not_panicking() {
+        // off + len chosen to overflow naive usize addition
+        let m = format!(r#"{{"name": "x", "dataset": "d",
+                    "input": {{"c":1,"h":3,"w":3}},
+                    "s_in": 0, "ring_bits": 32,
+                    "layers": [
+                      {{"op": "matmul", "conv": true, "m": 2, "kdim": 4,
+                        "n": 4, "k": 2, "stride": 1, "pad_lo": 0,
+                        "pad_hi": 0, "cout": 2,
+                        "w": {{"off": {}, "len": {}}},
+                        "s_in": 0, "s_out": 0}}
+                    ]}}"#, i64::MAX, i64::MAX);
+        let err = Model::from_json(&m, vec![0; 8]).unwrap_err();
+        assert!(matches!(err, LoadError::PoolRef { layer: 0, .. }), "{err}");
     }
 }

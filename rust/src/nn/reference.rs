@@ -1,0 +1,164 @@
+//! Plaintext fixed-point reference walk: runs a loaded [`Model`] over a
+//! ring image exactly the way the secure engine does -- wrapping i32
+//! arithmetic, CHW-major tensors, the same im2col and sign/pool
+//! semantics -- but without shares or communication.
+//!
+//! This is the rust mirror of `python/compile/model.py::forward_fixed`
+//! (the exporter's oracle).  On sign-only networks (the zoo models) the
+//! secure walks are *bit-identical* to this function; on ReLU-bearing
+//! networks the truncation protocol may differ by one LSB per trunc
+//! (see DESIGN.md "Parity tolerance").  `rust/tests/zoo.rs` holds the
+//! engine to those contracts on the committed fixtures.
+
+use crate::ring::{im2col_chw, Tensor};
+
+use super::{Model, Op};
+
+/// Run the full layer program on one input image (flat C*H*W ring
+/// values, already scaled by `2^s_in`).  Returns the logits vector.
+///
+/// The model must have passed [`Model::validate`] (every loaded model
+/// has); shapes are then guaranteed to chain, so this walk is
+/// panic-free on adversarial *data* -- bad values can only produce bad
+/// logits, never out-of-bounds access.
+pub fn forward(model: &Model, image: &[i32]) -> Vec<i32> {
+    let (c0, h0, w0) = model.input;
+    assert_eq!(image.len(), c0 * h0 * w0, "input length mismatch");
+    let mut x = Tensor::from_vec(&[c0, h0, w0], image.to_vec());
+    let (mut c, mut h, mut w) = model.input;
+    let mut spatial = true;
+    for op in &model.ops {
+        match op {
+            Op::Matmul { conv, m, geom, cout, w: wr, b, .. } => {
+                let (k, s, pl, ph) = *geom;
+                let wt = model.tensor(*wr, &[*m, wr.len / *m]);
+                let mut z = if *conv {
+                    let (cols, (oh, ow)) = im2col_chw(&x, k, s, pl, ph);
+                    h = oh;
+                    w = ow;
+                    c = *cout;
+                    wt.matmul(&cols)
+                } else {
+                    c = *m;
+                    wt.matmul(&x.reshape(&[wt.shape[1], 1]))
+                };
+                if let Some(br) = b {
+                    z = z.add_col(&model.tensor(*br, &[br.len]));
+                }
+                x = if *conv {
+                    z.reshape(&[c, h, w])
+                } else {
+                    z.reshape(&[c])
+                };
+            }
+            Op::Depthwise { geom, w: wr, .. } => {
+                let (k, s, pl, ph) = *geom;
+                let wt = model.pool_slice(*wr); // (C, k*k) row-major
+                let mut out = Vec::with_capacity(c * 1);
+                let mut oh = h;
+                let mut ow = w;
+                for ci in 0..c {
+                    let chan = Tensor::from_vec(
+                        &[1, h, w],
+                        x.data[ci * h * w..(ci + 1) * h * w].to_vec());
+                    let (cols, (zh, zw)) = im2col_chw(&chan, k, s, pl, ph);
+                    let wrow = Tensor::from_vec(
+                        &[1, k * k], wt[ci * k * k..(ci + 1) * k * k].to_vec());
+                    out.push(wrow.matmul(&cols));
+                    oh = zh;
+                    ow = zw;
+                }
+                h = oh;
+                w = ow;
+                let data: Vec<i32> =
+                    out.into_iter().flat_map(|t| t.data).collect();
+                x = Tensor::from_vec(&[c, h, w], data);
+            }
+            Op::Sign { t, flip, .. } => {
+                let tv = model.pool_slice(*t);
+                let fv = model.pool_slice(*flip);
+                let per = if spatial { h * w } else { 1 };
+                for (i, v) in x.data.iter_mut().enumerate() {
+                    let ch = i / per;
+                    let d = v.wrapping_sub(tv[ch]).wrapping_mul(fv[ch]);
+                    *v = (d >= 0) as i32;
+                }
+            }
+            Op::Pm1 => {
+                for v in &mut x.data {
+                    *v = 2 * *v - 1;
+                }
+            }
+            Op::Relu { trunc } => {
+                for v in &mut x.data {
+                    *v = (*v).max(0) >> trunc;
+                }
+            }
+            Op::PoolBits { k, stride, .. } => {
+                let (oh, ow) = ((h - k) / stride + 1, (w - k) / stride + 1);
+                let mut out = vec![0i32; c * oh * ow];
+                for ci in 0..c {
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            let mut acc = 0i32;
+                            for ky in 0..*k {
+                                for kx in 0..*k {
+                                    acc += x.data[ci * h * w
+                                        + (oy * stride + ky) * w
+                                        + ox * stride + kx];
+                                }
+                            }
+                            out[ci * oh * ow + oy * ow + ox] =
+                                (acc >= 1) as i32;
+                        }
+                    }
+                }
+                h = oh;
+                w = ow;
+                x = Tensor::from_vec(&[c, h, w], out);
+            }
+            Op::Flatten { .. } => {
+                c *= h * w;
+                h = 1;
+                w = 1;
+                spatial = false;
+                x = x.reshape(&[c]);
+            }
+        }
+    }
+    x.data
+}
+
+/// Top-1 accuracy of the reference walk over an eval set.
+pub fn accuracy(model: &Model, images: &[Tensor], labels: &[i32]) -> f64 {
+    let correct = images.iter().zip(labels).filter(|(img, &lbl)| {
+        crate::engine::argmax(&forward(model, &img.data)) == lbl as usize
+    }).count();
+    correct as f64 / labels.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::threeparty::every_op_model;
+
+    #[test]
+    fn walks_the_every_op_model() {
+        let model = every_op_model();
+        let (c, h, w) = model.input;
+        let img: Vec<i32> = (0..(c * h * w) as i32)
+            .map(|v| (v % 255) - 127).collect();
+        let logits = forward(&model, &img);
+        let last_c = model.shapes().last().unwrap().0;
+        assert_eq!(logits.len(), last_c);
+        // deterministic: same input, same logits
+        assert_eq!(logits, forward(&model, &img));
+    }
+
+    #[test]
+    #[should_panic(expected = "input length mismatch")]
+    fn rejects_wrong_input_length() {
+        let model = every_op_model();
+        forward(&model, &[0; 3]);
+    }
+}

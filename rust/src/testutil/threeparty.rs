@@ -123,6 +123,61 @@ pub fn every_op_model_variant(name: &str, shift: usize)
     crate::nn::Model::from_json(&manifest, pool).unwrap()
 }
 
+/// A zoo-shaped depthwise-separable binary chain (manifest v2): a
+/// fixed-point stem conv, then sign -> pool -> pm1 -> depthwise(+-1) ->
+/// pointwise(+-1) -> sign -> pm1 -> flatten -> binary fc -> sign -> pm1
+/// -> fixed-point logits fc.  Miniature of the exported lenet5/vgg7
+/// layer mix: every hidden linear layer is binary (fusable to
+/// XNOR+popcount), first and last stay fixed point.  Used by the
+/// fusion property tests and the zoo bench tier.
+pub fn sep_chain_model() -> crate::nn::Model {
+    let manifest = r#"{
+      "name": "sepchain", "dataset": "synthetic", "version": 2,
+      "input": {"c": 1, "h": 8, "w": 8},
+      "s_in": 0, "ring_bits": 32,
+      "layers": [
+        {"op": "matmul", "conv": true, "m": 3, "kdim": 9, "n": 36,
+         "k": 3, "stride": 1, "pad_lo": 0, "pad_hi": 0, "cout": 3,
+         "w": {"off": 0, "len": 27}, "b": {"off": 27, "len": 3},
+         "s_in": 0, "s_out": 0},
+        {"op": "sign", "c": 3, "t": {"off": 30, "len": 3},
+         "flip": {"off": 33, "len": 3}},
+        {"op": "pool_bits", "c": 3, "k": 2, "stride": 2},
+        {"op": "pm1"},
+        {"op": "depthwise", "cout": 3, "k": 2, "stride": 1,
+         "pad_lo": 0, "pad_hi": 0, "binary": true,
+         "w": {"off": 36, "len": 12}, "s_in": 0, "s_out": 0},
+        {"op": "matmul", "conv": true, "m": 4, "kdim": 3, "n": 4,
+         "k": 1, "stride": 1, "pad_lo": 0, "pad_hi": 0, "cout": 4,
+         "binary": true, "w": {"off": 48, "len": 12},
+         "s_in": 0, "s_out": 0},
+        {"op": "sign", "c": 4, "t": {"off": 60, "len": 4},
+         "flip": {"off": 64, "len": 4}},
+        {"op": "pm1"},
+        {"op": "flatten", "c": 4, "h": 2, "w": 2},
+        {"op": "matmul", "conv": false, "m": 6, "kdim": 16, "n": 1,
+         "binary": true, "w": {"off": 68, "len": 96},
+         "s_in": 0, "s_out": 0},
+        {"op": "sign", "c": 6, "t": {"off": 164, "len": 6},
+         "flip": {"off": 170, "len": 6}},
+        {"op": "pm1"},
+        {"op": "matmul", "conv": false, "m": 4, "kdim": 6, "n": 1,
+         "w": {"off": 176, "len": 24}, "b": {"off": 200, "len": 4},
+         "s_in": 0, "s_out": 0}
+      ]
+    }"#;
+    let mut pool: Vec<i32> = (0..204).map(|v| (v % 7) - 3).collect();
+    // binary weight planes must be exact {-1,+1}
+    for i in (36..60).chain(68..164) {
+        pool[i] = if (i * 7 + 3) % 3 == 0 { -1 } else { 1 };
+    }
+    // sign flips are +-1 orientation bits
+    for i in (33..36).chain(64..68).chain(170..176) {
+        pool[i] = if i % 2 == 0 { 1 } else { -1 };
+    }
+    crate::nn::Model::from_json(manifest, pool).unwrap()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

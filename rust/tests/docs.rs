@@ -169,6 +169,34 @@ fn design_documents_the_telemetry_spine() {
 }
 
 #[test]
+fn operations_covers_the_model_zoo_runbook() {
+    // the zoo runbook must name the fixture layout, the regeneration
+    // driver, the serve path, the floors, and the CI gate
+    let ops = repo_doc("OPERATIONS.md");
+    for needle in ["Model zoo", "fixtures/zoo", "compile.zoo",
+                   "lenet5=fixtures/zoo/lenet5.manifest.json",
+                   "model-parity", "golden", "accuracy floor",
+                   "zoo-divergence", "BENCH_zoo"] {
+        assert!(ops.contains(needle),
+                "OPERATIONS.md model-zoo runbook misses {needle}");
+    }
+}
+
+#[test]
+fn design_argues_the_parity_tolerance() {
+    // the tolerance argument must be stratified: bit-identical on the
+    // sign-only zoo graphs, argmax on truncation graphs, with the
+    // accuracy floors recorded
+    let design = repo_doc("DESIGN.md");
+    for needle in ["Parity tolerance", "bit-identical", "Sign-only",
+                   "zero", "trunc-free", "argmax",
+                   "floor-borrow", "0.98", "0.84"] {
+        assert!(design.contains(needle),
+                "DESIGN.md parity-tolerance section misses {needle}");
+    }
+}
+
+#[test]
 fn readme_maps_paper_sections_to_modules() {
     let readme = repo_doc("README.md");
     for needle in ["transport", "protocols", "coordinator", "offline",

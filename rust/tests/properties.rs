@@ -393,7 +393,8 @@ mod fusion {
     use cbnn::rss::{deal_bits, reconstruct, reconstruct_bits, BitShare,
                     Share};
     use cbnn::testutil::threeparty::{edge_bits, every_op_model,
-                                     run3_seeded, EDGE_LENGTHS};
+                                     run3_seeded, sep_chain_model,
+                                     EDGE_LENGTHS};
     use cbnn::testutil::Rng;
 
     fn inputs_for(id: usize, batch: usize, flat: usize, seed: u64)
@@ -546,6 +547,42 @@ mod fusion {
             let total = |costs: &[OpCost]| costs.iter()
                 .map(|r| r.bytes_sent).sum::<u64>();
             assert!(total(&f_costs) < total(&u_costs));
+        }
+    }
+
+    #[test]
+    fn prop_sep_chain_fused_bit_identical_and_demand_agrees() {
+        // the real zoo layer mix in miniature: fixed-point stem conv,
+        // +-1 depthwise + pointwise pair, binary FCs, fixed-point
+        // logits.  Fused and unfused walks must agree bit-for-bit, and
+        // both must agree with the plaintext reference walk (the chain
+        // is sign-only, so there is no trunc LSB to tolerate).
+        let model = sep_chain_model();
+        let (c, h, w) = model.input;
+        let flat = c * h * w;
+        for batch in [1usize, 3] {
+            let seed = 0x5E9C ^ batch as u64;
+            let (u_logits, _, u_demand) = arm(&model, seed, batch, false);
+            let (f_logits, _, f_demand) = arm(&model, seed, batch, true);
+            assert_eq!(u_logits, f_logits,
+                       "sep chain diverged at batch {batch}");
+            // per-sample MSB demand: every sign + pool contributes on
+            // the unfused walk; fused folds the interior draws away
+            assert_eq!(u_demand % batch, 0);
+            assert_eq!(f_demand % batch, 0);
+            assert!(f_demand < u_demand,
+                    "fused demand {f_demand} must undercut {u_demand}");
+            // plan and engine must agree on demand given the same graph
+            let plan = plan_fused(&model).unwrap();
+            assert_eq!(plan.msb_demand(batch), f_demand);
+            // the secure walk equals the plaintext reference walk
+            let inputs = inputs_for(0, batch, flat, seed ^ 0xF00D);
+            for (i, logits) in u_logits.iter().enumerate() {
+                let want = cbnn::nn::reference::forward(
+                    &model, &inputs[i].data);
+                assert_eq!(logits, &want,
+                           "sample {i} diverged from reference walk");
+            }
         }
     }
 

@@ -1,0 +1,331 @@
+//! Model-zoo accuracy-parity harness: serve the paper's actual workload
+//! (KD-trained LeNet5 / VGG7 with depthwise-separable +-1 convolutions)
+//! from the committed fixtures and hold the secure engine to it.
+//!
+//! Contracts enforced here (CI `model-parity` job):
+//!   * manifests load (version 2, binary planes validated at load)
+//!   * the rust plaintext reference walk reproduces the exported python
+//!     logits EXACTLY (the zoo nets are sign-only -> trunc-free -> no
+//!     LSB tolerance needed; see DESIGN.md "Parity tolerance")
+//!   * secure logits are bit-identical across unfused-inline,
+//!     unfused-pooled, and fused walks, and equal the reference walk
+//!   * test-subset accuracy clears the committed floor
+//!   * a warm auto-sized bank serves a full zoo batch with zero
+//!     request-path mints
+//!   * malformed manifests (truncated, non-+-1 planes, shape lies) are
+//!     typed load errors, never mid-inference panics
+//!
+//! Fixtures live in fixtures/zoo/ and are committed -- unlike
+//! integration.rs these tests never skip.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use cbnn::coordinator::Service;
+use cbnn::datasets::EvalSet;
+use cbnn::engine::fusion::plan_fused;
+use cbnn::engine::msb_demand_for;
+use cbnn::engine::session::{run_inference, SessionConfig};
+use cbnn::jsonio;
+use cbnn::nn::{reference, LoadError, Model, Op};
+use cbnn::ring::Tensor;
+
+fn zoo_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..")
+        .join("fixtures").join("zoo")
+}
+
+fn load_zoo(name: &str) -> Arc<Model> {
+    Arc::new(Model::load(
+        &zoo_dir().join(format!("{name}.manifest.json")))
+        .unwrap_or_else(|e| panic!("loading zoo model {name}: {e}")))
+}
+
+struct Golden {
+    floor: f64,
+    accuracy: f64,
+    labels: Vec<i32>,
+    logits: Vec<Vec<i32>>,
+}
+
+fn load_golden(name: &str) -> Golden {
+    let text = std::fs::read_to_string(
+        zoo_dir().join(format!("{name}.golden.json"))).unwrap();
+    let j = jsonio::parse(&text).unwrap();
+    let logits: Vec<Vec<i32>> = j.get("logits").unwrap().as_arr().unwrap()
+        .iter()
+        .map(|row| row.as_arr().unwrap().iter()
+             .map(|v| i32::try_from(v.as_i64().unwrap()).unwrap())
+             .collect())
+        .collect();
+    let labels = j.get("labels").unwrap().as_arr().unwrap().iter()
+        .map(|v| v.as_i64().unwrap() as i32).collect();
+    Golden {
+        floor: j.get("floor").unwrap().as_f64().unwrap(),
+        accuracy: j.get("accuracy").unwrap().as_f64().unwrap(),
+        labels,
+        logits,
+    }
+}
+
+fn load_subset(model: &Model) -> EvalSet {
+    EvalSet::load(&zoo_dir().join(format!("{}_subset.bin", model.dataset)))
+        .unwrap()
+}
+
+const ZOO: [&str; 2] = ["lenet5", "vgg7"];
+
+#[test]
+fn zoo_manifests_load_versioned_with_binary_planes() {
+    for name in ZOO {
+        let model = load_zoo(name);
+        assert_eq!(model.version, 2, "{name}: zoo manifests are v2");
+        let binary = model.ops.iter().filter(|op| matches!(
+            op, Op::Matmul { binary: true, .. }
+                | Op::Depthwise { binary: true, .. })).count();
+        assert!(binary >= 3,
+                "{name}: expected a binary hidden chain, found {binary}");
+        // hidden chain is sign-only: trunc-free -> every walk bit-equal
+        assert!(!model.ops.iter().any(|op| matches!(op, Op::Relu { .. })),
+                "{name}: zoo nets must be trunc-free for exact parity");
+        let set = load_subset(&model);
+        assert_eq!(set.dims, model.input, "{name}: subset dims");
+        let want = if model.dataset == "mnist" { 256 } else { 128 };
+        assert!(set.images.len() >= want,
+                "{name}: committed subset holds {} images, need >= {want}",
+                set.images.len());
+    }
+}
+
+/// On divergence, dump the fresh rows next to the committed golden so
+/// the CI `model-parity` job can upload them as diffable evidence.
+fn dump_divergence(name: &str, what: &str, rows: &[(usize, &[i32])]) {
+    let dir = std::env::temp_dir().join("zoo-divergence");
+    let _ = std::fs::create_dir_all(&dir);
+    let body: Vec<String> = rows.iter()
+        .map(|(i, l)| format!("  {{\"sample\": {i}, \"logits\": {l:?}}}"))
+        .collect();
+    let _ = std::fs::write(
+        dir.join(format!("{name}.{what}.json")),
+        format!("[\n{}\n]\n", body.join(",\n")));
+}
+
+#[test]
+fn zoo_reference_matches_exported_python_logits_exactly() {
+    for name in ZOO {
+        let model = load_zoo(name);
+        let golden = load_golden(name);
+        let set = load_subset(&model);
+        assert_eq!(golden.logits.len(), set.images.len());
+        assert_eq!(golden.labels, set.labels, "{name}: label drift");
+        let fresh: Vec<Vec<i32>> = set.images.iter()
+            .map(|img| reference::forward(&model, &img.data)).collect();
+        let bad: Vec<(usize, &[i32])> = fresh.iter().enumerate()
+            .filter(|(i, got)| *got != &golden.logits[*i])
+            .map(|(i, got)| (i, got.as_slice())).collect();
+        if !bad.is_empty() {
+            dump_divergence(name, "reference", &bad);
+            panic!("{name}: {} of {} samples diverged from the python \
+                    oracle (first at sample {}); fresh rows dumped to \
+                    $TMPDIR/zoo-divergence", bad.len(), fresh.len(),
+                   bad[0].0);
+        }
+    }
+}
+
+#[test]
+fn zoo_subset_accuracy_clears_committed_floor() {
+    for name in ZOO {
+        let model = load_zoo(name);
+        let golden = load_golden(name);
+        let set = load_subset(&model);
+        let acc = reference::accuracy(&model, &set.images, &set.labels);
+        assert!(acc >= golden.floor,
+                "{name}: accuracy {acc:.4} below committed floor {}",
+                golden.floor);
+        assert!((acc - golden.accuracy).abs() < 1e-9,
+                "{name}: accuracy {acc:.4} != exported {:.4} -- the \
+                 oracle and the reference walk disagree", golden.accuracy);
+    }
+}
+
+/// Secure logits across all three walks must be bit-identical to the
+/// reference walk (no trunc in the zoo nets, so no tolerance).  Small
+/// slice per model to keep CI wall-clock sane; full-subset coverage is
+/// the plaintext accuracy test above.
+#[test]
+fn zoo_secure_walks_bit_identical_across_inline_pool_fuse() {
+    for (name, slice) in [("lenet5", 4usize), ("vgg7", 2)] {
+        let model = load_zoo(name);
+        let set = load_subset(&model);
+        let inputs: Vec<Tensor> =
+            set.images.iter().take(slice).cloned().collect();
+        let want: Vec<Vec<i32>> = inputs.iter()
+            .map(|img| reference::forward(&model, &img.data)).collect();
+
+        let mut inline = SessionConfig::new("artifacts/hlo");
+        inline.opts.preprocess = false;
+        let mut fused = SessionConfig::new("artifacts/hlo");
+        fused.opts.fuse = true;
+        let pooled = SessionConfig::new("artifacts/hlo");
+        for (walk, cfg) in [("inline", inline), ("pooled", pooled),
+                            ("fused", fused)] {
+            let rep = run_inference(&model, inputs.clone(), &cfg)
+                .unwrap_or_else(|e| panic!("{name}/{walk}: {e}"));
+            if rep.logits != want {
+                let bad: Vec<(usize, &[i32])> = rep.logits.iter()
+                    .enumerate()
+                    .filter(|(i, got)| *got != &want[*i])
+                    .map(|(i, got)| (i, got.as_slice())).collect();
+                dump_divergence(name, walk, &bad);
+                panic!("{name}: {walk} walk diverged from reference on \
+                        {} of {slice} samples; fresh rows dumped to \
+                        $TMPDIR/zoo-divergence", bad.len());
+            }
+        }
+    }
+}
+
+#[test]
+fn zoo_fused_demand_undercuts_unfused_on_real_graphs() {
+    for name in ZOO {
+        let model = load_zoo(name);
+        let plan = plan_fused(&model)
+            .unwrap_or_else(|e| panic!("{name}: plan must lower: {e}"));
+        for batch in [1usize, 4] {
+            let unfused = msb_demand_for(&model, batch);
+            let fused = plan.msb_demand(batch);
+            assert!(fused > 0, "{name}: fused demand must be nonzero \
+                                (sign still enters the binary domain)");
+            assert!(fused < unfused,
+                    "{name} batch {batch}: fused demand {fused} must \
+                     undercut unfused {unfused}");
+        }
+    }
+}
+
+/// Satellite regression: `BankConfig::auto` sized off the real model's
+/// `msb_demand(max_batch)` must leave a warm service able to absorb a
+/// full zoo batch without a single request-path mint.  The prefill
+/// (high watermark = 3x demand) plus capacity (4x) must dominate the
+/// largest single draw; if the watermark math undershoots, the
+/// underflow counter trips and this test names the party.
+#[test]
+fn zoo_warm_bank_serves_full_batch_with_zero_request_path_mints() {
+    let model = load_zoo("lenet5");
+    let set = load_subset(&model);
+    for fuse in [false, true] {
+        let mut cfg = SessionConfig::new("artifacts/hlo");
+        cfg.max_batch = 4;
+        cfg.opts.fuse = fuse;
+        let svc = Service::start(Arc::clone(&model), cfg).unwrap();
+        let demand = svc.demand_for(4);
+        assert!(demand > 0);
+        let batch: Vec<Tensor> =
+            set.images.iter().take(4).cloned().collect();
+        let logits = svc.infer(batch).expect("zoo batch");
+        for (i, l) in logits.iter().enumerate() {
+            assert_eq!(l, &reference::forward(&model, &set.images[i].data),
+                       "served logits diverged at {i} (fuse={fuse})");
+        }
+        for p in 0..3 {
+            let m = svc.bank_handle(p).metrics();
+            assert_eq!(m.underflow_calls, 0,
+                       "party {p} minted on the request path \
+                        (fuse={fuse}): {m:?}");
+            assert!(m.drawn as usize >= demand,
+                    "party {p} drew {} < batch demand {demand}", m.drawn);
+        }
+        let _ = svc.shutdown();
+    }
+}
+
+// ---- adversarial manifests: typed errors at load, never panics ----------
+
+fn lenet_manifest_text() -> String {
+    std::fs::read_to_string(zoo_dir().join("lenet5.manifest.json")).unwrap()
+}
+
+fn lenet_pool() -> Vec<i32> {
+    let raw = std::fs::read(zoo_dir().join("lenet5.weights.bin")).unwrap();
+    raw.chunks_exact(4)
+        .map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+#[test]
+fn adversarial_truncated_manifest_is_typed_json_error() {
+    let text = lenet_manifest_text();
+    let pool = lenet_pool();
+    for frac in [4usize, 2] {
+        let cut = text.len() / frac;
+        match Model::from_json(&text[..cut], pool.clone()) {
+            Err(LoadError::Json(_)) => {}
+            other => panic!("cut at {cut}: expected Json error, got \
+                             {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn adversarial_out_of_pm1_binary_weight_is_typed() {
+    let text = lenet_manifest_text();
+    let model = Model::from_json(&text, lenet_pool()).unwrap();
+    // find a binary plane and poison one value
+    let wr = model.ops.iter().find_map(|op| match op {
+        Op::Matmul { binary: true, w, .. }
+        | Op::Depthwise { binary: true, w, .. } => Some(*w),
+        _ => None,
+    }).expect("zoo model has a binary plane");
+    let mut pool = lenet_pool();
+    pool[wr.off + wr.len / 2] = 2;
+    match Model::from_json(&text, pool) {
+        Err(LoadError::NonBinaryPlane { value: 2, .. }) => {}
+        other => panic!("expected NonBinaryPlane, got {other:?}"),
+    }
+}
+
+#[test]
+fn adversarial_shape_lies_are_typed() {
+    let text = lenet_manifest_text();
+    let pool = lenet_pool();
+    // the manifest declares kdim for each matmul; lie about one
+    let lied = text.replacen("\"kdim\": ", "\"kdim\": 9", 1);
+    assert_ne!(lied, text, "fixture manifest must declare kdim");
+    match Model::from_json(&lied, pool.clone()) {
+        Err(LoadError::ShapeChain { .. }) => {}
+        other => panic!("expected ShapeChain, got {other:?}"),
+    }
+    // claim the conv stem is a fully-connected layer (fc before flatten)
+    let lied = text.replacen("\"conv\": true", "\"conv\": false", 1);
+    assert_ne!(lied, text);
+    assert!(matches!(Model::from_json(&lied, pool.clone()),
+                     Err(LoadError::ShapeChain { .. })));
+    // a future manifest version is refused outright
+    let lied = text.replacen("\"version\": 2", "\"version\": 99", 1);
+    assert_ne!(lied, text);
+    match Model::from_json(&lied, pool) {
+        Err(LoadError::Version { found: 99, max: 2 }) => {}
+        other => panic!("expected Version, got {other:?}"),
+    }
+}
+
+#[test]
+fn adversarial_truncated_weight_pool_is_typed() {
+    let text = lenet_manifest_text();
+    let mut pool = lenet_pool();
+    pool.truncate(pool.len() / 2);
+    match Model::from_json(&text, pool) {
+        Err(LoadError::PoolRef { .. }) => {}
+        other => panic!("expected PoolRef, got {other:?}"),
+    }
+}
+
+#[test]
+fn adversarial_truncated_eval_subset_rejected() {
+    let raw = std::fs::read(zoo_dir().join("mnist_subset.bin")).unwrap();
+    let dir = std::env::temp_dir().join("cbnn_zoo_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("truncated_subset.bin");
+    std::fs::write(&p, &raw[..raw.len() / 2]).unwrap();
+    assert!(EvalSet::load(&p).is_err(), "truncated subset must not load");
+}
