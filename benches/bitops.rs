@@ -29,12 +29,18 @@
 //!      unfused secure latency on lenet5/vgg7 plus deterministic
 //!      per-layer bytes/rounds rows, so the wire cost of every served
 //!      layer of the paper's actual workload is pinned exactly.
+//!   9. (serve) the async request plane: concurrent multi-tenant
+//!      submitters through the dynamic batcher vs the same requests
+//!      served serially one at a time, plus exact-gated shed counters
+//!      (`serve_shed_counts`): admission decisions are deterministic,
+//!      so a changed shed count is an admission-policy change, caught
+//!      here alongside `tests/request_plane.rs`.
 //!
 //! Results are printed as a table and recorded to `BENCH_bitops.json`
 //! (tiers 1-3), `BENCH_offline.json` (tier 4), `BENCH_fusion.json`
-//! (tier 5), `BENCH_wan.json` (tier 6), `BENCH_obs.json` (tier 7) and
-//! `BENCH_zoo.json` (tier 8) at the workspace root so the bench
-//! trajectory is diffable.
+//! (tier 5), `BENCH_wan.json` (tier 6), `BENCH_obs.json` (tier 7),
+//! `BENCH_zoo.json` (tier 8) and `BENCH_serve.json` (tier 9) at the
+//! workspace root so the bench trajectory is diffable.
 //!
 //!   cargo bench --bench bitops
 
@@ -75,7 +81,14 @@ struct Row {
 
 impl Row {
     fn speedup(&self) -> f64 {
-        self.baseline_ms / self.fast_ms
+        // deterministic counter rows can legitimately carry 0 in both
+        // columns (e.g. a zero-cost layer's bytes, a zero underflow
+        // count); 0/0 would print NaN and corrupt the JSON record
+        if self.fast_ms == 0.0 {
+            1.0
+        } else {
+            self.baseline_ms / self.fast_ms
+        }
     }
 }
 
@@ -714,6 +727,181 @@ fn zoo_tier(rows: &mut Vec<Row>) {
     println!();
 }
 
+/// Tier 9: the request plane.  The same request stream is priced twice
+/// over the identical trunc-free model: one sample per `Service::infer`
+/// call (the serial arm -- every request pays its own protocol rounds)
+/// vs three concurrent tenants through the `RequestPlane`'s dynamic
+/// batcher (windows coalesce, rounds amortize across the window).  The
+/// `serve_shed_counts` rows then pin the admission-control outcomes of
+/// two deterministic overload scenarios exactly: a structurally-dry
+/// bank sheds every submit with zero request-path underflows, and an
+/// over-capacity queue sheds the excess while `shutdown` still drains
+/// everything admitted.
+fn serve_tier(rows: &mut Vec<Row>) {
+    use cbnn::coordinator::{BatcherPolicy, ModelSpec, PlaneConfig,
+                            RegistryError, RequestPlane, Service};
+    use cbnn::engine::session::SessionConfig;
+    use cbnn::offline::BankConfig;
+    use cbnn::testutil::threeparty::sep_chain_model;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    println!("== tier 9: request plane, batched vs serial ==\n");
+    println!("{:<18} {:<8} {:>12} {:>12} {:>9}",
+             "stream", "reqs", "serial(ms)", "batched(ms)", "speedup");
+    println!("{}", "-".repeat(62));
+
+    let model = Arc::new(sep_chain_model());
+    let flat = {
+        let (c, h, w) = model.input;
+        c * h * w
+    };
+    let requests = 24usize;
+    let tenants = 3usize;
+    let images: Vec<Tensor> = {
+        let mut rng = Rng::new(9_000);
+        (0..requests).map(|_| rng.tensor_small(&[1, flat], 15)).collect()
+    };
+
+    // serial arm: one request per secure batch
+    let mut cfg = SessionConfig::new("artifacts/hlo");
+    cfg.max_batch = 1;
+    let svc = Service::start(Arc::clone(&model), cfg).unwrap();
+    let t0 = Instant::now();
+    for img in &images {
+        black_box(svc.infer(vec![img.clone()]).unwrap());
+    }
+    let serial_ms = t0.elapsed().as_secs_f64() * 1e3 / requests as f64;
+    let _ = svc.shutdown();
+
+    // batched arm: concurrent tenants through the plane
+    let mut cfg = SessionConfig::new("artifacts/hlo");
+    cfg.max_batch = 8;
+    let plane = RequestPlane::start(
+        vec![ModelSpec::new("sepchain".to_string(), Arc::clone(&model))],
+        &cfg,
+        PlaneConfig {
+            policy: BatcherPolicy {
+                max_batch: 8,
+                slo: Duration::from_millis(5),
+                max_queue: 64,
+                prefetch: 2,
+                adaptive: false,
+            },
+            shards: 1,
+        }).unwrap();
+    let t1 = Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..tenants {
+            let plane = &plane;
+            let images = &images;
+            let tenant = format!("t{t}");
+            s.spawn(move || {
+                let rxs: Vec<_> = (t..requests).step_by(tenants)
+                    .map(|k| plane.submit("sepchain", &tenant,
+                                          images[k].clone()).unwrap())
+                    .collect();
+                for rx in rxs {
+                    black_box(rx.recv().unwrap().unwrap());
+                }
+            });
+        }
+    });
+    let batched_ms = t1.elapsed().as_secs_f64() * 1e3 / requests as f64;
+    let coalesced = plane.batcher("sepchain").unwrap()
+        .stats().plane.coalesced_max;
+    let _ = plane.shutdown();
+    println!("{:<18} {:<8} {:>12.3} {:>12.3} {:>8.1}x  (max window {})",
+             "3-tenant", requests, serial_ms, batched_ms,
+             serial_ms / batched_ms, coalesced);
+    rows.push(Row { section: "batched_vs_serial",
+                    op: "sepchain-3tenant".into(), n: requests,
+                    baseline_ms: serial_ms, fast_ms: batched_ms });
+
+    // deterministic admission counters (exact-gated): a structurally
+    // dry bank sheds every submit before any mint...
+    let mut cfg = SessionConfig::new("artifacts/hlo");
+    cfg.max_batch = 4;
+    let plane = RequestPlane::start(
+        vec![ModelSpec {
+            name: "sepchain".to_string(),
+            model: Arc::clone(&model),
+            bank: Some(BankConfig { low: 1, high: 2, chunk: 1,
+                                    capacity: 3 }),
+        }],
+        &cfg,
+        PlaneConfig { policy: BatcherPolicy { max_batch: 4,
+                                              ..BatcherPolicy::default() },
+                      shards: 1 }).unwrap();
+    for img in images.iter().take(6).cloned() {
+        assert!(matches!(
+            plane.submit("sepchain", "dry", img),
+            Err(RegistryError::Overloaded { .. })));
+    }
+    let b = plane.batcher("sepchain").unwrap();
+    let (shed_dry, underflows) =
+        (b.stats().plane.shed_dry, b.preproc_metrics().underflow_calls);
+    let _ = plane.shutdown();
+    println!("{:<18} {:<8} dry-bank sheds={} underflows={}",
+             "shed-dry", 6, shed_dry, underflows);
+    rows.push(Row { section: "serve_shed_counts",
+                    op: "dry-bank-shed".into(), n: 6,
+                    baseline_ms: shed_dry as f64,
+                    fast_ms: shed_dry as f64 });
+    rows.push(Row { section: "serve_shed_counts",
+                    op: "dry-bank-underflows".into(), n: 6,
+                    baseline_ms: underflows as f64,
+                    fast_ms: underflows as f64 });
+
+    // ...and an over-capacity queue sheds the excess, then shutdown
+    // drains everything admitted
+    let mut cfg = SessionConfig::new("artifacts/hlo");
+    cfg.max_batch = 8;
+    let plane = RequestPlane::start(
+        vec![ModelSpec::new("sepchain".to_string(), Arc::clone(&model))],
+        &cfg,
+        PlaneConfig {
+            policy: BatcherPolicy {
+                max_batch: 8,
+                slo: Duration::from_secs(30),
+                max_queue: 4,
+                prefetch: 2,
+                adaptive: false,
+            },
+            shards: 1,
+        }).unwrap();
+    let mut admitted = Vec::new();
+    let mut shed_queue = 0u64;
+    for img in images.iter().take(10).cloned() {
+        match plane.submit("sepchain", "flood", img) {
+            Ok(rx) => admitted.push(rx),
+            Err(RegistryError::Overloaded { .. }) => shed_queue += 1,
+            Err(e) => panic!("{e}"),
+        }
+    }
+    let drained = std::thread::scope(|s| {
+        let h = s.spawn(move || {
+            admitted.into_iter()
+                .filter(|rx| rx.recv().map(|r| r.is_ok())
+                        .unwrap_or(false))
+                .count() as u64
+        });
+        let _ = plane.shutdown();
+        h.join().unwrap()
+    });
+    println!("{:<18} {:<8} queue sheds={} drained={}",
+             "shed-queue", 10, shed_queue, drained);
+    rows.push(Row { section: "serve_shed_counts",
+                    op: "queue-full-shed".into(), n: 10,
+                    baseline_ms: shed_queue as f64,
+                    fast_ms: shed_queue as f64 });
+    rows.push(Row { section: "serve_shed_counts",
+                    op: "drain-served".into(), n: 10,
+                    baseline_ms: drained as f64,
+                    fast_ms: drained as f64 });
+    println!();
+}
+
 fn write_json(file: &str, bench: &str, acceptance: &[(&str, &str)],
               rows: &[Row]) {
     let mut s = String::from("{\n");
@@ -764,6 +952,8 @@ fn main() {
     obs_tier(&mut obs_rows);
     let mut zoo_rows = Vec::new();
     zoo_tier(&mut zoo_rows);
+    let mut serve_rows = Vec::new();
+    serve_tier(&mut serve_rows);
     println!("(acceptance: packed XOR/AND >= 8x byte-per-bit; strided \
               Kogge-Stone levels >= 2x concat; warm-bank online MSB \
               >= 2x inline generation; fused hidden segment >= 8x fewer \
@@ -809,4 +999,14 @@ fn main() {
                    deterministic; any drift is a wire-format change on \
                    the paper's real workload")],
                &zoo_rows);
+    write_json("BENCH_serve.json", "serve",
+               &[("batched_vs_serial",
+                  "dynamic batching serves the concurrent multi-tenant \
+                   stream no slower per request than the serial arm"),
+                 ("serve_shed_counts",
+                  "admission-control outcomes are deterministic: shed \
+                   counts, zero request-path underflows on a dry-bank \
+                   burst, and full drain of admitted requests are \
+                   pinned exactly")],
+               &serve_rows);
 }

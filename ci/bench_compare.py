@@ -3,58 +3,65 @@
 committed baseline.
 
 Usage: bench_compare.py BASELINE.json FRESH.json
+       bench_compare.py --self-test
 
 Every (section, op, n) row recorded in the baseline must exist in the
 fresh run with `fast_ms` no more than TOLERANCE times the baseline's
 (lower is better; the `baseline_ms` column is the *slow reference arm*
 inside one run, not the regression baseline, so only `fast_ms` is
-gated).  Sections whose name ends in `_bytes` carry deterministic wire
-accounting in the `*_ms` columns (e.g. the fusion bench's
-hidden-segment bytes), so they are gated exactly: ANY divergence --
-growth or shrink -- fails and names the diverging key and both byte
-values, because a deterministic counter that moved is a wire-format
-change someone must sign off on by re-promoting the baseline.
+gated).  Sections whose name ends in `_bytes` or `_counts` carry
+deterministic accounting in the `*_ms` columns (wire bytes, span
+counts, admission-control shed counters), so they are gated exactly:
+ANY divergence -- growth or shrink -- fails and names the diverging
+key and both values, because a deterministic counter that moved is a
+wire-format or policy change someone must sign off on by re-promoting
+the baseline.
 
 Section coverage is gated in both directions: a section the fresh run
 produced with no baseline rows fails loudly (a new bench tier must be
 promoted into the baseline, not left unwatched), and a baseline
 section the fresh run never produced fails loudly (the tier silently
-stopped executing).  A baseline with an empty `results` list -- the
-committed stubs from before a toolchain was available -- skips the
-comparison, so the job cannot fail before a real baseline has been
-promoted.
+stopped executing).
+
+A baseline with an empty `results` list FAILS the gate: every
+committed BENCH_*.json carries real rows, so an empty baseline means
+the baseline was clobbered or a new record was committed without
+promotion -- either way the gate must not silently pass.
+
+`--self-test` proves the gate is armed without a toolchain: it
+synthesizes a baseline, then checks that (a) a fresh run 25% slower on
+a timing row exits non-zero, (b) a one-byte drift on an exact row
+exits non-zero, (c) a run within tolerance exits zero, and (d) an
+empty baseline exits non-zero.  CI runs it before the real
+comparisons, so a regression in this script is itself caught.
 """
 
+import copy
 import json
 import sys
 
 TOLERANCE = 1.20  # fail on >20% regression
+EXACT_SUFFIXES = ("_bytes", "_counts")
 
 
 def key(row):
     return (row["section"], row["op"], row["n"])
 
 
-def main() -> int:
-    if len(sys.argv) != 3:
-        print(__doc__)
-        return 2
-    base_path, fresh_path = sys.argv[1], sys.argv[2]
-    with open(base_path) as f:
-        base = json.load(f)
-    with open(fresh_path) as f:
-        fresh = json.load(f)
-
+def compare(base, fresh, base_path="<baseline>", fresh_path="<fresh>",
+            quiet=False):
+    """Core gate.  Returns (exit_code, failure_messages)."""
+    failures = []
     base_rows = base.get("results") or []
     if not base_rows:
-        print(f"{base_path}: no committed baseline yet (empty results) "
-              "-- skipping comparison; promote a green run's artifact "
-              "to enable the gate")
-        return 0
+        return 1, [
+            f"{base_path}: baseline has an empty `results` list -- the "
+            f"gate refuses to pass vacuously.  Promote a real bench "
+            f"run's artifact (every committed BENCH_*.json carries "
+            f"measured rows)"]
 
     fresh_list = fresh.get("results") or []
     fresh_rows = {key(r): r for r in fresh_list}
-    failures = []
 
     # section coverage must match in both directions
     base_sections = {r["section"] for r in base_rows}
@@ -75,15 +82,16 @@ def main() -> int:
         if got is None:
             failures.append(f"{key(row)}: row missing from fresh run")
             continue
-        if row["section"].endswith("_bytes"):
+        if row["section"].endswith(EXACT_SUFFIXES):
             if got["fast_ms"] != row["fast_ms"]:
                 delta = got["fast_ms"] - row["fast_ms"]
                 failures.append(
-                    f"{key(row)}: exact byte gate: {got['fast_ms']:.0f} "
-                    f"bytes vs baseline {row['fast_ms']:.0f} "
-                    f"({delta:+.0f}) -- byte rows are deterministic, so "
-                    f"any drift is a wire-format change; re-promote the "
-                    f"baseline only if it is intended")
+                    f"{key(row)}: exact gate: {got['fast_ms']:.0f} "
+                    f"vs baseline {row['fast_ms']:.0f} "
+                    f"({delta:+.0f}) -- {'/'.join(EXACT_SUFFIXES)} rows "
+                    f"are deterministic, so any drift is a wire-format "
+                    f"or policy change; re-promote the baseline only if "
+                    f"it is intended")
             continue
         if got["fast_ms"] > row["fast_ms"] * TOLERANCE:
             failures.append(
@@ -94,14 +102,87 @@ def main() -> int:
 
     checked = len(base_rows)
     if failures:
-        print(f"{fresh_path}: {len(failures)} gate failures "
-              f"({checked} baseline rows checked):")
-        for f_ in failures:
-            print(f"  {f_}")
+        if not quiet:
+            print(f"{fresh_path}: {len(failures)} gate failures "
+                  f"({checked} baseline rows checked):")
+            for f_ in failures:
+                print(f"  {f_}")
+        return 1, failures
+    if not quiet:
+        print(f"{fresh_path}: {checked} rows within {TOLERANCE:.2f}x of "
+              f"{base_path} (exact rows exact, sections matched)")
+    return 0, []
+
+
+def self_test() -> int:
+    """Prove the gate trips on the failures it exists to catch."""
+    base = {
+        "bench": "selftest",
+        "results": [
+            {"section": "timing_sec", "op": "walk", "n": 8,
+             "baseline_ms": 40.0, "fast_ms": 10.0, "speedup": 4.0},
+            {"section": "wire_bytes", "op": "segment", "n": 8,
+             "baseline_ms": 4096.0, "fast_ms": 4096.0, "speedup": 1.0},
+            {"section": "shed_counts", "op": "queue-full", "n": 10,
+             "baseline_ms": 6.0, "fast_ms": 6.0, "speedup": 1.0},
+        ],
+    }
+
+    def variant(edits):
+        v = copy.deepcopy(base)
+        for (section, op), fields in edits.items():
+            for row in v["results"]:
+                if row["section"] == section and row["op"] == op:
+                    row.update(fields)
+        return v
+
+    cases = [
+        ("25% slowdown on a timing row must fail",
+         base, variant({("timing_sec", "walk"): {"fast_ms": 12.5}}), 1),
+        ("one-byte drift on a _bytes row must fail",
+         base, variant({("wire_bytes", "segment"): {"fast_ms": 4097.0}}),
+         1),
+        ("counter drift on a _counts row must fail",
+         base, variant({("shed_counts", "queue-full"): {"fast_ms": 7.0}}),
+         1),
+        ("a run within tolerance must pass",
+         base, variant({("timing_sec", "walk"): {"fast_ms": 11.9}}), 0),
+        ("an empty baseline must fail, not skip",
+         {"bench": "selftest", "results": []}, base, 1),
+        ("a missing section must fail",
+         base, {"bench": "selftest",
+                "results": [r for r in base["results"]
+                            if r["section"] != "shed_counts"]}, 1),
+    ]
+    bad = 0
+    for name, b, f, want in cases:
+        got, _ = compare(b, f, quiet=True)
+        verdict = "ok" if got == want else "FAILED"
+        if got != want:
+            bad += 1
+        print(f"  self-test [{verdict}] {name} (exit {got}, want {want})")
+    if bad:
+        print(f"self-test: {bad}/{len(cases)} cases FAILED -- the gate "
+              f"is not armed")
         return 1
-    print(f"{fresh_path}: {checked} rows within {TOLERANCE:.2f}x of "
-          f"{base_path} (byte rows exact, sections matched)")
+    print(f"self-test: {len(cases)}/{len(cases)} cases passed -- the "
+          f"gate is armed")
     return 0
+
+
+def main() -> int:
+    if len(sys.argv) == 2 and sys.argv[1] == "--self-test":
+        return self_test()
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    base_path, fresh_path = sys.argv[1], sys.argv[2]
+    with open(base_path) as f:
+        base = json.load(f)
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    code, _ = compare(base, fresh, base_path, fresh_path)
+    return code
 
 
 if __name__ == "__main__":

@@ -20,7 +20,8 @@ pub const SERVE_FLAGS: &[&str] = &[
     "model", "artifacts", "net", "backend", "batch", "requests",
     "prefetch", "bank-low", "bank-high", "bank-chunk", "bank-capacity",
     "max-parked-bytes", "admin", "fuse", "max-infer-errors",
-    "trace-out", "metrics-out",
+    "trace-out", "metrics-out", "slo-ms", "shards", "max-queue",
+    "tenants", "adaptive-bank",
 ];
 
 /// Resolve an `on|off` toggle flag (`--fuse on`); absent -> `default`.

@@ -1,0 +1,863 @@
+//! Request plane (L4): dynamic batching, admission control, tenant
+//! fairness, and consistent-hash sharding in front of the registry.
+//!
+//! A [`Batcher`] fronts one registry slot: concurrent `submit` calls
+//! land in per-tenant FIFOs and a dispatch thread coalesces them into
+//! one secure batch per *dispatch window* -- a window closes when the
+//! batch fills to `max_batch` or the oldest queued request's latency
+//! SLO (`BatcherPolicy::slo`, the `--slo-ms` knob) nears.  Batching in
+//! 3PC amortizes *rounds*: the engine batches across samples, so a
+//! window of 8 pays the same round count as a window of 1.
+//!
+//! **Shedding precedes minting.**  Admission control runs at `submit`,
+//! before the request can reach the broadcast queue: a full queue or a
+//! bank that cannot serve the batch warm
+//! ([`Service::can_serve_warm`]) rejects with the typed
+//! [`RegistryError::Overloaded`].  The probe is non-mutating -- unlike
+//! a refused `try_reserve` it counts no underflow -- so a shed burst
+//! leaves `underflow_calls == 0`: overload never perturbs the
+//! deterministic credit accounting the three parties agree on, and
+//! never burns request-path mints on work that is thrown away.
+//!
+//! **Fairness.**  Requests carry a tenant tag; each window is formed
+//! by round-robining the tenant FIFOs (resuming after the last tenant
+//! served), so a flooding tenant's backlog cannot starve a quiet one:
+//! the quiet tenant's request rides the very next window after it
+//! arrives.  Per-tenant rollups ([`metrics::TenantCounters`]) witness
+//! this -- `last_window` is the starvation check.
+//!
+//! **Bit-identity.**  A window is submitted through
+//! [`Service::infer_labeled`] -- the same broadcast path, job order,
+//! and (for the trunc-free zoo graphs) the same logits as serial
+//! `Service::infer` calls.  Pinned by `rust/tests/request_plane.rs`
+//! the same way `lifecycle.rs` pins quarantine.
+//!
+//! **Sharding.**  A [`RequestPlane`] owns a `ModelRegistry` plus one
+//! `Batcher` per slot; `--shards N` registers the same manifest in N
+//! slots (`name#0..name#N-1`, each its own lane pair, seed domain, and
+//! bank) behind a deterministic consistent-hash [`ShardRouter`], so a
+//! hot model spans multiple lane trios and a quarantined shard remaps
+//! only its own keys.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::anyhow;
+
+use super::{recover, ModelRegistry, ModelSpec, RegistryError, Response,
+            Service};
+use crate::engine::session::SessionConfig;
+use crate::metrics::{Histogram, ModelRollup, PlaneStats, TenantCounters};
+use crate::ring::Tensor;
+use crate::transport::Stats;
+
+/// Why a request was shed at admission (the payload of
+/// [`RegistryError::Overloaded`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The batcher's queue is at `max_queue`: dispatch is not keeping
+    /// up.  Retryable -- back off and resubmit.
+    QueueFull { depth: usize, limit: usize },
+    /// The tuple bank cannot serve a full batch warm: it is closed
+    /// (producer dead / slot draining) or the batch's largest MSB draw
+    /// exceeds `capacity - chunk`, so every draw would mint on the
+    /// request path.  Not retryable until an operator resizes the bank
+    /// or respawns the slot.
+    BankDry { max_draw: usize, capacity: usize },
+}
+
+impl std::fmt::Display for ShedReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShedReason::QueueFull { depth, limit } =>
+                write!(f, "queue full ({depth} queued, limit {limit}); \
+                           back off and retry"),
+            ShedReason::BankDry { max_draw, capacity } =>
+                write!(f, "bank cannot serve a batch warm (largest draw \
+                           {max_draw} elements vs capacity {capacity}); \
+                           raise --bank-capacity or respawn the slot"),
+        }
+    }
+}
+
+/// Dispatch policy for one batcher front.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherPolicy {
+    /// Largest batch one dispatch window coalesces.
+    pub max_batch: usize,
+    /// Latency SLO: a window closes when the *oldest* queued request
+    /// has waited this long, full or not (`--slo-ms`).
+    pub slo: Duration,
+    /// Admission cap on queued requests; above it, `submit` sheds with
+    /// `Overloaded` (`--max-queue`).
+    pub max_queue: usize,
+    /// Tuple prefetch depth: before each window the dispatch thread
+    /// pumps `prefetch * demand(batch)` elements of bank headroom (0
+    /// disables the pump; the service prefill still applies).
+    pub prefetch: usize,
+    /// Adaptive watermarks: resize the bank policy from the observed
+    /// per-window dispatch demand (EWMA), instead of the static
+    /// `prefetch * demand(max_batch)` sizing.  Resizes are broadcast
+    /// jobs from the dispatch thread -- never the request path.
+    pub adaptive: bool,
+}
+
+impl Default for BatcherPolicy {
+    fn default() -> Self {
+        BatcherPolicy {
+            max_batch: 8,
+            slo: Duration::from_millis(10),
+            max_queue: 64,
+            prefetch: 2,
+            adaptive: false,
+        }
+    }
+}
+
+/// Outcome channel payload: the response, or the typed reason the
+/// request could not be served (shed at dispatch, or the slot failed).
+pub type PlaneResult = Result<Response, RegistryError>;
+
+struct PendingReq {
+    image: Tensor,
+    enqueued: Instant,
+    respond: Sender<PlaneResult>,
+}
+
+#[derive(Default)]
+struct TenantQ {
+    fifo: VecDeque<PendingReq>,
+    c: TenantCounters,
+}
+
+struct QueueState {
+    tenants: BTreeMap<String, TenantQ>,
+    depth: usize,
+    closed: bool,
+    /// Tenant tag the last window ended on: the next window resumes
+    /// round-robin *after* it.
+    last_served: Option<String>,
+    /// Dispatch windows executed (1-based ids; `TenantCounters::
+    /// last_window` references these).
+    windows: u64,
+    served: u64,
+    shed_queue: u64,
+    shed_dry: u64,
+    coalesced_max: u64,
+    latency: Histogram,
+}
+
+struct Shared {
+    q: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+/// Aggregated batcher counters: the plane row, the per-tenant rollups,
+/// and the enqueue-to-response latency histogram.
+#[derive(Clone, Debug, Default)]
+pub struct BatcherStats {
+    pub plane: PlaneStats,
+    pub tenants: Vec<TenantCounters>,
+    pub latency: Histogram,
+}
+
+/// Dynamic-batching front for one registry slot.  See the module doc.
+pub struct Batcher {
+    name: String,
+    svc: Arc<Service>,
+    policy: BatcherPolicy,
+    shared: Arc<Shared>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Batcher {
+    pub fn start(name: impl Into<String>, svc: Arc<Service>,
+                 policy: BatcherPolicy) -> Batcher {
+        let name = name.into();
+        let shared = Arc::new(Shared {
+            q: Mutex::new(QueueState {
+                tenants: BTreeMap::new(),
+                depth: 0,
+                closed: false,
+                last_served: None,
+                windows: 0,
+                served: 0,
+                shed_queue: 0,
+                shed_dry: 0,
+                coalesced_max: 0,
+                latency: Histogram::default(),
+            }),
+            cv: Condvar::new(),
+        });
+        let handle = {
+            let shared = Arc::clone(&shared);
+            let svc = Arc::clone(&svc);
+            let name = name.clone();
+            std::thread::spawn(move || {
+                dispatch_loop(&name, &svc, policy, &shared);
+            })
+        };
+        Batcher { name, svc, policy, shared, handle: Some(handle) }
+    }
+
+    /// Submit one request under a tenant tag.  Admission control runs
+    /// here, before anything touches the request path: a full queue or
+    /// a dry bank sheds with the typed `Overloaded` (and counts it on
+    /// the tenant), otherwise the returned channel yields the response
+    /// once its dispatch window completes.
+    pub fn submit(&self, tenant: &str, image: Tensor)
+                  -> Result<Receiver<PlaneResult>, RegistryError> {
+        let mut q = recover(self.shared.q.lock());
+        let t = q.tenants.entry(tenant.to_string()).or_default();
+        if t.c.tenant.is_empty() {
+            t.c.tenant = tenant.to_string();
+        }
+        t.c.submitted += 1;
+        if q.closed || q.depth >= self.policy.max_queue {
+            let reason = ShedReason::QueueFull {
+                depth: q.depth,
+                limit: if q.closed { 0 } else { self.policy.max_queue },
+            };
+            q.tenants.get_mut(tenant).expect("just inserted").c.shed += 1;
+            q.shed_queue += 1;
+            return Err(RegistryError::Overloaded {
+                model: self.name.clone(),
+                reason,
+            });
+        }
+        if !self.svc.can_serve_warm(self.policy.max_batch) {
+            let bc = self.svc.bank_handle(0).config();
+            let reason = ShedReason::BankDry {
+                max_draw: self.svc
+                    .max_draw_for(self.policy.max_batch.max(1)),
+                capacity: bc.capacity,
+            };
+            q.tenants.get_mut(tenant).expect("just inserted").c.shed += 1;
+            q.shed_dry += 1;
+            return Err(RegistryError::Overloaded {
+                model: self.name.clone(),
+                reason,
+            });
+        }
+        let (tx, rx) = channel();
+        q.tenants.get_mut(tenant).expect("just inserted").fifo
+            .push_back(PendingReq {
+                image,
+                enqueued: Instant::now(),
+                respond: tx,
+            });
+        q.depth += 1;
+        drop(q);
+        self.shared.cv.notify_all();
+        Ok(rx)
+    }
+
+    /// Snapshot the plane counters, per-tenant rollups, and latency.
+    pub fn stats(&self) -> BatcherStats {
+        let q = recover(self.shared.q.lock());
+        BatcherStats {
+            plane: PlaneStats {
+                depth: q.depth as u64,
+                shed_queue: q.shed_queue,
+                shed_dry: q.shed_dry,
+                dispatches: q.windows,
+                served: q.served,
+                coalesced_max: q.coalesced_max,
+            },
+            tenants: q.tenants.values().map(|t| t.c.clone()).collect(),
+            latency: q.latency.clone(),
+        }
+    }
+
+    /// Party 0's bank counters (identical trajectories on all
+    /// parties): the shed contract is `underflow_calls == 0`.
+    pub fn preproc_metrics(&self) -> crate::metrics::PreprocMetrics {
+        self.svc.bank_handle(0).metrics()
+    }
+
+    /// Close the ingress, drain the queue (every admitted request is
+    /// still dispatched), join the dispatch thread, and return the
+    /// final counters.  Does NOT stop the underlying service -- slots
+    /// are owned by the registry.
+    pub fn finish(mut self) -> BatcherStats {
+        self.close();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        self.stats()
+    }
+
+    fn close(&self) {
+        recover(self.shared.q.lock()).closed = true;
+        self.shared.cv.notify_all();
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        self.close();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Oldest enqueue time across every tenant FIFO (the window deadline
+/// anchor).  `None` on an empty queue.
+fn oldest_enqueued(q: &QueueState) -> Option<Instant> {
+    q.tenants.values()
+        .filter_map(|t| t.fifo.front().map(|p| p.enqueued))
+        .min()
+}
+
+/// Form one window: round-robin the tenant FIFOs starting after the
+/// tenant the previous window ended on, one request per tenant per
+/// turn, until `max` requests or the queue drains.
+fn take_batch(q: &mut QueueState, max: usize)
+              -> Vec<(String, PendingReq)> {
+    let keys: Vec<String> = q.tenants.iter()
+        .filter(|(_, t)| !t.fifo.is_empty())
+        .map(|(k, _)| k.clone())
+        .collect();
+    if keys.is_empty() {
+        return Vec::new();
+    }
+    let start = match &q.last_served {
+        Some(last) => keys.iter().position(|k| k > last).unwrap_or(0),
+        None => 0,
+    };
+    let mut out = Vec::new();
+    let mut i = start;
+    let mut empty_streak = 0;
+    while out.len() < max && empty_streak < keys.len() {
+        let k = &keys[i % keys.len()];
+        i += 1;
+        let t = q.tenants.get_mut(k).expect("key from this map");
+        match t.fifo.pop_front() {
+            Some(p) => {
+                empty_streak = 0;
+                q.depth -= 1;
+                q.last_served = Some(k.clone());
+                out.push((k.clone(), p));
+            }
+            None => empty_streak += 1,
+        }
+    }
+    out
+}
+
+/// How often (in dispatch windows) the adaptive sizer reconsiders the
+/// bank watermarks.
+const RETUNE_EVERY: u64 = 8;
+
+fn dispatch_loop(name: &str, svc: &Service, policy: BatcherPolicy,
+                 shared: &Shared) {
+    let max_batch = policy.max_batch.max(1);
+    // EWMA of per-window batch size, seeded at the configured maximum
+    // (the static sizing's assumption) so early retunes are
+    // conservative
+    let mut ewma_batch = max_batch as f64;
+    loop {
+        let mut q = recover(shared.q.lock());
+        loop {
+            if q.depth > 0 {
+                break;
+            }
+            if q.closed {
+                return;
+            }
+            q = match shared.cv.wait(q) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+        }
+        // the coalescing window: wait for the batch to fill, but never
+        // past the oldest request's SLO deadline.  A closing batcher
+        // skips the wait and drains immediately.
+        if !q.closed {
+            let deadline = oldest_enqueued(&q)
+                .map(|t| t + policy.slo)
+                .unwrap_or_else(Instant::now);
+            while q.depth < max_batch && !q.closed {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (g, timed_out) =
+                    match shared.cv.wait_timeout(q, deadline - now) {
+                        Ok((g, t)) => (g, t.timed_out()),
+                        Err(p) => (p.into_inner().0, true),
+                    };
+                q = g;
+                if timed_out {
+                    break;
+                }
+            }
+        }
+        q.windows += 1;
+        let window = q.windows;
+        let batch = take_batch(&mut q, max_batch);
+        drop(q);
+        if batch.is_empty() {
+            continue;
+        }
+        // pump the producers *before* the batch (refills land ahead of
+        // the infer job in every party's queue, so minting overlaps
+        // this window's online phase), then let the adaptive sizer
+        // retune the watermarks from the demand it actually observes
+        // -- both strictly on this dispatch thread, never the request
+        // path
+        if policy.prefetch > 0 {
+            svc.top_up_to(policy.prefetch * svc.demand_for(batch.len()));
+        }
+        ewma_batch = 0.75 * ewma_batch + 0.25 * batch.len() as f64;
+        if policy.adaptive && window % RETUNE_EVERY == 0 {
+            retune_from_observed(svc, ewma_batch);
+        }
+        // dispatch-time recheck: the bank may have closed since these
+        // requests were admitted -- fail them typed instead of minting
+        if !svc.can_serve_warm(max_batch) {
+            let bc = svc.bank_handle(0).config();
+            let max_draw = svc.max_draw_for(max_batch);
+            let mut q = recover(shared.q.lock());
+            for (tenant, p) in batch {
+                q.shed_dry += 1;
+                if let Some(t) = q.tenants.get_mut(&tenant) {
+                    t.c.shed += 1;
+                }
+                let _ = p.respond.send(Err(RegistryError::Overloaded {
+                    model: name.to_string(),
+                    reason: ShedReason::BankDry {
+                        max_draw,
+                        capacity: bc.capacity,
+                    },
+                }));
+            }
+            continue;
+        }
+        // tenant+shard attribution for the Request span: unique tags
+        // in window order, truncated by the 24-byte label
+        let mut tags: Vec<&str> = Vec::new();
+        for (t, _) in &batch {
+            if !tags.contains(&t.as_str()) {
+                tags.push(t);
+            }
+        }
+        let label = crate::trace::request_label(
+            &svc.model_name, svc.slot, &tags.join(","));
+        let images: Vec<Tensor> =
+            batch.iter().map(|(_, p)| p.image.clone()).collect();
+        match svc.infer_labeled(images, Some(label.as_str().to_string())) {
+            Ok(logits) => {
+                let n = batch.len();
+                let mut q = recover(shared.q.lock());
+                q.served += n as u64;
+                q.coalesced_max = q.coalesced_max.max(n as u64);
+                for ((tenant, p), l) in batch.into_iter().zip(logits) {
+                    let lat = p.enqueued.elapsed();
+                    q.latency.record(lat);
+                    if let Some(t) = q.tenants.get_mut(&tenant) {
+                        t.c.served += 1;
+                        t.c.last_window = window;
+                    }
+                    let pred = crate::engine::argmax(&l);
+                    let _ = p.respond.send(Ok(Response {
+                        logits: l,
+                        pred,
+                        latency: lat,
+                    }));
+                }
+            }
+            Err(e) => {
+                // slot failure (quarantine, desync): typed per waiter;
+                // neither served nor shed -- the registry watchdog and
+                // operator runbook own what happens to the slot
+                let msg = e.to_string();
+                for (_, p) in batch {
+                    let _ = p.respond.send(Err(RegistryError::Service {
+                        model: name.to_string(),
+                        source: anyhow!("{msg}"),
+                    }));
+                }
+            }
+        }
+    }
+}
+
+/// Resize the bank watermarks to the observed dispatch demand: one
+/// EWMA-batch of headroom triggers a refill, three are kept warm,
+/// chunks are one batch -- `BankConfig::auto`'s shape, but sized by
+/// what the plane actually dispatches instead of the static
+/// `max_batch` assumption.  Clamped to the immutable capacity;
+/// applied only when the target differs from the live config.
+fn retune_from_observed(svc: &Service, ewma_batch: f64) {
+    let bc = svc.bank_handle(0).config();
+    let observed = (ewma_batch.ceil() as usize).max(1);
+    let unit = svc.demand_for(observed).max(1);
+    // keep auto()'s 1/3/1/4 shape inside the fixed capacity
+    let unit = unit.min(bc.capacity / 4);
+    if unit == 0 {
+        return;
+    }
+    let chunk = unit;
+    let high = (3 * unit).min(bc.capacity - chunk);
+    let low = unit.min(high);
+    if (low, high, chunk) == (bc.low, bc.high, bc.chunk) {
+        return;
+    }
+    let _ = svc.retune_banks(low, high, chunk);
+}
+
+// ---------------------------------------------------------------------
+// Consistent-hash shard router
+// ---------------------------------------------------------------------
+
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut x: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        x = (x ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    x
+}
+
+/// Deterministic consistent-hash ring over a model's shards.  Each
+/// shard contributes `VNODES` points derived from the model name, so
+/// the ring is identical on every process that builds it; `route`
+/// walks to the first point at or after the key.  Removing a shard
+/// (`route_healthy` with it filtered out) remaps *only* the keys that
+/// ring-walk onto it -- the property the request-plane soak pins.
+pub struct ShardRouter {
+    points: Vec<(u64, u8)>,
+    shards: u8,
+}
+
+impl ShardRouter {
+    /// Virtual nodes per shard: enough to spread load within a few
+    /// percent at the shard counts a link trio can host.
+    pub const VNODES: u64 = 32;
+
+    pub fn new(model: &str, shards: u8) -> ShardRouter {
+        let shards = shards.max(1);
+        let base = fnv1a(model);
+        let mut points: Vec<(u64, u8)> = (0..shards)
+            .flat_map(|s| (0..Self::VNODES).map(move |v| {
+                (splitmix64(base ^ ((s as u64 + 1) << 40) ^ v), s)
+            }))
+            .collect();
+        points.sort_unstable();
+        ShardRouter { points, shards }
+    }
+
+    pub fn shards(&self) -> u8 {
+        self.shards
+    }
+
+    /// The routing key for one request: tenant tag + per-model request
+    /// sequence number, mixed so one tenant's stream spreads across
+    /// shards deterministically.
+    pub fn key(tenant: &str, seq: u64) -> u64 {
+        splitmix64(fnv1a(tenant) ^ splitmix64(seq))
+    }
+
+    /// First ring point at or after `key` (wrapping).
+    pub fn route(&self, key: u64) -> u8 {
+        let i = self.points.partition_point(|(p, _)| *p < key);
+        self.points[i % self.points.len()].1
+    }
+
+    /// `route`, skipping shards `healthy` rejects (quarantined slots):
+    /// the ring walk continues to the next point, so only the dead
+    /// shard's keys move.  `None` when no shard is healthy.
+    pub fn route_healthy(&self, key: u64,
+                         healthy: impl Fn(u8) -> bool) -> Option<u8> {
+        let start = self.points.partition_point(|(p, _)| *p < key);
+        (0..self.points.len())
+            .map(|off| self.points[(start + off) % self.points.len()].1)
+            .find(|s| healthy(*s))
+    }
+}
+
+// ---------------------------------------------------------------------
+// RequestPlane: registry + batchers + shard routing
+// ---------------------------------------------------------------------
+
+/// Request-plane configuration: one batcher policy shared by every
+/// slot, and the shard fan-out per model.
+#[derive(Clone, Copy, Debug)]
+pub struct PlaneConfig {
+    pub policy: BatcherPolicy,
+    /// Slots per model (`--shards`; 1 = unsharded, names unchanged).
+    pub shards: u8,
+}
+
+impl Default for PlaneConfig {
+    fn default() -> Self {
+        PlaneConfig { policy: BatcherPolicy::default(), shards: 1 }
+    }
+}
+
+struct ModelFront {
+    router: ShardRouter,
+    /// Slot names in shard order (`name#k`, or just `name` unsharded).
+    slots: Vec<String>,
+    seq: AtomicU64,
+}
+
+/// The serving front: a `ModelRegistry` hosting every (sharded) slot
+/// over one link trio, a `Batcher` per slot, and a consistent-hash
+/// router per logical model.  See the module doc.
+pub struct RequestPlane {
+    reg: ModelRegistry,
+    fronts: BTreeMap<String, ModelFront>,
+    batchers: BTreeMap<String, Batcher>,
+}
+
+impl RequestPlane {
+    /// Registry name of one shard slot: `model#k` when sharded, the
+    /// plain model name when not (so unsharded planes are drop-in
+    /// compatible with registry-level tooling and tests).
+    pub fn slot_name(model: &str, shard: u8, shards: u8) -> String {
+        if shards <= 1 {
+            model.to_string()
+        } else {
+            format!("{model}#{shard}")
+        }
+    }
+
+    pub fn start(specs: Vec<ModelSpec>, cfg: &SessionConfig,
+                 plane: PlaneConfig) -> Result<RequestPlane, RegistryError> {
+        let shards = plane.shards.max(1);
+        let mut expanded = Vec::with_capacity(specs.len() * shards as usize);
+        for s in &specs {
+            for k in 0..shards {
+                expanded.push(ModelSpec {
+                    name: Self::slot_name(&s.name, k, shards),
+                    model: Arc::clone(&s.model),
+                    bank: s.bank,
+                });
+            }
+        }
+        let reg = ModelRegistry::start(expanded, cfg)?;
+        let mut fronts = BTreeMap::new();
+        let mut batchers = BTreeMap::new();
+        for s in &specs {
+            let mut slots = Vec::with_capacity(shards as usize);
+            for k in 0..shards {
+                let slot = Self::slot_name(&s.name, k, shards);
+                let svc = reg.service(&slot)?;
+                batchers.insert(
+                    slot.clone(),
+                    Batcher::start(slot.clone(), svc, plane.policy));
+                slots.push(slot);
+            }
+            fronts.insert(s.name.clone(), ModelFront {
+                router: ShardRouter::new(&s.name, shards),
+                slots,
+                seq: AtomicU64::new(0),
+            });
+        }
+        Ok(RequestPlane { reg, fronts, batchers })
+    }
+
+    /// Route one request: consistent-hash the (tenant, sequence) key
+    /// to a shard, preferring healthy (Serving) slots, then submit to
+    /// that shard's batcher.  Admission control applies there.
+    pub fn submit(&self, model: &str, tenant: &str, image: Tensor)
+                  -> Result<Receiver<PlaneResult>, RegistryError> {
+        let front = self.fronts.get(model)
+            .ok_or_else(|| RegistryError::UnknownModel(model.into()))?;
+        let seq = front.seq.fetch_add(1, Ordering::Relaxed);
+        let key = ShardRouter::key(tenant, seq);
+        let shard = front.router
+            .route_healthy(key, |s| {
+                self.reg.state(&front.slots[s as usize])
+                    .map(|st| st == super::SlotState::Serving)
+                    .unwrap_or(false)
+            })
+            .unwrap_or_else(|| front.router.route(key));
+        self.batchers[&front.slots[shard as usize]]
+            .submit(tenant, image)
+    }
+
+    pub fn registry(&self) -> &ModelRegistry {
+        &self.reg
+    }
+
+    /// The batcher fronting one *slot* name (`model#k` when sharded).
+    pub fn batcher(&self, slot: &str) -> Option<&Batcher> {
+        self.batchers.get(slot)
+    }
+
+    /// Logical model names (one per `--model`, regardless of shards).
+    pub fn models(&self) -> Vec<String> {
+        self.fronts.keys().cloned().collect()
+    }
+
+    /// The slot names one model spans, in shard order.
+    pub fn shard_slots(&self, model: &str) -> Vec<String> {
+        self.fronts.get(model)
+            .map(|f| f.slots.clone())
+            .unwrap_or_default()
+    }
+
+    /// Requests served across every slot.
+    pub fn requests_served(&self) -> u64 {
+        self.batchers.values().map(|b| b.stats().plane.served).sum()
+    }
+
+    /// Enqueue-to-response latency merged across every slot.
+    pub fn latency(&self) -> Histogram {
+        let mut h = Histogram::default();
+        for b in self.batchers.values() {
+            h.merge(&b.stats().latency);
+        }
+        h
+    }
+
+    /// Registry rollups overlaid with each slot's plane counters and
+    /// per-tenant rows -- the full `metrics::ModelRollup` the
+    /// Prometheus export renders.
+    pub fn rollups(&self) -> Vec<ModelRollup> {
+        let mut rows = self.reg.rollups();
+        for r in &mut rows {
+            if let Some(b) = self.batchers.get(&r.name) {
+                let s = b.stats();
+                r.plane = s.plane;
+                r.tenants = s.tenants;
+            }
+        }
+        rows
+    }
+
+    /// Close every batcher's ingress, drain their queues, then shut
+    /// the registry down (slot order, graceful).
+    pub fn shutdown(self)
+                    -> Result<Vec<(String, [Stats; 3])>, RegistryError> {
+        let RequestPlane { reg, fronts: _, batchers } = self;
+        for (_, b) in batchers {
+            let _ = b.finish();
+        }
+        reg.shutdown()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_defaults_are_sane() {
+        let p = BatcherPolicy::default();
+        assert!(p.max_batch >= 1 && p.max_queue >= p.max_batch);
+        assert!(p.slo > Duration::ZERO);
+        assert!(!p.adaptive, "adaptive sizing is opt-in");
+        let pc = PlaneConfig::default();
+        assert_eq!(pc.shards, 1);
+    }
+
+    #[test]
+    fn slot_names_only_change_when_sharded() {
+        assert_eq!(RequestPlane::slot_name("lenet5", 0, 1), "lenet5");
+        assert_eq!(RequestPlane::slot_name("lenet5", 2, 4), "lenet5#2");
+    }
+
+    #[test]
+    fn router_is_deterministic_total_and_balanced() {
+        let r1 = ShardRouter::new("lenet5", 4);
+        let r2 = ShardRouter::new("lenet5", 4);
+        let mut hits = [0usize; 4];
+        for seq in 0..4096u64 {
+            let key = ShardRouter::key("tenant-a", seq);
+            let s = r1.route(key);
+            assert_eq!(s, r2.route(key), "ring must be deterministic");
+            assert!(s < 4);
+            hits[s as usize] += 1;
+        }
+        for (s, h) in hits.iter().enumerate() {
+            assert!(*h > 4096 / 16,
+                    "shard {s} starved: {h}/4096 keys ({hits:?})");
+        }
+        // a different model name builds a different ring
+        let other = ShardRouter::new("vgg7", 4);
+        let moved = (0..256u64)
+            .filter(|&q| {
+                let k = ShardRouter::key("tenant-a", q);
+                r1.route(k) != other.route(k)
+            })
+            .count();
+        assert!(moved > 0, "distinct models must not share a ring");
+    }
+
+    #[test]
+    fn removing_a_shard_remaps_only_its_keys() {
+        let r = ShardRouter::new("lenet5", 5);
+        let dead = 3u8;
+        for seq in 0..2048u64 {
+            let key = ShardRouter::key("t", seq);
+            let full = r.route(key);
+            let filtered = r.route_healthy(key, |s| s != dead)
+                .expect("4 healthy shards remain");
+            if full != dead {
+                assert_eq!(filtered, full,
+                           "key {seq}: healthy shard {full} moved to \
+                            {filtered} when only {dead} was removed");
+            } else {
+                assert_ne!(filtered, dead);
+            }
+        }
+        // no healthy shard at all -> None
+        assert_eq!(r.route_healthy(7, |_| false), None);
+    }
+
+    #[test]
+    fn round_robin_interleaves_tenants_within_a_window() {
+        let mut q = QueueState {
+            tenants: BTreeMap::new(),
+            depth: 0,
+            closed: false,
+            last_served: None,
+            windows: 0,
+            served: 0,
+            shed_queue: 0,
+            shed_dry: 0,
+            coalesced_max: 0,
+            latency: Histogram::default(),
+        };
+        let (tx, _rx) = channel();
+        let mut push = |q: &mut QueueState, tenant: &str, n: usize| {
+            let t = q.tenants.entry(tenant.to_string()).or_default();
+            for _ in 0..n {
+                t.fifo.push_back(PendingReq {
+                    image: Tensor::zeros(&[1]),
+                    enqueued: Instant::now(),
+                    respond: tx.clone(),
+                });
+                q.depth += 1;
+            }
+        };
+        push(&mut q, "flood", 6);
+        push(&mut q, "quiet", 1);
+        let w1: Vec<String> = take_batch(&mut q, 4).into_iter()
+            .map(|(t, _)| t).collect();
+        // one request per tenant per turn: the quiet tenant rides the
+        // FIRST window despite the flood's backlog
+        assert!(w1.contains(&"quiet".to_string()),
+                "quiet tenant starved out of window 1: {w1:?}");
+        assert_eq!(w1.iter().filter(|t| *t == "flood").count(), 3);
+        let w2: Vec<String> = take_batch(&mut q, 4).into_iter()
+            .map(|(t, _)| t).collect();
+        assert_eq!(w2, vec!["flood"; 3]);
+        assert_eq!(q.depth, 0);
+    }
+}

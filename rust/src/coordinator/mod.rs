@@ -49,6 +49,11 @@
 //! `metrics::LifecycleCounters` record the history.  Pinned by
 //! `rust/tests/lifecycle.rs`.
 
+pub mod batcher;
+
+pub use batcher::{Batcher, BatcherPolicy, PlaneConfig, RequestPlane,
+                  ShardRouter, ShedReason};
+
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -93,10 +98,21 @@ enum Job {
         /// threads park it in the thread-local the transport reads to
         /// attribute flight spans.
         trace: u64,
+        /// Request-span label override (the batcher's tenant+shard
+        /// attribution, `trace::request_label`); `None` closes the
+        /// span under the model name as always.  Broadcast with the
+        /// job, so all parties label identically.
+        label: Option<String>,
     },
     /// Mint `n` more tuple elements in the background (forwarded to the
     /// party's producer thread; the bank is credited in broadcast order).
     Refill(usize),
+    /// Retune the bank watermarks (adaptive sizing from the batcher's
+    /// observed dispatch demand).  A broadcast job on purpose:
+    /// `try_reserve` reads `chunk`/`capacity`, so all three parties
+    /// must apply the resize at the identical point of the job order
+    /// or their pooled-vs-fallback decisions could diverge.
+    Retune { low: usize, high: usize, chunk: usize },
     Shutdown,
     /// Fault injection (tests, ops drills): the party thread returns
     /// immediately, skipping the graceful drain -- exactly the shape of
@@ -343,7 +359,13 @@ impl Service {
                             bank.credit(n);
                             let _ = prod_tx.send(n);
                         }
-                        Job::Infer { inputs, batch, trace } => {
+                        Job::Retune { low, high, chunk } => {
+                            // validated at dispatch; a stale-capacity
+                            // race would reject identically on all
+                            // parties (capacity never changes)
+                            let _ = bank.retune(low, high, chunk);
+                        }
+                        Job::Infer { inputs, batch, trace, label } => {
                             crate::trace::set_current_trace(trace);
                             let cur = comm.tracer()
                                 .filter(|t| t.enabled())
@@ -367,7 +389,10 @@ impl Service {
                                     tr.close(
                                         &comm,
                                         crate::trace::SpanKind::Request,
-                                        0, &model.name, &cur);
+                                        0,
+                                        label.as_deref()
+                                            .unwrap_or(&model.name),
+                                        &cur);
                                 }
                             }
                             crate::trace::set_current_trace(0);
@@ -476,22 +501,59 @@ impl Service {
         if !self.preprocess {
             return;
         }
-        let goal = target_elems
-            .max(self.bank_cfg.high)
-            .min(self.bank_cfg.capacity);
+        // the *live* watermarks (party 0's view; retunes ride the same
+        // broadcast queue as these refills, so a just-dispatched resize
+        // is at worst one pump tick stale -- credits are explicit in
+        // the jobs, so staleness never desynchronizes accounting)
+        let bc = self.banks[0].config();
+        let goal = target_elems.max(bc.high).min(bc.capacity);
         let mut sched = recover(self.sched.lock());
         let reserved = self.banks[0].reserved_elems();
         let mut avail = sched.dispatched.saturating_sub(reserved);
-        if avail >= self.bank_cfg.low && avail >= target_elems {
+        if avail >= bc.low && avail >= target_elems {
             return;
         }
         while avail < goal {
             for tx in &sched.txs {
-                let _ = tx.send(Job::Refill(self.bank_cfg.chunk));
+                let _ = tx.send(Job::Refill(bc.chunk));
             }
-            sched.dispatched += self.bank_cfg.chunk;
-            avail += self.bank_cfg.chunk;
+            sched.dispatched += bc.chunk;
+            avail += bc.chunk;
         }
+    }
+
+    /// Broadcast an adaptive watermark resize to all three parties'
+    /// banks (`Job::Retune`, applied in job order -- see the variant
+    /// doc for why this cannot be a direct bank call).  Validated here
+    /// against the immutable capacity so an infeasible resize is
+    /// rejected before anything is enqueued.  No-op without
+    /// preprocessing.  Called from the batcher's dispatch thread only,
+    /// never the request path.
+    pub fn retune_banks(&self, low: usize, high: usize, chunk: usize)
+                        -> Result<(), String> {
+        if !self.preprocess {
+            return Ok(());
+        }
+        let capacity = self.banks[0].config().capacity;
+        BankConfig { low, high, chunk, capacity }.validate()?;
+        let sched = recover(self.sched.lock());
+        for tx in &sched.txs {
+            let _ = tx.send(Job::Retune { low, high, chunk });
+        }
+        Ok(())
+    }
+
+    /// Admission-control probe: can a `batch`-sized request be served
+    /// from a warm bank?  `false` means its largest MSB draw would
+    /// *always* fall back to a request-path mint (bank closed, or draw
+    /// above `capacity - chunk`), which is exactly when the batcher
+    /// sheds instead of admitting.  Non-mutating -- a shed counts no
+    /// underflow, because the request never reaches the request path.
+    /// Always `true` without preprocessing (nothing to mint).
+    pub fn can_serve_warm(&self, batch: usize) -> bool {
+        !self.preprocess
+            || self.banks[0]
+                .can_serve_warm(self.max_draw_for(batch.max(1)))
     }
 
     /// Run one batch through the session (blocking).  Over a service's
@@ -502,6 +564,16 @@ impl Service {
     /// until [`ModelRegistry::quarantine`] retires the slot's lanes --
     /// at which point it returns `Err` instead of hanging.
     pub fn infer(&self, inputs: Vec<Tensor>) -> Result<Vec<Vec<i32>>> {
+        self.infer_labeled(inputs, None)
+    }
+
+    /// `infer` with a Request-span label override: the request plane
+    /// passes `trace::request_label(model, slot, tenants)` so traces
+    /// attribute each batch to its tenants and shard.  Label handling
+    /// is the only difference -- the broadcast path, job order, and
+    /// therefore the logits are identical to unlabeled `infer`.
+    pub fn infer_labeled(&self, inputs: Vec<Tensor>,
+                         label: Option<String>) -> Result<Vec<Vec<i32>>> {
         let batch = inputs.len();
         // every request gets a trace id whether or not tracing is on:
         // minting is one relaxed fetch_add, and the id in the job is
@@ -521,6 +593,7 @@ impl Service {
                     inputs: if id == 0 { inputs.clone() } else { vec![] },
                     batch,
                     trace,
+                    label: label.clone(),
                 };
                 tx.send(job).map_err(|_| anyhow!("party {id} gone"))?;
             }
@@ -760,6 +833,13 @@ pub enum RegistryError {
     /// A drain/join failed (party thread panicked) -- the slot's state
     /// transition still happened; the detail says what was lost.
     Drain { model: String, detail: String },
+    /// Load shed at admission: the batcher refused the request *before*
+    /// it could reach the request path, because the queue is full or
+    /// the tuple bank cannot serve the batch warm.  Typed so clients
+    /// can tell "retry later" (this) apart from "the model is broken"
+    /// (`Service`/`SlotUnavailable`).  By construction a shed request
+    /// never minted: `underflow_calls` stays 0.
+    Overloaded { model: String, reason: ShedReason },
 }
 
 impl std::fmt::Display for RegistryError {
@@ -782,6 +862,8 @@ impl std::fmt::Display for RegistryError {
                            operation"),
             RegistryError::Drain { model, detail } =>
                 write!(f, "model '{model}' drain: {detail}"),
+            RegistryError::Overloaded { model, reason } =>
+                write!(f, "model '{model}' overloaded: {reason}"),
         }
     }
 }

@@ -2,11 +2,14 @@
 //!
 //! Subcommands:
 //!   infer  -- one batched secure inference, print predictions + cost
-//!   serve  -- start the serving stack, replay a synthetic request
-//!             stream, print latency/throughput.  One `--model` serves
-//!             through the dynamic-batching Coordinator; repeated
-//!             `--model` flags serve every model from one process's
-//!             links via the ModelRegistry (see OPERATIONS.md)
+//!   serve  -- start the serving stack behind the async request plane
+//!             (dynamic batching + admission control + sharding),
+//!             replay a synthetic multi-tenant request stream, print
+//!             latency/throughput and shed/fairness counters.
+//!             Repeated `--model` flags serve every model from one
+//!             process's links; `--shards N` spreads each model over
+//!             N registry slots behind a consistent-hash router (see
+//!             OPERATIONS.md §7)
 //!   acc    -- secure accuracy over the exported eval set
 //!   info   -- describe a model manifest
 //!   trace  -- merge an exported trace directory (three parties'
@@ -29,12 +32,12 @@ use anyhow::{anyhow, Context, Result};
 
 use cbnn::cli::{parse_backend, parse_bank, parse_models, parse_net,
                 parse_on_off, Args, SERVE_FLAGS};
-use cbnn::coordinator::{BatchPolicy, Coordinator, ModelRegistry, ModelSpec,
-                        Service};
+use cbnn::coordinator::{BatcherPolicy, ModelRegistry, ModelSpec,
+                        PlaneConfig, RegistryError, RequestPlane};
 use cbnn::datasets::EvalSet;
 use cbnn::engine::session::{run_inference, secure_accuracy, SessionConfig};
-use cbnn::metrics::{fmt_duration, prometheus_text, Histogram,
-                    MetricsSnapshot, ModelRollup};
+use cbnn::metrics::{fmt_duration, prometheus_text, MetricsSnapshot,
+                    ModelRollup};
 use cbnn::nn::Model;
 use cbnn::ring::Tensor;
 use cbnn::trace::{self, merge, SpanKind};
@@ -53,9 +56,14 @@ fn usage() -> String {
          [,virtual], --backend \
          native|pjrt-pallas|pjrt-xla, --fuse on|off (binary-domain \
          layer fusion), --max-infer-errors N (0 disables the \
-         auto-quarantine watchdog), --trace-out DIR (per-party span \
-         JSONL + stats sidecars), --metrics-out PATH (Prometheus \
-         text); see OPERATIONS.md",
+         auto-quarantine watchdog), --slo-ms N (dispatch-window \
+         latency SLO), --shards N (slots per model behind the \
+         consistent-hash router), --max-queue N (admission cap; \
+         above it requests shed typed), --tenants N (synthetic \
+         tenant streams), --adaptive-bank on|off (size bank \
+         watermarks from observed dispatch demand), --trace-out DIR \
+         (per-party span JSONL + stats sidecars), --metrics-out PATH \
+         (Prometheus text); see OPERATIONS.md",
         serve.join(" "))
 }
 
@@ -158,13 +166,7 @@ fn main() -> Result<()> {
                                       &data.labels[..n], batch, &cfg)?;
             println!("secure accuracy over {n} samples: {:.2}%", acc * 100.0);
         }
-        "serve" => {
-            if specs.len() == 1 {
-                serve_single(&args, &art, cfg, name, path)?;
-            } else {
-                serve_multi(&args, &art, cfg, &specs)?;
-            }
-        }
+        "serve" => serve_plane(&args, &art, cfg, &specs)?,
         "trace" => {
             let dir = args.positional.first()
                 .ok_or_else(|| anyhow!("usage: cbnn trace <DIR>"))?;
@@ -237,136 +239,36 @@ fn trace_report(dir: &Path) -> Result<()> {
     Ok(())
 }
 
-/// One model behind the dynamic-batching `Coordinator` (the PR 3 path).
-fn serve_single(args: &Args, art: &Path, cfg: SessionConfig,
-                name: &str, path: &Path) -> Result<()> {
-    let model = load_model(name, path)?;
-    let data = load_data(art, &model)?;
-    let requests = args.get_usize("requests", 32)
-        .map_err(anyhow::Error::msg)?;
-    let max_batch = args.get_usize("batch", 8)
-        .map_err(anyhow::Error::msg)?;
-    let prefetch = args.get_usize("prefetch", 2)
-        .map_err(anyhow::Error::msg)?;
-    let mut cfg = cfg;
-    cfg.max_batch = max_batch;
-    if let Some(bank) = parse_bank(args).map_err(anyhow::Error::msg)? {
-        cfg.bank = Some(bank);
-    }
-    let svc = Service::start(Arc::clone(&model), cfg)?;
-    println!("service up: model={} setup={}", svc.model_name,
-             fmt_duration(svc.setup_time));
-    // the Coordinator consumes the service, so grab the telemetry
-    // handles (sinks for spans, weak controls for the stats sidecar,
-    // party-0 bank for the level gauge) up front
-    let slot = svc.slot;
-    let telemetry: Vec<_> = (0..3)
-        .map(|p| (svc.trace_sink(p), svc.chan_control(p)))
-        .collect();
-    let bank0 = svc.bank_handle(0);
-    let coord = Coordinator::start(svc, BatchPolicy {
-        max_batch,
-        max_wait: Duration::from_millis(10),
-        prefetch,
-    });
-    let mut rxs = Vec::new();
-    for i in 0..requests {
-        rxs.push((i, coord.submit(
-            data.images[i % data.images.len()].clone())));
-    }
-    let mut correct = 0;
-    for (i, rx) in rxs {
-        let resp = rx.recv().context("response")?;
-        if resp.pred == data.labels[i % data.labels.len()] as usize {
-            correct += 1;
-        }
-    }
-    let pm = coord.preproc_metrics();
-    // export telemetry while the service (inside the batcher) still
-    // holds the links alive -- after `finish` the weak stats handles
-    // are dead
-    if let Some(dir) = args.get("trace-out") {
-        let dir = Path::new(dir);
-        // let refills triggered by the last draws finish, so the
-        // exported flight bytes reconcile with the stats sidecar
-        let (mut last, mut stable, mut spins) =
-            (bank0.metrics().minted, 0, 0);
-        while stable < 3 && spins < 100 {
-            std::thread::sleep(Duration::from_millis(20));
-            let now = bank0.metrics().minted;
-            if now == last {
-                stable += 1;
-            } else {
-                (stable, last) = (0, now);
-            }
-            spins += 1;
-        }
-        for (party, (sink, ctl)) in telemetry.iter().enumerate() {
-            let stats = ctl.stats().unwrap_or_default();
-            cbnn::trace::write_party_trace(dir, party, sink, &stats)
-                .with_context(|| format!("trace export to {}",
-                                         dir.display()))?;
-        }
-        println!("trace exported -> {} (merge: cbnn trace {})",
-                 dir.display(), dir.display());
-    }
-    let bank_level = bank0.level() as u64;
-    let stats0 = telemetry[0].1.stats().unwrap_or_default();
-    let (hist, thr) = coord.finish();
-    println!("served {} requests: {:.1} req/s", thr.requests,
-             thr.per_sec());
-    println!("offline bank: minted={} drawn={} request-path \
-              fallbacks={} ({} elems)",
-             pm.minted, pm.drawn, pm.underflow_calls,
-             pm.fallback_elems);
-    println!("latency mean={} p50={} p99={} max={}",
-             fmt_duration(hist.mean()),
-             fmt_duration(hist.quantile(0.5)),
-             fmt_duration(hist.quantile(0.99)),
-             fmt_duration(hist.max()));
-    println!("accuracy on served stream: {:.1}%",
-             100.0 * f64::from(correct) / requests as f64);
-    if let Some(path) = args.get("metrics-out") {
-        let snap = MetricsSnapshot {
-            requests: thr.requests,
-            latency: hist,
-            models: vec![ModelRollup {
-                name: model.name.clone(),
-                slot,
-                online: stats0.chan(
-                    cbnn::transport::ChanId::online(slot)),
-                offline: stats0.chan(
-                    cbnn::transport::ChanId::offline(slot)),
-                preproc: pm,
-                ..ModelRollup::default()
-            }],
-            bank_levels: vec![(model.name.clone(), bank_level)],
-            trace_dropped: telemetry.iter()
-                .map(|(s, _)| s.dropped_events()).collect(),
-        };
-        std::fs::write(path, prometheus_text(&snap))
-            .with_context(|| format!("writing {path}"))?;
-        println!("metrics written -> {path}");
-    }
-    Ok(())
-}
-
-/// Every `--model` from one process's three links via the
-/// `ModelRegistry`: interleaved round-robin batches, per-model rollups.
-/// (`--prefetch` drives the single-model batcher only; registry
-/// services keep their own watermarks per request.)
-fn serve_multi(args: &Args, art: &Path, cfg: SessionConfig,
+/// The serve subcommand: every `--model` (times `--shards`) behind the
+/// async request plane.  A synthetic multi-tenant request stream
+/// (`--tenants` concurrent submitters per model) drives the plane;
+/// admission sheds are counted, not fatal -- exactly how a production
+/// front should treat `Overloaded`.
+fn serve_plane(args: &Args, art: &Path, cfg: SessionConfig,
                specs: &[(String, PathBuf)]) -> Result<()> {
     let requests = args.get_usize("requests", 32)
         .map_err(anyhow::Error::msg)?;
     // clamp like SessionConfig's own max_batch.max(1): --batch 0 would
-    // otherwise loop forever submitting empty batches
+    // otherwise dispatch empty windows forever
     let batch = args.get_usize("batch", 8)
         .map_err(anyhow::Error::msg)?.max(1);
+    let prefetch = args.get_usize("prefetch", 2)
+        .map_err(anyhow::Error::msg)?;
+    let slo_ms = args.get_usize("slo-ms", 10)
+        .map_err(anyhow::Error::msg)?;
+    let shards = args.get_usize("shards", 1)
+        .map_err(anyhow::Error::msg)?.clamp(1, 16) as u8;
+    let tenants = args.get_usize("tenants", 2)
+        .map_err(anyhow::Error::msg)?.max(1);
+    let max_queue = args
+        .get_usize("max-queue", 8 * batch * shards as usize)
+        .map_err(anyhow::Error::msg)?.max(1);
+    let adaptive = parse_on_off(args, "adaptive-bank", false)
+        .map_err(anyhow::Error::msg)?;
     let mut cfg = cfg;
     cfg.max_batch = batch;
     if let Some(bank) = parse_bank(args).map_err(anyhow::Error::msg)? {
-        // one explicit bank config applies to every model; omit the
+        // one explicit bank config applies to every slot; omit the
         // --bank-* flags to auto-scale each bank to its model's demand
         cfg.bank = Some(bank);
     }
@@ -377,82 +279,148 @@ fn serve_multi(args: &Args, art: &Path, cfg: SessionConfig,
         data.push(load_data(art, &model)?);
         reg_specs.push(ModelSpec::new(name.clone(), model));
     }
+    let plane_cfg = PlaneConfig {
+        policy: BatcherPolicy {
+            max_batch: batch,
+            slo: Duration::from_millis(slo_ms as u64),
+            max_queue,
+            prefetch,
+            adaptive,
+        },
+        shards,
+    };
     let t0 = Instant::now();
-    let reg = ModelRegistry::start(reg_specs, &cfg)
+    let plane = RequestPlane::start(reg_specs, &cfg, plane_cfg)
         .map_err(|e| anyhow!("{e}"))?;
-    println!("registry up: {} models over one link trio ({}), setup={}",
-             specs.len(), reg.names().join(", "),
+    println!("request plane up: {} model(s) x {} shard(s) over one link \
+              trio, slo={}ms queue<={} tenants={} adaptive-bank={}, \
+              setup={}",
+             specs.len(), shards, slo_ms, max_queue, tenants,
+             if adaptive { "on" } else { "off" },
              fmt_duration(t0.elapsed()));
 
     let metrics_out = args.get("metrics-out").map(PathBuf::from);
-    let n_models = specs.len();
-    let mut served = vec![0usize; n_models];
-    let mut correct = vec![0usize; n_models];
-    let mut remaining = requests;
     let t1 = Instant::now();
-    while remaining > 0 {
-        for (m, (name, _)) in specs.iter().enumerate() {
-            if remaining == 0 {
-                break;
+    // per model: `tenants` concurrent submitter threads, interleaved
+    // request indices -- the concurrency the batcher coalesces
+    let mut per_model = Vec::with_capacity(specs.len());
+    for (m, (name, _)) in specs.iter().enumerate() {
+        let ds = &data[m];
+        let outcome = std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for t in 0..tenants {
+                let share = requests / tenants
+                    + usize::from(t < requests % tenants);
+                let plane = &plane;
+                let tenant = format!("tenant-{t}");
+                handles.push(s.spawn(move || {
+                    let mut rxs = Vec::with_capacity(share);
+                    let mut shed = 0u64;
+                    for j in 0..share {
+                        let k = t + j * tenants;
+                        let img =
+                            ds.images[k % ds.images.len()].clone();
+                        match plane.submit(name, &tenant, img) {
+                            Ok(rx) => rxs.push((k, rx)),
+                            Err(RegistryError::Overloaded {
+                                model, reason }) => {
+                                shed += 1;
+                                eprintln!("shed ({model}): {reason}");
+                            }
+                            Err(e) => {
+                                shed += 1;
+                                eprintln!("submit failed: {e}");
+                            }
+                        }
+                    }
+                    let (mut served, mut correct) = (0u64, 0u64);
+                    for (k, rx) in rxs {
+                        match rx.recv() {
+                            Ok(Ok(resp)) => {
+                                served += 1;
+                                let want =
+                                    ds.labels[k % ds.labels.len()];
+                                if resp.pred == want as usize {
+                                    correct += 1;
+                                }
+                            }
+                            Ok(Err(e)) =>
+                                eprintln!("request failed: {e}"),
+                            Err(_) =>
+                                eprintln!("batcher dropped a waiter"),
+                        }
+                    }
+                    (served, shed, correct)
+                }));
             }
-            let take = batch.min(remaining);
-            let ds = &data[m];
-            let imgs: Vec<Tensor> = (0..take).map(|j| {
-                ds.images[(served[m] + j) % ds.images.len()].clone()
-            }).collect();
-            let logits = reg.infer(name, imgs).map_err(|e| anyhow!("{e}"))?;
-            for (j, l) in logits.iter().enumerate() {
-                let want = ds.labels[(served[m] + j) % ds.labels.len()];
-                if cbnn::engine::argmax(l) == want as usize {
-                    correct[m] += 1;
-                }
-            }
-            served[m] += take;
-            remaining -= take;
-        }
-        // the --metrics-out interval tick: rewrite the snapshot after
-        // every round-robin sweep (and once more before exit below)
+            handles.into_iter()
+                .map(|h| h.join().expect("submitter thread"))
+                .fold((0u64, 0u64, 0u64),
+                      |a, b| (a.0 + b.0, a.1 + b.1, a.2 + b.2))
+        });
+        per_model.push(outcome);
         if let Some(path) = &metrics_out {
-            write_registry_metrics(&reg, path)?;
+            write_plane_metrics(&plane, path)?;
         }
     }
     let wall = t1.elapsed();
-    println!("served {requests} requests across {n_models} models in {} \
-              ({:.1} req/s)",
-             fmt_duration(wall),
-             requests as f64 / wall.as_secs_f64().max(1e-9));
-    for r in reg.rollups() {
-        let m = r.slot as usize;
-        println!("model {} (slot {}): {} reqs, {:.1}% acc | online {} B \
-                  / {} rounds, offline {} B | bank minted={} drawn={} \
-                  fallbacks={}",
-                 r.name, r.slot, served[m],
-                 100.0 * correct[m] as f64 / served[m].max(1) as f64,
-                 r.online.bytes_sent, r.online.rounds,
-                 r.offline.bytes_sent,
-                 r.preproc.minted, r.preproc.drawn,
-                 r.preproc.underflow_calls);
+    let total_served: u64 = per_model.iter().map(|o| o.0).sum();
+    let total_shed: u64 = per_model.iter().map(|o| o.1).sum();
+    println!("served {total_served} / {} submitted ({total_shed} shed) \
+              across {} model(s) in {} ({:.1} req/s)",
+             requests * specs.len(), specs.len(), fmt_duration(wall),
+             total_served as f64 / wall.as_secs_f64().max(1e-9));
+    for (m, (name, _)) in specs.iter().enumerate() {
+        let (served, shed, correct) = per_model[m];
+        println!("model {name}: served={served} shed={shed} acc={:.1}%",
+                 100.0 * correct as f64 / served.max(1) as f64);
+        for slot in plane.shard_slots(name) {
+            let Some(b) = plane.batcher(&slot) else { continue };
+            let s = b.stats();
+            let pm = b.preproc_metrics();
+            println!("  shard {slot}: {} windows, {} served, max \
+                      coalesce {}, shed queue={} dry={} | bank \
+                      minted={} drawn={} fallbacks={}",
+                     s.plane.dispatches, s.plane.served,
+                     s.plane.coalesced_max, s.plane.shed_queue,
+                     s.plane.shed_dry, pm.minted, pm.drawn,
+                     pm.underflow_calls);
+            for tc in &s.tenants {
+                println!("    tenant {}: submitted={} served={} \
+                          shed={} last-window={}",
+                         tc.tenant, tc.submitted, tc.served, tc.shed,
+                         tc.last_window);
+            }
+        }
     }
-    let link = reg.link_stats(0);
+    let hist = plane.latency();
+    println!("latency (enqueue->response) mean={} p50={} p99={} max={}",
+             fmt_duration(hist.mean()),
+             fmt_duration(hist.quantile(0.5)),
+             fmt_duration(hist.quantile(0.99)),
+             fmt_duration(hist.max()));
+    let link = plane.registry().link_stats(0);
     println!("link totals (party 0): {} B, {} messages, {} rounds",
              link.bytes_sent, link.messages, link.rounds);
     if args.get_bool("admin") {
-        admin_repl(&reg, art, &mut data_by_name(specs, data))?;
+        admin_repl(plane.registry(), art,
+                   &mut data_by_name(specs, data))?;
     }
     if let Some(path) = &metrics_out {
-        write_registry_metrics(&reg, path)?;
+        write_plane_metrics(&plane, path)?;
         println!("metrics written -> {}", path.display());
     }
     // export traces only after shutdown: the last slot's exit stats are
     // the fully-quiesced link totals, so flight bytes reconcile exactly
     // (a live export could race a background bank refill)
     let trace_sinks: Option<Vec<_>> = args.get("trace-out")
-        .map(|_| (0..3).map(|p| reg.trace_sink(p)).collect());
-    let per_model = reg.shutdown().map_err(|e| anyhow!("{e}"))?;
+        .map(|_| (0..3).map(|p| plane.registry().trace_sink(p))
+            .collect());
+    let per_slot = plane.shutdown().map_err(|e| anyhow!("{e}"))?;
     if let (Some(dir), Some(sinks)) =
         (args.get("trace-out"), trace_sinks) {
         let dir = Path::new(dir);
-        let stats = per_model.last()
+        let stats = per_slot.last()
             .map(|(_, s)| s.clone()).unwrap_or_default();
         for (party, sink) in sinks.iter().enumerate() {
             trace::write_trace(dir, party, &sink.snapshot(),
@@ -466,25 +434,26 @@ fn serve_multi(args: &Args, art: &Path, cfg: SessionConfig,
     Ok(())
 }
 
-/// Assemble and atomically rewrite the registry's `--metrics-out`
-/// snapshot (Prometheus text exposition; the metric names are part of
-/// the operational contract, documented in OPERATIONS.md §3).
-fn write_registry_metrics(reg: &ModelRegistry, path: &Path) -> Result<()> {
-    let mut latency = Histogram::default();
+/// Assemble and atomically rewrite the plane's `--metrics-out`
+/// snapshot (Prometheus text exposition; the metric names -- including
+/// the queue/shed/tenant families -- are part of the operational
+/// contract, documented in OPERATIONS.md §3 and §7).
+fn write_plane_metrics(plane: &RequestPlane, path: &Path) -> Result<()> {
+    let reg = plane.registry();
     let mut bank_levels = Vec::new();
     for name in reg.names() {
         // quarantined/parked slots drop out of the snapshot until they
         // serve again
         if let Ok(svc) = reg.service(&name) {
-            latency.merge(&svc.latency());
             bank_levels.push((name.clone(),
                               svc.bank_handle(0).level() as u64));
         }
     }
+    let latency = plane.latency();
     let snap = MetricsSnapshot {
-        requests: latency.count(),
+        requests: plane.requests_served(),
         latency,
-        models: reg.rollups(),
+        models: plane.rollups(),
         bank_levels,
         trace_dropped: (0..3)
             .map(|p| reg.trace_sink(p).dropped_events()).collect(),

@@ -98,6 +98,11 @@ pub struct PreprocMetrics {
     pub fallback_elems: u64,
     /// High-water mark of stored elements (≤ bank capacity).
     pub max_level: u64,
+    /// Watermark retunes applied (`TupleBank::retune`).  Stays 0 under
+    /// plain `Service::infer` load: only the batcher's dispatch thread
+    /// resizes, never the request path (pinned by
+    /// `tests/request_plane.rs`).
+    pub retunes: u64,
 }
 
 /// Lifecycle counters for one registry slot, surviving the models that
@@ -174,6 +179,49 @@ pub struct ModelRollup {
     pub preproc: PreprocMetrics,
     /// The slot's lifecycle history (quarantines, respawns, swaps).
     pub lifecycle: LifecycleCounters,
+    /// The slot's request-plane counters (queue depth, sheds, dispatch
+    /// windows).  Default (all zero) when no batcher fronts the slot --
+    /// `ModelRegistry::rollups` alone cannot fill this; the
+    /// `RequestPlane` overlay does.
+    pub plane: PlaneStats,
+    /// Per-tenant rollups for the slot's batcher front (empty without
+    /// one), sorted by tenant tag.
+    pub tenants: Vec<TenantCounters>,
+}
+
+/// Request-plane counters for one batcher front (`coordinator::
+/// batcher::Batcher`): admission, shedding, and coalescing behaviour.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlaneStats {
+    /// Requests currently queued (snapshot gauge).
+    pub depth: u64,
+    /// Requests rejected at admission because the queue was full.
+    pub shed_queue: u64,
+    /// Requests rejected because the bank could not serve the batch
+    /// warm (closed, or the largest draw exceeds `capacity - chunk`).
+    pub shed_dry: u64,
+    /// Dispatch windows executed (each one secure batch).
+    pub dispatches: u64,
+    /// Requests served through dispatch windows.
+    pub served: u64,
+    /// Largest batch one window coalesced.
+    pub coalesced_max: u64,
+}
+
+/// Per-tenant fairness rollup for one batcher front: how much each
+/// tenant submitted, how much was served or shed, and the dispatch
+/// window its most recent served request rode in (`last_window` is the
+/// starvation witness: a quiet tenant's requests must land in windows
+/// that do not trail a flooding tenant's backlog).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TenantCounters {
+    pub tenant: String,
+    pub submitted: u64,
+    pub served: u64,
+    pub shed: u64,
+    /// 1-based dispatch-window index of the last served request (0 =
+    /// never served).
+    pub last_window: u64,
 }
 
 impl ModelRollup {
@@ -269,6 +317,32 @@ pub fn prometheus_text(snap: &MetricsSnapshot) -> String {
         o.push_str(&format!("cbnn_bank_level{{model=\"{}\"}} {level}\n",
                             prom_label(model)));
     }
+    o.push_str("# TYPE cbnn_queue_depth gauge\n");
+    for r in &snap.models {
+        o.push_str(&format!("cbnn_queue_depth{{model=\"{}\"}} {}\n",
+                            prom_label(&r.name), r.plane.depth));
+    }
+    o.push_str("# TYPE cbnn_shed_total counter\n");
+    for r in &snap.models {
+        for (reason, v) in [("queue-full", r.plane.shed_queue),
+                            ("bank-dry", r.plane.shed_dry)] {
+            o.push_str(&format!(
+                "cbnn_shed_total{{model=\"{}\",reason=\"{reason}\"}} \
+                 {v}\n",
+                prom_label(&r.name)));
+        }
+    }
+    o.push_str("# TYPE cbnn_tenant_requests_total counter\n");
+    for r in &snap.models {
+        for t in &r.tenants {
+            for (outcome, v) in [("served", t.served), ("shed", t.shed)] {
+                o.push_str(&format!(
+                    "cbnn_tenant_requests_total{{model=\"{}\",\
+                     tenant=\"{}\",outcome=\"{outcome}\"}} {v}\n",
+                    prom_label(&r.name), prom_label(&t.tenant)));
+            }
+        }
+    }
     o.push_str("# TYPE cbnn_lifecycle_quarantines_total counter\n");
     for r in &snap.models {
         o.push_str(&format!(
@@ -362,6 +436,13 @@ mod tests {
                 slot: 0,
                 online: ChanStats { bytes_sent: 10, messages: 2,
                                     rounds: 1 },
+                plane: PlaneStats { depth: 2, shed_queue: 5,
+                                    shed_dry: 1, dispatches: 4,
+                                    served: 7, coalesced_max: 3 },
+                tenants: vec![TenantCounters {
+                    tenant: "acme".into(), submitted: 8, served: 7,
+                    shed: 1, last_window: 4,
+                }],
                 ..ModelRollup::default()
             }],
             bank_levels: vec![("mnist\"a\"".into(), 4096)],
@@ -379,6 +460,11 @@ mod tests {
                      "cbnn_bank_level",
                      "cbnn_lifecycle_quarantines_total",
                      "cbnn_lifecycle_respawns_total",
+                     "cbnn_queue_depth{model=\"mnist\\\"a\\\"\"} 2",
+                     "reason=\"queue-full\"} 5",
+                     "reason=\"bank-dry\"} 1",
+                     "tenant=\"acme\",outcome=\"served\"} 7",
+                     "tenant=\"acme\",outcome=\"shed\"} 1",
                      "cbnn_trace_dropped_events_total{party=\"2\"} 3"] {
             assert!(text.contains(name), "missing {name} in:\n{text}");
         }

@@ -132,6 +132,11 @@ impl BankConfig {
 }
 
 struct BankState {
+    /// Live watermark policy.  Mutable under the state lock so the
+    /// request plane can retune watermarks from observed dispatch
+    /// demand (`TupleBank::retune`); `capacity` never changes after
+    /// construction (it is the storage bound backpressure relies on).
+    cfg: BankConfig,
     res: Reservoir,
     /// Elements promised by dispatched refill jobs (deterministic:
     /// advanced by the party thread in broadcast order).
@@ -146,7 +151,6 @@ struct BankState {
 /// Per-party reservoir of MSB tuples shared between the party's online
 /// thread (draws) and its background producer (deliveries).
 pub struct TupleBank {
-    cfg: BankConfig,
     st: Mutex<BankState>,
     /// Signalled on delivery / close: wakes blocked draws and prefill.
     data: Condvar,
@@ -170,8 +174,8 @@ impl TupleBank {
     pub fn try_new(cfg: BankConfig) -> Result<TupleBank, String> {
         cfg.validate()?;
         Ok(TupleBank {
-            cfg,
             st: Mutex::new(BankState {
+                cfg,
                 res: Reservoir::default(),
                 credited: 0,
                 reserved: 0,
@@ -184,7 +188,47 @@ impl TupleBank {
     }
 
     pub fn config(&self) -> BankConfig {
-        self.cfg
+        self.lock_st().cfg
+    }
+
+    /// Retune the watermark policy on a live bank.  `capacity` is
+    /// immutable (it is the storage bound deliveries backpressure
+    /// against), so the new watermarks are validated against the
+    /// existing capacity and an infeasible combination is rejected
+    /// whole -- the bank never runs a half-applied policy.  Safe for
+    /// determinism only when applied in the service's broadcast job
+    /// order (`Job::Retune`): `try_reserve` reads `chunk`/`capacity`,
+    /// so all three parties must fold a retune into the job stream at
+    /// the same point.  Never called on the request path -- the
+    /// batcher's dispatch thread is the only caller (pinned by
+    /// `retunes` staying 0 under plain `Service::infer` load).
+    pub fn retune(&self, low: usize, high: usize, chunk: usize)
+                  -> Result<(), String> {
+        let mut st = self.lock_st();
+        let next = BankConfig { low, high, chunk,
+                                capacity: st.cfg.capacity };
+        next.validate()?;
+        if next.low != st.cfg.low || next.high != st.cfg.high
+            || next.chunk != st.cfg.chunk {
+            st.cfg = next;
+            st.m.retunes += 1;
+        }
+        Ok(())
+    }
+
+    /// Non-mutating warm-serve probe for the admission controller: can
+    /// a draw of `n` elements ever be served from the pool?  `false`
+    /// when the bank is closed (producer dead / slot draining) or when
+    /// `n` structurally exceeds `capacity - chunk` (such draws always
+    /// fall back -- the deadlock-freedom bound `try_reserve` enforces).
+    /// Deliberately does NOT check the current credit: the pump can
+    /// always extend credit on a healthy bank, so low credit is a
+    /// "pump harder" signal, not a shed signal.  Unlike a refused
+    /// `try_reserve`, a `false` here counts nothing: shedding happens
+    /// *before* the request path, so `underflow_calls` stays 0.
+    pub fn can_serve_warm(&self, n: usize) -> bool {
+        let st = self.lock_st();
+        !st.closed && n + st.cfg.chunk <= st.cfg.capacity
     }
 
     /// Lock the bank state, absorbing lock poisoning: a producer or
@@ -261,7 +305,7 @@ impl TupleBank {
     /// the request path.
     pub fn try_reserve(&self, n: usize) -> bool {
         let mut st = self.lock_st();
-        if n + self.cfg.chunk <= self.cfg.capacity
+        if n + st.cfg.chunk <= st.cfg.capacity
             && st.credited - st.reserved >= n {
             st.reserved += n;
             true
@@ -295,7 +339,7 @@ impl TupleBank {
     pub fn deliver(&self, t: MsbTuple) {
         let n = t.len();
         let mut st = self.lock_st();
-        while !st.closed && st.res.len() + n > self.cfg.capacity {
+        while !st.closed && st.res.len() + n > st.cfg.capacity {
             st = self.wait_on(&self.space, st);
         }
         if st.closed {
@@ -428,6 +472,46 @@ mod tests {
             .validate().unwrap_err();
         assert!(e.contains("`capacity` = 11") && e.contains("8 + 4"),
                 "{e}");
+    }
+
+    #[test]
+    fn warm_probe_counts_nothing_and_tracks_close() {
+        let bank = TupleBank::new(BankConfig {
+            low: 0, high: 8, chunk: 4, capacity: 16 });
+        // structurally servable draws probe true, oversized ones false
+        assert!(bank.can_serve_warm(12));
+        assert!(!bank.can_serve_warm(13), "above capacity - chunk");
+        // the probe is the shed decision, which precedes the request
+        // path: unlike a refused try_reserve it must count nothing
+        assert_eq!(bank.metrics().underflow_calls, 0);
+        assert_eq!(bank.metrics().fallback_elems, 0);
+        bank.close();
+        assert!(!bank.can_serve_warm(1), "closed bank is dry");
+    }
+
+    #[test]
+    fn retune_validates_against_fixed_capacity() {
+        let bank = TupleBank::new(BankConfig {
+            low: 4, high: 8, chunk: 4, capacity: 16 });
+        // a feasible retune applies whole and is counted
+        bank.retune(2, 10, 6).unwrap();
+        let cfg = bank.config();
+        assert_eq!((cfg.low, cfg.high, cfg.chunk, cfg.capacity),
+                   (2, 10, 6, 16));
+        assert_eq!(bank.metrics().retunes, 1);
+        // capacity is immutable: high + chunk must still fit under it
+        assert!(bank.retune(2, 14, 4).is_err(),
+                "14 + 4 > 16 must be rejected whole");
+        let cfg = bank.config();
+        assert_eq!((cfg.low, cfg.high, cfg.chunk), (2, 10, 6),
+                   "rejected retune must not half-apply");
+        // a no-op retune is not counted (idempotent pumps don't spam)
+        bank.retune(2, 10, 6).unwrap();
+        assert_eq!(bank.metrics().retunes, 1);
+        // the live chunk governs the reserve bound
+        bank.credit(100);
+        assert!(bank.try_reserve(10));
+        assert!(!bank.try_reserve(11), "11 + chunk 6 > capacity 16");
     }
 
     #[test]

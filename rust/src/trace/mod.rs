@@ -140,6 +140,17 @@ impl Label {
     }
 }
 
+/// Label for a Request span dispatched by the request plane: the model
+/// name, its shard slot, and the tenant tags riding the window, as
+/// `model#slot|tenantA,tenantB`.  Built once per dispatch window (off
+/// the per-party hot path) and carried in the broadcast job, so all
+/// three parties close the Request span under the identical label --
+/// the merge's label-agreement check extends to tenant and shard
+/// attribution.  Truncated at the 24-byte inline limit like any label.
+pub fn request_label(model: &str, slot: u8, tenants: &str) -> Label {
+    Label::new(&format!("{model}#{slot}|{tenants}"))
+}
+
 impl PartialEq for Label {
     fn eq(&self, other: &Label) -> bool {
         self.as_str() == other.as_str()
@@ -569,6 +580,17 @@ pub fn write_party_trace(dir: &Path, party: usize, sink: &TraceSink,
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn request_label_carries_tenant_and_shard_and_truncates() {
+        let l = request_label("lenet5", 3, "acme,beta");
+        assert_eq!(l.as_str(), "lenet5#3|acme,beta");
+        // over the 24-byte inline limit: truncated, never panics
+        let l = request_label("averylongmodelname", 120,
+                              "tenant-with-long-name");
+        assert_eq!(l.as_str().len(), 24);
+        assert!(l.as_str().starts_with("averylongmodelname#120|"));
+    }
 
     fn span(trace_id: u64, kind: SpanKind, label: &str, rounds: u64)
             -> Span {

@@ -197,6 +197,42 @@ fn design_argues_the_parity_tolerance() {
 }
 
 #[test]
+fn operations_covers_the_request_plane_runbook() {
+    // ISSUE 10: the request-plane runbook must document every new serve
+    // flag (the SERVE_FLAGS loop above already forces their presence --
+    // this test pins the runbook section itself), the shed taxonomy and
+    // its typed error, the Prometheus names the plane emits, the
+    // shard-sizing guidance, and the bench + soak gates that watch it
+    let ops = repo_doc("OPERATIONS.md");
+    for needle in ["Request plane", "--slo-ms", "--shards",
+                   "--max-queue", "--tenants", "--adaptive-bank",
+                   "Overloaded", "queue-full", "bank-dry",
+                   "cbnn_queue_depth", "cbnn_shed_total",
+                   "cbnn_tenant_requests_total", "coalesc",
+                   "BENCH_serve", "request-plane-soak"] {
+        assert!(ops.contains(needle),
+                "OPERATIONS.md request-plane runbook misses {needle}");
+    }
+}
+
+#[test]
+fn design_documents_the_request_plane() {
+    // ISSUE 10: the design section must state the coalescing-window
+    // model, the fairness discipline, why shedding precedes minting
+    // (overload must never perturb the deterministic credit
+    // accounting), the consistent-hash shard router's remap property,
+    // and why adaptive watermark retunes ride the broadcast job queue
+    let design = repo_doc("DESIGN.md");
+    for needle in ["## Request plane", "dispatch window", "round-robin",
+                   "can_serve_warm", "underflow", "bit-identical",
+                   "consistent-hash", "vnode", "Job::Retune",
+                   "last_window", "coalesc"] {
+        assert!(design.contains(needle),
+                "DESIGN.md request-plane section misses {needle}");
+    }
+}
+
+#[test]
 fn readme_maps_paper_sections_to_modules() {
     let readme = repo_doc("README.md");
     for needle in ["transport", "protocols", "coordinator", "offline",
